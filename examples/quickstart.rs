@@ -1,0 +1,100 @@
+//! Quickstart: the smallest end-to-end DMoE program.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Loads the AOT-compiled tiny MoE, serves one batch of real queries with
+//! the paper's JESA policy, and prints accuracy + energy. If artifacts are
+//! missing it still demonstrates the optimizer stack on a synthetic round.
+
+use dmoe::channel::ChannelModel;
+use dmoe::coordinator::{DmoeServer, ServePolicy};
+use dmoe::energy::EnergyModel;
+use dmoe::gating::{GateScores, SyntheticGate};
+use dmoe::jesa::{solve_round, JesaOptions, RoundProblem};
+use dmoe::util::rng::Xoshiro256pp;
+use dmoe::workload::load_eval_sets;
+use dmoe::SystemConfig;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = SystemConfig::default();
+
+    if std::path::Path::new(&format!("{}/manifest.json", cfg.artifacts_dir)).exists() {
+        serve_real_model(&cfg)
+    } else {
+        eprintln!("no artifacts found — run `make artifacts` for the full demo;");
+        eprintln!("showing the algorithm stack on a synthetic round instead.\n");
+        synthetic_round(&cfg);
+        Ok(())
+    }
+}
+
+/// The real thing: one batch of real queries through the DMoE protocol.
+fn serve_real_model(cfg: &SystemConfig) -> anyhow::Result<()> {
+    let mut server = DmoeServer::new(cfg)?;
+    println!(
+        "loaded tiny MoE: L={} K={} on {}",
+        server.layers(),
+        server.experts(),
+        server.runtime().platform()
+    );
+
+    let eval = &load_eval_sets(&server.runtime().manifest)?[0];
+    let policy = ServePolicy::jesa(0.8, 2, server.layers());
+    let batch = &eval.batches(server.experts())[0];
+    let result = server.serve_batch(batch, &policy)?;
+
+    println!(
+        "\nserved {} queries ({} tokens) with {}:",
+        batch.len(),
+        result.total,
+        policy.label
+    );
+    println!("  accuracy       {:.3}", result.accuracy());
+    println!(
+        "  energy         {:.4} J (comm {:.4} + comp {:.4})",
+        result.ledger.total().total_j(),
+        result.ledger.total().comm_j,
+        result.ledger.total().comp_j
+    );
+    println!("  radio airtime  {:.2} ms", result.radio_s * 1e3);
+    println!("  wall time      {:.1} ms", result.wall_s * 1e3);
+    println!("  FFN executions {}", result.metrics.counter("ffn_exec"));
+    Ok(())
+}
+
+/// Fallback: one synthetic JESA round (exactly what each protocol layer
+/// solves), no model required.
+fn synthetic_round(cfg: &SystemConfig) {
+    let k = cfg.moe.experts;
+    let mut channel = ChannelModel::new(cfg.channel.clone(), k, 42);
+    let state = channel.realize();
+    let gate = SyntheticGate::new(k, 1.0);
+    let mut rng = Xoshiro256pp::seed_from_u64(42);
+    let gates: Vec<Vec<GateScores>> = (0..k)
+        .map(|_| (0..4).map(|_| gate.sample(&mut rng)).collect())
+        .collect();
+    let problem = RoundProblem {
+        gates,
+        threshold: 0.5,
+        max_active: cfg.moe.max_active,
+    };
+    let energy = EnergyModel::new(cfg.channel.clone(), cfg.energy.clone());
+    let sol = solve_round(&state, &problem, &energy, &JesaOptions::default());
+    println!(
+        "JESA round: {} tokens, {} BCD iterations (converged={}), energy {:.4} J",
+        problem.total_tokens(),
+        sol.iterations,
+        sol.converged,
+        sol.energy.total_j()
+    );
+    for (i, row) in sol.selections.iter().enumerate() {
+        for (n, sel) in row.iter().enumerate() {
+            println!(
+                "  token ({i},{n}) -> experts {:?} (score {:.2})",
+                sel.selected, sel.score
+            );
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! End-to-end serving driver (the EXPERIMENTS.md validation run).
+//!
+//! Loads the AOT-compiled tiny MoE and serves **every** eval set, batched,
+//! through the full DMoE protocol with three policies (JESA, Top-2,
+//! Homogeneous), reporting accuracy, energy, simulated radio airtime, and
+//! wall-clock latency/throughput.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_dmoe [-- --batches N]
+//! ```
+
+use dmoe::coordinator::{DmoeServer, ServePolicy};
+use dmoe::util::cli::Args;
+use dmoe::util::table::Table;
+use dmoe::workload::load_eval_sets;
+use dmoe::SystemConfig;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let mut cfg = SystemConfig::default();
+    cfg.artifacts_dir = args.get_or("artifacts", &cfg.artifacts_dir);
+    let max_batches = args.get("batches").map(|s| s.parse::<usize>().unwrap());
+
+    let mut server = DmoeServer::new(&cfg)?;
+    let layers = server.layers();
+    println!(
+        "DMoE serving: L={} K={} d={} on {}\n",
+        layers,
+        server.experts(),
+        server.runtime().d_model(),
+        server.runtime().platform()
+    );
+
+    let eval_sets = load_eval_sets(&server.runtime().manifest)?;
+    let policies = [
+        ServePolicy::jesa(0.8, 2, layers),
+        ServePolicy::topk(2, layers),
+        ServePolicy::homogeneous(0.5, 2, layers),
+    ];
+
+    let mut table = Table::new(&[
+        "policy", "eval set", "acc", "energy J", "radio ms", "wall ms", "tok/s", "p95 jesa ms",
+    ]);
+    let mut grand = Vec::new();
+    for policy in &policies {
+        let mut total_acc = 0.0;
+        let mut total_energy = 0.0;
+        for es in &eval_sets {
+            let r = server.serve_eval_set(es, policy, max_batches)?;
+            total_acc += r.accuracy();
+            total_energy += r.ledger.total().total_j();
+            table.row(vec![
+                policy.label.clone(),
+                es.name.clone(),
+                format!("{:.3}", r.accuracy()),
+                format!("{:.4}", r.ledger.total().total_j()),
+                format!("{:.2}", r.radio_s * 1e3),
+                format!("{:.1}", r.wall_s * 1e3),
+                format!("{:.0}", r.total as f64 / r.wall_s.max(1e-9)),
+                format!("{:.2}", r.metrics.latency_p95_s("jesa") * 1e3),
+            ]);
+        }
+        grand.push((
+            policy.label.clone(),
+            total_acc / eval_sets.len() as f64,
+            total_energy,
+        ));
+    }
+    println!("{}", table.render());
+
+    println!("summary (mean accuracy / total energy):");
+    let anchor = grand
+        .iter()
+        .find(|(l, _, _)| l == "Top-2")
+        .map(|(_, _, e)| *e)
+        .unwrap_or(1.0);
+    for (label, acc, energy) in &grand {
+        println!(
+            "  {label:<12} acc {acc:.3}  energy {energy:.3} J  ({:.2}x Top-2)",
+            energy / anchor
+        );
+    }
+    Ok(())
+}

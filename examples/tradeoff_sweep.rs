@@ -1,0 +1,50 @@
+//! Accuracy–energy tradeoff sweep (Fig. 10) through the public API.
+//!
+//! ```bash
+//! cargo run --release --example tradeoff_sweep [-- --batches N --eval IDX]
+//! ```
+//!
+//! Prints the (energy, accuracy) frontier for JESA vs homogeneous vs
+//! Top-k, plus a dominance check: every homogeneous point should be
+//! (weakly) dominated by some JESA point — the paper's Fig. 10 claim.
+
+use dmoe::bench_harness::fig10::{self, Fig10Options};
+use dmoe::coordinator::DmoeServer;
+use dmoe::util::cli::Args;
+use dmoe::SystemConfig;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let mut cfg = SystemConfig::default();
+    cfg.artifacts_dir = args.get_or("artifacts", &cfg.artifacts_dir);
+
+    let mut server = DmoeServer::new(&cfg)?;
+    let opts = Fig10Options {
+        max_batches: args.get("batches").map(|s| s.parse().unwrap()),
+        eval_index: args.get_usize("eval", 0),
+        ..Default::default()
+    };
+    let (report, points) = fig10::run(&mut server, &opts)?;
+    println!("{}", report.render());
+
+    // Dominance check.
+    let jesa: Vec<_> = points
+        .iter()
+        .filter(|p| p.label.starts_with("JESA"))
+        .collect();
+    let homo: Vec<_> = points.iter().filter(|p| p.label.starts_with("H(")).collect();
+    let mut dominated = 0;
+    for h in &homo {
+        if jesa
+            .iter()
+            .any(|j| j.energy_j <= h.energy_j * 1.05 && j.accuracy >= h.accuracy - 0.01)
+        {
+            dominated += 1;
+        }
+    }
+    println!(
+        "dominance: {dominated}/{} homogeneous points are matched-or-beaten by a JESA point",
+        homo.len()
+    );
+    Ok(())
+}

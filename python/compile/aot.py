@@ -1,0 +1,255 @@
+"""AOT export: train the tiny MoE once, lower every block to HLO text.
+
+This is the whole of the build-time Python path (``make artifacts``). It
+
+1. trains (or loads cached) weights via :mod:`compile.train`;
+2. lowers every protocol block — embed, per-layer attention / gate /
+   expert-FFN, head — to **HLO text** with the weights baked in as
+   constants, so the Rust runtime feeds activations only;
+3. emits the evaluation datasets (the five benchmark-analogue mixtures)
+   and a parity fixture used by the Rust integration tests;
+4. writes ``manifest.json`` describing everything.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+XLA (xla_extension 0.5.1) rejects; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Pallas kernels are lowered with ``interpret=True`` (CPU-PJRT cannot run
+Mosaic custom-calls); the export path routes the gate and expert FFN
+through the L1 Pallas kernels so the artifacts exercise that code.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, train
+from .model import (
+    ModelConfig,
+    attn_block,
+    attn_gate_block,
+    embed_apply,
+    expert_block,
+    forward_select,
+    gate_block,
+    head_apply,
+    init_params,
+)
+
+EVAL_SEQS = 64
+
+
+def to_hlo_text(fn, *example_args) -> str:
+    """Lower a jax callable to XLA HLO text (the rust-loadable format)."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the baked-in weight matrices must survive the
+    # text round-trip (the default printer elides them as `{...}`).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_blocks(params, cfg: ModelConfig, out_dir: str, log=print) -> dict:
+    """Lower every block; returns the manifest 'blocks' section."""
+    t, d = cfg.seq_len, cfg.d_model
+    h_spec = jax.ShapeDtypeStruct((t, d), jnp.float32)
+    tok_spec = jax.ShapeDtypeStruct((t,), jnp.int32)
+
+    def write(name: str, fn, *spec) -> str:
+        path = os.path.join(out_dir, name)
+        text = to_hlo_text(fn, *spec)
+        with open(path, "w") as f:
+            f.write(text)
+        log(f"  wrote {name} ({len(text) / 1024:.0f} KiB)")
+        return name
+
+    blocks: dict = {
+        "embed": write("embed.hlo.txt", lambda tk: (embed_apply(params, tk),), tok_spec),
+        "head": write("head.hlo.txt", lambda h: (head_apply(params, h),), h_spec),
+        "attn": [],
+        "gate": [],
+        "attn_gate": [],
+        "ffn": [],
+    }
+    for l in range(cfg.layers):
+        blocks["attn"].append(
+            write(
+                f"attn_l{l}.hlo.txt",
+                lambda h, l=l: (attn_block(params, l, h, cfg),),
+                h_spec,
+            )
+        )
+        blocks["gate"].append(
+            write(
+                f"gate_l{l}.hlo.txt",
+                lambda h, l=l: (gate_block(params, l, h, use_pallas=True),),
+                h_spec,
+            )
+        )
+        blocks["attn_gate"].append(
+            write(
+                f"attn_gate_l{l}.hlo.txt",
+                lambda h, l=l: (attn_gate_block(params, l, h, cfg, use_pallas=True),),
+                h_spec,
+            )
+        )
+        blocks["ffn"].append(
+            [
+                write(
+                    f"ffn_l{l}_e{j}.hlo.txt",
+                    lambda h, l=l, j=j: (
+                        expert_block(params, l, j, h, use_pallas=True),
+                    ),
+                    h_spec,
+                )
+                for j in range(cfg.experts)
+            ]
+        )
+    return blocks
+
+
+def export_eval_sets(chains: data.DomainChains, cfg: ModelConfig, out_dir: str, seed: int) -> dict:
+    """Emit the five benchmark-analogue eval sets as JSON."""
+    section = {}
+    for idx, (name, mixture) in enumerate(data.EVAL_MIXTURES.items()):
+        tokens, labels, domains = data.sample_mixture(
+            chains, mixture, EVAL_SEQS, cfg.seq_len, seed=seed + 17 * idx + 1
+        )
+        fname = f"eval_{name}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(
+                {
+                    "name": name,
+                    "mixture": mixture,
+                    "tokens": tokens.tolist(),
+                    "labels": labels.tolist(),
+                    "domains": domains.tolist(),
+                },
+                f,
+            )
+        section[name] = fname
+    return section
+
+
+def export_parity_fixture(params, cfg: ModelConfig, chains, out_dir: str, seed: int) -> str:
+    """A known-good end-to-end trace: tokens + selection masks + expected
+    logits from ``forward_select`` (the eq.-8 aggregation). The Rust
+    integration test replays the same masks through the PJRT artifacts and
+    must match within float tolerance."""
+    tokens, _ = data.sample_sequences(chains, 0, 1, cfg.seq_len, seed=seed + 999)
+    tk = jnp.asarray(tokens[0])
+    rng = np.random.default_rng(seed)
+    # Random but valid masks: 1–2 experts per token per layer.
+    masks = np.zeros((cfg.layers, cfg.seq_len, cfg.experts), dtype=np.float32)
+    for l in range(cfg.layers):
+        for t in range(cfg.seq_len):
+            picks = rng.choice(cfg.experts, size=rng.integers(1, 3), replace=False)
+            masks[l, t, picks] = 1.0
+    logits = forward_select(params, cfg, tk, jnp.asarray(masks), use_pallas=True)
+    # Also per-layer gate scores on the dense path for score parity.
+    fname = "parity.json"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(
+            {
+                "tokens": tokens[0].tolist(),
+                "masks": masks.tolist(),
+                "logits": np.asarray(logits).tolist(),
+            },
+            f,
+        )
+    return fname
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output directory")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--layers", type=int, default=6)
+    ap.add_argument("--experts", type=int, default=4)
+    ap.add_argument("--phase1-steps", type=int, default=1200)
+    ap.add_argument("--phase2-steps", type=int, default=300)
+    ap.add_argument("--phase3-steps", type=int, default=600)
+    ap.add_argument(
+        "--fast", action="store_true", help="tiny training budget (CI/tests only)"
+    )
+    ap.add_argument(
+        "--force", action="store_true", help="retrain even if cached weights exist"
+    )
+    args = ap.parse_args()
+
+    cfg = ModelConfig(layers=args.layers, experts=args.experts)
+    if args.fast:
+        args.phase1_steps, args.phase2_steps, args.phase3_steps = 60, 20, 20
+
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+    chains = data.make_chains(cfg.experts, cfg.vocab, seed=args.seed)
+
+    weights_path = os.path.join(out_dir, "weights.npz")
+    record: dict = {}
+    if os.path.exists(weights_path) and not args.force:
+        print(f"loading cached weights from {weights_path}")
+        flat = dict(np.load(weights_path))
+        params = train.unflatten_params(flat, cfg)
+    else:
+        print(
+            f"training tiny MoE: L={cfg.layers} K={cfg.experts} d={cfg.d_model} "
+            f"({args.phase1_steps}+{args.phase2_steps} steps)"
+        )
+        params = init_params(cfg, seed=args.seed)
+        params, record = train.train(
+            cfg,
+            params,
+            chains,
+            phase1_steps=args.phase1_steps,
+            phase2_steps=args.phase2_steps,
+            phase3_steps=args.phase3_steps,
+            seed=args.seed,
+        )
+        np.savez(weights_path, **train.flatten_params(params, cfg))
+        print(f"saved weights to {weights_path}")
+
+    t0 = time.time()
+    print("lowering blocks to HLO text…")
+    blocks = export_blocks(params, cfg, out_dir)
+    eval_sets = export_eval_sets(chains, cfg, out_dir, seed=args.seed)
+    parity = export_parity_fixture(params, cfg, chains, out_dir, seed=args.seed)
+
+    manifest = {
+        "format": "dmoe-artifacts-v1",
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "ffn": cfg.ffn,
+            "experts": cfg.experts,
+            "layers": cfg.layers,
+            "heads": cfg.heads,
+            "seq_len": cfg.seq_len,
+        },
+        "blocks": blocks,
+        "eval_sets": eval_sets,
+        "parity": parity,
+        "oracle_accuracy": {
+            str(d): data.chance_accuracy(chains, d) for d in range(chains.n_domains)
+        },
+        "training": record,
+        "export_wall_s": time.time() - t0,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest.json written; export took {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

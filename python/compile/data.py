@@ -1,0 +1,142 @@
+"""Synthetic multi-domain corpus generator.
+
+The paper's experts are Llama-3 fine-tunes specialised on general /
+Chinese / biomedical text; we cannot run 8B models, so the build-time
+pipeline trains a tiny MoE on a synthetic analogue that preserves the one
+property the paper's algorithms consume: *expertise diversity* — experts
+that are measurably better on "their" domain than on others (Fig. 3).
+
+Each domain is a distinct order-1 Markov chain over a shared vocabulary.
+Chains are sparse (each token allows only a few successors) and
+domain-specific, so next-token prediction is learnable by a ~0.5M-param
+model, and what is learned for one domain transfers only weakly to
+another: the same context token maps to *different* successor sets in
+different domains, so the shared (attention/embedding/head) parameters
+cannot resolve the ambiguity — only the domain-specialised expert FFN
+can, which is exactly the mechanism that creates expertise diversity.
+
+Evaluation sets mirror the paper's five benchmarks as *mixtures* over
+domains (e.g. "mmlu" is general-heavy; "ceval"/"cmmlu" are both heavy on
+the same domain but with different mixing — correlated columns, like the
+paper's two Chinese suites).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+VOCAB = 256
+SEQ_LEN = 16
+N_DOMAINS = 4
+BRANCHING = 4  # successors allowed per (prev2, prev1) context
+
+# Mixture weights over domains for each paper benchmark analogue.
+EVAL_MIXTURES: dict[str, list[float]] = {
+    "mmlu": [0.55, 0.15, 0.15, 0.15],  # general-knowledge heavy
+    "ceval": [0.15, 0.65, 0.10, 0.10],  # domain-1 heavy (≈ Chinese)
+    "cmmlu": [0.10, 0.70, 0.10, 0.10],  # domain-1 heavy, different mix
+    "mmlu_bio": [0.20, 0.10, 0.60, 0.10],  # domain-2 heavy (≈ biomedical)
+    "medmcqa": [0.10, 0.10, 0.70, 0.10],  # domain-2 heavy, different mix
+}
+
+
+@dataclasses.dataclass
+class DomainChains:
+    """Per-domain order-1 Markov chains.
+
+    ``succ[d]`` has shape ``(VOCAB, BRANCHING)``: the successor tokens
+    allowed in domain ``d`` after a context token. ``probs[d]`` are the
+    matching successor probabilities.
+    """
+
+    succ: np.ndarray  # (D, V, B) int32
+    probs: np.ndarray  # (D, V, B) float64
+
+    @property
+    def n_domains(self) -> int:
+        return self.succ.shape[0]
+
+
+def make_chains(
+    n_domains: int = N_DOMAINS,
+    vocab: int = VOCAB,
+    branching: int = BRANCHING,
+    seed: int = 0,
+) -> DomainChains:
+    """Build deterministic domain chains from a seed."""
+    rng = np.random.default_rng(seed)
+    succ = np.zeros((n_domains, vocab, branching), dtype=np.int32)
+    probs = np.zeros((n_domains, vocab, branching), dtype=np.float64)
+    for d in range(n_domains):
+        # Domain-specific random successor tables. Independent draws per
+        # domain make the transition structures essentially disjoint, so
+        # knowing domain d's table says ~nothing about domain d'.
+        succ[d] = rng.integers(0, vocab, size=(vocab, branching))
+        probs[d] = rng.dirichlet(np.full(branching, 0.6), size=vocab)
+    return DomainChains(succ=succ, probs=probs)
+
+
+def sample_sequences(
+    chains: DomainChains,
+    domain: int,
+    n: int,
+    seq_len: int = SEQ_LEN,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Sample ``n`` sequences from one domain.
+
+    Returns ``(tokens, labels)`` of shape ``(n, seq_len)``: ``labels[t]``
+    is the ground-truth next token after ``tokens[t]``.
+    """
+    rng = np.random.default_rng(seed)
+    vocab = chains.succ.shape[1]
+    branching = chains.succ.shape[2]
+    # Stream length seq_len + 1 so every position has a label.
+    stream = np.zeros((n, seq_len + 1), dtype=np.int32)
+    stream[:, 0] = rng.integers(0, vocab, size=n)
+    for t in range(1, seq_len + 1):
+        b = stream[:, t - 1]
+        p = chains.probs[domain, b]  # (n, B)
+        # Vectorized categorical draw via inverse CDF.
+        u = rng.random(n)[:, None]
+        choice = (p.cumsum(axis=1) < u).sum(axis=1).clip(0, branching - 1)
+        stream[:, t] = chains.succ[domain, b, choice]
+    return stream[:, :seq_len], stream[:, 1 : seq_len + 1]
+
+
+def sample_mixture(
+    chains: DomainChains,
+    mixture: list[float],
+    n: int,
+    seq_len: int = SEQ_LEN,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Sample sequences whose domains follow ``mixture``.
+
+    Returns ``(tokens, labels, domains)``.
+    """
+    rng = np.random.default_rng(seed)
+    mixture_arr = np.asarray(mixture, dtype=np.float64)
+    assert mixture_arr.shape[0] == chains.n_domains
+    assert abs(mixture_arr.sum() - 1.0) < 1e-9, "mixture must sum to 1"
+    domains = rng.choice(chains.n_domains, size=n, p=mixture_arr)
+    tokens = np.zeros((n, seq_len), dtype=np.int32)
+    labels = np.zeros((n, seq_len), dtype=np.int32)
+    for d in range(chains.n_domains):
+        idx = np.nonzero(domains == d)[0]
+        if idx.size:
+            t, l = sample_sequences(
+                chains, d, idx.size, seq_len, seed=seed * 1000 + d
+            )
+            tokens[idx] = t
+            labels[idx] = l
+    return tokens, labels, domains
+
+
+def chance_accuracy(chains: DomainChains, domain: int) -> float:
+    """Expected top-1 accuracy of the *oracle* predictor for a domain —
+    the ceiling our tiny model is trained toward (max successor prob)."""
+    p = chains.probs[domain]
+    return float(p.max(axis=-1).mean())

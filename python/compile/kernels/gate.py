@@ -1,0 +1,58 @@
+"""Layer-1 Pallas kernel: the gate (router) projection + softmax.
+
+The gate runs once per token per layer on whichever expert holds the
+token (paper §III-C2), producing the score vector the server's JESA
+optimizer consumes. It is a skinny matmul (d × K with K ≤ a few hundred)
+followed by a row softmax — bandwidth-bound, so the kernel's job is to do
+it in one pass over the hidden states: project, max-subtract, exponentiate
+and normalize without leaving VMEM.
+
+``interpret=True`` as everywhere (see moe_ffn.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_T = 128
+
+
+def _gate_kernel(x_ref, wg_ref, o_ref):
+    logits = jnp.dot(x_ref[...], wg_ref[...], preferred_element_type=jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def gate_pallas(x: jax.Array, wg: jax.Array, block_t: int = BLOCK_T) -> jax.Array:
+    """Gate scores: softmax(x @ wg) per row.
+
+    Shapes: x (T, d), wg (d, K) -> (T, K). Rows sum to 1 (paper eq. 7).
+    """
+    t, d = x.shape
+    dd, k = wg.shape
+    assert d == dd, f"x/wg dim mismatch: {d} vs {dd}"
+
+    bt = min(block_t, max(t, 1))
+    pad = (-t) % bt
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    grid = (x.shape[0] // bt,)
+
+    out = pl.pallas_call(
+        _gate_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], k), jnp.float32),
+        interpret=True,
+    )(x, wg)
+    return out[:t]

@@ -1,0 +1,135 @@
+"""Layer-1 Pallas kernel: the expert SwiGLU FFN.
+
+This is the compute hot-spot of the DMoE system — every selected expert
+runs it on every routed hidden state (paper §III-C4: "the selected experts
+leverage the FFN blocks to process hidden states from all requesting
+experts"). Domain knowledge lives in the FFN weights, which is why the
+paper partitions the MoE by FFN block.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's experts
+run on GPUs; on TPU we tile for VMEM instead of CUDA shared memory. The
+kernel blocks over tokens with ``BLOCK_T`` rows per grid step while the
+weight matrices (d×f, small for the tiny model, up to a few MB for
+realistic d) stay resident in VMEM across grid steps (constant index_map).
+Both matmuls feed the MXU via ``jnp.dot`` with
+``preferred_element_type=float32`` and the SwiGLU elementwise product
+fuses between them in-register — one HBM round-trip per token block
+instead of three in a naive op-by-op lowering.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO ops. Correctness is
+asserted against ``ref.ffn_ref`` by the pytest/hypothesis suite; TPU
+performance is *estimated* from the BlockSpec footprint in
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Token-block size: 128 rows aligns with the MXU's 128×128 systolic array
+# on the token dimension; shorter inputs fall back to a single block.
+BLOCK_T = 128
+
+
+def _ffn_kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref):
+    """One (token-block × f-block) SwiGLU step.
+
+    SwiGLU decomposes cleanly over the hidden (f) dimension:
+    ``out = Σ_fb (silu(x@w1[:,fb]) * (x@w3[:,fb])) @ w2[fb,:]`` — each
+    grid step computes one partial product and accumulates into the
+    output block, which stays pinned in VMEM across the f-grid
+    (constant output index_map). Grid order is (token, f) with f minor,
+    so the accumulator is initialized at f-step 0.
+    """
+    fi = pl.program_id(1)
+    x = x_ref[...]
+    # Two gate matmuls on the MXU; accumulate in f32.
+    a = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+    b = jnp.dot(x, w3_ref[...], preferred_element_type=jnp.float32)
+    # SwiGLU nonlinearity fused in-register (VPU): silu(a) * b.
+    h = a * jax.nn.sigmoid(a) * b
+    partial = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.where(fi == 0, partial, o_ref[...] + partial)
+
+
+# Hidden-dimension tile: realistic expert shapes (Mixtral: d=4096,
+# f=14336) overflow VMEM if the whole weight matrices stay resident, so
+# the f axis is tiled too. 512 keeps the tiny model single-tile while the
+# paper-scale shape fits in < 16 MiB (see compile/perf.py).
+BLOCK_F = 512
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_f"))
+def ffn_pallas(
+    x: jax.Array,
+    w1: jax.Array,
+    w3: jax.Array,
+    w2: jax.Array,
+    block_t: int = BLOCK_T,
+    block_f: int = BLOCK_F,
+) -> jax.Array:
+    """SwiGLU expert FFN as a Pallas kernel.
+
+    Shapes: x (T, d), w1 (d, f), w3 (d, f), w2 (f, d) -> (T, d).
+    ``T`` is padded up to a multiple of ``block_t`` internally (padding
+    stripped before returning); ``f`` must be divisible by the effective
+    f-tile (``min(block_f, f)``).
+    """
+    t, d = x.shape
+    dd, f = w1.shape
+    assert d == dd, f"x/w1 dim mismatch: {d} vs {dd}"
+    assert w3.shape == (d, f), f"w3 shape {w3.shape} != {(d, f)}"
+    assert w2.shape == (f, d), f"w2 shape {w2.shape} != {(f, d)}"
+
+    bt = min(block_t, max(t, 1))
+    bf = min(block_f, f)
+    assert f % bf == 0, f"hidden dim {f} not divisible by f-tile {bf}"
+    pad = (-t) % bt
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    grid = (x.shape[0] // bt, f // bf)
+
+    out = pl.pallas_call(
+        _ffn_kernel,
+        grid=grid,
+        in_specs=[
+            # Token block marches down the rows; constant over f-steps.
+            pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+            # Weight f-tiles march across the hidden dimension.
+            pl.BlockSpec((d, bf), lambda i, j: (0, j)),
+            pl.BlockSpec((d, bf), lambda i, j: (0, j)),
+            pl.BlockSpec((bf, d), lambda i, j: (j, 0)),
+        ],
+        # Output block revisited across the f-grid (accumulator).
+        out_specs=pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], d), jnp.float32),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(x, w1, w3, w2)
+    return out[:t]
+
+
+def vmem_footprint_bytes(
+    t: int, d: int, f: int, block_t: int = BLOCK_T, block_f: int = BLOCK_F
+) -> int:
+    """Estimated VMEM residency of one grid step (f32).
+
+    Used by the §Perf analysis: token block + three weight f-tiles + two
+    (bt × bf) intermediates + output accumulator block.
+    """
+    bt = min(block_t, max(t, 1))
+    bf = min(block_f, f)
+    x_block = bt * d
+    weights = 2 * d * bf + bf * d
+    intermediates = 2 * bt * bf
+    out_block = bt * d
+    return 4 * (x_block + weights + intermediates + out_block)
+
+
+def mxu_flops(t: int, d: int, f: int) -> int:
+    """Total MXU FLOPs for one call: 2·T·d·f per matmul, three matmuls."""
+    return 2 * t * d * f * 3

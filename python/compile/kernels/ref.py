@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the L1 kernels are validated against
+(``python/tests/test_kernels.py``, hypothesis sweeps) and the reference
+implementations the L2 model can fall back to with
+``DMOE_USE_PALLAS=0``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ffn_ref(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array) -> jax.Array:
+    """SwiGLU expert FFN: ``(silu(x@w1) * (x@w3)) @ w2``.
+
+    Shapes: x (T, d), w1 (d, f), w3 (d, f), w2 (f, d) -> (T, d).
+    """
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def gate_ref(x: jax.Array, wg: jax.Array) -> jax.Array:
+    """Gate scores: row-softmax of ``x @ wg``.
+
+    Shapes: x (T, d), wg (d, K) -> (T, K); rows sum to 1 (paper eq. 7).
+    """
+    return jax.nn.softmax(x @ wg, axis=-1)
+
+
+def attention_ref(
+    x: jax.Array,
+    wq: jax.Array,
+    wk: jax.Array,
+    wv: jax.Array,
+    wo: jax.Array,
+    n_heads: int,
+) -> jax.Array:
+    """Causal multi-head self-attention (no KV cache — queries are short).
+
+    Shapes: x (T, d); wq/wk/wv/wo (d, d) -> (T, d).
+    """
+    t, d = x.shape
+    dh = d // n_heads
+    q = (x @ wq).reshape(t, n_heads, dh).transpose(1, 0, 2)
+    k = (x @ wk).reshape(t, n_heads, dh).transpose(1, 0, 2)
+    v = (x @ wv).reshape(t, n_heads, dh).transpose(1, 0, 2)
+    scores = q @ k.transpose(0, 2, 1) / jnp.sqrt(jnp.asarray(dh, x.dtype))
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask, scores, jnp.finfo(x.dtype).min)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = (attn @ v).transpose(1, 0, 2).reshape(t, d)
+    return out @ wo
+
+
+def rmsnorm_ref(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm: ``x / rms(x) * scale``."""
+    rms = jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return x / rms * scale

@@ -1,0 +1,229 @@
+"""Layer-2 model: a tiny decoder-only MoE transformer in JAX.
+
+Mirrors the paper's §III architecture (Fig. 2): ``L`` stacked decoder
+layers, each with a shared attention block and ``K`` expert FFN blocks
+behind a gate. Vertical partitioning (§III-A) assigns expert ``j`` the
+attention blocks of all layers plus ``FFN_j`` of all layers — which is why
+the AOT pipeline exports *per-block* HLO: the Rust coordinator composes
+blocks per the DMoE protocol rather than calling one monolithic model.
+
+Block structure per layer (pre-norm transformer):
+
+    h  = h + Attn(rms1(h))                    -- attn block (shared)
+    g  = softmax(rms2(h) @ wg)                -- gate block (paper eq. 7)
+    y_j = FFN_j(rms2(h))                      -- expert blocks (Pallas L1)
+    h  = h + Σ_j ḡ_j y_j                      -- aggregation (paper eq. 8)
+
+The aggregation weights ḡ are the selected gates renormalized over the
+selected set — computed by the Rust coordinator at serve time, and by
+``forward_select`` here for parity tests.
+
+Training uses the pure-jnp reference kernels (fast under jit); the AOT
+export path routes through the Pallas kernels (``use_pallas=True``) so the
+artifacts exercise the L1 code, which the test suite asserts is
+numerically identical to the reference.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.gate import gate_pallas
+from .kernels.moe_ffn import ffn_pallas
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 256
+    d_model: int = 64
+    ffn: int = 128
+    experts: int = 4
+    layers: int = 6
+    heads: int = 4
+    seq_len: int = 16
+
+    def param_count(self, params: Params) -> int:
+        return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """He-style init, deterministic in ``seed``."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4 + cfg.layers)
+    d, f, k, v = cfg.d_model, cfg.ffn, cfg.experts, cfg.vocab
+
+    def dense(key, shape):
+        fan_in = shape[0]
+        return jax.random.normal(key, shape, jnp.float32) / jnp.sqrt(fan_in)
+
+    params: Params = {
+        "tok_emb": jax.random.normal(ks[0], (v, d), jnp.float32) * 0.02,
+        "pos_emb": jax.random.normal(ks[1], (cfg.seq_len, d), jnp.float32) * 0.02,
+        "head": dense(ks[2], (d, v)),
+        "rms_f": jnp.ones((d,), jnp.float32),
+        "layers": [],
+    }
+    for l in range(cfg.layers):
+        lk = jax.random.split(ks[4 + l], 8 + k * 3)
+        layer = {
+            "rms1": jnp.ones((d,), jnp.float32),
+            "rms2": jnp.ones((d,), jnp.float32),
+            "wq": dense(lk[0], (d, d)),
+            "wk": dense(lk[1], (d, d)),
+            "wv": dense(lk[2], (d, d)),
+            "wo": dense(lk[3], (d, d)),
+            "wg": dense(lk[4], (d, k)),
+            "experts": [
+                {
+                    "w1": dense(lk[8 + 3 * j], (d, f)),
+                    "w3": dense(lk[8 + 3 * j + 1], (d, f)),
+                    "w2": dense(lk[8 + 3 * j + 2], (f, d)),
+                }
+                for j in range(k)
+            ],
+        }
+        params["layers"].append(layer)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Per-block applications — each is exported as its own HLO artifact.
+# --------------------------------------------------------------------------
+
+
+def embed_apply(params: Params, tokens: jax.Array) -> jax.Array:
+    """tokens (T,) int32 -> h (T, d)."""
+    t = tokens.shape[0]
+    return params["tok_emb"][tokens] + params["pos_emb"][:t]
+
+
+def attn_block(params: Params, layer: int, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """h (T, d) -> h (T, d): residual causal attention."""
+    lp = params["layers"][layer]
+    normed = ref.rmsnorm_ref(h, lp["rms1"])
+    return h + ref.attention_ref(normed, lp["wq"], lp["wk"], lp["wv"], lp["wo"], cfg.heads)
+
+
+def gate_block(
+    params: Params, layer: int, h: jax.Array, use_pallas: bool = False
+) -> jax.Array:
+    """h (T, d) -> scores (T, K) on the post-attention hidden state."""
+    lp = params["layers"][layer]
+    normed = ref.rmsnorm_ref(h, lp["rms2"])
+    if use_pallas:
+        return gate_pallas(normed, lp["wg"])
+    return ref.gate_ref(normed, lp["wg"])
+
+
+def expert_block(
+    params: Params, layer: int, expert: int, h: jax.Array, use_pallas: bool = False
+) -> jax.Array:
+    """h (T, d) -> FFN_j(rms2(h)) (T, d), *without* the residual —
+    aggregation (eq. 8) happens at the source expert."""
+    ep = params["layers"][layer]["experts"][expert]
+    lp = params["layers"][layer]
+    normed = ref.rmsnorm_ref(h, lp["rms2"])
+    if use_pallas:
+        return ffn_pallas(normed, ep["w1"], ep["w3"], ep["w2"])
+    return ref.ffn_ref(normed, ep["w1"], ep["w3"], ep["w2"])
+
+
+def head_apply(params: Params, h: jax.Array) -> jax.Array:
+    """h (T, d) -> logits (T, V)."""
+    return ref.rmsnorm_ref(h, params["rms_f"]) @ params["head"]
+
+
+def attn_gate_block(
+    params: Params, layer: int, h: jax.Array, cfg: ModelConfig, use_pallas: bool = False
+) -> jax.Array:
+    """Fused attention + gate: h (T, d) -> (T, d + K) where the first d
+    columns are the residual attention output and the last K the gate
+    scores on it.
+
+    Serving-path optimisation (§Perf L2): the coordinator always runs the
+    gate immediately after attention, so exporting them as one HLO halves
+    the per-layer PJRT dispatches and keeps the intermediate hidden state
+    on-device instead of round-tripping through host literals.
+    """
+    h2 = attn_block(params, layer, h, cfg)
+    scores = gate_block(params, layer, h2, use_pallas)
+    return jnp.concatenate([h2, scores.astype(h2.dtype)], axis=1)
+
+
+# --------------------------------------------------------------------------
+# Whole-model forwards (training + parity tests).
+# --------------------------------------------------------------------------
+
+
+def forward_dense(
+    params: Params, cfg: ModelConfig, tokens: jax.Array, use_pallas: bool = False
+) -> jax.Array:
+    """Full soft-MoE forward: every expert, gate-weighted (training)."""
+    h = embed_apply(params, tokens)
+    for l in range(cfg.layers):
+        h = attn_block(params, l, h, cfg)
+        g = gate_block(params, l, h, use_pallas)
+        mix = jnp.zeros_like(h)
+        for j in range(cfg.experts):
+            mix = mix + g[:, j : j + 1] * expert_block(params, l, j, h, use_pallas)
+        h = h + mix
+    return head_apply(params, h)
+
+
+def forward_hard(
+    params: Params, cfg: ModelConfig, tokens: jax.Array, expert: int
+) -> jax.Array:
+    """Single-expert forward — the 'individual expert' rows of Table I,
+    and the hard-routed specialisation phase of training."""
+    h = embed_apply(params, tokens)
+    for l in range(cfg.layers):
+        h = attn_block(params, l, h, cfg)
+        h = h + expert_block(params, l, expert, h)
+    return head_apply(params, h)
+
+
+def forward_select(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    masks: jax.Array,
+    use_pallas: bool = False,
+) -> jax.Array:
+    """Forward with an explicit per-layer, per-token expert mask —
+    the paper's aggregation (eq. 8) with selection indicators α.
+
+    ``masks`` is (L, T, K) in {0,1}. Weights renormalize over the selected
+    set; a token with an all-zero row keeps its residual stream unchanged.
+    Used by parity tests to mirror the Rust coordinator exactly.
+    """
+    h = embed_apply(params, tokens)
+    for l in range(cfg.layers):
+        h = attn_block(params, l, h, cfg)
+        g = gate_block(params, l, h, use_pallas)
+        sel = g * masks[l]
+        denom = jnp.maximum(sel.sum(axis=-1, keepdims=True), 1e-12)
+        w = sel / denom
+        mix = jnp.zeros_like(h)
+        for j in range(cfg.experts):
+            mix = mix + w[:, j : j + 1] * expert_block(params, l, j, h, use_pallas)
+        h = h + mix
+    return head_apply(params, h)
+
+
+def lm_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token cross-entropy. logits (..., T, V), labels (..., T)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -ll.mean()
+
+
+def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Top-1 next-token accuracy."""
+    return (logits.argmax(axis=-1) == labels).mean()

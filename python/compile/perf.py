@@ -1,0 +1,75 @@
+"""L1 kernel performance analysis (structural, per DESIGN.md §Perf).
+
+``interpret=True`` Pallas gives CPU-numpy timings that say nothing about
+TPU behaviour, so the L1 performance story is *structural*: VMEM
+residency and MXU utilization estimated from the BlockSpecs, compared
+against the paper-relevant roofline.
+
+Run: ``python -m compile.perf``
+"""
+
+from __future__ import annotations
+
+from .kernels.moe_ffn import BLOCK_F, BLOCK_T, mxu_flops, vmem_footprint_bytes
+
+# TPU v4-ish reference numbers (per core).
+VMEM_BYTES = 16 * 1024 * 1024
+MXU_FLOPS_S = 137e12  # bf16 matmul peak is higher, f32 ≈ 137/2 TFLOP/s; be conservative
+HBM_BYTES_S = 1.2e12
+
+
+def analyze(t: int, d: int, f: int, block_t: int = BLOCK_T, block_f: int = BLOCK_F) -> dict:
+    """Roofline analysis of one expert-FFN invocation."""
+    bt = min(block_t, max(t, 1))
+    vmem = vmem_footprint_bytes(t, d, f, block_t, block_f)
+    flops = mxu_flops(t, d, f)
+    # HBM traffic per call: x in, out out, weights once (they stay
+    # resident across the token grid — the BlockSpec index_map is
+    # constant, so Mosaic hoists the loads).
+    hbm = 4 * (t * d + t * d + (2 * d * f + f * d))
+    intensity = flops / hbm
+    ridge = MXU_FLOPS_S / HBM_BYTES_S
+    bound = "compute" if intensity >= ridge else "memory"
+    attainable = min(MXU_FLOPS_S, intensity * HBM_BYTES_S)
+    return {
+        "block_t": bt,
+        "vmem_bytes": vmem,
+        "vmem_frac": vmem / VMEM_BYTES,
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "intensity_flop_per_byte": intensity,
+        "ridge": ridge,
+        "bound": bound,
+        "attainable_flops_frac": attainable / MXU_FLOPS_S,
+        "est_time_s": flops / attainable,
+    }
+
+
+def main() -> None:
+    print(
+        f"{'shape':>22} {'blockT':>6} {'blockF':>6} {'VMEM':>10} "
+        f"{'int.':>7} {'bound':>8} {'peak%':>6}"
+    )
+    for (t, d, f) in [
+        (16, 64, 128),      # tiny-MoE serving shape
+        (128, 64, 128),     # one full token block
+        (128, 4096, 14336), # Mixtral-8x7B expert shape (paper scale)
+        (512, 4096, 14336),
+    ]:
+        for bt in [16, 128, 512]:
+            if bt > max(t, 1):
+                continue
+            for bf in [128, 512, 14336]:
+                if bf > f or f % min(bf, f) != 0:
+                    continue
+                a = analyze(t, d, f, bt, bf)
+                note = "  !! exceeds VMEM" if a["vmem_bytes"] > VMEM_BYTES else ""
+                print(
+                    f"{f'({t},{d},{f})':>22} {a['block_t']:>6} {min(bf, f):>6} "
+                    f"{a['vmem_bytes']/2**20:>8.2f}Mi {a['intensity_flop_per_byte']:>7.1f} "
+                    f"{a['bound']:>8} {100*a['attainable_flops_frac']:>5.1f}%{note}"
+                )
+
+
+if __name__ == "__main__":
+    main()

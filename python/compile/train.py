@@ -1,0 +1,266 @@
+"""Build-time training of the tiny MoE (runs once under ``make artifacts``).
+
+Two phases create the *expertise diversity* the paper's system exploits:
+
+* **Phase 1 — specialisation.** Each batch is drawn from one domain ``d``
+  and hard-routed through expert ``d`` at every layer
+  (``forward_hard``). Expert ``d``'s FFN weights only ever see domain-``d``
+  text; the attention/embedding/head parameters are shared across all
+  domains. The result mirrors the paper's Llama fine-tunes: each expert
+  is strongest on its own domain.
+
+* **Phase 2 — gate training.** With everything else frozen, each layer's
+  gate is trained to predict the sequence's domain from the (stopped-
+  gradient) post-attention hidden state — the analogue of the paper's
+  "positive/negative prompt method" for deriving gates. Gate scores then
+  estimate task-relevance, which is precisely what DES consumes.
+
+* **Phase 3 — mixture fine-tune.** End-to-end training of everything
+  with the gate-weighted dense forward on mixed-domain batches. Phases
+  1–2 alone leave the model brittle under *soft* routing (it never saw a
+  mixture of expert outputs); phase 3 makes serve-time aggregation
+  (paper eq. 8) first-class: gates sharpen (they now carry LM gradient)
+  and experts tolerate each other's residual contributions, which is
+  what lets MoE Top-2 beat every individual expert on mixed eval sets —
+  the Table-I property.
+
+Optimizer: hand-rolled Adam (no optax in this environment).
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .model import (
+    ModelConfig,
+    attn_block,
+    embed_apply,
+    expert_block,
+    forward_dense,
+    forward_hard,
+    gate_block,
+    lm_loss,
+)
+
+Params = dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# Adam
+# --------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# --------------------------------------------------------------------------
+# Phase 1: specialisation
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "expert"))
+def _phase1_step(params, opt_state, tokens, labels, cfg: ModelConfig, expert: int, lr):
+    def loss_fn(p):
+        logits = jax.vmap(lambda tk: forward_hard(p, cfg, tk, expert))(tokens)
+        return lm_loss(logits, labels)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    params, opt_state = adam_update(params, grads, opt_state, lr)
+    return params, opt_state, loss
+
+
+# --------------------------------------------------------------------------
+# Phase 2: gate training
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "expert"))
+def _phase2_step(gates, frozen, opt_state, tokens, cfg: ModelConfig, expert: int, lr):
+    """Train per-layer gate matrices to classify the domain.
+
+    ``gates`` is the list of (d, K) matrices; ``expert`` doubles as the
+    domain label (expert d <-> domain d by construction of phase 1).
+    """
+
+    def loss_fn(gates_):
+        p = dict(frozen)
+        p["layers"] = [
+            {**frozen["layers"][l], "wg": gates_[l]} for l in range(cfg.layers)
+        ]
+
+        def per_seq(tk):
+            h = embed_apply(p, tk)
+            total = 0.0
+            for l in range(cfg.layers):
+                h = attn_block(p, l, h, cfg)
+                scores = gate_block(p, l, jax.lax.stop_gradient(h))
+                # Position 0 has no context and cannot be classified;
+                # excluding it sharpens the gates everywhere else.
+                total = total - jnp.log(scores[1:, expert] + 1e-9).mean()
+                h = h + expert_block(p, l, expert, jax.lax.stop_gradient(h))
+            return total / cfg.layers
+
+        return jax.vmap(per_seq)(tokens).mean()
+
+    loss, grads = jax.value_and_grad(loss_fn)(gates)
+    gates, opt_state = adam_update(gates, grads, opt_state, lr)
+    return gates, opt_state, loss
+
+
+# --------------------------------------------------------------------------
+# Phase 3: end-to-end mixture fine-tune
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _phase3_step(params, opt_state, tokens, labels, cfg: ModelConfig, lr):
+    def loss_fn(p):
+        logits = jax.vmap(lambda tk: forward_dense(p, cfg, tk))(tokens)
+        return lm_loss(logits, labels)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    params, opt_state = adam_update(params, grads, opt_state, lr)
+    return params, opt_state, loss
+
+
+# --------------------------------------------------------------------------
+# Driver
+# --------------------------------------------------------------------------
+
+
+def train(
+    cfg: ModelConfig,
+    params: Params,
+    chains: data.DomainChains,
+    phase1_steps: int = 1200,
+    phase2_steps: int = 300,
+    phase3_steps: int = 600,
+    batch: int = 32,
+    lr: float = 3e-3,
+    seed: int = 0,
+    log_every: int = 100,
+    log: Any = print,
+) -> tuple[Params, dict]:
+    """Run all phases; returns trained params and a training record."""
+    record: dict[str, Any] = {"phase1": [], "phase2": [], "phase3": []}
+    t0 = time.time()
+
+    # -- Phase 1 ------------------------------------------------------------
+    opt_state = adam_init(params)
+    rng = np.random.default_rng(seed)
+    for step in range(phase1_steps):
+        d = step % cfg.experts  # round-robin domains
+        tokens, labels = data.sample_sequences(
+            chains, d, batch, cfg.seq_len, seed=int(rng.integers(1 << 31))
+        )
+        params, opt_state, loss = _phase1_step(
+            params, opt_state, jnp.asarray(tokens), jnp.asarray(labels), cfg, d, lr
+        )
+        if step % log_every == 0 or step == phase1_steps - 1:
+            record["phase1"].append({"step": step, "loss": float(loss)})
+            log(f"[phase1] step {step:5d} domain {d} loss {float(loss):.4f}")
+
+    # -- Phase 2 ------------------------------------------------------------
+    gates = [params["layers"][l]["wg"] for l in range(cfg.layers)]
+    frozen = params
+    gate_opt = adam_init(gates)
+    for step in range(phase2_steps):
+        d = step % cfg.experts
+        tokens, _ = data.sample_sequences(
+            chains, d, batch, cfg.seq_len, seed=int(rng.integers(1 << 31))
+        )
+        gates, gate_opt, loss = _phase2_step(
+            gates, frozen, gate_opt, jnp.asarray(tokens), cfg, d, lr
+        )
+        if step % log_every == 0 or step == phase2_steps - 1:
+            record["phase2"].append({"step": step, "loss": float(loss)})
+            log(f"[phase2] step {step:5d} domain {d} gate-loss {float(loss):.4f}")
+
+    params = dict(frozen)
+    params["layers"] = [
+        {**frozen["layers"][l], "wg": gates[l]} for l in range(cfg.layers)
+    ]
+
+    # -- Phase 3 ------------------------------------------------------------
+    if phase3_steps > 0:
+        opt_state = adam_init(params)
+        uniform = [1.0 / cfg.experts] * cfg.experts
+        for step in range(phase3_steps):
+            tokens, labels, _ = data.sample_mixture(
+                chains, uniform, batch, cfg.seq_len, seed=int(rng.integers(1 << 31))
+            )
+            params, opt_state, loss = _phase3_step(
+                params, opt_state, jnp.asarray(tokens), jnp.asarray(labels), cfg, lr / 3
+            )
+            if step % log_every == 0 or step == phase3_steps - 1:
+                record["phase3"].append({"step": step, "loss": float(loss)})
+                log(f"[phase3] step {step:5d} mixture loss {float(loss):.4f}")
+
+    record["wall_s"] = time.time() - t0
+    return params, record
+
+
+# --------------------------------------------------------------------------
+# Param (de)serialisation — flat .npz so artifacts cache across runs.
+# --------------------------------------------------------------------------
+
+
+def flatten_params(params: Params, cfg: ModelConfig) -> dict[str, np.ndarray]:
+    flat = {
+        "tok_emb": params["tok_emb"],
+        "pos_emb": params["pos_emb"],
+        "head": params["head"],
+        "rms_f": params["rms_f"],
+    }
+    for l, lp in enumerate(params["layers"]):
+        for name in ("rms1", "rms2", "wq", "wk", "wv", "wo", "wg"):
+            flat[f"l{l}.{name}"] = lp[name]
+        for j, ep in enumerate(lp["experts"]):
+            for name in ("w1", "w3", "w2"):
+                flat[f"l{l}.e{j}.{name}"] = ep[name]
+    return {k: np.asarray(v) for k, v in flat.items()}
+
+
+def unflatten_params(flat: dict[str, np.ndarray], cfg: ModelConfig) -> Params:
+    params: Params = {
+        "tok_emb": jnp.asarray(flat["tok_emb"]),
+        "pos_emb": jnp.asarray(flat["pos_emb"]),
+        "head": jnp.asarray(flat["head"]),
+        "rms_f": jnp.asarray(flat["rms_f"]),
+        "layers": [],
+    }
+    for l in range(cfg.layers):
+        layer = {
+            name: jnp.asarray(flat[f"l{l}.{name}"])
+            for name in ("rms1", "rms2", "wq", "wk", "wv", "wo", "wg")
+        }
+        layer["experts"] = [
+            {name: jnp.asarray(flat[f"l{l}.e{j}.{name}"]) for name in ("w1", "w3", "w2")}
+            for j in range(cfg.experts)
+        ]
+        params["layers"].append(layer)
+    return params

@@ -1,0 +1,81 @@
+"""AOT pipeline tests: HLO text round-trips and manifest integrity.
+
+These avoid retraining by exporting from freshly-initialized params —
+the lowering path is identical regardless of weight values."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, data, train
+from compile.model import ModelConfig, init_params
+
+CFG = ModelConfig(layers=1, experts=2)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, seed=0)
+
+
+def test_hlo_text_has_full_constants(params):
+    text = aot.to_hlo_text(
+        lambda h: (jax.numpy.tanh(h) * params["rms_f"],),
+        jax.ShapeDtypeStruct((4, CFG.d_model), jnp.float32),
+    )
+    assert "HloModule" in text
+    assert "{...}" not in text, "large constants must not be elided"
+    assert "ROOT" in text
+
+
+def test_export_blocks_and_manifest(tmp_path, params):
+    out = str(tmp_path)
+    blocks = aot.export_blocks(params, CFG, out, log=lambda *_: None)
+    assert len(blocks["attn"]) == CFG.layers
+    assert len(blocks["ffn"]) == CFG.layers
+    assert len(blocks["ffn"][0]) == CFG.experts
+    for f in [blocks["embed"], blocks["head"], *blocks["attn"], *blocks["gate"]]:
+        path = os.path.join(out, f)
+        assert os.path.exists(path)
+        text = open(path).read()
+        assert "{...}" not in text
+        assert text.startswith("HloModule")
+
+
+def test_export_eval_sets(tmp_path):
+    # Eval mixtures span data.N_DOMAINS domains regardless of model width.
+    chains = data.make_chains(data.N_DOMAINS, CFG.vocab, seed=0)
+    section = aot.export_eval_sets(chains, CFG, str(tmp_path), seed=0)
+    assert set(section) == set(data.EVAL_MIXTURES)
+    payload = json.load(open(tmp_path / section["mmlu"]))
+    toks = np.asarray(payload["tokens"])
+    labs = np.asarray(payload["labels"])
+    assert toks.shape == (aot.EVAL_SEQS, CFG.seq_len)
+    np.testing.assert_array_equal(toks[:, 1:], labs[:, :-1])
+    assert len(payload["domains"]) == aot.EVAL_SEQS
+
+
+def test_parity_fixture_masks_valid(tmp_path, params):
+    chains = data.make_chains(CFG.experts, CFG.vocab, seed=0)
+    fname = aot.export_parity_fixture(params, CFG, chains, str(tmp_path), seed=0)
+    payload = json.load(open(tmp_path / fname))
+    masks = np.asarray(payload["masks"])
+    assert masks.shape == (CFG.layers, CFG.seq_len, CFG.experts)
+    per_token = masks.sum(axis=2)
+    assert (per_token >= 1).all() and (per_token <= 2).all()
+    logits = np.asarray(payload["logits"])
+    assert logits.shape == (CFG.seq_len, CFG.vocab)
+    assert np.isfinite(logits).all()
+
+
+def test_weights_roundtrip(params):
+    flat = train.flatten_params(params, CFG)
+    back = train.unflatten_params(flat, CFG)
+    for a, b in zip(
+        jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(back)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

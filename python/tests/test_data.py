@@ -1,0 +1,62 @@
+"""Synthetic corpus tests: determinism, chain-following, mixtures."""
+
+import numpy as np
+import pytest
+
+from compile import data
+
+
+@pytest.fixture(scope="module")
+def chains():
+    return data.make_chains(seed=0)
+
+
+def test_deterministic(chains):
+    c2 = data.make_chains(seed=0)
+    np.testing.assert_array_equal(chains.succ, c2.succ)
+    np.testing.assert_array_equal(chains.probs, c2.probs)
+    c3 = data.make_chains(seed=1)
+    assert not np.array_equal(chains.succ, c3.succ)
+
+
+def test_sequences_follow_chain(chains):
+    tok, lab = data.sample_sequences(chains, 0, 8, 16, seed=2)
+    assert tok.shape == (8, 16)
+    # labels are the shifted stream
+    np.testing.assert_array_equal(tok[:, 1:], lab[:, :-1])
+    # every transition from t>=1 must be an allowed successor
+    for s in range(8):
+        for t in range(1, 16):
+            b = tok[s, t - 1]
+            assert tok[s, t] in chains.succ[0, b]
+
+
+def test_domains_differ(chains):
+    t0, _ = data.sample_sequences(chains, 0, 4, 16, seed=5)
+    t1, _ = data.sample_sequences(chains, 1, 4, 16, seed=5)
+    assert not np.array_equal(t0, t1)
+
+
+def test_mixture_proportions(chains):
+    mixture = [0.7, 0.1, 0.1, 0.1]
+    _, _, domains = data.sample_mixture(chains, mixture, 2000, seed=3)
+    frac0 = (domains == 0).mean()
+    assert abs(frac0 - 0.7) < 0.05
+
+
+def test_mixture_rejects_bad_weights(chains):
+    with pytest.raises(AssertionError):
+        data.sample_mixture(chains, [0.5, 0.5, 0.5, 0.5], 10)
+
+
+def test_eval_mixtures_valid():
+    for name, mix in data.EVAL_MIXTURES.items():
+        assert len(mix) == data.N_DOMAINS, name
+        assert abs(sum(mix) - 1.0) < 1e-9, name
+
+
+def test_chance_accuracy_in_range(chains):
+    for d in range(chains.n_domains):
+        acc = data.chance_accuracy(chains, d)
+        # Dirichlet(0.6) max-prob over 4 branches averages well above 1/4.
+        assert 0.3 < acc < 0.95

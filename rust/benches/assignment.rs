@@ -1,0 +1,51 @@
+//! Hungarian (Jonker–Volgenant) subcarrier-assignment bench.
+//!
+//! The paper cites `O(M²K(K−1) + M² log M)` for Kuhn–Munkres with heaps;
+//! our JV implementation is `O(n² m)` for n links × m subcarriers. The
+//! sweep covers the paper-scale shapes: K=4 (12 links), K=8 (56 links)
+//! against M ∈ {64, 128, 256, 1024}.
+
+use dmoe::assignment::{allocate_subcarriers, hungarian_min_cost};
+use dmoe::channel::ChannelModel;
+use dmoe::config::ChannelConfig;
+use dmoe::util::bench::{black_box, Bencher};
+use dmoe::util::rng::Xoshiro256pp;
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("# raw Hungarian solver\n");
+    for (n, m) in [(12usize, 64usize), (12, 256), (56, 128), (56, 256), (56, 1024), (90, 1024)] {
+        let mut rng = Xoshiro256pp::seed_from_u64((n * m) as u64);
+        let cost: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..m).map(|_| rng.next_f64() * 100.0).collect())
+            .collect();
+        b.bench(&format!("hungarian/{n}x{m}"), || {
+            black_box(hungarian_min_cost(&cost).unwrap())
+        });
+    }
+
+    println!("\n# end-to-end subcarrier allocation (channel + payloads)\n");
+    for (k, m) in [(4usize, 64usize), (8, 128), (8, 1024)] {
+        let cfg = ChannelConfig {
+            subcarriers: m,
+            ..ChannelConfig::default()
+        };
+        let mut ch = ChannelModel::new(cfg, k, 7);
+        let state = ch.realize();
+        let mut payloads = vec![vec![0.0; k]; k];
+        for i in 0..k {
+            for j in 0..k {
+                if i != j {
+                    payloads[i][j] = 8192.0;
+                }
+            }
+        }
+        b.bench(&format!("allocate/K={k}/M={m}"), || {
+            black_box(allocate_subcarriers(&state, &payloads, 0.01).unwrap())
+        });
+    }
+
+    std::fs::create_dir_all("reports").ok();
+    std::fs::write("reports/bench_assignment.json", b.to_json()).ok();
+    println!("\nwrote reports/bench_assignment.json");
+}

@@ -1,0 +1,54 @@
+//! End-to-end serving bench: whole-batch latency/throughput through the
+//! full DMoE protocol (embed → L×(attn, gate, JESA, FFN, aggregate) →
+//! head) per policy. Skips cleanly without artifacts.
+
+use dmoe::coordinator::{DmoeServer, ServePolicy};
+use dmoe::util::bench::{black_box, Bencher};
+use dmoe::workload::load_eval_sets;
+use dmoe::SystemConfig;
+
+fn main() {
+    let mut cfg = SystemConfig::default();
+    cfg.artifacts_dir =
+        std::env::var("DMOE_ARTIFACTS").unwrap_or_else(|_| cfg.artifacts_dir.clone());
+    if !std::path::Path::new(&format!("{}/manifest.json", cfg.artifacts_dir)).exists() {
+        println!(
+            "skipping e2e bench: no artifacts at {} (run `make artifacts`)",
+            cfg.artifacts_dir
+        );
+        return;
+    }
+
+    let mut server = DmoeServer::new(&cfg).expect("server");
+    let layers = server.layers();
+    let eval = load_eval_sets(&server.runtime().manifest).expect("eval sets")[0].clone();
+    let batch = eval.batches(server.experts())[0].clone();
+    let tokens: usize = batch.iter().map(|q| q.tokens.len()).sum();
+    println!(
+        "# end-to-end serving: {} queries, {} tokens, L={}\n",
+        batch.len(),
+        tokens,
+        layers
+    );
+
+    let mut b = Bencher::new();
+    for policy in [
+        ServePolicy::jesa(0.8, 2, layers),
+        ServePolicy::topk(2, layers),
+        ServePolicy::homogeneous(0.5, 2, layers),
+        ServePolicy::lower_bound(0.8, 2, layers),
+    ] {
+        let r = b.bench(&format!("serve_batch/{}", policy.label), || {
+            black_box(server.serve_batch(&batch, &policy).unwrap())
+        });
+        println!(
+            "{:<28} -> {:.0} tokens/s",
+            policy.label,
+            tokens as f64 / r.mean_s()
+        );
+    }
+
+    std::fs::create_dir_all("reports").ok();
+    std::fs::write("reports/bench_e2e.json", b.to_json()).ok();
+    println!("\nwrote reports/bench_e2e.json");
+}

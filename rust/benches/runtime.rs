@@ -1,0 +1,53 @@
+//! PJRT block-execution bench: per-block latency of the compiled HLO
+//! artifacts (the L3 hot path's inner cost). Skips cleanly when
+//! `make artifacts` has not run.
+
+use dmoe::runtime::{Matrix, ModelRuntime};
+use dmoe::util::bench::{black_box, Bencher};
+use dmoe::util::rng::Xoshiro256pp;
+
+fn main() {
+    let dir = std::env::var("DMOE_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        println!("skipping runtime bench: no artifacts at {dir} (run `make artifacts`)");
+        return;
+    }
+    let rt = ModelRuntime::load(&dir).expect("artifacts load");
+    let meta = rt.manifest.model.clone();
+    println!(
+        "# PJRT block execution (L={}, K={}, d={}, T={})\n",
+        meta.layers, meta.experts, meta.d_model, meta.seq_len
+    );
+
+    let mut rng = Xoshiro256pp::seed_from_u64(1);
+    let tokens: Vec<i32> = (0..meta.seq_len)
+        .map(|_| rng.next_below(meta.vocab as u64) as i32)
+        .collect();
+    let h = rt.embed(&tokens).unwrap();
+    let data: Vec<f32> = (0..meta.seq_len * meta.d_model)
+        .map(|_| rng.next_f32() - 0.5)
+        .collect();
+    let x = Matrix::from_vec(meta.seq_len, meta.d_model, data);
+
+    let mut b = Bencher::new();
+    b.bench("embed", || black_box(rt.embed(&tokens).unwrap()));
+    b.bench("attn(l=0)", || black_box(rt.attn(0, &x).unwrap()));
+    b.bench("gate(l=0)", || black_box(rt.gate(0, &x).unwrap()));
+    b.bench("ffn(l=0,e=0) [pallas]", || black_box(rt.ffn(0, 0, &x).unwrap()));
+    b.bench("head", || black_box(rt.head(&h).unwrap()));
+
+    // Tokens/second through one full layer for one expert-sized batch.
+    let per_layer = |x: &Matrix| {
+        let h1 = rt.attn(0, x).unwrap();
+        let _g = rt.gate(0, &h1).unwrap();
+        let f = rt.ffn(0, 0, &h1).unwrap();
+        (h1, f)
+    };
+    let r = b.bench("layer(attn+gate+ffn)", || black_box(per_layer(&x)));
+    let tok_s = meta.seq_len as f64 / r.mean_s();
+    println!("\nper-layer token throughput (1 expert): {tok_s:.0} tokens/s");
+
+    std::fs::create_dir_all("reports").ok();
+    std::fs::write("reports/bench_runtime.json", b.to_json()).ok();
+    println!("wrote reports/bench_runtime.json");
+}

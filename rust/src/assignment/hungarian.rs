@@ -1,0 +1,235 @@
+//! Jonker–Volgenant shortest-augmenting-path solver for rectangular
+//! min-cost assignment.
+//!
+//! Cost matrix is `n × m` with `n ≤ m`; every row is matched to a distinct
+//! column; the returned vector maps row → column. `f64::INFINITY` marks a
+//! forbidden pairing; the solver errors if no finite-cost perfect matching
+//! over rows exists.
+
+/// Assignment failure.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum AssignmentError {
+    #[error("cost matrix has {rows} rows but only {cols} columns; need rows <= cols")]
+    TooFewColumns { rows: usize, cols: usize },
+    #[error("no feasible (finite-cost) assignment exists for row {row}")]
+    Infeasible { row: usize },
+    #[error("cost matrix is ragged or empty")]
+    BadShape,
+}
+
+/// Solve min-cost assignment. `cost[r][c]` ≥ 0 or `+inf` (forbidden).
+///
+/// Returns `assign` with `assign[r] = c` and the total cost.
+pub fn hungarian_min_cost(cost: &[Vec<f64>]) -> Result<(Vec<usize>, f64), AssignmentError> {
+    let n = cost.len();
+    if n == 0 {
+        return Ok((Vec::new(), 0.0));
+    }
+    let m = cost[0].len();
+    if cost.iter().any(|row| row.len() != m) || m == 0 {
+        return Err(AssignmentError::BadShape);
+    }
+    if n > m {
+        return Err(AssignmentError::TooFewColumns { rows: n, cols: m });
+    }
+    debug_assert!(
+        cost.iter().flatten().all(|&x| x >= 0.0 || x.is_nan()),
+        "negative costs not supported"
+    );
+
+    const INF: f64 = f64::INFINITY;
+    // 1-indexed internally, as in the classical JV formulation.
+    // u: row potentials, v: column potentials, way: predecessor columns.
+    let mut u = vec![0.0f64; n + 1];
+    let mut v = vec![0.0f64; m + 1];
+    // p[c] = row matched to column c (0 = free).
+    let mut p = vec![0usize; m + 1];
+    let mut way = vec![0usize; m + 1];
+
+    for r in 1..=n {
+        p[0] = r;
+        let mut j0 = 0usize; // current column (virtual col 0 hosts row r)
+        let mut minv = vec![INF; m + 1];
+        let mut used = vec![false; m + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = INF;
+            let mut j1 = 0usize;
+            for j in 1..=m {
+                if used[j] {
+                    continue;
+                }
+                let cur = cost[i0 - 1][j - 1] - u[i0] - v[j];
+                if cur < minv[j] {
+                    minv[j] = cur;
+                    way[j] = j0;
+                }
+                if minv[j] < delta {
+                    delta = minv[j];
+                    j1 = j;
+                }
+            }
+            if !delta.is_finite() {
+                return Err(AssignmentError::Infeasible { row: r - 1 });
+            }
+            for j in 0..=m {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        // Augment along the alternating path.
+        while j0 != 0 {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+        }
+    }
+
+    let mut assign = vec![usize::MAX; n];
+    for c in 1..=m {
+        if p[c] != 0 {
+            assign[p[c] - 1] = c - 1;
+        }
+    }
+    let total: f64 = assign.iter().enumerate().map(|(r, &c)| cost[r][c]).sum();
+    Ok((assign, total))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    /// Brute-force oracle over all column permutations (small sizes only).
+    fn brute_force(cost: &[Vec<f64>]) -> f64 {
+        let n = cost.len();
+        let m = cost[0].len();
+        let mut cols: Vec<usize> = (0..m).collect();
+        let mut best = f64::INFINITY;
+        permute(&mut cols, 0, n, &mut |perm| {
+            let total: f64 = (0..n).map(|r| cost[r][perm[r]]).sum();
+            if total < best {
+                best = total;
+            }
+        });
+        best
+    }
+
+    fn permute(cols: &mut Vec<usize>, k: usize, n: usize, f: &mut impl FnMut(&[usize])) {
+        if k == n {
+            f(cols);
+            return;
+        }
+        for i in k..cols.len() {
+            cols.swap(k, i);
+            permute(cols, k + 1, n, f);
+            cols.swap(k, i);
+        }
+    }
+
+    #[test]
+    fn square_known_case() {
+        let cost = vec![
+            vec![4.0, 1.0, 3.0],
+            vec![2.0, 0.0, 5.0],
+            vec![3.0, 2.0, 2.0],
+        ];
+        let (assign, total) = hungarian_min_cost(&cost).unwrap();
+        assert_eq!(total, 5.0);
+        assert_eq!(assign, vec![1, 0, 2]);
+    }
+
+    #[test]
+    fn rectangular_uses_best_columns() {
+        let cost = vec![vec![10.0, 1.0, 10.0, 10.0], vec![1.0, 10.0, 10.0, 10.0]];
+        let (assign, total) = hungarian_min_cost(&cost).unwrap();
+        assert_eq!(total, 2.0);
+        assert_eq!(assign, vec![1, 0]);
+    }
+
+    #[test]
+    fn distinct_columns_always() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        for _ in 0..50 {
+            let n = rng.range_usize(1, 7);
+            let m = rng.range_usize(n, n + 6);
+            let cost: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..m).map(|_| rng.next_f64() * 100.0).collect())
+                .collect();
+            let (assign, _) = hungarian_min_cost(&cost).unwrap();
+            let mut seen = std::collections::HashSet::new();
+            for &c in &assign {
+                assert!(c < m);
+                assert!(seen.insert(c), "column reused");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_brute_force_randomized() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        for _ in 0..200 {
+            let n = rng.range_usize(1, 6);
+            let m = rng.range_usize(n, 7);
+            let cost: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..m).map(|_| (rng.next_f64() * 20.0).round()).collect())
+                .collect();
+            let (_, total) = hungarian_min_cost(&cost).unwrap();
+            let expect = brute_force(&cost);
+            assert!(
+                (total - expect).abs() < 1e-9,
+                "JV {total} != brute {expect} on {cost:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn forbidden_edges_avoided() {
+        let inf = f64::INFINITY;
+        let cost = vec![vec![inf, 5.0], vec![3.0, inf]];
+        let (assign, total) = hungarian_min_cost(&cost).unwrap();
+        assert_eq!(assign, vec![1, 0]);
+        assert_eq!(total, 8.0);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let inf = f64::INFINITY;
+        let cost = vec![vec![inf, inf], vec![1.0, 2.0]];
+        assert!(matches!(
+            hungarian_min_cost(&cost),
+            Err(AssignmentError::Infeasible { .. })
+        ));
+    }
+
+    #[test]
+    fn too_few_columns_rejected() {
+        let cost = vec![vec![1.0], vec![2.0]];
+        assert_eq!(
+            hungarian_min_cost(&cost),
+            Err(AssignmentError::TooFewColumns { rows: 2, cols: 1 })
+        );
+    }
+
+    #[test]
+    fn empty_matrix_ok() {
+        let (assign, total) = hungarian_min_cost(&[]).unwrap();
+        assert!(assign.is_empty());
+        assert_eq!(total, 0.0);
+    }
+
+    #[test]
+    fn ragged_rejected() {
+        let cost = vec![vec![1.0, 2.0], vec![3.0]];
+        assert_eq!(hungarian_min_cost(&cost), Err(AssignmentError::BadShape));
+    }
+}

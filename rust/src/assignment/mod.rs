@@ -1,0 +1,15 @@
+//! Optimal subcarrier allocation (paper §VI-A, Appendix B).
+//!
+//! Problem P3(a): each active inter-expert link `(i → j)` (one with
+//! scheduled payload `s_ij > 0`) gets exactly one subcarrier, subcarriers
+//! are exclusive (C3), and the objective is the sum of per-link energies
+//! `P0 · s_ij / r_ij^(m)`. This is a rectangular min-cost bipartite
+//! assignment, solved exactly by the Kuhn–Munkres family; we implement the
+//! Jonker–Volgenant shortest-augmenting-path variant with dual potentials
+//! — `O(n² m)` for `n` links and `m ≥ n` subcarriers.
+
+mod hungarian;
+mod subcarrier;
+
+pub use hungarian::{hungarian_min_cost, AssignmentError};
+pub use subcarrier::{allocate_subcarriers, SubcarrierAllocation};

@@ -1,0 +1,191 @@
+//! P3(a) as a bipartite assignment over (active links) × (subcarriers).
+//!
+//! Rows are the links with non-zero scheduled payload `s_ij`; columns are
+//! the `M` subcarriers; edge weight is the communication energy
+//! `w_ij^(m) = P0 · (8 s_ij) / r_ij^(m)` (Appendix B — `s_ij` in bytes,
+//! rates in bit/s). The Hungarian solver returns the exclusive (C3),
+//! one-subcarrier-per-link (P3(a)) minimum-energy allocation.
+
+use super::hungarian::{hungarian_min_cost, AssignmentError};
+use crate::channel::{ChannelState, LinkId};
+
+/// The result of optimal subcarrier allocation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubcarrierAllocation {
+    /// `alloc[i][j] = Some(m)` — subcarrier `m` carries link `i → j`.
+    alloc: Vec<Vec<Option<usize>>>,
+    /// Total communication energy of the allocation (objective of P3(a)).
+    pub total_energy_j: f64,
+}
+
+impl SubcarrierAllocation {
+    pub fn empty(k: usize) -> Self {
+        Self {
+            alloc: vec![vec![None; k]; k],
+            total_energy_j: 0.0,
+        }
+    }
+
+    pub fn get(&self, i: usize, j: usize) -> Option<usize> {
+        self.alloc[i][j]
+    }
+
+    /// Number of links holding a subcarrier.
+    pub fn active_links(&self) -> usize {
+        self.alloc
+            .iter()
+            .flatten()
+            .filter(|s| s.is_some())
+            .count()
+    }
+
+    /// Verify C3: no subcarrier is used by two links.
+    pub fn is_exclusive(&self) -> bool {
+        let mut seen = std::collections::HashSet::new();
+        for row in &self.alloc {
+            for s in row.iter().flatten() {
+                if !seen.insert(*s) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Solve the optimal subcarrier allocation for the given payload matrix.
+///
+/// `payload_bytes[i][j]` is `s_ij` (bytes scheduled from expert `i` to
+/// `j`); diagonal entries are ignored (in-situ). Links with zero payload
+/// receive no subcarrier — they don't transmit, so giving them spectrum
+/// would only constrain the others (energy-optimal and matches the
+/// `Σ_m β_ij ≤ 1` relaxation of P3(a)).
+pub fn allocate_subcarriers(
+    state: &ChannelState,
+    payload_bytes: &[Vec<f64>],
+    p0_w: f64,
+) -> Result<SubcarrierAllocation, AssignmentError> {
+    let k = state.experts();
+    assert_eq!(payload_bytes.len(), k, "payload matrix must be K×K");
+    let active: Vec<LinkId> = LinkId::all(k)
+        .into_iter()
+        .filter(|l| payload_bytes[l.from][l.to] > 0.0)
+        .collect();
+
+    let mut alloc = vec![vec![None; k]; k];
+    if active.is_empty() {
+        return Ok(SubcarrierAllocation {
+            alloc,
+            total_energy_j: 0.0,
+        });
+    }
+
+    let _m = state.subcarriers();
+    let cost: Vec<Vec<f64>> = active
+        .iter()
+        .map(|l| {
+            let s_bits = payload_bytes[l.from][l.to] * 8.0;
+            state
+                .rate_row(l.from, l.to)
+                .iter()
+                .map(|&r| if r > 0.0 { p0_w * s_bits / r } else { f64::INFINITY })
+                .collect()
+        })
+        .collect();
+
+    let (assign, total) = hungarian_min_cost(&cost)?;
+    for (row, l) in active.iter().enumerate() {
+        alloc[l.from][l.to] = Some(assign[row]);
+    }
+    Ok(SubcarrierAllocation {
+        alloc,
+        total_energy_j: total,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::ChannelState;
+
+    fn payloads(k: usize, entries: &[(usize, usize, f64)]) -> Vec<Vec<f64>> {
+        let mut p = vec![vec![0.0; k]; k];
+        for &(i, j, s) in entries {
+            p[i][j] = s;
+        }
+        p
+    }
+
+    #[test]
+    fn empty_payload_allocates_nothing() {
+        let st = ChannelState::from_rates(3, 4, |_, _, _| 1e6);
+        let a = allocate_subcarriers(&st, &payloads(3, &[]), 0.01).unwrap();
+        assert_eq!(a.active_links(), 0);
+        assert_eq!(a.total_energy_j, 0.0);
+    }
+
+    #[test]
+    fn single_link_takes_best_subcarrier() {
+        // Subcarrier 2 has 4x the rate for link (0,1).
+        let st = ChannelState::from_rates(2, 3, |_, _, m| if m == 2 { 4e6 } else { 1e6 });
+        let a = allocate_subcarriers(&st, &payloads(2, &[(0, 1, 1000.0)]), 0.01).unwrap();
+        assert_eq!(a.get(0, 1), Some(2));
+        let expect = 0.01 * 8000.0 / 4e6;
+        assert!((a.total_energy_j - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exclusivity_enforced_under_contention() {
+        // Both links prefer subcarrier 0; one must yield.
+        let st = ChannelState::from_rates(3, 2, |_, _, m| if m == 0 { 2e6 } else { 1e6 });
+        let a = allocate_subcarriers(
+            &st,
+            &payloads(3, &[(0, 1, 1000.0), (1, 2, 1000.0)]),
+            0.01,
+        )
+        .unwrap();
+        assert!(a.is_exclusive());
+        assert_eq!(a.active_links(), 2);
+    }
+
+    #[test]
+    fn contention_resolved_optimally() {
+        // link A: rates [10, 1]; link B: rates [10, 9] (Mbit/s).
+        // Greedy-by-link would give A->0, B->1 or B->0, A->1.
+        // Optimal: A gets 0 (it suffers more on 1), B gets 1.
+        let st = ChannelState::from_rates(3, 2, |i, _, m| match (i, m) {
+            (0, 0) => 10e6,
+            (0, 1) => 1e6,
+            (1, 0) => 10e6,
+            (1, 1) => 9e6,
+            _ => 1e6,
+        });
+        let a = allocate_subcarriers(
+            &st,
+            &payloads(3, &[(0, 1, 1000.0), (1, 2, 1000.0)]),
+            0.01,
+        )
+        .unwrap();
+        assert_eq!(a.get(0, 1), Some(0));
+        assert_eq!(a.get(1, 2), Some(1));
+    }
+
+    #[test]
+    fn more_links_than_subcarriers_errors() {
+        let st = ChannelState::from_rates(3, 1, |_, _, _| 1e6);
+        let r = allocate_subcarriers(
+            &st,
+            &payloads(3, &[(0, 1, 1.0), (1, 0, 1.0)]),
+            0.01,
+        );
+        assert!(matches!(r, Err(AssignmentError::TooFewColumns { .. })));
+    }
+
+    #[test]
+    fn energy_scales_with_payload() {
+        let st = ChannelState::from_rates(2, 2, |_, _, _| 1e6);
+        let a1 = allocate_subcarriers(&st, &payloads(2, &[(0, 1, 1000.0)]), 0.01).unwrap();
+        let a2 = allocate_subcarriers(&st, &payloads(2, &[(0, 1, 2000.0)]), 0.01).unwrap();
+        assert!((a2.total_energy_j - 2.0 * a1.total_energy_j).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,107 @@
+//! Fig. 10 — the accuracy/energy tradeoff frontier.
+//!
+//! Served on the real tiny-MoE: sweep JESA(γ0, 2) over γ0, H(z, 2) over
+//! z, plus Top-1/2/3 anchors; plot (total energy, accuracy) pairs. The
+//! paper's finding: JESA dominates homogeneous allocation (higher
+//! accuracy at equal energy) and approaches Top-2 accuracy at a fraction
+//! of its energy.
+
+use super::{FigureReport, Series};
+use crate::coordinator::{DmoeServer, ServePolicy};
+use crate::workload::load_eval_sets;
+use anyhow::Result;
+
+/// Sweep values.
+#[derive(Debug, Clone)]
+pub struct Fig10Options {
+    pub jesa_gammas: Vec<f64>,
+    pub homogeneous_zs: Vec<f64>,
+    pub topk: Vec<usize>,
+    pub max_batches: Option<usize>,
+    /// Eval set index to serve (0 = the general mixture).
+    pub eval_index: usize,
+}
+
+impl Default for Fig10Options {
+    fn default() -> Self {
+        Self {
+            jesa_gammas: vec![0.5, 0.6, 0.7, 0.8, 0.9, 0.95],
+            homogeneous_zs: vec![0.2, 0.35, 0.5, 0.65, 0.8],
+            topk: vec![1, 2, 3],
+            max_batches: None,
+            eval_index: 0,
+        }
+    }
+}
+
+/// A measured (energy, accuracy) point.
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub label: String,
+    pub energy_j: f64,
+    pub accuracy: f64,
+}
+
+/// Run the sweep; returns the figure and raw points.
+pub fn run(server: &mut DmoeServer, opts: &Fig10Options) -> Result<(FigureReport, Vec<Point>)> {
+    let layers = server.layers();
+    let eval_sets = load_eval_sets(&server.runtime().manifest)?;
+    let eval = &eval_sets[opts.eval_index.min(eval_sets.len() - 1)];
+
+    let mut groups: Vec<(String, Vec<ServePolicy>)> = Vec::new();
+    groups.push((
+        "JESA".into(),
+        opts.jesa_gammas
+            .iter()
+            .map(|&g| ServePolicy::jesa(g, 2, layers))
+            .collect(),
+    ));
+    groups.push((
+        "Homogeneous".into(),
+        opts.homogeneous_zs
+            .iter()
+            .map(|&z| ServePolicy::homogeneous(z, 2, layers))
+            .collect(),
+    ));
+    groups.push((
+        "Top-k".into(),
+        opts.topk
+            .iter()
+            .map(|&k| ServePolicy::topk(k, layers))
+            .collect(),
+    ));
+
+    let mut series = Vec::new();
+    let mut points = Vec::new();
+    let mut text = String::from("label: (energy J, accuracy)\n");
+    for (group, policies) in groups {
+        let mut s = Series::new(group);
+        for pol in policies {
+            let r = server.serve_eval_set(eval, &pol, opts.max_batches)?;
+            let e = r.ledger.total().total_j();
+            let a = r.accuracy();
+            s.push(e, a);
+            text.push_str(&format!("  {:<14} ({e:.4}, {a:.4})\n", pol.label));
+            points.push(Point {
+                label: pol.label.clone(),
+                energy_j: e,
+                accuracy: a,
+            });
+        }
+        series.push(s);
+    }
+
+    Ok((
+        FigureReport {
+            id: "fig10".into(),
+            title: format!(
+                "Accuracy vs energy tradeoff on eval set '{}'",
+                eval.name
+            ),
+            axes: ("energy (J)".into(), "accuracy".into()),
+            series,
+            text,
+        },
+        points,
+    ))
+}

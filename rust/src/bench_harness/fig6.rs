@@ -1,0 +1,204 @@
+//! Fig. 6 — DES expert-selection patterns versus the layer-importance
+//! base γ0.
+//!
+//! Paper setup: manually created *high-performing* experts (higher gate
+//! scores, proportionally higher power) alongside low-performing,
+//! low-cost experts. As the layer index grows the QoS `z·γ0^l` relaxes
+//! and DES shifts from the expensive high-performers to the cheap
+//! low-performers; a larger γ0 delays the shift. Synthetic-gate,
+//! paper-scale experiment (no trained model needed).
+
+use super::{FigureReport, Series};
+use crate::channel::ChannelModel;
+use crate::config::SystemConfig;
+use crate::energy::EnergyModel;
+use crate::gating::{GateScores, LayerImportance, SyntheticGate};
+use crate::jesa::{solve_round, JesaOptions, RoundProblem};
+use crate::metrics::SelectionPattern;
+use crate::util::rng::Xoshiro256pp;
+
+/// Options for the pattern experiment.
+#[derive(Debug, Clone)]
+pub struct Fig6Options {
+    /// Number of high-performing (high-score, high-cost) experts; the
+    /// rest are low-performing, low-cost.
+    pub high_performers: usize,
+    /// Score bias of a high performer (multiplies expected gate score).
+    pub score_bias: f64,
+    /// Cost multiple of a high performer.
+    pub cost_bias: f64,
+    /// Monte-Carlo rounds per layer.
+    pub rounds: usize,
+    pub tokens_per_expert: usize,
+}
+
+impl Default for Fig6Options {
+    fn default() -> Self {
+        Self {
+            high_performers: 3,
+            score_bias: 4.0,
+            cost_bias: 4.0,
+            rounds: 24,
+            tokens_per_expert: 4,
+        }
+    }
+}
+
+/// Compute the selection pattern for one γ0.
+pub fn pattern_for_gamma(
+    cfg: &SystemConfig,
+    gamma0: f64,
+    opts: &Fig6Options,
+) -> SelectionPattern {
+    let k = cfg.moe.experts;
+    let layers = cfg.moe.layers;
+    assert!(opts.high_performers <= k);
+
+    // High performers: first `high_performers` experts — biased scores,
+    // proportionally biased compute energy a_j.
+    let bias: Vec<f64> = (0..k)
+        .map(|j| if j < opts.high_performers { opts.score_bias } else { 1.0 })
+        .collect();
+    let mut energy_cfg = cfg.energy.clone();
+    // Flatten the paper's a_j = j·1e-3 ramp so the cost gap comes only
+    // from the high-performer bias:
+    let base = energy_cfg.a_per_byte.iter().sum::<f64>() / k as f64;
+    energy_cfg.a_per_byte = (0..k)
+        .map(|j| {
+            if j < opts.high_performers {
+                base * opts.cost_bias
+            } else {
+                base
+            }
+        })
+        .collect();
+    let energy = EnergyModel::new(cfg.channel.clone(), energy_cfg);
+
+    let importance = LayerImportance::geometric(gamma0, layers);
+    let gate = SyntheticGate::new(k, 1.5).with_bias(bias);
+    let mut rng = Xoshiro256pp::seed_from_u64(cfg.workload.seed ^ 0xF16_6);
+    let mut channel = ChannelModel::new(cfg.channel.clone(), k, cfg.workload.seed ^ 0xF16);
+    let mut pattern = SelectionPattern::new(layers, k);
+
+    for round in 0..opts.rounds {
+        for l in 0..layers {
+            let state = channel.realize();
+            let gates: Vec<Vec<GateScores>> = (0..k)
+                .map(|_| {
+                    (0..opts.tokens_per_expert)
+                        .map(|_| gate.sample(&mut rng))
+                        .collect()
+                })
+                .collect();
+            let problem = RoundProblem {
+                gates,
+                threshold: cfg.selection.z * importance.gamma(l),
+                max_active: cfg.moe.max_active,
+            };
+            let sol = solve_round(
+                &state,
+                &problem,
+                &energy,
+                &JesaOptions {
+                    seed: (round * layers + l) as u64,
+                    ..JesaOptions::default()
+                },
+            );
+            for row in &sol.selections {
+                for sel in row {
+                    pattern.record(l, &sel.selected);
+                }
+            }
+        }
+    }
+    pattern
+}
+
+/// Run Fig. 6 for several γ0 values.
+pub fn run(cfg: &SystemConfig, gammas: &[f64], opts: &Fig6Options) -> FigureReport {
+    let mut text = String::new();
+    let mut series = Vec::new();
+    for &g in gammas {
+        let pattern = pattern_for_gamma(cfg, g, opts);
+        text.push_str(&format!("\nγ0 = {g}\n{}", pattern.render()));
+        // Series: mean selection probability of the high-performer group
+        // per layer — the "shift point" signal.
+        let mut s = Series::new(format!("γ0={g} high-perf share"));
+        for l in 0..pattern.layers() {
+            let hi: f64 = (0..opts.high_performers)
+                .map(|j| pattern.probability(l, j))
+                .sum::<f64>()
+                / opts.high_performers as f64;
+            s.push((l + 1) as f64, hi);
+        }
+        series.push(s);
+    }
+    FigureReport {
+        id: "fig6".into(),
+        title: "Expert selection patterns vs layer importance factor".into(),
+        axes: ("layer".into(), "high-performer selection probability".into()),
+        series,
+        text,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SystemConfig {
+        let mut c = SystemConfig::paper_energy();
+        c.moe.layers = 6;
+        c.channel.subcarriers = 64;
+        c
+    }
+
+    #[test]
+    fn high_performers_dominate_early_layers() {
+        let opts = Fig6Options {
+            rounds: 8,
+            ..Fig6Options::default()
+        };
+        let p = pattern_for_gamma(&cfg(), 0.8, &opts);
+        let hi_l0: f64 = (0..3).map(|j| p.probability(0, j)).sum();
+        let lo_l0: f64 = (3..8).map(|j| p.probability(0, j)).sum();
+        assert!(
+            hi_l0 > lo_l0,
+            "layer 0 should prefer high performers: hi={hi_l0:.2} lo={lo_l0:.2}"
+        );
+    }
+
+    #[test]
+    fn selection_shifts_to_low_cost_at_depth() {
+        let opts = Fig6Options {
+            rounds: 8,
+            ..Fig6Options::default()
+        };
+        let p = pattern_for_gamma(&cfg(), 0.7, &opts);
+        let last = p.layers() - 1;
+        let hi_first: f64 = (0..3).map(|j| p.probability(0, j)).sum();
+        let hi_last: f64 = (0..3).map(|j| p.probability(last, j)).sum();
+        assert!(
+            hi_last < hi_first,
+            "high-performer share should drop with depth: {hi_first:.2} -> {hi_last:.2}"
+        );
+    }
+
+    #[test]
+    fn larger_gamma_delays_the_shift() {
+        let opts = Fig6Options {
+            rounds: 8,
+            ..Fig6Options::default()
+        };
+        let lo = pattern_for_gamma(&cfg(), 0.6, &opts);
+        let hi = pattern_for_gamma(&cfg(), 0.95, &opts);
+        let mid = lo.layers() / 2;
+        let share = |p: &crate::metrics::SelectionPattern, l: usize| {
+            (0..3).map(|j| p.probability(l, j)).sum::<f64>()
+        };
+        assert!(
+            share(&hi, mid) >= share(&lo, mid),
+            "γ0=0.95 should keep high performers longer than γ0=0.6"
+        );
+    }
+}

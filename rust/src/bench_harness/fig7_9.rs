@@ -1,0 +1,230 @@
+//! Figs. 7–9 — energy consumption per token at different layers.
+//!
+//! Paper setup: K = 8 devices (Mixtral-8x7B split), MMLU-Anatomy queries.
+//! Compared schemes: Top-2, homogeneous H(z, 2), JESA(γ0, 2) for several
+//! γ0, and the non-exclusive lower bound LB(γ0, 2). Fig. 7 plots total
+//! energy per token per layer; Fig. 8 the communication part; Fig. 9 the
+//! computation part.
+//!
+//! Ours: same K = 8 energy/channel configuration, synthetic gate scores
+//! (no trained K=8 model — the selection/energy behaviour under test does
+//! not depend on real activations; DESIGN.md documents the substitution).
+
+use super::{FigureReport, Series};
+use crate::channel::ChannelModel;
+use crate::config::SystemConfig;
+use crate::energy::{EnergyLedger, EnergyModel};
+use crate::gating::{GateScores, LayerImportance, SyntheticGate};
+use crate::jesa::{solve_round, AllocationMode, JesaOptions, RoundProblem, SelectionPolicy};
+use crate::util::rng::Xoshiro256pp;
+
+/// One compared scheme.
+#[derive(Debug, Clone)]
+pub struct Scheme {
+    pub label: String,
+    pub policy: SelectionPolicy,
+    pub allocation: AllocationMode,
+    /// Per-layer QoS thresholds `z·γ^(l)`.
+    pub importance: LayerImportance,
+    pub z: f64,
+}
+
+/// The paper's Fig. 7 scheme set.
+pub fn paper_schemes(layers: usize) -> Vec<Scheme> {
+    let mut v = vec![Scheme {
+        label: "Top-2".into(),
+        policy: SelectionPolicy::TopK(2),
+        allocation: AllocationMode::Exclusive,
+        importance: LayerImportance::homogeneous(layers),
+        z: 0.0,
+    }];
+    v.push(Scheme {
+        label: "H(0.5, 2)".into(),
+        policy: SelectionPolicy::Des,
+        allocation: AllocationMode::Exclusive,
+        importance: LayerImportance::homogeneous(layers),
+        z: 0.5,
+    });
+    for gamma0 in [0.9, 0.8, 0.6] {
+        v.push(Scheme {
+            label: format!("JESA({gamma0}, 2)"),
+            policy: SelectionPolicy::Des,
+            allocation: AllocationMode::Exclusive,
+            importance: LayerImportance::geometric(gamma0, layers),
+            z: 1.0,
+        });
+    }
+    v.push(Scheme {
+        label: "LB(0.8, 2)".into(),
+        policy: SelectionPolicy::Des,
+        allocation: AllocationMode::LowerBound,
+        importance: LayerImportance::geometric(0.8, layers),
+        z: 1.0,
+    });
+    v
+}
+
+/// Per-layer energy ledger for one scheme (Monte-Carlo over rounds).
+pub fn ledger_for_scheme(cfg: &SystemConfig, scheme: &Scheme, rounds: usize) -> EnergyLedger {
+    let k = cfg.moe.experts;
+    let layers = cfg.moe.layers;
+    let energy = EnergyModel::new(cfg.channel.clone(), cfg.energy.clone());
+    let gate = SyntheticGate::new(k, 1.0);
+    let mut rng = Xoshiro256pp::seed_from_u64(cfg.workload.seed ^ 0x79);
+    let mut channel = ChannelModel::new(cfg.channel.clone(), k, cfg.workload.seed ^ 0x7);
+    let mut ledger = EnergyLedger::new(layers);
+
+    for round in 0..rounds {
+        for l in 0..layers {
+            let state = channel.realize();
+            let gates: Vec<Vec<GateScores>> = (0..k)
+                .map(|_| {
+                    (0..cfg.workload.tokens_per_query)
+                        .map(|_| gate.sample(&mut rng))
+                        .collect()
+                })
+                .collect();
+            let problem = RoundProblem {
+                gates,
+                threshold: scheme.z * scheme.importance.gamma(l),
+                max_active: cfg.moe.max_active,
+            };
+            let sol = solve_round(
+                &state,
+                &problem,
+                &energy,
+                &JesaOptions {
+                    policy: scheme.policy,
+                    allocation: scheme.allocation,
+                    seed: (round * layers + l) as u64 ^ cfg.workload.seed,
+                    ..JesaOptions::default()
+                },
+            );
+            ledger.charge_comm(l, sol.energy.comm_j);
+            ledger.charge_comp(l, sol.energy.comp_j);
+            ledger.count_tokens(l, problem.total_tokens() as u64);
+        }
+    }
+    ledger
+}
+
+/// Which energy component a figure plots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Component {
+    Total,
+    Comm,
+    Comp,
+}
+
+/// Run the experiment once and emit all three figures.
+pub fn run(cfg: &SystemConfig, rounds: usize) -> Vec<FigureReport> {
+    let layers = cfg.moe.layers;
+    let schemes = paper_schemes(layers);
+    let ledgers: Vec<(String, EnergyLedger)> = schemes
+        .iter()
+        .map(|s| (s.label.clone(), ledger_for_scheme(cfg, s, rounds)))
+        .collect();
+
+    [
+        (Component::Total, "fig7", "Energy per token at different layers"),
+        (Component::Comm, "fig8", "Communication energy per token at different layers"),
+        (Component::Comp, "fig9", "Computation energy per token at different layers"),
+    ]
+    .into_iter()
+    .map(|(comp, id, title)| {
+        let series = ledgers
+            .iter()
+            .map(|(label, ledger)| {
+                let mut s = Series::new(label.clone());
+                for l in 0..layers {
+                    let e = ledger.per_token(l);
+                    let y = match comp {
+                        Component::Total => e.total_j(),
+                        Component::Comm => e.comm_j,
+                        Component::Comp => e.comp_j,
+                    };
+                    s.push((l + 1) as f64, y);
+                }
+                s
+            })
+            .collect();
+        FigureReport {
+            id: id.into(),
+            title: title.into(),
+            axes: ("layer".into(), "J/token".into()),
+            series,
+            text: format!("K={}, M={}, {} Monte-Carlo rounds/layer", cfg.moe.experts, cfg.channel.subcarriers, rounds),
+        }
+    })
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SystemConfig {
+        let mut c = SystemConfig::paper_energy();
+        c.moe.layers = 4;
+        c.workload.tokens_per_query = 3;
+        c
+    }
+
+    #[test]
+    fn topk_flat_jesa_decreasing() {
+        let c = cfg();
+        let schemes = paper_schemes(c.moe.layers);
+        let topk = ledger_for_scheme(&c, &schemes[0], 6);
+        let jesa = ledger_for_scheme(&c, &schemes[3], 6); // JESA(0.8, 2)
+
+        // Top-2: cost per token roughly steady across layers.
+        let t0 = topk.per_token(0).total_j();
+        let tl = topk.per_token(c.moe.layers - 1).total_j();
+        assert!(
+            (tl / t0) > 0.5 && (tl / t0) < 2.0,
+            "Top-2 should be steady: {t0} -> {tl}"
+        );
+
+        // JESA: decreasing with depth (relaxing QoS).
+        let j0 = jesa.per_token(0).total_j();
+        let jl = jesa.per_token(c.moe.layers - 1).total_j();
+        assert!(jl < j0, "JESA should decrease with depth: {j0} -> {jl}");
+        // And beat Top-2 in total.
+        assert!(jesa.total().total_j() < topk.total().total_j());
+    }
+
+    #[test]
+    fn lower_bound_is_lowest_comm() {
+        let c = cfg();
+        let schemes = paper_schemes(c.moe.layers);
+        let jesa08 = ledger_for_scheme(&c, &schemes[3], 6);
+        let lb = ledger_for_scheme(&c, &schemes[5], 6);
+        assert!(lb.total().comm_j <= jesa08.total().comm_j + 1e-12);
+    }
+
+    #[test]
+    fn smaller_gamma_cheaper_tail() {
+        let c = cfg();
+        let schemes = paper_schemes(c.moe.layers);
+        let j09 = ledger_for_scheme(&c, &schemes[2], 6); // γ0=0.9
+        let j06 = ledger_for_scheme(&c, &schemes[4], 6); // γ0=0.6
+        let last = c.moe.layers - 1;
+        assert!(
+            j06.per_token(last).total_j() <= j09.per_token(last).total_j() + 1e-12,
+            "smaller γ0 must be cheaper at depth"
+        );
+    }
+
+    #[test]
+    fn run_emits_three_figures() {
+        let c = cfg();
+        let figs = run(&c, 2);
+        assert_eq!(figs.len(), 3);
+        assert_eq!(figs[0].id, "fig7");
+        assert_eq!(figs[2].id, "fig9");
+        for f in &figs {
+            assert_eq!(f.series.len(), 6);
+            assert_eq!(f.series[0].x.len(), c.moe.layers);
+        }
+    }
+}

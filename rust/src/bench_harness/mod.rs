@@ -1,0 +1,151 @@
+//! Experiment drivers regenerating every table and figure of the paper's
+//! evaluation section (§VII). See DESIGN.md §4 for the experiment index.
+//!
+//! Each driver returns a [`FigureReport`] (labelled series / table rows)
+//! that the `dmoe` CLI renders as text and optionally saves as JSON under
+//! `reports/`. Drivers are deterministic given the config seed.
+//!
+//! | Driver | Paper result |
+//! |---|---|
+//! | [`fig3`] | expertise-diversity matrix |
+//! | [`fig5`] | accuracy vs lowered-QoS window start layer |
+//! | [`table1`] | accuracy + normalized energy across eval sets |
+//! | [`fig6`] | DES selection patterns vs γ0 |
+//! | [`fig7_9`] | energy/token per layer, JESA vs baselines |
+//! | [`fig10`] | accuracy–energy tradeoff frontier |
+//! | [`theorem1`] | BCD optimality rate vs the Theorem-1 bound |
+
+pub mod fig10;
+pub mod fig3;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7_9;
+pub mod table1;
+pub mod theorem1;
+
+use crate::util::json::Json;
+
+/// One labelled data series (a line in a figure / a row group).
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub label: String,
+    pub x: Vec<f64>,
+    pub y: Vec<f64>,
+}
+
+impl Series {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self {
+            label: label.into(),
+            x: Vec::new(),
+            y: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.x.push(x);
+        self.y.push(y);
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("x", Json::arr_f64(&self.x)),
+            ("y", Json::arr_f64(&self.y)),
+        ])
+    }
+}
+
+/// A regenerated figure or table.
+#[derive(Debug, Clone)]
+pub struct FigureReport {
+    /// Paper artifact id, e.g. "fig7" or "table1".
+    pub id: String,
+    pub title: String,
+    /// Axis labels (x, y) for figures; empty for tables.
+    pub axes: (String, String),
+    pub series: Vec<Series>,
+    /// Pre-rendered text body (tables render themselves).
+    pub text: String,
+}
+
+impl FigureReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Str(self.id.clone())),
+            ("title", Json::Str(self.title.clone())),
+            ("x_axis", Json::Str(self.axes.0.clone())),
+            ("y_axis", Json::Str(self.axes.1.clone())),
+            (
+                "series",
+                Json::Arr(self.series.iter().map(Series::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Render for the terminal: title, text body, and per-series values.
+    pub fn render(&self) -> String {
+        let mut out = format!("== {} — {} ==\n", self.id, self.title);
+        if !self.text.is_empty() {
+            out.push_str(&self.text);
+            out.push('\n');
+        }
+        if !self.series.is_empty() {
+            out.push_str(&format!("[{} vs {}]\n", self.axes.1, self.axes.0));
+            for s in &self.series {
+                out.push_str(&format!("  {:<16}", s.label));
+                for (x, y) in s.x.iter().zip(s.y.iter()) {
+                    out.push_str(&format!(" ({x:.3}, {y:.4})"));
+                }
+                out.push('\n');
+            }
+        }
+        out
+    }
+
+    /// Save as `dir/<id>.json`; creates the directory.
+    pub fn save(&self, dir: &str) -> std::io::Result<String> {
+        std::fs::create_dir_all(dir)?;
+        let path = format!("{dir}/{}.json", self.id);
+        std::fs::write(&path, self.to_json().to_string_pretty())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_and_report_roundtrip() {
+        let mut s = Series::new("JESA(0.8, 2)");
+        s.push(1.0, 0.5);
+        s.push(2.0, 0.25);
+        let r = FigureReport {
+            id: "fig7".into(),
+            title: "energy per token".into(),
+            axes: ("layer".into(), "J/token".into()),
+            series: vec![s],
+            text: String::new(),
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("id").as_str(), Some("fig7"));
+        assert_eq!(j.get("series").at(0).get("y").at(1).as_f64(), Some(0.25));
+        assert!(r.render().contains("JESA"));
+    }
+
+    #[test]
+    fn report_saves_to_disk() {
+        let dir = std::env::temp_dir().join(format!("dmoe-rep-{}", std::process::id()));
+        let r = FigureReport {
+            id: "figX".into(),
+            title: "t".into(),
+            axes: ("x".into(), "y".into()),
+            series: vec![],
+            text: "body".into(),
+        };
+        let path = r.save(dir.to_str().unwrap()).unwrap();
+        assert!(std::path::Path::new(&path).exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

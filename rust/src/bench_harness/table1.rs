@@ -1,0 +1,110 @@
+//! Table I — accuracy and relative energy of DES on multi-domain tasks.
+//!
+//! Rows: individual experts, conventional Top-1/Top-2 selection, and
+//! DES(γ0, 2) for γ0 ∈ {0.6, 0.7, 0.8}. Columns: the five eval sets; each
+//! cell reports top-1 accuracy and energy normalized to Top-2 (= 1.00),
+//! exactly the paper's layout. Run on the real tiny-MoE through the full
+//! DMoE protocol.
+
+use super::FigureReport;
+use crate::coordinator::{DmoeServer, ServePolicy};
+use crate::util::table::Table;
+use crate::workload::load_eval_sets;
+use anyhow::Result;
+
+/// One Table-I row's measurements.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub label: String,
+    /// (accuracy, energy J) per eval set. Energy is `None` for the
+    /// individual-expert rows (the paper prints "-").
+    pub cells: Vec<(f64, Option<f64>)>,
+}
+
+/// Run Table I; returns the report plus the raw rows for tests.
+pub fn run(server: &mut DmoeServer, max_batches: Option<usize>) -> Result<(FigureReport, Vec<Row>)> {
+    let layers = server.layers();
+    let k = server.experts();
+    let eval_sets = load_eval_sets(&server.runtime().manifest)?;
+
+    struct Spec {
+        policy: ServePolicy,
+        show_energy: bool,
+    }
+    let mut specs: Vec<Spec> = (0..k)
+        .map(|j| Spec {
+            policy: ServePolicy::forced(j, layers),
+            show_energy: false,
+        })
+        .collect();
+    specs.push(Spec {
+        policy: ServePolicy::topk(1, layers),
+        show_energy: true,
+    });
+    specs.push(Spec {
+        policy: ServePolicy::topk(2, layers),
+        show_energy: true,
+    });
+    for gamma0 in [0.6, 0.7, 0.8] {
+        specs.push(Spec {
+            policy: ServePolicy::des(gamma0, 2, layers),
+            show_energy: true,
+        });
+    }
+
+    let mut rows: Vec<Row> = Vec::new();
+    for spec in &specs {
+        let mut cells = Vec::new();
+        for es in &eval_sets {
+            let r = server.serve_eval_set(es, &spec.policy, max_batches)?;
+            let energy = spec.show_energy.then(|| r.ledger.total().total_j());
+            cells.push((r.accuracy(), energy));
+        }
+        rows.push(Row {
+            label: spec.policy.label.clone(),
+            cells,
+        });
+    }
+
+    // Normalize energies to the Top-2 row (the paper's 1.00 anchor).
+    let top2_idx = rows
+        .iter()
+        .position(|r| r.label == "Top-2")
+        .expect("Top-2 row present");
+    let anchors: Vec<f64> = rows[top2_idx]
+        .cells
+        .iter()
+        .map(|(_, e)| e.unwrap_or(1.0))
+        .collect();
+
+    let mut header = vec!["model".to_string()];
+    for es in &eval_sets {
+        header.push(format!("{} Acc", es.name));
+        header.push(format!("{} En", es.name));
+    }
+    let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut table = Table::new(&header_refs)
+        .with_title("Table I — DES on multi-domain tasks (En normalized to Top-2 = 1.00)");
+    for row in &rows {
+        let mut cells = vec![row.label.clone()];
+        for (ei, (acc, en)) in row.cells.iter().enumerate() {
+            cells.push(format!("{:.1}", acc * 100.0));
+            cells.push(match en {
+                Some(e) => format!("{:.2}", e / anchors[ei].max(1e-300)),
+                None => "-".into(),
+            });
+        }
+        table.row(cells);
+    }
+
+    Ok((
+        FigureReport {
+            id: "table1".into(),
+            title: "Performance of Dynamic Expert Selection on multi-domain tasks".into(),
+            axes: (String::new(), String::new()),
+            series: Vec::new(),
+            text: table.render(),
+        },
+        rows,
+    ))
+}

@@ -1,0 +1,187 @@
+//! Wireless substrate: Rayleigh-fading OFDMA channel simulator.
+//!
+//! The paper assumes (§II-A, §VII-A2) K expert nodes interconnected by
+//! device-to-device links, OFDMA multi-access with `M` subcarriers of
+//! spacing `B0`, per-subcarrier power `P0`, white noise `N0`, and channel
+//! gains `H_ij^(m)` drawn from Rayleigh fading with average path loss
+//! 1e-2, i.i.d. across links and subcarriers.
+//!
+//! [`ChannelModel`] turns a [`ChannelConfig`](crate::config::ChannelConfig)
+//! into per-round [`ChannelState`] realizations; a state holds the gain
+//! and Shannon-rate grids (paper eq. 1) and answers the aggregate-rate
+//! query `R_ij` (eq. 2) for any subcarrier assignment.
+
+mod state;
+
+pub use state::{ChannelState, LinkId};
+
+use crate::config::ChannelConfig;
+use crate::util::rng::Xoshiro256pp;
+
+/// Generator of channel realizations.
+///
+/// Each call to [`ChannelModel::realize`] draws a fresh i.i.d. fading
+/// realization — the paper's per-round channel. The generator owns its RNG
+/// stream, so a seeded model yields a reproducible sequence of states.
+#[derive(Debug, Clone)]
+pub struct ChannelModel {
+    cfg: ChannelConfig,
+    experts: usize,
+    rng: Xoshiro256pp,
+    round: u64,
+}
+
+impl ChannelModel {
+    pub fn new(cfg: ChannelConfig, experts: usize, seed: u64) -> Self {
+        assert!(experts >= 1);
+        Self {
+            cfg,
+            experts,
+            rng: Xoshiro256pp::seed_from_u64(seed ^ 0xC4A2_2E1F_55AA_77DD),
+            round: 0,
+        }
+    }
+
+    pub fn config(&self) -> &ChannelConfig {
+        &self.cfg
+    }
+
+    pub fn experts(&self) -> usize {
+        self.experts
+    }
+
+    /// Draw the next fading realization (one per protocol round).
+    pub fn realize(&mut self) -> ChannelState {
+        let k = self.experts;
+        let m = self.cfg.subcarriers;
+        let n0 = self.cfg.n0_w();
+        let mut gains = vec![0.0f64; k * k * m];
+        let mut rates = vec![0.0f64; k * k * m];
+        for i in 0..k {
+            for j in 0..k {
+                for s in 0..m {
+                    let idx = (i * k + j) * m + s;
+                    if i == j {
+                        // In-situ processing: no radio link. Gains stay 0;
+                        // rate is defined as +inf so energy terms vanish.
+                        gains[idx] = 0.0;
+                        rates[idx] = f64::INFINITY;
+                    } else {
+                        let h: f64 = self.rng.rayleigh_power(self.cfg.path_loss);
+                        gains[idx] = h;
+                        // Paper eq. (1): r = B0 log2(1 + H P0 / N0).
+                        rates[idx] =
+                            self.cfg.b0_hz * (1.0 + h * self.cfg.p0_w / n0).log2();
+                    }
+                }
+            }
+        }
+        self.round += 1;
+        ChannelState::from_raw(k, m, gains, rates, self.round - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChannelConfig;
+
+    fn model(k: usize, m: usize, seed: u64) -> ChannelModel {
+        ChannelModel::new(
+            ChannelConfig {
+                subcarriers: m,
+                ..ChannelConfig::default()
+            },
+            k,
+            seed,
+        )
+    }
+
+    #[test]
+    fn rates_positive_and_finite_off_diagonal() {
+        let mut ch = model(4, 16, 1);
+        let st = ch.realize();
+        for i in 0..4 {
+            for j in 0..4 {
+                for m in 0..16 {
+                    let r = st.rate(i, j, m);
+                    if i == j {
+                        assert!(r.is_infinite());
+                    } else {
+                        assert!(r.is_finite() && r > 0.0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = model(3, 8, 42);
+        let mut b = model(3, 8, 42);
+        let (sa, sb) = (a.realize(), b.realize());
+        for i in 0..3 {
+            for j in 0..3 {
+                for m in 0..8 {
+                    assert_eq!(sa.gain(i, j, m), sb.gain(i, j, m));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rounds_differ() {
+        let mut ch = model(3, 8, 42);
+        let s1 = ch.realize();
+        let s2 = ch.realize();
+        assert_ne!(s1.gain(0, 1, 0), s2.gain(0, 1, 0));
+        assert_eq!(s1.round(), 0);
+        assert_eq!(s2.round(), 1);
+    }
+
+    #[test]
+    fn mean_gain_matches_path_loss() {
+        let mut ch = model(2, 2048, 7);
+        let st = ch.realize();
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for m in 0..2048 {
+            sum += st.gain(0, 1, m) + st.gain(1, 0, m);
+            n += 2;
+        }
+        let mean = sum / n as f64;
+        assert!(
+            (mean - 1e-2).abs() < 1e-3,
+            "mean gain {mean} should approximate path loss 1e-2"
+        );
+    }
+
+    #[test]
+    fn rate_formula_matches_eq1() {
+        let mut ch = model(2, 4, 9);
+        let st = ch.realize();
+        let cfg = ch.config();
+        let n0 = cfg.n0_w();
+        for m in 0..4 {
+            let h = st.gain(0, 1, m);
+            let expect = cfg.b0_hz * (1.0 + h * cfg.p0_w / n0).log2();
+            assert!((st.rate(0, 1, m) - expect).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn snr_raises_rates() {
+        // Higher SNR must raise every rate (monotonicity sanity).
+        let base = ChannelConfig::default();
+        let hi = ChannelConfig {
+            snr_db: base.snr_db + 10.0,
+            ..base.clone()
+        };
+        let mut a = ChannelModel::new(base, 2, 5);
+        let mut b = ChannelModel::new(hi, 2, 5);
+        let (sa, sb) = (a.realize(), b.realize());
+        for m in 0..sa.subcarriers() {
+            assert!(sb.rate(0, 1, m) > sa.rate(0, 1, m));
+        }
+    }
+}

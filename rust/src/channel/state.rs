@@ -1,0 +1,204 @@
+//! One fading realization: gain/rate grids and subcarrier-assignment
+//! queries (paper eq. 1–2).
+
+/// Identifier of a directed inter-expert link `(i → j)`, `i ≠ j`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LinkId {
+    pub from: usize,
+    pub to: usize,
+}
+
+impl LinkId {
+    pub fn new(from: usize, to: usize) -> Self {
+        assert_ne!(from, to, "LinkId is inter-expert only (i != j)");
+        Self { from, to }
+    }
+
+    /// Enumerate all K(K−1) directed links for `k` experts, in row-major
+    /// `(i, j)` order — the canonical order used by the assignment solver.
+    pub fn all(k: usize) -> Vec<LinkId> {
+        let mut v = Vec::with_capacity(k * k.saturating_sub(1));
+        for i in 0..k {
+            for j in 0..k {
+                if i != j {
+                    v.push(LinkId::new(i, j));
+                }
+            }
+        }
+        v
+    }
+}
+
+/// A channel realization over `k` experts and `m` subcarriers.
+#[derive(Debug, Clone)]
+pub struct ChannelState {
+    k: usize,
+    m: usize,
+    /// Power gains `H_ij^(m)`, flattened `[(i·K + j)·M + m]`.
+    gains: Vec<f64>,
+    /// Shannon rates `r_ij^(m)` (eq. 1), same layout. `i == j` entries are
+    /// `+inf` (in-situ processing has no transmission cost).
+    rates: Vec<f64>,
+    round: u64,
+}
+
+impl ChannelState {
+    pub(crate) fn from_raw(
+        k: usize,
+        m: usize,
+        gains: Vec<f64>,
+        rates: Vec<f64>,
+        round: u64,
+    ) -> Self {
+        assert_eq!(gains.len(), k * k * m);
+        assert_eq!(rates.len(), k * k * m);
+        Self {
+            k,
+            m,
+            gains,
+            rates,
+            round,
+        }
+    }
+
+    /// Build a state from an explicit rate grid (tests / deterministic
+    /// experiments). Gains are back-computed only when needed; here zeroed.
+    pub fn from_rates(k: usize, m: usize, rate_fn: impl Fn(usize, usize, usize) -> f64) -> Self {
+        let mut rates = vec![0.0; k * k * m];
+        for i in 0..k {
+            for j in 0..k {
+                for s in 0..m {
+                    rates[(i * k + j) * m + s] = if i == j { f64::INFINITY } else { rate_fn(i, j, s) };
+                }
+            }
+        }
+        Self {
+            k,
+            m,
+            gains: vec![0.0; k * k * m],
+            rates,
+            round: 0,
+        }
+    }
+
+    pub fn experts(&self) -> usize {
+        self.k
+    }
+
+    pub fn subcarriers(&self) -> usize {
+        self.m
+    }
+
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    #[inline]
+    fn idx(&self, i: usize, j: usize, m: usize) -> usize {
+        debug_assert!(i < self.k && j < self.k && m < self.m);
+        (i * self.k + j) * self.m + m
+    }
+
+    /// Power gain `H_ij^(m)`.
+    #[inline]
+    pub fn gain(&self, i: usize, j: usize, m: usize) -> f64 {
+        self.gains[self.idx(i, j, m)]
+    }
+
+    /// Per-subcarrier achievable rate `r_ij^(m)` (eq. 1), bit/s.
+    #[inline]
+    pub fn rate(&self, i: usize, j: usize, m: usize) -> f64 {
+        self.rates[self.idx(i, j, m)]
+    }
+
+    /// Aggregate rate `R_ij = Σ_m β_ij^(m) r_ij^(m)` (eq. 2) for the given
+    /// set of subcarriers allocated to link `(i → j)`.
+    pub fn aggregate_rate(&self, i: usize, j: usize, subcarriers: &[usize]) -> f64 {
+        subcarriers.iter().map(|&m| self.rate(i, j, m)).sum()
+    }
+
+    /// The best single subcarrier for link `(i → j)` and its rate.
+    pub fn best_subcarrier(&self, i: usize, j: usize) -> (usize, f64) {
+        let mut best = (0usize, f64::NEG_INFINITY);
+        for m in 0..self.m {
+            let r = self.rate(i, j, m);
+            if r > best.1 {
+                best = (m, r);
+            }
+        }
+        best
+    }
+
+    /// Rate row for a link — slice over all subcarriers (hot-path accessor
+    /// used by the assignment solver to avoid per-element indexing).
+    pub fn rate_row(&self, i: usize, j: usize) -> &[f64] {
+        let base = (i * self.k + j) * self.m;
+        &self.rates[base..base + self.m]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn linear_state(k: usize, m: usize) -> ChannelState {
+        // rate(i,j,m) = 1 + i + 10*j + 100*m (distinct, deterministic)
+        ChannelState::from_rates(k, m, |i, j, s| 1.0 + i as f64 + 10.0 * j as f64 + 100.0 * s as f64)
+    }
+
+    #[test]
+    fn link_enumeration_excludes_diagonal() {
+        let links = LinkId::all(3);
+        assert_eq!(links.len(), 6);
+        assert!(links.iter().all(|l| l.from != l.to));
+        // Canonical row-major order.
+        assert_eq!(links[0], LinkId::new(0, 1));
+        assert_eq!(links[5], LinkId::new(2, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "inter-expert")]
+    fn linkid_rejects_self_loop() {
+        LinkId::new(2, 2);
+    }
+
+    #[test]
+    fn aggregate_rate_sums_selected() {
+        let st = linear_state(2, 4);
+        let r = st.aggregate_rate(0, 1, &[0, 2]);
+        let expect = st.rate(0, 1, 0) + st.rate(0, 1, 2);
+        assert_eq!(r, expect);
+        assert_eq!(st.aggregate_rate(0, 1, &[]), 0.0);
+    }
+
+    #[test]
+    fn best_subcarrier_finds_max() {
+        let st = linear_state(2, 5);
+        let (m, r) = st.best_subcarrier(0, 1);
+        assert_eq!(m, 4);
+        assert_eq!(r, st.rate(0, 1, 4));
+    }
+
+    #[test]
+    fn rate_row_matches_scalar_access() {
+        let st = linear_state(3, 4);
+        for i in 0..3 {
+            for j in 0..3 {
+                let row = st.rate_row(i, j);
+                for m in 0..4 {
+                    assert_eq!(row[m], st.rate(i, j, m));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn diagonal_is_infinite() {
+        let st = linear_state(3, 2);
+        for i in 0..3 {
+            for m in 0..2 {
+                assert!(st.rate(i, i, m).is_infinite());
+            }
+        }
+    }
+}

@@ -1,0 +1,449 @@
+//! Configuration system.
+//!
+//! Every experiment, example and the `dmoe` CLI are driven by a
+//! [`SystemConfig`]: typed, validated, JSON-(de)serializable, with presets
+//! matching the paper's two experimental setups (§VII-A):
+//!
+//! * [`SystemConfig::paper_selection`] — the 3-expert "Llama triplet"
+//!   setup used for Table I / Fig. 3 / Fig. 5 / Fig. 6.
+//! * [`SystemConfig::paper_energy`] — the K=8 "Mixtral-8x7B" setup used
+//!   for Fig. 7–10 (energy-efficiency experiments).
+//!
+//! Config files are JSON (this environment vendors no TOML crate); the
+//! schema is stable and round-trips exactly.
+
+mod validate;
+
+pub use validate::ConfigError;
+
+use crate::util::json::Json;
+
+/// Radio / OFDMA parameters (paper §II-A and §VII-A2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChannelConfig {
+    /// Subcarrier spacing `B0` in Hz (paper: 1 MHz).
+    pub b0_hz: f64,
+    /// Per-subcarrier transmission power `P0` in W (paper: 1e-2 W).
+    pub p0_w: f64,
+    /// Signal-to-noise ratio `P0/N0` in dB (paper: 10 dB).
+    pub snr_db: f64,
+    /// Number of OFDMA subcarriers `M`.
+    pub subcarriers: usize,
+    /// Average Rayleigh-fading path loss (paper: 1e-2).
+    pub path_loss: f64,
+}
+
+impl Default for ChannelConfig {
+    fn default() -> Self {
+        Self {
+            b0_hz: 1e6,
+            p0_w: 1e-2,
+            snr_db: 10.0,
+            subcarriers: 64,
+            path_loss: 1e-2,
+        }
+    }
+}
+
+impl ChannelConfig {
+    /// Noise power `N0` in W implied by `P0` and the configured SNR.
+    pub fn n0_w(&self) -> f64 {
+        self.p0_w / 10f64.powf(self.snr_db / 10.0)
+    }
+}
+
+/// Energy-model parameters (paper §II-B and §VII-A2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyConfig {
+    /// Size of one hidden state in bytes (`s0`; paper: 8 kB for 4096-dim
+    /// FP16). Our tiny model uses its real hidden size but the paper value
+    /// is the default for the paper-scale experiments.
+    pub s0_bytes: f64,
+    /// Per-device computation coefficients `a_j` in J/byte — derived from
+    /// the paper's `a_j = j × 1e-3 J/token` divided by `s0` unless
+    /// overridden.
+    pub a_per_byte: Vec<f64>,
+    /// Per-device static computation energy `b_j` in J (paper eq. 4;
+    /// zero in the evaluation).
+    pub b_static: Vec<f64>,
+}
+
+impl EnergyConfig {
+    /// The paper's setting: `a_j = j × 1e-3` J/token, `b_j = 0`.
+    pub fn paper(k: usize, s0_bytes: f64) -> Self {
+        Self {
+            s0_bytes,
+            a_per_byte: (1..=k).map(|j| j as f64 * 1e-3 / s0_bytes).collect(),
+            b_static: vec![0.0; k],
+        }
+    }
+
+    /// `a_j` expressed in J/token (i.e. per hidden state of `s0` bytes).
+    pub fn a_per_token(&self, j: usize) -> f64 {
+        self.a_per_byte[j] * self.s0_bytes
+    }
+}
+
+/// MoE topology parameters (paper §III).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MoeConfig {
+    /// Number of expert nodes `K`.
+    pub experts: usize,
+    /// Number of decoder layers `L`.
+    pub layers: usize,
+    /// Maximum number of experts activated per hidden state (`D`, C2).
+    pub max_active: usize,
+}
+
+impl Default for MoeConfig {
+    fn default() -> Self {
+        Self {
+            experts: 4,
+            layers: 8,
+            max_active: 2,
+        }
+    }
+}
+
+/// Expert-selection / QoS parameters (paper §IV).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SelectionConfig {
+    /// Base QoS requirement `z` (C1: sum of selected gate scores ≥ z·γ^l).
+    pub z: f64,
+    /// Layer-importance base `γ0`; the per-layer factor is `γ^(l) = γ0^l`.
+    pub gamma0: f64,
+}
+
+impl Default for SelectionConfig {
+    fn default() -> Self {
+        Self { z: 1.0, gamma0: 0.8 }
+    }
+}
+
+/// Workload parameters (queries, tokens).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadConfig {
+    /// Tokens per query `N_i` (paper: each expert gets at most one query).
+    pub tokens_per_query: usize,
+    /// Number of queries per experiment run.
+    pub queries: usize,
+    /// RNG seed for channel + workload generation.
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        Self {
+            tokens_per_query: 16,
+            queries: 8,
+            seed: 0xD_0E,
+        }
+    }
+}
+
+/// Top-level system configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemConfig {
+    pub channel: ChannelConfig,
+    pub energy: EnergyConfig,
+    pub moe: MoeConfig,
+    pub selection: SelectionConfig,
+    pub workload: WorkloadConfig,
+    /// Directory holding the AOT artifacts (HLO text + manifest).
+    pub artifacts_dir: String,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        let moe = MoeConfig::default();
+        Self {
+            channel: ChannelConfig::default(),
+            energy: EnergyConfig::paper(moe.experts, 8192.0),
+            moe,
+            selection: SelectionConfig::default(),
+            workload: WorkloadConfig::default(),
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Paper §VII-A "Expert Selection" setup: 3 experts (the Llama
+    /// triplet), Top-k vs DES comparisons, D = 2.
+    pub fn paper_selection() -> Self {
+        let moe = MoeConfig {
+            experts: 3,
+            layers: 8,
+            max_active: 2,
+        };
+        Self {
+            energy: EnergyConfig::paper(moe.experts, 8192.0),
+            moe,
+            selection: SelectionConfig { z: 1.0, gamma0: 0.7 },
+            ..Self::default()
+        }
+    }
+
+    /// Paper §VII-A "Energy Efficiency" setup: K = 8 devices
+    /// (Mixtral-8x7B-like), larger subcarrier pool.
+    pub fn paper_energy() -> Self {
+        let moe = MoeConfig {
+            experts: 8,
+            layers: 8,
+            max_active: 2,
+        };
+        Self {
+            channel: ChannelConfig {
+                subcarriers: 128,
+                ..ChannelConfig::default()
+            },
+            energy: EnergyConfig::paper(moe.experts, 8192.0),
+            moe,
+            selection: SelectionConfig { z: 1.0, gamma0: 0.8 },
+            workload: WorkloadConfig {
+                tokens_per_query: 16,
+                queries: 8,
+                seed: 0xD_0E,
+            },
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+
+    /// Small config for fast tests.
+    pub fn tiny() -> Self {
+        let moe = MoeConfig {
+            experts: 3,
+            layers: 2,
+            max_active: 2,
+        };
+        Self {
+            channel: ChannelConfig {
+                subcarriers: 12,
+                ..ChannelConfig::default()
+            },
+            energy: EnergyConfig::paper(moe.experts, 128.0),
+            moe,
+            workload: WorkloadConfig {
+                tokens_per_query: 4,
+                queries: 2,
+                seed: 7,
+            },
+            ..Self::default()
+        }
+    }
+
+    // -- JSON round-trip -----------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "channel",
+                Json::obj(vec![
+                    ("b0_hz", Json::Num(self.channel.b0_hz)),
+                    ("p0_w", Json::Num(self.channel.p0_w)),
+                    ("snr_db", Json::Num(self.channel.snr_db)),
+                    ("subcarriers", Json::Num(self.channel.subcarriers as f64)),
+                    ("path_loss", Json::Num(self.channel.path_loss)),
+                ]),
+            ),
+            (
+                "energy",
+                Json::obj(vec![
+                    ("s0_bytes", Json::Num(self.energy.s0_bytes)),
+                    ("a_per_byte", Json::arr_f64(&self.energy.a_per_byte)),
+                    ("b_static", Json::arr_f64(&self.energy.b_static)),
+                ]),
+            ),
+            (
+                "moe",
+                Json::obj(vec![
+                    ("experts", Json::Num(self.moe.experts as f64)),
+                    ("layers", Json::Num(self.moe.layers as f64)),
+                    ("max_active", Json::Num(self.moe.max_active as f64)),
+                ]),
+            ),
+            (
+                "selection",
+                Json::obj(vec![
+                    ("z", Json::Num(self.selection.z)),
+                    ("gamma0", Json::Num(self.selection.gamma0)),
+                ]),
+            ),
+            (
+                "workload",
+                Json::obj(vec![
+                    (
+                        "tokens_per_query",
+                        Json::Num(self.workload.tokens_per_query as f64),
+                    ),
+                    ("queries", Json::Num(self.workload.queries as f64)),
+                    ("seed", Json::Num(self.workload.seed as f64)),
+                ]),
+            ),
+            ("artifacts_dir", Json::Str(self.artifacts_dir.clone())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, ConfigError> {
+        let mut cfg = SystemConfig::default();
+        let ch = v.get("channel");
+        if ch != &Json::Null {
+            cfg.channel = ChannelConfig {
+                b0_hz: num(ch, "b0_hz", cfg.channel.b0_hz)?,
+                p0_w: num(ch, "p0_w", cfg.channel.p0_w)?,
+                snr_db: num(ch, "snr_db", cfg.channel.snr_db)?,
+                subcarriers: int(ch, "subcarriers", cfg.channel.subcarriers)?,
+                path_loss: num(ch, "path_loss", cfg.channel.path_loss)?,
+            };
+        }
+        let moe = v.get("moe");
+        if moe != &Json::Null {
+            cfg.moe = MoeConfig {
+                experts: int(moe, "experts", cfg.moe.experts)?,
+                layers: int(moe, "layers", cfg.moe.layers)?,
+                max_active: int(moe, "max_active", cfg.moe.max_active)?,
+            };
+        }
+        // Energy defaults depend on the (possibly overridden) expert count.
+        cfg.energy = EnergyConfig::paper(cfg.moe.experts, 8192.0);
+        let en = v.get("energy");
+        if en != &Json::Null {
+            cfg.energy.s0_bytes = num(en, "s0_bytes", cfg.energy.s0_bytes)?;
+            if let Some(a) = en.get("a_per_byte").as_arr() {
+                cfg.energy.a_per_byte = floats(a)?;
+            }
+            if let Some(b) = en.get("b_static").as_arr() {
+                cfg.energy.b_static = floats(b)?;
+            }
+        }
+        let sel = v.get("selection");
+        if sel != &Json::Null {
+            cfg.selection = SelectionConfig {
+                z: num(sel, "z", cfg.selection.z)?,
+                gamma0: num(sel, "gamma0", cfg.selection.gamma0)?,
+            };
+        }
+        let wl = v.get("workload");
+        if wl != &Json::Null {
+            cfg.workload = WorkloadConfig {
+                tokens_per_query: int(wl, "tokens_per_query", cfg.workload.tokens_per_query)?,
+                queries: int(wl, "queries", cfg.workload.queries)?,
+                seed: num(wl, "seed", cfg.workload.seed as f64)? as u64,
+            };
+        }
+        if let Some(dir) = v.get("artifacts_dir").as_str() {
+            cfg.artifacts_dir = dir.to_string();
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<Self, ConfigError> {
+        let v = Json::parse(text).map_err(|e| ConfigError::Parse(e.to_string()))?;
+        Self::from_json(&v)
+    }
+
+    pub fn load(path: &str) -> Result<Self, ConfigError> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| ConfigError::Io(path.to_string(), e))?;
+        Self::from_json_str(&text)
+    }
+
+    pub fn save(&self, path: &str) -> Result<(), ConfigError> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .map_err(|e| ConfigError::Io(path.to_string(), e))
+    }
+}
+
+fn num(v: &Json, key: &str, default: f64) -> Result<f64, ConfigError> {
+    match v.get(key) {
+        Json::Null => Ok(default),
+        x => x
+            .as_f64()
+            .ok_or_else(|| ConfigError::Type(key.to_string(), "number".into())),
+    }
+}
+
+fn int(v: &Json, key: &str, default: usize) -> Result<usize, ConfigError> {
+    match v.get(key) {
+        Json::Null => Ok(default),
+        x => x
+            .as_usize()
+            .ok_or_else(|| ConfigError::Type(key.to_string(), "non-negative integer".into())),
+    }
+}
+
+fn floats(a: &[Json]) -> Result<Vec<f64>, ConfigError> {
+    a.iter()
+        .map(|x| {
+            x.as_f64()
+                .ok_or_else(|| ConfigError::Type("array element".into(), "number".into()))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        SystemConfig::default().validate().unwrap();
+        SystemConfig::paper_selection().validate().unwrap();
+        SystemConfig::paper_energy().validate().unwrap();
+        SystemConfig::tiny().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip_exact() {
+        for cfg in [
+            SystemConfig::default(),
+            SystemConfig::paper_selection(),
+            SystemConfig::paper_energy(),
+        ] {
+            let text = cfg.to_json().to_string_pretty();
+            let back = SystemConfig::from_json_str(&text).unwrap();
+            assert_eq!(cfg, back);
+        }
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let cfg = SystemConfig::from_json_str(r#"{"moe": {"experts": 6}}"#).unwrap();
+        assert_eq!(cfg.moe.experts, 6);
+        assert_eq!(cfg.moe.layers, MoeConfig::default().layers);
+        // Energy vector re-derived for 6 experts.
+        assert_eq!(cfg.energy.a_per_byte.len(), 6);
+    }
+
+    #[test]
+    fn paper_energy_constants() {
+        let cfg = SystemConfig::paper_energy();
+        // a_j = j * 1e-3 J/token.
+        for j in 0..cfg.moe.experts {
+            let per_token = cfg.energy.a_per_token(j);
+            assert!((per_token - (j + 1) as f64 * 1e-3).abs() < 1e-12);
+        }
+        // SNR 10 dB -> N0 = P0 / 10.
+        assert!((cfg.channel.n0_w() - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bad_types_rejected() {
+        assert!(SystemConfig::from_json_str(r#"{"moe": {"experts": "three"}}"#).is_err());
+        assert!(SystemConfig::from_json_str(r#"{"moe": {"experts": -1}}"#).is_err());
+        assert!(SystemConfig::from_json_str("not json").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("dmoe-cfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        let cfg = SystemConfig::paper_energy();
+        cfg.save(path.to_str().unwrap()).unwrap();
+        let back = SystemConfig::load(path.to_str().unwrap()).unwrap();
+        assert_eq!(cfg, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

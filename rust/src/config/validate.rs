@@ -1,0 +1,140 @@
+//! Config validation: every experiment entrypoint calls
+//! [`SystemConfig::validate`] before running, so misconfiguration fails
+//! fast with a precise error instead of producing silently-wrong physics.
+
+use super::SystemConfig;
+
+/// Configuration error.
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("failed to read/write config file {0}: {1}")]
+    Io(String, #[source] std::io::Error),
+    #[error("failed to parse config: {0}")]
+    Parse(String),
+    #[error("config field '{0}' has wrong type, expected {1}")]
+    Type(String, String),
+    #[error("invalid config: {0}")]
+    Invalid(String),
+}
+
+impl SystemConfig {
+    /// Check all cross-field invariants.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let err = |msg: String| Err(ConfigError::Invalid(msg));
+
+        if self.channel.b0_hz <= 0.0 {
+            return err(format!("channel.b0_hz must be > 0, got {}", self.channel.b0_hz));
+        }
+        if self.channel.p0_w <= 0.0 {
+            return err(format!("channel.p0_w must be > 0, got {}", self.channel.p0_w));
+        }
+        if self.channel.path_loss <= 0.0 || self.channel.path_loss > 1.0 {
+            return err(format!(
+                "channel.path_loss must be in (0, 1], got {}",
+                self.channel.path_loss
+            ));
+        }
+        if self.channel.subcarriers == 0 {
+            return err("channel.subcarriers must be >= 1".into());
+        }
+        if self.moe.experts == 0 {
+            return err("moe.experts must be >= 1".into());
+        }
+        if self.moe.layers == 0 {
+            return err("moe.layers must be >= 1".into());
+        }
+        if self.moe.max_active == 0 || self.moe.max_active > self.moe.experts {
+            return err(format!(
+                "moe.max_active must be in [1, experts={}], got {}",
+                self.moe.experts, self.moe.max_active
+            ));
+        }
+        if self.energy.s0_bytes <= 0.0 {
+            return err(format!(
+                "energy.s0_bytes must be > 0, got {}",
+                self.energy.s0_bytes
+            ));
+        }
+        if self.energy.a_per_byte.len() != self.moe.experts {
+            return err(format!(
+                "energy.a_per_byte has {} entries but moe.experts = {}",
+                self.energy.a_per_byte.len(),
+                self.moe.experts
+            ));
+        }
+        if self.energy.b_static.len() != self.moe.experts {
+            return err(format!(
+                "energy.b_static has {} entries but moe.experts = {}",
+                self.energy.b_static.len(),
+                self.moe.experts
+            ));
+        }
+        if self.energy.a_per_byte.iter().any(|a| *a <= 0.0) {
+            return err("energy.a_per_byte entries must be > 0 (paper: a_j > 0)".into());
+        }
+        if self.energy.b_static.iter().any(|b| *b < 0.0) {
+            return err("energy.b_static entries must be >= 0 (paper: b_j >= 0)".into());
+        }
+        if !(0.0..=1.0).contains(&self.selection.z) {
+            return err(format!(
+                "selection.z must be in [0, 1] (gate scores sum to 1), got {}",
+                self.selection.z
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.selection.gamma0) {
+            return err(format!(
+                "selection.gamma0 must be in [0, 1] so that γ^(l) is non-increasing, got {}",
+                self.selection.gamma0
+            ));
+        }
+        if self.workload.tokens_per_query == 0 {
+            return err("workload.tokens_per_query must be >= 1".into());
+        }
+        if self.workload.queries == 0 {
+            return err("workload.queries must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::SystemConfig;
+
+    fn assert_invalid(mutate: impl FnOnce(&mut SystemConfig), needle: &str) {
+        let mut cfg = SystemConfig::default();
+        mutate(&mut cfg);
+        let e = cfg.validate().unwrap_err().to_string();
+        assert!(e.contains(needle), "error '{e}' missing '{needle}'");
+    }
+
+    #[test]
+    fn rejects_bad_channel() {
+        assert_invalid(|c| c.channel.b0_hz = 0.0, "b0_hz");
+        assert_invalid(|c| c.channel.p0_w = -1.0, "p0_w");
+        assert_invalid(|c| c.channel.path_loss = 2.0, "path_loss");
+        assert_invalid(|c| c.channel.subcarriers = 0, "subcarriers");
+    }
+
+    #[test]
+    fn rejects_bad_moe() {
+        assert_invalid(|c| c.moe.max_active = 0, "max_active");
+        assert_invalid(
+            |c| c.moe.max_active = c.moe.experts + 1,
+            "max_active",
+        );
+    }
+
+    #[test]
+    fn rejects_mismatched_energy_vectors() {
+        assert_invalid(|c| c.energy.a_per_byte.push(1.0), "a_per_byte");
+        assert_invalid(|c| c.energy.a_per_byte[0] = 0.0, "a_per_byte");
+        assert_invalid(|c| c.energy.b_static[0] = -0.5, "b_static");
+    }
+
+    #[test]
+    fn rejects_bad_selection() {
+        assert_invalid(|c| c.selection.z = 1.5, "selection.z");
+        assert_invalid(|c| c.selection.gamma0 = -0.1, "gamma0");
+    }
+}

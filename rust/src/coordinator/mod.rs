@@ -1,0 +1,400 @@
+//! The edge-server coordinator: drives real model inference through the
+//! DMoE protocol (paper Fig. 1b, steps 1–6).
+//!
+//! [`DmoeServer`] owns the compiled model ([`ModelRuntime`]), the channel
+//! simulator and the energy model. [`DmoeServer::serve_batch`] executes
+//! one batch of queries end to end:
+//!
+//! 1. **Preprocessing** — queries are assigned one-per-expert and
+//!    embedded at their source node.
+//! 2. **Attention + gate** — per layer, every active source runs its
+//!    attention block and gate (compiled HLO, Pallas inside).
+//! 3. **JESA** — the server solves the round's joint expert/subcarrier
+//!    problem (or a baseline policy).
+//! 4. **Forward transmission + inference** — routed tokens are batched
+//!    per destination expert and pushed through that expert's FFN block.
+//! 5. **Backward transmission + aggregation** — outputs return to the
+//!    source and are gate-weight-aggregated (eq. 8).
+//! 6. **Result feedback** — after `L` rounds, the head produces logits;
+//!    accuracy is measured against ground-truth next tokens.
+//!
+//! Energy is charged per the paper's eq. (3)/(4) via the round solution;
+//! radio time is the slowest-link airtime per direction ([`RadioTiming`]).
+
+mod policy;
+
+pub use policy::ServePolicy;
+
+use crate::channel::ChannelModel;
+use crate::energy::{EnergyLedger, EnergyModel};
+use crate::gating::GateScores;
+use crate::jesa::{solve_round, JesaOptions, RoundProblem};
+use crate::metrics::{Metrics, SelectionPattern};
+use crate::protocol::{simulate_round, ComputeModel, RadioTiming, RoutingTable};
+use crate::runtime::{Matrix, ModelRuntime};
+use crate::workload::Query;
+use crate::SystemConfig;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// Result of serving one batch of queries.
+#[derive(Debug)]
+pub struct BatchResult {
+    /// Predicted next token per position, per query.
+    pub predictions: Vec<Vec<usize>>,
+    pub correct: u64,
+    pub total: u64,
+    /// Per-domain (correct, total).
+    pub per_domain: BTreeMap<usize, (u64, u64)>,
+    pub ledger: EnergyLedger,
+    pub pattern: SelectionPattern,
+    pub metrics: Metrics,
+    /// Simulated radio time across all rounds (s).
+    pub radio_s: f64,
+    /// Discrete-event simulated end-to-end latency across all rounds (s):
+    /// concurrent OFDMA transfers + serial per-node compute (see
+    /// [`crate::protocol::sim`]).
+    pub sim_latency_s: f64,
+    /// Wall-clock serving time (s).
+    pub wall_s: f64,
+    /// Tokens that hit the Remark-2 fallback.
+    pub fallbacks: usize,
+}
+
+impl BatchResult {
+    pub fn accuracy(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.total as f64
+        }
+    }
+
+    /// Merge another batch's results (same model config).
+    pub fn merge(&mut self, other: BatchResult) {
+        self.predictions.extend(other.predictions);
+        self.correct += other.correct;
+        self.total += other.total;
+        for (d, (c, t)) in other.per_domain {
+            let e = self.per_domain.entry(d).or_insert((0, 0));
+            e.0 += c;
+            e.1 += t;
+        }
+        self.ledger.merge(&other.ledger);
+        self.pattern.merge(&other.pattern);
+        self.metrics.merge(&other.metrics);
+        self.radio_s += other.radio_s;
+        self.sim_latency_s += other.sim_latency_s;
+        self.wall_s += other.wall_s;
+        self.fallbacks += other.fallbacks;
+    }
+}
+
+/// The DMoE edge server.
+pub struct DmoeServer {
+    runtime: ModelRuntime,
+    channel: ChannelModel,
+    energy: EnergyModel,
+    jesa_seed: u64,
+    /// Ad-hoc DMoE (paper §VIII): per-expert availability. Offline
+    /// experts receive no routed tokens and no queries.
+    offline: Vec<bool>,
+    /// Compute model for the discrete-event latency simulation
+    /// (heterogeneous ramp mirroring the paper's a_j energy ramp).
+    compute_model: ComputeModel,
+}
+
+impl DmoeServer {
+    /// Build from a system config; loads and compiles all artifacts.
+    pub fn new(cfg: &SystemConfig) -> Result<Self> {
+        let runtime = ModelRuntime::load(&cfg.artifacts_dir)?;
+        Ok(Self::with_runtime(cfg, runtime))
+    }
+
+    /// Build around an already-loaded runtime (dodges double compilation
+    /// when several experiments share one process).
+    pub fn with_runtime(cfg: &SystemConfig, runtime: ModelRuntime) -> Self {
+        let k = runtime.manifest.model.experts;
+        let mut energy_cfg = cfg.energy.clone();
+        if energy_cfg.a_per_byte.len() != k {
+            // Config and artifacts disagree on K: re-derive the paper's
+            // a_j = j·1e-3 J/token schedule for the model's width.
+            energy_cfg = crate::config::EnergyConfig::paper(k, energy_cfg.s0_bytes);
+        }
+        let channel = ChannelModel::new(cfg.channel.clone(), k, cfg.workload.seed);
+        let energy = EnergyModel::new(cfg.channel.clone(), energy_cfg);
+        let offline = vec![false; k];
+        Self {
+            runtime,
+            channel,
+            energy,
+            jesa_seed: cfg.workload.seed ^ 0x1E5A,
+            offline,
+            compute_model: ComputeModel::ramp(k, 1e-3),
+        }
+    }
+
+    /// Override the latency-simulation compute model.
+    pub fn set_compute_model(&mut self, model: ComputeModel) {
+        assert_eq!(model.per_token_s.len(), self.experts());
+        self.compute_model = model;
+    }
+
+    /// Mark an expert node as having left (or rejoined) the ad-hoc
+    /// system. Offline experts are unreachable for selection and cannot
+    /// source queries; the optimizer reroutes around them.
+    pub fn set_expert_online(&mut self, expert: usize, online: bool) {
+        self.offline[expert] = !online;
+    }
+
+    pub fn is_expert_online(&self, expert: usize) -> bool {
+        !self.offline[expert]
+    }
+
+    pub fn runtime(&self) -> &ModelRuntime {
+        &self.runtime
+    }
+
+    pub fn experts(&self) -> usize {
+        self.runtime.manifest.model.experts
+    }
+
+    pub fn layers(&self) -> usize {
+        self.runtime.manifest.model.layers
+    }
+
+    /// Serve one batch (≤ K queries, one per source expert).
+    pub fn serve_batch(&mut self, queries: &[Query], policy: &ServePolicy) -> Result<BatchResult> {
+        let t0 = std::time::Instant::now();
+        let k = self.experts();
+        let layers = self.layers();
+        let seq_len = self.runtime.seq_len();
+        anyhow::ensure!(
+            queries.len() <= k,
+            "batch of {} queries exceeds {k} expert nodes",
+            queries.len()
+        );
+        anyhow::ensure!(
+            policy.importance.layers() == layers,
+            "policy importance covers {} layers, model has {layers}",
+            policy.importance.layers()
+        );
+        for q in queries {
+            anyhow::ensure!(
+                q.source_expert < k && q.tokens.len() <= seq_len && !q.tokens.is_empty(),
+                "query {} malformed (source {}, {} tokens)",
+                q.id,
+                q.source_expert,
+                q.tokens.len()
+            );
+            anyhow::ensure!(
+                !self.offline[q.source_expert],
+                "query {} assigned to offline expert {}",
+                q.id,
+                q.source_expert
+            );
+        }
+
+        let mut metrics = Metrics::new();
+        let mut ledger = EnergyLedger::new(layers);
+        let mut pattern = SelectionPattern::new(layers, k);
+        let mut radio_s = 0.0;
+        let mut sim_latency_s = 0.0;
+        let mut fallbacks = 0usize;
+
+        // source expert -> (query index, true token count, hidden states)
+        let mut streams: Vec<Option<(usize, usize, Matrix)>> = vec![None; k];
+        for (qi, q) in queries.iter().enumerate() {
+            anyhow::ensure!(
+                streams[q.source_expert].is_none(),
+                "two queries assigned to expert {}",
+                q.source_expert
+            );
+            let h = metrics.time("embed", || self.runtime.embed(&q.tokens))?;
+            streams[q.source_expert] = Some((qi, q.tokens.len(), h));
+        }
+
+        for l in 0..layers {
+            // -- Step 2: attention + gate ---------------------------------
+            let mut gates: Vec<Vec<GateScores>> = vec![Vec::new(); k];
+            for i in 0..k {
+                if let Some((_, tq, h)) = streams[i].take() {
+                    // Fused attention+gate: one PJRT dispatch per source
+                    // per layer (§Perf L2).
+                    let (h, scores) =
+                        metrics.time("attn_gate", || self.runtime.attn_gate(l, &h))?;
+                    gates[i] = (0..tq)
+                        .map(|t| GateScores::new(scores.row(t).iter().map(|&x| x as f64).collect()))
+                        .collect();
+                    streams[i] = Some((0, tq, h)); // qi restored below
+                }
+            }
+            // restore query indices clobbered above
+            for (qi, q) in queries.iter().enumerate() {
+                if let Some(s) = streams[q.source_expert].as_mut() {
+                    s.0 = qi;
+                }
+            }
+
+            // -- Step 3: joint expert & subcarrier allocation --------------
+            let state = self.channel.realize();
+            let problem = RoundProblem {
+                gates,
+                threshold: policy.z * policy.importance.gamma(l),
+                max_active: policy.max_active,
+            };
+            let solution = metrics.time("jesa", || {
+                solve_round(
+                    &state,
+                    &problem,
+                    &self.energy,
+                    &JesaOptions {
+                        policy: policy.policy,
+                        allocation: policy.allocation,
+                        seed: self.jesa_seed ^ (l as u64) << 32,
+                        offline: self.offline.clone(),
+                        ..JesaOptions::default()
+                    },
+                )
+            });
+            fallbacks += solution.fallbacks;
+            for (i, row) in solution.selections.iter().enumerate() {
+                let _ = i;
+                for sel in row {
+                    pattern.record(l, &sel.selected);
+                }
+            }
+            ledger.charge_comm(l, solution.energy.comm_j);
+            ledger.charge_comp(l, solution.energy.comp_j);
+            ledger.count_tokens(l, problem.total_tokens() as u64);
+            radio_s += RadioTiming::from_solution(&state, &solution, self.energy.energy.s0_bytes)
+                .total_s();
+            sim_latency_s += simulate_round(
+                &state,
+                &solution,
+                &self.compute_model,
+                self.energy.energy.s0_bytes,
+            )
+            .round_latency_s;
+
+            // -- Steps 4–5: forward inference + aggregation ----------------
+            let routing = RoutingTable::from_selections(k, &solution.selections);
+            let d = self.runtime.d_model();
+            // Collect FFN outputs per (dest expert, routed token) and an
+            // O(1) slot index (source, token) -> (chunk, row) so the
+            // aggregation below never scans the routing table.
+            let mut outputs: Vec<Vec<Matrix>> = vec![Vec::new(); k];
+            let max_tq = queries.iter().map(|q| q.tokens.len()).max().unwrap_or(0);
+            // slot_of[j][source * max_tq + token] = (chunk, row) + 1-sentinel.
+            let mut slot_of: Vec<Vec<u32>> = vec![vec![u32::MAX; k * max_tq]; k];
+            for j in 0..k {
+                let work = routing.tokens_for(j);
+                if work.is_empty() {
+                    continue;
+                }
+                for chunk in work.chunks(seq_len) {
+                    let mut batch = Matrix::zeros(seq_len, d);
+                    for (row, rt) in chunk.iter().enumerate() {
+                        let (_, _, h) = streams[rt.source].as_ref().expect("routed from idle");
+                        batch.copy_row_from(row, h, rt.token);
+                    }
+                    let out = metrics.time("ffn", || self.runtime.ffn(l, j, &batch))?;
+                    metrics.inc("ffn_exec", 1);
+                    let chunk_idx = outputs[j].len() as u32;
+                    for (row, rt) in chunk.iter().enumerate() {
+                        slot_of[j][rt.source * max_tq + rt.token] =
+                            chunk_idx * seq_len as u32 + row as u32;
+                    }
+                    outputs[j].push(out);
+                }
+            }
+            metrics.inc("routed_tokens", routing.total_work() as u64);
+            metrics.inc("remote_tokens", routing.remote_work() as u64);
+
+            // Aggregate back at the source (eq. 8).
+            for i in 0..k {
+                if let Some((_, tq, h)) = streams[i].as_mut() {
+                    let mut agg = h.clone();
+                    for n in 0..*tq {
+                        let sel = &solution.selections[i][n];
+                        if sel.selected.is_empty() {
+                            continue;
+                        }
+                        let gsum: f64 = sel
+                            .selected
+                            .iter()
+                            .map(|&j| problem.gates[i][n].score(j))
+                            .sum();
+                        for &j in &sel.selected {
+                            let w = (problem.gates[i][n].score(j) / gsum.max(1e-12)) as f32;
+                            let slot = slot_of[j][i * max_tq + n];
+                            debug_assert_ne!(slot, u32::MAX, "routing table out of sync");
+                            let (chunk, row) =
+                                (slot as usize / seq_len, slot as usize % seq_len);
+                            agg.add_scaled_row(n, &outputs[j][chunk], row, w);
+                        }
+                    }
+                    *h = agg;
+                }
+            }
+        }
+
+        // -- Step 6: head + accuracy ---------------------------------------
+        let mut predictions: Vec<Vec<usize>> = vec![Vec::new(); queries.len()];
+        let mut correct = 0u64;
+        let mut total = 0u64;
+        let mut per_domain: BTreeMap<usize, (u64, u64)> = BTreeMap::new();
+        for i in 0..k {
+            if let Some((qi, tq, h)) = streams[i].take() {
+                let logits = metrics.time("head", || self.runtime.head(&h))?;
+                let preds = logits.argmax_rows();
+                let q = &queries[qi];
+                let entry = per_domain.entry(q.domain).or_insert((0, 0));
+                for t in 0..tq {
+                    let ok = preds[t] as i32 == q.labels[t];
+                    correct += ok as u64;
+                    entry.0 += ok as u64;
+                    total += 1;
+                    entry.1 += 1;
+                }
+                predictions[qi] = preds[..tq].to_vec();
+            }
+        }
+
+        Ok(BatchResult {
+            predictions,
+            correct,
+            total,
+            per_domain,
+            ledger,
+            pattern,
+            metrics,
+            radio_s,
+            sim_latency_s,
+            wall_s: t0.elapsed().as_secs_f64(),
+            fallbacks,
+        })
+    }
+
+    /// Serve an entire eval set; merges batch results.
+    pub fn serve_eval_set(
+        &mut self,
+        eval: &crate::workload::EvalSet,
+        policy: &ServePolicy,
+        max_batches: Option<usize>,
+    ) -> Result<BatchResult> {
+        let mut merged: Option<BatchResult> = None;
+        for batch in eval
+            .batches(self.experts())
+            .into_iter()
+            .take(max_batches.unwrap_or(usize::MAX))
+        {
+            let r = self.serve_batch(&batch, policy)?;
+            match &mut merged {
+                None => merged = Some(r),
+                Some(m) => m.merge(r),
+            }
+        }
+        merged.ok_or_else(|| anyhow::anyhow!("eval set {} is empty", eval.name))
+    }
+}

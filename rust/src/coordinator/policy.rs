@@ -1,0 +1,141 @@
+//! Serving policies — the benchmark schemes of §VII-A3, bundled as one
+//! value the coordinator and the bench harness can pass around.
+
+use crate::gating::LayerImportance;
+use crate::jesa::{AllocationMode, SelectionPolicy};
+
+/// A complete serving policy: selection rule, allocation mode, QoS.
+#[derive(Debug, Clone)]
+pub struct ServePolicy {
+    pub label: String,
+    pub policy: SelectionPolicy,
+    pub allocation: AllocationMode,
+    pub importance: LayerImportance,
+    /// Base QoS `z`.
+    pub z: f64,
+    /// Max experts per token `D`.
+    pub max_active: usize,
+}
+
+impl ServePolicy {
+    /// `JESA(γ0, D)`: z = 1, `γ^(l) = γ0^l`, DES + Hungarian (Alg. 2).
+    pub fn jesa(gamma0: f64, d: usize, layers: usize) -> Self {
+        Self {
+            label: format!("JESA({gamma0}, {d})"),
+            policy: SelectionPolicy::Des,
+            allocation: AllocationMode::Exclusive,
+            importance: LayerImportance::geometric(gamma0, layers),
+            z: 1.0,
+            max_active: d,
+        }
+    }
+
+    /// `DES(γ0, D)` — same optimizer; the Table-I naming.
+    pub fn des(gamma0: f64, d: usize, layers: usize) -> Self {
+        Self {
+            label: format!("DES({gamma0}, {d})"),
+            ..Self::jesa(gamma0, d, layers)
+        }
+    }
+
+    /// `Top-k`: highest gate scores + optimal subcarrier allocation.
+    pub fn topk(k: usize, layers: usize) -> Self {
+        Self {
+            label: format!("Top-{k}"),
+            policy: SelectionPolicy::TopK(k),
+            allocation: AllocationMode::Exclusive,
+            importance: LayerImportance::homogeneous(layers),
+            z: 0.0, // Top-k ignores QoS
+            max_active: k,
+        }
+    }
+
+    /// `H(z, D)`: homogeneous γ ≡ 1 with base QoS `z` (depth-unaware).
+    pub fn homogeneous(z: f64, d: usize, layers: usize) -> Self {
+        Self {
+            label: format!("H({z}, {d})"),
+            policy: SelectionPolicy::Des,
+            allocation: AllocationMode::Exclusive,
+            importance: LayerImportance::homogeneous(layers),
+            z,
+            max_active: d,
+        }
+    }
+
+    /// `LB(γ0, D)`: DES with non-exclusive best-subcarrier rates — the
+    /// energy lower bound.
+    pub fn lower_bound(gamma0: f64, d: usize, layers: usize) -> Self {
+        Self {
+            label: format!("LB({gamma0}, {d})"),
+            policy: SelectionPolicy::Des,
+            allocation: AllocationMode::LowerBound,
+            importance: LayerImportance::geometric(gamma0, layers),
+            z: 1.0,
+            max_active: d,
+        }
+    }
+
+    /// Route everything to one expert (Table I "individual experts").
+    pub fn forced(expert: usize, layers: usize) -> Self {
+        Self {
+            label: format!("Expert-{expert}"),
+            policy: SelectionPolicy::Forced(expert),
+            allocation: AllocationMode::Exclusive,
+            importance: LayerImportance::homogeneous(layers),
+            z: 0.0,
+            max_active: 1,
+        }
+    }
+
+    /// Override the importance schedule (Fig. 5's lowered-QoS window).
+    pub fn with_importance(mut self, importance: LayerImportance) -> Self {
+        self.importance = importance;
+        self
+    }
+
+    /// Override the base QoS.
+    pub fn with_z(mut self, z: f64) -> Self {
+        self.z = z;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_label_correctly() {
+        assert_eq!(ServePolicy::jesa(0.8, 2, 4).label, "JESA(0.8, 2)");
+        assert_eq!(ServePolicy::topk(2, 4).label, "Top-2");
+        assert_eq!(ServePolicy::homogeneous(0.5, 2, 4).label, "H(0.5, 2)");
+        assert_eq!(ServePolicy::lower_bound(0.7, 2, 4).label, "LB(0.7, 2)");
+        assert_eq!(ServePolicy::forced(1, 4).label, "Expert-1");
+    }
+
+    #[test]
+    fn jesa_importance_is_geometric() {
+        let p = ServePolicy::jesa(0.5, 2, 3);
+        assert!((p.importance.gamma(0) - 0.5).abs() < 1e-12);
+        assert!((p.importance.gamma(2) - 0.125).abs() < 1e-12);
+        assert_eq!(p.z, 1.0);
+    }
+
+    #[test]
+    fn homogeneous_is_flat() {
+        let p = ServePolicy::homogeneous(0.6, 2, 4);
+        for l in 0..4 {
+            assert_eq!(p.importance.gamma(l), 1.0);
+        }
+        assert_eq!(p.z, 0.6);
+    }
+
+    #[test]
+    fn with_overrides() {
+        let p = ServePolicy::jesa(0.8, 2, 4)
+            .with_z(0.3)
+            .with_importance(LayerImportance::homogeneous(4));
+        assert_eq!(p.z, 0.3);
+        assert_eq!(p.importance.gamma(3), 1.0);
+    }
+}

@@ -1,0 +1,153 @@
+//! Energy ledger: per-layer, per-category accounting used by every
+//! experiment (Figs. 7–9 plot exactly these series).
+
+/// A communication/computation split.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub comm_j: f64,
+    pub comp_j: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_j(&self) -> f64 {
+        self.comm_j + self.comp_j
+    }
+}
+
+impl std::ops::Add for EnergyBreakdown {
+    type Output = Self;
+    fn add(self, rhs: Self) -> Self {
+        Self {
+            comm_j: self.comm_j + rhs.comm_j,
+            comp_j: self.comp_j + rhs.comp_j,
+        }
+    }
+}
+
+impl std::ops::AddAssign for EnergyBreakdown {
+    fn add_assign(&mut self, rhs: Self) {
+        self.comm_j += rhs.comm_j;
+        self.comp_j += rhs.comp_j;
+    }
+}
+
+/// Accumulates energy per layer and per token count.
+#[derive(Debug, Clone)]
+pub struct EnergyLedger {
+    layers: Vec<EnergyBreakdown>,
+    tokens_per_layer: Vec<u64>,
+}
+
+impl EnergyLedger {
+    pub fn new(n_layers: usize) -> Self {
+        Self {
+            layers: vec![EnergyBreakdown::default(); n_layers],
+            tokens_per_layer: vec![0; n_layers],
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn charge_comm(&mut self, layer: usize, joules: f64) {
+        assert!(joules >= 0.0 && joules.is_finite(), "bad comm charge {joules}");
+        self.layers[layer].comm_j += joules;
+    }
+
+    pub fn charge_comp(&mut self, layer: usize, joules: f64) {
+        assert!(joules >= 0.0 && joules.is_finite(), "bad comp charge {joules}");
+        self.layers[layer].comp_j += joules;
+    }
+
+    pub fn count_tokens(&mut self, layer: usize, tokens: u64) {
+        self.tokens_per_layer[layer] += tokens;
+    }
+
+    pub fn layer(&self, layer: usize) -> EnergyBreakdown {
+        self.layers[layer]
+    }
+
+    /// Energy per token at a layer (the y-axis of Figs. 7–9).
+    pub fn per_token(&self, layer: usize) -> EnergyBreakdown {
+        let t = self.tokens_per_layer[layer].max(1) as f64;
+        EnergyBreakdown {
+            comm_j: self.layers[layer].comm_j / t,
+            comp_j: self.layers[layer].comp_j / t,
+        }
+    }
+
+    pub fn total(&self) -> EnergyBreakdown {
+        self.layers
+            .iter()
+            .copied()
+            .fold(EnergyBreakdown::default(), |a, b| a + b)
+    }
+
+    pub fn total_tokens(&self) -> u64 {
+        self.tokens_per_layer.iter().sum()
+    }
+
+    /// Merge another ledger (e.g. from a parallel worker).
+    pub fn merge(&mut self, other: &EnergyLedger) {
+        assert_eq!(self.layers.len(), other.layers.len());
+        for l in 0..self.layers.len() {
+            self.layers[l] += other.layers[l];
+            self.tokens_per_layer[l] += other.tokens_per_layer[l];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_per_layer() {
+        let mut led = EnergyLedger::new(3);
+        led.charge_comm(0, 1.0);
+        led.charge_comp(0, 2.0);
+        led.charge_comm(2, 0.5);
+        assert_eq!(led.layer(0).total_j(), 3.0);
+        assert_eq!(led.layer(1).total_j(), 0.0);
+        assert_eq!(led.total().comm_j, 1.5);
+        assert_eq!(led.total().comp_j, 2.0);
+    }
+
+    #[test]
+    fn per_token_divides() {
+        let mut led = EnergyLedger::new(1);
+        led.charge_comm(0, 10.0);
+        led.count_tokens(0, 5);
+        assert_eq!(led.per_token(0).comm_j, 2.0);
+    }
+
+    #[test]
+    fn per_token_safe_on_zero_tokens() {
+        let mut led = EnergyLedger::new(1);
+        led.charge_comp(0, 4.0);
+        assert_eq!(led.per_token(0).comp_j, 4.0);
+    }
+
+    #[test]
+    fn merge_adds_everything() {
+        let mut a = EnergyLedger::new(2);
+        a.charge_comm(0, 1.0);
+        a.count_tokens(0, 2);
+        let mut b = EnergyLedger::new(2);
+        b.charge_comm(0, 2.0);
+        b.charge_comp(1, 3.0);
+        b.count_tokens(0, 4);
+        a.merge(&b);
+        assert_eq!(a.layer(0).comm_j, 3.0);
+        assert_eq!(a.layer(1).comp_j, 3.0);
+        assert_eq!(a.total_tokens(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad comm charge")]
+    fn rejects_negative_charge() {
+        let mut led = EnergyLedger::new(1);
+        led.charge_comm(0, -1.0);
+    }
+}

@@ -1,0 +1,181 @@
+//! Energy consumption models (paper §II-B) and the energy ledger.
+//!
+//! * Communication energy, eq. (3):
+//!   `E_ij^comm = s_ij / R_ij · Σ_m β_ij^(m) P0` — transmit time times the
+//!   total radiated power over the allocated subcarriers.
+//! * Computation energy, eq. (4): `E_j^comp = a_j Σ_i s_ij + b_j` — linear
+//!   in the batch of bytes processed at device `j` (GPU profiling result
+//!   the paper cites).
+//! * The per-(expert, token) *selection cost* coefficients used by DES
+//!   (§V-A): `e_ij = s0 (a_j + P0 Σ_m β_ij^(m) / R_ij)` for `i ≠ j`, and
+//!   `e_jj = s0 a_j` for in-situ processing.
+
+mod ledger;
+
+pub use ledger::{EnergyBreakdown, EnergyLedger};
+
+use crate::channel::ChannelState;
+use crate::config::{ChannelConfig, EnergyConfig};
+
+/// Energy model bound to a channel + energy configuration.
+#[derive(Debug, Clone)]
+pub struct EnergyModel {
+    pub channel: ChannelConfig,
+    pub energy: EnergyConfig,
+}
+
+impl EnergyModel {
+    pub fn new(channel: ChannelConfig, energy: EnergyConfig) -> Self {
+        Self { channel, energy }
+    }
+
+    /// Communication energy (eq. 3) to move `s_bytes` from expert `i` to
+    /// `j` over the links' allocated subcarriers.
+    ///
+    /// `n_subcarriers` is `Σ_m β_ij^(m)` and `aggregate_rate` is `R_ij`
+    /// (eq. 2). Returns 0 for in-situ (`rate = +inf`) or empty payloads.
+    pub fn comm_energy(&self, s_bytes: f64, n_subcarriers: usize, aggregate_rate: f64) -> f64 {
+        if s_bytes == 0.0 || n_subcarriers == 0 {
+            return 0.0;
+        }
+        assert!(
+            aggregate_rate > 0.0,
+            "comm_energy with zero rate but nonzero payload"
+        );
+        if aggregate_rate.is_infinite() {
+            return 0.0;
+        }
+        let bits = s_bytes * 8.0;
+        (bits / aggregate_rate) * n_subcarriers as f64 * self.channel.p0_w
+    }
+
+    /// Computation energy (eq. 4) for expert `j` processing `s_bytes`
+    /// total scheduled bytes. The static term `b_j` is charged once per
+    /// invocation with a non-empty batch.
+    pub fn comp_energy(&self, j: usize, s_bytes: f64) -> f64 {
+        if s_bytes == 0.0 {
+            return 0.0;
+        }
+        self.energy.a_per_byte[j] * s_bytes + self.energy.b_static[j]
+    }
+
+    /// Per-token selection cost `e_ij` (§V-A) for routing one hidden state
+    /// of `s0` bytes from `i` to expert `j`, given the current subcarrier
+    /// allocation on the link.
+    ///
+    /// `e_jj = s0 · a_j` (in-situ, no radio), otherwise
+    /// `e_ij = s0 (a_j + 8 · P0 · Σβ / R_ij)` — the factor 8 converts the
+    /// paper's byte-denominated `s0` into bits for the rate division.
+    pub fn selection_cost(
+        &self,
+        i: usize,
+        j: usize,
+        n_subcarriers: usize,
+        aggregate_rate: f64,
+    ) -> f64 {
+        let s0 = self.energy.s0_bytes;
+        let comp = self.energy.a_per_byte[j] * s0;
+        if i == j {
+            return comp;
+        }
+        if n_subcarriers == 0 || !(aggregate_rate > 0.0) {
+            // Unreachable link: infinite cost keeps DES from selecting it.
+            return f64::INFINITY;
+        }
+        if aggregate_rate.is_infinite() {
+            return comp;
+        }
+        comp + (s0 * 8.0) * self.channel.p0_w * n_subcarriers as f64 / aggregate_rate
+    }
+
+    /// Convenience: the full `K`-vector of selection costs for tokens
+    /// originating at expert `i`, under a one-subcarrier-per-link
+    /// allocation `alloc[j] = Some(m)`.
+    pub fn selection_costs_row(
+        &self,
+        state: &ChannelState,
+        i: usize,
+        alloc: &[Option<usize>],
+    ) -> Vec<f64> {
+        (0..state.experts())
+            .map(|j| {
+                if i == j {
+                    self.selection_cost(i, j, 0, f64::INFINITY)
+                } else {
+                    match alloc[j] {
+                        Some(m) => self.selection_cost(i, j, 1, state.rate(i, j, m)),
+                        None => f64::INFINITY,
+                    }
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ChannelConfig, EnergyConfig};
+
+    fn model(k: usize) -> EnergyModel {
+        EnergyModel::new(ChannelConfig::default(), EnergyConfig::paper(k, 8192.0))
+    }
+
+    #[test]
+    fn comm_energy_matches_eq3() {
+        let m = model(2);
+        // 8192 bytes over 2 subcarriers at aggregate 1 Mbit/s:
+        // t = 65536 bits / 1e6 = 0.065536 s; E = t * 2 * 0.01 W.
+        let e = m.comm_energy(8192.0, 2, 1e6);
+        assert!((e - 0.065536 * 2.0 * 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comm_energy_zero_cases() {
+        let m = model(2);
+        assert_eq!(m.comm_energy(0.0, 2, 1e6), 0.0);
+        assert_eq!(m.comm_energy(100.0, 0, 1e6), 0.0);
+        assert_eq!(m.comm_energy(100.0, 1, f64::INFINITY), 0.0);
+    }
+
+    #[test]
+    fn comp_energy_matches_eq4() {
+        let mut cfg = EnergyConfig::paper(3, 8192.0);
+        cfg.b_static = vec![0.5, 0.0, 0.0];
+        let m = EnergyModel::new(ChannelConfig::default(), cfg);
+        // a_0 = 1e-3 / 8192 J/byte; 2 tokens = 16384 bytes.
+        let e = m.comp_energy(0, 16384.0);
+        assert!((e - (2.0 * 1e-3 + 0.5)).abs() < 1e-12);
+        assert_eq!(m.comp_energy(0, 0.0), 0.0, "empty batch charges nothing");
+    }
+
+    #[test]
+    fn selection_cost_in_situ_is_comp_only() {
+        let m = model(3);
+        let e = m.selection_cost(1, 1, 0, f64::INFINITY);
+        assert!((e - 2e-3).abs() < 1e-12); // a_1 = 2e-3 J/token
+    }
+
+    #[test]
+    fn selection_cost_includes_radio_term() {
+        let m = model(3);
+        let rate = 2e6;
+        let e = m.selection_cost(0, 2, 1, rate);
+        let expect = 3e-3 + 8192.0 * 8.0 * 0.01 / rate;
+        assert!((e - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unreachable_link_is_infinite() {
+        let m = model(2);
+        assert!(m.selection_cost(0, 1, 0, 0.0).is_infinite());
+    }
+
+    #[test]
+    fn higher_rate_lowers_cost() {
+        let m = model(2);
+        let lo = m.selection_cost(0, 1, 1, 1e6);
+        let hi = m.selection_cost(0, 1, 1, 4e6);
+        assert!(hi < lo);
+    }
+}

@@ -1,0 +1,311 @@
+//! Gate scores, layer importance and QoS machinery (paper §III-C2, §IV-A).
+//!
+//! A gate score vector `g^(l)(u)` assigns each expert a non-negative score
+//! with `Σ_j g_j = 1` (eq. 7). The QoS constraint C1 requires the selected
+//! experts' scores to sum to at least `z·γ^(l)`, where the layer
+//! importance factor `γ^(l)` is non-increasing in `l` — the paper's
+//! Fig. 5 finding that lower layers matter more. The evaluation uses the
+//! geometric schedule `γ^(l) = γ0^l`.
+
+use crate::util::rng::Xoshiro256pp;
+
+/// A normalized gate score vector for one hidden state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GateScores {
+    scores: Vec<f64>,
+}
+
+impl GateScores {
+    /// Construct from raw non-negative scores; normalizes to sum 1.
+    pub fn new(raw: Vec<f64>) -> Self {
+        assert!(!raw.is_empty(), "empty gate score vector");
+        assert!(
+            raw.iter().all(|s| s.is_finite() && *s >= 0.0),
+            "gate scores must be finite and non-negative: {raw:?}"
+        );
+        let sum: f64 = raw.iter().sum();
+        assert!(sum > 0.0, "gate scores sum to zero");
+        Self {
+            scores: raw.iter().map(|s| s / sum).collect(),
+        }
+    }
+
+    /// Construct from softmax logits.
+    pub fn from_logits(logits: &[f64]) -> Self {
+        let m = logits.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = logits.iter().map(|x| (x - m).exp()).collect();
+        Self::new(exps)
+    }
+
+    pub fn len(&self) -> usize {
+        self.scores.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.scores.is_empty()
+    }
+
+    #[inline]
+    pub fn score(&self, j: usize) -> f64 {
+        self.scores[j]
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        &self.scores
+    }
+
+    /// Indices of the top-`k` experts by score (ties broken by lower
+    /// index, matching a stable sort).
+    pub fn top_k(&self, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.scores.len()).collect();
+        idx.sort_by(|&a, &b| {
+            self.scores[b]
+                .partial_cmp(&self.scores[a])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        idx.truncate(k);
+        idx
+    }
+
+    /// Sum of scores over a selection set.
+    pub fn selection_score(&self, selected: &[usize]) -> f64 {
+        selected.iter().map(|&j| self.scores[j]).sum()
+    }
+
+    /// Remark 2 feasibility: can any ≤D-subset meet threshold `t`?
+    /// Equivalent to asking whether the top-D sum reaches `t`.
+    pub fn feasible(&self, d: usize, t: f64) -> bool {
+        self.selection_score(&self.top_k(d)) >= t - 1e-12
+    }
+}
+
+/// Layer-importance schedule `γ^(l)` (non-increasing in `l`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerImportance {
+    gammas: Vec<f64>,
+}
+
+impl LayerImportance {
+    /// Geometric schedule `γ^(l) = γ0^l` for `l = 1..=layers` — the form
+    /// the paper's evaluation uses (JESA(γ0, D)).
+    pub fn geometric(gamma0: f64, layers: usize) -> Self {
+        assert!((0.0..=1.0).contains(&gamma0), "gamma0 out of [0,1]: {gamma0}");
+        Self {
+            gammas: (1..=layers).map(|l| gamma0.powi(l as i32)).collect(),
+        }
+    }
+
+    /// Homogeneous schedule `γ^(l) = 1` (the H(z, D) baseline).
+    pub fn homogeneous(layers: usize) -> Self {
+        Self {
+            gammas: vec![1.0; layers],
+        }
+    }
+
+    /// Explicit schedule; must be non-increasing (paper assumption).
+    pub fn explicit(gammas: Vec<f64>) -> Self {
+        assert!(!gammas.is_empty());
+        for w in gammas.windows(2) {
+            assert!(
+                w[0] >= w[1] - 1e-12,
+                "layer importance must be non-increasing: {gammas:?}"
+            );
+        }
+        assert!(gammas.iter().all(|g| (0.0..=1.0).contains(g)));
+        Self { gammas }
+    }
+
+    /// A schedule with a lowered-QoS window (the Fig. 5 experiment): base
+    /// value everywhere, `low` inside `[start, start+len)`. NOTE: such a
+    /// schedule is *not* non-increasing; Fig. 5 uses it to probe layer
+    /// criticality, so this constructor bypasses the monotonic check.
+    pub fn with_window(layers: usize, base: f64, low: f64, start: usize, len: usize) -> Self {
+        let mut g = vec![base; layers];
+        for l in start..(start + len).min(layers) {
+            g[l] = low;
+        }
+        Self { gammas: g }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.gammas.len()
+    }
+
+    /// `γ^(l)` for zero-based layer index.
+    #[inline]
+    pub fn gamma(&self, layer: usize) -> f64 {
+        self.gammas[layer]
+    }
+
+    /// The C1 threshold `z·γ^(l)` at a layer.
+    #[inline]
+    pub fn qos_threshold(&self, z: f64, layer: usize) -> f64 {
+        z * self.gammas[layer]
+    }
+}
+
+/// Synthetic gate-score generator for algorithm-level experiments (Fig. 6,
+/// Figs. 7–9 run at paper scale where no trained gate exists for K=8).
+///
+/// Scores are drawn as normalized `Gamma(shape≈concentration)` variates —
+/// a Dirichlet sample — optionally biased toward a subset of
+/// "high-performing" experts (the Fig. 6 setup).
+#[derive(Debug, Clone)]
+pub struct SyntheticGate {
+    k: usize,
+    concentration: f64,
+    /// Multiplicative score bias per expert (1.0 = unbiased).
+    bias: Vec<f64>,
+}
+
+impl SyntheticGate {
+    pub fn new(k: usize, concentration: f64) -> Self {
+        assert!(k >= 1 && concentration > 0.0);
+        Self {
+            k,
+            concentration,
+            bias: vec![1.0; k],
+        }
+    }
+
+    /// Bias expert `j`'s expected score by `factor` (Fig. 6's manually
+    /// created high-performing experts).
+    pub fn with_bias(mut self, bias: Vec<f64>) -> Self {
+        assert_eq!(bias.len(), self.k);
+        assert!(bias.iter().all(|b| *b > 0.0));
+        self.bias = bias;
+        self
+    }
+
+    /// Draw one gate score vector.
+    pub fn sample(&self, rng: &mut Xoshiro256pp) -> GateScores {
+        let raw: Vec<f64> = (0..self.k)
+            .map(|j| gamma_sample(rng, self.concentration) * self.bias[j])
+            .collect();
+        GateScores::new(raw)
+    }
+}
+
+/// Marsaglia–Tsang gamma sampler (shape `a`, scale 1). For `a < 1` uses
+/// the boost `Gamma(a) = Gamma(a+1) · U^(1/a)`.
+fn gamma_sample(rng: &mut Xoshiro256pp, a: f64) -> f64 {
+    if a < 1.0 {
+        let u = rng.next_f64_open();
+        return gamma_sample(rng, a + 1.0) * u.powf(1.0 / a);
+    }
+    let d = a - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = rng.normal();
+        let v = (1.0 + c * x).powi(3);
+        if v <= 0.0 {
+            continue;
+        }
+        let u = rng.next_f64_open();
+        if u < 1.0 - 0.0331 * x.powi(4) {
+            return d * v;
+        }
+        if u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+            return d * v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scores_normalize() {
+        let g = GateScores::new(vec![1.0, 3.0]);
+        assert!((g.score(0) - 0.25).abs() < 1e-12);
+        assert!((g.score(1) - 0.75).abs() < 1e-12);
+        let sum: f64 = g.as_slice().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn softmax_matches_manual() {
+        let g = GateScores::from_logits(&[0.0, (2.0f64).ln()]);
+        assert!((g.score(1) / g.score(0) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn top_k_orders_and_breaks_ties() {
+        let g = GateScores::new(vec![0.2, 0.4, 0.2, 0.2]);
+        assert_eq!(g.top_k(2), vec![1, 0]); // tie 0/2/3 -> lowest index
+        assert_eq!(g.top_k(10).len(), 4, "k clamped to len");
+    }
+
+    #[test]
+    fn feasibility_matches_topd_sum() {
+        let g = GateScores::new(vec![0.5, 0.3, 0.2]);
+        assert!(g.feasible(2, 0.8));
+        assert!(!g.feasible(2, 0.81));
+        assert!(g.feasible(3, 1.0));
+    }
+
+    #[test]
+    fn geometric_importance_non_increasing() {
+        let imp = LayerImportance::geometric(0.8, 8);
+        for l in 1..8 {
+            assert!(imp.gamma(l) <= imp.gamma(l - 1));
+        }
+        assert!((imp.gamma(0) - 0.8).abs() < 1e-12);
+        assert!((imp.qos_threshold(0.5, 1) - 0.5 * 0.64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn homogeneous_is_flat() {
+        let imp = LayerImportance::homogeneous(4);
+        for l in 0..4 {
+            assert_eq!(imp.gamma(l), 1.0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "non-increasing")]
+    fn explicit_rejects_increasing() {
+        LayerImportance::explicit(vec![0.5, 0.9]);
+    }
+
+    #[test]
+    fn window_schedule_shape() {
+        let imp = LayerImportance::with_window(8, 0.5, 0.1, 2, 4);
+        assert_eq!(imp.gamma(1), 0.5);
+        assert_eq!(imp.gamma(2), 0.1);
+        assert_eq!(imp.gamma(5), 0.1);
+        assert_eq!(imp.gamma(6), 0.5);
+    }
+
+    #[test]
+    fn synthetic_gate_sums_to_one_and_respects_bias() {
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let gate = SyntheticGate::new(4, 2.0).with_bias(vec![4.0, 1.0, 1.0, 1.0]);
+        let mut mean0 = 0.0;
+        let n = 2000;
+        for _ in 0..n {
+            let g = gate.sample(&mut rng);
+            let sum: f64 = g.as_slice().iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9);
+            mean0 += g.score(0);
+        }
+        mean0 /= n as f64;
+        assert!(mean0 > 0.45, "biased expert should dominate, mean={mean0}");
+    }
+
+    #[test]
+    fn gamma_sampler_mean() {
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let n = 100_000;
+        let mean = (0..n).map(|_| gamma_sample(&mut rng, 3.0)).sum::<f64>() / n as f64;
+        assert!((mean - 3.0).abs() < 0.05, "Gamma(3) mean ~ 3, got {mean}");
+        let mean_small =
+            (0..n).map(|_| gamma_sample(&mut rng, 0.5)).sum::<f64>() / n as f64;
+        assert!(
+            (mean_small - 0.5).abs() < 0.02,
+            "Gamma(0.5) mean ~ 0.5, got {mean_small}"
+        );
+    }
+}

@@ -1,0 +1,293 @@
+//! Theorem 1: asymptotic optimality of the JESA BCD loop.
+//!
+//! If the per-(link, subcarrier) rates are i.i.d., the probability that
+//! every one of the `K(K−1)` links has its *maximum-rate* subcarrier on a
+//! distinct carrier is `∏_{i=0}^{K(K−1)−1}(M−i) / M^{K(K−1)}`, and on that
+//! event the Hungarian step returns each link its own best subcarrier
+//! independently of the expert allocation — so BCD finds the global
+//! optimum of P2. This module computes the bound (Remark 3's numbers) and
+//! provides the empirical validation harness behind `dmoe theorem1`.
+
+use super::{solve_round, JesaOptions, RoundProblem};
+use crate::channel::{ChannelModel, ChannelState, LinkId};
+use crate::config::{ChannelConfig, EnergyConfig};
+use crate::energy::EnergyModel;
+use crate::gating::{GateScores, SyntheticGate};
+use crate::selection::{des, SelectionProblem};
+use crate::util::rng::Xoshiro256pp;
+
+/// The Theorem-1 lower bound on `Pr(α = α*, β = β*)`.
+///
+/// Computed in log-space so large `K(K−1)` exponents don't underflow.
+pub fn optimality_probability_bound(k: usize, m: usize) -> f64 {
+    let links = k * (k.saturating_sub(1));
+    if links == 0 {
+        return 1.0;
+    }
+    if links > m {
+        return 0.0; // some links must collide
+    }
+    let mut log_p = 0.0f64;
+    for i in 0..links {
+        log_p += ((m - i) as f64).ln() - (m as f64).ln();
+    }
+    log_p.exp()
+}
+
+/// Result of one empirical-validation run.
+#[derive(Debug, Clone)]
+pub struct Theorem1Result {
+    pub k: usize,
+    pub m: usize,
+    pub trials: usize,
+    /// Fraction of trials where BCD matched the exhaustive joint optimum.
+    pub empirical_rate: f64,
+    /// The Theorem-1 bound for comparison.
+    pub bound: f64,
+    /// Fraction of trials where all max-rate subcarriers were distinct
+    /// (the event `A` in the proof).
+    pub distinct_max_rate: f64,
+}
+
+/// Empirically validate Theorem 1 on small instances where the joint
+/// optimum is computable by enumeration (all injective link→subcarrier
+/// maps × optimal DES per map).
+///
+/// Panics if `K(K−1)` exceeds `m` or the enumeration is impractically
+/// large (links! / (links−m)! caps at ~1e6 maps).
+pub fn validate(k: usize, m: usize, tokens: usize, trials: usize, seed: u64) -> Theorem1Result {
+    let links = LinkId::all(k);
+    assert!(
+        links.len() <= m,
+        "validate() needs M >= K(K-1) so the joint optimum is well-defined"
+    );
+    // Enumeration size = M!/(M-links)!; keep it sane.
+    let mut enum_size = 1f64;
+    for i in 0..links.len() {
+        enum_size *= (m - i) as f64;
+    }
+    assert!(
+        enum_size <= 2e6,
+        "joint-optimum enumeration would visit {enum_size:.1e} maps; \
+         use smaller K or M (perm(M, K(K-1)) must be <= 2e6)"
+    );
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut optimal_hits = 0usize;
+    let mut distinct_hits = 0usize;
+
+    for trial in 0..trials {
+        let cfg = ChannelConfig {
+            subcarriers: m,
+            ..ChannelConfig::default()
+        };
+        let mut ch = ChannelModel::new(cfg.clone(), k, seed ^ (trial as u64).wrapping_mul(0x9E37));
+        let state = ch.realize();
+        let gate = SyntheticGate::new(k, 1.0);
+        let gates: Vec<Vec<GateScores>> = (0..k)
+            .map(|_| (0..tokens).map(|_| gate.sample(&mut rng)).collect())
+            .collect();
+        let problem = RoundProblem {
+            gates,
+            threshold: 0.5,
+            max_active: 2,
+        };
+        let energy = EnergyModel::new(cfg, EnergyConfig::paper(k, 8192.0));
+
+        if all_max_rates_distinct(&state) {
+            distinct_hits += 1;
+        }
+
+        let bcd = solve_round(
+            &state,
+            &problem,
+            &energy,
+            &JesaOptions {
+                seed: seed ^ trial as u64,
+                ..JesaOptions::default()
+            },
+        );
+        let opt = exhaustive_joint_optimum(&state, &problem, &energy);
+        if bcd.energy.total_j() <= opt + 1e-9 {
+            optimal_hits += 1;
+        }
+    }
+
+    Theorem1Result {
+        k,
+        m,
+        trials,
+        empirical_rate: optimal_hits as f64 / trials as f64,
+        bound: optimality_probability_bound(k, m),
+        distinct_max_rate: distinct_hits as f64 / trials as f64,
+    }
+}
+
+/// Event `A` from the proof: argmax subcarriers of all links distinct.
+fn all_max_rates_distinct(state: &ChannelState) -> bool {
+    let mut seen = std::collections::HashSet::new();
+    for l in LinkId::all(state.experts()) {
+        let (m, _) = state.best_subcarrier(l.from, l.to);
+        if !seen.insert(m) {
+            return false;
+        }
+    }
+    true
+}
+
+/// Exhaustive joint optimum of P2: enumerate injective link→subcarrier
+/// maps; for each, DES gives the conditionally-optimal α; take the min
+/// total energy. Exponential — only for Theorem-1 validation at tiny K.
+pub fn exhaustive_joint_optimum(
+    state: &ChannelState,
+    problem: &RoundProblem,
+    energy: &EnergyModel,
+) -> f64 {
+    let k = state.experts();
+    let links = LinkId::all(k);
+    let m = state.subcarriers();
+    let mut best = f64::INFINITY;
+
+    // Depth-first over injective maps links -> subcarriers.
+    let mut assignment = vec![0usize; links.len()];
+    let mut used = vec![false; m];
+    dfs(
+        0,
+        &links,
+        m,
+        &mut used,
+        &mut assignment,
+        &mut |assign: &[usize]| {
+            let mut rates = vec![vec![0.0; k]; k];
+            for i in 0..k {
+                rates[i][i] = f64::INFINITY;
+            }
+            for (li, l) in links.iter().enumerate() {
+                rates[l.from][l.to] = state.rate(l.from, l.to, assign[li]);
+            }
+            // Optimal α for these rates (P1 decomposes per token).
+            let selections: Vec<Vec<_>> = (0..k)
+                .map(|i| {
+                    problem.gates[i]
+                        .iter()
+                        .map(|g| {
+                            let costs: Vec<f64> = (0..k)
+                                .map(|j| {
+                                    if i == j {
+                                        energy.selection_cost(i, j, 0, f64::INFINITY)
+                                    } else {
+                                        energy.selection_cost(i, j, 1, rates[i][j])
+                                    }
+                                })
+                                .collect();
+                            let inst = SelectionProblem::new(
+                                g.as_slice().to_vec(),
+                                costs,
+                                problem.threshold,
+                                problem.max_active,
+                            );
+                            des::solve(&inst).0
+                        })
+                        .collect()
+                })
+                .collect();
+            let e = super::evaluate_energy(state, problem, energy, &selections, &rates);
+            if e.total_j() < best {
+                best = e.total_j();
+            }
+        },
+    );
+    best
+}
+
+fn dfs(
+    depth: usize,
+    links: &[LinkId],
+    m: usize,
+    used: &mut Vec<bool>,
+    assignment: &mut Vec<usize>,
+    visit: &mut impl FnMut(&[usize]),
+) {
+    if depth == links.len() {
+        visit(assignment);
+        return;
+    }
+    for s in 0..m {
+        if !used[s] {
+            used[s] = true;
+            assignment[depth] = s;
+            dfs(depth + 1, links, m, used, assignment, visit);
+            used[s] = false;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bound_matches_remark3() {
+        // K=4, M=2048: paper says > 96.8%.
+        let p = optimality_probability_bound(4, 2048);
+        assert!(p > 0.968, "bound {p} should exceed 0.968");
+        assert!(p < 0.98);
+    }
+
+    #[test]
+    fn bound_edge_cases() {
+        assert_eq!(optimality_probability_bound(1, 16), 1.0);
+        assert_eq!(optimality_probability_bound(4, 4), 0.0); // 12 links, 4 carriers
+        let p = optimality_probability_bound(2, 2);
+        assert!((p - 0.5).abs() < 1e-12); // 2 links, 2 carriers: 2!/2² = 0.5
+    }
+
+    #[test]
+    fn bound_increases_with_m() {
+        let mut prev = 0.0;
+        for m in [8, 16, 64, 256, 1024] {
+            let p = optimality_probability_bound(3, m);
+            assert!(p >= prev);
+            prev = p;
+        }
+        assert!(prev > 0.97, "K=3 at M=1024 should be near 1, got {prev}");
+    }
+
+    #[test]
+    fn empirical_rate_at_least_bound_small_instance() {
+        // K=2 (2 links), M=4, a handful of trials. The empirical optimal
+        // rate must exceed the bound (the bound counts only event A, but
+        // BCD can also succeed outside A).
+        let r = validate(2, 4, 2, 30, 0xABCD);
+        assert!(
+            r.empirical_rate >= r.bound - 0.2,
+            "empirical {} way below bound {}",
+            r.empirical_rate,
+            r.bound
+        );
+        assert!(r.empirical_rate > 0.5);
+    }
+
+    #[test]
+    fn exhaustive_is_lower_bound_for_bcd() {
+        let cfg = ChannelConfig {
+            subcarriers: 4,
+            ..ChannelConfig::default()
+        };
+        let mut ch = ChannelModel::new(cfg.clone(), 2, 99);
+        let state = ch.realize();
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let gate = SyntheticGate::new(2, 1.0);
+        let gates: Vec<Vec<GateScores>> = (0..2)
+            .map(|_| (0..3).map(|_| gate.sample(&mut rng)).collect())
+            .collect();
+        let problem = RoundProblem {
+            gates,
+            threshold: 0.6,
+            max_active: 2,
+        };
+        let energy = EnergyModel::new(cfg, EnergyConfig::paper(2, 8192.0));
+        let opt = exhaustive_joint_optimum(&state, &problem, &energy);
+        let bcd = solve_round(&state, &problem, &energy, &JesaOptions::default());
+        assert!(bcd.energy.total_j() >= opt - 1e-9);
+    }
+}

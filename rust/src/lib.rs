@@ -1,0 +1,53 @@
+//! # DMoE — Distributed Mixture-of-Experts at the Wireless Edge
+//!
+//! Production-quality reproduction of *"Optimal Expert Selection for
+//! Distributed Mixture-of-Experts at the Wireless Edge"* (Qin, Wu, Du,
+//! Huang, 2025) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate provides:
+//!
+//! * [`channel`] — the wireless substrate: Rayleigh-fading OFDMA channel
+//!   simulator with per-subcarrier Shannon rates (paper eq. 1–2).
+//! * [`energy`] — communication (eq. 3) and computation (eq. 4) energy
+//!   models plus an energy ledger.
+//! * [`gating`] — gate scores, layer importance factors `γ^(l)` and the
+//!   QoS constraint C1.
+//! * [`selection`] — the paper's core contribution: the optimal **DES**
+//!   branch-and-bound expert-selection algorithm (Alg. 1) with the
+//!   LP-relaxation bounding criterion, together with every baseline the
+//!   evaluation compares against (Top-k, exhaustive oracle, greedy).
+//! * [`assignment`] — Kuhn–Munkres (Hungarian) solver for the optimal
+//!   subcarrier allocation subproblem P3(a).
+//! * [`jesa`] — the **JESA** block-coordinate-descent joint optimizer
+//!   (Alg. 2) with the Theorem-1 asymptotic-optimality machinery.
+//! * [`protocol`] / [`coordinator`] — the DMoE protocol (Fig. 1b) round
+//!   state machine and the edge-server coordinator that drives real model
+//!   inference through PJRT.
+//! * [`runtime`] — AOT bridge: loads `artifacts/*.hlo.txt` produced by
+//!   the build-time JAX/Pallas pipeline and executes them on the PJRT CPU
+//!   client. Python is never on the request path.
+//! * [`moe`] — model metadata and vertical partitioning (§III-A).
+//! * [`workload`] — synthetic multi-domain query generator and eval sets.
+//! * [`metrics`] — counters, histograms and report emission.
+//! * [`bench_harness`] — drivers that regenerate every table and figure
+//!   of the paper's evaluation section.
+//! * [`util`] — in-tree substrates (PRNG, JSON, CLI, bench harness,
+//!   thread pool) — the environment vendors no ecosystem crates.
+
+pub mod assignment;
+pub mod bench_harness;
+pub mod channel;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod gating;
+pub mod jesa;
+pub mod metrics;
+pub mod moe;
+pub mod protocol;
+pub mod runtime;
+pub mod selection;
+pub mod util;
+pub mod workload;
+
+pub use config::SystemConfig;

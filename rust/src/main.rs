@@ -1,0 +1,266 @@
+//! `dmoe` — the DMoE launcher and experiment CLI.
+//!
+//! ```text
+//! dmoe <subcommand> [--flags]
+//!
+//!   serve      serve every eval set with a policy, print metrics
+//!   info       artifact / model / config summary
+//!   table1     Table I  — DES accuracy + normalized energy
+//!   fig3       Fig. 3   — expertise diversity matrix
+//!   fig5       Fig. 5   — lowered-QoS window vs accuracy
+//!   fig6       Fig. 6   — selection patterns vs γ0
+//!   fig7       Fig. 7-9 — energy/token per layer (+ comm/comp splits)
+//!   fig10      Fig. 10  — accuracy-energy tradeoff frontier
+//!   theorem1   Theorem 1 — BCD optimality rate vs bound
+//!   all        run every experiment, save reports/
+//! ```
+
+use dmoe::bench_harness::{self as bh, FigureReport};
+use dmoe::coordinator::{DmoeServer, ServePolicy};
+use dmoe::util::cli::Args;
+use dmoe::workload::load_eval_sets;
+use dmoe::SystemConfig;
+
+fn main() {
+    let args = Args::from_env();
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
+    if let Err(e) = dispatch(&sub, &args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn base_config(args: &Args) -> SystemConfig {
+    let mut cfg = match args.get("config") {
+        Some(path) => SystemConfig::load(path).expect("config file must parse"),
+        None => SystemConfig::default(),
+    };
+    cfg.artifacts_dir = args.get_or("artifacts", &cfg.artifacts_dir);
+    if let Some(seed) = args.get("seed") {
+        cfg.workload.seed = seed.parse().expect("--seed expects an integer");
+    }
+    cfg
+}
+
+fn emit(report: &FigureReport, args: &Args) -> anyhow::Result<()> {
+    println!("{}", report.render());
+    if args.flag("save") || args.subcommand.as_deref() == Some("all") {
+        let dir = args.get_or("reports", "reports");
+        let path = report.save(&dir)?;
+        println!("saved {path}");
+    }
+    Ok(())
+}
+
+fn batches(args: &Args) -> Option<usize> {
+    args.get("batches")
+        .map(|s| s.parse().expect("--batches expects an integer"))
+}
+
+fn dispatch(sub: &str, args: &Args) -> anyhow::Result<()> {
+    match sub {
+        "help" | "--help" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        "info" => info(args),
+        "serve" => serve(args),
+        "table1" => {
+            let mut server = server(args)?;
+            let (report, _) = bh::table1::run(&mut server, batches(args))?;
+            emit(&report, args)
+        }
+        "fig3" => {
+            let mut server = server(args)?;
+            let report = bh::fig3::run(&mut server, batches(args))?;
+            emit(&report, args)
+        }
+        "fig5" => {
+            let mut server = server(args)?;
+            let base = args.get_f64("z", 0.5);
+            let low = args.get_f64("low", 0.1);
+            let report = bh::fig5::run(&mut server, base, low, batches(args))?;
+            emit(&report, args)
+        }
+        "fig6" => {
+            let mut cfg = SystemConfig::paper_energy();
+            cfg.workload.seed = base_config(args).workload.seed;
+            let gammas = [0.6, 0.8, 1.0];
+            let opts = bh::fig6::Fig6Options {
+                rounds: args.get_usize("rounds", 24),
+                ..Default::default()
+            };
+            let report = bh::fig6::run(&cfg, &gammas, &opts);
+            emit(&report, args)
+        }
+        "fig7" | "fig8" | "fig9" => {
+            let mut cfg = SystemConfig::paper_energy();
+            cfg.workload.seed = base_config(args).workload.seed;
+            let rounds = args.get_usize("rounds", 24);
+            let figs = bh::fig7_9::run(&cfg, rounds);
+            for f in &figs {
+                if sub == "fig7" || f.id == *sub {
+                    emit(f, args)?;
+                }
+            }
+            Ok(())
+        }
+        "fig10" => {
+            let mut server = server(args)?;
+            let opts = bh::fig10::Fig10Options {
+                max_batches: batches(args),
+                ..Default::default()
+            };
+            let (report, _) = bh::fig10::run(&mut server, &opts)?;
+            emit(&report, args)
+        }
+        "theorem1" => {
+            // Enumeration of the joint optimum is perm(M, K(K-1)); keep
+            // (K, M) combinations tractable: K=2 → 2 links (M² maps),
+            // K=3 → 6 links (only small M).
+            let k = args.get_usize("experts", 2);
+            let trials = args.get_usize("trials", 40);
+            let ms: Vec<usize> = match k {
+                2 => vec![2, 3, 4, 6, 8, 12, 16, 32, 64],
+                3 => vec![6, 7, 8, 9, 10],
+                _ => anyhow::bail!("theorem1 validation supports --experts 2 or 3"),
+            };
+            let report = bh::theorem1::run(k, &ms, 2, trials, args.get_u64("seed", 0x7EE0));
+            emit(&report, args)
+        }
+        "all" => {
+            let cfg_seed = base_config(args).workload.seed;
+            // Algorithm-level experiments (no artifacts needed).
+            let mut energy_cfg = SystemConfig::paper_energy();
+            energy_cfg.workload.seed = cfg_seed;
+            let opts = bh::fig6::Fig6Options {
+                rounds: args.get_usize("rounds", 24),
+                ..Default::default()
+            };
+            emit(&bh::fig6::run(&energy_cfg, &[0.6, 0.8, 1.0], &opts), args)?;
+            for f in bh::fig7_9::run(&energy_cfg, args.get_usize("rounds", 24)) {
+                emit(&f, args)?;
+            }
+            emit(
+                &bh::theorem1::run(2, &[2, 3, 4, 6, 8, 12, 16, 32, 64], 2, 40, 0x7EE0),
+                args,
+            )?;
+            // Model-level experiments (need artifacts).
+            let mut server = server(args)?;
+            let (t1, _) = bh::table1::run(&mut server, batches(args))?;
+            emit(&t1, args)?;
+            emit(&bh::fig3::run(&mut server, batches(args))?, args)?;
+            emit(&bh::fig5::run(&mut server, 0.5, 0.1, batches(args))?, args)?;
+            let (f10, _) = bh::fig10::run(
+                &mut server,
+                &bh::fig10::Fig10Options {
+                    max_batches: batches(args),
+                    ..Default::default()
+                },
+            )?;
+            emit(&f10, args)
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'\n{HELP}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn server(args: &Args) -> anyhow::Result<DmoeServer> {
+    let cfg = base_config(args);
+    DmoeServer::new(&cfg)
+}
+
+fn info(args: &Args) -> anyhow::Result<()> {
+    let cfg = base_config(args);
+    println!("config:\n{}", cfg.to_json().to_string_pretty());
+    match dmoe::moe::Manifest::load(&cfg.artifacts_dir) {
+        Ok(m) => {
+            println!(
+                "\nartifacts: {} — L={} K={} d={} vocab={} seq_len={}",
+                cfg.artifacts_dir,
+                m.model.layers,
+                m.model.experts,
+                m.model.d_model,
+                m.model.vocab,
+                m.model.seq_len
+            );
+            println!(
+                "eval sets: {:?}",
+                m.eval_sets.iter().map(|(n, _)| n).collect::<Vec<_>>()
+            );
+            for j in 0..m.model.experts {
+                let a = m.assembly(j);
+                println!(
+                    "expert {j}: {} blocks (attn×{} + gate×{} + ffn×{} + embed + head)",
+                    a.block_count(),
+                    a.attn.len(),
+                    a.gate.len(),
+                    a.ffn.len()
+                );
+            }
+        }
+        Err(e) => println!("\nno artifacts loaded: {e} (run `make artifacts`)"),
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> anyhow::Result<()> {
+    let mut server = server(args)?;
+    let layers = server.layers();
+    let policy = match args.get_or("policy", "jesa").as_str() {
+        "jesa" => ServePolicy::jesa(args.get_f64("gamma0", 0.8), args.get_usize("d", 2), layers),
+        "topk" => ServePolicy::topk(args.get_usize("k", 2), layers),
+        "homogeneous" => {
+            ServePolicy::homogeneous(args.get_f64("z", 0.5), args.get_usize("d", 2), layers)
+        }
+        other => anyhow::bail!("unknown --policy {other} (jesa|topk|homogeneous)"),
+    };
+    println!(
+        "serving with {} on platform {}\n",
+        policy.label,
+        server.runtime().platform()
+    );
+
+    let eval_sets = load_eval_sets(&server.runtime().manifest)?;
+    let mut table = dmoe::util::table::Table::new(&[
+        "eval set", "acc", "energy J", "comm J", "comp J", "radio s", "sim lat s", "wall ms",
+        "tok/s",
+    ]);
+    for es in &eval_sets {
+        let r = server.serve_eval_set(es, &policy, batches(args))?;
+        let e = r.ledger.total();
+        table.row(vec![
+            es.name.clone(),
+            format!("{:.3}", r.accuracy()),
+            format!("{:.4}", e.total_j()),
+            format!("{:.4}", e.comm_j),
+            format!("{:.4}", e.comp_j),
+            format!("{:.2}", r.radio_s),
+            format!("{:.2}", r.sim_latency_s),
+            format!("{:.1}", r.wall_s * 1e3),
+            format!("{:.0}", r.total as f64 / r.wall_s.max(1e-9)),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+const HELP: &str = "dmoe — Distributed Mixture-of-Experts at the wireless edge
+
+USAGE: dmoe <subcommand> [--flags]
+
+  serve      serve every eval set with a policy (--policy jesa|topk|homogeneous)
+  info       artifact / model / config summary
+  table1     Table I  — DES accuracy + normalized energy
+  fig3       Fig. 3   — expertise diversity matrix
+  fig5       Fig. 5   — lowered-QoS window vs accuracy
+  fig6       Fig. 6   — selection patterns vs γ0
+  fig7/8/9   Fig. 7-9 — energy/token per layer
+  fig10      Fig. 10  — accuracy-energy tradeoff frontier
+  theorem1   Theorem 1 — BCD optimality rate vs bound
+  all        run everything and save reports/
+
+Flags: --artifacts DIR, --config FILE, --reports DIR, --save,
+       --batches N, --rounds N, --seed N, --gamma0 X, --z X, --policy P";

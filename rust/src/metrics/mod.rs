@@ -1,0 +1,251 @@
+//! Serving metrics: counters, latency histogram, selection-pattern
+//! accumulators (Fig. 6), and JSON/CSV report emission.
+
+use crate::util::json::Json;
+use crate::util::stats;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Accumulates serving-side observability for one run.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    counters: BTreeMap<String, u64>,
+    /// Latency samples per stage, seconds.
+    latencies: BTreeMap<String, Vec<f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn observe_s(&mut self, stage: &str, seconds: f64) {
+        self.latencies
+            .entry(stage.to_string())
+            .or_default()
+            .push(seconds);
+    }
+
+    /// Time a closure and record it under `stage`.
+    pub fn time<T>(&mut self, stage: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.observe_s(stage, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn latency_mean_s(&self, stage: &str) -> f64 {
+        self.latencies
+            .get(stage)
+            .map(|xs| stats::mean(xs))
+            .unwrap_or(0.0)
+    }
+
+    pub fn latency_p95_s(&self, stage: &str) -> f64 {
+        self.latencies
+            .get(stage)
+            .map(|xs| stats::percentile(xs, 95.0))
+            .unwrap_or(0.0)
+    }
+
+    pub fn merge(&mut self, other: &Metrics) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, xs) in &other.latencies {
+            self.latencies
+                .entry(k.clone())
+                .or_default()
+                .extend_from_slice(xs);
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let counters = Json::Obj(
+            self.counters
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                .collect(),
+        );
+        let latencies = Json::Obj(
+            self.latencies
+                .iter()
+                .map(|(k, xs)| {
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("count", Json::Num(xs.len() as f64)),
+                            ("mean_s", Json::Num(stats::mean(xs))),
+                            ("p50_s", Json::Num(stats::percentile(xs, 50.0))),
+                            ("p95_s", Json::Num(stats::percentile(xs, 95.0))),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![("counters", counters), ("latencies", latencies)])
+    }
+}
+
+/// Per-(layer, expert) selection frequency — the Fig. 6 heat map.
+#[derive(Debug, Clone)]
+pub struct SelectionPattern {
+    layers: usize,
+    experts: usize,
+    counts: Vec<u64>,
+    tokens: Vec<u64>,
+}
+
+impl SelectionPattern {
+    pub fn new(layers: usize, experts: usize) -> Self {
+        Self {
+            layers,
+            experts,
+            counts: vec![0; layers * experts],
+            tokens: vec![0; layers],
+        }
+    }
+
+    pub fn record(&mut self, layer: usize, selected: &[usize]) {
+        self.tokens[layer] += 1;
+        for &j in selected {
+            self.counts[layer * self.experts + j] += 1;
+        }
+    }
+
+    /// Selection probability of expert `j` at `layer`.
+    pub fn probability(&self, layer: usize, expert: usize) -> f64 {
+        let t = self.tokens[layer];
+        if t == 0 {
+            0.0
+        } else {
+            self.counts[layer * self.experts + expert] as f64 / t as f64
+        }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    pub fn experts(&self) -> usize {
+        self.experts
+    }
+
+    pub fn merge(&mut self, other: &SelectionPattern) {
+        assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        for (a, b) in self.tokens.iter_mut().zip(other.tokens.iter()) {
+            *a += b;
+        }
+    }
+
+    /// ASCII heat map (deeper shade = higher probability), experts as
+    /// rows, layers as columns — the Fig. 6 rendering.
+    pub fn render(&self) -> String {
+        const SHADES: [char; 5] = [' ', '░', '▒', '▓', '█'];
+        let mut out = String::new();
+        out.push_str("expert \\ layer → selection probability\n");
+        for j in 0..self.experts {
+            out.push_str(&format!("e{j} |"));
+            for l in 0..self.layers {
+                let p = self.probability(l, j);
+                let idx = ((p * (SHADES.len() - 1) as f64).round() as usize)
+                    .min(SHADES.len() - 1);
+                out.push(SHADES[idx]);
+                out.push(SHADES[idx]);
+            }
+            out.push_str(&format!("|  mean {:.2}\n", self.mean_probability(j)));
+        }
+        out
+    }
+
+    fn mean_probability(&self, expert: usize) -> f64 {
+        (0..self.layers)
+            .map(|l| self.probability(l, expert))
+            .sum::<f64>()
+            / self.layers as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut m = Metrics::new();
+        m.inc("ffn_exec", 3);
+        m.inc("ffn_exec", 2);
+        assert_eq!(m.counter("ffn_exec"), 5);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn latency_stats() {
+        let mut m = Metrics::new();
+        for x in [0.1, 0.2, 0.3] {
+            m.observe_s("round", x);
+        }
+        assert!((m.latency_mean_s("round") - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Metrics::new();
+        a.inc("x", 1);
+        a.observe_s("s", 1.0);
+        let mut b = Metrics::new();
+        b.inc("x", 2);
+        b.observe_s("s", 3.0);
+        a.merge(&b);
+        assert_eq!(a.counter("x"), 3);
+        assert!((a.latency_mean_s("s") - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_report_parses() {
+        let mut m = Metrics::new();
+        m.inc("tokens", 7);
+        m.observe_s("round", 0.5);
+        let j = m.to_json();
+        assert_eq!(j.get("counters").get("tokens").as_f64(), Some(7.0));
+        assert_eq!(
+            j.get("latencies").get("round").get("count").as_f64(),
+            Some(1.0)
+        );
+    }
+
+    #[test]
+    fn selection_pattern_probabilities() {
+        let mut p = SelectionPattern::new(2, 3);
+        p.record(0, &[0, 1]);
+        p.record(0, &[0]);
+        p.record(1, &[2]);
+        assert!((p.probability(0, 0) - 1.0).abs() < 1e-12);
+        assert!((p.probability(0, 1) - 0.5).abs() < 1e-12);
+        assert_eq!(p.probability(0, 2), 0.0);
+        assert_eq!(p.probability(1, 2), 1.0);
+        let art = p.render();
+        assert!(art.contains("e0"));
+    }
+
+    #[test]
+    fn pattern_merge() {
+        let mut a = SelectionPattern::new(1, 2);
+        a.record(0, &[0]);
+        let mut b = SelectionPattern::new(1, 2);
+        b.record(0, &[1]);
+        a.merge(&b);
+        assert!((a.probability(0, 0) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,303 @@
+//! Model metadata, the artifact manifest, and vertical partitioning
+//! (paper §III-A).
+//!
+//! `make artifacts` trains the tiny MoE and lowers every block to HLO
+//! text; `manifest.json` is the contract between that build-time Python
+//! step and this runtime. [`Manifest`] parses and validates it;
+//! [`ExpertAssembly`] describes which blocks each edge node downloads to
+//! assemble its expert (eq. 6: all attention blocks + its own FFN
+//! column + the gates).
+
+use crate::util::json::Json;
+
+/// Errors loading/validating the artifact manifest.
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("cannot read {0}: {1}")]
+    Io(String, #[source] std::io::Error),
+    #[error("manifest parse error: {0}")]
+    Parse(String),
+    #[error("manifest invalid: {0}")]
+    Invalid(String),
+}
+
+/// Model hyper-parameters as exported.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub ffn: usize,
+    pub experts: usize,
+    pub layers: usize,
+    pub heads: usize,
+    /// Fixed token-block length the HLO blocks were specialised for.
+    pub seq_len: usize,
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: String,
+    pub model: ModelMeta,
+    pub embed: String,
+    pub head: String,
+    /// `attn[l]`, `gate[l]` — per-layer block files.
+    pub attn: Vec<String>,
+    pub gate: Vec<String>,
+    /// Optional fused attention+gate blocks (§Perf L2): one HLO emitting
+    /// `(T, d+K)` = [post-attention hidden | gate scores]. Empty when the
+    /// artifacts predate the optimisation; the runtime then falls back to
+    /// the separate blocks.
+    pub attn_gate: Vec<String>,
+    /// `ffn[l][j]` — per-layer, per-expert FFN block files.
+    pub ffn: Vec<Vec<String>>,
+    /// Eval set name → JSON file.
+    pub eval_sets: Vec<(String, String)>,
+    /// Parity fixture file (end-to-end expected logits).
+    pub parity: Option<String>,
+    /// Per-domain oracle (Markov max-prob) accuracy — the model ceiling.
+    pub oracle_accuracy: Vec<f64>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json` and validate the block grid.
+    pub fn load(dir: &str) -> Result<Self, ManifestError> {
+        let path = format!("{dir}/manifest.json");
+        let text =
+            std::fs::read_to_string(&path).map_err(|e| ManifestError::Io(path.clone(), e))?;
+        let v = Json::parse(&text).map_err(|e| ManifestError::Parse(e.to_string()))?;
+        Self::from_json(dir, &v)
+    }
+
+    pub fn from_json(dir: &str, v: &Json) -> Result<Self, ManifestError> {
+        let inv = |m: String| ManifestError::Invalid(m);
+        let m = v.get("model");
+        let get = |key: &str| -> Result<usize, ManifestError> {
+            m.get(key)
+                .as_usize()
+                .ok_or_else(|| inv(format!("model.{key} missing or not an integer")))
+        };
+        let model = ModelMeta {
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            ffn: get("ffn")?,
+            experts: get("experts")?,
+            layers: get("layers")?,
+            heads: get("heads")?,
+            seq_len: get("seq_len")?,
+        };
+        let blocks = v.get("blocks");
+        let s = |key: &str| -> Result<String, ManifestError> {
+            blocks
+                .get(key)
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| inv(format!("blocks.{key} missing")))
+        };
+        let strv = |key: &str| -> Result<Vec<String>, ManifestError> {
+            blocks
+                .get(key)
+                .as_arr()
+                .ok_or_else(|| inv(format!("blocks.{key} missing")))?
+                .iter()
+                .map(|x| {
+                    x.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| inv(format!("blocks.{key} has non-string entry")))
+                })
+                .collect()
+        };
+        let ffn: Vec<Vec<String>> = blocks
+            .get("ffn")
+            .as_arr()
+            .ok_or_else(|| inv("blocks.ffn missing".into()))?
+            .iter()
+            .map(|row| {
+                row.as_arr()
+                    .ok_or_else(|| inv("blocks.ffn row not an array".into()))?
+                    .iter()
+                    .map(|x| {
+                        x.as_str()
+                            .map(str::to_string)
+                            .ok_or_else(|| inv("blocks.ffn non-string entry".into()))
+                    })
+                    .collect()
+            })
+            .collect::<Result<_, _>>()?;
+
+        let eval_sets = v
+            .get("eval_sets")
+            .as_obj()
+            .map(|o| {
+                o.iter()
+                    .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                    .collect()
+            })
+            .unwrap_or_default();
+        let oracle_accuracy = v
+            .get("oracle_accuracy")
+            .as_obj()
+            .map(|o| o.values().filter_map(|x| x.as_f64()).collect())
+            .unwrap_or_default();
+
+        let attn_gate = if blocks.get("attn_gate") == &Json::Null {
+            Vec::new()
+        } else {
+            strv("attn_gate")?
+        };
+        let manifest = Manifest {
+            dir: dir.to_string(),
+            model,
+            embed: s("embed")?,
+            head: s("head")?,
+            attn: strv("attn")?,
+            gate: strv("gate")?,
+            attn_gate,
+            ffn,
+            eval_sets,
+            parity: v.get("parity").as_str().map(str::to_string),
+            oracle_accuracy,
+        };
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
+    fn validate(&self) -> Result<(), ManifestError> {
+        let l = self.model.layers;
+        let k = self.model.experts;
+        if self.attn.len() != l {
+            return Err(ManifestError::Invalid(format!(
+                "expected {l} attn blocks, got {}",
+                self.attn.len()
+            )));
+        }
+        if self.gate.len() != l {
+            return Err(ManifestError::Invalid(format!(
+                "expected {l} gate blocks, got {}",
+                self.gate.len()
+            )));
+        }
+        if !self.attn_gate.is_empty() && self.attn_gate.len() != l {
+            return Err(ManifestError::Invalid(format!(
+                "expected {l} fused attn_gate blocks (or none), got {}",
+                self.attn_gate.len()
+            )));
+        }
+        if self.ffn.len() != l || self.ffn.iter().any(|row| row.len() != k) {
+            return Err(ManifestError::Invalid(format!(
+                "expected {l}x{k} ffn grid, got {}x{:?}",
+                self.ffn.len(),
+                self.ffn.first().map(|r| r.len())
+            )));
+        }
+        if self.model.d_model == 0 || self.model.seq_len == 0 {
+            return Err(ManifestError::Invalid("zero model dims".into()));
+        }
+        Ok(())
+    }
+
+    /// Absolute path of a block file.
+    pub fn path(&self, file: &str) -> String {
+        format!("{}/{}", self.dir, file)
+    }
+
+    /// The vertical partition (§III-A): which blocks expert node `i`
+    /// downloads at system initialization.
+    pub fn assembly(&self, expert: usize) -> ExpertAssembly {
+        assert!(expert < self.model.experts);
+        ExpertAssembly {
+            expert,
+            attn: self.attn.clone(),
+            gate: self.gate.clone(),
+            ffn: (0..self.model.layers)
+                .map(|l| self.ffn[l][expert].clone())
+                .collect(),
+            embed: self.embed.clone(),
+            head: self.head.clone(),
+        }
+    }
+}
+
+/// The block set an edge node holds after initialization (eq. 6).
+///
+/// Every node gets the shared attention stack, the gates, the embedding
+/// and head (queries originate and aggregate at the node), plus exactly
+/// its own FFN column — the paper's "whole set of attention and FFN
+/// blocks to an edge node to form an expert" (Remark 1).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExpertAssembly {
+    pub expert: usize,
+    pub embed: String,
+    pub head: String,
+    pub attn: Vec<String>,
+    pub gate: Vec<String>,
+    /// `ffn[l]` — this expert's FFN block at each layer.
+    pub ffn: Vec<String>,
+}
+
+impl ExpertAssembly {
+    /// Total number of HLO blocks this node downloads.
+    pub fn block_count(&self) -> usize {
+        2 + self.attn.len() + self.gate.len() + self.ffn.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> String {
+        r#"{
+          "format": "dmoe-artifacts-v1",
+          "model": {"vocab":256,"d_model":64,"ffn":128,"experts":2,"layers":2,"heads":4,"seq_len":16},
+          "blocks": {
+            "embed":"embed.hlo.txt","head":"head.hlo.txt",
+            "attn":["attn_l0.hlo.txt","attn_l1.hlo.txt"],
+            "gate":["gate_l0.hlo.txt","gate_l1.hlo.txt"],
+            "ffn":[["ffn_l0_e0.hlo.txt","ffn_l0_e1.hlo.txt"],["ffn_l1_e0.hlo.txt","ffn_l1_e1.hlo.txt"]]
+          },
+          "eval_sets": {"mmlu":"eval_mmlu.json"},
+          "parity": "parity.json",
+          "oracle_accuracy": {"0": 0.55, "1": 0.6}
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_valid_manifest() {
+        let v = Json::parse(&sample_json()).unwrap();
+        let m = Manifest::from_json("arts", &v).unwrap();
+        assert_eq!(m.model.experts, 2);
+        assert_eq!(m.ffn[1][0], "ffn_l1_e0.hlo.txt");
+        assert_eq!(m.eval_sets.len(), 1);
+        assert_eq!(m.path("x.hlo.txt"), "arts/x.hlo.txt");
+        assert_eq!(m.oracle_accuracy, vec![0.55, 0.6]);
+    }
+
+    #[test]
+    fn rejects_wrong_grid() {
+        let bad = sample_json().replace("\"attn_l1.hlo.txt\"], ", "], ").replace(
+            "\"attn\":[\"attn_l0.hlo.txt\",\"attn_l1.hlo.txt\"]",
+            "\"attn\":[\"attn_l0.hlo.txt\"]",
+        );
+        let v = Json::parse(&bad).unwrap();
+        assert!(Manifest::from_json("arts", &v).is_err());
+    }
+
+    #[test]
+    fn assembly_matches_eq6() {
+        let v = Json::parse(&sample_json()).unwrap();
+        let m = Manifest::from_json("arts", &v).unwrap();
+        let a = m.assembly(1);
+        assert_eq!(a.expert, 1);
+        assert_eq!(a.ffn, vec!["ffn_l0_e1.hlo.txt", "ffn_l1_e1.hlo.txt"]);
+        assert_eq!(a.attn.len(), 2);
+        assert_eq!(a.block_count(), 2 + 2 + 2 + 2);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        let v = Json::parse(r#"{"model": {"vocab": 1}}"#).unwrap();
+        assert!(Manifest::from_json("arts", &v).is_err());
+    }
+}

@@ -1,0 +1,222 @@
+//! The DMoE protocol (paper Fig. 1b): round structure, routing tables and
+//! the radio-time model.
+//!
+//! One query pass = `L` rounds, each with the six protocol steps
+//! (§III-C). This module holds the *pure* round logic — everything that
+//! can be tested without PJRT:
+//!
+//! * [`RoutingTable`] — derived from the JESA selections: which (source,
+//!   token) pairs each destination expert processes this round (the
+//!   forward-transmission manifest and the FFN batcher's input).
+//! * [`RadioTiming`] — simulated airtime of the round from the paper's
+//!   rate model: forward and backward hidden-state transfers overlap
+//!   across links (OFDMA), so the round's radio time is the slowest
+//!   link's time, each direction.
+
+pub mod sim;
+
+pub use sim::{simulate_round, ComputeModel, RoundTimeline};
+
+use crate::channel::{ChannelState, LinkId};
+use crate::jesa::RoundSolution;
+use crate::selection::Selection;
+
+/// A routed token: source expert and token index within that source.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RoutedToken {
+    pub source: usize,
+    pub token: usize,
+}
+
+/// Which tokens each destination expert processes in a round.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoutingTable {
+    per_expert: Vec<Vec<RoutedToken>>,
+}
+
+impl RoutingTable {
+    /// Build from per-source selections: token `n` of source `i` is
+    /// routed to every expert in `selections[i][n].selected`.
+    pub fn from_selections(k: usize, selections: &[Vec<Selection>]) -> Self {
+        let mut per_expert = vec![Vec::new(); k];
+        for (i, row) in selections.iter().enumerate() {
+            for (n, sel) in row.iter().enumerate() {
+                for &j in &sel.selected {
+                    per_expert[j].push(RoutedToken { source: i, token: n });
+                }
+            }
+        }
+        Self { per_expert }
+    }
+
+    /// Tokens destined for expert `j`.
+    pub fn tokens_for(&self, j: usize) -> &[RoutedToken] {
+        &self.per_expert[j]
+    }
+
+    pub fn experts(&self) -> usize {
+        self.per_expert.len()
+    }
+
+    /// Total (token, expert) routing pairs — FFN work items this round.
+    pub fn total_work(&self) -> usize {
+        self.per_expert.iter().map(|v| v.len()).sum()
+    }
+
+    /// Number of *remote* work items (source ≠ destination) — these are
+    /// the transmissions the radio carries.
+    pub fn remote_work(&self) -> usize {
+        self.per_expert
+            .iter()
+            .enumerate()
+            .map(|(j, v)| v.iter().filter(|t| t.source != j).count())
+            .sum()
+    }
+}
+
+/// Simulated radio time of one round (paper's rate model, eq. 1–3).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RadioTiming {
+    /// Slowest-link forward transfer time (s).
+    pub forward_s: f64,
+    /// Slowest-link backward transfer time (s) — same payloads return.
+    pub backward_s: f64,
+}
+
+impl RadioTiming {
+    pub fn total_s(&self) -> f64 {
+        self.forward_s + self.backward_s
+    }
+
+    /// Compute from a round solution: per-link payload / allocated rate;
+    /// links transmit concurrently (exclusive subcarriers), so the round
+    /// waits for the slowest link, each direction.
+    pub fn from_solution(
+        state: &ChannelState,
+        solution: &RoundSolution,
+        s0_bytes: f64,
+    ) -> RadioTiming {
+        let k = state.experts();
+        let payloads = crate::jesa::payload_matrix(k, &solution.selections, s0_bytes);
+        let mut slowest = 0.0f64;
+        for l in LinkId::all(k) {
+            let s = payloads[l.from][l.to];
+            if s > 0.0 {
+                if let Some(m) = solution.allocation.get(l.from, l.to) {
+                    let r = state.rate(l.from, l.to, m);
+                    if r > 0.0 && r.is_finite() {
+                        slowest = slowest.max(s * 8.0 / r);
+                    }
+                } else {
+                    // LowerBound mode: no explicit allocation; use the
+                    // best subcarrier (what LB assumes).
+                    let (_, r) = state.best_subcarrier(l.from, l.to);
+                    slowest = slowest.max(s * 8.0 / r);
+                }
+            }
+        }
+        RadioTiming {
+            forward_s: slowest,
+            backward_s: slowest,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::SelectionProblem;
+
+    fn sel(problem: &SelectionProblem, idx: Vec<usize>) -> Selection {
+        Selection::from_indices(problem, idx, false)
+    }
+
+    #[test]
+    fn routing_table_fans_out() {
+        let p = SelectionProblem::new(vec![0.5, 0.5], vec![1.0, 1.0], 0.0, 2);
+        // Source 0, token 0 -> {0,1}; token 1 -> {1}. Source 1, token 0 -> {0}.
+        let selections = vec![
+            vec![sel(&p, vec![0, 1]), sel(&p, vec![1])],
+            vec![sel(&p, vec![0])],
+        ];
+        let rt = RoutingTable::from_selections(2, &selections);
+        assert_eq!(rt.tokens_for(0).len(), 2); // (0,0) in-situ + (1,0)
+        assert_eq!(rt.tokens_for(1).len(), 2); // (0,0) + (0,1)
+        assert_eq!(rt.total_work(), 4);
+        assert_eq!(rt.remote_work(), 3);
+        assert!(rt
+            .tokens_for(1)
+            .contains(&RoutedToken { source: 0, token: 1 }));
+    }
+
+    #[test]
+    fn empty_selections_empty_table() {
+        let rt = RoutingTable::from_selections(3, &[vec![], vec![], vec![]]);
+        assert_eq!(rt.total_work(), 0);
+        assert_eq!(rt.remote_work(), 0);
+    }
+
+    #[test]
+    fn radio_timing_is_slowest_link() {
+        use crate::channel::ChannelState;
+        use crate::config::{ChannelConfig, EnergyConfig};
+        use crate::energy::EnergyModel;
+        use crate::gating::GateScores;
+        use crate::jesa::{solve_round, JesaOptions, RoundProblem};
+
+        // Deterministic rates: link (0,1) much slower than (1,0).
+        let state = ChannelState::from_rates(2, 4, |i, _, m| {
+            if i == 0 {
+                1e5 + m as f64
+            } else {
+                1e7 + m as f64
+            }
+        });
+        let gates = vec![
+            vec![GateScores::new(vec![0.1, 0.9])], // source 0 wants expert 1
+            vec![GateScores::new(vec![0.9, 0.1])], // source 1 wants expert 0
+        ];
+        let problem = RoundProblem {
+            gates,
+            threshold: 0.8,
+            max_active: 1,
+        };
+        let energy = EnergyModel::new(
+            ChannelConfig::default(),
+            EnergyConfig::paper(2, 1000.0),
+        );
+        let solution = solve_round(&state, &problem, &energy, &JesaOptions::default());
+        let timing = RadioTiming::from_solution(&state, &solution, 1000.0);
+        // Whatever the allocation, the slow (0,1) link dominates if used.
+        if !solution.selections[0][0].selected.contains(&0) {
+            let m = solution.allocation.get(0, 1).unwrap();
+            let expect = 8000.0 / state.rate(0, 1, m);
+            assert!((timing.forward_s - expect).abs() < 1e-12);
+        }
+        assert_eq!(timing.forward_s, timing.backward_s);
+        assert!((timing.total_s() - 2.0 * timing.forward_s).abs() < 1e-15);
+    }
+
+    #[test]
+    fn in_situ_rounds_cost_no_airtime() {
+        use crate::channel::ChannelState;
+        use crate::assignment::SubcarrierAllocation;
+        use crate::energy::EnergyBreakdown;
+        use crate::jesa::RoundSolution;
+        use crate::selection::des::DesStats;
+
+        let p = SelectionProblem::new(vec![1.0], vec![0.1], 0.5, 1);
+        let solution = RoundSolution {
+            selections: vec![vec![sel(&p, vec![0])]],
+            allocation: SubcarrierAllocation::empty(1),
+            energy: EnergyBreakdown::default(),
+            iterations: 1,
+            converged: true,
+            des_stats: DesStats::default(),
+            fallbacks: 0,
+        };
+        let state = ChannelState::from_rates(1, 2, |_, _, _| 1e6);
+        let t = RadioTiming::from_solution(&state, &solution, 1000.0);
+        assert_eq!(t.total_s(), 0.0);
+    }
+}

@@ -1,0 +1,182 @@
+//! Row-major f32 matrix — the activation container on the request path.
+//!
+//! Deliberately minimal: the heavy math lives inside the compiled HLO;
+//! the coordinator only slices token rows, scales by gate weights and
+//! sums (the eq.-8 aggregation), so that is all this type provides.
+
+use anyhow::Result;
+
+/// Row-major `rows × cols` f32 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "data length mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy row `src_r` of `src` into row `dst_r` of `self`.
+    pub fn copy_row_from(&mut self, dst_r: usize, src: &Matrix, src_r: usize) {
+        assert_eq!(self.cols, src.cols);
+        self.row_mut(dst_r).copy_from_slice(src.row(src_r));
+    }
+
+    /// `self[dst_r] += weight * src[src_r]` — the aggregation kernel of
+    /// eq. (8), executed at the source expert.
+    pub fn add_scaled_row(&mut self, dst_r: usize, src: &Matrix, src_r: usize, weight: f32) {
+        assert_eq!(self.cols, src.cols);
+        let dst = &mut self.data[dst_r * self.cols..(dst_r + 1) * self.cols];
+        let s = src.row(src_r);
+        for (d, x) in dst.iter_mut().zip(s.iter()) {
+            *d += weight * x;
+        }
+    }
+
+    /// Pad (with zero rows) or truncate to exactly `rows` rows.
+    pub fn padded_rows(&self, rows: usize) -> Matrix {
+        let mut out = Matrix::zeros(rows, self.cols);
+        let n = self.rows.min(rows);
+        out.data[..n * self.cols].copy_from_slice(&self.data[..n * self.cols]);
+        out
+    }
+
+    /// Argmax per row — next-token prediction from logits.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        (0..self.rows)
+            .map(|r| {
+                let row = self.row(r);
+                let mut best = 0usize;
+                for (c, &x) in row.iter().enumerate() {
+                    if x > row[best] {
+                        best = c;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+
+    /// Maximum absolute elementwise difference (parity tests).
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    // -- xla bridge ----------------------------------------------------------
+
+    /// Convert to an XLA literal of shape `(rows, cols)`.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(self.data.as_slice())
+            .reshape(&[self.rows as i64, self.cols as i64])?)
+    }
+
+    /// Read back from an XLA literal, checking the element count.
+    pub fn from_literal(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Matrix> {
+        let data = lit.to_vec::<f32>()?;
+        anyhow::ensure!(
+            data.len() == rows * cols,
+            "literal has {} elements, expected {rows}x{cols}",
+            data.len()
+        );
+        Ok(Matrix { rows, cols, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_row_major() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.get(0, 2), 3.0);
+        assert_eq!(m.get(1, 0), 4.0);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn add_scaled_row_is_axpy() {
+        let src = Matrix::from_vec(1, 3, vec![1., 2., 3.]);
+        let mut dst = Matrix::from_vec(2, 3, vec![0.; 6]);
+        dst.add_scaled_row(1, &src, 0, 0.5);
+        assert_eq!(dst.row(1), &[0.5, 1.0, 1.5]);
+        assert_eq!(dst.row(0), &[0., 0., 0.]);
+    }
+
+    #[test]
+    fn padding_and_truncation() {
+        let m = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let p = m.padded_rows(4);
+        assert_eq!(p.rows(), 4);
+        assert_eq!(p.row(1), &[3., 4.]);
+        assert_eq!(p.row(3), &[0., 0.]);
+        let t = m.padded_rows(1);
+        assert_eq!(t.rows(), 1);
+        assert_eq!(t.row(0), &[1., 2.]);
+    }
+
+    #[test]
+    fn argmax_rows_finds_peaks() {
+        let m = Matrix::from_vec(2, 3, vec![0.1, 0.9, 0.5, 7.0, -1.0, 2.0]);
+        assert_eq!(m.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn max_abs_diff_symmetric() {
+        let a = Matrix::from_vec(1, 3, vec![1., 2., 3.]);
+        let b = Matrix::from_vec(1, 3, vec![1.5, 2., 2.]);
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+        assert_eq!(b.max_abs_diff(&a), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "data length mismatch")]
+    fn from_vec_checks_len() {
+        Matrix::from_vec(2, 2, vec![1.0]);
+    }
+}

@@ -1,0 +1,201 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on
+//! the CPU PJRT client. This is the only place the `xla` crate is
+//! touched; Python never runs on the request path.
+//!
+//! Design notes:
+//!
+//! * **HLO text interchange** — `HloModuleProto::from_text_file` parses
+//!   and re-ids the module; serialized protos from jax ≥ 0.5 are rejected
+//!   by xla_extension 0.5.1 (see /opt/xla-example/README.md).
+//! * **Executable cache** — every block is compiled once at startup
+//!   ([`ModelRuntime::load`]) and reused for every request; compilation
+//!   is the expensive step (~ms–s), execution is µs.
+//! * All blocks are shape-specialised to `seq_len` token rows; shorter
+//!   batches are zero-padded by [`Matrix::padded_rows`].
+
+mod matrix;
+
+pub use matrix::Matrix;
+
+use crate::moe::Manifest;
+use anyhow::{Context, Result};
+
+/// One compiled HLO block.
+pub struct Block {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Block {
+    /// Execute with the given inputs; returns the single tuple element
+    /// (all blocks are exported with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing block {}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        lit.to_tuple1()
+            .with_context(|| format!("unwrapping tuple of {}", self.name))
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// The full compiled model: every protocol block, ready to execute.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    embed: Block,
+    head: Block,
+    attn: Vec<Block>,
+    gate: Vec<Block>,
+    /// Fused attention+gate blocks (§Perf L2); empty with old artifacts.
+    attn_gate: Vec<Block>,
+    /// `ffn[l][j]`.
+    ffn: Vec<Vec<Block>>,
+}
+
+impl ModelRuntime {
+    /// Load and compile every block from an artifact directory.
+    pub fn load(artifacts_dir: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)
+            .with_context(|| format!("loading manifest from {artifacts_dir}"))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+
+        let compile = |file: &str| -> Result<Block> {
+            let path = manifest.path(file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {path}"))?;
+            Ok(Block {
+                name: file.to_string(),
+                exe,
+            })
+        };
+
+        let embed = compile(&manifest.embed)?;
+        let head = compile(&manifest.head)?;
+        let attn = manifest.attn.iter().map(|f| compile(f)).collect::<Result<_>>()?;
+        let gate = manifest.gate.iter().map(|f| compile(f)).collect::<Result<_>>()?;
+        let attn_gate = manifest
+            .attn_gate
+            .iter()
+            .map(|f| compile(f))
+            .collect::<Result<_>>()?;
+        let ffn = manifest
+            .ffn
+            .iter()
+            .map(|row| row.iter().map(|f| compile(f)).collect::<Result<_>>())
+            .collect::<Result<_>>()?;
+
+        Ok(Self {
+            manifest,
+            client,
+            embed,
+            head,
+            attn,
+            gate,
+            attn_gate,
+            ffn,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.manifest.model.d_model
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.manifest.model.seq_len
+    }
+
+    /// Embed a token block: `tokens.len()` must be ≤ `seq_len`; shorter
+    /// inputs are padded with token 0 and the padding rows remain in the
+    /// output (callers track the true length).
+    pub fn embed(&self, tokens: &[i32]) -> Result<Matrix> {
+        let t = self.seq_len();
+        anyhow::ensure!(
+            tokens.len() <= t,
+            "token block of {} exceeds seq_len {t}",
+            tokens.len()
+        );
+        let mut padded = tokens.to_vec();
+        padded.resize(t, 0);
+        let lit = xla::Literal::vec1(padded.as_slice());
+        let out = self.embed.run(&[lit])?;
+        Matrix::from_literal(&out, t, self.d_model())
+    }
+
+    /// Residual attention block at layer `l`: `(T, d) -> (T, d)`.
+    pub fn attn(&self, layer: usize, h: &Matrix) -> Result<Matrix> {
+        let out = self.attn[layer].run(&[h.to_literal()?])?;
+        Matrix::from_literal(&out, h.rows(), h.cols())
+    }
+
+    /// Gate block at layer `l`: `(T, d) -> (T, K)` row-stochastic scores.
+    pub fn gate(&self, layer: usize, h: &Matrix) -> Result<Matrix> {
+        let out = self.gate[layer].run(&[h.to_literal()?])?;
+        Matrix::from_literal(&out, h.rows(), self.manifest.model.experts)
+    }
+
+    /// Whether the artifacts carry the fused attention+gate blocks.
+    pub fn has_fused_attn_gate(&self) -> bool {
+        !self.attn_gate.is_empty()
+    }
+
+    /// Fused attention+gate at layer `l`: one PJRT dispatch returning the
+    /// post-attention hidden state `(T, d)` and gate scores `(T, K)`.
+    /// Falls back to the separate blocks when the artifacts lack the
+    /// fused export.
+    pub fn attn_gate(&self, layer: usize, h: &Matrix) -> Result<(Matrix, Matrix)> {
+        let k = self.manifest.model.experts;
+        let d = self.d_model();
+        if self.attn_gate.is_empty() {
+            let h2 = self.attn(layer, h)?;
+            let g = self.gate(layer, &h2)?;
+            return Ok((h2, g));
+        }
+        let out = self.attn_gate[layer].run(&[h.to_literal()?])?;
+        let fused = Matrix::from_literal(&out, h.rows(), d + k)?;
+        let mut h2 = Matrix::zeros(h.rows(), d);
+        let mut g = Matrix::zeros(h.rows(), k);
+        for t in 0..h.rows() {
+            let row = fused.row(t);
+            h2.row_mut(t).copy_from_slice(&row[..d]);
+            g.row_mut(t).copy_from_slice(&row[d..]);
+        }
+        Ok((h2, g))
+    }
+
+    /// Expert FFN at layer `l`, expert `j`: `(T, d) -> (T, d)` (no
+    /// residual — aggregation happens at the source per eq. 8).
+    pub fn ffn(&self, layer: usize, expert: usize, h: &Matrix) -> Result<Matrix> {
+        let out = self.ffn[layer][expert].run(&[h.to_literal()?])?;
+        Matrix::from_literal(&out, h.rows(), h.cols())
+    }
+
+    /// Head block: `(T, d) -> (T, vocab)` logits.
+    pub fn head(&self, h: &Matrix) -> Result<Matrix> {
+        let out = self.head.run(&[h.to_literal()?])?;
+        Matrix::from_literal(&out, h.rows(), self.manifest.model.vocab)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // ModelRuntime integration tests live in rust/tests/runtime_e2e.rs —
+    // they need `make artifacts` to have produced the HLO files. Unit
+    // tests here cover only artifact-independent pieces (Matrix is in
+    // matrix.rs with its own tests).
+}

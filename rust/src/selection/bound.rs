@@ -1,0 +1,118 @@
+//! The LP-relaxation lower bound (paper §V-C, eq. 10–12).
+//!
+//! Relaxing the binary constraint and C2 of P1(a) yields a fractional
+//! problem whose optimum has the classic knapsack structure: with experts
+//! sorted by *descending* energy-to-score ratio `e_j/t_j`, greedily
+//! exclude whole experts while the QoS threshold still holds, then exclude
+//! the *critical expert* fractionally so the constraint is tight
+//! (eq. 11). The resulting energy (eq. 12) lower-bounds every integral
+//! completion of the node, which is the pruning criterion of the DES tree
+//! search.
+
+/// Lower bound on the energy of any feasible completion of a search node.
+///
+/// Inputs are in the *sorted* index space (descending `e/t`):
+/// * `next` — first expert index not yet decided;
+/// * `score` — total score of all currently non-excluded experts
+///   (decided-included + undecided);
+/// * `energy` — total energy of all currently non-excluded experts;
+/// * `scores`/`costs` — the sorted instance vectors;
+/// * `threshold` — the QoS requirement `z·γ^(l)`.
+///
+/// Returns 0.0 when the node is already QoS-infeasible (caller prunes such
+/// nodes separately, so any valid lower bound works; 0 matches Alg. 1).
+pub fn lp_lower_bound(
+    next: usize,
+    score: f64,
+    energy: f64,
+    scores: &[f64],
+    costs: &[f64],
+    threshold: f64,
+) -> f64 {
+    let k = scores.len();
+    if score < threshold {
+        return 0.0;
+    }
+    let mut j = next;
+    let mut t = score;
+    let mut e = energy;
+    // Greedily exclude the worst-ratio remaining experts while feasible.
+    while j < k && t - scores[j] >= threshold {
+        t -= scores[j];
+        e -= costs[j];
+        j += 1;
+    }
+    // Fractionally exclude the critical expert (eq. 11): the LP removes
+    // exactly the score surplus `t − threshold` at ratio e_j/t_j.
+    if j < k && scores[j] > 0.0 {
+        e -= (t - threshold) * costs[j] / scores[j];
+    }
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Sorted by descending e/t: ratios 4, 2, 1.
+    const SCORES: [f64; 3] = [0.2, 0.3, 0.5];
+    const COSTS: [f64; 3] = [0.8, 0.6, 0.5];
+
+    #[test]
+    fn root_bound_is_fractional_knapsack() {
+        // From the root: total t = 1.0, e = 1.9, threshold 0.6.
+        // Exclude expert 0 (t: 1.0→0.8, e: 1.9→1.1);
+        // excluding expert 1 entirely would drop t to 0.5 < 0.6, so
+        // fractionally exclude: e -= (0.8-0.6) * 0.6/0.3 = 0.4 → 0.7.
+        let b = lp_lower_bound(0, 1.0, 1.9, &SCORES, &COSTS, 0.6);
+        assert!((b - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bound_never_exceeds_integral_optimum() {
+        // Integral optimum for threshold 0.6 with D=3: {1,2} cost 1.1 or
+        // {2, 0} = 0.7 score... {0,2}: t=0.7 cost 1.3; {1,2}: t=0.8 cost 1.1;
+        // {2}: t=0.5 infeasible. Optimum = 1.1. Bound 0.7 <= 1.1. ✓
+        let b = lp_lower_bound(0, 1.0, 1.9, &SCORES, &COSTS, 0.6);
+        assert!(b <= 1.1 + 1e-12);
+    }
+
+    #[test]
+    fn tight_when_exact_exclusion_possible() {
+        // threshold 0.8: exclude expert 0 entirely (t exactly 0.8);
+        // no fractional part. Bound = 1.1, equals integral optimum {1,2}.
+        let b = lp_lower_bound(0, 1.0, 1.9, &SCORES, &COSTS, 0.8);
+        assert!((b - 1.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn infeasible_node_returns_zero() {
+        let b = lp_lower_bound(0, 0.5, 1.0, &SCORES, &COSTS, 0.6);
+        assert_eq!(b, 0.0);
+    }
+
+    #[test]
+    fn no_remaining_experts_keeps_energy() {
+        // All experts decided; nothing further can be excluded.
+        let b = lp_lower_bound(3, 0.7, 1.3, &SCORES, &COSTS, 0.6);
+        assert!((b - 1.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn threshold_zero_excludes_everything_remaining() {
+        let b = lp_lower_bound(0, 1.0, 1.9, &SCORES, &COSTS, 0.0);
+        // All three excluded fully: e = 0.
+        assert!(b.abs() < 1e-12);
+    }
+
+    #[test]
+    fn monotone_in_threshold() {
+        let mut prev = -1.0;
+        for i in 0..=10 {
+            let th = i as f64 * 0.1;
+            let b = lp_lower_bound(0, 1.0, 1.9, &SCORES, &COSTS, th);
+            assert!(b >= prev - 1e-12, "bound should rise with threshold");
+            prev = b;
+        }
+    }
+}

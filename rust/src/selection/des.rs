@@ -1,0 +1,309 @@
+//! Dynamic Expert Selection (DES) — paper Algorithm 1.
+//!
+//! Exact branch-and-bound for P1(a). The solution space is a binary tree:
+//! level `j` decides whether expert `j` (in descending `e_j/t_j` order) is
+//! *excluded* (left child — score and energy drop) or *included* (right
+//! child — unchanged, since the root starts from the all-included state).
+//! BFS explores the tree; the LP-relaxation bound
+//! ([`lp_lower_bound`](super::bound::lp_lower_bound)) prunes nodes whose
+//! best possible completion cannot beat the incumbent.
+//!
+//! Differences from the paper's pseudocode (which has typos — `w` vs `t`,
+//! `s` vs `t` in the bound function) are purely editorial; the semantics
+//! follow §V-B/§V-C exactly. One addition: experts with infinite cost
+//! (links holding no subcarrier) are forced-excluded up front, since no
+//! finite-energy solution can contain them.
+
+use super::bound::lp_lower_bound;
+use super::{fallback_top_d, Selection, SelectionProblem, QOS_EPS};
+use std::collections::VecDeque;
+
+/// Search statistics (used by the complexity benches and EXPERIMENTS.md).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DesStats {
+    /// Nodes dequeued and processed.
+    pub nodes_expanded: u64,
+    /// Children discarded by the LP bound.
+    pub nodes_pruned: u64,
+    /// Children discarded by constraint checks (C1 infeasible subtree or
+    /// C2 width overflow).
+    pub nodes_infeasible: u64,
+}
+
+/// A BFS node: `next` is the tree level (index into the sorted order);
+/// `score`/`energy` are the totals over all non-excluded experts;
+/// `included` counts decided-included experts.
+#[derive(Debug, Clone, Copy)]
+struct Node {
+    next: usize,
+    score: f64,
+    energy: f64,
+    included: usize,
+    /// Bitmask over sorted indices of decided-excluded experts.
+    excluded_mask: u64,
+}
+
+/// Solve P1(a) exactly. Returns the optimal selection and search stats.
+///
+/// Remark 2: when no ≤D subset meets C1, the Top-D fallback selection is
+/// returned with `fallback = true`.
+pub fn solve(problem: &SelectionProblem) -> (Selection, DesStats) {
+    let k = problem.experts();
+    assert!(k <= 64, "DES bitmask supports up to 64 experts (got {k})");
+    let mut stats = DesStats::default();
+
+    if !problem.has_feasible_solution() {
+        return (fallback_top_d(problem), stats);
+    }
+
+    // Sort experts by descending energy-to-score ratio. Infinite-cost
+    // experts sort first and are force-excluded below.
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| {
+        let ra = ratio(problem.costs[a], problem.scores[a]);
+        let rb = ratio(problem.costs[b], problem.scores[b]);
+        rb.partial_cmp(&ra).unwrap().then(a.cmp(&b))
+    });
+    let scores: Vec<f64> = order.iter().map(|&j| problem.scores[j]).collect();
+    let costs: Vec<f64> = order.iter().map(|&j| problem.costs[j]).collect();
+
+    // Force-exclude unreachable experts: they cannot appear in any
+    // finite-cost solution. (Feasibility over the reachable set was
+    // already established above.)
+    let mut forced_mask = 0u64;
+    let mut root_score: f64 = scores.iter().sum();
+    let mut root_energy = 0.0;
+    let mut first_free = 0usize;
+    for (s, &c) in costs.iter().enumerate() {
+        if c.is_finite() {
+            root_energy += c;
+        } else {
+            debug_assert_eq!(s, first_free, "infinite costs must sort first");
+            forced_mask |= 1 << s;
+            root_score -= scores[s];
+            first_free = s + 1;
+        }
+    }
+    let threshold = problem.threshold;
+
+    let mut best_energy = f64::INFINITY;
+    let mut best_mask = 0u64;
+    let mut best_found = false;
+
+    let mut queue = VecDeque::new();
+    queue.push_back(Node {
+        next: first_free,
+        score: root_score,
+        energy: root_energy,
+        included: 0,
+        excluded_mask: forced_mask,
+    });
+
+    while let Some(node) = queue.pop_front() {
+        stats.nodes_expanded += 1;
+
+        // A node is a complete candidate ("include everything undecided")
+        // iff the implied width fits C2.
+        let implied_width = k - node.excluded_mask.count_ones() as usize;
+        if node.score >= threshold - QOS_EPS
+            && implied_width <= problem.max_active
+            && node.energy < best_energy
+        {
+            best_energy = node.energy;
+            best_mask = node.excluded_mask;
+            best_found = true;
+        }
+
+        if node.next >= k || node.score < threshold - QOS_EPS {
+            // Leaf, or excluding anything more can only stay infeasible.
+            if node.score < threshold - QOS_EPS {
+                stats.nodes_infeasible += 1;
+            }
+            continue;
+        }
+
+        // Bound check (prune the whole subtree, both children).
+        let bound = lp_lower_bound(
+            node.next,
+            node.score,
+            node.energy,
+            &scores,
+            &costs,
+            threshold,
+        );
+        if bound >= best_energy - QOS_EPS && best_found {
+            stats.nodes_pruned += 1;
+            continue;
+        }
+
+        let j = node.next;
+        // Left child: exclude expert j.
+        queue.push_back(Node {
+            next: j + 1,
+            score: node.score - scores[j],
+            energy: node.energy - costs[j],
+            included: node.included,
+            excluded_mask: node.excluded_mask | (1 << j),
+        });
+        // Right child: include expert j — only if C2 can still hold.
+        if node.included + 1 <= problem.max_active {
+            queue.push_back(Node {
+                next: j + 1,
+                score: node.score,
+                energy: node.energy,
+                included: node.included + 1,
+                excluded_mask: node.excluded_mask,
+            });
+        } else {
+            stats.nodes_infeasible += 1;
+        }
+    }
+
+    assert!(
+        best_found,
+        "DES found no solution despite feasibility pre-check — this is a bug"
+    );
+    let selected: Vec<usize> = (0..k)
+        .filter(|&s| best_mask & (1 << s) == 0)
+        .map(|s| order[s])
+        .collect();
+    (Selection::from_indices(problem, selected, false), stats)
+}
+
+#[inline]
+fn ratio(cost: f64, score: f64) -> f64 {
+    if score > 0.0 {
+        cost / score
+    } else if cost.is_finite() && cost == 0.0 {
+        // 0/0: a free, worthless expert; treat as middling so it is
+        // branch-excluded naturally.
+        0.0
+    } else {
+        f64::INFINITY
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::exhaustive;
+    use crate::selection::testutil::random_problem;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn simple_instance_optimal() {
+        // threshold 0.6, D=2. Feasible subsets: {0,1}=0.8, {0,2}=0.7, {0}=…
+        let p = SelectionProblem::new(
+            vec![0.5, 0.3, 0.2],
+            vec![3.0, 1.0, 0.5],
+            0.6,
+            2,
+        );
+        let (s, _) = solve(&p);
+        assert_eq!(s.selected, vec![0, 2]); // cost 3.5 beats {0,1}=4.0
+        assert!((s.cost - 3.5).abs() < 1e-12);
+        assert!(!s.fallback);
+    }
+
+    #[test]
+    fn zero_threshold_selects_cheapest_nothing() {
+        // threshold 0: the empty set is optimal (cost 0).
+        let p = SelectionProblem::new(vec![0.5, 0.5], vec![1.0, 2.0], 0.0, 2);
+        let (s, _) = solve(&p);
+        assert!(s.selected.is_empty());
+        assert_eq!(s.cost, 0.0);
+    }
+
+    #[test]
+    fn full_threshold_needs_everything() {
+        let p = SelectionProblem::new(vec![0.4, 0.35, 0.25], vec![1.0, 1.0, 1.0], 1.0, 3);
+        let (s, _) = solve(&p);
+        assert_eq!(s.selected, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn infeasible_falls_back_to_top_d() {
+        let p = SelectionProblem::new(vec![0.4, 0.3, 0.3], vec![1.0, 2.0, 3.0], 0.9, 2);
+        let (s, _) = solve(&p);
+        assert!(s.fallback);
+        assert_eq!(s.selected, vec![0, 1]);
+    }
+
+    #[test]
+    fn infinite_cost_expert_never_selected_when_avoidable() {
+        let p = SelectionProblem::new(
+            vec![0.5, 0.3, 0.2],
+            vec![f64::INFINITY, 1.0, 1.0],
+            0.5,
+            2,
+        );
+        let (s, _) = solve(&p);
+        assert!(!s.selected.contains(&0));
+        assert!(s.cost.is_finite());
+        assert!(s.score >= 0.5 - 1e-9);
+    }
+
+    #[test]
+    fn matches_exhaustive_on_random_instances() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0xDE5);
+        for trial in 0..300 {
+            let k = rng.range_usize(1, 11);
+            let d = rng.range_usize(1, k + 1);
+            let p = random_problem(&mut rng, k, d);
+            let (des_sol, _) = solve(&p);
+            let ex_sol = exhaustive::solve(&p);
+            assert_eq!(des_sol.fallback, ex_sol.fallback, "trial {trial}: {p:?}");
+            assert!(
+                (des_sol.cost - ex_sol.cost).abs() < 1e-9,
+                "trial {trial}: DES {} != exhaustive {} on {p:?}",
+                des_sol.cost,
+                ex_sol.cost
+            );
+            if !des_sol.fallback {
+                assert!(p.is_feasible(&des_sol.selected), "trial {trial}");
+            }
+        }
+    }
+
+    #[test]
+    fn prunes_vs_plain_bfs() {
+        // On a mid-size instance the bound should prune a large share of
+        // the 2^K node space.
+        let mut rng = Xoshiro256pp::seed_from_u64(0xBEEF);
+        let p = random_problem(&mut rng, 20, 4);
+        let (_, stats) = solve(&p);
+        let full = 1u64 << 20;
+        assert!(
+            stats.nodes_expanded < full / 10,
+            "expanded {} of {} — bound is not pruning",
+            stats.nodes_expanded,
+            full
+        );
+    }
+
+    #[test]
+    fn width_constraint_respected() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0xD);
+        for _ in 0..100 {
+            let k = rng.range_usize(2, 12);
+            let d = rng.range_usize(1, k);
+            let p = random_problem(&mut rng, k, d);
+            let (s, _) = solve(&p);
+            assert!(s.selected.len() <= d.max(p.max_active));
+        }
+    }
+
+    #[test]
+    fn selection_indices_valid_and_sorted() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0xE);
+        for _ in 0..50 {
+            let p = random_problem(&mut rng, 8, 3);
+            let (s, _) = solve(&p);
+            let mut sorted = s.selected.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted, s.selected);
+            assert!(s.selected.iter().all(|&j| j < 8));
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! Pseudo-polynomial dynamic-programming solver for P1(a) — the
+//! Appendix-A ablation.
+//!
+//! The paper proves P1(a) NP-hard by reduction from knapsack; the classic
+//! counterpart is that knapsack admits an FPTAS / pseudo-polynomial DP.
+//! Here the *scores* (gate probabilities in [0, 1]) are discretized onto
+//! a fixed grid and a `O(K · D · G)` table computes, for every
+//! (width, discretized score), the cheapest selection. With `G` grid
+//! cells the result is exact up to a `K/G` additive slack on the QoS
+//! threshold — we discretize scores *downward* and the threshold *upward*
+//! so the returned selection always satisfies the true constraint C1
+//! (no false feasibility), at the price of occasionally missing a
+//! solution whose discretized score falls just short (bounded
+//! suboptimality, quantified in `benches/des.rs`).
+//!
+//! This gives the repo a second *independent* exact-ish solver to
+//! cross-check DES against, and a comparison point for the complexity
+//! story: DP cost is flat in instance hardness, DES adapts.
+
+use super::{fallback_top_d, Selection, SelectionProblem, QOS_EPS};
+
+/// Default score-grid resolution.
+pub const DEFAULT_GRID: usize = 4096;
+
+/// Solve P1(a) by DP over discretized scores.
+///
+/// Returns a selection satisfying C1/C2 whose cost is within the grid
+/// slack of optimal (exact as `grid → ∞`). Falls back per Remark 2.
+pub fn solve(problem: &SelectionProblem, grid: usize) -> Selection {
+    assert!(grid >= 2, "grid must be >= 2");
+    let k = problem.experts();
+    let d = problem.max_active.min(k);
+
+    if !problem.has_feasible_solution() {
+        return fallback_top_d(problem);
+    }
+    if problem.threshold <= QOS_EPS {
+        // Empty selection is optimal at zero threshold.
+        return Selection::from_indices(problem, Vec::new(), false);
+    }
+
+    // Discretize: score s -> floor(s * grid / total_ceiling). Using 1.0
+    // as the ceiling (gate scores sum to 1) keeps cell width = 1/grid.
+    let cell = 1.0 / grid as f64;
+    let q = |s: f64| -> usize { ((s / cell).floor() as usize).min(grid) };
+    // Threshold rounds *up* so discretized feasibility implies true
+    // feasibility: Σ floor(s_j/cell) >= ceil(T/cell) ⇒ Σ s_j >= T - K·cell
+    // ... to be safe against the floor losses we add one cell per
+    // possibly-selected expert.
+    let t_cells = (((problem.threshold - QOS_EPS) / cell).ceil() as usize + d).min(grid * d);
+
+    const INF: f64 = f64::INFINITY;
+    // dp[w][s] = min cost using exactly w experts reaching >= s cells
+    // (s saturates at t_cells).
+    let s_dim = t_cells + 1;
+    let mut dp = vec![vec![INF; s_dim]; d + 1];
+    let mut choice: Vec<Vec<Option<(usize, usize, usize)>>> = vec![vec![None; s_dim]; d + 1];
+    dp[0][0] = 0.0;
+
+    for j in 0..k {
+        if !problem.costs[j].is_finite() {
+            continue;
+        }
+        let sj = q(problem.scores[j]);
+        let cj = problem.costs[j];
+        // Iterate widths downward so each expert is used at most once.
+        for w in (0..d).rev() {
+            for s in 0..s_dim {
+                let cur = dp[w][s];
+                if !cur.is_finite() {
+                    continue;
+                }
+                let ns = (s + sj).min(t_cells);
+                let cand = cur + cj;
+                if cand < dp[w + 1][ns] {
+                    dp[w + 1][ns] = cand;
+                    choice[w + 1][ns] = Some((j, w, s));
+                }
+            }
+        }
+    }
+
+    // Best over widths at the saturated threshold cell.
+    let mut best: Option<(usize, f64)> = None;
+    for w in 1..=d {
+        let c = dp[w][t_cells];
+        if c.is_finite() && best.map_or(true, |(_, bc)| c < bc) {
+            best = Some((w, c));
+        }
+    }
+    let Some((w0, _)) = best else {
+        // Discretization slack ate the only feasible solutions; fall back
+        // to the exact Top-D repair (still satisfies Remark 2 semantics).
+        return fallback_top_d(problem);
+    };
+
+    // Reconstruct.
+    let mut selected = Vec::new();
+    let (mut w, mut s) = (w0, t_cells);
+    while w > 0 {
+        let (j, pw, ps) = choice[w][s].expect("dp backtrack broken");
+        selected.push(j);
+        w = pw;
+        s = ps;
+    }
+    let sel = Selection::from_indices(problem, selected, false);
+    debug_assert!(
+        problem.is_feasible(&sel.selected),
+        "DP returned infeasible selection: {sel:?} for {problem:?}"
+    );
+    Selection { fallback: false, ..sel }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::{des, testutil::random_problem};
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn matches_des_on_simple_instance() {
+        let p = SelectionProblem::new(vec![0.5, 0.3, 0.2], vec![3.0, 1.0, 0.5], 0.6, 2);
+        let s = solve(&p, DEFAULT_GRID);
+        let (opt, _) = des::solve(&p);
+        assert_eq!(s.selected, opt.selected);
+    }
+
+    #[test]
+    fn always_feasible_and_near_optimal() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0xD9);
+        let mut gaps = Vec::new();
+        for _ in 0..300 {
+            let k = rng.range_usize(1, 12);
+            let d = rng.range_usize(1, k + 1);
+            let p = random_problem(&mut rng, k, d);
+            let s = solve(&p, DEFAULT_GRID);
+            let (opt, _) = des::solve(&p);
+            if s.fallback || opt.fallback {
+                continue;
+            }
+            assert!(p.is_feasible(&s.selected), "DP infeasible on {p:?}");
+            assert!(
+                s.cost >= opt.cost - 1e-9,
+                "DP beat the exact optimum?! {} < {} on {p:?}",
+                s.cost,
+                opt.cost
+            );
+            gaps.push(if opt.cost > 0.0 {
+                (s.cost - opt.cost) / opt.cost
+            } else {
+                0.0
+            });
+        }
+        // Discretization slack must be small on average.
+        let mean_gap = gaps.iter().sum::<f64>() / gaps.len().max(1) as f64;
+        assert!(mean_gap < 0.05, "mean DP optimality gap {mean_gap}");
+    }
+
+    #[test]
+    fn zero_threshold_selects_nothing() {
+        let p = SelectionProblem::new(vec![0.5, 0.5], vec![1.0, 1.0], 0.0, 2);
+        assert!(solve(&p, 64).selected.is_empty());
+    }
+
+    #[test]
+    fn infeasible_falls_back() {
+        let p = SelectionProblem::new(vec![0.4, 0.3, 0.3], vec![1.0; 3], 0.95, 2);
+        assert!(solve(&p, 256).fallback);
+    }
+
+    #[test]
+    fn fine_grid_tracks_exact_optimum() {
+        // Grid refinement is not pointwise monotone (the conservative
+        // +D-cell threshold shifts non-uniformly), but a fine grid must
+        // sit very close to the exact optimum on average.
+        let mut rng = Xoshiro256pp::seed_from_u64(0xDA);
+        let mut gaps = Vec::new();
+        for _ in 0..50 {
+            let p = random_problem(&mut rng, 8, 3);
+            let fine = solve(&p, 16384);
+            let (opt, _) = des::solve(&p);
+            if !fine.fallback && !opt.fallback && opt.cost > 0.0 {
+                gaps.push((fine.cost - opt.cost) / opt.cost);
+            }
+        }
+        let mean = gaps.iter().sum::<f64>() / gaps.len().max(1) as f64;
+        assert!(mean < 0.02, "fine-grid DP mean gap {mean}");
+    }
+
+    #[test]
+    fn skips_unreachable_experts() {
+        let p = SelectionProblem::new(
+            vec![0.5, 0.3, 0.2],
+            vec![f64::INFINITY, 1.0, 1.0],
+            0.5,
+            2,
+        );
+        let s = solve(&p, 1024);
+        assert!(!s.selected.contains(&0));
+        assert!(s.cost.is_finite());
+    }
+}

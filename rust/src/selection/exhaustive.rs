@@ -1,0 +1,89 @@
+//! Exhaustive `O(2^K)` oracle for P1(a).
+//!
+//! Enumerates every subset satisfying C1/C2 and returns the cheapest. Used
+//! to verify DES optimality in tests and to quantify the bound's pruning
+//! power in `benches/des.rs`. Practical only for small `K` — which is the
+//! point the paper's complexity analysis makes.
+
+use super::{fallback_top_d, Selection, SelectionProblem, QOS_EPS};
+
+/// Solve P1(a) by enumeration. Falls back per Remark 2 when infeasible.
+pub fn solve(problem: &SelectionProblem) -> Selection {
+    let k = problem.experts();
+    assert!(k <= 24, "exhaustive oracle limited to K <= 24 (got {k})");
+
+    let mut best_cost = f64::INFINITY;
+    let mut best_mask: Option<u32> = None;
+    for mask in 0u32..(1 << k) {
+        if (mask.count_ones() as usize) > problem.max_active {
+            continue;
+        }
+        let mut score = 0.0;
+        let mut cost = 0.0;
+        for j in 0..k {
+            if mask & (1 << j) != 0 {
+                score += problem.scores[j];
+                cost += problem.costs[j];
+            }
+        }
+        if score >= problem.threshold - QOS_EPS && cost < best_cost {
+            best_cost = cost;
+            best_mask = Some(mask);
+        }
+    }
+
+    match best_mask {
+        Some(mask) => {
+            let selected: Vec<usize> = (0..k).filter(|&j| mask & (1 << j) != 0).collect();
+            Selection::from_indices(problem, selected, false)
+        }
+        None => fallback_top_d(problem),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn picks_cheapest_feasible() {
+        let p = SelectionProblem::new(vec![0.5, 0.3, 0.2], vec![3.0, 1.0, 0.5], 0.6, 2);
+        let s = solve(&p);
+        assert_eq!(s.selected, vec![0, 2]);
+        assert!((s.cost - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn respects_width() {
+        let p = SelectionProblem::new(vec![0.25; 4], vec![1.0; 4], 0.5, 2);
+        let s = solve(&p);
+        assert_eq!(s.selected.len(), 2);
+    }
+
+    #[test]
+    fn infeasible_falls_back() {
+        let p = SelectionProblem::new(vec![0.4, 0.3, 0.3], vec![1.0; 3], 0.95, 2);
+        let s = solve(&p);
+        assert!(s.fallback);
+        assert_eq!(s.selected.len(), 2);
+    }
+
+    #[test]
+    fn empty_set_when_threshold_zero() {
+        let p = SelectionProblem::new(vec![0.5, 0.5], vec![1.0, 1.0], 0.0, 2);
+        let s = solve(&p);
+        assert!(s.selected.is_empty());
+    }
+
+    #[test]
+    fn avoids_infinite_costs() {
+        let p = SelectionProblem::new(
+            vec![0.6, 0.4],
+            vec![f64::INFINITY, 1.0],
+            0.3,
+            2,
+        );
+        let s = solve(&p);
+        assert_eq!(s.selected, vec![1]);
+    }
+}

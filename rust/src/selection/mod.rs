@@ -1,0 +1,210 @@
+//! Expert selection (paper §IV–V): problem types, the optimal **DES**
+//! branch-and-bound algorithm, and every baseline the evaluation uses.
+//!
+//! A [`SelectionProblem`] is one instance of P1(a): for a single hidden
+//! state, choose a subset of experts minimizing total selection cost
+//! `Σ e_j` subject to
+//!
+//! * **C1** (QoS): selected gate scores sum to at least `z·γ^(l)`;
+//! * **C2** (width): at most `D` experts are selected.
+//!
+//! P1(a) is NP-hard (paper Prop. 1, knapsack reduction); [`des`] solves it
+//! exactly with tree search + an LP-relaxation bound, and
+//! [`exhaustive`] is the `O(2^K)` oracle used to verify optimality in
+//! tests and benches. [`topk`] and [`greedy`] are the baselines.
+//!
+//! Infeasible instances (no ≤D-subset meets C1 — paper Remark 2) fall
+//! back to the Top-D selection and are flagged.
+
+pub mod bound;
+pub mod des;
+pub mod dp;
+pub mod exhaustive;
+pub mod greedy;
+pub mod topk;
+
+/// Numerical slack for QoS comparisons: gate scores come out of a softmax
+/// and are renormalized, so exact float equality is meaningless.
+pub const QOS_EPS: f64 = 1e-9;
+
+/// One instance of problem P1(a).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SelectionProblem {
+    /// Gate scores `t_j` (non-negative; typically sum to 1).
+    pub scores: Vec<f64>,
+    /// Selection costs `e_j` (J/token; `+inf` marks an unreachable
+    /// expert, e.g. a link holding no subcarrier).
+    pub costs: Vec<f64>,
+    /// QoS threshold `z·γ^(l)`.
+    pub threshold: f64,
+    /// Maximum number of selected experts `D` (C2).
+    pub max_active: usize,
+}
+
+impl SelectionProblem {
+    pub fn new(scores: Vec<f64>, costs: Vec<f64>, threshold: f64, max_active: usize) -> Self {
+        assert_eq!(scores.len(), costs.len(), "scores/costs length mismatch");
+        assert!(!scores.is_empty(), "no experts");
+        assert!(max_active >= 1, "max_active must be >= 1");
+        assert!(
+            scores.iter().all(|t| t.is_finite() && *t >= 0.0),
+            "scores must be finite and non-negative"
+        );
+        assert!(
+            costs.iter().all(|e| *e >= 0.0),
+            "costs must be non-negative"
+        );
+        Self {
+            scores,
+            costs,
+            threshold,
+            max_active,
+        }
+    }
+
+    pub fn experts(&self) -> usize {
+        self.scores.len()
+    }
+
+    /// Is a selection feasible for this instance?
+    pub fn is_feasible(&self, selected: &[usize]) -> bool {
+        if selected.len() > self.max_active {
+            return false;
+        }
+        let score: f64 = selected.iter().map(|&j| self.scores[j]).sum();
+        score >= self.threshold - QOS_EPS
+    }
+
+    /// Total cost of a selection.
+    pub fn cost_of(&self, selected: &[usize]) -> f64 {
+        selected.iter().map(|&j| self.costs[j]).sum()
+    }
+
+    /// Total score of a selection.
+    pub fn score_of(&self, selected: &[usize]) -> f64 {
+        selected.iter().map(|&j| self.scores[j]).sum()
+    }
+
+    /// Does any feasible selection exist (Remark 2 check)?
+    pub fn has_feasible_solution(&self) -> bool {
+        let mut idx: Vec<usize> = (0..self.experts())
+            .filter(|&j| self.costs[j].is_finite())
+            .collect();
+        idx.sort_by(|&a, &b| self.scores[b].partial_cmp(&self.scores[a]).unwrap());
+        idx.truncate(self.max_active);
+        self.score_of(&idx) >= self.threshold - QOS_EPS
+    }
+}
+
+/// The outcome of an expert-selection algorithm.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Selection {
+    /// Selected expert indices, ascending.
+    pub selected: Vec<usize>,
+    /// Total selection cost `Σ e_j` (objective of P1(a)).
+    pub cost: f64,
+    /// Total gate score of the selection.
+    pub score: f64,
+    /// True when the instance was infeasible and the Remark-2 Top-D
+    /// fallback was applied (C1 is then violated by necessity).
+    pub fallback: bool,
+}
+
+impl Selection {
+    pub(crate) fn from_indices(problem: &SelectionProblem, mut idx: Vec<usize>, fallback: bool) -> Self {
+        idx.sort_unstable();
+        Self {
+            cost: problem.cost_of(&idx),
+            score: problem.score_of(&idx),
+            selected: idx,
+            fallback,
+        }
+    }
+}
+
+/// Remark-2 fallback: Top-D among *finite-cost* experts (an unreachable
+/// expert cannot physically receive the hidden state). In the degenerate
+/// case where no expert is reachable at all — impossible in the protocol,
+/// where the in-situ expert never needs a radio link, but expressible at
+/// the library level — the fallback is Top-D over everything (the paper's
+/// literal Remark 2) and the infinite cost propagates to the caller.
+pub(crate) fn fallback_top_d(problem: &SelectionProblem) -> Selection {
+    let mut idx: Vec<usize> = (0..problem.experts())
+        .filter(|&j| problem.costs[j].is_finite())
+        .collect();
+    if idx.is_empty() {
+        idx = (0..problem.experts()).collect();
+    }
+    idx.sort_by(|&a, &b| {
+        problem.scores[b]
+            .partial_cmp(&problem.scores[a])
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    idx.truncate(problem.max_active);
+    Selection::from_indices(problem, idx, true)
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::SelectionProblem;
+    use crate::util::rng::Xoshiro256pp;
+
+    /// Random P1(a) instance with normalized scores.
+    pub fn random_problem(rng: &mut Xoshiro256pp, k: usize, d: usize) -> SelectionProblem {
+        let raw: Vec<f64> = (0..k).map(|_| rng.next_f64_open()).collect();
+        let sum: f64 = raw.iter().sum();
+        let scores: Vec<f64> = raw.iter().map(|x| x / sum).collect();
+        let costs: Vec<f64> = (0..k).map(|_| rng.next_f64_open() * 10.0).collect();
+        let threshold = rng.next_f64() * 0.9;
+        SelectionProblem::new(scores, costs, threshold, d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feasibility_checks() {
+        let p = SelectionProblem::new(vec![0.5, 0.3, 0.2], vec![1.0, 2.0, 3.0], 0.6, 2);
+        assert!(p.is_feasible(&[0, 1])); // 0.8 >= 0.6
+        assert!(!p.is_feasible(&[1, 2])); // 0.5 < 0.6
+        assert!(!p.is_feasible(&[0, 1, 2])); // width
+        assert!(p.has_feasible_solution());
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let p = SelectionProblem::new(vec![0.4, 0.3, 0.3], vec![1.0; 3], 0.9, 2);
+        assert!(!p.has_feasible_solution());
+    }
+
+    #[test]
+    fn fallback_takes_top_d_finite() {
+        let p = SelectionProblem::new(
+            vec![0.5, 0.3, 0.2],
+            vec![f64::INFINITY, 1.0, 1.0],
+            0.9,
+            2,
+        );
+        let s = fallback_top_d(&p);
+        assert!(s.fallback);
+        assert_eq!(s.selected, vec![1, 2]);
+    }
+
+    #[test]
+    fn cost_and_score_sums() {
+        let p = SelectionProblem::new(vec![0.6, 0.4], vec![1.5, 2.5], 0.0, 2);
+        assert_eq!(p.cost_of(&[0, 1]), 4.0);
+        assert!((p.score_of(&[1]) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn feasibility_tolerates_float_noise() {
+        // Scores that sum to threshold only up to float rounding.
+        let t = 0.1 + 0.2; // 0.30000000000000004
+        let p = SelectionProblem::new(vec![0.1, 0.2, 0.7], vec![1.0; 3], t, 3);
+        assert!(p.is_feasible(&[0, 1]));
+    }
+}

@@ -1,0 +1,57 @@
+//! Top-k expert selection — the centralized-MoE baseline (paper §VII-A3).
+//!
+//! Selects the `k` experts with the highest gate scores, ignoring channel
+//! conditions and energy entirely. This is what Mixtral/DeepSeek-style
+//! routers do when the whole model lives on one node; in a DMoE system it
+//! is the high-cost reference that DES/JESA undercut (Table I, Figs. 7–10).
+
+use super::{Selection, SelectionProblem};
+
+/// Select the Top-k experts by gate score (ties → lower index).
+pub fn solve(problem: &SelectionProblem, k: usize) -> Selection {
+    let mut idx: Vec<usize> = (0..problem.experts()).collect();
+    idx.sort_by(|&a, &b| {
+        problem.scores[b]
+            .partial_cmp(&problem.scores[a])
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    // Top-k never "falls back" — it ignores C1 by design; flag it as a
+    // fallback only if it violates the instance's QoS, for observability.
+    let violates = !problem.is_feasible(&idx);
+    Selection::from_indices(problem, idx, violates)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selects_highest_scores() {
+        let p = SelectionProblem::new(vec![0.1, 0.5, 0.4], vec![9.0, 9.0, 9.0], 0.0, 3);
+        let s = solve(&p, 2);
+        assert_eq!(s.selected, vec![1, 2]);
+    }
+
+    #[test]
+    fn ignores_cost() {
+        let p = SelectionProblem::new(vec![0.6, 0.4], vec![1e9, 0.0], 0.0, 2);
+        let s = solve(&p, 1);
+        assert_eq!(s.selected, vec![0]); // expensive but highest-scoring
+    }
+
+    #[test]
+    fn k_larger_than_experts_clamps() {
+        let p = SelectionProblem::new(vec![0.5, 0.5], vec![1.0, 1.0], 0.0, 2);
+        let s = solve(&p, 10);
+        assert_eq!(s.selected.len(), 2);
+    }
+
+    #[test]
+    fn flags_qos_violation() {
+        let p = SelectionProblem::new(vec![0.4, 0.35, 0.25], vec![1.0; 3], 0.9, 3);
+        let s = solve(&p, 2);
+        assert!(s.fallback); // 0.75 < 0.9
+    }
+}

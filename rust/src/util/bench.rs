@@ -1,0 +1,210 @@
+//! Micro-benchmark harness (criterion is not vendored in this
+//! environment, so `rust/benches/*.rs` use this in-tree harness with
+//! `harness = false`).
+//!
+//! Behaviour mirrors criterion's core loop: warm-up, then timed samples
+//! with an adaptive iteration count targeting a fixed per-sample duration,
+//! reporting mean / stddev / p50 / p95 and optional throughput. A
+//! `black_box` re-export prevents the optimizer from deleting the
+//! benchmarked work.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// Prevent constant folding / dead-code elimination of benchmark inputs
+/// and results.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// One benchmark's results.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time, one entry per sample (seconds).
+    pub samples_s: Vec<f64>,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        stats::mean(&self.samples_s)
+    }
+
+    pub fn p50_s(&self) -> f64 {
+        stats::percentile(&self.samples_s, 50.0)
+    }
+
+    pub fn p95_s(&self) -> f64 {
+        stats::percentile(&self.samples_s, 95.0)
+    }
+
+    pub fn stddev_s(&self) -> f64 {
+        stats::stddev(&self.samples_s)
+    }
+}
+
+fn fmt_duration(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:8.2} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:8.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:8.2} ms", s * 1e3)
+    } else {
+        format!("{s:8.3} s ")
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    pub warmup: Duration,
+    pub target_sample: Duration,
+    pub samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            target_sample: Duration::from_millis(50),
+            samples: 20,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        let mut b = Self::default();
+        // Honor a quick mode for CI-ish runs: DMOE_BENCH_FAST=1.
+        if std::env::var("DMOE_BENCH_FAST").as_deref() == Ok("1") {
+            b.warmup = Duration::from_millis(50);
+            b.target_sample = Duration::from_millis(10);
+            b.samples = 8;
+        }
+        b
+    }
+
+    /// Run one benchmark: `f` is invoked repeatedly; its return value is
+    /// black-boxed.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warm-up and calibration: figure out how many iterations fit the
+        // target sample duration.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup || warm_iters == 0 {
+            black_box(f());
+            warm_iters += 1;
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+        let iters = ((self.target_sample.as_secs_f64() / per_iter).ceil() as u64).max(1);
+
+        let mut samples_s = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            samples_s.push(t0.elapsed().as_secs_f64() / iters as f64);
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            samples_s,
+            iters_per_sample: iters,
+        };
+        println!(
+            "{:<48} {}  (p50 {}, p95 {}, sd {}, {} iters/sample)",
+            result.name,
+            fmt_duration(result.mean_s()),
+            fmt_duration(result.p50_s()),
+            fmt_duration(result.p95_s()),
+            fmt_duration(result.stddev_s()),
+            result.iters_per_sample,
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Like [`Bencher::bench`] but also reports items/second throughput.
+    pub fn bench_throughput<T, F: FnMut() -> T>(
+        &mut self,
+        name: &str,
+        items_per_iter: u64,
+        f: F,
+    ) -> &BenchResult {
+        let r = self.bench(name, f);
+        let thr = items_per_iter as f64 / r.mean_s();
+        println!("{:<48} {:>14.0} items/s", format!("{name} [throughput]"), thr);
+        // Reborrow (bench returned a borrow tied to self).
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Emit all results as a JSON report string.
+    pub fn to_json(&self) -> String {
+        use super::json::Json;
+        let arr = Json::Arr(
+            self.results
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("name", Json::Str(r.name.clone())),
+                        ("mean_s", Json::Num(r.mean_s())),
+                        ("p50_s", Json::Num(r.p50_s())),
+                        ("p95_s", Json::Num(r.p95_s())),
+                        ("stddev_s", Json::Num(r.stddev_s())),
+                        ("iters_per_sample", Json::Num(r.iters_per_sample as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        arr.to_string_pretty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_timings() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(5),
+            target_sample: Duration::from_millis(2),
+            samples: 5,
+            results: Vec::new(),
+        };
+        let r = b.bench("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(black_box(i));
+            }
+            s
+        });
+        assert!(r.mean_s() > 0.0);
+        assert!(r.mean_s() < 0.1);
+        assert_eq!(r.samples_s.len(), 5);
+    }
+
+    #[test]
+    fn json_report_parses() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(2),
+            target_sample: Duration::from_millis(1),
+            samples: 3,
+            results: Vec::new(),
+        };
+        b.bench("a", || 1 + 1);
+        let parsed = crate::util::json::Json::parse(&b.to_json()).unwrap();
+        assert_eq!(parsed.at(0).get("name").as_str(), Some("a"));
+    }
+}

@@ -1,0 +1,135 @@
+//! Tiny command-line argument parser (no `clap` in this environment).
+//!
+//! Supports the subcommand + `--flag value` / `--flag=value` / boolean
+//! `--flag` style the `dmoe` binary and the examples use.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, positional args, and named options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse an iterator of argument strings.
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = iter.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    let (k, v) = stripped.split_at(eq);
+                    args.options.insert(k.to_string(), v[1..].to_string());
+                } else if iter
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.options.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|s| {
+                s.parse::<f64>()
+                    .unwrap_or_else(|_| panic!("--{name} expects a number, got '{s}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|s| {
+                s.parse::<usize>()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{s}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|s| {
+                s.parse::<u64>()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{s}'"))
+            })
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["fig7", "--gamma0", "0.8", "--layers=8", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("fig7"));
+        assert_eq!(a.get_f64("gamma0", 1.0), 0.8);
+        assert_eq!(a.get_usize("layers", 0), 8);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["serve"]);
+        assert_eq!(a.get_f64("gamma0", 0.7), 0.7);
+        assert_eq!(a.get_or("config", "default.toml"), "default.toml");
+    }
+
+    #[test]
+    fn positionals_after_subcommand() {
+        let a = parse(&["run", "input.txt", "out.txt"]);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["input.txt", "out.txt"]);
+    }
+
+    #[test]
+    fn trailing_boolean_flag() {
+        let a = parse(&["x", "--json"]);
+        assert!(a.flag("json"));
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // `--offset -3` : "-3" does not start with "--" so it is a value.
+        let a = parse(&["x", "--offset", "-3"]);
+        assert_eq!(a.get_f64("offset", 0.0), -3.0);
+    }
+}

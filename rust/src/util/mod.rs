@@ -1,0 +1,22 @@
+//! In-tree utility substrates.
+//!
+//! This build environment vendors only the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (`rand`, `serde_json`, `clap`,
+//! `criterion`, `rayon`) are unavailable. The repo carries small, tested
+//! replacements for exactly the slices it needs:
+//!
+//! * [`rng`] — deterministic xoshiro256++ PRNG + distributions.
+//! * [`json`] — strict JSON parse/serialize (artifact manifest, reports).
+//! * [`cli`] — `--flag value` argument parsing for the binary/examples.
+//! * [`bench`] — criterion-style micro-benchmark harness.
+//! * [`stats`] — means/percentiles/Welford.
+//! * [`pool`] — scoped thread-pool for data-parallel sweeps.
+//! * [`table`] — plain-text table rendering for experiment output.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,100 @@
+//! Scoped data-parallelism over OS threads (no `rayon` vendored).
+//!
+//! [`parallel_map`] splits a work list across `n_workers` threads using
+//! `std::thread::scope`; order of results matches the input order. Used by
+//! the bench harness and Monte-Carlo experiment sweeps, where items are
+//! coarse (entire serving runs), so a simple block partition is enough.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Map `f` over `items` with up to `n_workers` threads, preserving order.
+///
+/// Work is distributed through an atomic cursor, so uneven item costs
+/// still balance. `f` must be `Sync` (it is shared by reference).
+pub fn parallel_map<T, R, F>(items: &[T], n_workers: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = n_workers.clamp(1, n);
+    if workers == 1 {
+        return items.iter().map(&f).collect();
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker skipped an item"))
+        .collect()
+}
+
+/// Number of worker threads to default to (available parallelism, capped).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let xs: Vec<u64> = (0..1000).collect();
+        let ys = parallel_map(&xs, 8, |x| x * 2);
+        assert_eq!(ys, xs.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_fallback() {
+        let xs = vec![1, 2, 3];
+        assert_eq!(parallel_map(&xs, 1, |x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let xs: Vec<u32> = vec![];
+        let ys: Vec<u32> = parallel_map(&xs, 4, |x| *x);
+        assert!(ys.is_empty());
+    }
+
+    #[test]
+    fn uneven_costs_balance() {
+        // Items with wildly different costs still all complete.
+        let xs: Vec<u64> = (0..64).collect();
+        let ys = parallel_map(&xs, 8, |&x| {
+            let mut acc = 0u64;
+            for i in 0..(x * 1000) {
+                acc = acc.wrapping_add(i);
+            }
+            (x, acc)
+        });
+        assert_eq!(ys.len(), 64);
+        for (i, (x, _)) in ys.iter().enumerate() {
+            assert_eq!(*x, i as u64);
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Plain-text table rendering for experiment output (Table I, figure data
+//! series). Column widths auto-size; numeric cells are right-aligned.
+
+/// A simple text table builder.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: Option<String>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: None,
+        }
+    }
+
+    pub fn with_title(mut self, title: &str) -> Self {
+        self.title = Some(title.to_string());
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    /// Convenience: format a float with `prec` decimals; "-" for None.
+    pub fn num(x: Option<f64>, prec: usize) -> String {
+        match x {
+            Some(v) => format!("{v:.prec$}"),
+            None => "-".to_string(),
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let is_numeric = |s: &str| s.parse::<f64>().is_ok() || s == "-";
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        out.push_str(&sep);
+        out.push('\n');
+        for (i, h) in self.header.iter().enumerate() {
+            out.push_str(&format!(" {:<w$} ", h, w = widths[i]));
+            if i + 1 < ncols {
+                out.push('|');
+            }
+        }
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                if is_numeric(c) {
+                    out.push_str(&format!(" {:>w$} ", c, w = widths[i]));
+                } else {
+                    out.push_str(&format!(" {:<w$} ", c, w = widths[i]));
+                }
+                if i + 1 < ncols {
+                    out.push('|');
+                }
+            }
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["model", "acc", "energy"]).with_title("Table I");
+        t.row(vec!["Top-2".into(), "64.1".into(), "1.00".into()]);
+        t.row(vec!["DES(0.6,2)".into(), "64.2".into(), "0.12".into()]);
+        let s = t.render();
+        assert!(s.contains("Table I"));
+        assert!(s.contains("DES(0.6,2)"));
+        assert!(s.lines().count() >= 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn num_formats() {
+        assert_eq!(Table::num(Some(1.23456), 2), "1.23");
+        assert_eq!(Table::num(None, 2), "-");
+    }
+}

@@ -1,0 +1,173 @@
+//! Failure-injection tests: malformed artifacts, bad configs and
+//! degenerate workloads must fail loudly with useful errors — never
+//! panic, hang, or silently serve garbage.
+
+use dmoe::coordinator::{DmoeServer, ServePolicy};
+use dmoe::moe::Manifest;
+use dmoe::runtime::ModelRuntime;
+use dmoe::workload::{EvalSet, Query};
+use dmoe::SystemConfig;
+
+fn temp_dir(tag: &str) -> String {
+    let dir = std::env::temp_dir().join(format!("dmoe-fi-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.to_str().unwrap().to_string()
+}
+
+#[test]
+fn missing_manifest_errors_cleanly() {
+    let dir = temp_dir("none");
+    let err = Manifest::load(&dir).unwrap_err();
+    assert!(err.to_string().contains("manifest.json"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_manifest_json_errors() {
+    let dir = temp_dir("corrupt");
+    std::fs::write(format!("{dir}/manifest.json"), "{ not json !!!").unwrap();
+    let err = Manifest::load(&dir).unwrap_err();
+    assert!(err.to_string().to_lowercase().contains("parse"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn manifest_with_missing_hlo_files_fails_at_load() {
+    let dir = temp_dir("nohlo");
+    std::fs::write(
+        format!("{dir}/manifest.json"),
+        r#"{
+          "model": {"vocab":16,"d_model":8,"ffn":16,"experts":1,"layers":1,"heads":2,"seq_len":4},
+          "blocks": {"embed":"embed.hlo.txt","head":"head.hlo.txt",
+                     "attn":["a0.hlo.txt"],"gate":["g0.hlo.txt"],"ffn":[["f00.hlo.txt"]]}
+        }"#,
+    )
+    .unwrap();
+    // Manifest parses (structure is valid)…
+    let m = Manifest::load(&dir).unwrap();
+    assert_eq!(m.model.experts, 1);
+    // …but the runtime must fail on the missing HLO file with context.
+    let err = match ModelRuntime::load(&dir) {
+        Ok(_) => panic!("runtime loaded with missing HLO files"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("embed.hlo.txt"), "error lacks file context: {msg}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn truncated_hlo_text_fails_to_parse() {
+    let real = std::env::var("DMOE_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    if !std::path::Path::new(&format!("{real}/manifest.json")).exists() {
+        eprintln!("skipping: needs artifacts");
+        return;
+    }
+    let dir = temp_dir("trunc");
+    // Copy the manifest + all blocks, then truncate one block file.
+    for entry in std::fs::read_dir(&real).unwrap() {
+        let p = entry.unwrap().path();
+        if let Some(name) = p.file_name().and_then(|n| n.to_str()) {
+            if name.ends_with(".json") || name.ends_with(".hlo.txt") {
+                std::fs::copy(&p, format!("{dir}/{name}")).unwrap();
+            }
+        }
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let victim = manifest.path(&manifest.embed);
+    let text = std::fs::read_to_string(&victim).unwrap();
+    std::fs::write(&victim, &text[..text.len() / 3]).unwrap();
+    assert!(
+        ModelRuntime::load(&dir).is_err(),
+        "truncated HLO must not load"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn malformed_queries_rejected() {
+    let dir = std::env::var("DMOE_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        eprintln!("skipping: needs artifacts");
+        return;
+    }
+    let mut cfg = SystemConfig::default();
+    cfg.artifacts_dir = dir;
+    let mut server = DmoeServer::new(&cfg).unwrap();
+    let layers = server.layers();
+    let policy = ServePolicy::jesa(0.8, 2, layers);
+
+    // Source expert out of range.
+    let q = Query {
+        id: 0,
+        source_expert: 99,
+        tokens: vec![1, 2, 3],
+        labels: vec![2, 3, 4],
+        domain: 0,
+    };
+    assert!(server.serve_batch(&[q], &policy).is_err());
+
+    // Oversized token block.
+    let seq = server.runtime().seq_len();
+    let q = Query {
+        id: 1,
+        source_expert: 0,
+        tokens: vec![0; seq + 1],
+        labels: vec![0; seq + 1],
+        domain: 0,
+    };
+    assert!(server.serve_batch(&[q], &policy).is_err());
+
+    // Empty query.
+    let q = Query {
+        id: 2,
+        source_expert: 0,
+        tokens: vec![],
+        labels: vec![],
+        domain: 0,
+    };
+    assert!(server.serve_batch(&[q], &policy).is_err());
+
+    // Duplicate source assignment.
+    let mk = |id| Query {
+        id,
+        source_expert: 0,
+        tokens: vec![1, 2],
+        labels: vec![2, 3],
+        domain: 0,
+    };
+    assert!(server.serve_batch(&[mk(3), mk(4)], &policy).is_err());
+
+    // Wrong importance-schedule width.
+    let bad_policy = ServePolicy::jesa(0.8, 2, layers + 1);
+    assert!(server.serve_batch(&[mk(5)], &bad_policy).is_err());
+
+    // And a healthy query still works afterwards (server not poisoned).
+    let ok = server.serve_batch(&[mk(6)], &policy).unwrap();
+    assert_eq!(ok.total, 2);
+}
+
+#[test]
+fn eval_set_parse_failures() {
+    let dir = temp_dir("eval");
+    let path = format!("{dir}/bad.json");
+    std::fs::write(&path, r#"{"name":"x","mixture":[1.0],"tokens":"nope"}"#).unwrap();
+    assert!(EvalSet::load(&path).is_err());
+    std::fs::write(
+        &path,
+        r#"{"name":"x","mixture":[1.0],"tokens":[[1]],"labels":[[2]],"domains":["zero"]}"#,
+    )
+    .unwrap();
+    assert!(EvalSet::load(&path).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn invalid_configs_rejected_before_serving() {
+    let mut cfg = SystemConfig::default();
+    cfg.moe.max_active = 0;
+    assert!(cfg.validate().is_err());
+    cfg = SystemConfig::default();
+    cfg.channel.path_loss = 0.0;
+    assert!(cfg.validate().is_err());
+}

@@ -1,0 +1,314 @@
+//! Property-based invariant tests (in-tree generator loops; the
+//! environment vendors no proptest, so we drive randomized cases from the
+//! deterministic xoshiro PRNG — failures print the seed for replay).
+
+use dmoe::assignment::hungarian_min_cost;
+use dmoe::channel::{ChannelModel, ChannelState};
+use dmoe::config::{ChannelConfig, EnergyConfig, SystemConfig};
+use dmoe::energy::EnergyModel;
+use dmoe::gating::{GateScores, SyntheticGate};
+use dmoe::jesa::{solve_round, AllocationMode, JesaOptions, RoundProblem, SelectionPolicy};
+use dmoe::selection::{des, exhaustive, greedy, topk, SelectionProblem};
+use dmoe::util::json::Json;
+use dmoe::util::rng::Xoshiro256pp;
+
+fn random_problem(rng: &mut Xoshiro256pp, k: usize, d: usize, structured: bool) -> SelectionProblem {
+    let scores: Vec<f64> = if structured && rng.next_f64() < 0.3 {
+        // Spiky: one dominant expert (common with a trained gate).
+        let hot = rng.range_usize(0, k);
+        (0..k)
+            .map(|j| if j == hot { 10.0 } else { rng.next_f64() })
+            .collect()
+    } else {
+        (0..k).map(|_| rng.next_f64_open()).collect()
+    };
+    let sum: f64 = scores.iter().sum();
+    let scores: Vec<f64> = scores.iter().map(|x| x / sum).collect();
+    let costs: Vec<f64> = (0..k)
+        .map(|_| {
+            if structured && rng.next_f64() < 0.15 {
+                f64::INFINITY // starved link
+            } else if structured && rng.next_f64() < 0.1 {
+                0.0 // free in-situ-like expert
+            } else {
+                rng.next_f64_open() * 5.0
+            }
+        })
+        .collect();
+    let threshold = rng.next_f64();
+    SelectionProblem::new(scores, costs, threshold, d)
+}
+
+/// DES == exhaustive on structured instances (ties, spikes, inf costs).
+#[test]
+fn prop_des_optimal_on_structured_instances() {
+    let mut rng = Xoshiro256pp::seed_from_u64(0x5EED_0001);
+    for trial in 0..400 {
+        let k = rng.range_usize(1, 13);
+        let d = rng.range_usize(1, k + 1);
+        let p = random_problem(&mut rng, k, d, true);
+        let (a, _) = des::solve(&p);
+        let b = exhaustive::solve(&p);
+        assert_eq!(a.fallback, b.fallback, "trial {trial}: {p:?}");
+        if a.cost.is_finite() || b.cost.is_finite() {
+            assert!(
+                (a.cost - b.cost).abs() < 1e-9,
+                "trial {trial}: DES {} != oracle {} on {p:?}",
+                a.cost,
+                b.cost
+            );
+        }
+    }
+}
+
+/// Every algorithm returns structurally valid selections.
+#[test]
+fn prop_selection_outputs_valid() {
+    let mut rng = Xoshiro256pp::seed_from_u64(0x5EED_0002);
+    for _ in 0..300 {
+        let k = rng.range_usize(1, 16);
+        let d = rng.range_usize(1, k + 1);
+        let p = random_problem(&mut rng, k, d, true);
+        for sel in [
+            des::solve(&p).0,
+            greedy::solve(&p),
+            topk::solve(&p, d),
+            exhaustive::solve(&p),
+        ] {
+            assert!(sel.selected.len() <= k);
+            assert!(sel.selected.windows(2).all(|w| w[0] < w[1]), "sorted unique");
+            assert!(sel.selected.iter().all(|&j| j < k));
+            let score: f64 = sel.selected.iter().map(|&j| p.scores[j]).sum();
+            assert!((score - sel.score).abs() < 1e-9);
+        }
+    }
+}
+
+/// DES never selects an unreachable expert when a feasible finite
+/// alternative exists, and its reported cost is exactly the sum.
+#[test]
+fn prop_des_cost_consistency() {
+    let mut rng = Xoshiro256pp::seed_from_u64(0x5EED_0003);
+    for _ in 0..300 {
+        let k = rng.range_usize(2, 12);
+        let d = rng.range_usize(1, k + 1);
+        let p = random_problem(&mut rng, k, d, true);
+        let (sel, _) = des::solve(&p);
+        let cost: f64 = sel.selected.iter().map(|&j| p.costs[j]).sum();
+        assert!(
+            (cost - sel.cost).abs() < 1e-9 || (cost.is_infinite() && sel.cost.is_infinite())
+        );
+        if !sel.fallback {
+            assert!(sel.cost.is_finite(), "non-fallback selection must be reachable");
+            assert!(p.is_feasible(&sel.selected));
+        }
+    }
+}
+
+/// Hungarian matches an independent greedy lower-bound sanity relation:
+/// optimal cost >= sum of per-row minima, and <= any greedy assignment.
+#[test]
+fn prop_hungarian_bounds() {
+    let mut rng = Xoshiro256pp::seed_from_u64(0x5EED_0004);
+    for _ in 0..200 {
+        let n = rng.range_usize(1, 10);
+        let m = rng.range_usize(n, n + 10);
+        let cost: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..m).map(|_| rng.next_f64() * 50.0).collect())
+            .collect();
+        let (assign, total) = hungarian_min_cost(&cost).unwrap();
+        let row_min_sum: f64 = cost
+            .iter()
+            .map(|r| r.iter().cloned().fold(f64::INFINITY, f64::min))
+            .sum();
+        assert!(total >= row_min_sum - 1e-9);
+        // Greedy row-by-row with exclusion.
+        let mut used = vec![false; m];
+        let mut greedy_total = 0.0;
+        for r in 0..n {
+            let (c, v) = (0..m)
+                .filter(|&c| !used[c])
+                .map(|c| (c, cost[r][c]))
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            used[c] = true;
+            greedy_total += v;
+        }
+        assert!(total <= greedy_total + 1e-9, "optimal beat by greedy");
+        // Permutation validity.
+        let mut seen = std::collections::HashSet::new();
+        for c in assign {
+            assert!(seen.insert(c));
+        }
+    }
+}
+
+/// JESA invariants across random rounds: exclusivity, C1/C2 (modulo
+/// fallbacks), finite energy, monotone vs iteration budget.
+#[test]
+fn prop_jesa_round_invariants() {
+    let mut rng = Xoshiro256pp::seed_from_u64(0x5EED_0005);
+    for trial in 0..40 {
+        let k = rng.range_usize(2, 6);
+        let m = rng.range_usize(k * (k - 1), 4 * k * k);
+        let tokens = rng.range_usize(1, 5);
+        let threshold = rng.next_f64() * 0.8;
+        let d = rng.range_usize(1, k + 1);
+
+        let ch_cfg = ChannelConfig {
+            subcarriers: m,
+            ..ChannelConfig::default()
+        };
+        let mut ch = ChannelModel::new(ch_cfg.clone(), k, 0xAA00 + trial);
+        let state = ch.realize();
+        let gate = SyntheticGate::new(k, 1.0);
+        let gates: Vec<Vec<GateScores>> = (0..k)
+            .map(|_| (0..tokens).map(|_| gate.sample(&mut rng)).collect())
+            .collect();
+        let problem = RoundProblem {
+            gates,
+            threshold,
+            max_active: d,
+        };
+        let energy = EnergyModel::new(ch_cfg, EnergyConfig::paper(k, 1024.0));
+        let sol = solve_round(&state, &problem, &energy, &JesaOptions::default());
+
+        assert!(sol.allocation.is_exclusive(), "trial {trial}: C3 violated");
+        assert!(sol.energy.total_j().is_finite() && sol.energy.total_j() >= 0.0);
+        for (i, row) in sol.selections.iter().enumerate() {
+            for (n, sel) in row.iter().enumerate() {
+                assert!(sel.selected.len() <= d, "trial {trial}: C2 violated");
+                if !sel.fallback {
+                    let score: f64 = sel
+                        .selected
+                        .iter()
+                        .map(|&j| problem.gates[i][n].score(j))
+                        .sum();
+                    assert!(
+                        score >= threshold - 1e-9,
+                        "trial {trial}: C1 violated at ({i},{n})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Energy ordering across policies holds on random instances:
+/// LB <= JESA <= Top-D (within tolerance, same instance).
+#[test]
+fn prop_policy_energy_ordering() {
+    let mut rng = Xoshiro256pp::seed_from_u64(0x5EED_0006);
+    for trial in 0..20 {
+        let k = 4;
+        let ch_cfg = ChannelConfig {
+            subcarriers: 32,
+            ..ChannelConfig::default()
+        };
+        let mut ch = ChannelModel::new(ch_cfg.clone(), k, 0xBB00 + trial);
+        let state = ch.realize();
+        let gate = SyntheticGate::new(k, 1.0);
+        let gates: Vec<Vec<GateScores>> = (0..k)
+            .map(|_| (0..3).map(|_| gate.sample(&mut rng)).collect())
+            .collect();
+        let problem = RoundProblem {
+            gates,
+            threshold: 0.5,
+            max_active: 2,
+        };
+        let energy = EnergyModel::new(ch_cfg, EnergyConfig::paper(k, 8192.0));
+        let run = |policy, allocation| {
+            solve_round(
+                &state,
+                &problem,
+                &energy,
+                &JesaOptions {
+                    policy,
+                    allocation,
+                    ..JesaOptions::default()
+                },
+            )
+            .energy
+            .total_j()
+        };
+        let jesa = run(SelectionPolicy::Des, AllocationMode::Exclusive);
+        let lb = run(SelectionPolicy::Des, AllocationMode::LowerBound);
+        let top = run(SelectionPolicy::TopK(2), AllocationMode::Exclusive);
+        assert!(lb <= jesa + 1e-9, "trial {trial}: LB {lb} > JESA {jesa}");
+        assert!(jesa <= top + 1e-9, "trial {trial}: JESA {jesa} > Top-2 {top}");
+    }
+}
+
+/// JSON fuzz: parser never panics on mangled valid documents and
+/// round-trips whatever it accepts.
+#[test]
+fn prop_json_fuzz_roundtrip() {
+    let base = r#"{"a":[1,2.5,"s",false,null],"b":{"c":-3e2,"d":"é"}}"#;
+    let mut rng = Xoshiro256pp::seed_from_u64(0x5EED_0007);
+    for _ in 0..2000 {
+        let mut bytes = base.as_bytes().to_vec();
+        let flips = rng.range_usize(0, 4);
+        for _ in 0..flips {
+            let i = rng.range_usize(0, bytes.len());
+            bytes[i] = (rng.next_below(94) + 32) as u8;
+        }
+        if let Ok(text) = std::str::from_utf8(&bytes) {
+            if let Ok(v) = Json::parse(text) {
+                let v2 = Json::parse(&v.to_string()).expect("reserialized must parse");
+                assert_eq!(v, v2);
+            }
+        }
+    }
+}
+
+/// Channel realizations stay physical under extreme configs.
+#[test]
+fn prop_channel_physical() {
+    let mut rng = Xoshiro256pp::seed_from_u64(0x5EED_0008);
+    for _ in 0..20 {
+        let cfg = ChannelConfig {
+            b0_hz: rng.range_f64(1e3, 1e8),
+            p0_w: rng.range_f64(1e-6, 1.0),
+            snr_db: rng.range_f64(-10.0, 40.0),
+            subcarriers: rng.range_usize(1, 64),
+            path_loss: rng.range_f64(1e-6, 1.0),
+        };
+        let k = rng.range_usize(1, 5);
+        let mut ch = ChannelModel::new(cfg, k, rng.next_u64());
+        let st: ChannelState = ch.realize();
+        for i in 0..k {
+            for j in 0..k {
+                for m in 0..st.subcarriers() {
+                    let r = st.rate(i, j, m);
+                    if i == j {
+                        assert!(r.is_infinite());
+                    } else {
+                        assert!(r > 0.0 && r.is_finite());
+                        assert!(st.gain(i, j, m) >= 0.0);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// System config round-trips through JSON for random valid settings.
+#[test]
+fn prop_config_roundtrip() {
+    let mut rng = Xoshiro256pp::seed_from_u64(0x5EED_0009);
+    for _ in 0..100 {
+        let mut cfg = SystemConfig::default();
+        cfg.moe.experts = rng.range_usize(1, 16);
+        cfg.moe.layers = rng.range_usize(1, 40);
+        cfg.moe.max_active = rng.range_usize(1, cfg.moe.experts + 1);
+        cfg.energy = EnergyConfig::paper(cfg.moe.experts, rng.range_f64(1.0, 1e5));
+        cfg.selection.z = rng.next_f64();
+        cfg.selection.gamma0 = rng.next_f64();
+        cfg.channel.subcarriers = rng.range_usize(1, 2048);
+        cfg.workload.seed = rng.next_u64() >> 12;
+        cfg.validate().unwrap();
+        let text = cfg.to_json().to_string_pretty();
+        let back = SystemConfig::from_json_str(&text).unwrap();
+        assert_eq!(cfg, back);
+    }
+}

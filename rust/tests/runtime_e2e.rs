@@ -1,0 +1,245 @@
+//! End-to-end integration tests over the real AOT artifacts.
+//!
+//! These need `make artifacts` to have run (they are skipped with a
+//! message otherwise, so `cargo test` stays green on a fresh checkout).
+//! The parity test replays the Python-recorded selection masks through
+//! the Rust PJRT pipeline and asserts the logits match `forward_select`
+//! to float tolerance — proving L1 (Pallas), L2 (JAX blocks) and L3
+//! (aggregation, routing) compose identically across the language
+//! boundary.
+
+use dmoe::coordinator::{DmoeServer, ServePolicy};
+use dmoe::runtime::{Matrix, ModelRuntime};
+use dmoe::util::json::Json;
+use dmoe::workload::{load_eval_sets, Query};
+use dmoe::SystemConfig;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("DMOE_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts at {dir}/manifest.json (run `make artifacts`)");
+        None
+    }
+}
+
+fn load_runtime() -> Option<ModelRuntime> {
+    artifacts_dir().map(|d| ModelRuntime::load(&d).expect("artifacts must load"))
+}
+
+#[test]
+fn blocks_load_and_execute() {
+    let Some(rt) = load_runtime() else { return };
+    let meta = rt.manifest.model.clone();
+    let tokens: Vec<i32> = (0..meta.seq_len as i32).collect();
+    let h = rt.embed(&tokens).unwrap();
+    assert_eq!((h.rows(), h.cols()), (meta.seq_len, meta.d_model));
+
+    let h1 = rt.attn(0, &h).unwrap();
+    assert_eq!((h1.rows(), h1.cols()), (meta.seq_len, meta.d_model));
+    // Residual block must change the stream.
+    assert!(h1.max_abs_diff(&h) > 0.0);
+
+    let g = rt.gate(0, &h1).unwrap();
+    assert_eq!((g.rows(), g.cols()), (meta.seq_len, meta.experts));
+    for t in 0..g.rows() {
+        let sum: f32 = g.row(t).iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "gate row {t} sums to {sum}");
+        assert!(g.row(t).iter().all(|&x| x >= 0.0));
+    }
+
+    let f = rt.ffn(0, 0, &h1).unwrap();
+    assert_eq!((f.rows(), f.cols()), (meta.seq_len, meta.d_model));
+
+    let logits = rt.head(&h1).unwrap();
+    assert_eq!((logits.rows(), logits.cols()), (meta.seq_len, meta.vocab));
+}
+
+#[test]
+fn parity_with_jax_forward_select() {
+    let Some(rt) = load_runtime() else { return };
+    let meta = rt.manifest.model.clone();
+    let parity_file = rt.manifest.parity.clone().expect("manifest lists parity fixture");
+    let text = std::fs::read_to_string(rt.manifest.path(&parity_file)).unwrap();
+    let v = Json::parse(&text).unwrap();
+
+    let tokens: Vec<i32> = v
+        .get("tokens")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as i32)
+        .collect();
+    // masks[l][t][k] in {0,1}
+    let masks = v.get("masks").as_arr().unwrap();
+    let expected_rows = v.get("logits").as_arr().unwrap();
+
+    // Replay: embed -> per layer (attn, gate, masked eq.-8 aggregation) -> head.
+    let mut h = rt.embed(&tokens).unwrap();
+    for l in 0..meta.layers {
+        h = rt.attn(l, &h).unwrap();
+        let g = rt.gate(l, &h).unwrap();
+        let layer_mask = &masks[l];
+        // All experts process the full block (parity fixture routes every
+        // token somewhere; running all experts is fine for parity).
+        let outs: Vec<Matrix> = (0..meta.experts)
+            .map(|j| rt.ffn(l, j, &h).unwrap())
+            .collect();
+        let mut agg = h.clone();
+        for t in 0..meta.seq_len {
+            let row_mask = layer_mask.at(t);
+            let selected: Vec<usize> = (0..meta.experts)
+                .filter(|&j| row_mask.at(j).as_f64().unwrap_or(0.0) > 0.5)
+                .collect();
+            if selected.is_empty() {
+                continue;
+            }
+            let gsum: f32 = selected.iter().map(|&j| g.get(t, j)).sum();
+            for &j in &selected {
+                let w = g.get(t, j) / gsum.max(1e-12);
+                agg.add_scaled_row(t, &outs[j], t, w);
+            }
+        }
+        h = agg;
+    }
+    let logits = rt.head(&h).unwrap();
+
+    let mut max_diff = 0.0f64;
+    for t in 0..meta.seq_len {
+        let row = expected_rows[t].as_arr().unwrap();
+        for c in 0..meta.vocab {
+            let e = row[c].as_f64().unwrap();
+            max_diff = max_diff.max((logits.get(t, c) as f64 - e).abs());
+        }
+    }
+    assert!(
+        max_diff < 2e-3,
+        "rust pipeline diverges from jax forward_select: max |Δlogit| = {max_diff}"
+    );
+    println!("parity OK: max |Δlogit| = {max_diff:.2e}");
+}
+
+#[test]
+fn serve_batch_end_to_end() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = SystemConfig::default();
+    cfg.artifacts_dir = dir;
+    let mut server = DmoeServer::new(&cfg).unwrap();
+    let layers = server.layers();
+
+    let eval_sets = load_eval_sets(&server.runtime().manifest).unwrap();
+    assert_eq!(eval_sets.len(), 5, "five benchmark analogues expected");
+
+    let policy = ServePolicy::jesa(0.8, 2, layers);
+    let result = server
+        .serve_eval_set(&eval_sets[0], &policy, Some(2))
+        .unwrap();
+    assert!(result.total > 0);
+    assert!(result.accuracy() > 0.0 && result.accuracy() <= 1.0);
+    assert!(result.ledger.total().total_j() > 0.0);
+    assert!(result.radio_s > 0.0);
+    assert!(result.metrics.counter("ffn_exec") > 0);
+    // Selection pattern covers every layer.
+    for l in 0..layers {
+        let any: f64 = (0..server.experts())
+            .map(|j| result.pattern.probability(l, j))
+            .sum();
+        assert!(any > 0.0, "no selections recorded at layer {l}");
+    }
+}
+
+#[test]
+fn forced_single_expert_matches_width_one() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = SystemConfig::default();
+    cfg.artifacts_dir = dir;
+    let mut server = DmoeServer::new(&cfg).unwrap();
+    let layers = server.layers();
+    let seq = server.runtime().seq_len();
+
+    let q = Query {
+        id: 0,
+        source_expert: 0,
+        tokens: (0..seq as i32).collect(),
+        labels: (1..=seq as i32).collect(),
+        domain: 0,
+    };
+    let result = server
+        .serve_batch(&[q], &ServePolicy::forced(1, layers))
+        .unwrap();
+    // Forced(1): every token selects exactly expert 1 at every layer.
+    for l in 0..layers {
+        assert!((result.pattern.probability(l, 1) - 1.0).abs() < 1e-12);
+        assert_eq!(result.pattern.probability(l, 0), 0.0);
+    }
+    // All tokens from source 0 to expert 1 are remote.
+    assert_eq!(
+        result.metrics.counter("remote_tokens"),
+        (seq * layers) as u64
+    );
+}
+
+#[test]
+fn des_saves_energy_vs_topk_on_real_model() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = SystemConfig::default();
+    cfg.artifacts_dir = dir;
+    let mut server = DmoeServer::new(&cfg).unwrap();
+    let layers = server.layers();
+    let eval_sets = load_eval_sets(&server.runtime().manifest).unwrap();
+
+    let des = server
+        .serve_eval_set(&eval_sets[0], &ServePolicy::jesa(0.7, 2, layers), Some(2))
+        .unwrap();
+    let topk = server
+        .serve_eval_set(&eval_sets[0], &ServePolicy::topk(2, layers), Some(2))
+        .unwrap();
+    assert!(
+        des.ledger.total().total_j() < topk.ledger.total().total_j(),
+        "DES ({} J) should beat Top-2 ({} J)",
+        des.ledger.total().total_j(),
+        topk.ledger.total().total_j()
+    );
+}
+
+#[test]
+fn node_churn_reroutes_around_offline_expert() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = SystemConfig::default();
+    cfg.artifacts_dir = dir;
+    let mut server = DmoeServer::new(&cfg).unwrap();
+    let layers = server.layers();
+    let seq = server.runtime().seq_len();
+    let mk = |src| Query {
+        id: src as u64,
+        source_expert: src,
+        tokens: (0..seq as i32).collect(),
+        labels: (1..=seq as i32).collect(),
+        domain: 0,
+    };
+    let policy = ServePolicy::jesa(0.8, 2, layers);
+
+    // Expert 2 leaves the ad-hoc system (paper §VIII extension).
+    server.set_expert_online(2, false);
+    assert!(!server.is_expert_online(2));
+
+    // Queries can no longer be assigned to it…
+    assert!(server.serve_batch(&[mk(2)], &policy).is_err());
+
+    // …and serving from another source never routes tokens to it.
+    let r = server.serve_batch(&[mk(0)], &policy).unwrap();
+    for l in 0..layers {
+        assert_eq!(
+            r.pattern.probability(l, 2),
+            0.0,
+            "offline expert selected at layer {l}"
+        );
+    }
+    assert!(r.total > 0);
+
+    // Rejoin: selections may include it again.
+    server.set_expert_online(2, true);
+    let r2 = server.serve_batch(&[mk(0)], &policy).unwrap();
+    assert!(r2.total > 0);
+}
