@@ -17,7 +17,7 @@ use dmoe::util::rng::Xoshiro256pp;
 use dmoe::workload::load_eval_sets;
 use dmoe::SystemConfig;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dmoe::util::error::Result<()> {
     let cfg = SystemConfig::default();
 
     if std::path::Path::new(&format!("{}/manifest.json", cfg.artifacts_dir)).exists() {
@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
 }
 
 /// The real thing: one batch of real queries through the DMoE protocol.
-fn serve_real_model(cfg: &SystemConfig) -> anyhow::Result<()> {
+fn serve_real_model(cfg: &SystemConfig) -> dmoe::util::error::Result<()> {
     let mut server = DmoeServer::new(cfg)?;
     println!(
         "loaded tiny MoE: L={} K={} on {}",

@@ -13,7 +13,7 @@ use dmoe::coordinator::DmoeServer;
 use dmoe::util::cli::Args;
 use dmoe::SystemConfig;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dmoe::util::error::Result<()> {
     let args = Args::from_env();
     let mut cfg = SystemConfig::default();
     cfg.artifacts_dir = args.get_or("artifacts", &cfg.artifacts_dir);

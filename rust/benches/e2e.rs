@@ -8,6 +8,10 @@ use dmoe::workload::load_eval_sets;
 use dmoe::SystemConfig;
 
 fn main() {
+    if !dmoe::runtime::pjrt_available() {
+        println!("skipping e2e bench: built without the `xla` feature");
+        return;
+    }
     let mut cfg = SystemConfig::default();
     cfg.artifacts_dir =
         std::env::var("DMOE_ARTIFACTS").unwrap_or_else(|_| cfg.artifacts_dir.clone());

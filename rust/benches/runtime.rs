@@ -7,6 +7,10 @@ use dmoe::util::bench::{black_box, Bencher};
 use dmoe::util::rng::Xoshiro256pp;
 
 fn main() {
+    if !dmoe::runtime::pjrt_available() {
+        println!("skipping runtime bench: built without the `xla` feature");
+        return;
+    }
     let dir = std::env::var("DMOE_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
     if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
         println!("skipping runtime bench: no artifacts at {dir} (run `make artifacts`)");

@@ -1,0 +1,93 @@
+//! Serving-engine bench: traffic generation, cached vs uncached round
+//! solves, and end-to-end engine throughput (simulated queries per
+//! wall-clock second — the number the ROADMAP's scaling work moves).
+
+use dmoe::channel::ChannelModel;
+use dmoe::config::SystemConfig;
+use dmoe::coordinator::ServePolicy;
+use dmoe::energy::EnergyModel;
+use dmoe::gating::{GateScores, SyntheticGate};
+use dmoe::jesa::JesaOptions;
+use dmoe::serve::{
+    solve_quantized, ArrivalProcess, QuantizerConfig, QueueConfig, ServeEngine, ServeOptions,
+    SolutionCache, TrafficConfig, TrafficGenerator,
+};
+use dmoe::util::bench::{black_box, Bencher};
+use dmoe::util::rng::Xoshiro256pp;
+
+fn main() {
+    let mut b = Bencher::new();
+    let cfg = SystemConfig::default();
+    let k = cfg.moe.experts;
+    let layers = cfg.moe.layers;
+
+    println!("# traffic generation (10k queries)\n");
+    for process in [
+        ArrivalProcess::Poisson { rate_qps: 100.0 },
+        ArrivalProcess::bursty_around(100.0, 2.0),
+        ArrivalProcess::diurnal_around(100.0, 3.0, 60.0),
+    ] {
+        let traffic = TrafficConfig {
+            process: process.clone(),
+            queries: 10_000,
+            tokens_per_query: 4,
+            ..TrafficConfig::poisson(1.0, 1)
+        };
+        let generator = TrafficGenerator::new(traffic, k, layers);
+        b.bench(&format!("traffic/{}", process.label()), || {
+            black_box(generator.generate())
+        });
+    }
+
+    println!("\n# quantized round solve: cache miss vs hit\n");
+    let energy = EnergyModel::new(cfg.channel.clone(), cfg.energy.clone());
+    let mut channel = ChannelModel::new(cfg.channel.clone(), k, 3);
+    let state = channel.realize();
+    let gate = SyntheticGate::new(k, 1.0);
+    let mut rng = Xoshiro256pp::seed_from_u64(5);
+    let gates: Vec<Vec<GateScores>> = (0..k)
+        .map(|_| (0..16).map(|_| gate.sample(&mut rng)).collect())
+        .collect();
+    let quant = QuantizerConfig::default();
+    let opts = JesaOptions::default();
+
+    let mut cold = SolutionCache::new(0); // capacity 0: every solve misses
+    b.bench("round/solve_uncached", || {
+        black_box(solve_quantized(
+            &mut cold, &quant, &state, &gates, 0.4, 2, &energy, &opts,
+        ))
+    });
+    let mut warm = SolutionCache::new(64);
+    solve_quantized(&mut warm, &quant, &state, &gates, 0.4, 2, &energy, &opts);
+    b.bench("round/solve_cached_hit", || {
+        black_box(solve_quantized(
+            &mut warm, &quant, &state, &gates, 0.4, 2, &energy, &opts,
+        ))
+    });
+
+    println!("\n# end-to-end engine (1000 queries, poisson)\n");
+    for cache_capacity in [0usize, 4096] {
+        let policy = ServePolicy::jesa(0.8, 2, layers);
+        let traffic = TrafficConfig {
+            process: ArrivalProcess::Poisson { rate_qps: 50.0 },
+            queries: 1000,
+            tokens_per_query: 4,
+            ..TrafficConfig::poisson(1.0, 1)
+        };
+        let opts = ServeOptions {
+            cache_capacity,
+            workers: 1,
+            ..ServeOptions::new(policy, QueueConfig::for_system(k, 0.5))
+        };
+        let engine = ServeEngine::new(&cfg, opts);
+        let r = b.bench(&format!("engine/1k_queries/cache={cache_capacity}"), || {
+            black_box(engine.run(&traffic))
+        });
+        let report = engine.run(&traffic);
+        println!(
+            "cache={cache_capacity:<5} -> {:.0} q/s engine speed, hit rate {:.1}%",
+            1000.0 / r.mean_s(),
+            report.cache.hit_rate() * 100.0
+        );
+    }
+}

@@ -7,15 +7,29 @@
 //! over rows exists.
 
 /// Assignment failure.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum AssignmentError {
-    #[error("cost matrix has {rows} rows but only {cols} columns; need rows <= cols")]
     TooFewColumns { rows: usize, cols: usize },
-    #[error("no feasible (finite-cost) assignment exists for row {row}")]
     Infeasible { row: usize },
-    #[error("cost matrix is ragged or empty")]
     BadShape,
 }
+
+impl std::fmt::Display for AssignmentError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AssignmentError::TooFewColumns { rows, cols } => write!(
+                f,
+                "cost matrix has {rows} rows but only {cols} columns; need rows <= cols"
+            ),
+            AssignmentError::Infeasible { row } => {
+                write!(f, "no feasible (finite-cost) assignment exists for row {row}")
+            }
+            AssignmentError::BadShape => write!(f, "cost matrix is ragged or empty"),
+        }
+    }
+}
+
+impl std::error::Error for AssignmentError {}
 
 /// Solve min-cost assignment. `cost[r][c]` ≥ 0 or `+inf` (forbidden).
 ///

@@ -9,7 +9,7 @@
 use super::{FigureReport, Series};
 use crate::coordinator::{DmoeServer, ServePolicy};
 use crate::workload::load_eval_sets;
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// Sweep values.
 #[derive(Debug, Clone)]

@@ -11,7 +11,7 @@ use super::{FigureReport, Series};
 use crate::coordinator::{DmoeServer, ServePolicy};
 use crate::util::table::Table;
 use crate::workload::load_eval_sets;
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// Run the Fig. 3 experiment. `max_batches` bounds runtime (None = all).
 pub fn run(server: &mut DmoeServer, max_batches: Option<usize>) -> Result<FigureReport> {

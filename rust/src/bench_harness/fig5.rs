@@ -12,7 +12,7 @@ use super::{FigureReport, Series};
 use crate::coordinator::{DmoeServer, ServePolicy};
 use crate::gating::LayerImportance;
 use crate::workload::load_eval_sets;
-use anyhow::Result;
+use crate::util::error::Result;
 
 pub const WINDOW: usize = 2;
 

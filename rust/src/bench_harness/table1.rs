@@ -10,7 +10,7 @@ use super::FigureReport;
 use crate::coordinator::{DmoeServer, ServePolicy};
 use crate::util::table::Table;
 use crate::workload::load_eval_sets;
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// One Table-I row's measurements.
 #[derive(Debug, Clone)]

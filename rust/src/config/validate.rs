@@ -5,16 +5,36 @@
 use super::SystemConfig;
 
 /// Configuration error.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("failed to read/write config file {0}: {1}")]
-    Io(String, #[source] std::io::Error),
-    #[error("failed to parse config: {0}")]
+    Io(String, std::io::Error),
     Parse(String),
-    #[error("config field '{0}' has wrong type, expected {1}")]
     Type(String, String),
-    #[error("invalid config: {0}")]
     Invalid(String),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Io(path, e) => {
+                write!(f, "failed to read/write config file {path}: {e}")
+            }
+            ConfigError::Parse(msg) => write!(f, "failed to parse config: {msg}"),
+            ConfigError::Type(field, expected) => {
+                write!(f, "config field '{field}' has wrong type, expected {expected}")
+            }
+            ConfigError::Invalid(msg) => write!(f, "invalid config: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ConfigError::Io(_, e) => Some(e),
+            _ => None,
+        }
+    }
 }
 
 impl SystemConfig {

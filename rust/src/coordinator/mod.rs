@@ -32,9 +32,9 @@ use crate::jesa::{solve_round, JesaOptions, RoundProblem};
 use crate::metrics::{Metrics, SelectionPattern};
 use crate::protocol::{simulate_round, ComputeModel, RadioTiming, RoutingTable};
 use crate::runtime::{Matrix, ModelRuntime};
+use crate::util::error::{Error, Result};
 use crate::workload::Query;
 use crate::SystemConfig;
-use anyhow::Result;
 use std::collections::BTreeMap;
 
 /// Result of serving one batch of queries.
@@ -169,25 +169,25 @@ impl DmoeServer {
         let k = self.experts();
         let layers = self.layers();
         let seq_len = self.runtime.seq_len();
-        anyhow::ensure!(
+        crate::ensure!(
             queries.len() <= k,
             "batch of {} queries exceeds {k} expert nodes",
             queries.len()
         );
-        anyhow::ensure!(
+        crate::ensure!(
             policy.importance.layers() == layers,
             "policy importance covers {} layers, model has {layers}",
             policy.importance.layers()
         );
         for q in queries {
-            anyhow::ensure!(
+            crate::ensure!(
                 q.source_expert < k && q.tokens.len() <= seq_len && !q.tokens.is_empty(),
                 "query {} malformed (source {}, {} tokens)",
                 q.id,
                 q.source_expert,
                 q.tokens.len()
             );
-            anyhow::ensure!(
+            crate::ensure!(
                 !self.offline[q.source_expert],
                 "query {} assigned to offline expert {}",
                 q.id,
@@ -205,7 +205,7 @@ impl DmoeServer {
         // source expert -> (query index, true token count, hidden states)
         let mut streams: Vec<Option<(usize, usize, Matrix)>> = vec![None; k];
         for (qi, q) in queries.iter().enumerate() {
-            anyhow::ensure!(
+            crate::ensure!(
                 streams[q.source_expert].is_none(),
                 "two queries assigned to expert {}",
                 q.source_expert
@@ -395,6 +395,6 @@ impl DmoeServer {
                 Some(m) => m.merge(r),
             }
         }
-        merged.ok_or_else(|| anyhow::anyhow!("eval set {} is empty", eval.name))
+        merged.ok_or_else(|| Error::msg(format!("eval set {} is empty", eval.name)))
     }
 }

@@ -23,6 +23,11 @@
 //! * [`protocol`] / [`coordinator`] — the DMoE protocol (Fig. 1b) round
 //!   state machine and the edge-server coordinator that drives real model
 //!   inference through PJRT.
+//! * [`serve`] — the continuous multi-user serving engine: open-loop
+//!   arrival processes (Poisson / bursty MMPP / diurnal), admission
+//!   control with QoS-aware shedding, a quantized JESA/DES solution
+//!   cache (bit-identical hits), and a discrete-event serving loop
+//!   reporting throughput, p50/p99 latency, shed rate and hit rate.
 //! * [`runtime`] — AOT bridge: loads `artifacts/*.hlo.txt` produced by
 //!   the build-time JAX/Pallas pipeline and executes them on the PJRT CPU
 //!   client. Python is never on the request path.
@@ -32,7 +37,8 @@
 //! * [`bench_harness`] — drivers that regenerate every table and figure
 //!   of the paper's evaluation section.
 //! * [`util`] — in-tree substrates (PRNG, JSON, CLI, bench harness,
-//!   thread pool) — the environment vendors no ecosystem crates.
+//!   thread pool, error/context) — the environment vendors no ecosystem
+//!   crates.
 
 pub mod assignment;
 pub mod bench_harness;
@@ -47,6 +53,7 @@ pub mod moe;
 pub mod protocol;
 pub mod runtime;
 pub mod selection;
+pub mod serve;
 pub mod util;
 pub mod workload;
 

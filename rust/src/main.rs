@@ -3,7 +3,9 @@
 //! ```text
 //! dmoe <subcommand> [--flags]
 //!
-//!   serve      serve every eval set with a policy, print metrics
+//!   serve      continuous serving engine: arrival process -> admission
+//!              queue -> cached JESA rounds (no artifacts needed)
+//!   eval       serve every eval set with a policy, print metrics
 //!   info       artifact / model / config summary
 //!   table1     Table I  — DES accuracy + normalized energy
 //!   fig3       Fig. 3   — expertise diversity matrix
@@ -17,7 +19,12 @@
 
 use dmoe::bench_harness::{self as bh, FigureReport};
 use dmoe::coordinator::{DmoeServer, ServePolicy};
+use dmoe::serve::{
+    estimate_round_latency_s, ArrivalProcess, QuantizerConfig, QueueConfig, ServeEngine,
+    ServeOptions, TrafficConfig,
+};
 use dmoe::util::cli::Args;
+use dmoe::util::error::Result;
 use dmoe::workload::load_eval_sets;
 use dmoe::SystemConfig;
 
@@ -42,7 +49,7 @@ fn base_config(args: &Args) -> SystemConfig {
     cfg
 }
 
-fn emit(report: &FigureReport, args: &Args) -> anyhow::Result<()> {
+fn emit(report: &FigureReport, args: &Args) -> Result<()> {
     println!("{}", report.render());
     if args.flag("save") || args.subcommand.as_deref() == Some("all") {
         let dir = args.get_or("reports", "reports");
@@ -57,7 +64,7 @@ fn batches(args: &Args) -> Option<usize> {
         .map(|s| s.parse().expect("--batches expects an integer"))
 }
 
-fn dispatch(sub: &str, args: &Args) -> anyhow::Result<()> {
+fn dispatch(sub: &str, args: &Args) -> Result<()> {
     match sub {
         "help" | "--help" => {
             println!("{HELP}");
@@ -65,6 +72,7 @@ fn dispatch(sub: &str, args: &Args) -> anyhow::Result<()> {
         }
         "info" => info(args),
         "serve" => serve(args),
+        "eval" => eval(args),
         "table1" => {
             let mut server = server(args)?;
             let (report, _) = bh::table1::run(&mut server, batches(args))?;
@@ -123,7 +131,7 @@ fn dispatch(sub: &str, args: &Args) -> anyhow::Result<()> {
             let ms: Vec<usize> = match k {
                 2 => vec![2, 3, 4, 6, 8, 12, 16, 32, 64],
                 3 => vec![6, 7, 8, 9, 10],
-                _ => anyhow::bail!("theorem1 validation supports --experts 2 or 3"),
+                _ => dmoe::bail!("theorem1 validation supports --experts 2 or 3"),
             };
             let report = bh::theorem1::run(k, &ms, 2, trials, args.get_u64("seed", 0x7EE0));
             emit(&report, args)
@@ -167,12 +175,12 @@ fn dispatch(sub: &str, args: &Args) -> anyhow::Result<()> {
     }
 }
 
-fn server(args: &Args) -> anyhow::Result<DmoeServer> {
+fn server(args: &Args) -> Result<DmoeServer> {
     let cfg = base_config(args);
     DmoeServer::new(&cfg)
 }
 
-fn info(args: &Args) -> anyhow::Result<()> {
+fn info(args: &Args) -> Result<()> {
     let cfg = base_config(args);
     println!("config:\n{}", cfg.to_json().to_string_pretty());
     match dmoe::moe::Manifest::load(&cfg.artifacts_dir) {
@@ -206,17 +214,101 @@ fn info(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn serve(args: &Args) -> anyhow::Result<()> {
-    let mut server = server(args)?;
-    let layers = server.layers();
-    let policy = match args.get_or("policy", "jesa").as_str() {
+/// Build a policy from `--policy` at the system's layer count.
+fn policy_from_args(args: &Args, layers: usize) -> Result<ServePolicy> {
+    Ok(match args.get_or("policy", "jesa").as_str() {
         "jesa" => ServePolicy::jesa(args.get_f64("gamma0", 0.8), args.get_usize("d", 2), layers),
         "topk" => ServePolicy::topk(args.get_usize("k", 2), layers),
         "homogeneous" => {
             ServePolicy::homogeneous(args.get_f64("z", 0.5), args.get_usize("d", 2), layers)
         }
-        other => anyhow::bail!("unknown --policy {other} (jesa|topk|homogeneous)"),
+        other => dmoe::bail!("unknown --policy {other} (jesa|topk|homogeneous)"),
+    })
+}
+
+/// The continuous serving engine (`dmoe serve`): synthesize an arrival
+/// stream, push it through admission control and cached JESA rounds, and
+/// report throughput, simulated latency percentiles, shed rate and
+/// solution-cache hit rate. Needs no model artifacts.
+fn serve(args: &Args) -> Result<()> {
+    let cfg = base_config(args);
+    let k = cfg.moe.experts;
+    let layers = cfg.moe.layers;
+    let policy = policy_from_args(args, layers)?;
+
+    let queries = args.get_usize("queries", 10_000);
+    let mut traffic = TrafficConfig {
+        queries,
+        domains: args.get_usize("domains", 8),
+        tokens_per_query: args.get_usize("tokens", cfg.workload.tokens_per_query.min(4)),
+        gate_noise: args.get_f64("noise", 0.0),
+        seed: cfg.workload.seed,
+        ..TrafficConfig::poisson(1.0, queries)
     };
+
+    // Capacity probe: mean discrete-event latency of one full round,
+    // used to auto-derive the arrival rate and the queue timeouts.
+    let round_s = estimate_round_latency_s(&cfg, &policy, &traffic, 4).max(1e-9);
+    let capacity_qps = k as f64 / round_s;
+    let rate = match args.get_f64("rate", 0.0) {
+        r if r > 0.0 => r,
+        _ => args.get_f64("utilization", 0.7) * capacity_qps,
+    };
+    traffic.process = match args.get_or("process", "poisson").as_str() {
+        "poisson" => ArrivalProcess::Poisson { rate_qps: rate },
+        "bursty" | "mmpp" => {
+            ArrivalProcess::bursty_around(rate, args.get_f64("dwell", 50.0 * round_s))
+        }
+        "diurnal" => ArrivalProcess::diurnal_around(
+            rate,
+            args.get_f64("peak", 3.0),
+            args.get_f64("period", 500.0 * round_s),
+        ),
+        other => dmoe::bail!("unknown --process {other} (poisson|bursty|diurnal)"),
+    };
+
+    let mut queue = QueueConfig::for_system(k, round_s);
+    queue.capacity = args.get_usize("queue", queue.capacity);
+    queue.batch_queries = args.get_usize("batch", queue.batch_queries).clamp(1, k);
+    queue.max_wait_s = args.get_f64("max-wait", queue.max_wait_s);
+    queue.deadline_s = args.get_f64("deadline", queue.deadline_s);
+    let opts = ServeOptions {
+        cache_capacity: args.get_usize("cache", 4096),
+        quant: QuantizerConfig {
+            log2_step: args.get_f64("step", 3.0),
+            gate_levels: args.get_usize("gate-grid", 32) as u32,
+        },
+        workers: args.get_usize("workers", dmoe::util::pool::default_workers()),
+        seed: cfg.workload.seed ^ 0x5E47E,
+        ..ServeOptions::new(policy, queue)
+    };
+
+    println!(
+        "serve engine: K={k} L={layers} policy {} | process {} rate {:.2} q/s \
+         (capacity ≈ {:.2} q/s, round ≈ {:.3} s)\n",
+        opts.policy.label,
+        traffic.process.label(),
+        traffic.process.mean_qps(),
+        capacity_qps,
+        round_s,
+    );
+
+    let engine = ServeEngine::new(&cfg, opts);
+    let report = engine.run(&traffic);
+    print!("{}", report.render());
+    if args.flag("pattern") {
+        println!("\n{}", report.pattern.render());
+    }
+    Ok(())
+}
+
+/// Legacy model-serving path (`dmoe eval`): serve every eval set of the
+/// compiled tiny MoE with a policy (requires artifacts + the `xla`
+/// feature).
+fn eval(args: &Args) -> Result<()> {
+    let mut server = server(args)?;
+    let layers = server.layers();
+    let policy = policy_from_args(args, layers)?;
     println!(
         "serving with {} on platform {}\n",
         policy.label,
@@ -251,7 +343,12 @@ const HELP: &str = "dmoe — Distributed Mixture-of-Experts at the wireless edge
 
 USAGE: dmoe <subcommand> [--flags]
 
-  serve      serve every eval set with a policy (--policy jesa|topk|homogeneous)
+  serve      continuous serving engine (Poisson/bursty/diurnal arrivals,
+             admission control, JESA solution cache; no artifacts needed)
+             --queries N --process poisson|bursty|diurnal --rate QPS
+             --utilization X --batch N --queue N --max-wait S --deadline S
+             --cache N --step OCTAVES --gate-grid N --noise X --workers N
+  eval       serve every eval set with a policy (--policy jesa|topk|homogeneous)
   info       artifact / model / config summary
   table1     Table I  — DES accuracy + normalized energy
   fig3       Fig. 3   — expertise diversity matrix

@@ -11,14 +11,30 @@
 use crate::util::json::Json;
 
 /// Errors loading/validating the artifact manifest.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ManifestError {
-    #[error("cannot read {0}: {1}")]
-    Io(String, #[source] std::io::Error),
-    #[error("manifest parse error: {0}")]
+    Io(String, std::io::Error),
     Parse(String),
-    #[error("manifest invalid: {0}")]
     Invalid(String),
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Io(path, e) => write!(f, "cannot read {path}: {e}"),
+            ManifestError::Parse(msg) => write!(f, "manifest parse error: {msg}"),
+            ManifestError::Invalid(msg) => write!(f, "manifest invalid: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ManifestError::Io(_, e) => Some(e),
+            _ => None,
+        }
+    }
 }
 
 /// Model hyper-parameters as exported.

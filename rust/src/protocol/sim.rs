@@ -82,6 +82,71 @@ pub struct RoundTimeline {
     pub critical_expert: Option<usize>,
 }
 
+impl RoundTimeline {
+    /// The chain of events that bounds the round — the schedule's
+    /// critical path, chronologically ordered: the forward transfer that
+    /// gated the bottleneck expert's compute start (if any), that
+    /// expert's compute completion, and the final delivery that realizes
+    /// [`RoundTimeline::round_latency_s`]. Empty for an empty round.
+    ///
+    /// This is the knob a latency-aware extension of JESA optimizes, and
+    /// the serving engine's per-round latency is exactly the last event's
+    /// time — asserted by the multi-round serving-loop tests.
+    pub fn critical_path(&self) -> Vec<Event> {
+        const EPS: f64 = 1e-12;
+        // The terminal event: whatever completes at the round latency.
+        // Prefer a backward delivery (remote route); an in-situ-critical
+        // round ends at a compute completion instead.
+        let terminal = self
+            .events
+            .iter()
+            .filter(|e| (e.time() - self.round_latency_s).abs() <= EPS)
+            .max_by(|a, b| {
+                // BackwardDone ranks above ComputeDone above ForwardDone
+                // at equal times (causal order of the three stages).
+                let rank = |e: &Event| match e {
+                    Event::ForwardDone { .. } => 0,
+                    Event::ComputeDone { .. } => 1,
+                    Event::BackwardDone { .. } => 2,
+                };
+                rank(a).cmp(&rank(b))
+            })
+            .cloned();
+        let Some(terminal) = terminal else {
+            return Vec::new();
+        };
+
+        let mut path = vec![terminal.clone()];
+        // The expert whose compute gates the terminal event.
+        let expert = match terminal {
+            Event::BackwardDone { from, .. } => Some(from),
+            Event::ComputeDone { expert, .. } => Some(expert),
+            Event::ForwardDone { .. } => None,
+        };
+        if let Some(j) = expert {
+            if !matches!(terminal, Event::ComputeDone { .. }) {
+                if let Some(compute) = self.events.iter().find(
+                    |e| matches!(e, Event::ComputeDone { expert, .. } if *expert == j),
+                ) {
+                    path.push(compute.clone());
+                }
+            }
+            // The forward arrival that gated the compute start: the
+            // latest inbound transfer to `j`.
+            let gating = self
+                .events
+                .iter()
+                .filter(|e| matches!(e, Event::ForwardDone { to, .. } if *to == j))
+                .max_by(|a, b| a.time().partial_cmp(&b.time()).unwrap());
+            if let Some(f) = gating {
+                path.push(f.clone());
+            }
+        }
+        path.reverse();
+        path
+    }
+}
+
 /// Simulate one round's timeline from a JESA solution.
 ///
 /// `link_rate(i, j)` must return the effective rate the allocation gives
@@ -309,6 +374,63 @@ mod tests {
                     .unwrap()
             });
         assert_eq!(tl.critical_expert, expect);
+    }
+
+    #[test]
+    fn critical_path_is_causal_and_ends_at_round_latency() {
+        for seed in [11u64, 13, 17, 23] {
+            let (state, sol) = solved_round(4, 32, 4, seed);
+            let tl = simulate_round(&state, &sol, &ComputeModel::ramp(4, 1e-3), 8192.0);
+            let path = tl.critical_path();
+            assert!(!path.is_empty(), "non-empty round must have a critical path");
+            // Chronological and causally ordered.
+            for w in path.windows(2) {
+                assert!(w[0].time() <= w[1].time() + 1e-12);
+            }
+            // The path terminates exactly at the round latency.
+            let last = path.last().unwrap();
+            assert!(
+                (last.time() - tl.round_latency_s).abs() <= 1e-12,
+                "path ends at {} but round latency is {}",
+                last.time(),
+                tl.round_latency_s
+            );
+            // Every event on the path concerns one expert: the forward
+            // feeds it, the compute is it, the backward leaves it.
+            let expert = match last {
+                Event::BackwardDone { from, .. } => *from,
+                Event::ComputeDone { expert, .. } => *expert,
+                Event::ForwardDone { to, .. } => *to,
+            };
+            for e in &path {
+                match e {
+                    Event::ForwardDone { to, .. } => assert_eq!(*to, expert),
+                    Event::ComputeDone { expert: j, .. } => assert_eq!(*j, expert),
+                    Event::BackwardDone { from, .. } => assert_eq!(*from, expert),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn critical_path_of_in_situ_round_is_compute_only() {
+        let state = ChannelState::from_rates(1, 2, |_, _, _| 1e6);
+        let p = crate::selection::SelectionProblem::new(vec![1.0], vec![0.1], 0.5, 1);
+        let sel = crate::selection::Selection::from_indices(&p, vec![0], false);
+        let sol = RoundSolution {
+            selections: vec![vec![sel]],
+            allocation: crate::assignment::SubcarrierAllocation::empty(1),
+            energy: Default::default(),
+            iterations: 1,
+            converged: true,
+            des_stats: Default::default(),
+            fallbacks: 0,
+        };
+        let tl = simulate_round(&state, &sol, &ComputeModel::uniform(1, 2e-3), 1000.0);
+        let path = tl.critical_path();
+        assert_eq!(path.len(), 1);
+        assert!(matches!(path[0], Event::ComputeDone { expert: 0, .. }));
+        assert!((path[0].time() - tl.round_latency_s).abs() < 1e-15);
     }
 
     #[test]

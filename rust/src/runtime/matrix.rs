@@ -4,7 +4,8 @@
 //! the coordinator only slices token rows, scales by gate weights and
 //! sums (the eq.-8 aggregation), so that is all this type provides.
 
-use anyhow::Result;
+#[cfg(feature = "xla")]
+use crate::util::error::Result;
 
 /// Row-major `rows × cols` f32 matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -107,18 +108,20 @@ impl Matrix {
             .fold(0.0, f32::max)
     }
 
-    // -- xla bridge ----------------------------------------------------------
+    // -- xla bridge (only with the PJRT runtime) -----------------------------
 
     /// Convert to an XLA literal of shape `(rows, cols)`.
+    #[cfg(feature = "xla")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         Ok(xla::Literal::vec1(self.data.as_slice())
             .reshape(&[self.rows as i64, self.cols as i64])?)
     }
 
     /// Read back from an XLA literal, checking the element count.
+    #[cfg(feature = "xla")]
     pub fn from_literal(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Matrix> {
         let data = lit.to_vec::<f32>()?;
-        anyhow::ensure!(
+        crate::ensure!(
             data.len() == rows * cols,
             "literal has {} elements, expected {rows}x{cols}",
             data.len()

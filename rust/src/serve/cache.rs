@@ -1,0 +1,696 @@
+//! JESA/DES solution cache: memoizes [`RoundSolution`]s keyed by a
+//! quantized channel state and gate-score signature, so repeated
+//! channel/traffic regimes skip the branch-and-bound hot path entirely.
+//!
+//! # Design: quantize-then-solve
+//!
+//! A naive cache keyed on raw floats would never hit (every Rayleigh
+//! realization is distinct) and a cache keyed on a *lossy* signature but
+//! reusing solutions across *different* true inputs could return a
+//! solution that disagrees with what a fresh solve would produce. This
+//! module removes that hazard structurally, the SiftMoE way: the round is
+//! **solved on the canonical (dequantized) problem** reconstructed from
+//! the signature itself. Identical keys therefore denote *identical
+//! solver inputs*, and — `solve_round` being deterministic given its seed
+//! — a cache hit is bit-identical to a fresh solve of the same key, which
+//! the property tests below assert.
+//!
+//! Quantization is the (tunable) modelling step: per-link best rates are
+//! bucketed on a log₂ grid of `log2_step` octaves and gate scores on a
+//! `1/gate_levels` grid. Coarser grids trade energy-model fidelity for
+//! hit rate; `log2_step = 0` is not meaningful (use a cacheless engine
+//! for exact physics).
+//!
+//! Eviction is LRU with a fixed entry capacity.
+
+use crate::channel::ChannelState;
+use crate::energy::EnergyModel;
+use crate::gating::GateScores;
+use crate::jesa::{
+    solve_round, AllocationMode, JesaOptions, RoundProblem, RoundSolution, SelectionPolicy,
+};
+use std::collections::HashMap;
+
+/// Quantization grids for the cache key / canonical problem.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantizerConfig {
+    /// Width of one channel-rate bucket in octaves (log₂ units).
+    pub log2_step: f64,
+    /// Gate-score grid: scores are rounded to multiples of
+    /// `1/gate_levels`.
+    pub gate_levels: u32,
+}
+
+impl Default for QuantizerConfig {
+    fn default() -> Self {
+        Self {
+            log2_step: 3.0,
+            gate_levels: 32,
+        }
+    }
+}
+
+impl QuantizerConfig {
+    /// Assert the grids are usable (finite positive step, sane gate
+    /// resolution). Every cache entry point calls this; callers wiring
+    /// user input (the CLI) get the panic at configuration time.
+    pub fn validate(&self) {
+        assert!(
+            self.log2_step > 0.0 && self.log2_step.is_finite(),
+            "log2_step must be a positive finite octave width, got {}",
+            self.log2_step
+        );
+        assert!(
+            (2..=32_768).contains(&self.gate_levels),
+            "gate_levels must be in [2, 32768], got {}",
+            self.gate_levels
+        );
+    }
+}
+
+/// Sentinel level for a dead link (rate ≤ 0 — unreachable).
+const DEAD_LINK: i16 = i16::MIN;
+
+/// Quantized channel state: one rate bucket per directed link, taken
+/// from the link's best subcarrier (the quantity both DES costs and the
+/// Hungarian objective are driven by).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ChannelSignature {
+    k: u16,
+    m: u16,
+    /// Row-major `k × k` link levels; the diagonal is unused (in-situ).
+    levels: Vec<i16>,
+}
+
+impl ChannelSignature {
+    pub fn quantize(state: &ChannelState, log2_step: f64) -> Self {
+        let k = state.experts();
+        let m = state.subcarriers();
+        let mut levels = vec![0i16; k * k];
+        for i in 0..k {
+            for j in 0..k {
+                if i == j {
+                    continue;
+                }
+                let (_, rate) = state.best_subcarrier(i, j);
+                levels[i * k + j] = if rate > 0.0 && rate.is_finite() {
+                    let l = (rate.log2() / log2_step).round();
+                    l.clamp(f64::from(i16::MIN + 1), f64::from(i16::MAX)) as i16
+                } else {
+                    DEAD_LINK
+                };
+            }
+        }
+        Self {
+            k: k as u16,
+            m: m as u16,
+            levels,
+        }
+    }
+
+    /// Reconstruct the canonical channel: every subcarrier of a link
+    /// carries the link's dequantized bucket rate. (Flat per-link rates
+    /// make the canonical Hungarian step depend only on the signature.)
+    pub fn canonical_state(&self, log2_step: f64) -> ChannelState {
+        let k = self.k as usize;
+        ChannelState::from_rates(k, self.m as usize, |i, j, _| {
+            let level = self.levels[i * k + j];
+            if level == DEAD_LINK {
+                0.0
+            } else {
+                (f64::from(level) * log2_step).exp2()
+            }
+        })
+    }
+}
+
+/// Quantized gate scores of one round: token counts per source plus the
+/// flattened per-token score levels.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct GateSignature {
+    /// Width of every gate-score vector (the expert count scores cover).
+    /// Distinct from the number of source rows: a round's `gates` may
+    /// have any row count, but every token's score vector must be this
+    /// wide for the flat `levels` buffer to chunk correctly.
+    width: u16,
+    tokens_per_source: Vec<u16>,
+    levels: Vec<u16>,
+}
+
+impl GateSignature {
+    pub fn quantize(gates: &[Vec<GateScores>], gate_levels: u32) -> Self {
+        let width = gates
+            .iter()
+            .flatten()
+            .map(|gs| gs.len())
+            .next()
+            .unwrap_or(0);
+        let mut tokens_per_source = Vec::with_capacity(gates.len());
+        let mut levels = Vec::new();
+        for row in gates {
+            tokens_per_source.push(row.len() as u16);
+            for gs in row {
+                let scores = gs.as_slice();
+                assert_eq!(
+                    scores.len(),
+                    width,
+                    "all gate-score vectors in a round must share one width"
+                );
+                let start = levels.len();
+                let mut all_zero = true;
+                for &s in scores {
+                    let l = (s * f64::from(gate_levels)).round() as u16;
+                    all_zero &= l == 0;
+                    levels.push(l);
+                }
+                if all_zero {
+                    // Degenerate rounding (very fine-grained scores on a
+                    // very coarse grid): keep the argmax selectable.
+                    let argmax = scores
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(i, _)| i)
+                        .unwrap_or(0);
+                    levels[start + argmax] = 1;
+                }
+            }
+        }
+        Self {
+            width: width as u16,
+            tokens_per_source,
+            levels,
+        }
+    }
+
+    /// Reconstruct the canonical gate scores (levels renormalized to a
+    /// distribution by [`GateScores::new`]).
+    pub fn canonical(&self) -> Vec<Vec<GateScores>> {
+        let k = self.width as usize;
+        let mut out = Vec::with_capacity(self.tokens_per_source.len());
+        let mut cursor = 0usize;
+        for &tokens in &self.tokens_per_source {
+            let mut row = Vec::with_capacity(tokens as usize);
+            for _ in 0..tokens {
+                let raw: Vec<f64> = self.levels[cursor..cursor + k]
+                    .iter()
+                    .map(|&l| f64::from(l))
+                    .collect();
+                cursor += k;
+                row.push(GateScores::new(raw));
+            }
+            out.push(row);
+        }
+        out
+    }
+}
+
+/// Full cache key: quantized inputs plus every solver option that shapes
+/// the solution, including a fingerprint of the energy model (two
+/// `RoundSolution`s for the same channel/gates still differ when the
+/// energy coefficients differ).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    channel: ChannelSignature,
+    gates: GateSignature,
+    threshold_bits: u64,
+    max_active: u16,
+    policy: (u8, u32),
+    lower_bound: bool,
+    max_iterations: u16,
+    seed: u64,
+    offline: u64,
+    energy_fp: u64,
+}
+
+/// FNV-1a fingerprint of the energy-model coefficients the solver
+/// consumes: `s0`, per-subcarrier power, and the per-device `a_j`/`b_j`
+/// vectors. (Bandwidth/SNR shape the *rates*, which the channel
+/// signature already captures.)
+fn energy_fingerprint(energy: &EnergyModel) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut mix = |bits: u64| {
+        for byte in bits.to_le_bytes() {
+            h ^= u64::from(byte);
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+    };
+    mix(energy.energy.s0_bytes.to_bits());
+    mix(energy.channel.p0_w.to_bits());
+    for &a in &energy.energy.a_per_byte {
+        mix(a.to_bits());
+    }
+    for &b in &energy.energy.b_static {
+        mix(b.to_bits());
+    }
+    h
+}
+
+fn policy_tag(policy: SelectionPolicy) -> (u8, u32) {
+    match policy {
+        SelectionPolicy::Des => (0, 0),
+        SelectionPolicy::TopK(k) => (1, k as u32),
+        SelectionPolicy::Greedy => (2, 0),
+        SelectionPolicy::Forced(j) => (3, j as u32),
+    }
+}
+
+impl CacheKey {
+    pub fn new(
+        channel: ChannelSignature,
+        gates: GateSignature,
+        threshold: f64,
+        max_active: usize,
+        energy: &EnergyModel,
+        opts: &JesaOptions,
+    ) -> Self {
+        assert!(
+            opts.offline.len() <= 64,
+            "cache keys encode at most 64 experts' offline flags, got {}",
+            opts.offline.len()
+        );
+        let mut offline = 0u64;
+        for (j, &off) in opts.offline.iter().enumerate() {
+            if off {
+                offline |= 1 << j;
+            }
+        }
+        Self {
+            channel,
+            gates,
+            threshold_bits: threshold.to_bits(),
+            max_active: max_active as u16,
+            policy: policy_tag(opts.policy),
+            lower_bound: opts.allocation == AllocationMode::LowerBound,
+            max_iterations: opts.max_iterations.min(u16::MAX as usize) as u16,
+            seed: opts.seed,
+            offline,
+            energy_fp: energy_fingerprint(energy),
+        }
+    }
+}
+
+/// Cache observability counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: usize,
+}
+
+impl CacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+}
+
+struct Entry {
+    solution: RoundSolution,
+    last_used: u64,
+}
+
+/// LRU-evicting map from [`CacheKey`] to [`RoundSolution`].
+///
+/// Recency is tracked in a `BTreeMap<tick, key>` alongside the value
+/// map, so get/insert/evict are all O(log n) — no full-map scans on the
+/// serving hot path.
+///
+/// `capacity == 0` disables storage (every lookup misses, inserts are
+/// dropped) while keeping the counters alive, so a cacheless engine run
+/// still reports a 0% hit rate rather than special-casing.
+pub struct SolutionCache {
+    capacity: usize,
+    map: HashMap<CacheKey, Entry>,
+    /// `last_used` tick → key; ticks are unique, so the first entry is
+    /// always the least-recently-used key.
+    recency: std::collections::BTreeMap<u64, CacheKey>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl SolutionCache {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity,
+            map: HashMap::new(),
+            recency: std::collections::BTreeMap::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            entries: self.map.len(),
+        }
+    }
+
+    /// Look up a solution; counts a hit or miss and refreshes recency.
+    pub fn get(&mut self, key: &CacheKey) -> Option<RoundSolution> {
+        self.tick += 1;
+        match self.map.get_mut(key) {
+            Some(entry) => {
+                let moved = self.recency.remove(&entry.last_used);
+                debug_assert!(moved.is_some(), "recency index out of sync");
+                self.recency.insert(self.tick, key.clone());
+                entry.last_used = self.tick;
+                self.hits += 1;
+                Some(entry.solution.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a solution, evicting the least-recently-used entry when at
+    /// capacity.
+    pub fn insert(&mut self, key: CacheKey, solution: RoundSolution) {
+        if self.capacity == 0 {
+            return;
+        }
+        self.tick += 1;
+        if let Some(old) = self.map.get(&key) {
+            // Refresh of a resident key: drop its stale recency slot.
+            self.recency.remove(&old.last_used);
+        } else if self.map.len() >= self.capacity {
+            let oldest = self.recency.keys().next().copied();
+            if let Some(tick) = oldest {
+                if let Some(lru) = self.recency.remove(&tick) {
+                    self.map.remove(&lru);
+                    self.evictions += 1;
+                }
+            }
+        }
+        self.recency.insert(self.tick, key.clone());
+        self.map.insert(
+            key,
+            Entry {
+                solution,
+                last_used: self.tick,
+            },
+        );
+    }
+}
+
+/// Quantize one round-layer's inputs into the cache key plus the
+/// canonical problem a fresh solve of that key must use. This is the
+/// single source of truth for the key ↔ canonical-problem
+/// correspondence — [`solve_quantized`] and the serving engine both go
+/// through it, which is what makes cache hits bit-identical to fresh
+/// solves.
+pub fn quantize_round(
+    csig: &ChannelSignature,
+    quant: &QuantizerConfig,
+    gates: &[Vec<GateScores>],
+    threshold: f64,
+    max_active: usize,
+    energy: &EnergyModel,
+    opts: &JesaOptions,
+) -> (CacheKey, RoundProblem) {
+    let gsig = GateSignature::quantize(gates, quant.gate_levels);
+    let key = CacheKey::new(csig.clone(), gsig.clone(), threshold, max_active, energy, opts);
+    let problem = RoundProblem {
+        gates: gsig.canonical(),
+        threshold,
+        max_active,
+    };
+    (key, problem)
+}
+
+/// Solve one round through the cache: quantize, look up, and on a miss
+/// solve the canonical problem and memoize it.
+///
+/// Returns the solution, the canonical channel state it is valid against
+/// (use it for energy/latency accounting so hits and misses agree), and
+/// whether the lookup hit.
+pub fn solve_quantized(
+    cache: &mut SolutionCache,
+    quant: &QuantizerConfig,
+    state: &ChannelState,
+    gates: &[Vec<GateScores>],
+    threshold: f64,
+    max_active: usize,
+    energy: &EnergyModel,
+    opts: &JesaOptions,
+) -> (RoundSolution, ChannelState, bool) {
+    quant.validate();
+    let csig = ChannelSignature::quantize(state, quant.log2_step);
+    let canonical = csig.canonical_state(quant.log2_step);
+    let (key, problem) =
+        quantize_round(&csig, quant, gates, threshold, max_active, energy, opts);
+    if let Some(solution) = cache.get(&key) {
+        return (solution, canonical, true);
+    }
+    let solution = solve_round(&canonical, &problem, energy, opts);
+    cache.insert(key, solution.clone());
+    (solution, canonical, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::ChannelModel;
+    use crate::config::{ChannelConfig, EnergyConfig};
+    use crate::gating::SyntheticGate;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn setup(
+        k: usize,
+        m: usize,
+        tokens: usize,
+        seed: u64,
+    ) -> (ChannelState, Vec<Vec<GateScores>>, EnergyModel) {
+        let cfg = ChannelConfig {
+            subcarriers: m,
+            ..ChannelConfig::default()
+        };
+        let mut ch = ChannelModel::new(cfg.clone(), k, seed);
+        let state = ch.realize();
+        let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0xA11CE);
+        let gate = SyntheticGate::new(k, 1.0);
+        let gates: Vec<Vec<GateScores>> = (0..k)
+            .map(|_| (0..tokens).map(|_| gate.sample(&mut rng)).collect())
+            .collect();
+        let energy = EnergyModel::new(cfg, EnergyConfig::paper(k, 8192.0));
+        (state, gates, energy)
+    }
+
+    fn assert_solutions_bit_identical(a: &RoundSolution, b: &RoundSolution) {
+        assert_eq!(a.selections, b.selections);
+        assert_eq!(a.allocation, b.allocation);
+        assert_eq!(a.energy.comm_j.to_bits(), b.energy.comm_j.to_bits());
+        assert_eq!(a.energy.comp_j.to_bits(), b.energy.comp_j.to_bits());
+        assert_eq!(a.iterations, b.iterations);
+        assert_eq!(a.converged, b.converged);
+        assert_eq!(a.fallbacks, b.fallbacks);
+    }
+
+    /// The tentpole property: across randomized channel/gate states, a
+    /// cache-hit solution is bit-identical to a fresh DES/JESA solve of
+    /// the same (canonical) round.
+    #[test]
+    fn property_cache_hit_is_bit_identical_to_fresh_solve() {
+        for seed in 0..16u64 {
+            let k = 3 + (seed % 3) as usize;
+            let tokens = 1 + (seed % 4) as usize;
+            let (state, gates, energy) = setup(k, 24, tokens, 1000 + seed);
+            let quant = QuantizerConfig {
+                log2_step: 0.5 + 0.5 * (seed % 4) as f64,
+                gate_levels: 16 << (seed % 3),
+            };
+            let opts = JesaOptions::default();
+            let threshold = 0.3 + 0.05 * (seed % 5) as f64;
+
+            let mut cache = SolutionCache::new(64);
+            let (fresh, canon_a, hit_a) = solve_quantized(
+                &mut cache, &quant, &state, &gates, threshold, 2, &energy, &opts,
+            );
+            assert!(!hit_a, "first solve must miss");
+            let (cached, canon_b, hit_b) = solve_quantized(
+                &mut cache, &quant, &state, &gates, threshold, 2, &energy, &opts,
+            );
+            assert!(hit_b, "identical inputs must hit");
+            assert_solutions_bit_identical(&fresh, &cached);
+
+            // And against a from-scratch solve of the canonical problem,
+            // bypassing the cache entirely.
+            for (i, j, m) in [(0usize, 1usize, 0usize), (1, 0, 1)] {
+                assert_eq!(
+                    canon_a.rate(i, j, m).to_bits(),
+                    canon_b.rate(i, j, m).to_bits()
+                );
+            }
+            let gsig = GateSignature::quantize(&gates, quant.gate_levels);
+            let problem = RoundProblem {
+                gates: gsig.canonical(),
+                threshold,
+                max_active: 2,
+            };
+            let scratch = solve_round(&canon_a, &problem, &energy, &opts);
+            assert_solutions_bit_identical(&fresh, &scratch);
+        }
+    }
+
+    #[test]
+    fn nearby_channel_states_collapse_to_one_key() {
+        // Two states whose rates differ by 5% sit in the same 3-octave
+        // bucket → the second round hits.
+        let mk = |scale: f64| ChannelState::from_rates(3, 8, |_, _, _| 1.0e6 * scale);
+        let (_, gates, energy) = setup(3, 8, 2, 7);
+        let quant = QuantizerConfig::default();
+        let opts = JesaOptions::default();
+        let mut cache = SolutionCache::new(16);
+        let (a, _, hit_a) =
+            solve_quantized(&mut cache, &quant, &mk(1.0), &gates, 0.4, 2, &energy, &opts);
+        let (b, _, hit_b) =
+            solve_quantized(&mut cache, &quant, &mk(1.05), &gates, 0.4, 2, &energy, &opts);
+        assert!(!hit_a && hit_b, "quantization should collapse nearby states");
+        assert_solutions_bit_identical(&a, &b);
+    }
+
+    #[test]
+    fn distinct_policies_and_thresholds_do_not_collide() {
+        let (state, gates, energy) = setup(4, 16, 2, 21);
+        let quant = QuantizerConfig::default();
+        let mut cache = SolutionCache::new(16);
+        let des = JesaOptions::default();
+        let topk = JesaOptions {
+            policy: SelectionPolicy::TopK(2),
+            ..JesaOptions::default()
+        };
+        let (_, _, h1) =
+            solve_quantized(&mut cache, &quant, &state, &gates, 0.4, 2, &energy, &des);
+        let (_, _, h2) =
+            solve_quantized(&mut cache, &quant, &state, &gates, 0.4, 2, &energy, &topk);
+        let (_, _, h3) =
+            solve_quantized(&mut cache, &quant, &state, &gates, 0.5, 2, &energy, &des);
+        let (_, _, h4) =
+            solve_quantized(&mut cache, &quant, &state, &gates, 0.4, 2, &energy, &des);
+        assert!(!h1 && !h2 && !h3, "policy/threshold must partition the key space");
+        assert!(h4, "original key still resident");
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn distinct_energy_models_do_not_collide() {
+        let (state, gates, energy) = setup(3, 8, 2, 61);
+        // Same channel/gates/options, doubled s0: selections may agree
+        // but energies differ — the key must partition on the model.
+        let mut cfg2 = energy.energy.clone();
+        cfg2.s0_bytes *= 2.0;
+        let energy2 = EnergyModel::new(energy.channel.clone(), cfg2);
+        let quant = QuantizerConfig::default();
+        let opts = JesaOptions::default();
+        let mut cache = SolutionCache::new(16);
+        let (_, _, h1) =
+            solve_quantized(&mut cache, &quant, &state, &gates, 0.4, 2, &energy, &opts);
+        let (_, _, h2) =
+            solve_quantized(&mut cache, &quant, &state, &gates, 0.4, 2, &energy2, &opts);
+        assert!(!h1 && !h2, "different energy models must key separately");
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn lru_eviction_at_capacity() {
+        let (state, gates, energy) = setup(3, 8, 2, 33);
+        let quant = QuantizerConfig::default();
+        let opts = JesaOptions::default();
+        let mut cache = SolutionCache::new(2);
+        // Three distinct keys through a capacity-2 cache.
+        for threshold in [0.30, 0.40, 0.50] {
+            let (_, _, hit) = solve_quantized(
+                &mut cache, &quant, &state, &gates, threshold, 2, &energy, &opts,
+            );
+            assert!(!hit);
+        }
+        let stats = cache.stats();
+        assert_eq!(stats.entries, 2);
+        assert_eq!(stats.evictions, 1);
+        // 0.30 was least recently used → evicted → misses; 0.50 hits.
+        let (_, _, hit_old) =
+            solve_quantized(&mut cache, &quant, &state, &gates, 0.30, 2, &energy, &opts);
+        assert!(!hit_old, "LRU entry must have been evicted");
+        let (_, _, hit_new) =
+            solve_quantized(&mut cache, &quant, &state, &gates, 0.50, 2, &energy, &opts);
+        assert!(hit_new, "most-recent entry must survive eviction");
+    }
+
+    #[test]
+    fn zero_capacity_disables_storage_but_counts() {
+        let (state, gates, energy) = setup(3, 8, 1, 41);
+        let quant = QuantizerConfig::default();
+        let opts = JesaOptions::default();
+        let mut cache = SolutionCache::new(0);
+        for _ in 0..3 {
+            let (_, _, hit) =
+                solve_quantized(&mut cache, &quant, &state, &gates, 0.4, 2, &energy, &opts);
+            assert!(!hit);
+        }
+        let stats = cache.stats();
+        assert_eq!(stats.entries, 0);
+        assert_eq!(stats.misses, 3);
+        assert_eq!(stats.hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn gate_signature_roundtrip_preserves_shape() {
+        let (_, gates, _) = setup(4, 8, 3, 55);
+        let sig = GateSignature::quantize(&gates, 32);
+        let canon = sig.canonical();
+        assert_eq!(canon.len(), gates.len());
+        for (row_c, row_g) in canon.iter().zip(gates.iter()) {
+            assert_eq!(row_c.len(), row_g.len());
+            for (c, g) in row_c.iter().zip(row_g.iter()) {
+                assert_eq!(c.len(), g.len());
+                // Canonical scores are within half a grid cell of the
+                // originals (after renormalization, a bit more — allow a
+                // full cell).
+                for j in 0..c.len() {
+                    assert!((c.score(j) - g.score(j)).abs() < 2.0 / 32.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_coarse_grid_keeps_argmax() {
+        // K=40 experts, scores ~0.025 each on a 4-level grid: every level
+        // rounds to 0 — the argmax must be bumped so the canonical gate
+        // normalizes.
+        let scores: Vec<f64> = (0..40).map(|j| if j == 7 { 0.03 } else { 0.97 / 39.0 }).collect();
+        let gates = vec![vec![GateScores::new(scores)]];
+        let sig = GateSignature::quantize(&gates, 4);
+        let canon = sig.canonical();
+        assert!((canon[0][0].score(7) - 1.0).abs() < 1e-12);
+    }
+}

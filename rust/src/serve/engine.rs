@@ -1,0 +1,630 @@
+//! The continuous serving loop: open-loop arrivals → admission queue →
+//! batched JESA rounds → simulated-time completion accounting.
+//!
+//! The engine is a discrete-event simulation over *simulated* time (the
+//! same clock as [`crate::protocol::sim`]): arrivals carry timestamps
+//! from the traffic process, a round occupies the server for its
+//! discrete-event latency, and per-query latency is
+//! `completion − arrival` (queueing delay + L rounds of radio/compute).
+//! Wall-clock time is tracked separately and only measures how fast the
+//! engine itself runs.
+//!
+//! Round execution mirrors [`DmoeServer::serve_batch`] steps 3–5 at the
+//! selection/energy level (cf. the Figs. 6–9 experiments): the Rayleigh
+//! channel is refreshed once per round, each layer's joint problem is
+//! solved through the [solution cache](crate::serve::cache) (or directly
+//! when caching is off), energy is charged per eq. (3)/(4), and the
+//! round's latency comes from [`simulate_round`]. The per-layer solves of
+//! a round are independent (the synthetic workload fixes each layer's
+//! gates up front), so they are dispatched across the in-tree
+//! [`parallel_map`] thread pool.
+//!
+//! [`DmoeServer::serve_batch`]: crate::coordinator::DmoeServer::serve_batch
+
+use super::cache::{
+    quantize_round, CacheStats, ChannelSignature, QuantizerConfig, SolutionCache,
+};
+use super::queue::{AdmissionQueue, QueueConfig};
+use super::traffic::{Arrival, TrafficConfig, TrafficGenerator};
+use crate::channel::ChannelModel;
+use crate::coordinator::ServePolicy;
+use crate::energy::{EnergyBreakdown, EnergyLedger, EnergyModel};
+use crate::gating::GateScores;
+use crate::jesa::{solve_round, JesaOptions, RoundProblem, RoundSolution};
+use crate::metrics::{Metrics, SelectionPattern};
+use crate::protocol::{simulate_round, ComputeModel, RoundTimeline};
+use crate::util::pool::{default_workers, parallel_map};
+use crate::util::stats;
+use crate::SystemConfig;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Engine configuration beyond the system/traffic configs.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    pub policy: ServePolicy,
+    pub queue: QueueConfig,
+    /// Solution-cache entry capacity; 0 disables caching (rounds are then
+    /// solved on the exact, unquantized channel).
+    pub cache_capacity: usize,
+    pub quant: QuantizerConfig,
+    /// Worker threads for the per-layer solves of a round.
+    pub workers: usize,
+    /// Seed for the channel stream and the (fixed) JESA BCD
+    /// initialization. Fixed per engine so identical cache keys denote
+    /// identical solver inputs.
+    pub seed: u64,
+    /// Keep every round's [`RoundTimeline`]s in the report (tests /
+    /// debugging only — memory grows with rounds × layers).
+    pub record_timelines: bool,
+}
+
+impl ServeOptions {
+    pub fn new(policy: ServePolicy, queue: QueueConfig) -> Self {
+        Self {
+            policy,
+            queue,
+            cache_capacity: 4096,
+            quant: QuantizerConfig::default(),
+            workers: default_workers(),
+            seed: 0x5E4E_7E11,
+            record_timelines: false,
+        }
+    }
+}
+
+/// One served query's lifecycle timestamps (simulated seconds).
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub domain: usize,
+    pub arrival_s: f64,
+    pub start_s: f64,
+    pub done_s: f64,
+}
+
+impl Completion {
+    /// End-to-end latency: queueing delay plus the round's L layers of
+    /// radio + compute.
+    pub fn latency_s(&self) -> f64 {
+        self.done_s - self.arrival_s
+    }
+
+    pub fn wait_s(&self) -> f64 {
+        self.start_s - self.arrival_s
+    }
+}
+
+/// One executed round.
+#[derive(Debug, Clone)]
+pub struct RoundLog {
+    pub start_s: f64,
+    /// Sum of the L per-layer discrete-event round latencies.
+    pub latency_s: f64,
+    pub queries: usize,
+    pub tokens: usize,
+    pub cache_hits: usize,
+}
+
+/// Everything a serving run reports.
+pub struct ServeReport {
+    pub process: String,
+    pub generated: usize,
+    pub completed: usize,
+    pub shed_queue_full: usize,
+    pub shed_deadline: usize,
+    pub rounds: usize,
+    /// Simulated time of the last completion.
+    pub sim_end_s: f64,
+    /// Wall-clock engine runtime.
+    pub wall_s: f64,
+    pub tokens: u64,
+    pub energy: EnergyBreakdown,
+    pub cache: CacheStats,
+    pub fallbacks: usize,
+    pub completions: Vec<Completion>,
+    pub rounds_log: Vec<RoundLog>,
+    /// `timelines[round][layer]` — only with
+    /// [`ServeOptions::record_timelines`].
+    pub timelines: Vec<Vec<RoundTimeline>>,
+    pub pattern: SelectionPattern,
+    pub ledger: EnergyLedger,
+    pub metrics: Metrics,
+}
+
+impl ServeReport {
+    pub fn shed(&self) -> usize {
+        self.shed_queue_full + self.shed_deadline
+    }
+
+    pub fn shed_rate(&self) -> f64 {
+        if self.generated == 0 {
+            0.0
+        } else {
+            self.shed() as f64 / self.generated as f64
+        }
+    }
+
+    /// Completed queries per simulated second.
+    pub fn throughput_qps(&self) -> f64 {
+        if self.sim_end_s <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / self.sim_end_s
+        }
+    }
+
+    /// Completed queries per wall-clock second (engine speed).
+    pub fn wall_throughput_qps(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / self.wall_s
+        }
+    }
+
+    fn latencies(&self) -> Vec<f64> {
+        self.completions.iter().map(|c| c.latency_s()).collect()
+    }
+
+    pub fn latency_mean_s(&self) -> f64 {
+        stats::mean(&self.latencies())
+    }
+
+    pub fn latency_p50_s(&self) -> f64 {
+        stats::percentile(&self.latencies(), 50.0)
+    }
+
+    pub fn latency_p99_s(&self) -> f64 {
+        stats::percentile(&self.latencies(), 99.0)
+    }
+
+    /// Human-readable summary (the `dmoe serve` output).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "serve[{}]: {} generated, {} completed, {} shed ({:.2}% = {} queue-full + {} deadline)\n",
+            self.process,
+            self.generated,
+            self.completed,
+            self.shed(),
+            self.shed_rate() * 100.0,
+            self.shed_queue_full,
+            self.shed_deadline,
+        ));
+        out.push_str(&format!(
+            "rounds {} ({} tokens), sim time {:.2} s, wall {:.2} s ({:.0} q/s engine speed)\n",
+            self.rounds,
+            self.tokens,
+            self.sim_end_s,
+            self.wall_s,
+            self.wall_throughput_qps(),
+        ));
+        out.push_str(&format!(
+            "throughput {:.2} q/s (simulated)  latency p50 {:.3} s  p99 {:.3} s  mean {:.3} s\n",
+            self.throughput_qps(),
+            self.latency_p50_s(),
+            self.latency_p99_s(),
+            self.latency_mean_s(),
+        ));
+        out.push_str(&format!(
+            "solution cache: {}/{} hits ({:.1}%), {} entries, {} evictions\n",
+            self.cache.hits,
+            self.cache.lookups(),
+            self.cache.hit_rate() * 100.0,
+            self.cache.entries,
+            self.cache.evictions,
+        ));
+        out.push_str(&format!(
+            "energy {:.4} J (comm {:.4} + comp {:.4}), fallbacks {}\n",
+            self.energy.total_j(),
+            self.energy.comm_j,
+            self.energy.comp_j,
+            self.fallbacks,
+        ));
+        out
+    }
+}
+
+/// The continuous multi-user serving engine.
+pub struct ServeEngine {
+    cfg: SystemConfig,
+    opts: ServeOptions,
+    energy: EnergyModel,
+    compute: ComputeModel,
+}
+
+impl ServeEngine {
+    pub fn new(cfg: &SystemConfig, opts: ServeOptions) -> Self {
+        let k = cfg.moe.experts;
+        assert!(
+            opts.policy.importance.layers() == cfg.moe.layers,
+            "policy importance covers {} layers, system has {}",
+            opts.policy.importance.layers(),
+            cfg.moe.layers
+        );
+        assert!(
+            opts.queue.batch_queries <= k,
+            "batch of {} queries exceeds {k} expert nodes",
+            opts.queue.batch_queries
+        );
+        if opts.cache_capacity > 0 {
+            // Fail on degenerate --step / --gate-grid values up front
+            // rather than producing silently-wrong canonical physics.
+            opts.quant.validate();
+        }
+        Self {
+            cfg: cfg.clone(),
+            opts,
+            energy: EnergyModel::new(cfg.channel.clone(), cfg.energy.clone()),
+            compute: ComputeModel::ramp(cfg.moe.experts, 1e-3),
+        }
+    }
+
+    /// Override the latency-simulation compute model (default: the
+    /// paper's heterogeneous `a_j` ramp, as in the coordinator).
+    pub fn set_compute_model(&mut self, model: ComputeModel) {
+        assert_eq!(model.per_token_s.len(), self.cfg.moe.experts);
+        self.compute = model;
+    }
+
+    pub fn options(&self) -> &ServeOptions {
+        &self.opts
+    }
+
+    /// Run one open-loop serving simulation over a traffic stream.
+    pub fn run(&self, traffic: &TrafficConfig) -> ServeReport {
+        let t0 = Instant::now();
+        let k = self.cfg.moe.experts;
+        let layers = self.cfg.moe.layers;
+        let generator = TrafficGenerator::new(traffic.clone(), k, layers);
+        let arrivals = generator.generate();
+        let generated = arrivals.len();
+
+        let mut channel = ChannelModel::new(self.cfg.channel.clone(), k, self.opts.seed);
+        let cache = Mutex::new(SolutionCache::new(self.opts.cache_capacity));
+        let mut queue = AdmissionQueue::new(self.opts.queue.clone());
+        let mut ledger = EnergyLedger::new(layers);
+        let mut pattern = SelectionPattern::new(layers, k);
+        let mut metrics = Metrics::new();
+        let mut completions: Vec<Completion> = Vec::new();
+        let mut rounds_log: Vec<RoundLog> = Vec::new();
+        let mut timelines: Vec<Vec<RoundTimeline>> = Vec::new();
+        let mut fallbacks = 0usize;
+        let mut tokens_total = 0u64;
+        let mut free_at = 0.0f64;
+
+        let jesa_opts = JesaOptions {
+            policy: self.opts.policy.policy,
+            allocation: self.opts.policy.allocation,
+            seed: self.opts.seed ^ 0x1E5A,
+            ..JesaOptions::default()
+        };
+
+        let mut stream = arrivals.into_iter().peekable();
+        while stream.peek().is_some() || !queue.is_empty() {
+            if queue.is_empty() {
+                queue.push(stream.next().expect("stream non-empty"));
+                continue;
+            }
+            // Admit every arrival that lands before the next round could
+            // start: the formation trigger, or later if the server is
+            // still busy (so capacity shedding sees the real backlog).
+            let trigger = queue.trigger_time_s().expect("queue non-empty");
+            let start_if_now = trigger.max(free_at);
+            if let Some(next) = stream.peek() {
+                if next.at_s <= start_if_now {
+                    queue.push(stream.next().expect("peeked"));
+                    continue;
+                }
+            }
+            // Form a round. A drained stream fires the partial batch as
+            // soon as its newest member has arrived instead of idling out
+            // the deadline trigger.
+            let formed_at = if !queue.batch_ready() && stream.peek().is_none() {
+                queue.newest_arrival_s().expect("queue non-empty")
+            } else {
+                trigger
+            };
+            let start = formed_at.max(free_at);
+            queue.shed_expired(start);
+            if queue.is_empty() {
+                continue;
+            }
+            let batch = queue.take_batch();
+
+            let t_round = Instant::now();
+            let (latency_s, hits, round_fallbacks, round_timelines) = self.execute_round(
+                &batch,
+                &mut channel,
+                &cache,
+                &jesa_opts,
+                &mut ledger,
+                &mut pattern,
+            );
+            metrics.observe_s("round_wall", t_round.elapsed().as_secs_f64());
+            metrics.inc("rounds", 1);
+            metrics.inc("layer_solves", layers as u64);
+            metrics.inc("cache_hits", hits as u64);
+            fallbacks += round_fallbacks;
+            let round_tokens: usize = batch.iter().map(|a| a.query.tokens).sum();
+            tokens_total += (round_tokens * layers) as u64;
+
+            free_at = start + latency_s;
+            rounds_log.push(RoundLog {
+                start_s: start,
+                latency_s,
+                queries: batch.len(),
+                tokens: round_tokens,
+                cache_hits: hits,
+            });
+            if let Some(tls) = round_timelines {
+                timelines.push(tls);
+            }
+            for a in &batch {
+                completions.push(Completion {
+                    id: a.query.id,
+                    domain: a.query.domain,
+                    arrival_s: a.at_s,
+                    start_s: start,
+                    done_s: free_at,
+                });
+            }
+        }
+
+        let (shed_queue_full, shed_deadline) = queue.shed_counts();
+        let sim_end_s = completions.iter().map(|c| c.done_s).fold(0.0, f64::max);
+        let cache_stats = cache.lock().unwrap().stats();
+        ServeReport {
+            process: traffic.process.label().to_string(),
+            generated,
+            completed: completions.len(),
+            shed_queue_full,
+            shed_deadline,
+            rounds: rounds_log.len(),
+            sim_end_s,
+            wall_s: t0.elapsed().as_secs_f64(),
+            tokens: tokens_total,
+            energy: ledger.total(),
+            cache: cache_stats,
+            fallbacks,
+            completions,
+            rounds_log,
+            timelines,
+            pattern,
+            ledger,
+            metrics,
+        }
+    }
+
+    /// Execute one round: refresh the channel, solve each layer through
+    /// the cache (in parallel), account energy/patterns, and return the
+    /// round's discrete-event latency.
+    #[allow(clippy::too_many_arguments)]
+    fn execute_round(
+        &self,
+        batch: &[Arrival],
+        channel: &mut ChannelModel,
+        cache: &Mutex<SolutionCache>,
+        jesa_opts: &JesaOptions,
+        ledger: &mut EnergyLedger,
+        pattern: &mut SelectionPattern,
+    ) -> (f64, usize, usize, Option<Vec<RoundTimeline>>) {
+        let k = self.cfg.moe.experts;
+        let layers = self.cfg.moe.layers;
+        let s0 = self.energy.energy.s0_bytes;
+        let caching = self.opts.cache_capacity > 0;
+        let policy = &self.opts.policy;
+
+        // One Rayleigh realization per round; with caching on, all
+        // accounting runs against the canonical (quantized) state so that
+        // cache hits and misses produce identical physics.
+        let state = channel.realize();
+        let (solve_state, csig) = if caching {
+            let sig = ChannelSignature::quantize(&state, self.opts.quant.log2_step);
+            (sig.canonical_state(self.opts.quant.log2_step), Some(sig))
+        } else {
+            (state, None)
+        };
+
+        let layer_ids: Vec<usize> = (0..layers).collect();
+        let workers = self.opts.workers.clamp(1, layers.max(1));
+        let results: Vec<(RoundSolution, bool)> = parallel_map(&layer_ids, workers, |&l| {
+            let mut gates: Vec<Vec<GateScores>> = vec![Vec::new(); k];
+            for (src, a) in batch.iter().enumerate() {
+                gates[src] = a.query.gates[l].clone();
+            }
+            let threshold = policy.z * policy.importance.gamma(l);
+            match &csig {
+                Some(sig) => {
+                    let (key, problem) = quantize_round(
+                        sig,
+                        &self.opts.quant,
+                        &gates,
+                        threshold,
+                        policy.max_active,
+                        &self.energy,
+                        jesa_opts,
+                    );
+                    if let Some(sol) = cache.lock().unwrap().get(&key) {
+                        return (sol, true);
+                    }
+                    let sol = solve_round(&solve_state, &problem, &self.energy, jesa_opts);
+                    cache.lock().unwrap().insert(key, sol.clone());
+                    (sol, false)
+                }
+                None => {
+                    let problem = RoundProblem {
+                        gates,
+                        threshold,
+                        max_active: policy.max_active,
+                    };
+                    (solve_round(&solve_state, &problem, &self.energy, jesa_opts), false)
+                }
+            }
+        });
+
+        let round_tokens: usize = batch.iter().map(|a| a.query.tokens).sum();
+        let mut latency_s = 0.0;
+        let mut hits = 0usize;
+        let mut fallbacks = 0usize;
+        let mut tls = self.opts.record_timelines.then(Vec::new);
+        for (l, (sol, hit)) in results.iter().enumerate() {
+            let timeline = simulate_round(&solve_state, sol, &self.compute, s0);
+            latency_s += timeline.round_latency_s;
+            ledger.charge_comm(l, sol.energy.comm_j);
+            ledger.charge_comp(l, sol.energy.comp_j);
+            ledger.count_tokens(l, round_tokens as u64);
+            for row in &sol.selections {
+                for sel in row {
+                    pattern.record(l, &sel.selected);
+                }
+            }
+            fallbacks += sol.fallbacks;
+            hits += *hit as usize;
+            if let Some(v) = tls.as_mut() {
+                v.push(timeline);
+            }
+        }
+        (latency_s, hits, fallbacks, tls)
+    }
+}
+
+/// Estimate the mean discrete-event latency of one full-batch round under
+/// a config/policy/workload (no caching, exact channel): used by the CLI
+/// to auto-derive an arrival rate targeting a utilization level, and by
+/// benchmarks as a capacity probe.
+pub fn estimate_round_latency_s(
+    cfg: &SystemConfig,
+    policy: &ServePolicy,
+    traffic: &TrafficConfig,
+    rounds: usize,
+) -> f64 {
+    assert!(rounds >= 1);
+    let k = cfg.moe.experts;
+    let queue = QueueConfig {
+        capacity: rounds * k + k,
+        batch_queries: k,
+        max_wait_s: f64::INFINITY,
+        deadline_s: f64::INFINITY,
+    };
+    let opts = ServeOptions {
+        cache_capacity: 0,
+        workers: 1,
+        seed: traffic.seed ^ 0xCA11_B4A7E,
+        ..ServeOptions::new(policy.clone(), queue)
+    };
+    let engine = ServeEngine::new(cfg, opts);
+    // Saturating arrivals: every round is a full batch.
+    let probe = TrafficConfig {
+        process: super::traffic::ArrivalProcess::Poisson { rate_qps: 1e9 },
+        queries: rounds * k,
+        ..traffic.clone()
+    };
+    let report = engine.run(&probe);
+    let latencies: Vec<f64> = report.rounds_log.iter().map(|r| r.latency_s).collect();
+    stats::mean(&latencies)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_setup() -> (SystemConfig, ServeOptions, TrafficConfig) {
+        let mut cfg = SystemConfig::tiny(); // K=3, L=2, M=12
+        cfg.workload.seed = 99;
+        let policy = ServePolicy::jesa(0.8, 2, cfg.moe.layers);
+        let queue = QueueConfig::for_system(cfg.moe.experts, 1.0);
+        let opts = ServeOptions {
+            workers: 1,
+            ..ServeOptions::new(policy, queue)
+        };
+        let traffic = TrafficConfig {
+            queries: 300,
+            // Few domains + noise-free templates: round keys repeat, so
+            // the cache-hit assertions below are statistically safe.
+            domains: 4,
+            tokens_per_query: 2,
+            seed: 7,
+            ..TrafficConfig::poisson(10.0, 300)
+        };
+        (cfg, opts, traffic)
+    }
+
+    #[test]
+    fn conserves_queries_and_orders_time() {
+        let (cfg, opts, traffic) = tiny_setup();
+        let engine = ServeEngine::new(&cfg, opts);
+        let report = engine.run(&traffic);
+        assert_eq!(report.generated, 300);
+        assert_eq!(report.completed + report.shed(), report.generated);
+        assert!(report.rounds > 0);
+        for c in &report.completions {
+            assert!(c.start_s >= c.arrival_s - 1e-12, "started before arrival");
+            assert!(c.done_s > c.start_s, "round must take time");
+        }
+        // Rounds never overlap: the server is serial.
+        for w in report.rounds_log.windows(2) {
+            assert!(
+                w[1].start_s >= w[0].start_s + w[0].latency_s - 1e-12,
+                "rounds overlap"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (cfg, opts, traffic) = tiny_setup();
+        let a = ServeEngine::new(&cfg, opts.clone()).run(&traffic);
+        let b = ServeEngine::new(&cfg, opts).run(&traffic);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.shed(), b.shed());
+        assert_eq!(a.energy.total_j().to_bits(), b.energy.total_j().to_bits());
+        assert_eq!(a.cache.hits, b.cache.hits);
+        for (x, y) in a.completions.iter().zip(b.completions.iter()) {
+            assert_eq!(x.done_s.to_bits(), y.done_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn template_workload_hits_the_cache() {
+        let (cfg, opts, traffic) = tiny_setup();
+        let engine = ServeEngine::new(&cfg, opts);
+        let report = engine.run(&traffic);
+        assert!(
+            report.cache.hits > 0,
+            "noise-free domain templates must repeat: {:?}",
+            report.cache
+        );
+        assert!(report.cache.hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn cacheless_run_reports_zero_hit_rate() {
+        let (cfg, mut opts, traffic) = tiny_setup();
+        opts.cache_capacity = 0;
+        let report = ServeEngine::new(&cfg, opts).run(&traffic);
+        assert_eq!(report.cache.hits, 0);
+        assert_eq!(report.cache.entries, 0);
+        assert_eq!(report.completed + report.shed(), report.generated);
+    }
+
+    #[test]
+    fn overload_sheds_by_deadline() {
+        let (cfg, mut opts, mut traffic) = tiny_setup();
+        // A deadline far below the round latency forces shedding.
+        opts.queue.deadline_s = 1e-6;
+        opts.queue.max_wait_s = 1e-7;
+        traffic.process = super::super::traffic::ArrivalProcess::Poisson { rate_qps: 1000.0 };
+        let report = ServeEngine::new(&cfg, opts).run(&traffic);
+        assert!(report.shed() > 0, "overload must shed");
+        assert_eq!(report.completed + report.shed(), report.generated);
+    }
+
+    #[test]
+    fn capacity_estimate_is_positive_and_finite() {
+        let (cfg, opts, traffic) = tiny_setup();
+        let lr = estimate_round_latency_s(&cfg, &opts.policy, &traffic, 3);
+        assert!(lr.is_finite() && lr > 0.0, "round latency {lr}");
+    }
+}

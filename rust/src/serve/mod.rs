@@ -1,0 +1,40 @@
+//! `serve` — the continuous multi-user serving engine.
+//!
+//! The paper's protocol schedules one round of expert inference at a
+//! time; this subsystem wraps that round machinery in an open-loop
+//! serving pipeline, the layer every scaling extension (sharding, async
+//! backends, multi-server) plugs into:
+//!
+//! ```text
+//!  traffic ──► admission queue ──► batch former ──► round executor ──► report
+//!  (Poisson /   (bounded FIFO,     (size/deadline    (channel refresh,
+//!   MMPP /       QoS shedding)      triggers)         cached JESA solve,
+//!   diurnal)                                          DES timeline)
+//! ```
+//!
+//! * [`traffic`] — arrival processes (Poisson, bursty MMPP, diurnal) over
+//!   a synthetic multi-domain query stream with per-domain gate
+//!   templates.
+//! * [`queue`] — bounded admission queue with capacity- and
+//!   deadline-based shedding and trigger-based batch formation.
+//! * [`cache`] — the JESA/DES solution cache: rounds are solved on a
+//!   quantized canonical problem and memoized, so repeated
+//!   channel/traffic regimes skip branch-and-bound entirely; cache hits
+//!   are bit-identical to fresh solves by construction.
+//! * [`engine`] — the discrete-event serving loop tying it together and
+//!   reporting throughput, p50/p99 simulated latency, shed rate, cache
+//!   hit rate, and energy through [`crate::metrics`].
+//!
+//! The engine runs at the selection/energy level on synthetic gate
+//! scores (like the paper-scale Figs. 6–9 experiments), so it needs no
+//! compiled model artifacts; `dmoe serve` exercises it from the CLI.
+
+pub mod cache;
+pub mod engine;
+pub mod queue;
+pub mod traffic;
+
+pub use cache::{quantize_round, solve_quantized, CacheStats, QuantizerConfig, SolutionCache};
+pub use engine::{estimate_round_latency_s, ServeEngine, ServeOptions, ServeReport};
+pub use queue::{AdmissionQueue, QueueConfig, ShedReason};
+pub use traffic::{Arrival, ArrivalProcess, SyntheticQuery, TrafficConfig, TrafficGenerator};

@@ -1,0 +1,280 @@
+//! Admission control: a bounded FIFO of pending arrivals, shed policies,
+//! and the batch former that groups arrivals into protocol rounds.
+//!
+//! Two shed paths implement QoS-aware load shedding under overload:
+//!
+//! * **Capacity** — the queue holds at most `capacity` pending queries;
+//!   an arrival finding it full is shed immediately (the radio front-end
+//!   has nowhere to park it).
+//! * **Deadline** — when a round is about to start, any pending query
+//!   that has already waited longer than `deadline_s` is shed instead of
+//!   served: its QoS is unrecoverable, and serving it would only push the
+//!   queries behind it past their own deadlines (the classic
+//!   overload-collapse failure this policy prevents).
+//!
+//! Batch formation is trigger-based, mirroring production batchers: a
+//! round forms as soon as `batch_queries` arrivals are pending
+//! (size trigger) or the oldest pending query has waited `max_wait_s`
+//! (deadline trigger, bounding tail latency at low load). The
+//! [engine](crate::serve::engine) owns the clock and drives these
+//! mechanics.
+
+use super::traffic::Arrival;
+use std::collections::VecDeque;
+
+/// Why a query was shed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The admission queue was full on arrival.
+    QueueFull,
+    /// The query exceeded its waiting-time deadline before a round could
+    /// take it.
+    DeadlineExceeded,
+}
+
+/// Queue / batch-former configuration.
+#[derive(Debug, Clone)]
+pub struct QueueConfig {
+    /// Maximum pending queries before arrivals are shed.
+    pub capacity: usize,
+    /// Size trigger: form a round once this many queries are pending.
+    /// Must not exceed the system's expert count `K` (one query per
+    /// source expert per round).
+    pub batch_queries: usize,
+    /// Deadline trigger: form a (partial) round once the oldest pending
+    /// query has waited this long.
+    pub max_wait_s: f64,
+    /// QoS deadline on queue waiting time; pending queries older than
+    /// this at round start are shed.
+    pub deadline_s: f64,
+}
+
+impl QueueConfig {
+    /// Defaults for a K-expert system with round latency ≈ `round_s`:
+    /// full batches, a batch-formation wait of one round, a deadline of
+    /// eight rounds, and room for ~four full batches in the queue.
+    pub fn for_system(k: usize, round_s: f64) -> Self {
+        assert!(k >= 1 && round_s > 0.0);
+        Self {
+            capacity: (4 * k).max(16),
+            batch_queries: k,
+            max_wait_s: round_s,
+            deadline_s: 8.0 * round_s,
+        }
+    }
+
+    fn validate(&self) {
+        assert!(self.batch_queries >= 1, "batch_queries must be >= 1");
+        assert!(
+            self.capacity >= self.batch_queries,
+            "capacity {} cannot hold one batch of {}",
+            self.capacity,
+            self.batch_queries
+        );
+        assert!(self.max_wait_s >= 0.0 && self.deadline_s >= 0.0);
+    }
+}
+
+/// Bounded FIFO admission queue with shed accounting.
+#[derive(Debug, Clone)]
+pub struct AdmissionQueue {
+    cfg: QueueConfig,
+    pending: VecDeque<Arrival>,
+    shed_full: usize,
+    shed_deadline: usize,
+    /// Every shed query's id with the reason it was dropped.
+    shed_log: Vec<(u64, ShedReason)>,
+}
+
+impl AdmissionQueue {
+    pub fn new(cfg: QueueConfig) -> Self {
+        cfg.validate();
+        Self {
+            cfg,
+            pending: VecDeque::new(),
+            shed_full: 0,
+            shed_deadline: 0,
+            shed_log: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> &QueueConfig {
+        &self.cfg
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Queries shed so far, by reason: `(queue_full, deadline)`.
+    pub fn shed_counts(&self) -> (usize, usize) {
+        (self.shed_full, self.shed_deadline)
+    }
+
+    /// Per-query shed record: `(query id, reason)`, in shed order.
+    pub fn shed_log(&self) -> &[(u64, ShedReason)] {
+        &self.shed_log
+    }
+
+    /// Admit an arrival. Returns `false` (and records the shed) when the
+    /// queue is full.
+    pub fn push(&mut self, arrival: Arrival) -> bool {
+        if self.pending.len() >= self.cfg.capacity {
+            self.shed_full += 1;
+            self.shed_log.push((arrival.query.id, ShedReason::QueueFull));
+            return false;
+        }
+        debug_assert!(
+            self.pending
+                .back()
+                .map(|b| b.at_s <= arrival.at_s)
+                .unwrap_or(true),
+            "arrivals must be admitted in time order"
+        );
+        self.pending.push_back(arrival);
+        true
+    }
+
+    /// Arrival time of the oldest pending query.
+    pub fn oldest_arrival_s(&self) -> Option<f64> {
+        self.pending.front().map(|a| a.at_s)
+    }
+
+    /// Arrival time of the newest pending query.
+    pub fn newest_arrival_s(&self) -> Option<f64> {
+        self.pending.back().map(|a| a.at_s)
+    }
+
+    /// Arrival time of the `i`-th oldest pending query (0-based).
+    pub fn kth_arrival_s(&self, i: usize) -> Option<f64> {
+        self.pending.get(i).map(|a| a.at_s)
+    }
+
+    /// True once the size trigger is met.
+    pub fn batch_ready(&self) -> bool {
+        self.pending.len() >= self.cfg.batch_queries
+    }
+
+    /// The time at which the queue's formation trigger fires, given no
+    /// further arrivals: the size trigger fires retroactively when the
+    /// batch-completing query arrived; otherwise the deadline trigger
+    /// fires `max_wait_s` after the oldest arrival. `None` when empty.
+    pub fn trigger_time_s(&self) -> Option<f64> {
+        if self.batch_ready() {
+            self.kth_arrival_s(self.cfg.batch_queries - 1)
+        } else {
+            self.oldest_arrival_s().map(|t| t + self.cfg.max_wait_s)
+        }
+    }
+
+    /// Shed every pending query whose waiting time at `start_s` exceeds
+    /// the QoS deadline; returns how many were shed.
+    pub fn shed_expired(&mut self, start_s: f64) -> usize {
+        let before = self.pending.len();
+        let deadline = self.cfg.deadline_s;
+        let drained = std::mem::take(&mut self.pending);
+        for a in drained {
+            if start_s - a.at_s <= deadline {
+                self.pending.push_back(a);
+            } else {
+                self.shed_log.push((a.query.id, ShedReason::DeadlineExceeded));
+            }
+        }
+        let shed = before - self.pending.len();
+        self.shed_deadline += shed;
+        shed
+    }
+
+    /// Take up to `batch_queries` queries, FIFO.
+    pub fn take_batch(&mut self) -> Vec<Arrival> {
+        let n = self.cfg.batch_queries.min(self.pending.len());
+        self.pending.drain(..n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::traffic::SyntheticQuery;
+
+    fn arrival(id: u64, at_s: f64) -> Arrival {
+        Arrival {
+            at_s,
+            query: SyntheticQuery {
+                id,
+                domain: 0,
+                tokens: 1,
+                gates: Vec::new(),
+            },
+        }
+    }
+
+    fn queue(capacity: usize, batch: usize, max_wait: f64, deadline: f64) -> AdmissionQueue {
+        AdmissionQueue::new(QueueConfig {
+            capacity,
+            batch_queries: batch,
+            max_wait_s: max_wait,
+            deadline_s: deadline,
+        })
+    }
+
+    #[test]
+    fn fifo_batches() {
+        let mut q = queue(8, 3, 1.0, 10.0);
+        for i in 0..5 {
+            assert!(q.push(arrival(i, i as f64 * 0.1)));
+        }
+        assert!(q.batch_ready());
+        let batch = q.take_batch();
+        assert_eq!(batch.iter().map(|a| a.query.id).collect::<Vec<_>>(), [0, 1, 2]);
+        assert_eq!(q.len(), 2);
+        assert!(!q.batch_ready());
+    }
+
+    #[test]
+    fn capacity_sheds_on_push() {
+        let mut q = queue(2, 2, 1.0, 10.0);
+        assert!(q.push(arrival(0, 0.0)));
+        assert!(q.push(arrival(1, 0.1)));
+        assert!(!q.push(arrival(2, 0.2)));
+        assert_eq!(q.shed_counts(), (1, 0));
+        assert_eq!(q.shed_log(), &[(2, ShedReason::QueueFull)]);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn deadline_sheds_expired_only() {
+        let mut q = queue(8, 4, 1.0, 2.0);
+        q.push(arrival(0, 0.0));
+        q.push(arrival(1, 1.5));
+        q.push(arrival(2, 2.9));
+        // At t = 3.0: query 0 waited 3.0 > 2.0 → shed; 1 and 2 stay.
+        assert_eq!(q.shed_expired(3.0), 1);
+        assert_eq!(q.shed_counts(), (0, 1));
+        assert_eq!(q.shed_log(), &[(0, ShedReason::DeadlineExceeded)]);
+        assert_eq!(q.oldest_arrival_s(), Some(1.5));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn trigger_times() {
+        let mut q = queue(8, 2, 0.5, 10.0);
+        assert_eq!(q.trigger_time_s(), None);
+        q.push(arrival(0, 1.0));
+        // Partial queue: deadline trigger at oldest + max_wait.
+        assert_eq!(q.trigger_time_s(), Some(1.5));
+        q.push(arrival(1, 1.2));
+        // Size trigger: fires when the batch-completing query arrived.
+        assert_eq!(q.trigger_time_s(), Some(1.2));
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity")]
+    fn rejects_capacity_below_batch() {
+        queue(1, 2, 1.0, 1.0);
+    }
+}

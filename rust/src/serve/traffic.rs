@@ -1,0 +1,471 @@
+//! Open-loop traffic generation: arrival processes and the synthetic
+//! multi-domain query stream they carry.
+//!
+//! Three arrival processes cover the serving regimes the engine is
+//! stress-tested under (cf. the channel-aware-gating line of work —
+//! selection quality must hold under diverse, time-varying traffic, not a
+//! single static batch):
+//!
+//! * [`ArrivalProcess::Poisson`] — memoryless baseline at a fixed rate.
+//! * [`ArrivalProcess::Mmpp`] — a 2-state Markov-modulated Poisson
+//!   process (bursty: exponential dwell times alternate a low and a high
+//!   rate), the classic model for flash-crowd traffic.
+//! * [`ArrivalProcess::Diurnal`] — a non-homogeneous Poisson process with
+//!   a sinusoidal rate (day/night load curve), sampled by thinning.
+//!
+//! Each arrival carries a [`SyntheticQuery`]: a domain drawn from a Zipf
+//! mixture and per-layer gate-score vectors built from a fixed per-domain
+//! *template* plus optional multiplicative noise. Queries of the same
+//! domain therefore have near-identical gate signatures — the
+//! similarity structure (cf. SiftMoE) that the serve-side
+//! [solution cache](crate::serve::cache) exploits.
+
+use crate::gating::{GateScores, SyntheticGate};
+use crate::util::rng::Xoshiro256pp;
+
+/// The arrival process shaping inter-arrival times.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson arrivals at `rate_qps` queries/second.
+    Poisson { rate_qps: f64 },
+    /// 2-state Markov-modulated Poisson process: the rate alternates
+    /// between `low_qps` and `high_qps`, dwelling in each state for an
+    /// exponential time with mean `mean_dwell_s`.
+    Mmpp {
+        low_qps: f64,
+        high_qps: f64,
+        mean_dwell_s: f64,
+    },
+    /// Sinusoidal-rate Poisson process: `λ(t) = mean·(1 + a·sin(2πt/T))`
+    /// with the amplitude `a` derived from the peak-to-trough ratio.
+    Diurnal {
+        mean_qps: f64,
+        /// Peak rate divided by trough rate (≥ 1).
+        peak_to_trough: f64,
+        period_s: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// The canonical bursty stream: a 2-state MMPP swinging between
+    /// 0.25× and 1.75× the mean rate (so the long-run mean equals
+    /// `mean_qps`) with the given dwell time. One definition shared by
+    /// the CLI, examples and benches.
+    pub fn bursty_around(mean_qps: f64, mean_dwell_s: f64) -> Self {
+        ArrivalProcess::Mmpp {
+            low_qps: mean_qps * 0.25,
+            high_qps: mean_qps * 1.75,
+            mean_dwell_s,
+        }
+    }
+
+    /// The canonical diurnal stream around a mean rate.
+    pub fn diurnal_around(mean_qps: f64, peak_to_trough: f64, period_s: f64) -> Self {
+        ArrivalProcess::Diurnal {
+            mean_qps,
+            peak_to_trough,
+            period_s,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson { .. } => "poisson",
+            ArrivalProcess::Mmpp { .. } => "bursty(mmpp)",
+            ArrivalProcess::Diurnal { .. } => "diurnal",
+        }
+    }
+
+    /// Long-run mean arrival rate (queries/second).
+    pub fn mean_qps(&self) -> f64 {
+        match self {
+            ArrivalProcess::Poisson { rate_qps } => *rate_qps,
+            // Equal mean dwell in both states → time is split evenly.
+            ArrivalProcess::Mmpp { low_qps, high_qps, .. } => 0.5 * (low_qps + high_qps),
+            ArrivalProcess::Diurnal { mean_qps, .. } => *mean_qps,
+        }
+    }
+
+    fn validate(&self) {
+        match self {
+            ArrivalProcess::Poisson { rate_qps } => {
+                assert!(*rate_qps > 0.0, "poisson rate must be > 0");
+            }
+            ArrivalProcess::Mmpp {
+                low_qps,
+                high_qps,
+                mean_dwell_s,
+            } => {
+                assert!(*low_qps > 0.0 && *high_qps > 0.0, "mmpp rates must be > 0");
+                assert!(*mean_dwell_s > 0.0, "mmpp dwell must be > 0");
+            }
+            ArrivalProcess::Diurnal {
+                mean_qps,
+                peak_to_trough,
+                period_s,
+            } => {
+                assert!(*mean_qps > 0.0, "diurnal mean rate must be > 0");
+                assert!(*peak_to_trough >= 1.0, "peak_to_trough must be >= 1");
+                assert!(*period_s > 0.0, "diurnal period must be > 0");
+            }
+        }
+    }
+
+    /// Draw `n` arrival timestamps (strictly increasing, seconds from 0).
+    fn arrival_times(&self, n: usize, rng: &mut Xoshiro256pp) -> Vec<f64> {
+        self.validate();
+        let mut out = Vec::with_capacity(n);
+        match *self {
+            ArrivalProcess::Poisson { rate_qps } => {
+                let mut t = 0.0;
+                for _ in 0..n {
+                    t += rng.exponential(rate_qps);
+                    out.push(t);
+                }
+            }
+            ArrivalProcess::Mmpp {
+                low_qps,
+                high_qps,
+                mean_dwell_s,
+            } => {
+                let mut t = 0.0;
+                let mut high = false;
+                let mut next_switch = rng.exponential(1.0 / mean_dwell_s);
+                while out.len() < n {
+                    let rate = if high { high_qps } else { low_qps };
+                    let dt = rng.exponential(rate);
+                    if t + dt >= next_switch {
+                        // State flips before the candidate arrival; the
+                        // exponential is memoryless, so redraw from the
+                        // switch instant at the new state's rate.
+                        t = next_switch;
+                        high = !high;
+                        next_switch = t + rng.exponential(1.0 / mean_dwell_s);
+                        continue;
+                    }
+                    t += dt;
+                    out.push(t);
+                }
+            }
+            ArrivalProcess::Diurnal {
+                mean_qps,
+                peak_to_trough,
+                period_s,
+            } => {
+                // Thinning (Lewis–Shedler): propose at the peak rate,
+                // accept with probability λ(t)/λ_max.
+                let amp = (peak_to_trough - 1.0) / (peak_to_trough + 1.0);
+                let rate_max = mean_qps * (1.0 + amp);
+                let mut t = 0.0;
+                while out.len() < n {
+                    t += rng.exponential(rate_max);
+                    let rate_t = mean_qps
+                        * (1.0 + amp * (2.0 * std::f64::consts::PI * t / period_s).sin());
+                    if rng.next_f64() * rate_max < rate_t {
+                        out.push(t);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One synthetic user query: a domain, a token count, and pre-generated
+/// per-layer gate scores (the serving engine runs at the selection /
+/// energy level, like the paper-scale Figs. 6–9 experiments — no trained
+/// gate network of this width exists).
+#[derive(Debug, Clone)]
+pub struct SyntheticQuery {
+    pub id: u64,
+    pub domain: usize,
+    /// Number of tokens (hidden states) the query contributes per round.
+    pub tokens: usize,
+    /// `gates[l][t]` — gate scores for token `t` at layer `l`.
+    pub gates: Vec<Vec<GateScores>>,
+}
+
+/// A timestamped arrival.
+#[derive(Debug, Clone)]
+pub struct Arrival {
+    pub at_s: f64,
+    pub query: SyntheticQuery,
+}
+
+/// Traffic-stream configuration.
+#[derive(Debug, Clone)]
+pub struct TrafficConfig {
+    pub process: ArrivalProcess,
+    /// Total queries to generate.
+    pub queries: usize,
+    /// Number of query domains; drawn from a Zipf(1) mixture
+    /// (`P(d) ∝ 1/(d+1)`), so low-index domains dominate.
+    pub domains: usize,
+    pub tokens_per_query: usize,
+    /// Dirichlet concentration of the per-domain gate templates.
+    pub gate_concentration: f64,
+    /// Multiplicative gate bias toward a domain's home expert.
+    pub domain_bias: f64,
+    /// Per-query multiplicative log-normal gate noise around the domain
+    /// template (0 = every query of a domain shares the template exactly).
+    pub gate_noise: f64,
+    pub seed: u64,
+}
+
+impl TrafficConfig {
+    /// Poisson stream with the defaults the CLI uses.
+    pub fn poisson(rate_qps: f64, queries: usize) -> Self {
+        Self {
+            process: ArrivalProcess::Poisson { rate_qps },
+            queries,
+            domains: 8,
+            tokens_per_query: 4,
+            gate_concentration: 2.0,
+            domain_bias: 4.0,
+            gate_noise: 0.0,
+            seed: 0xD_0E,
+        }
+    }
+}
+
+/// Generates a reproducible arrival stream for a (K experts, L layers)
+/// system. Domain gate templates are fixed at construction; every call to
+/// [`TrafficGenerator::generate`] yields the same stream.
+#[derive(Debug, Clone)]
+pub struct TrafficGenerator {
+    cfg: TrafficConfig,
+    experts: usize,
+    layers: usize,
+    /// `templates[d][l]` — the domain's characteristic gate vector.
+    templates: Vec<Vec<GateScores>>,
+    /// Zipf mixture weights over domains.
+    weights: Vec<f64>,
+}
+
+impl TrafficGenerator {
+    pub fn new(cfg: TrafficConfig, experts: usize, layers: usize) -> Self {
+        assert!(experts >= 1 && layers >= 1);
+        assert!(cfg.domains >= 1, "need at least one domain");
+        assert!(cfg.queries >= 1, "need at least one query");
+        assert!(cfg.tokens_per_query >= 1, "queries must carry tokens");
+        assert!(cfg.gate_noise >= 0.0);
+        let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed ^ 0x7AF1_C0DE_7E3A_0001);
+        let templates = (0..cfg.domains)
+            .map(|d| {
+                let mut bias = vec![1.0; experts];
+                bias[d % experts] *= cfg.domain_bias.max(1.0);
+                let gate = SyntheticGate::new(experts, cfg.gate_concentration).with_bias(bias);
+                (0..layers).map(|_| gate.sample(&mut rng)).collect()
+            })
+            .collect();
+        let weights = (0..cfg.domains).map(|d| 1.0 / (d + 1) as f64).collect();
+        Self {
+            cfg,
+            experts,
+            layers,
+            templates,
+            weights,
+        }
+    }
+
+    pub fn config(&self) -> &TrafficConfig {
+        &self.cfg
+    }
+
+    /// Expert count the gate templates were drawn for.
+    pub fn experts(&self) -> usize {
+        self.experts
+    }
+
+    /// Layer count each query carries gates for.
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    /// The fixed gate template of a domain at a layer.
+    pub fn template(&self, domain: usize, layer: usize) -> &GateScores {
+        &self.templates[domain][layer]
+    }
+
+    /// Produce the full arrival stream (sorted by time).
+    pub fn generate(&self) -> Vec<Arrival> {
+        let mut rng = Xoshiro256pp::seed_from_u64(self.cfg.seed ^ 0x5EED_7FA1_C0DE_0001);
+        let times = self.cfg.process.arrival_times(self.cfg.queries, &mut rng);
+        times
+            .into_iter()
+            .enumerate()
+            .map(|(i, at_s)| {
+                let domain = rng.weighted_index(&self.weights);
+                let gates = (0..self.layers)
+                    .map(|l| {
+                        (0..self.cfg.tokens_per_query)
+                            .map(|_| self.perturbed(domain, l, &mut rng))
+                            .collect()
+                    })
+                    .collect();
+                Arrival {
+                    at_s,
+                    query: SyntheticQuery {
+                        id: i as u64,
+                        domain,
+                        tokens: self.cfg.tokens_per_query,
+                        gates,
+                    },
+                }
+            })
+            .collect()
+    }
+
+    fn perturbed(&self, domain: usize, layer: usize, rng: &mut Xoshiro256pp) -> GateScores {
+        let template = &self.templates[domain][layer];
+        if self.cfg.gate_noise == 0.0 {
+            return template.clone();
+        }
+        let raw: Vec<f64> = template
+            .as_slice()
+            .iter()
+            .map(|&s| s * (self.cfg.gate_noise * rng.normal()).exp())
+            .collect();
+        GateScores::new(raw)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen(process: ArrivalProcess, queries: usize) -> TrafficGenerator {
+        let cfg = TrafficConfig {
+            process,
+            queries,
+            ..TrafficConfig::poisson(1.0, 1)
+        };
+        TrafficGenerator::new(cfg, 4, 3)
+    }
+
+    #[test]
+    fn poisson_mean_interarrival() {
+        let g = gen(ArrivalProcess::Poisson { rate_qps: 50.0 }, 20_000);
+        let arrivals = g.generate();
+        assert_eq!(arrivals.len(), 20_000);
+        let span = arrivals.last().unwrap().at_s;
+        let rate = arrivals.len() as f64 / span;
+        assert!((rate - 50.0).abs() < 2.0, "empirical rate {rate}");
+        for w in arrivals.windows(2) {
+            assert!(w[1].at_s > w[0].at_s, "arrivals must be increasing");
+        }
+    }
+
+    #[test]
+    fn mmpp_is_burstier_than_poisson() {
+        // Index of dispersion of counts: ≈1 for Poisson, >1 for MMPP.
+        let dispersion = |times: &[f64], window: f64| {
+            let end = times.last().copied().unwrap_or(0.0);
+            let bins = (end / window).ceil() as usize;
+            let mut counts = vec![0.0f64; bins.max(1)];
+            for &t in times {
+                let b = ((t / window) as usize).min(counts.len() - 1);
+                counts[b] += 1.0;
+            }
+            let mean = crate::util::stats::mean(&counts);
+            let sd = crate::util::stats::stddev(&counts);
+            sd * sd / mean.max(1e-9)
+        };
+        let p: Vec<f64> = gen(ArrivalProcess::Poisson { rate_qps: 40.0 }, 10_000)
+            .generate()
+            .iter()
+            .map(|a| a.at_s)
+            .collect();
+        let m: Vec<f64> = gen(
+            ArrivalProcess::Mmpp {
+                low_qps: 8.0,
+                high_qps: 72.0,
+                mean_dwell_s: 2.0,
+            },
+            10_000,
+        )
+        .generate()
+        .iter()
+        .map(|a| a.at_s)
+        .collect();
+        let dp = dispersion(&p, 1.0);
+        let dm = dispersion(&m, 1.0);
+        assert!(dm > dp * 2.0, "mmpp dispersion {dm} vs poisson {dp}");
+    }
+
+    #[test]
+    fn diurnal_rate_oscillates() {
+        let period = 20.0;
+        let g = gen(
+            ArrivalProcess::Diurnal {
+                mean_qps: 100.0,
+                peak_to_trough: 4.0,
+                period_s: period,
+            },
+            40_000,
+        );
+        let times: Vec<f64> = g.generate().iter().map(|a| a.at_s).collect();
+        // Count arrivals in the rising half vs the falling half of each
+        // period: sin > 0 on [0, T/2), < 0 on [T/2, T).
+        let (mut peak, mut trough) = (0usize, 0usize);
+        for &t in &times {
+            if (t % period) < period / 2.0 {
+                peak += 1;
+            } else {
+                trough += 1;
+            }
+        }
+        assert!(
+            peak as f64 > trough as f64 * 1.5,
+            "peak half {peak} vs trough half {trough}"
+        );
+    }
+
+    #[test]
+    fn domains_follow_zipf_and_templates_are_stable() {
+        let g = gen(ArrivalProcess::Poisson { rate_qps: 10.0 }, 4000);
+        let arrivals = g.generate();
+        let mut counts = vec![0usize; g.config().domains];
+        for a in &arrivals {
+            counts[a.query.domain] += 1;
+        }
+        assert!(counts[0] > counts[g.config().domains - 1]);
+        // gate_noise = 0 → every query of a domain carries the template.
+        let a = arrivals
+            .iter()
+            .find(|a| a.query.domain == 0)
+            .expect("domain 0 appears");
+        for (l, row) in a.query.gates.iter().enumerate() {
+            for gs in row {
+                assert_eq!(gs.as_slice(), g.template(0, l).as_slice());
+            }
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let g = gen(ArrivalProcess::Poisson { rate_qps: 10.0 }, 100);
+        let a = g.generate();
+        let b = g.generate();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.at_s.to_bits(), y.at_s.to_bits());
+            assert_eq!(x.query.domain, y.query.domain);
+        }
+    }
+
+    #[test]
+    fn noise_perturbs_but_preserves_normalization() {
+        let mut cfg = TrafficConfig::poisson(10.0, 50);
+        cfg.gate_noise = 0.2;
+        let g = TrafficGenerator::new(cfg, 4, 2);
+        for a in g.generate() {
+            for row in &a.query.gates {
+                for gs in row {
+                    let sum: f64 = gs.as_slice().iter().sum();
+                    assert!((sum - 1.0).abs() < 1e-9);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! In-tree error type with context support (no `anyhow` in this
+//! environment — see the `util` module contract).
+//!
+//! [`Error`] is a lightweight dynamic error: a message plus an optional
+//! chain of causes. It converts from any `std::error::Error` (so `?`
+//! works on `io::Error`, [`crate::moe::ManifestError`], …), and the
+//! [`Context`] extension trait layers human-readable context the same way
+//! `anyhow::Context` does:
+//!
+//! ```
+//! use dmoe::util::error::{Context, Result};
+//!
+//! fn read(path: &str) -> Result<String> {
+//!     std::fs::read_to_string(path).with_context(|| format!("reading {path}"))
+//! }
+//! assert!(read("/nonexistent").is_err());
+//! ```
+//!
+//! Display prints the outermost message; the alternate form (`{err:#}`)
+//! appends the cause chain, which is what the `dmoe` binary prints on
+//! failure. The [`crate::bail!`] and [`crate::ensure!`] macros cover the
+//! early-return idioms.
+
+use std::fmt;
+
+/// A dynamic error: an outermost message plus an optional cause chain.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+/// Crate-wide result alias (defaults to [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from a plain message.
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Self {
+            msg: msg.to_string(),
+            cause: None,
+        }
+    }
+
+    /// Wrap this error as the cause of a new, outer message.
+    pub fn context(self, msg: impl fmt::Display) -> Self {
+        Self {
+            msg: msg.to_string(),
+            cause: Some(Box::new(self)),
+        }
+    }
+
+    /// The cause chain, outermost message first.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut out = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            out.push(e.msg.as_str());
+            cur = e.cause.as_deref();
+        }
+        out
+    }
+
+    /// The innermost (root) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain().last().copied().unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut cur = self.cause.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.cause.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` intentionally does NOT implement `std::error::Error`;
+// that keeps the blanket conversion below coherent (same design as the
+// ecosystem's dynamic-error crates).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // The repo's typed errors embed their source in Display already
+        // (e.g. "cannot read {path}: {io}"), so we take the top message
+        // and do not re-walk `source()`.
+        Error::msg(e.to_string())
+    }
+}
+
+/// Extension trait adding context to `Result` and `Option`.
+pub trait Context<T> {
+    /// Attach a fixed context message.
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    /// Attach a lazily-built context message (no cost on the Ok path).
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| e.into().context(msg))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)).into())
+    };
+}
+
+/// Assert a condition or early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::{bail, ensure};
+
+    fn fails_io() -> Result<String> {
+        let s = std::fs::read_to_string("/nonexistent/dmoe-error-test")
+            .with_context(|| "loading the test fixture".to_string())?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = fails_io().unwrap_err();
+        assert_eq!(err.to_string(), "loading the test fixture");
+        let full = format!("{err:#}");
+        assert!(full.starts_with("loading the test fixture: "), "{full}");
+        assert!(err.chain().len() == 2);
+    }
+
+    #[test]
+    fn context_layers_outermost_first() {
+        let e = Error::msg("root").context("mid").context("outer");
+        assert_eq!(e.chain(), vec!["outer", "mid", "root"]);
+        assert_eq!(e.root_cause(), "root");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: mid: root");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let err = none.context("missing value").unwrap_err();
+        assert_eq!(err.to_string(), "missing value");
+        assert_eq!(Some(3u32).context("unused").unwrap(), 3);
+    }
+
+    fn bails(x: i32) -> Result<i32> {
+        ensure!(x >= 0, "x must be non-negative, got {x}");
+        if x > 100 {
+            bail!("x too large: {x}");
+        }
+        Ok(x)
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        assert_eq!(bails(7).unwrap(), 7);
+        assert_eq!(bails(-1).unwrap_err().to_string(), "x must be non-negative, got -1");
+        assert_eq!(bails(101).unwrap_err().to_string(), "x too large: 101");
+    }
+}

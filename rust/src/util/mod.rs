@@ -5,6 +5,8 @@
 //! `criterion`, `rayon`) are unavailable. The repo carries small, tested
 //! replacements for exactly the slices it needs:
 //!
+//! * [`error`] — dynamic error + context chaining (`anyhow` slice) with
+//!   the [`crate::bail!`] / [`crate::ensure!`] macros.
 //! * [`rng`] — deterministic xoshiro256++ PRNG + distributions.
 //! * [`json`] — strict JSON parse/serialize (artifact manifest, reports).
 //! * [`cli`] — `--flag value` argument parsing for the binary/examples.
@@ -15,6 +17,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod pool;
 pub mod rng;

@@ -86,6 +86,10 @@ fn truncated_hlo_text_fails_to_parse() {
 
 #[test]
 fn malformed_queries_rejected() {
+    if !dmoe::runtime::pjrt_available() {
+        eprintln!("skipping: built without the `xla` feature (no PJRT runtime)");
+        return;
+    }
     let dir = std::env::var("DMOE_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
     if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
         eprintln!("skipping: needs artifacts");

@@ -15,6 +15,10 @@ use dmoe::workload::{load_eval_sets, Query};
 use dmoe::SystemConfig;
 
 fn artifacts_dir() -> Option<String> {
+    if !dmoe::runtime::pjrt_available() {
+        eprintln!("skipping: built without the `xla` feature (no PJRT runtime)");
+        return None;
+    }
     let dir = std::env::var("DMOE_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
     if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
         Some(dir)

@@ -1,0 +1,193 @@
+//! Integration tests for the continuous serving engine: conservation,
+//! determinism, cache behaviour under a real multi-round run, and the
+//! satellite guarantee that the latency numbers the engine reports match
+//! the discrete-event timelines (`protocol::sim`), including
+//! `critical_path` on every recorded round.
+
+use dmoe::coordinator::ServePolicy;
+use dmoe::protocol::sim::Event;
+use dmoe::serve::{
+    ArrivalProcess, QuantizerConfig, QueueConfig, ServeEngine, ServeOptions, TrafficConfig,
+};
+use dmoe::SystemConfig;
+
+fn setup(queries: usize) -> (SystemConfig, ServeOptions, TrafficConfig) {
+    let cfg = SystemConfig::tiny(); // K=3, L=2, M=12
+    let policy = ServePolicy::jesa(0.8, 2, cfg.moe.layers);
+    let queue = QueueConfig::for_system(cfg.moe.experts, 1.0);
+    let opts = ServeOptions {
+        workers: 1,
+        ..ServeOptions::new(policy, queue)
+    };
+    let traffic = TrafficConfig {
+        queries,
+        domains: 4,
+        tokens_per_query: 2,
+        seed: 1234,
+        ..TrafficConfig::poisson(10.0, queries)
+    };
+    (cfg, opts, traffic)
+}
+
+#[test]
+fn multi_round_latencies_match_discrete_event_timelines() {
+    let (cfg, mut opts, traffic) = setup(120);
+    opts.record_timelines = true;
+    let engine = ServeEngine::new(&cfg, opts);
+    let report = engine.run(&traffic);
+
+    assert!(report.rounds > 1, "needs a multi-round run");
+    assert_eq!(report.timelines.len(), report.rounds);
+    for (round, timelines) in report.rounds_log.iter().zip(report.timelines.iter()) {
+        // The engine's reported round latency is exactly the sum of the
+        // per-layer discrete-event timelines.
+        assert_eq!(timelines.len(), cfg.moe.layers);
+        let recomputed: f64 = timelines.iter().map(|t| t.round_latency_s).sum();
+        assert!(
+            (round.latency_s - recomputed).abs() <= 1e-12,
+            "round latency {} != timeline sum {recomputed}",
+            round.latency_s
+        );
+        // critical_path terminates every layer's timeline at its latency
+        // and is causally ordered.
+        for tl in timelines {
+            let path = tl.critical_path();
+            if tl.round_latency_s > 0.0 {
+                assert!(!path.is_empty());
+                assert!(
+                    (path.last().unwrap().time() - tl.round_latency_s).abs() <= 1e-12,
+                    "critical path must end at the round latency"
+                );
+            }
+            for w in path.windows(2) {
+                assert!(w[0].time() <= w[1].time() + 1e-12, "path not causal");
+            }
+            // A backward delivery on the path must be preceded by its
+            // expert's compute completion.
+            for e in &path {
+                if let Event::BackwardDone { from, at_s, .. } = e {
+                    let compute = tl.events.iter().find_map(|x| match x {
+                        Event::ComputeDone { expert, at_s } if expert == from => Some(*at_s),
+                        _ => None,
+                    });
+                    let compute = compute.expect("backward without compute");
+                    assert!(*at_s >= compute - 1e-12);
+                }
+            }
+        }
+    }
+
+    // Per-query accounting agrees with the round it rode in: completion
+    // time = round start + round latency.
+    for c in &report.completions {
+        let round = report
+            .rounds_log
+            .iter()
+            .find(|r| (r.start_s - c.start_s).abs() <= 1e-12)
+            .expect("every completion maps to a logged round");
+        assert!(
+            (c.done_s - (round.start_s + round.latency_s)).abs() <= 1e-12,
+            "completion time disagrees with its round's timeline"
+        );
+        assert!((c.latency_s() - (c.done_s - c.arrival_s)).abs() <= 1e-15);
+    }
+}
+
+#[test]
+fn conservation_and_reported_statistics() {
+    let (cfg, opts, traffic) = setup(300);
+    let engine = ServeEngine::new(&cfg, opts);
+    let report = engine.run(&traffic);
+
+    assert_eq!(report.generated, 300);
+    assert_eq!(report.completed + report.shed(), report.generated);
+    assert_eq!(report.completed, report.completions.len());
+    assert_eq!(
+        report.rounds_log.iter().map(|r| r.queries).sum::<usize>(),
+        report.completed
+    );
+    assert!(report.throughput_qps() > 0.0);
+    assert!(report.latency_p50_s() > 0.0);
+    assert!(report.latency_p99_s() >= report.latency_p50_s());
+    assert!(report.energy.total_j() > 0.0);
+    assert!(report.tokens > 0);
+    // The render covers the acceptance-criteria numbers.
+    let text = report.render();
+    for needle in ["throughput", "p50", "p99", "shed", "cache", "energy"] {
+        assert!(text.contains(needle), "render lacks {needle}: {text}");
+    }
+}
+
+#[test]
+fn cache_hits_nonzero_on_template_workload_and_identical_rerun() {
+    let (cfg, opts, traffic) = setup(300);
+    let a = ServeEngine::new(&cfg, opts.clone()).run(&traffic);
+    assert!(
+        a.cache.hits > 0,
+        "template workload must produce cache hits: {:?}",
+        a.cache
+    );
+    // Determinism end-to-end (cache included): identical reruns agree to
+    // the bit on every reported number.
+    let b = ServeEngine::new(&cfg, opts).run(&traffic);
+    assert_eq!(a.cache.hits, b.cache.hits);
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.energy.total_j().to_bits(), b.energy.total_j().to_bits());
+    assert_eq!(a.completions.len(), b.completions.len());
+    for (x, y) in a.completions.iter().zip(b.completions.iter()) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.done_s.to_bits(), y.done_s.to_bits());
+    }
+}
+
+#[test]
+fn bursty_and_diurnal_streams_serve_end_to_end() {
+    for process in [
+        ArrivalProcess::Mmpp {
+            low_qps: 3.0,
+            high_qps: 30.0,
+            mean_dwell_s: 1.0,
+        },
+        ArrivalProcess::Diurnal {
+            mean_qps: 10.0,
+            peak_to_trough: 4.0,
+            period_s: 10.0,
+        },
+    ] {
+        let (cfg, opts, mut traffic) = setup(200);
+        traffic.process = process;
+        let report = ServeEngine::new(&cfg, opts).run(&traffic);
+        assert_eq!(report.completed + report.shed(), report.generated);
+        assert!(report.completed > 0, "stream must make progress");
+    }
+}
+
+#[test]
+fn quantization_step_trades_hit_rate() {
+    // A much finer channel grid must not increase the hit rate.
+    let (cfg, coarse_opts, traffic) = setup(300);
+    let mut fine_opts = coarse_opts.clone();
+    fine_opts.quant = QuantizerConfig {
+        log2_step: 0.05,
+        gate_levels: 4096,
+    };
+    let coarse = ServeEngine::new(&cfg, coarse_opts).run(&traffic);
+    let fine = ServeEngine::new(&cfg, fine_opts).run(&traffic);
+    assert!(
+        fine.cache.hits <= coarse.cache.hits,
+        "finer quantization ({}) must not out-hit coarser ({})",
+        fine.cache.hits,
+        coarse.cache.hits
+    );
+}
+
+#[test]
+fn engine_rejects_mismatched_policy_width() {
+    let (cfg, opts, _) = setup(10);
+    let bad = ServeOptions {
+        policy: ServePolicy::jesa(0.8, 2, cfg.moe.layers + 1),
+        ..opts
+    };
+    let result = std::panic::catch_unwind(|| ServeEngine::new(&cfg, bad));
+    assert!(result.is_err(), "layer-width mismatch must be rejected");
+}
