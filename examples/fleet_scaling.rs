@@ -1,0 +1,205 @@
+//! Fleet scaling driver: cells × routing-policy sweep at fixed per-cell
+//! utilization.
+//!
+//! For each cell count the offered load is `cells × utilization ×
+//! per-cell capacity` and the query volume scales with the fleet, so the
+//! sweep answers the scale-out question directly: does doubling the
+//! cells double the sustained throughput? It also compares the three
+//! dispatch policies — round-robin, join-shortest-queue, channel-aware —
+//! on tail latency and energy per query, and reports the shared solution
+//! cache's cross-cell hits.
+//!
+//! ```bash
+//! cargo run --release --example fleet_scaling [-- --queries N --utilization X]
+//! ```
+
+use dmoe::coordinator::ServePolicy;
+use dmoe::fleet::{
+    estimate_cell_round_latency_s, CellLayout, FleetEngine, FleetOptions, FleetReport, Mobility,
+    MobilityConfig, RoutePolicy,
+};
+use dmoe::serve::{ArrivalProcess, QueueConfig, TrafficConfig};
+use dmoe::util::cli::Args;
+use dmoe::util::table::Table;
+use dmoe::SystemConfig;
+
+fn main() {
+    let args = Args::from_env();
+    let cfg = SystemConfig::default();
+    let k = cfg.moe.experts;
+    let layers = cfg.moe.layers;
+    let base_queries = args.get_usize("queries", 1_000);
+    let utilization = args.get_f64("utilization", 0.6);
+    let spacing = 200.0;
+
+    let policy = ServePolicy::jesa(0.8, 2, layers);
+    let base_traffic = TrafficConfig {
+        queries: base_queries,
+        tokens_per_query: 4,
+        seed: cfg.workload.seed,
+        ..TrafficConfig::poisson(1.0, base_queries)
+    };
+    // Vehicular-speed users: the sweep's simulated horizon is tens of
+    // seconds, so pedestrian mobility would barely move anyone — fast
+    // users make mid-session handover and time-varying cell radio
+    // visible within the run.
+    let mobility = MobilityConfig {
+        users: 32,
+        mean_speed_mps: 25.0,
+        speed_sigma_mps: 5.0,
+        ..MobilityConfig::default()
+    };
+
+    println!(
+        "DMoE fleet scaling: K={k} L={layers}, {base_queries} queries/cell at {:.0}% per-cell \
+         utilization\n",
+        utilization * 100.0
+    );
+
+    let cell_counts = [1usize, 2, 4];
+    let routes = [
+        RoutePolicy::RoundRobin,
+        RoutePolicy::JoinShortestQueue,
+        RoutePolicy::ChannelAware,
+    ];
+    let mut table = Table::new(&[
+        "cells", "route", "done", "q/s sim", "vs 1-cell", "p50 s", "p99 s", "J/query", "hit %",
+        "cross %", "handover %", "imbal",
+    ]);
+    let mut reports: Vec<(usize, RoutePolicy, FleetReport)> = Vec::new();
+    for &cells in &cell_counts {
+        // Calibrate the per-cell capacity at this layout's typical
+        // mobility attenuation.
+        let layout = CellLayout::grid(cells, spacing);
+        let scale =
+            Mobility::new(mobility.clone(), &layout).mean_attachment_attenuation(&layout);
+        let round_s =
+            estimate_cell_round_latency_s(&cfg, &policy, &base_traffic, 4, scale).max(1e-9);
+        let rate = cells as f64 * utilization * k as f64 / round_s;
+        for route in routes {
+            let traffic = TrafficConfig {
+                process: ArrivalProcess::Poisson { rate_qps: rate },
+                queries: base_queries * cells,
+                ..base_traffic.clone()
+            };
+            let mut fopts = FleetOptions::new(
+                cells,
+                route,
+                policy.clone(),
+                QueueConfig::for_system(k, round_s),
+            );
+            fopts.mobility = mobility.clone();
+            fopts.spacing_m = spacing;
+            let report = FleetEngine::new(&cfg, fopts).run(&traffic);
+            reports.push((cells, route, report));
+        }
+    }
+
+    for (cells, route, report) in &reports {
+        let base = find(&reports, 1, *route).throughput_qps();
+        table.row(vec![
+            format!("{cells}"),
+            route.label().to_string(),
+            format!("{}", report.completed),
+            format!("{:.2}", report.throughput_qps()),
+            format!("{:.2}x", report.throughput_qps() / base.max(1e-9)),
+            format!("{:.3}", report.latency_p50_s()),
+            format!("{:.3}", report.latency_p99_s()),
+            format!("{:.5}", report.energy_per_query_j()),
+            format!("{:.1}", report.cache.hit_rate() * 100.0),
+            format!("{:.1}", report.cache.cross_hit_rate() * 100.0),
+            format!("{:.1}", report.handover_rate() * 100.0),
+            format!("{:.2}", report.imbalance()),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // Exact-physics router comparison at 4 cells: the cached sweep above
+    // solves rounds on the quantized canonical channel, which by design
+    // collapses moderate per-cell radio differences into one bucket — so
+    // the dispatch comparison runs cacheless on the exact correlated
+    // channels, where a cell's mobility-driven radio quality shows up in
+    // its comm energy and round latency.
+    let layout4 = CellLayout::grid(4, spacing);
+    let scale4 = Mobility::new(mobility.clone(), &layout4).mean_attachment_attenuation(&layout4);
+    let round4_s =
+        estimate_cell_round_latency_s(&cfg, &policy, &base_traffic, 4, scale4).max(1e-9);
+    let rate4 = 4.0 * utilization * k as f64 / round4_s;
+    let mut exact: Vec<(RoutePolicy, FleetReport)> = Vec::new();
+    for route in [RoutePolicy::RoundRobin, RoutePolicy::ChannelAware] {
+        let traffic = TrafficConfig {
+            process: ArrivalProcess::Poisson { rate_qps: rate4 },
+            queries: base_queries * 4,
+            ..base_traffic.clone()
+        };
+        let mut fopts = FleetOptions::new(
+            4,
+            route,
+            policy.clone(),
+            QueueConfig::for_system(k, round4_s),
+        );
+        fopts.cache_capacity = 0;
+        fopts.mobility = mobility.clone();
+        fopts.spacing_m = spacing;
+        exact.push((route, FleetEngine::new(&cfg, fopts).run(&traffic)));
+    }
+
+    // The three claims this sweep demonstrates, stated explicitly.
+    let speedup = find(&reports, 2, RoutePolicy::JoinShortestQueue).throughput_qps()
+        / find(&reports, 1, RoutePolicy::JoinShortestQueue)
+            .throughput_qps()
+            .max(1e-9);
+    println!(
+        "scaling 1 -> 2 cells (jsq): {speedup:.2}x throughput at fixed per-cell utilization \
+         (target >= 1.8x): {}",
+        if speedup >= 1.8 { "PASS" } else { "MISS" }
+    );
+    let rr = &exact[0].1;
+    let ca = &exact[1].1;
+    let energy_gain = 1.0 - ca.energy_per_query_j() / rr.energy_per_query_j().max(1e-12);
+    let p99_gain = 1.0 - ca.latency_p99_s() / rr.latency_p99_s().max(1e-12);
+    println!(
+        "channel-aware vs round-robin at 4 cells (exact physics): {:.5} vs {:.5} J/query \
+         ({:+.1}%), p99 {:.3} vs {:.3} s ({:+.1}%): {}",
+        ca.energy_per_query_j(),
+        rr.energy_per_query_j(),
+        -energy_gain * 100.0,
+        ca.latency_p99_s(),
+        rr.latency_p99_s(),
+        -p99_gain * 100.0,
+        if energy_gain > 0.0 || p99_gain > 0.0 {
+            "PASS (beats rr on energy or p99)"
+        } else {
+            "MISS"
+        }
+    );
+    let jsq4 = find(&reports, 4, RoutePolicy::JoinShortestQueue);
+    println!(
+        "shared cache at 4 cells (jsq): {}/{} hits, {} cross-cell ({:.1}% of hits): {}",
+        jsq4.cache.hits,
+        jsq4.cache.lookups(),
+        jsq4.cache.cross_hits,
+        jsq4.cache.cross_hit_rate() * 100.0,
+        if jsq4.cache.cross_hits > 0 {
+            "PASS (regimes recur across cells)"
+        } else {
+            "MISS"
+        }
+    );
+    println!(
+        "\n(channel-aware skews toward radio-favored cells — higher imbalance, lower energy;\n\
+         jsq keeps queues level — flattest p99; handover rate tracks user mobility)"
+    );
+}
+
+fn find<'a>(
+    reports: &'a [(usize, RoutePolicy, FleetReport)],
+    cells: usize,
+    route: RoutePolicy,
+) -> &'a FleetReport {
+    &reports
+        .iter()
+        .find(|(c, r, _)| *c == cells && *r == route)
+        .expect("combination swept above")
+        .2
+}

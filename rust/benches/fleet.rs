@@ -1,0 +1,58 @@
+//! Fleet bench: router dispatch cost, mobility stepping, and end-to-end
+//! multi-cell engine throughput (simulated queries per wall-clock
+//! second) across cell counts and routing policies.
+
+use dmoe::config::SystemConfig;
+use dmoe::coordinator::ServePolicy;
+use dmoe::fleet::{CellLayout, FleetEngine, FleetOptions, Mobility, MobilityConfig, RoutePolicy};
+use dmoe::serve::{ArrivalProcess, QueueConfig, TrafficConfig};
+use dmoe::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::new();
+    let cfg = SystemConfig::default();
+    let k = cfg.moe.experts;
+    let layers = cfg.moe.layers;
+    let policy = ServePolicy::jesa(0.8, 2, layers);
+
+    println!("# mobility stepping (48 users, 4 cells, 1000 ticks)\n");
+    let layout = CellLayout::grid(4, 200.0);
+    b.bench("mobility/1000_ticks", || {
+        let mut m = Mobility::new(MobilityConfig::default(), &layout);
+        m.advance_to(1000.0);
+        black_box(m.position(0))
+    });
+
+    println!("\n# end-to-end fleet engine (400 queries, poisson)\n");
+    for cells in [1usize, 2, 4] {
+        for route in [RoutePolicy::JoinShortestQueue, RoutePolicy::ChannelAware] {
+            let queries = 400;
+            let traffic = TrafficConfig {
+                process: ArrivalProcess::Poisson {
+                    rate_qps: 30.0 * cells as f64,
+                },
+                queries,
+                tokens_per_query: 4,
+                ..TrafficConfig::poisson(1.0, queries)
+            };
+            let mut fopts =
+                FleetOptions::new(cells, route, policy.clone(), QueueConfig::for_system(k, 0.5));
+            fopts.workers = 1;
+            let engine = FleetEngine::new(&cfg, fopts);
+            let r = b.bench(
+                &format!("fleet/400q/cells={cells}/route={}", route.label()),
+                || black_box(engine.run(&traffic)),
+            );
+            let report = engine.run(&traffic);
+            println!(
+                "cells={cells} route={:<13} -> {:.0} q/s engine speed, hit {:.1}%, cross \
+                 {:.1}%, imbalance {:.2}",
+                route.label(),
+                queries as f64 / r.mean_s(),
+                report.cache.hit_rate() * 100.0,
+                report.cache.cross_hit_rate() * 100.0,
+                report.imbalance(),
+            );
+        }
+    }
+}

@@ -10,6 +10,20 @@
 //! into per-round [`ChannelState`] realizations; a state holds the gain
 //! and Shannon-rate grids (paper eq. 1) and answers the aggregate-rate
 //! query `R_ij` (eq. 2) for any subcarrier assignment.
+//!
+//! Two realization modes are supported:
+//!
+//! * **i.i.d.** (default, the paper's §VII-A2 assumption): every round
+//!   draws an independent Rayleigh realization.
+//! * **correlated** ([`ChannelModel::with_correlation`]): the underlying
+//!   complex-Gaussian fading components evolve as a per-(link,
+//!   subcarrier) AR(1) Gauss–Markov process with memory `ρ`, so
+//!   successive rounds see temporally correlated gains (lag-1 power
+//!   correlation `ρ²`) while the stationary Rayleigh statistics are
+//!   preserved. The [fleet](crate::fleet) subsystem drives this mode —
+//!   user mobility changes a cell's radio regime smoothly, not i.i.d.
+//!   per round — and additionally modulates the mean path loss through
+//!   [`ChannelModel::set_path_scale`].
 
 mod state;
 
@@ -20,7 +34,7 @@ use crate::util::rng::Xoshiro256pp;
 
 /// Generator of channel realizations.
 ///
-/// Each call to [`ChannelModel::realize`] draws a fresh i.i.d. fading
+/// Each call to [`ChannelModel::realize`] draws the next fading
 /// realization — the paper's per-round channel. The generator owns its RNG
 /// stream, so a seeded model yields a reproducible sequence of states.
 #[derive(Debug, Clone)]
@@ -29,6 +43,16 @@ pub struct ChannelModel {
     experts: usize,
     rng: Xoshiro256pp,
     round: u64,
+    /// AR(1) memory `ρ` of the Gaussian fading components; `None` → the
+    /// seed's i.i.d.-per-round behavior (bit-identical RNG stream).
+    correlation: Option<f64>,
+    /// Persistent unit-variance fading components `(re, im)` per
+    /// `(i·K + j)·M + m` entry; lazily initialized on the first
+    /// correlated realization.
+    fading: Option<(Vec<f64>, Vec<f64>)>,
+    /// Multiplier on the configured mean path loss (mobility-driven cell
+    /// regime; 1.0 = the configured baseline).
+    path_scale: f64,
 }
 
 impl ChannelModel {
@@ -39,7 +63,38 @@ impl ChannelModel {
             experts,
             rng: Xoshiro256pp::seed_from_u64(seed ^ 0xC4A2_2E1F_55AA_77DD),
             round: 0,
+            correlation: None,
+            fading: None,
+            path_scale: 1.0,
         }
+    }
+
+    /// Switch to the temporally correlated realization mode with AR(1)
+    /// memory `rho` in `[0, 1)`. `rho = 0` keeps rounds independent but
+    /// routes them through the Gauss–Markov sampler (a different, still
+    /// deterministic RNG stream than the i.i.d. mode).
+    pub fn with_correlation(mut self, rho: f64) -> Self {
+        assert!(
+            (0.0..1.0).contains(&rho),
+            "fading correlation must be in [0, 1), got {rho}"
+        );
+        self.correlation = Some(rho);
+        self
+    }
+
+    /// Scale the mean path loss of subsequent realizations (e.g. the
+    /// mobility-driven attenuation of a fleet cell). 1.0 restores the
+    /// configured baseline.
+    pub fn set_path_scale(&mut self, scale: f64) {
+        assert!(
+            scale > 0.0 && scale.is_finite(),
+            "path scale must be positive and finite, got {scale}"
+        );
+        self.path_scale = scale;
+    }
+
+    pub fn path_scale(&self) -> f64 {
+        self.path_scale
     }
 
     pub fn config(&self) -> &ChannelConfig {
@@ -52,9 +107,17 @@ impl ChannelModel {
 
     /// Draw the next fading realization (one per protocol round).
     pub fn realize(&mut self) -> ChannelState {
+        match self.correlation {
+            None => self.realize_iid(),
+            Some(rho) => self.realize_correlated(rho),
+        }
+    }
+
+    fn realize_iid(&mut self) -> ChannelState {
         let k = self.experts;
         let m = self.cfg.subcarriers;
         let n0 = self.cfg.n0_w();
+        let mean_gain = self.cfg.path_loss * self.path_scale;
         let mut gains = vec![0.0f64; k * k * m];
         let mut rates = vec![0.0f64; k * k * m];
         for i in 0..k {
@@ -67,12 +130,70 @@ impl ChannelModel {
                         gains[idx] = 0.0;
                         rates[idx] = f64::INFINITY;
                     } else {
-                        let h: f64 = self.rng.rayleigh_power(self.cfg.path_loss);
+                        let h: f64 = self.rng.rayleigh_power(mean_gain);
                         gains[idx] = h;
                         // Paper eq. (1): r = B0 log2(1 + H P0 / N0).
                         rates[idx] =
                             self.cfg.b0_hz * (1.0 + h * self.cfg.p0_w / n0).log2();
                     }
+                }
+            }
+        }
+        self.round += 1;
+        ChannelState::from_raw(k, m, gains, rates, self.round - 1)
+    }
+
+    /// Gauss–Markov evolution of the complex fading: each off-diagonal
+    /// `(i, j, m)` entry keeps unit-variance Gaussian components
+    /// `x, y ~ N(0, 1)` with `x ← ρx + √(1−ρ²)·w`, and the power gain is
+    /// `g · (x² + y²)/2` — exponential with mean `g` in steady state, so
+    /// the marginal statistics match the i.i.d. mode while consecutive
+    /// rounds correlate.
+    fn realize_correlated(&mut self, rho: f64) -> ChannelState {
+        let k = self.experts;
+        let m = self.cfg.subcarriers;
+        let n0 = self.cfg.n0_w();
+        let b0 = self.cfg.b0_hz;
+        let p0 = self.cfg.p0_w;
+        let mean_gain = self.cfg.path_loss * self.path_scale;
+        let n = k * k * m;
+        if self.fading.is_none() {
+            let mut re = vec![0.0f64; n];
+            let mut im = vec![0.0f64; n];
+            for i in 0..k {
+                for j in 0..k {
+                    if i == j {
+                        continue;
+                    }
+                    for s in 0..m {
+                        let idx = (i * k + j) * m + s;
+                        re[idx] = self.rng.normal();
+                        im[idx] = self.rng.normal();
+                    }
+                }
+            }
+            self.fading = Some((re, im));
+        }
+        let innovation = (1.0 - rho * rho).sqrt();
+        // Split-borrow the fading state and the RNG (both live in self).
+        let Self { fading, rng, .. } = self;
+        let (re, im) = fading.as_mut().expect("fading state initialized");
+        let mut gains = vec![0.0f64; n];
+        let mut rates = vec![0.0f64; n];
+        for i in 0..k {
+            for j in 0..k {
+                for s in 0..m {
+                    let idx = (i * k + j) * m + s;
+                    if i == j {
+                        gains[idx] = 0.0;
+                        rates[idx] = f64::INFINITY;
+                        continue;
+                    }
+                    re[idx] = rho * re[idx] + innovation * rng.normal();
+                    im[idx] = rho * im[idx] + innovation * rng.normal();
+                    let h = mean_gain * 0.5 * (re[idx] * re[idx] + im[idx] * im[idx]);
+                    gains[idx] = h;
+                    rates[idx] = b0 * (1.0 + h * p0 / n0).log2();
                 }
             }
         }
@@ -167,6 +288,96 @@ mod tests {
             let expect = cfg.b0_hz * (1.0 + h * cfg.p0_w / n0).log2();
             assert!((st.rate(0, 1, m) - expect).abs() < 1e-9);
         }
+    }
+
+    fn lag1_power_correlation(model: &mut ChannelModel, rounds: usize) -> f64 {
+        // Sample one link/subcarrier across rounds and estimate the lag-1
+        // autocorrelation of its power gain.
+        let xs: Vec<f64> = (0..rounds).map(|_| model.realize().gain(0, 1, 0)).collect();
+        let mean = crate::util::stats::mean(&xs);
+        let var: f64 = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>();
+        let cov: f64 = xs
+            .windows(2)
+            .map(|w| (w[0] - mean) * (w[1] - mean))
+            .sum::<f64>();
+        cov / var.max(1e-30)
+    }
+
+    #[test]
+    fn correlated_mode_correlates_successive_rounds() {
+        let mut corr = model(2, 1, 11).with_correlation(0.95);
+        let rho_hat = lag1_power_correlation(&mut corr, 4000);
+        // Theoretical lag-1 power correlation is rho^2 ≈ 0.90.
+        assert!(rho_hat > 0.7, "correlated mode lag-1 {rho_hat}");
+        let mut iid = model(2, 1, 11);
+        let rho_iid = lag1_power_correlation(&mut iid, 4000);
+        assert!(rho_iid.abs() < 0.1, "i.i.d. mode lag-1 {rho_iid}");
+    }
+
+    #[test]
+    fn correlated_mode_preserves_mean_gain() {
+        let mut ch = model(2, 64, 13).with_correlation(0.9);
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for _ in 0..200 {
+            let st = ch.realize();
+            for m in 0..64 {
+                sum += st.gain(0, 1, m) + st.gain(1, 0, m);
+                n += 2;
+            }
+        }
+        let mean = sum / n as f64;
+        assert!(
+            (mean - 1e-2).abs() < 1.5e-3,
+            "stationary mean gain {mean} should approximate path loss 1e-2"
+        );
+    }
+
+    #[test]
+    fn correlated_mode_is_deterministic() {
+        let mut a = model(3, 8, 21).with_correlation(0.8);
+        let mut b = model(3, 8, 21).with_correlation(0.8);
+        for _ in 0..5 {
+            let (sa, sb) = (a.realize(), b.realize());
+            for i in 0..3 {
+                for j in 0..3 {
+                    for m in 0..8 {
+                        assert_eq!(sa.gain(i, j, m).to_bits(), sb.gain(i, j, m).to_bits());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn path_scale_scales_mean_gain_and_rates() {
+        let mut hi = model(2, 256, 31);
+        let mut lo = model(2, 256, 31);
+        lo.set_path_scale(0.25);
+        let (sh, sl) = (hi.realize(), lo.realize());
+        let mean = |st: &ChannelState| {
+            let mut sum = 0.0;
+            for m in 0..256 {
+                sum += st.gain(0, 1, m);
+            }
+            sum / 256.0
+        };
+        let (mh, ml) = (mean(&sh), mean(&sl));
+        assert!(
+            (ml / mh - 0.25).abs() < 0.05,
+            "scaled mean {ml} vs baseline {mh}"
+        );
+        // Rates shrink monotonically with the gain scale (same RNG seed →
+        // identical underlying exponential draws).
+        for m in 0..256 {
+            assert!(sl.rate(0, 1, m) < sh.rate(0, 1, m));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "path scale")]
+    fn rejects_nonpositive_path_scale() {
+        model(2, 2, 1).set_path_scale(0.0);
     }
 
     #[test]

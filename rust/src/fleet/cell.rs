@@ -1,0 +1,376 @@
+//! One fleet cell: a serving lane with its own channel, admission queue
+//! and accounting, plus a warm/drain lifecycle.
+//!
+//! A `Cell` is the fleet's unit of scale-out — the same round pipeline as
+//! [`ServeEngine`](crate::serve::ServeEngine) (both run
+//! `serve::engine::execute_round`), but event-stepped by the
+//! [`FleetEngine`](crate::fleet::FleetEngine) so N cells share one global
+//! clock, one router and one [`SharedSolutionCache`]:
+//!
+//! * its [`ChannelModel`] runs in the correlated-realization mode, with
+//!   the per-round path-loss scale driven by user mobility;
+//! * its JESA/BCD solver seed is the *fleet's* seed (identical across
+//!   cells), so canonical rounds that repeat in another cell hit the
+//!   shared cache — while the channel stream seed is per-cell;
+//! * [`Cell::advance`] executes every round that forms strictly before
+//!   the next global event, mirroring the single-engine loop's admission
+//!   semantics; [`Cell::flush`] fires the final partial batches once the
+//!   arrival stream has drained.
+//!
+//! # Lifecycle
+//!
+//! `Warming → Active → Draining → Drained`. A warming cell pre-rolls
+//! fading realizations so its AR(1) channel state is mixed before user
+//! traffic lands (and is already routable); a draining cell stops
+//! accepting new arrivals but finishes its backlog; it reports `Drained`
+//! once empty.
+
+use super::report::CellReport;
+use crate::channel::ChannelModel;
+use crate::coordinator::ServePolicy;
+use crate::energy::{EnergyLedger, EnergyModel};
+use crate::jesa::JesaOptions;
+use crate::metrics::{Metrics, SelectionPattern};
+use crate::protocol::ComputeModel;
+use crate::serve::engine::{execute_round, Completion, RoundContext, RoundLog};
+use crate::serve::{AdmissionQueue, Arrival, QuantizerConfig, QueueConfig, SharedSolutionCache};
+use crate::util::stats;
+use crate::SystemConfig;
+use std::time::Instant;
+
+/// Lifecycle state of a cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellState {
+    /// Pre-rolling channel state; accepts traffic.
+    Warming,
+    /// Serving normally.
+    Active,
+    /// No longer accepts new arrivals; finishing its backlog.
+    Draining,
+    /// Drained and idle.
+    Drained,
+}
+
+impl CellState {
+    pub fn label(&self) -> &'static str {
+        match self {
+            CellState::Warming => "warming",
+            CellState::Active => "active",
+            CellState::Draining => "draining",
+            CellState::Drained => "drained",
+        }
+    }
+}
+
+/// Per-cell construction parameters (built by the fleet from its
+/// options).
+#[derive(Debug, Clone)]
+pub struct CellConfig {
+    pub id: u32,
+    pub policy: ServePolicy,
+    pub queue: QueueConfig,
+    pub quant: QuantizerConfig,
+    /// False disables the solution cache (rounds solve on the exact
+    /// channel).
+    pub caching: bool,
+    pub workers: usize,
+    /// JESA/BCD seed — fleet-wide, so cache keys align across cells.
+    pub solver_seed: u64,
+    /// Channel-stream seed — unique per cell.
+    pub channel_seed: u64,
+    /// AR(1) fading memory of the correlated channel mode.
+    pub fading_rho: f64,
+}
+
+/// One serving lane of the fleet.
+pub struct Cell {
+    id: u32,
+    state: CellState,
+    layers: usize,
+    energy: EnergyModel,
+    compute: ComputeModel,
+    policy: ServePolicy,
+    quant: QuantizerConfig,
+    jesa: JesaOptions,
+    caching: bool,
+    workers: usize,
+    channel: ChannelModel,
+    queue: AdmissionQueue,
+    ledger: EnergyLedger,
+    pattern: SelectionPattern,
+    metrics: Metrics,
+    free_at: f64,
+    routed: usize,
+    completions: Vec<Completion>,
+    rounds_log: Vec<RoundLog>,
+    fallbacks: usize,
+    tokens: u64,
+    cache_hits: usize,
+}
+
+impl Cell {
+    pub fn new(sys: &SystemConfig, cc: CellConfig) -> Self {
+        let k = sys.moe.experts;
+        let layers = sys.moe.layers;
+        assert!(
+            cc.policy.importance.layers() == layers,
+            "cell policy importance covers {} layers, system has {layers}",
+            cc.policy.importance.layers()
+        );
+        assert!(
+            cc.queue.batch_queries <= k,
+            "cell batch of {} queries exceeds {k} expert nodes",
+            cc.queue.batch_queries
+        );
+        if cc.caching {
+            cc.quant.validate();
+        }
+        let jesa = JesaOptions {
+            policy: cc.policy.policy,
+            allocation: cc.policy.allocation,
+            seed: cc.solver_seed ^ 0x1E5A,
+            ..JesaOptions::default()
+        };
+        Self {
+            id: cc.id,
+            state: CellState::Warming,
+            layers,
+            energy: EnergyModel::new(sys.channel.clone(), sys.energy.clone()),
+            compute: ComputeModel::ramp(k, 1e-3),
+            policy: cc.policy,
+            quant: cc.quant,
+            jesa,
+            caching: cc.caching,
+            workers: cc.workers,
+            channel: ChannelModel::new(sys.channel.clone(), k, cc.channel_seed)
+                .with_correlation(cc.fading_rho),
+            queue: AdmissionQueue::new(cc.queue),
+            ledger: EnergyLedger::new(layers),
+            pattern: SelectionPattern::new(layers, k),
+            metrics: Metrics::new(),
+            free_at: 0.0,
+            routed: 0,
+            completions: Vec::new(),
+            rounds_log: Vec::new(),
+            fallbacks: 0,
+            tokens: 0,
+            cache_hits: 0,
+        }
+    }
+
+    pub fn id(&self) -> u32 {
+        self.id
+    }
+
+    pub fn state(&self) -> CellState {
+        self.state
+    }
+
+    /// Whether the router may send traffic here.
+    pub fn accepting(&self) -> bool {
+        matches!(self.state, CellState::Warming | CellState::Active)
+    }
+
+    /// Pending queries in the admission queue (the router's JSQ signal).
+    pub fn backlog(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Simulated time the lane is busy until.
+    pub fn busy_until(&self) -> f64 {
+        self.free_at
+    }
+
+    /// Arrivals routed to this cell (admitted or shed on capacity).
+    pub fn routed(&self) -> usize {
+        self.routed
+    }
+
+    pub fn completed(&self) -> usize {
+        self.completions.len()
+    }
+
+    /// Size trigger of the cell's batch former.
+    pub fn batch_queries(&self) -> usize {
+        self.queue.config().batch_queries
+    }
+
+    /// Current mobility-driven path-loss scale of the cell's channel.
+    pub fn channel_scale(&self) -> f64 {
+        self.channel.path_scale()
+    }
+
+    pub fn completions(&self) -> &[Completion] {
+        &self.completions
+    }
+
+    pub fn rounds_log(&self) -> &[RoundLog] {
+        &self.rounds_log
+    }
+
+    pub fn ledger(&self) -> &EnergyLedger {
+        &self.ledger
+    }
+
+    pub fn pattern(&self) -> &SelectionPattern {
+        &self.pattern
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn fallbacks(&self) -> usize {
+        self.fallbacks
+    }
+
+    /// Pre-roll `rounds` fading realizations so the AR(1) channel state
+    /// is mixed before the first user round; `Warming → Active`.
+    pub fn warm(&mut self, rounds: usize) {
+        for _ in 0..rounds {
+            let _ = self.channel.realize();
+        }
+        if self.state == CellState::Warming {
+            self.state = CellState::Active;
+        }
+    }
+
+    /// Stop accepting new arrivals; the backlog still gets served.
+    pub fn drain(&mut self) {
+        if self.state != CellState::Drained {
+            self.state = CellState::Draining;
+        }
+    }
+
+    /// Update the cell's radio regime (mobility-driven mean path loss)
+    /// for subsequent rounds.
+    pub fn set_path_scale(&mut self, scale: f64) {
+        self.channel.set_path_scale(scale);
+    }
+
+    /// Admit one routed arrival; returns `false` when the queue sheds it
+    /// on capacity.
+    pub fn push(&mut self, arrival: Arrival) -> bool {
+        self.routed += 1;
+        self.queue.push(arrival)
+    }
+
+    /// Execute every round whose start lands strictly before the next
+    /// global event at `t_s`. This mirrors the single-engine admission
+    /// rule (an arrival at exactly the would-be start time is admitted
+    /// into the forming round), so a fleet of one cell reproduces the
+    /// engine's round structure.
+    pub fn advance(&mut self, t_s: f64, cache: &SharedSolutionCache) {
+        loop {
+            let Some(trigger) = self.queue.trigger_time_s() else {
+                break;
+            };
+            let start_if_now = trigger.max(self.free_at);
+            if start_if_now >= t_s {
+                break;
+            }
+            self.execute_round_at(start_if_now, cache);
+        }
+        if self.state == CellState::Draining && self.queue.is_empty() {
+            self.state = CellState::Drained;
+        }
+    }
+
+    /// The arrival stream is over: fire the remaining (possibly partial)
+    /// batches. A partial batch forms as soon as its newest member has
+    /// arrived instead of idling out the deadline trigger — the same
+    /// drained-stream rule as the single engine.
+    pub fn flush(&mut self, cache: &SharedSolutionCache) {
+        while !self.queue.is_empty() {
+            let formed_at = if self.queue.batch_ready() {
+                self.queue.trigger_time_s().expect("queue non-empty")
+            } else {
+                self.queue.newest_arrival_s().expect("queue non-empty")
+            };
+            let start = formed_at.max(self.free_at);
+            self.execute_round_at(start, cache);
+        }
+        if self.state == CellState::Draining {
+            self.state = CellState::Drained;
+        }
+    }
+
+    fn execute_round_at(&mut self, start: f64, cache: &SharedSolutionCache) {
+        self.queue.shed_expired(start);
+        if self.queue.is_empty() {
+            return;
+        }
+        let batch = self.queue.take_batch();
+        let ctx = RoundContext {
+            energy: &self.energy,
+            compute: &self.compute,
+            policy: &self.policy,
+            quant: &self.quant,
+            jesa: &self.jesa,
+            caching: self.caching,
+            workers: self.workers,
+            origin: self.id,
+            record_timelines: false,
+        };
+        let t_round = Instant::now();
+        let (latency_s, hits, fallbacks, _) = execute_round(
+            &ctx,
+            &batch,
+            &mut self.channel,
+            cache,
+            &mut self.ledger,
+            &mut self.pattern,
+        );
+        self.metrics.observe_s("round_wall", t_round.elapsed().as_secs_f64());
+        self.metrics.inc("rounds", 1);
+        self.metrics.inc("layer_solves", self.layers as u64);
+        self.metrics.inc("cache_hits", hits as u64);
+        let round_tokens: usize = batch.iter().map(|a| a.query.tokens).sum();
+        self.tokens += (round_tokens * self.layers) as u64;
+        self.cache_hits += hits;
+        self.fallbacks += fallbacks;
+        self.free_at = start + latency_s;
+        self.rounds_log.push(RoundLog {
+            start_s: start,
+            latency_s,
+            queries: batch.len(),
+            tokens: round_tokens,
+            cache_hits: hits,
+        });
+        for a in &batch {
+            self.completions.push(Completion {
+                id: a.query.id,
+                domain: a.query.domain,
+                arrival_s: a.at_s,
+                start_s: start,
+                done_s: self.free_at,
+            });
+        }
+    }
+
+    /// Snapshot this cell's accounting.
+    pub fn report(&self) -> CellReport {
+        let latencies: Vec<f64> = self.completions.iter().map(|c| c.latency_s()).collect();
+        let (shed_queue_full, shed_deadline) = self.queue.shed_counts();
+        CellReport {
+            id: self.id as usize,
+            state: self.state.label(),
+            routed: self.routed,
+            completed: self.completions.len(),
+            shed_queue_full,
+            shed_deadline,
+            rounds: self.rounds_log.len(),
+            tokens: self.tokens,
+            cache_hits: self.cache_hits,
+            energy: self.ledger.total(),
+            latency_p50_s: stats::percentile(&latencies, 50.0),
+            latency_p99_s: stats::percentile(&latencies, 99.0),
+            path_scale: self.channel.path_scale(),
+        }
+    }
+
+    /// `(queue_full, deadline)` shed counters.
+    pub fn shed_counts(&self) -> (usize, usize) {
+        self.queue.shed_counts()
+    }
+}

@@ -1,0 +1,435 @@
+//! Gauss–Markov user mobility over a 2-D cell layout.
+//!
+//! The fleet's users are not static: they roam a planar deployment of
+//! edge cells, and their movement drives two radio effects the
+//! single-engine model cannot express:
+//!
+//! * **Temporally correlated per-cell path loss** — a cell's effective
+//!   mean path loss is the average distance attenuation of the users
+//!   currently attached to it ([`Mobility::cell_path_scale`]). Users
+//!   move smoothly (the Gauss–Markov walk below), so the scale evolves
+//!   smoothly too; together with the channel's
+//!   [correlated-realization mode](crate::channel::ChannelModel::with_correlation)
+//!   a cell's radio regime persists across rounds instead of being
+//!   redrawn i.i.d.
+//! * **Mid-session handover** — a user's best (nearest) cell changes as
+//!   they move; the fleet counts an attachment change between a user's
+//!   consecutive queries as one handover.
+//!
+//! The mobility model is the classic Gauss–Markov random walk (used
+//! throughout the edge/6G fleet literature): per-user velocity evolves
+//! as `v ← α·v + (1−α)·v̄ + σ√(1−α²)·w` with memory `α`, a per-user mean
+//! velocity `v̄`, and white Gaussian `w`, integrated on a fixed tick and
+//! reflected at the deployment bounds. `α → 1` gives near-ballistic
+//! motion, `α = 0` a white-velocity walk.
+
+use crate::util::rng::Xoshiro256pp;
+
+/// Fixed 2-D positions of the fleet's cells (edge sites).
+#[derive(Debug, Clone)]
+pub struct CellLayout {
+    positions: Vec<(f64, f64)>,
+    spacing_m: f64,
+}
+
+impl CellLayout {
+    /// Square-ish grid: cells on a `spacing_m`-pitch lattice, row-major.
+    pub fn grid(cells: usize, spacing_m: f64) -> Self {
+        assert!(cells >= 1, "a layout needs at least one cell");
+        assert!(
+            spacing_m > 0.0 && spacing_m.is_finite(),
+            "cell spacing must be positive and finite, got {spacing_m}"
+        );
+        let cols = (cells as f64).sqrt().ceil() as usize;
+        let positions = (0..cells)
+            .map(|c| {
+                (
+                    (c % cols) as f64 * spacing_m,
+                    (c / cols) as f64 * spacing_m,
+                )
+            })
+            .collect();
+        Self {
+            positions,
+            spacing_m,
+        }
+    }
+
+    pub fn cells(&self) -> usize {
+        self.positions.len()
+    }
+
+    pub fn position(&self, cell: usize) -> (f64, f64) {
+        self.positions[cell]
+    }
+
+    pub fn spacing_m(&self) -> f64 {
+        self.spacing_m
+    }
+
+    /// Distance from a point to a cell site.
+    pub fn distance_m(&self, cell: usize, point: (f64, f64)) -> f64 {
+        let (cx, cy) = self.positions[cell];
+        let (dx, dy) = (point.0 - cx, point.1 - cy);
+        (dx * dx + dy * dy).sqrt()
+    }
+
+    /// The box users roam in: the grid extent padded by half a pitch on
+    /// every side (so a single-cell layout still has a full cell's area).
+    pub fn bounds(&self) -> (f64, f64, f64, f64) {
+        let pad = self.spacing_m * 0.5;
+        let (mut x0, mut y0) = (f64::INFINITY, f64::INFINITY);
+        let (mut x1, mut y1) = (f64::NEG_INFINITY, f64::NEG_INFINITY);
+        for &(x, y) in &self.positions {
+            x0 = x0.min(x);
+            y0 = y0.min(y);
+            x1 = x1.max(x);
+            y1 = y1.max(y);
+        }
+        (x0 - pad, y0 - pad, x1 + pad, y1 + pad)
+    }
+}
+
+/// Mobility and distance-attenuation parameters.
+#[derive(Debug, Clone)]
+pub struct MobilityConfig {
+    /// Concurrent users roaming the deployment.
+    pub users: usize,
+    /// Gauss–Markov memory `α ∈ [0, 1)`.
+    pub alpha: f64,
+    /// Magnitude of each user's mean velocity (m/s).
+    pub mean_speed_mps: f64,
+    /// Velocity innovation scale `σ` (m/s).
+    pub speed_sigma_mps: f64,
+    /// Integration step of the walk (simulated seconds).
+    pub tick_s: f64,
+    /// Distance-attenuation exponent `η`: the user→cell path-loss scale
+    /// is `att(d) = 1 / (1 + (d/d0)^η) ∈ (0, 1]`.
+    pub path_exponent: f64,
+    /// Reference distance `d0` in meters.
+    pub reference_m: f64,
+    pub seed: u64,
+}
+
+impl Default for MobilityConfig {
+    fn default() -> Self {
+        Self {
+            users: 48,
+            alpha: 0.85,
+            mean_speed_mps: 1.5,
+            speed_sigma_mps: 0.5,
+            tick_s: 1.0,
+            path_exponent: 2.0,
+            reference_m: 100.0,
+            seed: 0x40B1_1E,
+        }
+    }
+}
+
+impl MobilityConfig {
+    fn validate(&self) {
+        assert!(self.users >= 1, "need at least one user");
+        assert!(
+            (0.0..1.0).contains(&self.alpha),
+            "Gauss–Markov alpha must be in [0, 1), got {}",
+            self.alpha
+        );
+        assert!(self.mean_speed_mps >= 0.0 && self.speed_sigma_mps >= 0.0);
+        assert!(self.tick_s > 0.0, "mobility tick must be positive");
+        assert!(self.path_exponent > 0.0 && self.reference_m > 0.0);
+    }
+}
+
+/// The fleet's user population: positions, velocities and the derived
+/// attachment / attenuation queries. Fully deterministic given the seed
+/// and the (monotone) sequence of `advance_to` times.
+#[derive(Debug, Clone)]
+pub struct Mobility {
+    cfg: MobilityConfig,
+    bounds: (f64, f64, f64, f64),
+    pos: Vec<(f64, f64)>,
+    vel: Vec<(f64, f64)>,
+    mean_vel: Vec<(f64, f64)>,
+    rng: Xoshiro256pp,
+    ticks: u64,
+}
+
+impl Mobility {
+    pub fn new(cfg: MobilityConfig, layout: &CellLayout) -> Self {
+        cfg.validate();
+        let bounds = layout.bounds();
+        let (x0, y0, x1, y1) = bounds;
+        let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed ^ 0x6A55_3A2B_0B11_E7E5);
+        let mut pos = Vec::with_capacity(cfg.users);
+        let mut vel = Vec::with_capacity(cfg.users);
+        let mut mean_vel = Vec::with_capacity(cfg.users);
+        for _ in 0..cfg.users {
+            pos.push((rng.range_f64(x0, x1), rng.range_f64(y0, y1)));
+            let heading = rng.range_f64(0.0, 2.0 * std::f64::consts::PI);
+            let mv = (
+                cfg.mean_speed_mps * heading.cos(),
+                cfg.mean_speed_mps * heading.sin(),
+            );
+            mean_vel.push(mv);
+            vel.push(mv);
+        }
+        Self {
+            cfg,
+            bounds,
+            pos,
+            vel,
+            mean_vel,
+            rng,
+            ticks: 0,
+        }
+    }
+
+    pub fn users(&self) -> usize {
+        self.pos.len()
+    }
+
+    pub fn config(&self) -> &MobilityConfig {
+        &self.cfg
+    }
+
+    /// Simulated time the walk has been advanced to.
+    pub fn now_s(&self) -> f64 {
+        self.ticks as f64 * self.cfg.tick_s
+    }
+
+    pub fn position(&self, user: usize) -> (f64, f64) {
+        self.pos[user]
+    }
+
+    /// Advance the walk through every whole tick up to `t_s` (monotone:
+    /// earlier times are a no-op).
+    pub fn advance_to(&mut self, t_s: f64) {
+        while (self.ticks + 1) as f64 * self.cfg.tick_s <= t_s {
+            self.step();
+        }
+    }
+
+    fn step(&mut self) {
+        let a = self.cfg.alpha;
+        let innovation = self.cfg.speed_sigma_mps * (1.0 - a * a).sqrt();
+        let dt = self.cfg.tick_s;
+        let (x0, y0, x1, y1) = self.bounds;
+        for u in 0..self.pos.len() {
+            let (mvx, mvy) = self.mean_vel[u];
+            let (vx0, vy0) = self.vel[u];
+            let mut vx = a * vx0 + (1.0 - a) * mvx + innovation * self.rng.normal();
+            let mut vy = a * vy0 + (1.0 - a) * mvy + innovation * self.rng.normal();
+            let (mut x, mut y) = self.pos[u];
+            x += vx * dt;
+            y += vy * dt;
+            // Reflect at the deployment bounds (flipping the mean heading
+            // too, so users do not pile up against a wall).
+            if x < x0 {
+                x = x0 + (x0 - x);
+                vx = -vx;
+                self.mean_vel[u].0 = -self.mean_vel[u].0;
+            } else if x > x1 {
+                x = x1 - (x - x1);
+                vx = -vx;
+                self.mean_vel[u].0 = -self.mean_vel[u].0;
+            }
+            if y < y0 {
+                y = y0 + (y0 - y);
+                vy = -vy;
+                self.mean_vel[u].1 = -self.mean_vel[u].1;
+            } else if y > y1 {
+                y = y1 - (y - y1);
+                vy = -vy;
+                self.mean_vel[u].1 = -self.mean_vel[u].1;
+            }
+            self.pos[u] = (x.clamp(x0, x1), y.clamp(y0, y1));
+            self.vel[u] = (vx, vy);
+        }
+        self.ticks += 1;
+    }
+
+    /// Distance attenuation of user→cell: `1 / (1 + (d/d0)^η) ∈ (0, 1]`.
+    pub fn attenuation(&self, layout: &CellLayout, user: usize, cell: usize) -> f64 {
+        let d = layout.distance_m(cell, self.pos[user]);
+        1.0 / (1.0 + (d / self.cfg.reference_m).powf(self.cfg.path_exponent))
+    }
+
+    /// The cell a user currently attaches to (nearest site; ties go to
+    /// the lower index).
+    pub fn nearest_cell(&self, layout: &CellLayout, user: usize) -> usize {
+        let mut best = 0usize;
+        let mut best_d = f64::INFINITY;
+        for c in 0..layout.cells() {
+            let d = layout.distance_m(c, self.pos[user]);
+            if d < best_d {
+                best_d = d;
+                best = c;
+            }
+        }
+        best
+    }
+
+    /// Mobility-driven mean path-loss scale of one cell: the average
+    /// attenuation of its currently attached users, or the edge-of-cell
+    /// attenuation when nobody is attached (an empty cell still has a
+    /// radio regime). Always in `(0, 1]`, so it can be fed straight into
+    /// [`crate::channel::ChannelModel::set_path_scale`].
+    pub fn cell_path_scale(&self, layout: &CellLayout, cell: usize) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for u in 0..self.pos.len() {
+            if self.nearest_cell(layout, u) == cell {
+                sum += self.attenuation(layout, u, cell);
+                n += 1;
+            }
+        }
+        if n == 0 {
+            let edge = layout.spacing_m() * 0.5;
+            1.0 / (1.0 + (edge / self.cfg.reference_m).powf(self.cfg.path_exponent))
+        } else {
+            sum / n as f64
+        }
+    }
+
+    /// [`Mobility::cell_path_scale`] for every cell in one O(users ×
+    /// cells) pass (each user's attachment is found once) — the event
+    /// loop refreshes all cells per mobility tick, so the single-cell
+    /// query would redo the attachment scan per cell.
+    pub fn cell_path_scales(&self, layout: &CellLayout) -> Vec<f64> {
+        let cells = layout.cells();
+        let mut sums = vec![0.0f64; cells];
+        let mut counts = vec![0usize; cells];
+        for u in 0..self.pos.len() {
+            let c = self.nearest_cell(layout, u);
+            sums[c] += self.attenuation(layout, u, c);
+            counts[c] += 1;
+        }
+        let edge = layout.spacing_m() * 0.5;
+        let empty = 1.0 / (1.0 + (edge / self.cfg.reference_m).powf(self.cfg.path_exponent));
+        (0..cells)
+            .map(|c| {
+                if counts[c] == 0 {
+                    empty
+                } else {
+                    sums[c] / counts[c] as f64
+                }
+            })
+            .collect()
+    }
+
+    /// Mean attachment attenuation over the whole population — the
+    /// calibration factor callers use to derate a cell's nominal round
+    /// capacity (fleet cells run at scaled path loss, so rounds are
+    /// slower than the unscaled single-engine estimate).
+    pub fn mean_attachment_attenuation(&self, layout: &CellLayout) -> f64 {
+        let sum: f64 = (0..self.pos.len())
+            .map(|u| self.attenuation(layout, u, self.nearest_cell(layout, u)))
+            .sum();
+        sum / self.pos.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout4() -> CellLayout {
+        CellLayout::grid(4, 200.0)
+    }
+
+    #[test]
+    fn grid_layout_positions_and_bounds() {
+        let l = layout4();
+        assert_eq!(l.cells(), 4);
+        assert_eq!(l.position(0), (0.0, 0.0));
+        assert_eq!(l.position(1), (200.0, 0.0));
+        assert_eq!(l.position(2), (0.0, 200.0));
+        assert_eq!(l.position(3), (200.0, 200.0));
+        assert_eq!(l.bounds(), (-100.0, -100.0, 300.0, 300.0));
+        // Degenerate single-cell layout still has positive area.
+        let (x0, y0, x1, y1) = CellLayout::grid(1, 200.0).bounds();
+        assert!(x1 > x0 && y1 > y0);
+    }
+
+    #[test]
+    fn mobility_is_deterministic_and_bounded() {
+        let l = layout4();
+        let mut a = Mobility::new(MobilityConfig::default(), &l);
+        let mut b = Mobility::new(MobilityConfig::default(), &l);
+        let (x0, y0, x1, y1) = l.bounds();
+        for step in 1..300u64 {
+            let t = step as f64 * 1.0;
+            a.advance_to(t);
+            b.advance_to(t);
+            for u in 0..a.users() {
+                assert_eq!(a.position(u), b.position(u), "user {u} diverged at {t}");
+                let (x, y) = a.position(u);
+                assert!((x0..=x1).contains(&x) && (y0..=y1).contains(&y));
+            }
+        }
+    }
+
+    #[test]
+    fn advance_is_monotone_in_ticks() {
+        let l = layout4();
+        let mut m = Mobility::new(MobilityConfig::default(), &l);
+        m.advance_to(10.6);
+        assert_eq!(m.now_s(), 10.0);
+        // Going "back" in time is a no-op.
+        m.advance_to(3.0);
+        assert_eq!(m.now_s(), 10.0);
+        m.advance_to(11.0);
+        assert_eq!(m.now_s(), 11.0);
+    }
+
+    #[test]
+    fn attenuation_decreases_with_distance() {
+        let l = layout4();
+        let m = Mobility::new(MobilityConfig::default(), &l);
+        // Whatever a user's position, the attenuation ordering across
+        // cells matches the (inverse) distance ordering.
+        for u in 0..m.users() {
+            let near = m.nearest_cell(&l, u);
+            let a_near = m.attenuation(&l, u, near);
+            for c in 0..l.cells() {
+                let a_c = m.attenuation(&l, u, c);
+                assert!(a_c > 0.0 && a_c <= 1.0);
+                assert!(a_near >= a_c - 1e-12, "nearest cell must attenuate least");
+            }
+        }
+    }
+
+    #[test]
+    fn moving_users_change_attachment() {
+        let l = layout4();
+        let cfg = MobilityConfig {
+            mean_speed_mps: 12.0,
+            ..MobilityConfig::default()
+        };
+        let mut m = Mobility::new(cfg, &l);
+        let before: Vec<usize> = (0..m.users()).map(|u| m.nearest_cell(&l, u)).collect();
+        m.advance_to(120.0);
+        let changed = (0..m.users())
+            .filter(|&u| m.nearest_cell(&l, u) != before[u])
+            .count();
+        assert!(
+            changed > 0,
+            "fast users crossing a 4-cell grid must hand over at least once"
+        );
+    }
+
+    #[test]
+    fn cell_path_scale_in_unit_interval() {
+        let l = layout4();
+        let mut m = Mobility::new(MobilityConfig::default(), &l);
+        for step in 0..50u64 {
+            m.advance_to(step as f64 * 2.0);
+            for c in 0..l.cells() {
+                let s = m.cell_path_scale(&l, c);
+                assert!(s > 0.0 && s <= 1.0, "scale {s} out of range");
+            }
+        }
+        let mean = m.mean_attachment_attenuation(&l);
+        assert!(mean > 0.0 && mean <= 1.0);
+    }
+}

@@ -1,0 +1,349 @@
+//! `fleet` — multi-cell sharded serving behind a user router.
+//!
+//! The [`serve`](crate::serve) engine is one lane: one admission queue,
+//! one channel, one round executor. This subsystem scales that lane out
+//! to N independent cells — each with its own [`ChannelModel`] in the
+//! [correlated-realization mode](crate::channel::ChannelModel::with_correlation),
+//! expert population and admission queue — behind a user-facing router,
+//! with one shared, thread-safe JESA/DES solution cache:
+//!
+//! ```text
+//!            ┌► cell 0: queue ─► cached JESA rounds ┐
+//! traffic ─► router (rr / jsq / channel-aware)      ├─► fleet report
+//!  (users)   └► cell N: queue ─► cached JESA rounds ┘
+//!               ▲ Gauss–Markov mobility: per-cell path loss + handover
+//!               ▲ one Arc'd SolutionCache (cross-cell hits)
+//! ```
+//!
+//! * [`handover`] — Gauss–Markov user mobility over a 2-D cell layout,
+//!   driving temporally correlated per-cell path loss and mid-session
+//!   cell handover.
+//! * [`cell`] — the lane wrapper: per-cell load/latency/energy
+//!   accounting and the warm/drain lifecycle.
+//! * [`router`] — dispatch policies: round-robin, join-shortest-queue,
+//!   and channel-aware (route to the cell with the best expected JESA
+//!   energy for the query's gate profile).
+//! * [`report`] — per-cell and fleet-level aggregation: throughput,
+//!   p50/p99 latency, shed and handover rates, load-imbalance indices.
+//!
+//! [`FleetEngine::run`] drives one discrete-event simulation over a
+//! global arrival stream: every arrival advances mobility and all cells
+//! to its timestamp (so routing signals are exact), the router picks a
+//! cell, and the cell executes rounds exactly like the single engine —
+//! per-layer solves dispatched across the in-tree thread pool, solutions
+//! memoized in the shared cache. All cells use the fleet's solver seed
+//! and quantizer grids, so a canonical round solved in one cell hits
+//! from every other cell ([`CacheStats::cross_hits`]).
+//!
+//! [`ChannelModel`]: crate::channel::ChannelModel
+//! [`CacheStats::cross_hits`]: crate::serve::CacheStats
+
+pub mod cell;
+pub mod handover;
+pub mod report;
+pub mod router;
+
+pub use cell::{Cell, CellConfig, CellState};
+pub use handover::{CellLayout, Mobility, MobilityConfig};
+pub use report::{CellReport, FleetReport};
+pub use router::{RoutePolicy, Router};
+
+use crate::coordinator::ServePolicy;
+use crate::energy::{EnergyBreakdown, EnergyModel};
+use crate::metrics::{Metrics, SelectionPattern};
+use crate::serve::engine::Completion;
+use crate::serve::{
+    derive_quantizer, estimate_round_latency_s, EvictionPolicy, QuantizerConfig, QueueConfig,
+    SharedSolutionCache, TrafficConfig, TrafficGenerator,
+};
+use crate::util::pool::default_workers;
+use crate::util::rng::SplitMix64;
+use crate::SystemConfig;
+use std::time::Instant;
+
+/// Fleet configuration beyond the per-cell system config.
+#[derive(Debug, Clone)]
+pub struct FleetOptions {
+    /// Number of cells (lanes).
+    pub cells: usize,
+    pub route: RoutePolicy,
+    /// Serving policy, identical across cells (part of the cache key).
+    pub policy: ServePolicy,
+    /// Per-cell admission-queue configuration.
+    pub queue: QueueConfig,
+    /// Shared solution-cache capacity; 0 disables caching fleet-wide.
+    pub cache_capacity: usize,
+    /// Eviction policy of the shared cache. Defaults to cost-aware so
+    /// expensive branch-and-bound solves survive multi-cell pressure.
+    pub cache_policy: EvictionPolicy,
+    pub quant: QuantizerConfig,
+    /// Derive the quantizer grids from observed channel/gate variance at
+    /// run start (one derivation, shared by every cell so cache keys
+    /// stay aligned).
+    pub adapt_quant: bool,
+    /// Worker threads for each round's per-layer solves.
+    pub workers: usize,
+    /// Fleet seed: the shared JESA/BCD solver seed, and the base of the
+    /// per-cell channel seeds.
+    pub seed: u64,
+    pub mobility: MobilityConfig,
+    /// Cell-grid pitch in meters.
+    pub spacing_m: f64,
+    /// AR(1) fading memory of each cell's correlated channel.
+    pub fading_rho: f64,
+    /// Channel realizations each cell pre-rolls before serving.
+    pub warmup_rounds: usize,
+    /// Scheduled drains: `(cell, at_s)` — the cell stops accepting new
+    /// arrivals at `at_s` (its backlog still gets served).
+    pub drain_at: Vec<(usize, f64)>,
+}
+
+impl FleetOptions {
+    pub fn new(cells: usize, route: RoutePolicy, policy: ServePolicy, queue: QueueConfig) -> Self {
+        Self {
+            cells,
+            route,
+            policy,
+            queue,
+            cache_capacity: 4096,
+            cache_policy: EvictionPolicy::CostAware,
+            quant: QuantizerConfig::default(),
+            adapt_quant: false,
+            workers: default_workers(),
+            seed: 0xF1EE7,
+            mobility: MobilityConfig::default(),
+            spacing_m: 200.0,
+            fading_rho: 0.9,
+            warmup_rounds: 2,
+            drain_at: Vec::new(),
+        }
+    }
+}
+
+/// The multi-cell serving engine.
+pub struct FleetEngine {
+    cfg: SystemConfig,
+    opts: FleetOptions,
+}
+
+impl FleetEngine {
+    pub fn new(cfg: &SystemConfig, opts: FleetOptions) -> Self {
+        assert!(opts.cells >= 1, "a fleet needs at least one cell");
+        assert!(
+            opts.policy.importance.layers() == cfg.moe.layers,
+            "policy importance covers {} layers, system has {}",
+            opts.policy.importance.layers(),
+            cfg.moe.layers
+        );
+        assert!(
+            opts.queue.batch_queries <= cfg.moe.experts,
+            "batch of {} queries exceeds {} expert nodes",
+            opts.queue.batch_queries,
+            cfg.moe.experts
+        );
+        for &(cell, at_s) in &opts.drain_at {
+            assert!(cell < opts.cells, "drain target {cell} out of range");
+            assert!(at_s >= 0.0, "drain time must be non-negative");
+        }
+        if opts.cache_capacity > 0 {
+            opts.quant.validate();
+        }
+        Self {
+            cfg: cfg.clone(),
+            opts,
+        }
+    }
+
+    pub fn options(&self) -> &FleetOptions {
+        &self.opts
+    }
+
+    /// Run one fleet simulation over a global traffic stream.
+    pub fn run(&self, traffic: &TrafficConfig) -> FleetReport {
+        let t0 = Instant::now();
+        let k = self.cfg.moe.experts;
+        let layers = self.cfg.moe.layers;
+        let generator = TrafficGenerator::new(traffic.clone(), k, layers);
+        let arrivals = generator.generate();
+        let generated = arrivals.len();
+
+        let caching = self.opts.cache_capacity > 0;
+        let quant = if self.opts.adapt_quant && caching {
+            derive_quantizer(&self.cfg, traffic, 8, self.opts.seed)
+        } else {
+            self.opts.quant.clone()
+        };
+
+        let layout = CellLayout::grid(self.opts.cells, self.opts.spacing_m);
+        let mut mobility = Mobility::new(
+            MobilityConfig {
+                seed: self.opts.mobility.seed ^ self.opts.seed,
+                ..self.opts.mobility.clone()
+            },
+            &layout,
+        );
+        let cache =
+            SharedSolutionCache::with_policy(self.opts.cache_capacity, self.opts.cache_policy);
+        let energy = EnergyModel::new(self.cfg.channel.clone(), self.cfg.energy.clone());
+        let mut cells: Vec<Cell> = (0..self.opts.cells)
+            .map(|c| {
+                let mut cell = Cell::new(
+                    &self.cfg,
+                    CellConfig {
+                        id: c as u32,
+                        policy: self.opts.policy.clone(),
+                        queue: self.opts.queue.clone(),
+                        quant: quant.clone(),
+                        caching,
+                        workers: self.opts.workers,
+                        solver_seed: self.opts.seed,
+                        channel_seed: self
+                            .opts
+                            .seed
+                            .wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(c as u64 + 1)),
+                        fading_rho: self.opts.fading_rho,
+                    },
+                );
+                cell.warm(self.opts.warmup_rounds);
+                cell
+            })
+            .collect();
+        let mut router = Router::new(self.opts.route);
+
+        let mut drains = self.opts.drain_at.clone();
+        drains.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("finite drain times"));
+        let mut next_drain = 0usize;
+
+        let users = mobility.users();
+        let mut last_attach: Vec<Option<usize>> = vec![None; users];
+        let mut handovers = 0usize;
+        let mut continued_sessions = 0usize;
+
+        // Per-cell radio scales are a function of user positions, which
+        // only change on whole mobility ticks — recompute them per tick,
+        // not per arrival.
+        let mut scales = mobility.cell_path_scales(&layout);
+        let mut scales_at_s = mobility.now_s();
+        for arrival in arrivals {
+            let t = arrival.at_s;
+            while next_drain < drains.len() && drains[next_drain].1 <= t {
+                cells[drains[next_drain].0].drain();
+                next_drain += 1;
+            }
+            // Advance the world to this arrival: mobility first, then
+            // every cell's radio regime and due rounds — so the router
+            // sees exact backlogs and current channel scales.
+            mobility.advance_to(t);
+            if mobility.now_s() != scales_at_s {
+                scales = mobility.cell_path_scales(&layout);
+                scales_at_s = mobility.now_s();
+            }
+            for (c, cell) in cells.iter_mut().enumerate() {
+                cell.set_path_scale(scales[c]);
+                cell.advance(t, &cache);
+            }
+            let user = user_of(arrival.query.id, users, self.opts.seed);
+            let target = router.route(
+                &arrival,
+                user,
+                &cells,
+                &mobility,
+                &layout,
+                &energy,
+                &self.opts.policy,
+            );
+            let attach = mobility.nearest_cell(&layout, user);
+            if let Some(prev) = last_attach[user] {
+                continued_sessions += 1;
+                if prev != attach {
+                    handovers += 1;
+                }
+            }
+            last_attach[user] = Some(attach);
+            cells[target].push(arrival);
+        }
+        // Stream over: apply any drains still scheduled (the report
+        // should reflect the operator's intent even when the drain time
+        // falls past the last arrival), then fire the remaining
+        // (partial) batches everywhere.
+        while next_drain < drains.len() {
+            cells[drains[next_drain].0].drain();
+            next_drain += 1;
+        }
+        for (c, cell) in cells.iter_mut().enumerate() {
+            cell.set_path_scale(scales[c]);
+            cell.flush(&cache);
+        }
+
+        // Aggregate.
+        let mut completions: Vec<Completion> = Vec::new();
+        let mut pattern = SelectionPattern::new(layers, k);
+        let mut metrics = Metrics::new();
+        let mut energy_total = EnergyBreakdown::default();
+        let (mut shed_full, mut shed_deadline) = (0usize, 0usize);
+        let mut rounds = 0usize;
+        let mut tokens = 0u64;
+        let mut fallbacks = 0usize;
+        let cell_reports: Vec<CellReport> = cells.iter().map(|c| c.report()).collect();
+        for (cell, cr) in cells.iter().zip(cell_reports.iter()) {
+            completions.extend_from_slice(cell.completions());
+            pattern.merge(cell.pattern());
+            metrics.merge(cell.metrics());
+            energy_total += cr.energy;
+            shed_full += cr.shed_queue_full;
+            shed_deadline += cr.shed_deadline;
+            rounds += cr.rounds;
+            tokens += cr.tokens;
+            fallbacks += cell.fallbacks();
+        }
+        let sim_end_s = completions.iter().map(|c| c.done_s).fold(0.0, f64::max);
+        metrics.inc("handovers", handovers as u64);
+
+        FleetReport {
+            route: self.opts.route.label().to_string(),
+            process: traffic.process.label().to_string(),
+            generated,
+            completed: completions.len(),
+            shed_queue_full: shed_full,
+            shed_deadline,
+            rounds,
+            tokens,
+            handovers,
+            continued_sessions,
+            sim_end_s,
+            wall_s: t0.elapsed().as_secs_f64(),
+            energy: energy_total,
+            cache: cache.stats(),
+            fallbacks,
+            cells: cell_reports,
+            completions,
+            pattern,
+            metrics,
+        }
+    }
+}
+
+/// Stable query→user assignment (one SplitMix64 step), so a user's
+/// queries form a session spread over the stream.
+fn user_of(query_id: u64, users: usize, seed: u64) -> usize {
+    let hash = SplitMix64::new(query_id ^ seed.rotate_left(17)).next_u64();
+    (hash % users as u64) as usize
+}
+
+/// Derated single-cell round-latency estimate for fleet capacity
+/// planning: fleet cells run at mobility-scaled path loss, so their
+/// rounds are slower than the unscaled single-engine probe. `scale` is
+/// the typical attenuation (e.g.
+/// [`Mobility::mean_attachment_attenuation`]).
+pub fn estimate_cell_round_latency_s(
+    cfg: &SystemConfig,
+    policy: &ServePolicy,
+    traffic: &TrafficConfig,
+    rounds: usize,
+    scale: f64,
+) -> f64 {
+    assert!(scale > 0.0 && scale.is_finite());
+    let mut derated = cfg.clone();
+    derated.channel.path_loss *= scale;
+    estimate_round_latency_s(&derated, policy, traffic, rounds)
+}

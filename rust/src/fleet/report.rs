@@ -1,0 +1,240 @@
+//! Fleet-level aggregation: per-cell snapshots plus the fleet totals,
+//! tail latencies, shed/handover rates and load-imbalance indices.
+
+use crate::energy::EnergyBreakdown;
+use crate::metrics::{Metrics, SelectionPattern};
+use crate::serve::engine::Completion;
+use crate::serve::CacheStats;
+use crate::util::stats;
+
+/// One cell's accounting snapshot.
+#[derive(Debug, Clone)]
+pub struct CellReport {
+    pub id: usize,
+    pub state: &'static str,
+    /// Arrivals the router sent here (admitted or shed on capacity).
+    pub routed: usize,
+    pub completed: usize,
+    pub shed_queue_full: usize,
+    pub shed_deadline: usize,
+    pub rounds: usize,
+    pub tokens: u64,
+    pub cache_hits: usize,
+    pub energy: EnergyBreakdown,
+    pub latency_p50_s: f64,
+    pub latency_p99_s: f64,
+    /// Mobility-driven path-loss scale at the end of the run.
+    pub path_scale: f64,
+}
+
+impl CellReport {
+    pub fn shed(&self) -> usize {
+        self.shed_queue_full + self.shed_deadline
+    }
+}
+
+/// Everything one fleet run reports.
+pub struct FleetReport {
+    pub route: String,
+    pub process: String,
+    pub generated: usize,
+    pub completed: usize,
+    pub shed_queue_full: usize,
+    pub shed_deadline: usize,
+    pub rounds: usize,
+    pub tokens: u64,
+    /// Attachment changes between a user's consecutive queries.
+    pub handovers: usize,
+    /// Queries whose user had served before (the handover denominator).
+    pub continued_sessions: usize,
+    /// Simulated time of the last completion.
+    pub sim_end_s: f64,
+    /// Wall-clock fleet runtime.
+    pub wall_s: f64,
+    pub energy: EnergyBreakdown,
+    /// Shared solution-cache counters (fleet-wide; includes
+    /// [`CacheStats::cross_hits`]).
+    pub cache: CacheStats,
+    pub fallbacks: usize,
+    pub cells: Vec<CellReport>,
+    /// All cells' completions (unordered across cells).
+    pub completions: Vec<Completion>,
+    pub pattern: SelectionPattern,
+    pub metrics: Metrics,
+}
+
+impl FleetReport {
+    pub fn shed(&self) -> usize {
+        self.shed_queue_full + self.shed_deadline
+    }
+
+    pub fn shed_rate(&self) -> f64 {
+        if self.generated == 0 {
+            0.0
+        } else {
+            self.shed() as f64 / self.generated as f64
+        }
+    }
+
+    /// Completed queries per simulated second, fleet-wide.
+    pub fn throughput_qps(&self) -> f64 {
+        if self.sim_end_s <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / self.sim_end_s
+        }
+    }
+
+    /// Completed queries per wall-clock second (engine speed).
+    pub fn wall_throughput_qps(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / self.wall_s
+        }
+    }
+
+    fn latencies(&self) -> Vec<f64> {
+        self.completions.iter().map(|c| c.latency_s()).collect()
+    }
+
+    pub fn latency_mean_s(&self) -> f64 {
+        stats::mean(&self.latencies())
+    }
+
+    pub fn latency_p50_s(&self) -> f64 {
+        stats::percentile(&self.latencies(), 50.0)
+    }
+
+    pub fn latency_p99_s(&self) -> f64 {
+        stats::percentile(&self.latencies(), 99.0)
+    }
+
+    /// Fraction of continued sessions whose user changed attachment
+    /// since their previous query.
+    pub fn handover_rate(&self) -> f64 {
+        if self.continued_sessions == 0 {
+            0.0
+        } else {
+            self.handovers as f64 / self.continued_sessions as f64
+        }
+    }
+
+    /// Energy per completed query (J).
+    pub fn energy_per_query_j(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.energy.total_j() / self.completed as f64
+        }
+    }
+
+    fn per_cell_completed(&self) -> Vec<f64> {
+        self.cells.iter().map(|c| c.completed as f64).collect()
+    }
+
+    /// Peak-to-mean load-imbalance index over per-cell completions
+    /// (1.0 = perfectly balanced).
+    pub fn imbalance(&self) -> f64 {
+        let xs = self.per_cell_completed();
+        let mean = stats::mean(&xs);
+        if mean <= 0.0 {
+            1.0
+        } else {
+            stats::max(&xs) / mean
+        }
+    }
+
+    /// Jain fairness index over per-cell completions
+    /// (`(Σx)² / (n·Σx²)`; 1.0 = perfectly balanced, `1/n` = one hot
+    /// cell).
+    pub fn jain_index(&self) -> f64 {
+        let xs = self.per_cell_completed();
+        let sum: f64 = xs.iter().sum();
+        let sq: f64 = xs.iter().map(|x| x * x).sum();
+        if sq <= 0.0 {
+            1.0
+        } else {
+            sum * sum / (xs.len() as f64 * sq)
+        }
+    }
+
+    /// Human-readable summary (the `dmoe fleet` output).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "fleet[{} cells, route {}, {}]: {} generated, {} completed, {} shed \
+             ({:.2}% = {} queue-full + {} deadline)\n",
+            self.cells.len(),
+            self.route,
+            self.process,
+            self.generated,
+            self.completed,
+            self.shed(),
+            self.shed_rate() * 100.0,
+            self.shed_queue_full,
+            self.shed_deadline,
+        ));
+        out.push_str(&format!(
+            "rounds {} ({} tokens), sim time {:.2} s, wall {:.2} s ({:.0} q/s engine speed)\n",
+            self.rounds,
+            self.tokens,
+            self.sim_end_s,
+            self.wall_s,
+            self.wall_throughput_qps(),
+        ));
+        out.push_str(&format!(
+            "throughput {:.2} q/s (simulated)  latency p50 {:.3} s  p99 {:.3} s  mean {:.3} s\n",
+            self.throughput_qps(),
+            self.latency_p50_s(),
+            self.latency_p99_s(),
+            self.latency_mean_s(),
+        ));
+        out.push_str(&format!(
+            "handover rate {:.1}% ({}/{} continued sessions)  imbalance peak/mean {:.2}  \
+             jain {:.3}\n",
+            self.handover_rate() * 100.0,
+            self.handovers,
+            self.continued_sessions,
+            self.imbalance(),
+            self.jain_index(),
+        ));
+        out.push_str(&format!(
+            "shared cache: {}/{} hits ({:.1}%), {} cross-cell ({:.1}% of hits), {} entries, \
+             {} evictions\n",
+            self.cache.hits,
+            self.cache.lookups(),
+            self.cache.hit_rate() * 100.0,
+            self.cache.cross_hits,
+            self.cache.cross_hit_rate() * 100.0,
+            self.cache.entries,
+            self.cache.evictions,
+        ));
+        out.push_str(&format!(
+            "energy {:.4} J (comm {:.4} + comp {:.4}), {:.5} J/query, fallbacks {}\n",
+            self.energy.total_j(),
+            self.energy.comm_j,
+            self.energy.comp_j,
+            self.energy_per_query_j(),
+            self.fallbacks,
+        ));
+        out.push_str("cell  state     routed  done    shed  rounds  hits   p50 s   p99 s  energy J  scale\n");
+        for c in &self.cells {
+            out.push_str(&format!(
+                "{:>4}  {:<8} {:>7} {:>6} {:>6} {:>7} {:>5} {:>7.3} {:>7.3} {:>9.4} {:>6.2}\n",
+                c.id,
+                c.state,
+                c.routed,
+                c.completed,
+                c.shed(),
+                c.rounds,
+                c.cache_hits,
+                c.latency_p50_s,
+                c.latency_p99_s,
+                c.energy.total_j(),
+                c.path_scale,
+            ));
+        }
+        out
+    }
+}

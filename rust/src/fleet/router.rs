@@ -1,0 +1,194 @@
+//! The fleet's user-facing router: one dispatch decision per arrival.
+//!
+//! Three policies, in increasing awareness:
+//!
+//! * [`RoutePolicy::RoundRobin`] — cycle over accepting cells; the
+//!   baseline every balanced-load comparison starts from.
+//! * [`RoutePolicy::JoinShortestQueue`] — classic JSQ on the cells'
+//!   admission-queue backlogs (ties broken by earliest-free lane, then
+//!   index). The router reads the *actual* queue lengths: the fleet's
+//!   event loop advances every cell to the arrival's timestamp before
+//!   routing, so the signal is exact, not stale.
+//! * [`RoutePolicy::ChannelAware`] — route to the cell with the best
+//!   *expected JESA energy* for this query's gate profile: a per-cell
+//!   proxy of the round energy (comm term from the cell's mobility-driven
+//!   radio quality and the user's attenuation to the site, comp term from
+//!   the expected expert fan-out the gate profile needs to clear QoS),
+//!   inflated by a backlog factor so good radio does not collapse into a
+//!   hotspot. Mirrors the channel-aware gating line of work (Song et al.,
+//!   arXiv:2504.00819) at the fleet level.
+
+use super::cell::Cell;
+use super::handover::{CellLayout, Mobility};
+use crate::coordinator::ServePolicy;
+use crate::energy::EnergyModel;
+use crate::serve::Arrival;
+
+/// Dispatch policy of the fleet router.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    JoinShortestQueue,
+    ChannelAware,
+}
+
+impl RoutePolicy {
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "rr" | "round-robin" | "roundrobin" => Some(RoutePolicy::RoundRobin),
+            "jsq" | "shortest-queue" => Some(RoutePolicy::JoinShortestQueue),
+            "channel" | "channel-aware" | "energy" => Some(RoutePolicy::ChannelAware),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::JoinShortestQueue => "jsq",
+            RoutePolicy::ChannelAware => "channel-aware",
+        }
+    }
+}
+
+/// Stateful router (round-robin cursor); one per fleet run.
+#[derive(Debug, Clone)]
+pub struct Router {
+    policy: RoutePolicy,
+    cursor: usize,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy) -> Self {
+        Self { policy, cursor: 0 }
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
+    }
+
+    /// Pick the serving cell for one arrival. Deterministic: every tie
+    /// breaks toward the lower cell index. When every cell is draining,
+    /// falls back to the full fleet (the backlog still gets served; a
+    /// fully drained fleet is an operator error we degrade gracefully
+    /// on).
+    pub fn route(
+        &mut self,
+        arrival: &Arrival,
+        user: usize,
+        cells: &[Cell],
+        mobility: &Mobility,
+        layout: &CellLayout,
+        energy: &EnergyModel,
+        policy: &ServePolicy,
+    ) -> usize {
+        let mut pool: Vec<usize> = cells
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.accepting())
+            .map(|(i, _)| i)
+            .collect();
+        if pool.is_empty() {
+            pool = (0..cells.len()).collect();
+        }
+        match self.policy {
+            RoutePolicy::RoundRobin => {
+                let pick = pool[self.cursor % pool.len()];
+                self.cursor = self.cursor.wrapping_add(1);
+                pick
+            }
+            RoutePolicy::JoinShortestQueue => {
+                let mut best = pool[0];
+                for &c in &pool[1..] {
+                    let better = cells[c].backlog() < cells[best].backlog()
+                        || (cells[c].backlog() == cells[best].backlog()
+                            && cells[c].busy_until() < cells[best].busy_until());
+                    if better {
+                        best = c;
+                    }
+                }
+                best
+            }
+            RoutePolicy::ChannelAware => {
+                // Cell-independent terms of the score, hoisted off the
+                // per-cell loop: the gate profile's expert fan-out, the
+                // (cell-uniform) compute cost, and the token count.
+                let fanout = expected_fanout(arrival, policy);
+                let s0 = energy.energy.s0_bytes;
+                let k = energy.energy.a_per_byte.len().max(1) as f64;
+                let comp = s0 * energy.energy.a_per_byte.iter().sum::<f64>() / k;
+                let tokens = arrival.query.tokens as f64;
+                let mut best = pool[0];
+                let mut best_score = f64::INFINITY;
+                for &c in &pool {
+                    let score = tokens
+                        * fanout
+                        * (comm_proxy(&cells[c], user, c, mobility, layout, energy) + comp)
+                        * load_factor(&cells[c]);
+                    if score < best_score {
+                        best_score = score;
+                        best = c;
+                    }
+                }
+                best
+            }
+        }
+    }
+}
+
+/// Expected number of experts one token must activate to clear the
+/// layer-0 QoS threshold, averaged over the query's tokens — the part of
+/// the gate profile that scales both energy terms.
+fn expected_fanout(arrival: &Arrival, policy: &ServePolicy) -> f64 {
+    let threshold = policy.z * policy.importance.gamma(0);
+    let tokens = &arrival.query.gates[0];
+    if tokens.is_empty() {
+        return 1.0;
+    }
+    let mut total = 0.0;
+    for gs in tokens {
+        let mut scores: Vec<f64> = gs.as_slice().to_vec();
+        scores.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let mut cum = 0.0;
+        let mut d = 0usize;
+        for s in scores.iter().take(policy.max_active.max(1)) {
+            cum += s;
+            d += 1;
+            if cum >= threshold {
+                break;
+            }
+        }
+        total += d as f64;
+    }
+    total / tokens.len() as f64
+}
+
+/// Per-token comm-energy proxy of serving at `cell` — the cell-varying
+/// part of the channel-aware score. Follows the eq.-3 shape
+/// `8·s0·P0 / r̄` with the mean rate `r̄` evaluated at the blend of the
+/// user's attenuation to the site and the cell's current
+/// mobility-driven scale. Constant factors cancel across cells — only
+/// the radio quality moves the argmin.
+fn comm_proxy(
+    cell: &Cell,
+    user: usize,
+    cell_idx: usize,
+    mobility: &Mobility,
+    layout: &CellLayout,
+    energy: &EnergyModel,
+) -> f64 {
+    let att = mobility.attenuation(layout, user, cell_idx);
+    let scale = 0.5 * (att + cell.channel_scale());
+    let gain = energy.channel.path_loss * scale;
+    let n0 = energy.channel.n0_w();
+    let rbar = energy.channel.b0_hz * (1.0 + gain * energy.channel.p0_w / n0).log2();
+    8.0 * energy.energy.s0_bytes * energy.channel.p0_w / rbar.max(1e-9)
+}
+
+/// Soft backlog penalty: radio quality leads the decision; the queue
+/// term only breaks sustained pile-ups (four pending batches double the
+/// score), so good radio does not collapse into a hotspot.
+fn load_factor(cell: &Cell) -> f64 {
+    1.0 + 0.25 * cell.backlog() as f64 / cell.batch_queries().max(1) as f64
+}

@@ -26,8 +26,16 @@
 //! * [`serve`] — the continuous multi-user serving engine: open-loop
 //!   arrival processes (Poisson / bursty MMPP / diurnal), admission
 //!   control with QoS-aware shedding, a quantized JESA/DES solution
-//!   cache (bit-identical hits), and a discrete-event serving loop
-//!   reporting throughput, p50/p99 latency, shed rate and hit rate.
+//!   cache (bit-identical hits, LRU or cost-aware eviction, shareable
+//!   across lanes), workload-adaptive quantization, and a discrete-event
+//!   serving loop reporting throughput, p50/p99 latency, shed rate and
+//!   hit rate.
+//! * [`fleet`] — multi-cell sharded serving: N serve lanes ("cells"),
+//!   each with its own correlated-fading channel and admission queue,
+//!   behind a user router (round-robin / join-shortest-queue /
+//!   channel-aware), with Gauss–Markov user mobility driving per-cell
+//!   path loss and mid-session handover, and one shared solution cache
+//!   (cross-cell hits).
 //! * [`runtime`] — AOT bridge: loads `artifacts/*.hlo.txt` produced by
 //!   the build-time JAX/Pallas pipeline and executes them on the PJRT CPU
 //!   client. Python is never on the request path.
@@ -46,6 +54,7 @@ pub mod channel;
 pub mod config;
 pub mod coordinator;
 pub mod energy;
+pub mod fleet;
 pub mod gating;
 pub mod jesa;
 pub mod metrics;

@@ -5,6 +5,8 @@
 //!
 //!   serve      continuous serving engine: arrival process -> admission
 //!              queue -> cached JESA rounds (no artifacts needed)
+//!   fleet      multi-cell sharded serving: N lanes + user router +
+//!              mobility/handover + shared solution cache
 //!   eval       serve every eval set with a policy, print metrics
 //!   info       artifact / model / config summary
 //!   table1     Table I  — DES accuracy + normalized energy
@@ -19,6 +21,10 @@
 
 use dmoe::bench_harness::{self as bh, FigureReport};
 use dmoe::coordinator::{DmoeServer, ServePolicy};
+use dmoe::fleet::{
+    estimate_cell_round_latency_s, CellLayout, FleetEngine, FleetOptions, Mobility,
+    MobilityConfig, RoutePolicy,
+};
 use dmoe::serve::{
     estimate_round_latency_s, ArrivalProcess, QuantizerConfig, QueueConfig, ServeEngine,
     ServeOptions, TrafficConfig,
@@ -72,6 +78,7 @@ fn dispatch(sub: &str, args: &Args) -> Result<()> {
         }
         "info" => info(args),
         "serve" => serve(args),
+        "fleet" => fleet(args),
         "eval" => eval(args),
         "table1" => {
             let mut server = server(args)?;
@@ -226,35 +233,33 @@ fn policy_from_args(args: &Args, layers: usize) -> Result<ServePolicy> {
     })
 }
 
-/// The continuous serving engine (`dmoe serve`): synthesize an arrival
-/// stream, push it through admission control and cached JESA rounds, and
-/// report throughput, simulated latency percentiles, shed rate and
-/// solution-cache hit rate. Needs no model artifacts.
-fn serve(args: &Args) -> Result<()> {
-    let cfg = base_config(args);
-    let k = cfg.moe.experts;
-    let layers = cfg.moe.layers;
-    let policy = policy_from_args(args, layers)?;
+// -- flags shared by `serve` and `fleet` ------------------------------------
 
-    let queries = args.get_usize("queries", 10_000);
-    let mut traffic = TrafficConfig {
+/// Synthetic traffic stream from the shared CLI flags (process is set by
+/// the caller once the offered rate is calibrated).
+fn traffic_from_args(args: &Args, cfg: &SystemConfig, default_queries: usize) -> TrafficConfig {
+    let queries = args.get_usize("queries", default_queries);
+    TrafficConfig {
         queries,
         domains: args.get_usize("domains", 8),
         tokens_per_query: args.get_usize("tokens", cfg.workload.tokens_per_query.min(4)),
         gate_noise: args.get_f64("noise", 0.0),
         seed: cfg.workload.seed,
         ..TrafficConfig::poisson(1.0, queries)
-    };
+    }
+}
 
-    // Capacity probe: mean discrete-event latency of one full round,
-    // used to auto-derive the arrival rate and the queue timeouts.
-    let round_s = estimate_round_latency_s(&cfg, &policy, &traffic, 4).max(1e-9);
-    let capacity_qps = k as f64 / round_s;
-    let rate = match args.get_f64("rate", 0.0) {
+/// Offered rate: explicit `--rate`, else `--utilization` × capacity.
+fn rate_from_args(args: &Args, capacity_qps: f64, default_utilization: f64) -> f64 {
+    match args.get_f64("rate", 0.0) {
         r if r > 0.0 => r,
-        _ => args.get_f64("utilization", 0.7) * capacity_qps,
-    };
-    traffic.process = match args.get_or("process", "poisson").as_str() {
+        _ => args.get_f64("utilization", default_utilization) * capacity_qps,
+    }
+}
+
+/// Arrival process from `--process` and the calibrated rate/round time.
+fn process_from_args(args: &Args, rate: f64, round_s: f64) -> Result<ArrivalProcess> {
+    Ok(match args.get_or("process", "poisson").as_str() {
         "poisson" => ArrivalProcess::Poisson { rate_qps: rate },
         "bursty" | "mmpp" => {
             ArrivalProcess::bursty_around(rate, args.get_f64("dwell", 50.0 * round_s))
@@ -265,19 +270,56 @@ fn serve(args: &Args) -> Result<()> {
             args.get_f64("period", 500.0 * round_s),
         ),
         other => dmoe::bail!("unknown --process {other} (poisson|bursty|diurnal)"),
-    };
+    })
+}
 
+/// Queue/batch-former config with the shared CLI overrides applied.
+fn queue_from_args(args: &Args, k: usize, round_s: f64) -> QueueConfig {
     let mut queue = QueueConfig::for_system(k, round_s);
     queue.capacity = args.get_usize("queue", queue.capacity);
     queue.batch_queries = args.get_usize("batch", queue.batch_queries).clamp(1, k);
     queue.max_wait_s = args.get_f64("max-wait", queue.max_wait_s);
     queue.deadline_s = args.get_f64("deadline", queue.deadline_s);
+    queue
+}
+
+/// Quantization is workload-adaptive by default; `--fixed-quant` (or an
+/// explicit `--step` / `--gate-grid`) pins the fixed grids.
+fn fixed_quant_requested(args: &Args) -> bool {
+    args.flag("fixed-quant") || args.get("step").is_some() || args.get("gate-grid").is_some()
+}
+
+fn quant_from_args(args: &Args) -> QuantizerConfig {
+    QuantizerConfig {
+        log2_step: args.get_f64("step", 3.0),
+        gate_levels: args.get_usize("gate-grid", 32) as u32,
+    }
+}
+
+/// The continuous serving engine (`dmoe serve`): synthesize an arrival
+/// stream, push it through admission control and cached JESA rounds, and
+/// report throughput, simulated latency percentiles, shed rate and
+/// solution-cache hit rate. Needs no model artifacts.
+fn serve(args: &Args) -> Result<()> {
+    let cfg = base_config(args);
+    let k = cfg.moe.experts;
+    let layers = cfg.moe.layers;
+    let policy = policy_from_args(args, layers)?;
+    let mut traffic = traffic_from_args(args, &cfg, 10_000);
+
+    // Capacity probe: mean discrete-event latency of one full round,
+    // used to auto-derive the arrival rate and the queue timeouts.
+    let round_s = estimate_round_latency_s(&cfg, &policy, &traffic, 4).max(1e-9);
+    let capacity_qps = k as f64 / round_s;
+    let rate = rate_from_args(args, capacity_qps, 0.7);
+    traffic.process = process_from_args(args, rate, round_s)?;
+
+    let queue = queue_from_args(args, k, round_s);
+    let fixed_quant = fixed_quant_requested(args);
     let opts = ServeOptions {
         cache_capacity: args.get_usize("cache", 4096),
-        quant: QuantizerConfig {
-            log2_step: args.get_f64("step", 3.0),
-            gate_levels: args.get_usize("gate-grid", 32) as u32,
-        },
+        quant: quant_from_args(args),
+        adapt_quant: !fixed_quant,
         workers: args.get_usize("workers", dmoe::util::pool::default_workers()),
         seed: cfg.workload.seed ^ 0x5E47E,
         ..ServeOptions::new(policy, queue)
@@ -285,15 +327,114 @@ fn serve(args: &Args) -> Result<()> {
 
     println!(
         "serve engine: K={k} L={layers} policy {} | process {} rate {:.2} q/s \
-         (capacity ≈ {:.2} q/s, round ≈ {:.3} s)\n",
+         (capacity ≈ {:.2} q/s, round ≈ {:.3} s, {} quantization)\n",
         opts.policy.label,
         traffic.process.label(),
         traffic.process.mean_qps(),
         capacity_qps,
         round_s,
+        if fixed_quant { "fixed" } else { "adaptive" },
     );
 
     let engine = ServeEngine::new(&cfg, opts);
+    let report = engine.run(&traffic);
+    print!("{}", report.render());
+    if args.flag("pattern") {
+        println!("\n{}", report.pattern.render());
+    }
+    Ok(())
+}
+
+/// Multi-cell sharded serving (`dmoe fleet`): N serve lanes with their
+/// own correlated-fading channels behind a user router, Gauss–Markov
+/// mobility driving per-cell path loss and handover, and one shared
+/// solution cache. Needs no model artifacts.
+fn fleet(args: &Args) -> Result<()> {
+    let cfg = base_config(args);
+    let k = cfg.moe.experts;
+    let layers = cfg.moe.layers;
+    let policy = policy_from_args(args, layers)?;
+    let route_spec = args.get_or("route", "jsq");
+    let route = match RoutePolicy::parse(&route_spec) {
+        Some(r) => r,
+        None => dmoe::bail!("unknown --route {route_spec} (rr|jsq|channel)"),
+    };
+    let cells = args.get_usize("cells", 2);
+    let mut traffic = traffic_from_args(args, &cfg, 8_000);
+
+    // Validate the numeric radio/mobility flags up front so bad input
+    // gets a clean CLI error, not a library assert's panic.
+    let spacing = args.get_f64("spacing", 200.0);
+    if !(spacing > 0.0 && spacing.is_finite()) {
+        dmoe::bail!("--spacing expects a positive number of meters, got {spacing}");
+    }
+    let rho = args.get_f64("rho", 0.9);
+    if !(0.0..1.0).contains(&rho) {
+        dmoe::bail!("--rho expects a fading memory in [0, 1), got {rho}");
+    }
+    let users = args.get_usize("users", 48);
+    if users == 0 {
+        dmoe::bail!("--users expects at least one user");
+    }
+    let speed = args.get_f64("speed", 1.5);
+    if !(speed >= 0.0 && speed.is_finite()) {
+        dmoe::bail!("--speed expects a non-negative speed in m/s, got {speed}");
+    }
+    let drain_at_s = args.get_f64("drain-at", 0.0);
+    if !(drain_at_s >= 0.0) {
+        dmoe::bail!("--drain-at expects a non-negative time in seconds, got {drain_at_s}");
+    }
+    let mobility = MobilityConfig {
+        users,
+        mean_speed_mps: speed,
+        ..MobilityConfig::default()
+    };
+    // Capacity probe, derated by the typical mobility attenuation (fleet
+    // cells run at scaled path loss, so rounds are slower than the
+    // unscaled single-engine estimate). The utilization default is a
+    // notch below serve's to absorb the derating error.
+    let layout = CellLayout::grid(cells, spacing);
+    let scale = Mobility::new(mobility.clone(), &layout).mean_attachment_attenuation(&layout);
+    let round_s = estimate_cell_round_latency_s(&cfg, &policy, &traffic, 4, scale).max(1e-9);
+    let capacity_qps = cells as f64 * k as f64 / round_s;
+    let rate = rate_from_args(args, capacity_qps, 0.6);
+    traffic.process = process_from_args(args, rate, round_s)?;
+
+    let queue = queue_from_args(args, k, round_s);
+    let fixed_quant = fixed_quant_requested(args);
+    let mut fopts = FleetOptions::new(cells, route, policy, queue);
+    fopts.cache_capacity = args.get_usize("cache", 4096);
+    fopts.quant = quant_from_args(args);
+    fopts.adapt_quant = !fixed_quant;
+    fopts.workers = args.get_usize("workers", dmoe::util::pool::default_workers());
+    fopts.seed = cfg.workload.seed ^ 0xF1EE7;
+    fopts.mobility = mobility;
+    fopts.spacing_m = spacing;
+    fopts.fading_rho = rho;
+    if let Some(cell) = args.get("drain-cell") {
+        let cell: usize = match cell.parse() {
+            Ok(c) if c < cells => c,
+            Ok(c) => dmoe::bail!("--drain-cell {c} out of range (fleet has {cells} cells)"),
+            Err(_) => dmoe::bail!("--drain-cell expects a cell index, got '{cell}'"),
+        };
+        fopts.drain_at.push((cell, drain_at_s));
+    }
+
+    println!(
+        "fleet engine: {cells} cells x K={k} L={layers} policy {} route {} | process {} \
+         rate {:.2} q/s (fleet capacity ≈ {:.2} q/s, cell round ≈ {:.3} s, mobility scale \
+         ≈ {:.2}, {} quantization)\n",
+        fopts.policy.label,
+        route.label(),
+        traffic.process.label(),
+        traffic.process.mean_qps(),
+        capacity_qps,
+        round_s,
+        scale,
+        if fixed_quant { "fixed" } else { "adaptive" },
+    );
+
+    let engine = FleetEngine::new(&cfg, fopts);
     let report = engine.run(&traffic);
     print!("{}", report.render());
     if args.flag("pattern") {
@@ -347,7 +488,14 @@ USAGE: dmoe <subcommand> [--flags]
              admission control, JESA solution cache; no artifacts needed)
              --queries N --process poisson|bursty|diurnal --rate QPS
              --utilization X --batch N --queue N --max-wait S --deadline S
-             --cache N --step OCTAVES --gate-grid N --noise X --workers N
+             --cache N --noise X --workers N
+             quantization is workload-adaptive; pin with --fixed-quant or
+             explicit --step OCTAVES / --gate-grid N
+  fleet      multi-cell sharded serving (N serve lanes + user router +
+             Gauss-Markov mobility/handover + shared solution cache)
+             --cells N --route rr|jsq|channel --users N --speed MPS
+             --spacing M --rho X --drain-cell I --drain-at S
+             (+ every serve flag above)
   eval       serve every eval set with a policy (--policy jesa|topk|homogeneous)
   info       artifact / model / config summary
   table1     Table I  — DES accuracy + normalized energy

@@ -21,7 +21,18 @@
 //! hit rate; `log2_step = 0` is not meaningful (use a cacheless engine
 //! for exact physics).
 //!
-//! Eviction is LRU with a fixed entry capacity.
+//! Eviction is LRU by default; [`EvictionPolicy::CostAware`] switches to
+//! a greedy-dual scheme that weighs retained entries by their recorded
+//! solve cost, so expensive branch-and-bound solutions outlive cheap
+//! greedy ones under capacity pressure.
+//!
+//! For multi-lane serving (the [fleet](crate::fleet) subsystem) the cache
+//! is wrapped in [`SharedSolutionCache`] — `Arc` + interior locking — so
+//! N engine lanes share one memo table; hits are attributed per lane and
+//! cross-lane hits (an entry inserted by one cell, reused by another) are
+//! counted in [`CacheStats::cross_hits`]. Because the cache key includes
+//! the solver seed, a shared hit remains bit-identical to a fresh solve
+//! regardless of which lane inserted it.
 
 use crate::channel::ChannelState;
 use crate::energy::EnergyModel;
@@ -30,6 +41,7 @@ use crate::jesa::{
     solve_round, AllocationMode, JesaOptions, RoundProblem, RoundSolution, SelectionPolicy,
 };
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 /// Quantization grids for the cache key / canonical problem.
 #[derive(Debug, Clone, PartialEq)]
@@ -297,6 +309,9 @@ pub struct CacheStats {
     pub misses: u64,
     pub evictions: u64,
     pub entries: usize,
+    /// Hits on entries inserted by a *different* lane/origin (0 for
+    /// single-lane engines).
+    pub cross_hits: u64,
 }
 
 impl CacheStats {
@@ -311,44 +326,87 @@ impl CacheStats {
             self.hits as f64 / self.lookups() as f64
         }
     }
+
+    /// Fraction of hits that crossed lanes.
+    pub fn cross_hit_rate(&self) -> f64 {
+        if self.hits == 0 {
+            0.0
+        } else {
+            self.cross_hits as f64 / self.hits as f64
+        }
+    }
+}
+
+/// How the cache chooses an eviction victim at capacity.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum EvictionPolicy {
+    /// Evict the least-recently-used entry (the original behavior).
+    #[default]
+    Lru,
+    /// Greedy-dual cost-aware eviction: every entry carries its recorded
+    /// solve cost and a priority `clock + cost`; the minimum-priority
+    /// entry is evicted and the clock advances to its priority. Expensive
+    /// branch-and-bound solutions therefore outlive cheap greedy ones,
+    /// while the rising clock still ages out stale expensive entries.
+    CostAware,
 }
 
 struct Entry {
     solution: RoundSolution,
-    last_used: u64,
+    /// Slot in the eviction-order index.
+    order: (u64, u64),
+    /// Recorded solve cost (only meaningful under `CostAware`).
+    cost: f64,
+    /// Lane that inserted the entry (cross-hit attribution).
+    origin: u32,
 }
 
-/// LRU-evicting map from [`CacheKey`] to [`RoundSolution`].
+/// Evicting map from [`CacheKey`] to [`RoundSolution`].
 ///
-/// Recency is tracked in a `BTreeMap<tick, key>` alongside the value
-/// map, so get/insert/evict are all O(log n) — no full-map scans on the
-/// serving hot path.
+/// Eviction order is tracked in a `BTreeMap<(priority, tick), key>`
+/// alongside the value map, so get/insert/evict are all O(log n) — no
+/// full-map scans on the serving hot path. Under [`EvictionPolicy::Lru`]
+/// the priority component is constant, so the index degenerates to the
+/// original pure-recency order; under [`EvictionPolicy::CostAware`] it is
+/// the greedy-dual priority `clock + cost` (non-negative, so the `f64`
+/// bit pattern orders correctly).
 ///
 /// `capacity == 0` disables storage (every lookup misses, inserts are
 /// dropped) while keeping the counters alive, so a cacheless engine run
 /// still reports a 0% hit rate rather than special-casing.
 pub struct SolutionCache {
     capacity: usize,
+    policy: EvictionPolicy,
     map: HashMap<CacheKey, Entry>,
-    /// `last_used` tick → key; ticks are unique, so the first entry is
-    /// always the least-recently-used key.
-    recency: std::collections::BTreeMap<u64, CacheKey>,
+    /// `(priority bits, unique tick)` → key; the first entry is always
+    /// the eviction victim.
+    order: std::collections::BTreeMap<(u64, u64), CacheKey>,
     tick: u64,
+    /// Greedy-dual aging clock (stays 0 under LRU).
+    clock: f64,
     hits: u64,
     misses: u64,
     evictions: u64,
+    cross_hits: u64,
 }
 
 impl SolutionCache {
     pub fn new(capacity: usize) -> Self {
+        Self::with_policy(capacity, EvictionPolicy::Lru)
+    }
+
+    pub fn with_policy(capacity: usize, policy: EvictionPolicy) -> Self {
         Self {
             capacity,
+            policy,
             map: HashMap::new(),
-            recency: std::collections::BTreeMap::new(),
+            order: std::collections::BTreeMap::new(),
             tick: 0,
+            clock: 0.0,
             hits: 0,
             misses: 0,
             evictions: 0,
+            cross_hits: 0,
         }
     }
 
@@ -364,61 +422,167 @@ impl SolutionCache {
         self.capacity
     }
 
+    pub fn policy(&self) -> EvictionPolicy {
+        self.policy
+    }
+
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits,
             misses: self.misses,
             evictions: self.evictions,
             entries: self.map.len(),
+            cross_hits: self.cross_hits,
         }
     }
 
-    /// Look up a solution; counts a hit or miss and refreshes recency.
+    fn order_key(&self, cost: f64) -> (u64, u64) {
+        match self.policy {
+            EvictionPolicy::Lru => (0, self.tick),
+            EvictionPolicy::CostAware => ((self.clock + cost).to_bits(), self.tick),
+        }
+    }
+
+    /// Look up a solution; counts a hit or miss and refreshes the entry's
+    /// eviction priority.
     pub fn get(&mut self, key: &CacheKey) -> Option<RoundSolution> {
+        self.get_from(key, 0)
+    }
+
+    /// [`SolutionCache::get`] with lane attribution: a hit on an entry
+    /// inserted by a different `origin` counts as a cross-lane hit.
+    /// Hashing the (large) key once matters: this runs per layer per
+    /// round, under the fleet's shared lock.
+    pub fn get_from(&mut self, key: &CacheKey, origin: u32) -> Option<RoundSolution> {
         self.tick += 1;
-        match self.map.get_mut(key) {
-            Some(entry) => {
-                let moved = self.recency.remove(&entry.last_used);
-                debug_assert!(moved.is_some(), "recency index out of sync");
-                self.recency.insert(self.tick, key.clone());
-                entry.last_used = self.tick;
-                self.hits += 1;
-                Some(entry.solution.clone())
-            }
+        let (policy, tick, clock) = (self.policy, self.tick, self.clock);
+        let entry = match self.map.get_mut(key) {
+            Some(entry) => entry,
             None => {
                 self.misses += 1;
-                None
+                return None;
             }
+        };
+        let new_order = match policy {
+            EvictionPolicy::Lru => (0, tick),
+            EvictionPolicy::CostAware => ((clock + entry.cost).to_bits(), tick),
+        };
+        let moved = self.order.remove(&entry.order);
+        debug_assert!(moved.is_some(), "eviction index out of sync");
+        self.order.insert(new_order, key.clone());
+        entry.order = new_order;
+        self.hits += 1;
+        if entry.origin != origin {
+            self.cross_hits += 1;
         }
+        Some(entry.solution.clone())
     }
 
-    /// Insert a solution, evicting the least-recently-used entry when at
-    /// capacity.
+    /// Insert a solution with unit cost and origin 0 (single-lane use).
     pub fn insert(&mut self, key: CacheKey, solution: RoundSolution) {
+        self.insert_with_cost(key, solution, 1.0, 0);
+    }
+
+    /// Insert a solution recording its solve cost (any non-negative
+    /// scale; the engine uses a deterministic branch-and-bound work
+    /// proxy) and the inserting lane. Evicts the policy's victim when at
+    /// capacity.
+    pub fn insert_with_cost(
+        &mut self,
+        key: CacheKey,
+        solution: RoundSolution,
+        cost: f64,
+        origin: u32,
+    ) {
         if self.capacity == 0 {
             return;
         }
+        let cost = if cost.is_finite() && cost > 0.0 { cost } else { 0.0 };
         self.tick += 1;
         if let Some(old) = self.map.get(&key) {
-            // Refresh of a resident key: drop its stale recency slot.
-            self.recency.remove(&old.last_used);
+            // Refresh of a resident key: drop its stale order slot.
+            self.order.remove(&old.order);
         } else if self.map.len() >= self.capacity {
-            let oldest = self.recency.keys().next().copied();
-            if let Some(tick) = oldest {
-                if let Some(lru) = self.recency.remove(&tick) {
-                    self.map.remove(&lru);
+            let victim = self.order.keys().next().copied();
+            if let Some(slot) = victim {
+                if let Some(evicted) = self.order.remove(&slot) {
+                    self.map.remove(&evicted);
+                    if self.policy == EvictionPolicy::CostAware {
+                        // Greedy-dual aging: the clock rises to the
+                        // evicted priority.
+                        self.clock = self.clock.max(f64::from_bits(slot.0));
+                    }
                     self.evictions += 1;
                 }
             }
         }
-        self.recency.insert(self.tick, key.clone());
+        let order = self.order_key(cost);
+        self.order.insert(order, key.clone());
         self.map.insert(
             key,
             Entry {
                 solution,
-                last_used: self.tick,
+                order,
+                cost,
+                origin,
             },
         );
+    }
+}
+
+/// Thread-safe handle to one [`SolutionCache`] shared across serving
+/// lanes (`Arc` + interior locking). Cloning the handle shares the
+/// underlying cache; all operations lock for the duration of one
+/// get/insert, which is cheap next to a round solve. Single-lane engines
+/// run through this wrapper with a private cache, so shared and private
+/// behavior are identical by construction.
+#[derive(Clone)]
+pub struct SharedSolutionCache {
+    inner: Arc<Mutex<SolutionCache>>,
+}
+
+impl SharedSolutionCache {
+    pub fn new(capacity: usize) -> Self {
+        Self::with_policy(capacity, EvictionPolicy::Lru)
+    }
+
+    pub fn with_policy(capacity: usize, policy: EvictionPolicy) -> Self {
+        Self {
+            inner: Arc::new(Mutex::new(SolutionCache::with_policy(capacity, policy))),
+        }
+    }
+
+    pub fn from_cache(cache: SolutionCache) -> Self {
+        Self {
+            inner: Arc::new(Mutex::new(cache)),
+        }
+    }
+
+    pub fn get(&self, key: &CacheKey, origin: u32) -> Option<RoundSolution> {
+        self.inner.lock().unwrap().get_from(key, origin)
+    }
+
+    pub fn insert(&self, key: CacheKey, solution: RoundSolution, cost: f64, origin: u32) {
+        self.inner
+            .lock()
+            .unwrap()
+            .insert_with_cost(key, solution, cost, origin)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.inner.lock().unwrap().stats()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.lock().unwrap().capacity()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().is_empty()
     }
 }
 
@@ -660,6 +824,161 @@ mod tests {
         assert_eq!(stats.entries, 0);
         assert_eq!(stats.misses, 3);
         assert_eq!(stats.hit_rate(), 0.0);
+    }
+
+    /// Distinct keys for the cost-aware tests: same setup, varying
+    /// thresholds partition the key space.
+    fn keyed_solutions(n: usize) -> Vec<(CacheKey, RoundSolution)> {
+        let (state, gates, energy) = setup(3, 8, 1, 77);
+        let quant = QuantizerConfig::default();
+        let opts = JesaOptions::default();
+        let csig = ChannelSignature::quantize(&state, quant.log2_step);
+        let canonical = csig.canonical_state(quant.log2_step);
+        (0..n)
+            .map(|i| {
+                let threshold = 0.30 + 0.01 * i as f64;
+                let (key, problem) =
+                    quantize_round(&csig, &quant, &gates, threshold, 2, &energy, &opts);
+                let sol = solve_round(&canonical, &problem, &energy, &opts);
+                (key, sol)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn cost_aware_keeps_expensive_entries_where_lru_drops_them() {
+        let sols = keyed_solutions(3);
+        // Insert an expensive entry first, then two cheap ones through a
+        // capacity-2 cache: LRU evicts by age (the expensive one goes);
+        // cost-aware evicts the cheap resident instead.
+        let mut lru = SolutionCache::new(2);
+        let mut cost = SolutionCache::with_policy(2, EvictionPolicy::CostAware);
+        let costs = [100.0, 0.5, 0.5];
+        for (c, (key, sol)) in costs.iter().zip(sols.iter()) {
+            lru.insert_with_cost(key.clone(), sol.clone(), *c, 0);
+            cost.insert_with_cost(key.clone(), sol.clone(), *c, 0);
+        }
+        assert!(
+            lru.get(&sols[0].0).is_none(),
+            "LRU must evict the oldest entry regardless of cost"
+        );
+        assert!(
+            cost.get(&sols[0].0).is_some(),
+            "cost-aware must retain the expensive entry"
+        );
+        assert!(
+            cost.get(&sols[1].0).is_none(),
+            "cost-aware must evict the cheap entry instead"
+        );
+    }
+
+    #[test]
+    fn cost_aware_clock_ages_out_stale_expensive_entries() {
+        let sols = keyed_solutions(8);
+        let mut cache = SolutionCache::with_policy(2, EvictionPolicy::CostAware);
+        // One moderately expensive entry, then a long stream of cheap
+        // entries: each eviction advances the clock, so the expensive
+        // entry's fixed priority is eventually the minimum and it drains.
+        cache.insert_with_cost(sols[0].0.clone(), sols[0].1.clone(), 3.0, 0);
+        for (key, sol) in &sols[1..] {
+            cache.insert_with_cost(key.clone(), sol.clone(), 1.0, 0);
+        }
+        assert!(
+            cache.get(&sols[0].0).is_none(),
+            "aging clock must eventually evict a never-hit expensive entry"
+        );
+    }
+
+    #[test]
+    fn cost_aware_unit_costs_degenerate_to_recency() {
+        // With uniform costs the greedy-dual priority is clock + 1, which
+        // orders exactly by insertion/refresh recency — sanity that the
+        // default-cost path matches LRU's eviction choice.
+        let sols = keyed_solutions(3);
+        let mut lru = SolutionCache::new(2);
+        let mut cost = SolutionCache::with_policy(2, EvictionPolicy::CostAware);
+        for (key, sol) in &sols {
+            lru.insert(key.clone(), sol.clone());
+            cost.insert(key.clone(), sol.clone());
+        }
+        for (i, (key, _)) in sols.iter().enumerate() {
+            assert_eq!(
+                lru.get(key).is_some(),
+                cost.get(key).is_some(),
+                "uniform-cost eviction diverged from LRU at entry {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn shared_cache_counts_cross_lane_hits() {
+        let sols = keyed_solutions(2);
+        let shared = SharedSolutionCache::new(16);
+        shared.insert(sols[0].0.clone(), sols[0].1.clone(), 1.0, 0);
+        shared.insert(sols[1].0.clone(), sols[1].1.clone(), 1.0, 1);
+        // Lane 0 hits its own entry (no cross), then lane 1's (cross).
+        assert!(shared.get(&sols[0].0, 0).is_some());
+        assert!(shared.get(&sols[1].0, 0).is_some());
+        let stats = shared.stats();
+        assert_eq!(stats.hits, 2);
+        assert_eq!(stats.cross_hits, 1);
+        assert!((stats.cross_hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    /// Satellite property: hits served out of a cache shared across
+    /// lanes/threads are bit-identical to fresh solves of the same
+    /// canonical round, regardless of which lane inserted the entry.
+    #[test]
+    fn property_shared_hits_bit_identical_across_threads() {
+        let shared = SharedSolutionCache::new(256);
+        let quant = QuantizerConfig::default();
+        let opts = JesaOptions::default();
+        let lanes: Vec<u32> = (0..4).collect();
+        let results: Vec<Vec<(RoundSolution, RoundSolution)>> =
+            crate::util::pool::parallel_map(&lanes, 4, |&lane| {
+                let mut out = Vec::new();
+                for seed in 0..6u64 {
+                    // All lanes solve the same six rounds, racing on the
+                    // shared cache; whoever misses solves canonically.
+                    let (state, gates, energy) = setup(3, 8, 2, 3000 + seed);
+                    let csig = ChannelSignature::quantize(&state, quant.log2_step);
+                    let canonical = csig.canonical_state(quant.log2_step);
+                    let (key, problem) =
+                        quantize_round(&csig, &quant, &gates, 0.4, 2, &energy, &opts);
+                    let got = match shared.get(&key, lane) {
+                        Some(sol) => sol,
+                        None => {
+                            let sol = solve_round(&canonical, &problem, &energy, &opts);
+                            shared.insert(key, sol.clone(), 1.0, lane);
+                            sol
+                        }
+                    };
+                    let fresh = solve_round(&canonical, &problem, &energy, &opts);
+                    out.push((got, fresh));
+                }
+                out
+            });
+        for lane in &results {
+            for (got, fresh) in lane {
+                assert_solutions_bit_identical(got, fresh);
+            }
+        }
+        // Deterministic epilogue: a lane that never inserted re-queries
+        // every round — all six must hit, all as cross-lane hits, and
+        // every hit must again be bit-identical to a fresh solve.
+        let before = shared.stats();
+        for seed in 0..6u64 {
+            let (state, gates, energy) = setup(3, 8, 2, 3000 + seed);
+            let csig = ChannelSignature::quantize(&state, quant.log2_step);
+            let canonical = csig.canonical_state(quant.log2_step);
+            let (key, problem) = quantize_round(&csig, &quant, &gates, 0.4, 2, &energy, &opts);
+            let got = shared.get(&key, 99).expect("resident after the parallel phase");
+            let fresh = solve_round(&canonical, &problem, &energy, &opts);
+            assert_solutions_bit_identical(&got, &fresh);
+        }
+        let stats = shared.stats();
+        assert_eq!(stats.hits, before.hits + 6);
+        assert_eq!(stats.cross_hits - before.cross_hits, 6, "lane 99 hits are all cross-lane");
     }
 
     #[test]

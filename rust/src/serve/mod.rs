@@ -28,13 +28,49 @@
 //! The engine runs at the selection/energy level on synthetic gate
 //! scores (like the paper-scale Figs. 6–9 experiments), so it needs no
 //! compiled model artifacts; `dmoe serve` exercises it from the CLI.
+//!
+//! # Fleet: lanes and the router
+//!
+//! One `ServeEngine` is a single serving *lane*: one admission queue, one
+//! channel, one round executor. The [`fleet`](crate::fleet) subsystem
+//! scales this out by running N lanes ("cells") side by side behind a
+//! user-facing router:
+//!
+//! ```text
+//!               ┌► cell 0: queue ─► rounds ─► report ┐
+//!  traffic ─► router                                 ├─► fleet report
+//!   (users)    └► cell N: queue ─► rounds ─► report ┘
+//!                 ▲ shared Arc'd SolutionCache (cross-cell hits)
+//! ```
+//!
+//! The pieces this module contributes to that layout:
+//!
+//! * [`SharedSolutionCache`] — the thread-safe (`Arc` + lock) cache
+//!   handle every lane shares; hits are attributed per lane and
+//!   cross-lane reuse is counted ([`CacheStats::cross_hits`]). A lane
+//!   with a private handle behaves exactly like the single-engine cache.
+//! * [`EvictionPolicy`] — LRU or cost-aware (greedy-dual) eviction; the
+//!   latter keeps expensive branch-and-bound solutions resident longer
+//!   than cheap greedy ones.
+//! * [`derive_quantizer`] / [`ServeOptions::adapt_quant`] — workload-
+//!   adaptive quantization grids derived from observed channel/gate
+//!   variance during warmup; the fleet derives one shared grid so all
+//!   cells' cache keys stay compatible.
+//! * [`ServeEngine::run_with_cache`] — the multi-lane entry point; the
+//!   fleet's cells run the same round pipeline through
+//!   `engine::execute_round`.
 
 pub mod cache;
 pub mod engine;
 pub mod queue;
 pub mod traffic;
 
-pub use cache::{quantize_round, solve_quantized, CacheStats, QuantizerConfig, SolutionCache};
-pub use engine::{estimate_round_latency_s, ServeEngine, ServeOptions, ServeReport};
+pub use cache::{
+    quantize_round, solve_quantized, CacheStats, EvictionPolicy, QuantizerConfig,
+    SharedSolutionCache, SolutionCache,
+};
+pub use engine::{
+    derive_quantizer, estimate_round_latency_s, ServeEngine, ServeOptions, ServeReport,
+};
 pub use queue::{AdmissionQueue, QueueConfig, ShedReason};
 pub use traffic::{Arrival, ArrivalProcess, SyntheticQuery, TrafficConfig, TrafficGenerator};

@@ -1,0 +1,217 @@
+//! End-to-end coverage of the fleet subsystem: conservation and
+//! determinism across cells, throughput scaling at fixed per-cell
+//! utilization, cross-cell cache hits, the drain lifecycle, and
+//! mobility-driven handover accounting.
+
+use dmoe::coordinator::ServePolicy;
+use dmoe::fleet::{
+    estimate_cell_round_latency_s, CellLayout, FleetEngine, FleetOptions, FleetReport, Mobility,
+    MobilityConfig, RoutePolicy,
+};
+use dmoe::serve::{QueueConfig, TrafficConfig};
+use dmoe::SystemConfig;
+
+fn tiny_setup(cells: usize, route: RoutePolicy) -> (SystemConfig, FleetOptions) {
+    let mut cfg = SystemConfig::tiny(); // K=3, L=2, M=12
+    cfg.workload.seed = 99;
+    let policy = ServePolicy::jesa(0.8, 2, cfg.moe.layers);
+    let queue = QueueConfig::for_system(cfg.moe.experts, 1.0);
+    let mut fopts = FleetOptions::new(cells, route, policy, queue);
+    fopts.workers = 1;
+    fopts.mobility.users = 24;
+    (cfg, fopts)
+}
+
+fn tiny_traffic(queries: usize, rate_qps: f64) -> TrafficConfig {
+    TrafficConfig {
+        queries,
+        // Few domains + noise-free templates: canonical rounds repeat, so
+        // the cache assertions below are statistically safe.
+        domains: 4,
+        tokens_per_query: 2,
+        seed: 7,
+        ..TrafficConfig::poisson(rate_qps, queries)
+    }
+}
+
+fn run(cells: usize, route: RoutePolicy, queries: usize, rate_qps: f64) -> FleetReport {
+    let (cfg, fopts) = tiny_setup(cells, route);
+    FleetEngine::new(&cfg, fopts).run(&tiny_traffic(queries, rate_qps))
+}
+
+#[test]
+fn conserves_queries_across_cells() {
+    for route in [
+        RoutePolicy::RoundRobin,
+        RoutePolicy::JoinShortestQueue,
+        RoutePolicy::ChannelAware,
+    ] {
+        let report = run(3, route, 300, 10.0);
+        assert_eq!(report.generated, 300, "{}", route.label());
+        assert_eq!(
+            report.completed + report.shed(),
+            report.generated,
+            "conservation under {}",
+            route.label()
+        );
+        let routed: usize = report.cells.iter().map(|c| c.routed).sum();
+        assert_eq!(routed, report.generated, "every query routed exactly once");
+        let done: usize = report.cells.iter().map(|c| c.completed).sum();
+        assert_eq!(done, report.completed);
+        assert!(report.rounds > 0);
+        for c in &report.completions {
+            assert!(c.start_s >= c.arrival_s - 1e-12, "started before arrival");
+            assert!(c.done_s > c.start_s, "round must take time");
+        }
+        // Round-robin spreads arrivals evenly by construction.
+        if route == RoutePolicy::RoundRobin {
+            let max = report.cells.iter().map(|c| c.routed).max().unwrap();
+            let min = report.cells.iter().map(|c| c.routed).min().unwrap();
+            assert!(max - min <= 1, "rr routed spread {min}..{max}");
+        }
+    }
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let a = run(2, RoutePolicy::JoinShortestQueue, 300, 10.0);
+    let b = run(2, RoutePolicy::JoinShortestQueue, 300, 10.0);
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.shed(), b.shed());
+    assert_eq!(a.handovers, b.handovers);
+    assert_eq!(a.energy.total_j().to_bits(), b.energy.total_j().to_bits());
+    assert_eq!(a.cache.hits, b.cache.hits);
+    assert_eq!(a.cache.cross_hits, b.cache.cross_hits);
+    for (x, y) in a.cells.iter().zip(b.cells.iter()) {
+        assert_eq!(x.routed, y.routed);
+        assert_eq!(x.completed, y.completed);
+        assert_eq!(x.energy.total_j().to_bits(), y.energy.total_j().to_bits());
+    }
+    for (x, y) in a.completions.iter().zip(b.completions.iter()) {
+        assert_eq!(x.done_s.to_bits(), y.done_s.to_bits());
+    }
+}
+
+#[test]
+fn recurring_regimes_hit_across_cells() {
+    let report = run(2, RoutePolicy::JoinShortestQueue, 400, 20.0);
+    assert!(report.cache.hits > 0, "{:?}", report.cache);
+    assert!(
+        report.cache.cross_hits > 0,
+        "noise-free domain templates must recur across cells: {:?}",
+        report.cache
+    );
+}
+
+#[test]
+fn throughput_scales_with_cells_at_fixed_per_cell_utilization() {
+    let (cfg, _) = tiny_setup(1, RoutePolicy::JoinShortestQueue);
+    let policy = ServePolicy::jesa(0.8, 2, cfg.moe.layers);
+    let probe_traffic = tiny_traffic(100, 1.0);
+    let mobility = MobilityConfig {
+        users: 24,
+        ..MobilityConfig::default()
+    };
+    let mut qps = Vec::new();
+    for cells in [1usize, 2] {
+        let layout = CellLayout::grid(cells, 200.0);
+        let scale =
+            Mobility::new(mobility.clone(), &layout).mean_attachment_attenuation(&layout);
+        let round_s =
+            estimate_cell_round_latency_s(&cfg, &policy, &probe_traffic, 3, scale).max(1e-9);
+        let rate = cells as f64 * 0.6 * cfg.moe.experts as f64 / round_s;
+        let report = run(cells, RoutePolicy::JoinShortestQueue, 400 * cells, rate);
+        assert!(
+            report.shed_rate() < 0.2,
+            "{cells}-cell run must stay mostly stable at 60% utilization: {:.1}% shed",
+            report.shed_rate() * 100.0
+        );
+        qps.push(report.throughput_qps());
+    }
+    let speedup = qps[1] / qps[0].max(1e-9);
+    assert!(
+        speedup >= 1.5,
+        "2 cells must scale throughput (got {speedup:.2}x: {:.2} -> {:.2} q/s)",
+        qps[0],
+        qps[1]
+    );
+}
+
+#[test]
+fn drained_cell_stops_taking_traffic_but_finishes_backlog() {
+    let (cfg, mut fopts) = tiny_setup(2, RoutePolicy::RoundRobin);
+    // Queries span ~30 s at 10 q/s; drain cell 0 a third of the way in.
+    fopts.drain_at.push((0, 10.0));
+    let report = FleetEngine::new(&cfg, fopts).run(&tiny_traffic(300, 10.0));
+    assert_eq!(report.completed + report.shed(), report.generated);
+    let (c0, c1) = (&report.cells[0], &report.cells[1]);
+    assert_eq!(c0.state, "drained", "drained cell must finish its backlog");
+    assert!(
+        c0.routed < c1.routed,
+        "post-drain traffic must all go to cell 1 ({} vs {})",
+        c0.routed,
+        c1.routed
+    );
+    assert!(c1.state == "active" || c1.state == "warming");
+    // Round-robin over the remaining pool serves everything else.
+    assert!(c0.completed > 0 && c1.completed > 0);
+}
+
+#[test]
+fn mobile_users_hand_over_mid_session() {
+    let (cfg, mut fopts) = tiny_setup(2, RoutePolicy::ChannelAware);
+    // Brisk pedestrians crossing a 2-cell site over a ~40 s stream.
+    fopts.mobility.mean_speed_mps = 12.0;
+    let report = FleetEngine::new(&cfg, fopts).run(&tiny_traffic(600, 15.0));
+    assert!(
+        report.continued_sessions > 100,
+        "24 users x 600 queries must continue sessions: {}",
+        report.continued_sessions
+    );
+    assert!(
+        report.handovers > 0,
+        "users moving at 12 m/s must change attachment mid-session"
+    );
+    assert!(report.handover_rate() > 0.0 && report.handover_rate() < 1.0);
+    // The render path covers every aggregate without panicking.
+    let text = report.render();
+    assert!(text.contains("handover rate"));
+    assert!(text.contains("cell  state"));
+}
+
+#[test]
+fn route_policy_parsing() {
+    assert_eq!(RoutePolicy::parse("rr"), Some(RoutePolicy::RoundRobin));
+    assert_eq!(
+        RoutePolicy::parse("jsq"),
+        Some(RoutePolicy::JoinShortestQueue)
+    );
+    assert_eq!(
+        RoutePolicy::parse("channel-aware"),
+        Some(RoutePolicy::ChannelAware)
+    );
+    assert_eq!(RoutePolicy::parse("nope"), None);
+    assert_eq!(RoutePolicy::RoundRobin.label(), "round-robin");
+}
+
+#[test]
+fn single_cell_fleet_behaves_like_one_lane() {
+    // A 1-cell fleet is a degenerate sharding: everything routes to cell
+    // 0, rounds never overlap, and the fleet aggregates reduce to the
+    // cell's own numbers.
+    let report = run(1, RoutePolicy::ChannelAware, 200, 8.0);
+    assert_eq!(report.cells.len(), 1);
+    assert_eq!(report.cells[0].routed, report.generated);
+    assert_eq!(report.cells[0].completed, report.completed);
+    assert!((report.imbalance() - 1.0).abs() < 1e-12);
+    assert!((report.jain_index() - 1.0).abs() < 1e-12);
+    // Serial lane: completions ordered by round start never overlap.
+    let mut sorted = report.completions.clone();
+    sorted.sort_by(|a, b| a.start_s.partial_cmp(&b.start_s).unwrap());
+    for w in sorted.windows(2) {
+        assert!(
+            w[1].start_s >= w[0].done_s - 1e-9 || w[1].start_s == w[0].start_s,
+            "rounds overlap in a single-lane fleet"
+        );
+    }
+}

@@ -1,0 +1,184 @@
+//! Queue-level coverage under bursty (MMPP) arrivals: shed ordering and
+//! deadline-trigger batch formation. The engine tests cover these
+//! mechanics only end-to-end; here the admission queue is driven
+//! directly by a miniature batch-former loop that mirrors the engine's
+//! admission/trigger semantics, so each queue behavior is observable in
+//! isolation.
+
+use dmoe::serve::{
+    AdmissionQueue, Arrival, ArrivalProcess, QueueConfig, ShedReason, TrafficConfig,
+    TrafficGenerator,
+};
+
+fn mmpp_arrivals(low: f64, high: f64, dwell: f64, queries: usize) -> Vec<Arrival> {
+    let cfg = TrafficConfig {
+        process: ArrivalProcess::Mmpp {
+            low_qps: low,
+            high_qps: high,
+            mean_dwell_s: dwell,
+        },
+        queries,
+        tokens_per_query: 1,
+        seed: 0xB1_57,
+        ..TrafficConfig::poisson(1.0, queries)
+    };
+    TrafficGenerator::new(cfg, 4, 2).generate()
+}
+
+/// One formed batch, as the mini-driver saw it.
+struct Formed {
+    start_s: f64,
+    ids: Vec<u64>,
+    /// The size trigger was NOT met when the batch formed (deadline- or
+    /// drain-triggered partial batch).
+    partial: bool,
+}
+
+/// Drive the queue exactly like the serving engine does (admit every
+/// arrival landing at or before the round's would-be start; form on the
+/// size or deadline trigger; shed expired queries at round start), with
+/// a fixed per-round service time standing in for the solver.
+fn drive(queue: &mut AdmissionQueue, arrivals: Vec<Arrival>, service_s: f64) -> Vec<Formed> {
+    let mut formed = Vec::new();
+    let mut free_at = 0.0f64;
+    let mut stream = arrivals.into_iter().peekable();
+    while stream.peek().is_some() || !queue.is_empty() {
+        if queue.is_empty() {
+            queue.push(stream.next().expect("stream non-empty"));
+            continue;
+        }
+        let trigger = queue.trigger_time_s().expect("queue non-empty");
+        let start_if_now = trigger.max(free_at);
+        if let Some(next) = stream.peek() {
+            if next.at_s <= start_if_now {
+                queue.push(stream.next().expect("peeked"));
+                continue;
+            }
+        }
+        let partial = !queue.batch_ready();
+        let formed_at = if partial && stream.peek().is_none() {
+            queue.newest_arrival_s().expect("queue non-empty")
+        } else {
+            trigger
+        };
+        let start = formed_at.max(free_at);
+        queue.shed_expired(start);
+        if queue.is_empty() {
+            continue;
+        }
+        let batch = queue.take_batch();
+        free_at = start + service_s;
+        formed.push(Formed {
+            start_s: start,
+            ids: batch.iter().map(|a| a.query.id).collect(),
+            partial,
+        });
+    }
+    formed
+}
+
+fn queue(capacity: usize, batch: usize, max_wait: f64, deadline: f64) -> AdmissionQueue {
+    AdmissionQueue::new(QueueConfig {
+        capacity,
+        batch_queries: batch,
+        max_wait_s: max_wait,
+        deadline_s: deadline,
+    })
+}
+
+#[test]
+fn bursty_stream_exercises_both_formation_triggers() {
+    // Low state ≈ 1 q/s (inter-arrival ≫ max_wait 0.5 s → deadline
+    // trigger forms partial batches); high state ≈ 60 q/s (the size
+    // trigger fills batches of 4).
+    let arrivals = mmpp_arrivals(1.0, 60.0, 3.0, 2000);
+    let mut q = queue(64, 4, 0.5, f64::INFINITY);
+    let formed = drive(&mut q, arrivals, 0.01);
+    let served: usize = formed.iter().map(|f| f.ids.len()).sum();
+    assert_eq!(served, 2000, "infinite deadline must serve every query");
+    let partial = formed.iter().filter(|f| f.partial).count();
+    let full = formed.iter().filter(|f| f.ids.len() == 4).count();
+    assert!(
+        partial > 5,
+        "lulls must fire the deadline trigger (partial batches: {partial})"
+    );
+    assert!(
+        full > 10,
+        "bursts must fire the size trigger (full batches: {full})"
+    );
+    for f in &formed {
+        assert!(f.ids.len() <= 4, "batch overflow: {}", f.ids.len());
+        assert!(!f.ids.is_empty());
+    }
+    // Rounds never overlap and never start before their members arrive.
+    for w in formed.windows(2) {
+        assert!(w[1].start_s >= w[0].start_s + 0.01 - 1e-12, "rounds overlap");
+    }
+}
+
+#[test]
+fn batches_stay_fifo_under_bursts() {
+    let arrivals = mmpp_arrivals(2.0, 80.0, 2.0, 1500);
+    let mut q = queue(64, 4, 0.5, f64::INFINITY);
+    let formed = drive(&mut q, arrivals, 0.02);
+    // Ids were assigned in arrival order, so FIFO service means every
+    // batch is ascending and batches never interleave.
+    let mut last = 0u64;
+    for f in &formed {
+        for &id in &f.ids {
+            assert!(
+                id >= last || last == 0,
+                "FIFO violated: id {id} after {last}"
+            );
+            last = id.max(last);
+        }
+        let mut sorted = f.ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, f.ids, "batch not in arrival order");
+    }
+}
+
+#[test]
+fn deadline_sheds_come_out_oldest_first() {
+    // A service time far above the deadline piles the queue up and
+    // forces deadline shedding at round starts.
+    let arrivals = mmpp_arrivals(5.0, 100.0, 1.0, 1200);
+    let mut q = queue(1024, 4, 0.2, 0.5);
+    let formed = drive(&mut q, arrivals, 1.0);
+    let (shed_full, shed_deadline) = q.shed_counts();
+    assert_eq!(shed_full, 0, "capacity 1024 must never overflow here");
+    assert!(shed_deadline > 50, "overload must shed ({shed_deadline})");
+    let served: usize = formed.iter().map(|f| f.ids.len()).sum();
+    assert_eq!(served + shed_deadline, 1200, "conservation");
+    // Every shed is a deadline shed, and — queries having been admitted
+    // in arrival order — the shed log is oldest-first throughout.
+    let ids: Vec<u64> = q
+        .shed_log()
+        .iter()
+        .map(|&(id, reason)| {
+            assert_eq!(reason, ShedReason::DeadlineExceeded);
+            id
+        })
+        .collect();
+    for w in ids.windows(2) {
+        assert!(w[0] < w[1], "deadline sheds out of order: {} then {}", w[0], w[1]);
+    }
+}
+
+#[test]
+fn capacity_sheds_exactly_the_overflow_under_bursts() {
+    // A tiny queue in front of a slow server: bursts overflow capacity,
+    // and the queue never holds more than its bound.
+    let arrivals = mmpp_arrivals(5.0, 150.0, 1.0, 800);
+    let mut q = queue(6, 3, 0.2, f64::INFINITY);
+    let total = arrivals.len();
+    let formed = drive(&mut q, arrivals, 0.5);
+    let (shed_full, shed_deadline) = q.shed_counts();
+    assert_eq!(shed_deadline, 0, "infinite deadline never sheds by age");
+    assert!(shed_full > 0, "bursts must overflow a 6-slot queue");
+    let served: usize = formed.iter().map(|f| f.ids.len()).sum();
+    assert_eq!(served + shed_full, total, "conservation");
+    for (id, reason) in q.shed_log() {
+        assert_eq!(*reason, ShedReason::QueueFull, "query {id}");
+    }
+}
