@@ -32,3 +32,23 @@ cargo build --release
 cargo test -q
 cargo run --release --quiet -- serve --queries 2000 --tokens 2 --workers 2
 cargo run --release --quiet -- fleet --cells 2 --route jsq --queries 1200 --tokens 2 --workers 2
+
+# Parallel-fleet smoke: 4 cells on the work-stealing lane executor with
+# >= 2 workers at both parallelism layers (lanes + per-layer pool).
+cargo run --release --quiet -- fleet --cells 4 --route jsq --queries 1200 --tokens 2 \
+  --workers 2 --lane-workers 4
+
+# Lane determinism gate: a sequential (--lane-workers 0) and a
+# lane-parallel run of the same fleet must produce bit-identical reports
+# (the digest covers completions, energies and per-cell accounting; see
+# FleetReport::digest).
+extract_digest() { sed -n 's/.*report digest \(0x[0-9a-f]*\).*/\1/p'; }
+seq_digest=$(cargo run --release --quiet -- fleet --cells 4 --route rr --queries 1000 \
+  --tokens 2 --workers 1 --lane-workers 0 | extract_digest)
+par_digest=$(cargo run --release --quiet -- fleet --cells 4 --route rr --queries 1000 \
+  --tokens 2 --workers 1 --lane-workers 4 | extract_digest)
+if [[ -z "$seq_digest" || "$seq_digest" != "$par_digest" ]]; then
+  echo "FAIL: fleet determinism check (sequential=$seq_digest parallel=$par_digest)" >&2
+  exit 1
+fi
+echo "fleet determinism check passed ($seq_digest)"

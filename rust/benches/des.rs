@@ -1,12 +1,18 @@
 //! DES complexity bench — the §V claim: the LP bound makes exact
 //! selection tractable where plain enumeration is `O(2^K)`.
 //!
-//! Compares DES vs the exhaustive oracle (small K) and vs greedy, sweeps
-//! K and D, and reports node-expansion counts (the search-complexity
-//! metric the paper's analysis targets).
+//! Compares the production solver (warm-started best-first `DesSolver`)
+//! against the seed BFS, the exhaustive oracle (small K) and greedy,
+//! sweeps K and D, and reports node-expansion counts (the
+//! search-complexity metric the paper's analysis targets).
+//!
+//! Writes `BENCH_des.json` — nodes expanded (seed vs best-first),
+//! ns/solve and the per-instance `bf <= seed` regression verdict — so
+//! the repo carries a perf trajectory across PRs.
 
 use dmoe::selection::{des, dp, exhaustive, greedy, SelectionProblem};
 use dmoe::util::bench::{black_box, Bencher};
+use dmoe::util::json::Json;
 use dmoe::util::rng::Xoshiro256pp;
 
 fn random_problem(rng: &mut Xoshiro256pp, k: usize, d: usize) -> SelectionProblem {
@@ -17,18 +23,34 @@ fn random_problem(rng: &mut Xoshiro256pp, k: usize, d: usize) -> SelectionProble
     SelectionProblem::new(scores, costs, 0.5, d)
 }
 
+/// Feasible-but-tight corpus instance: the QoS threshold scales with the
+/// top-D mass so instances stay hard at every K.
+fn corpus_problem(rng: &mut Xoshiro256pp, k: usize, d: usize) -> SelectionProblem {
+    let mut p = random_problem(rng, k, d);
+    let mut top: Vec<f64> = p.scores.clone();
+    top.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    p.threshold = 0.7 * top.iter().take(d).sum::<f64>();
+    p
+}
+
 fn main() {
     let mut b = Bencher::new();
-    println!("# DES vs exhaustive vs greedy\n");
+    println!("# DES (warm-started best-first) vs seed BFS vs exhaustive vs greedy\n");
 
     for k in [8usize, 12, 16, 20, 24] {
         let mut rng = Xoshiro256pp::seed_from_u64(k as u64);
         let problems: Vec<SelectionProblem> =
             (0..32).map(|_| random_problem(&mut rng, k, 4)).collect();
+        let mut solver = des::DesSolver::new();
         let mut i = 0;
         b.bench(&format!("des/K={k}/D=4"), || {
             i = (i + 1) % problems.len();
-            black_box(des::solve(&problems[i]))
+            black_box(solver.solve(&problems[i]))
+        });
+        let mut s = 0;
+        b.bench(&format!("des-seed-bfs/K={k}/D=4"), || {
+            s = (s + 1) % problems.len();
+            black_box(des::solve_seed_bfs(&problems[s]))
         });
         if k <= 20 {
             let mut j = 0;
@@ -53,13 +75,14 @@ fn main() {
     println!("\n# solution-quality ablation (K=16, D=4, 128 instances)\n");
     {
         let mut rng = Xoshiro256pp::seed_from_u64(0xAB1A);
+        let mut solver = des::DesSolver::new();
         let mut greedy_gap = 0.0;
         let mut dp_gap = 0.0;
         let mut greedy_infeasible = 0u32;
         let mut n = 0u32;
         for _ in 0..128 {
             let p = random_problem(&mut rng, 16, 4);
-            let (opt, _) = des::solve(&p);
+            let (opt, _) = solver.solve(&p);
             if opt.fallback || opt.cost <= 0.0 {
                 continue;
             }
@@ -88,41 +111,96 @@ fn main() {
         let mut rng = Xoshiro256pp::seed_from_u64(1600 + d as u64);
         let problems: Vec<SelectionProblem> =
             (0..32).map(|_| random_problem(&mut rng, 16, d)).collect();
+        let mut solver = des::DesSolver::new();
         let mut i = 0;
         b.bench(&format!("des/K=16/D={d}"), || {
             i = (i + 1) % problems.len();
-            black_box(des::solve(&problems[i]))
+            black_box(solver.solve(&problems[i]))
         });
     }
 
-    println!("\n# node expansion counts (mean over 64 instances)\n");
+    // Regression corpus: the warm-started best-first solver must not
+    // expand more nodes than the seed BFS on ANY corpus instance
+    // (acceptance criterion), and its ns/solve should beat it too.
+    println!("\n# node expansions: best-first (bf) vs seed BFS, 64 instances each\n");
+    let mut corpus_rows: Vec<Json> = Vec::new();
+    let mut all_leq = true;
     for k in [8usize, 16, 24, 32, 48, 64] {
         let mut rng = Xoshiro256pp::seed_from_u64(9000 + k as u64);
-        let mut expanded = 0u64;
-        let mut pruned = 0u64;
         let n = 64;
-        for _ in 0..n {
-            // Scale the QoS threshold with the top-D mass so instances
-            // stay feasible-but-tight at every K (a fixed threshold goes
-            // trivially infeasible once D/K shrinks).
-            let mut p = random_problem(&mut rng, k, 4);
-            let mut top: Vec<f64> = p.scores.clone();
-            top.sort_by(|a, b| b.partial_cmp(a).unwrap());
-            p.threshold = 0.7 * top.iter().take(4).sum::<f64>();
-            let (_, stats) = des::solve(&p);
-            expanded += stats.nodes_expanded;
-            pruned += stats.nodes_pruned;
+        let problems: Vec<SelectionProblem> =
+            (0..n).map(|_| corpus_problem(&mut rng, k, 4)).collect();
+        let mut solver = des::DesSolver::new();
+        let mut bf_expanded = 0u64;
+        let mut seed_expanded = 0u64;
+        let mut seed_pruned = 0u64;
+        let mut violations = 0usize;
+        for p in &problems {
+            let (_, bf) = solver.solve(p);
+            let (_, seed) = des::solve_seed_bfs(p);
+            bf_expanded += bf.nodes_expanded;
+            seed_expanded += seed.nodes_expanded;
+            seed_pruned += seed.nodes_pruned;
+            if bf.nodes_expanded > seed.nodes_expanded {
+                violations += 1;
+            }
         }
-        let full = if k < 63 { (1u64 << k) as f64 } else { f64::INFINITY };
+        all_leq &= violations == 0;
+        let mut i = 0;
+        let bf_time = b
+            .bench(&format!("des-bf/corpus/K={k}"), || {
+                i = (i + 1) % problems.len();
+                black_box(solver.solve(&problems[i]))
+            })
+            .mean_s();
+        let mut j = 0;
+        let seed_time = b
+            .bench(&format!("des-seed/corpus/K={k}"), || {
+                j = (j + 1) % problems.len();
+                black_box(des::solve_seed_bfs(&problems[j]))
+            })
+            .mean_s();
         println!(
-            "K={k:>2}: expanded {:>9.1} nodes/instance (pruned {:>8.1}), vs 2^K = {:.1e}",
-            expanded as f64 / n as f64,
-            pruned as f64 / n as f64,
-            full
+            "K={k:>2}: bf {:>9.1} nodes/instance vs seed {:>9.1} (pruned {:>8.1}), \
+             {:>8.0} vs {:>8.0} ns/solve, node-count violations: {violations}",
+            bf_expanded as f64 / n as f64,
+            seed_expanded as f64 / n as f64,
+            seed_pruned as f64 / n as f64,
+            bf_time * 1e9,
+            seed_time * 1e9,
         );
+        corpus_rows.push(Json::obj(vec![
+            ("k", Json::Num(k as f64)),
+            ("instances", Json::Num(n as f64)),
+            ("bf_nodes_per_instance", Json::Num(bf_expanded as f64 / n as f64)),
+            ("seed_nodes_per_instance", Json::Num(seed_expanded as f64 / n as f64)),
+            ("bf_ns_per_solve", Json::Num(bf_time * 1e9)),
+            ("seed_ns_per_solve", Json::Num(seed_time * 1e9)),
+            ("node_count_violations", Json::Num(violations as f64)),
+        ]));
     }
+    println!(
+        "\nbest-first <= seed BFS node count on every corpus instance: {}",
+        if all_leq { "PASS" } else { "FAIL" }
+    );
 
-    std::fs::create_dir_all("reports").ok();
-    std::fs::write("reports/bench_des.json", b.to_json()).ok();
-    println!("\nwrote reports/bench_des.json");
+    let report = Json::obj(vec![
+        ("bench", Json::Str("des".to_string())),
+        ("bf_leq_seed_everywhere", Json::Bool(all_leq)),
+        ("corpus", Json::Arr(corpus_rows)),
+        (
+            "timings",
+            Json::parse(&b.to_json()).expect("bencher JSON parses"),
+        ),
+    ]);
+    std::fs::write("BENCH_des.json", report.to_string_pretty()).ok();
+    println!("wrote BENCH_des.json");
+
+    // The acceptance criterion is a hard gate, not a printout: a solver
+    // change that regresses node counts anywhere on the corpus must fail
+    // the bench run, not just flip a JSON flag.
+    if !all_leq {
+        eprintln!("FAIL: best-first expanded more nodes than seed BFS on some corpus instance");
+        std::process::exit(1);
+    }
 }

@@ -62,6 +62,24 @@ impl CellState {
     }
 }
 
+/// One cell's routing-relevant state, snapshotted at an event barrier.
+/// The router works off these views instead of `&Cell` so the fleet can
+/// keep cells behind per-lane locks (sequential and lane-parallel
+/// execution route from byte-identical inputs).
+#[derive(Debug, Clone, Copy)]
+pub struct LaneView {
+    /// Whether the router may send traffic here (warming or active).
+    pub accepting: bool,
+    /// Pending queries in the admission queue (the JSQ signal).
+    pub backlog: usize,
+    /// Simulated time the lane is busy until (JSQ tie-break).
+    pub busy_until: f64,
+    /// Mobility-driven path-loss scale of the cell's channel.
+    pub channel_scale: f64,
+    /// Size trigger of the cell's batch former.
+    pub batch_queries: usize,
+}
+
 /// Per-cell construction parameters (built by the fleet from its
 /// options).
 #[derive(Debug, Clone)]
@@ -179,6 +197,30 @@ impl Cell {
     /// Simulated time the lane is busy until.
     pub fn busy_until(&self) -> f64 {
         self.free_at
+    }
+
+    /// Whether [`Cell::advance`] to `t_s` would execute at least one
+    /// round — the fleet's lane executor only dispatches cells with real
+    /// work to the work-stealing team (a no-op advance is cheaper inline
+    /// than a task round-trip).
+    pub fn has_work_before(&self, t_s: f64) -> bool {
+        match self.queue.trigger_time_s() {
+            Some(trigger) => trigger.max(self.free_at) < t_s,
+            None => false,
+        }
+    }
+
+    /// Routing-relevant state snapshot (see [`LaneView`]): taken under
+    /// the cell's lock at a barrier, so the router reads a consistent
+    /// picture without holding any lane lock across the decision.
+    pub fn view(&self) -> LaneView {
+        LaneView {
+            accepting: self.accepting(),
+            backlog: self.backlog(),
+            busy_until: self.busy_until(),
+            channel_scale: self.channel_scale(),
+            batch_queries: self.batch_queries(),
+        }
     }
 
     /// Arrivals routed to this cell (admitted or shed on capacity).

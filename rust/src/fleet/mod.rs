@@ -12,7 +12,7 @@
 //! traffic ─► router (rr / jsq / channel-aware)      ├─► fleet report
 //!  (users)   └► cell N: queue ─► cached JESA rounds ┘
 //!               ▲ Gauss–Markov mobility: per-cell path loss + handover
-//!               ▲ one Arc'd SolutionCache (cross-cell hits)
+//!               ▲ one sharded SolutionCache (cross-cell hits)
 //! ```
 //!
 //! * [`handover`] — Gauss–Markov user mobility over a 2-D cell layout,
@@ -22,18 +22,53 @@
 //!   accounting and the warm/drain lifecycle.
 //! * [`router`] — dispatch policies: round-robin, join-shortest-queue,
 //!   and channel-aware (route to the cell with the best expected JESA
-//!   energy for the query's gate profile).
+//!   energy for the query's gate profile). The router reads per-cell
+//!   [`LaneView`] snapshots taken after every lane has advanced to the
+//!   arrival's timestamp, so its signals are exact in both execution
+//!   modes.
 //! * [`report`] — per-cell and fleet-level aggregation: throughput,
-//!   p50/p99 latency, shed and handover rates, load-imbalance indices.
+//!   p50/p99 latency, shed and handover rates, load-imbalance indices,
+//!   and a determinism [digest](FleetReport::digest).
+//!
+//! # Concurrency model
 //!
 //! [`FleetEngine::run`] drives one discrete-event simulation over a
-//! global arrival stream: every arrival advances mobility and all cells
-//! to its timestamp (so routing signals are exact), the router picks a
-//! cell, and the cell executes rounds exactly like the single engine —
-//! per-layer solves dispatched across the in-tree thread pool, solutions
-//! memoized in the shared cache. All cells use the fleet's solver seed
-//! and quantizer grids, so a canonical round solved in one cell hits
-//! from every other cell ([`CacheStats::cross_hits`]).
+//! global arrival stream. Three layers of execution, outermost first:
+//!
+//! 1. **Lanes on the work-stealing executor**
+//!    ([`util::executor`](crate::util::executor), enabled by
+//!    [`FleetOptions::lane_workers`] ≥ 2): whole cells execute their
+//!    rounds genuinely in parallel instead of interleaving on the event
+//!    loop. Routing decisions that don't depend on round execution
+//!    (round-robin with no scheduled drains) are precomputed in a cheap
+//!    prepass and each lane replays the full event schedule
+//!    independently — near-linear scaling. State-dependent policies
+//!    (JSQ / channel-aware) run the event loop in lockstep and dispatch
+//!    each event's *due* cells to the executor, so coincident rounds
+//!    still overlap.
+//! 2. **Per-layer solves on the thread pool**
+//!    ([`parallel_map`](crate::util::pool::parallel_map),
+//!    [`FleetOptions::workers`]): within one round, the L layer problems
+//!    are independent and solve concurrently — exactly as in the single
+//!    engine.
+//! 3. **The sharded solution cache**
+//!    ([`ShardedSolutionCache`](crate::serve::ShardedSolutionCache),
+//!    [`FleetOptions::cache_shards`]): lanes share one memo table split
+//!    over per-shard locks, so concurrent lookups only contend when
+//!    their keys collide in a shard.
+//!
+//! **Determinism contract:** the fleet *report* (completions, energies,
+//! per-cell accounting, handovers — everything in
+//! [`FleetReport::digest`]) is bit-identical between sequential
+//! (`lane_workers ≤ 1`) and lane-parallel runs, and across repeated runs
+//! of either. This holds because each cell's command sequence (scale
+//! updates, advances, pushes) is the same in every mode, per-cell RNG
+//! streams are independent, cells merge in index order, and cache hits
+//! are bit-identical to fresh solves by construction — so cache-op
+//! interleaving can only move the commutative hit/miss counters, never a
+//! served result. All cells use the fleet's solver seed and quantizer
+//! grids, so a canonical round solved in one cell hits from every other
+//! cell ([`CacheStats::cross_hits`]).
 //!
 //! [`ChannelModel`]: crate::channel::ChannelModel
 //! [`CacheStats::cross_hits`]: crate::serve::CacheStats
@@ -43,7 +78,7 @@ pub mod handover;
 pub mod report;
 pub mod router;
 
-pub use cell::{Cell, CellConfig, CellState};
+pub use cell::{Cell, CellConfig, CellState, LaneView};
 pub use handover::{CellLayout, Mobility, MobilityConfig};
 pub use report::{CellReport, FleetReport};
 pub use router::{RoutePolicy, Router};
@@ -53,12 +88,14 @@ use crate::energy::{EnergyBreakdown, EnergyModel};
 use crate::metrics::{Metrics, SelectionPattern};
 use crate::serve::engine::Completion;
 use crate::serve::{
-    derive_quantizer, estimate_round_latency_s, EvictionPolicy, QuantizerConfig, QueueConfig,
-    SharedSolutionCache, TrafficConfig, TrafficGenerator,
+    derive_quantizer, estimate_round_latency_s, Arrival, EvictionPolicy, QuantizerConfig,
+    QueueConfig, SharedSolutionCache, TrafficConfig, TrafficGenerator,
 };
+use crate::util::executor::{Executor, Task, TaskScope};
 use crate::util::pool::default_workers;
 use crate::util::rng::SplitMix64;
 use crate::SystemConfig;
+use std::sync::Mutex;
 use std::time::Instant;
 
 /// Fleet configuration beyond the per-cell system config.
@@ -76,6 +113,9 @@ pub struct FleetOptions {
     /// Eviction policy of the shared cache. Defaults to cost-aware so
     /// expensive branch-and-bound solves survive multi-cell pressure.
     pub cache_policy: EvictionPolicy,
+    /// Shard count of the shared cache (per-shard locks); 0 = auto (one
+    /// shard per cell, capped at 16).
+    pub cache_shards: usize,
     pub quant: QuantizerConfig,
     /// Derive the quantizer grids from observed channel/gate variance at
     /// run start (one derivation, shared by every cell so cache keys
@@ -83,6 +123,12 @@ pub struct FleetOptions {
     pub adapt_quant: bool,
     /// Worker threads for each round's per-layer solves.
     pub workers: usize,
+    /// Lane parallelism: total degree of concurrency of the
+    /// work-stealing round executor driving whole cells. `0` or `1`
+    /// runs the sequential interleaved event loop (the seed behavior);
+    /// `≥ 2` executes cells' rounds genuinely in parallel with a
+    /// bit-identical report (see the module docs' determinism contract).
+    pub lane_workers: usize,
     /// Fleet seed: the shared JESA/BCD solver seed, and the base of the
     /// per-cell channel seeds.
     pub seed: u64,
@@ -107,9 +153,11 @@ impl FleetOptions {
             queue,
             cache_capacity: 4096,
             cache_policy: EvictionPolicy::CostAware,
+            cache_shards: 0,
             quant: QuantizerConfig::default(),
             adapt_quant: false,
             workers: default_workers(),
+            lane_workers: 0,
             seed: 0xF1EE7,
             mobility: MobilityConfig::default(),
             spacing_m: 200.0,
@@ -118,6 +166,46 @@ impl FleetOptions {
             drain_at: Vec::new(),
         }
     }
+}
+
+/// Per-user session continuity accounting (attachment changes between a
+/// user's consecutive queries), shared by both execution modes.
+struct SessionTracker {
+    last_attach: Vec<Option<usize>>,
+    handovers: usize,
+    continued_sessions: usize,
+}
+
+impl SessionTracker {
+    fn new(users: usize) -> Self {
+        Self {
+            last_attach: vec![None; users],
+            handovers: 0,
+            continued_sessions: 0,
+        }
+    }
+
+    fn observe(&mut self, user: usize, attach: usize) {
+        if let Some(prev) = self.last_attach[user] {
+            self.continued_sessions += 1;
+            if prev != attach {
+                self.handovers += 1;
+            }
+        }
+        self.last_attach[user] = Some(attach);
+    }
+}
+
+/// One prerouted arrival of the lane-parallel fast path: the slim
+/// global event schedule every lane replays. The arrival payloads
+/// themselves are handed to their target lane once, by value (no
+/// cloning) — each lane owns its share.
+struct LaneEvent {
+    t: f64,
+    /// Index into the per-tick scale table.
+    tick: u32,
+    /// Destination cell.
+    target: u32,
 }
 
 /// The multi-cell serving engine.
@@ -158,6 +246,29 @@ impl FleetEngine {
         &self.opts
     }
 
+    /// Effective lane parallelism (capped at the cell count — a lane
+    /// task's unit of work is one whole cell).
+    fn effective_lanes(&self) -> usize {
+        self.opts.lane_workers.min(self.opts.cells)
+    }
+
+    /// Effective shard count of the shared cache.
+    fn effective_shards(&self) -> usize {
+        if self.opts.cache_shards > 0 {
+            self.opts.cache_shards
+        } else {
+            self.opts.cells.clamp(1, 16)
+        }
+    }
+
+    /// Whether routing is independent of round execution, making the
+    /// fully lane-parallel replay valid: round-robin dispatch with no
+    /// scheduled drains (a drain's `Drained` transition depends on queue
+    /// state, which depends on execution).
+    fn static_routing(&self) -> bool {
+        self.opts.route == RoutePolicy::RoundRobin && self.opts.drain_at.is_empty()
+    }
+
     /// Run one fleet simulation over a global traffic stream.
     pub fn run(&self, traffic: &TrafficConfig) -> FleetReport {
         let t0 = Instant::now();
@@ -182,10 +293,13 @@ impl FleetEngine {
             },
             &layout,
         );
-        let cache =
-            SharedSolutionCache::with_policy(self.opts.cache_capacity, self.opts.cache_policy);
+        let cache = SharedSolutionCache::with_shards(
+            self.opts.cache_capacity,
+            self.opts.cache_policy,
+            self.effective_shards(),
+        );
         let energy = EnergyModel::new(self.cfg.channel.clone(), self.cfg.energy.clone());
-        let mut cells: Vec<Cell> = (0..self.opts.cells)
+        let cells: Vec<Mutex<Cell>> = (0..self.opts.cells)
             .map(|c| {
                 let mut cell = Cell::new(
                     &self.cfg,
@@ -205,77 +319,55 @@ impl FleetEngine {
                     },
                 );
                 cell.warm(self.opts.warmup_rounds);
-                cell
+                Mutex::new(cell)
             })
             .collect();
         let mut router = Router::new(self.opts.route);
+        let mut sessions = SessionTracker::new(mobility.users());
 
-        let mut drains = self.opts.drain_at.clone();
-        drains.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("finite drain times"));
-        let mut next_drain = 0usize;
-
-        let users = mobility.users();
-        let mut last_attach: Vec<Option<usize>> = vec![None; users];
-        let mut handovers = 0usize;
-        let mut continued_sessions = 0usize;
-
-        // Per-cell radio scales are a function of user positions, which
-        // only change on whole mobility ticks — recompute them per tick,
-        // not per arrival.
-        let mut scales = mobility.cell_path_scales(&layout);
-        let mut scales_at_s = mobility.now_s();
-        for arrival in arrivals {
-            let t = arrival.at_s;
-            while next_drain < drains.len() && drains[next_drain].1 <= t {
-                cells[drains[next_drain].0].drain();
-                next_drain += 1;
-            }
-            // Advance the world to this arrival: mobility first, then
-            // every cell's radio regime and due rounds — so the router
-            // sees exact backlogs and current channel scales.
-            mobility.advance_to(t);
-            if mobility.now_s() != scales_at_s {
-                scales = mobility.cell_path_scales(&layout);
-                scales_at_s = mobility.now_s();
-            }
-            for (c, cell) in cells.iter_mut().enumerate() {
-                cell.set_path_scale(scales[c]);
-                cell.advance(t, &cache);
-            }
-            let user = user_of(arrival.query.id, users, self.opts.seed);
-            let target = router.route(
-                &arrival,
-                user,
-                &cells,
-                &mobility,
+        let lanes = self.effective_lanes();
+        if lanes >= 2 && self.static_routing() {
+            self.run_lanes(
+                arrivals,
+                &mut mobility,
                 &layout,
+                &cells,
+                &mut router,
+                &cache,
                 &energy,
-                &self.opts.policy,
+                lanes,
+                &mut sessions,
             );
-            let attach = mobility.nearest_cell(&layout, user);
-            if let Some(prev) = last_attach[user] {
-                continued_sessions += 1;
-                if prev != attach {
-                    handovers += 1;
-                }
-            }
-            last_attach[user] = Some(attach);
-            cells[target].push(arrival);
-        }
-        // Stream over: apply any drains still scheduled (the report
-        // should reflect the operator's intent even when the drain time
-        // falls past the last arrival), then fire the remaining
-        // (partial) batches everywhere.
-        while next_drain < drains.len() {
-            cells[drains[next_drain].0].drain();
-            next_drain += 1;
-        }
-        for (c, cell) in cells.iter_mut().enumerate() {
-            cell.set_path_scale(scales[c]);
-            cell.flush(&cache);
+        } else if lanes >= 2 {
+            let executor = Executor::new(lanes);
+            executor.scope(|scope| {
+                self.run_lockstep(
+                    arrivals,
+                    &mut mobility,
+                    &layout,
+                    &cells,
+                    &mut router,
+                    &cache,
+                    &energy,
+                    Some(scope),
+                    &mut sessions,
+                )
+            });
+        } else {
+            self.run_lockstep(
+                arrivals,
+                &mut mobility,
+                &layout,
+                &cells,
+                &mut router,
+                &cache,
+                &energy,
+                None,
+                &mut sessions,
+            );
         }
 
-        // Aggregate.
+        // Aggregate (deterministic merge order: ascending cell index).
         let mut completions: Vec<Completion> = Vec::new();
         let mut pattern = SelectionPattern::new(layers, k);
         let mut metrics = Metrics::new();
@@ -284,8 +376,10 @@ impl FleetEngine {
         let mut rounds = 0usize;
         let mut tokens = 0u64;
         let mut fallbacks = 0usize;
-        let cell_reports: Vec<CellReport> = cells.iter().map(|c| c.report()).collect();
-        for (cell, cr) in cells.iter().zip(cell_reports.iter()) {
+        let mut cell_reports: Vec<CellReport> = Vec::with_capacity(cells.len());
+        for slot in &cells {
+            let cell = slot.lock().unwrap();
+            let cr = cell.report();
             completions.extend_from_slice(cell.completions());
             pattern.merge(cell.pattern());
             metrics.merge(cell.metrics());
@@ -295,9 +389,10 @@ impl FleetEngine {
             rounds += cr.rounds;
             tokens += cr.tokens;
             fallbacks += cell.fallbacks();
+            cell_reports.push(cr);
         }
         let sim_end_s = completions.iter().map(|c| c.done_s).fold(0.0, f64::max);
-        metrics.inc("handovers", handovers as u64);
+        metrics.inc("handovers", sessions.handovers as u64);
 
         FleetReport {
             route: self.opts.route.label().to_string(),
@@ -308,8 +403,8 @@ impl FleetEngine {
             shed_deadline,
             rounds,
             tokens,
-            handovers,
-            continued_sessions,
+            handovers: sessions.handovers,
+            continued_sessions: sessions.continued_sessions,
             sim_end_s,
             wall_s: t0.elapsed().as_secs_f64(),
             energy: energy_total,
@@ -320,6 +415,276 @@ impl FleetEngine {
             pattern,
             metrics,
         }
+    }
+
+    /// One arrival's dispatch step, shared verbatim by both execution
+    /// paths (the router-cursor mutation and session accounting drive
+    /// the digest contract, so their ordering must not drift): pick the
+    /// user, route against the given views, record session continuity.
+    #[allow(clippy::too_many_arguments)]
+    fn route_arrival(
+        &self,
+        arrival: &Arrival,
+        users: usize,
+        views: &[LaneView],
+        mobility: &Mobility,
+        layout: &CellLayout,
+        router: &mut Router,
+        energy: &EnergyModel,
+        sessions: &mut SessionTracker,
+    ) -> usize {
+        let user = user_of(arrival.query.id, users, self.opts.seed);
+        let target = router.route(
+            arrival,
+            user,
+            views,
+            mobility,
+            layout,
+            energy,
+            &self.opts.policy,
+        );
+        sessions.observe(user, mobility.nearest_cell(layout, user));
+        target
+    }
+
+    /// The event loop both execution modes share for state-dependent
+    /// routing: every arrival advances mobility and all cells to its
+    /// timestamp (so routing signals are exact), the router picks a cell
+    /// from [`LaneView`] snapshots, and the cell executes rounds exactly
+    /// like the single engine. With `scope` present, cells that have
+    /// rounds due before the event run as tasks on the work-stealing
+    /// executor — coincident rounds overlap; everything else is
+    /// identical, so the report is bit-identical to the sequential run.
+    #[allow(clippy::too_many_arguments)]
+    fn run_lockstep<'env>(
+        &self,
+        arrivals: Vec<Arrival>,
+        mobility: &mut Mobility,
+        layout: &CellLayout,
+        cells: &'env [Mutex<Cell>],
+        router: &mut Router,
+        cache: &'env SharedSolutionCache,
+        energy: &EnergyModel,
+        scope: Option<&TaskScope<'_, 'env>>,
+        sessions: &mut SessionTracker,
+    ) {
+        let users = mobility.users();
+        let mut drains = self.opts.drain_at.clone();
+        drains.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("finite drain times"));
+        let mut next_drain = 0usize;
+
+        // Per-cell radio scales are a function of user positions, which
+        // only change on whole mobility ticks — recompute them per tick,
+        // not per arrival.
+        let mut scales = mobility.cell_path_scales(layout);
+        let mut scales_at_s = mobility.now_s();
+        // Hoisted event-loop scratch: reused every arrival so the hot
+        // loop allocates nothing at steady state.
+        let mut due: Vec<usize> = Vec::new();
+        let mut views: Vec<LaneView> = Vec::with_capacity(cells.len());
+        for arrival in arrivals {
+            let t = arrival.at_s;
+            while next_drain < drains.len() && drains[next_drain].1 <= t {
+                cells[drains[next_drain].0].lock().unwrap().drain();
+                next_drain += 1;
+            }
+            // Advance the world to this arrival: mobility first, then
+            // every cell's radio regime and due rounds — so the router
+            // sees exact backlogs and current channel scales.
+            if let Some(fresh) = advance_world(mobility, layout, t, &mut scales_at_s) {
+                scales = fresh;
+            }
+            match scope {
+                Some(task_scope) => {
+                    // Partition: cells with due rounds go to the
+                    // executor; the rest advance inline (their advance is
+                    // a queue-state no-op, cheaper than a task) and their
+                    // view is already final — snapshot it in this pass.
+                    due.clear();
+                    views.clear();
+                    for (c, slot) in cells.iter().enumerate() {
+                        let mut cell = slot.lock().unwrap();
+                        cell.set_path_scale(scales[c]);
+                        if cell.has_work_before(t) {
+                            due.push(c);
+                        } else {
+                            cell.advance(t, cache);
+                        }
+                        views.push(cell.view());
+                    }
+                    if due.len() <= 1 {
+                        for &c in &due {
+                            cells[c].lock().unwrap().advance(t, cache);
+                        }
+                    } else {
+                        let tasks: Vec<Task<'env>> = due
+                            .iter()
+                            .map(|&c| {
+                                let slot = &cells[c];
+                                Box::new(move || {
+                                    slot.lock().unwrap().advance(t, cache);
+                                }) as Task<'env>
+                            })
+                            .collect();
+                        task_scope.run_batch(tasks);
+                    }
+                    // Only the cells that executed rounds have a stale
+                    // snapshot; refresh exactly those after the barrier.
+                    for &c in &due {
+                        views[c] = cells[c].lock().unwrap().view();
+                    }
+                }
+                None => {
+                    views.clear();
+                    for (c, slot) in cells.iter().enumerate() {
+                        let mut cell = slot.lock().unwrap();
+                        cell.set_path_scale(scales[c]);
+                        cell.advance(t, cache);
+                        views.push(cell.view());
+                    }
+                }
+            }
+            let target = self.route_arrival(
+                &arrival, users, &views, mobility, layout, router, energy, sessions,
+            );
+            cells[target].lock().unwrap().push(arrival);
+        }
+        // Stream over: apply any drains still scheduled (the report
+        // should reflect the operator's intent even when the drain time
+        // falls past the last arrival), then fire the remaining
+        // (partial) batches everywhere.
+        while next_drain < drains.len() {
+            cells[drains[next_drain].0].lock().unwrap().drain();
+            next_drain += 1;
+        }
+        for (c, slot) in cells.iter().enumerate() {
+            let mut cell = slot.lock().unwrap();
+            cell.set_path_scale(scales[c]);
+            cell.flush(cache);
+        }
+    }
+
+    /// The fully lane-parallel fast path for execution-independent
+    /// routing: a cheap prepass computes mobility, per-tick channel
+    /// scales, dispatch targets and handover accounting (none of which
+    /// depend on round execution under round-robin with no drains), then
+    /// every cell replays the global event schedule as one coarse task
+    /// on the work-stealing executor — issuing itself exactly the
+    /// (scale, advance, push) sequence the interleaved loop would, so
+    /// per-cell results are bit-identical while lanes run concurrently.
+    #[allow(clippy::too_many_arguments)]
+    fn run_lanes(
+        &self,
+        arrivals: Vec<Arrival>,
+        mobility: &mut Mobility,
+        layout: &CellLayout,
+        cells: &[Mutex<Cell>],
+        router: &mut Router,
+        cache: &SharedSolutionCache,
+        energy: &EnergyModel,
+        lanes: usize,
+        sessions: &mut SessionTracker,
+    ) {
+        debug_assert!(self.static_routing());
+        let users = mobility.users();
+        let n_cells = cells.len();
+
+        // Routing prepass. Static views: with no drains every cell stays
+        // accepting, and round-robin reads nothing else.
+        let static_views: Vec<LaneView> = (0..n_cells)
+            .map(|_| LaneView {
+                accepting: true,
+                backlog: 0,
+                busy_until: 0.0,
+                channel_scale: 1.0,
+                batch_queries: self.opts.queue.batch_queries,
+            })
+            .collect();
+        let mut ticks: Vec<Vec<f64>> = vec![mobility.cell_path_scales(layout)];
+        let mut scales_at_s = mobility.now_s();
+        let mut events: Vec<LaneEvent> = Vec::with_capacity(arrivals.len());
+        let mut per_cell: Vec<std::collections::VecDeque<Arrival>> =
+            (0..n_cells).map(|_| std::collections::VecDeque::new()).collect();
+        for arrival in arrivals {
+            let t = arrival.at_s;
+            if let Some(fresh) = advance_world(mobility, layout, t, &mut scales_at_s) {
+                ticks.push(fresh);
+            }
+            let target = self.route_arrival(
+                &arrival,
+                users,
+                &static_views,
+                mobility,
+                layout,
+                router,
+                energy,
+                sessions,
+            );
+            events.push(LaneEvent {
+                t,
+                tick: (ticks.len() - 1) as u32,
+                target: target as u32,
+            });
+            per_cell[target].push_back(arrival);
+        }
+
+        // Lane replay: one coarse task per cell, stolen across the
+        // worker team as lanes finish unevenly. Each task owns its
+        // cell's arrival share outright (moved in, consumed in order).
+        let executor = Executor::new(lanes);
+        let events = &events;
+        let ticks = &ticks;
+        executor.scope(|scope| {
+            let tasks: Vec<Task<'_>> = per_cell
+                .drain(..)
+                .enumerate()
+                .map(|(c, mut mine)| {
+                    let slot = &cells[c];
+                    Box::new(move || {
+                        let mut cell = slot.lock().unwrap();
+                        let mut tick = u32::MAX;
+                        for ev in events {
+                            if ev.tick != tick {
+                                tick = ev.tick;
+                                cell.set_path_scale(ticks[tick as usize][c]);
+                            }
+                            cell.advance(ev.t, cache);
+                            if ev.target as usize == c {
+                                let arrival = mine
+                                    .pop_front()
+                                    .expect("prepass queued one arrival per own event");
+                                cell.push(arrival);
+                            }
+                        }
+                        let last = ticks.last().expect("tick table starts non-empty");
+                        cell.set_path_scale(last[c]);
+                        cell.flush(cache);
+                    }) as Task<'_>
+                })
+                .collect();
+            scope.run_batch(tasks);
+        });
+    }
+}
+
+/// Advance mobility to one arrival's timestamp and report fresh
+/// per-cell path scales when (and only when) a mobility tick elapsed.
+/// Both execution paths — the lockstep loop and the lane-replay
+/// prepass — go through this single helper, so the scale-refresh
+/// condition that the bit-identity contract depends on cannot drift
+/// between them.
+fn advance_world(
+    mobility: &mut Mobility,
+    layout: &CellLayout,
+    t: f64,
+    scales_at_s: &mut f64,
+) -> Option<Vec<f64>> {
+    mobility.advance_to(t);
+    if mobility.now_s() != *scales_at_s {
+        *scales_at_s = mobility.now_s();
+        Some(mobility.cell_path_scales(layout))
+    } else {
+        None
     }
 }
 

@@ -5,6 +5,7 @@ use crate::energy::EnergyBreakdown;
 use crate::metrics::{Metrics, SelectionPattern};
 use crate::serve::engine::Completion;
 use crate::serve::CacheStats;
+use crate::util::hash::Fnv1a;
 use crate::util::stats;
 
 /// One cell's accounting snapshot.
@@ -159,6 +160,51 @@ impl FleetReport {
         }
     }
 
+    /// FNV-1a digest over every *deterministic* field of the report:
+    /// counts, per-cell accounting, energies and the full completion
+    /// timeline (bit patterns, not rounded values). Cache hit counters
+    /// are deliberately excluded — concurrent lanes may race a fresh key
+    /// (two bit-identical solves instead of one solve + one hit), which
+    /// moves the commutative hit/miss split without changing any served
+    /// result. `ci.sh` compares this digest between a sequential and a
+    /// lane-parallel run of the same fleet as the determinism gate.
+    pub fn digest(&self) -> u64 {
+        let mut h = Fnv1a::new();
+        h.write_u64(self.generated as u64);
+        h.write_u64(self.completed as u64);
+        h.write_u64(self.shed_queue_full as u64);
+        h.write_u64(self.shed_deadline as u64);
+        h.write_u64(self.rounds as u64);
+        h.write_u64(self.tokens);
+        h.write_u64(self.handovers as u64);
+        h.write_u64(self.continued_sessions as u64);
+        h.write_u64(self.sim_end_s.to_bits());
+        h.write_u64(self.energy.comm_j.to_bits());
+        h.write_u64(self.energy.comp_j.to_bits());
+        h.write_u64(self.fallbacks as u64);
+        for c in &self.cells {
+            h.write_u64(c.id as u64);
+            h.write_u64(c.routed as u64);
+            h.write_u64(c.completed as u64);
+            h.write_u64(c.shed_queue_full as u64);
+            h.write_u64(c.shed_deadline as u64);
+            h.write_u64(c.rounds as u64);
+            h.write_u64(c.tokens);
+            h.write_u64(c.energy.comm_j.to_bits());
+            h.write_u64(c.energy.comp_j.to_bits());
+            h.write_u64(c.latency_p50_s.to_bits());
+            h.write_u64(c.latency_p99_s.to_bits());
+            h.write_u64(c.path_scale.to_bits());
+        }
+        for c in &self.completions {
+            h.write_u64(c.id);
+            h.write_u64(c.arrival_s.to_bits());
+            h.write_u64(c.start_s.to_bits());
+            h.write_u64(c.done_s.to_bits());
+        }
+        h.finish()
+    }
+
     /// Human-readable summary (the `dmoe fleet` output).
     pub fn render(&self) -> String {
         let mut out = String::new();
@@ -218,6 +264,7 @@ impl FleetReport {
             self.energy_per_query_j(),
             self.fallbacks,
         ));
+        out.push_str(&format!("report digest 0x{:016x}\n", self.digest()));
         out.push_str("cell  state     routed  done    shed  rounds  hits   p50 s   p99 s  energy J  scale\n");
         for c in &self.cells {
             out.push_str(&format!(

@@ -18,7 +18,7 @@
 //!   hotspot. Mirrors the channel-aware gating line of work (Song et al.,
 //!   arXiv:2504.00819) at the fleet level.
 
-use super::cell::Cell;
+use super::cell::LaneView;
 use super::handover::{CellLayout, Mobility};
 use crate::coordinator::ServePolicy;
 use crate::energy::EnergyModel;
@@ -68,16 +68,17 @@ impl Router {
         self.policy
     }
 
-    /// Pick the serving cell for one arrival. Deterministic: every tie
-    /// breaks toward the lower cell index. When every cell is draining,
-    /// falls back to the full fleet (the backlog still gets served; a
-    /// fully drained fleet is an operator error we degrade gracefully
-    /// on).
+    /// Pick the serving cell for one arrival, from per-cell
+    /// [`LaneView`] snapshots taken after every lane advanced to the
+    /// arrival's timestamp. Deterministic: every tie breaks toward the
+    /// lower cell index. When every cell is draining, falls back to the
+    /// full fleet (the backlog still gets served; a fully drained fleet
+    /// is an operator error we degrade gracefully on).
     pub fn route(
         &mut self,
         arrival: &Arrival,
         user: usize,
-        cells: &[Cell],
+        cells: &[LaneView],
         mobility: &Mobility,
         layout: &CellLayout,
         energy: &EnergyModel,
@@ -86,7 +87,7 @@ impl Router {
         let mut pool: Vec<usize> = cells
             .iter()
             .enumerate()
-            .filter(|(_, c)| c.accepting())
+            .filter(|(_, c)| c.accepting)
             .map(|(i, _)| i)
             .collect();
         if pool.is_empty() {
@@ -101,9 +102,9 @@ impl Router {
             RoutePolicy::JoinShortestQueue => {
                 let mut best = pool[0];
                 for &c in &pool[1..] {
-                    let better = cells[c].backlog() < cells[best].backlog()
-                        || (cells[c].backlog() == cells[best].backlog()
-                            && cells[c].busy_until() < cells[best].busy_until());
+                    let better = cells[c].backlog < cells[best].backlog
+                        || (cells[c].backlog == cells[best].backlog
+                            && cells[c].busy_until < cells[best].busy_until);
                     if better {
                         best = c;
                     }
@@ -171,7 +172,7 @@ fn expected_fanout(arrival: &Arrival, policy: &ServePolicy) -> f64 {
 /// mobility-driven scale. Constant factors cancel across cells — only
 /// the radio quality moves the argmin.
 fn comm_proxy(
-    cell: &Cell,
+    cell: &LaneView,
     user: usize,
     cell_idx: usize,
     mobility: &Mobility,
@@ -179,7 +180,7 @@ fn comm_proxy(
     energy: &EnergyModel,
 ) -> f64 {
     let att = mobility.attenuation(layout, user, cell_idx);
-    let scale = 0.5 * (att + cell.channel_scale());
+    let scale = 0.5 * (att + cell.channel_scale);
     let gain = energy.channel.path_loss * scale;
     let n0 = energy.channel.n0_w();
     let rbar = energy.channel.b0_hz * (1.0 + gain * energy.channel.p0_w / n0).log2();
@@ -189,6 +190,6 @@ fn comm_proxy(
 /// Soft backlog penalty: radio quality leads the decision; the queue
 /// term only breaks sustained pile-ups (four pending batches double the
 /// score), so good radio does not collapse into a hotspot.
-fn load_factor(cell: &Cell) -> f64 {
-    1.0 + 0.25 * cell.backlog() as f64 / cell.batch_queries().max(1) as f64
+fn load_factor(cell: &LaneView) -> f64 {
+    1.0 + 0.25 * cell.backlog as f64 / cell.batch_queries.max(1) as f64
 }

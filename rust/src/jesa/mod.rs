@@ -137,6 +137,12 @@ pub fn solve_round(
     // -- Initialization: random exclusive subcarrier assignment ----------
     let mut link_rates = random_initial_rates(state, &mut rng);
 
+    // One reusable branch-and-bound scratch for every DES instance of the
+    // round (K sources × tokens × BCD iterations): the solver's arena and
+    // frontier are allocated once here and reused, keeping the selection
+    // hot path free of steady-state allocation.
+    let mut des_solver = des::DesSolver::new();
+
     let mut prev_selections: Option<Vec<Vec<Vec<usize>>>> = None;
     let mut prev_alloc_sig: Option<Vec<(usize, usize, usize)>> = None;
     let mut selections: Vec<Vec<Selection>> = Vec::new();
@@ -159,52 +165,50 @@ pub fn solve_round(
         fallbacks = 0;
 
         // -- Block 1: expert selection given rates (P2 → P1) -------------
-        selections = (0..k)
-            .map(|i| {
-                problem.gates[i]
-                    .iter()
-                    .map(|g| {
-                        let costs: Vec<f64> = (0..k)
-                            .map(|j| {
-                                if opts.is_offline(j) {
-                                    f64::INFINITY
-                                } else {
-                                    cost_of_link(energy, i, j, link_rates[i][j])
-                                }
-                            })
-                            .collect();
-                        let inst = SelectionProblem::new(
-                            g.as_slice().to_vec(),
-                            costs,
-                            problem.threshold,
-                            problem.max_active,
-                        );
-                        let sel = match opts.policy {
-                            SelectionPolicy::Des => {
-                                let (s, st) = des::solve(&inst);
-                                des_stats.nodes_expanded += st.nodes_expanded;
-                                des_stats.nodes_pruned += st.nodes_pruned;
-                                des_stats.nodes_infeasible += st.nodes_infeasible;
-                                s
-                            }
-                            SelectionPolicy::TopK(kk) => topk::solve(&inst, kk),
-                            SelectionPolicy::Greedy => greedy::solve(&inst),
-                            SelectionPolicy::Forced(j) => {
-                                // An offline forced target degrades to
-                                // in-situ processing, flagged as fallback.
-                                let offline = opts.is_offline(j);
-                                let target = if offline { i } else { j };
-                                Selection::from_indices(&inst, vec![target], offline)
-                            }
-                        };
-                        if sel.fallback {
-                            fallbacks += 1;
+        selections = Vec::with_capacity(k);
+        for i in 0..k {
+            let mut row = Vec::with_capacity(problem.gates[i].len());
+            for g in &problem.gates[i] {
+                let costs: Vec<f64> = (0..k)
+                    .map(|j| {
+                        if opts.is_offline(j) {
+                            f64::INFINITY
+                        } else {
+                            cost_of_link(energy, i, j, link_rates[i][j])
                         }
-                        sel
                     })
-                    .collect()
-            })
-            .collect();
+                    .collect();
+                let inst = SelectionProblem::new(
+                    g.as_slice().to_vec(),
+                    costs,
+                    problem.threshold,
+                    problem.max_active,
+                );
+                let sel = match opts.policy {
+                    SelectionPolicy::Des => {
+                        let (s, st) = des_solver.solve(&inst);
+                        des_stats.nodes_expanded += st.nodes_expanded;
+                        des_stats.nodes_pruned += st.nodes_pruned;
+                        des_stats.nodes_infeasible += st.nodes_infeasible;
+                        s
+                    }
+                    SelectionPolicy::TopK(kk) => topk::solve(&inst, kk),
+                    SelectionPolicy::Greedy => greedy::solve(&inst),
+                    SelectionPolicy::Forced(j) => {
+                        // An offline forced target degrades to
+                        // in-situ processing, flagged as fallback.
+                        let offline = opts.is_offline(j);
+                        let target = if offline { i } else { j };
+                        Selection::from_indices(&inst, vec![target], offline)
+                    }
+                };
+                if sel.fallback {
+                    fallbacks += 1;
+                }
+                row.push(sel);
+            }
+            selections.push(row);
+        }
 
         // -- Block 2: subcarrier allocation given payloads (P2 → P3) -----
         let payloads = payload_matrix(k, &selections, energy.energy.s0_bytes);

@@ -14,8 +14,11 @@
 //!   QoS constraint C1.
 //! * [`selection`] — the paper's core contribution: the optimal **DES**
 //!   branch-and-bound expert-selection algorithm (Alg. 1) with the
-//!   LP-relaxation bounding criterion, together with every baseline the
-//!   evaluation compares against (Top-k, exhaustive oracle, greedy).
+//!   LP-relaxation bounding criterion, served by a zero-steady-state-
+//!   allocation solver (reusable node arena + best-first frontier with a
+//!   greedy warm start — `DesSolver`), together with every baseline the
+//!   evaluation compares against (Top-k, exhaustive oracle, greedy, and
+//!   the retained seed BFS as the regression oracle).
 //! * [`assignment`] — Kuhn–Munkres (Hungarian) solver for the optimal
 //!   subcarrier allocation subproblem P3(a).
 //! * [`jesa`] — the **JESA** block-coordinate-descent joint optimizer
@@ -34,8 +37,10 @@
 //!   each with its own correlated-fading channel and admission queue,
 //!   behind a user router (round-robin / join-shortest-queue /
 //!   channel-aware), with Gauss–Markov user mobility driving per-cell
-//!   path loss and mid-session handover, and one shared solution cache
-//!   (cross-cell hits).
+//!   path loss and mid-session handover, and one shared sharded solution
+//!   cache (cross-cell hits). Cells execute lane-parallel on the
+//!   work-stealing executor with a bit-identical report (see the fleet
+//!   module's concurrency model / determinism contract).
 //! * [`runtime`] — AOT bridge: loads `artifacts/*.hlo.txt` produced by
 //!   the build-time JAX/Pallas pipeline and executes them on the PJRT CPU
 //!   client. Python is never on the request path.
@@ -45,8 +50,8 @@
 //! * [`bench_harness`] — drivers that regenerate every table and figure
 //!   of the paper's evaluation section.
 //! * [`util`] — in-tree substrates (PRNG, JSON, CLI, bench harness,
-//!   thread pool, error/context) — the environment vendors no ecosystem
-//!   crates.
+//!   thread pool, work-stealing executor, error/context) — the
+//!   environment vendors no ecosystem crates.
 
 pub mod assignment;
 pub mod bench_harness;

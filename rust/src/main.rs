@@ -360,6 +360,9 @@ fn fleet(args: &Args) -> Result<()> {
         None => dmoe::bail!("unknown --route {route_spec} (rr|jsq|channel)"),
     };
     let cells = args.get_usize("cells", 2);
+    if cells == 0 {
+        dmoe::bail!("--cells expects at least one cell");
+    }
     let mut traffic = traffic_from_args(args, &cfg, 8_000);
 
     // Validate the numeric radio/mobility flags up front so bad input
@@ -404,9 +407,26 @@ fn fleet(args: &Args) -> Result<()> {
     let fixed_quant = fixed_quant_requested(args);
     let mut fopts = FleetOptions::new(cells, route, policy, queue);
     fopts.cache_capacity = args.get_usize("cache", 4096);
+    fopts.cache_shards = args.get_usize("cache-shards", 0);
     fopts.quant = quant_from_args(args);
     fopts.adapt_quant = !fixed_quant;
-    fopts.workers = args.get_usize("workers", dmoe::util::pool::default_workers());
+    // Lane-parallel by default: cells execute on the work-stealing
+    // executor (reports are bit-identical to the sequential loop — see
+    // the fleet module's determinism contract). `--lane-workers 0` pins
+    // the sequential interleaved event loop.
+    let cores = dmoe::util::pool::default_workers();
+    fopts.lane_workers = args.get_usize("lane-workers", cores.min(cells));
+    // The two parallelism layers share one core budget: with N lanes
+    // live (the engine caps lanes at the cell count), the default
+    // per-layer solve pool narrows to cores/N so the lane speedup is
+    // not eaten by oversubscription (pin with --workers).
+    let live_lanes = fopts.lane_workers.min(cells);
+    let layer_default = if live_lanes >= 2 {
+        (cores / live_lanes).max(1)
+    } else {
+        cores
+    };
+    fopts.workers = args.get_usize("workers", layer_default);
     fopts.seed = cfg.workload.seed ^ 0xF1EE7;
     fopts.mobility = mobility;
     fopts.spacing_m = spacing;
@@ -417,13 +437,19 @@ fn fleet(args: &Args) -> Result<()> {
             Ok(c) => dmoe::bail!("--drain-cell {c} out of range (fleet has {cells} cells)"),
             Err(_) => dmoe::bail!("--drain-cell expects a cell index, got '{cell}'"),
         };
+        if args.get("drain-at").is_none() {
+            // Defaulting to t=0 would silently drain the cell before it
+            // serves anything — almost never the intent of a mid-run
+            // drain experiment.
+            dmoe::bail!("--drain-cell requires --drain-at S (when should cell {cell} drain?)");
+        }
         fopts.drain_at.push((cell, drain_at_s));
     }
 
     println!(
         "fleet engine: {cells} cells x K={k} L={layers} policy {} route {} | process {} \
          rate {:.2} q/s (fleet capacity ≈ {:.2} q/s, cell round ≈ {:.3} s, mobility scale \
-         ≈ {:.2}, {} quantization)\n",
+         ≈ {:.2}, {} quantization, {} lane workers)\n",
         fopts.policy.label,
         route.label(),
         traffic.process.label(),
@@ -432,6 +458,7 @@ fn fleet(args: &Args) -> Result<()> {
         round_s,
         scale,
         if fixed_quant { "fixed" } else { "adaptive" },
+        fopts.lane_workers,
     );
 
     let engine = FleetEngine::new(&cfg, fopts);
@@ -492,9 +519,12 @@ USAGE: dmoe <subcommand> [--flags]
              quantization is workload-adaptive; pin with --fixed-quant or
              explicit --step OCTAVES / --gate-grid N
   fleet      multi-cell sharded serving (N serve lanes + user router +
-             Gauss-Markov mobility/handover + shared solution cache)
+             Gauss-Markov mobility/handover + sharded solution cache;
+             cells run lane-parallel on a work-stealing executor with a
+             bit-identical report — --lane-workers 0 for sequential)
              --cells N --route rr|jsq|channel --users N --speed MPS
              --spacing M --rho X --drain-cell I --drain-at S
+             --lane-workers N --cache-shards N
              (+ every serve flag above)
   eval       serve every eval set with a policy (--policy jesa|topk|homogeneous)
   info       artifact / model / config summary

@@ -4,9 +4,38 @@
 //! level `j` decides whether expert `j` (in descending `e_j/t_j` order) is
 //! *excluded* (left child — score and energy drop) or *included* (right
 //! child — unchanged, since the root starts from the all-included state).
-//! BFS explores the tree; the LP-relaxation bound
+//! The LP-relaxation bound
 //! ([`lp_lower_bound`](super::bound::lp_lower_bound)) prunes nodes whose
 //! best possible completion cannot beat the incumbent.
+//!
+//! # Hot-path solver: warm-started best-first search
+//!
+//! [`DesSolver`] is the production solver, built for the serving hot path
+//! (one instance per (source, token) per layer per BCD iteration):
+//!
+//! * **Zero steady-state allocation.** The sorted instance buffers, the
+//!   node arena and the frontier heap are all owned by the solver and
+//!   reused across solves — capacity is retained, so after warmup a solve
+//!   allocates nothing but its output `Selection`. (The seed
+//!   implementation, kept as [`solve_seed_bfs`], rebuilt a
+//!   `VecDeque<Node>` and three `Vec`s per call.)
+//! * **Best-first expansion.** The frontier is a binary heap ordered by
+//!   the LP bound (ties broken by insertion order), so the search always
+//!   expands the most promising subtree. Bounds are monotone
+//!   non-decreasing along tree edges, so the first popped node whose
+//!   bound cannot beat the incumbent proves the whole remaining frontier
+//!   prunable and the search stops.
+//! * **Greedy warm start.** A feasible incumbent is computed up front by
+//!   greedy ratio exclusion (+ width repair) over the sorted instance, so
+//!   the bound prunes from node one instead of only after BFS stumbles
+//!   onto the first complete candidate.
+//!
+//! The optimum returned is identical to the seed BFS (both apply the same
+//! `QOS_EPS`-slack pruning rule; exact-cost ties between distinct optima
+//! have measure zero for continuous costs), while the warm start and
+//! best-first order mean the solver never has to expand more nodes than
+//! the seed — `benches/des.rs` and the tests below check both properties
+//! instance by instance.
 //!
 //! Differences from the paper's pseudocode (which has typos — `w` vs `t`,
 //! `s` vs `t` in the bound function) are purely editorial; the semantics
@@ -16,7 +45,7 @@
 
 use super::bound::lp_lower_bound;
 use super::{fallback_top_d, Selection, SelectionProblem, QOS_EPS};
-use std::collections::VecDeque;
+use std::collections::{BinaryHeap, VecDeque};
 
 /// Search statistics (used by the complexity benches and EXPERIMENTS.md).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -30,7 +59,7 @@ pub struct DesStats {
     pub nodes_infeasible: u64,
 }
 
-/// A BFS node: `next` is the tree level (index into the sorted order);
+/// A search node: `next` is the tree level (index into the sorted order);
 /// `score`/`energy` are the totals over all non-excluded experts;
 /// `included` counts decided-included experts.
 #[derive(Debug, Clone, Copy)]
@@ -43,11 +72,281 @@ struct Node {
     excluded_mask: u64,
 }
 
-/// Solve P1(a) exactly. Returns the optimal selection and search stats.
-///
-/// Remark 2: when no ≤D subset meets C1, the Top-D fallback selection is
-/// returned with `fallback = true`.
+/// One frontier slot: the arena index of a live node, ordered so the
+/// `BinaryHeap` (a max-heap) pops the *smallest* LP bound first, ties
+/// broken by insertion order (smallest arena index first).
+#[derive(Debug, Clone, Copy)]
+struct FrontierEntry {
+    bound: f64,
+    seq: u32,
+}
+
+impl PartialEq for FrontierEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for FrontierEntry {}
+impl PartialOrd for FrontierEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for FrontierEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed on both fields: the max-heap then yields the minimum
+        // bound, and among equal bounds the earliest-pushed node.
+        other
+            .bound
+            .total_cmp(&self.bound)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Reusable branch-and-bound scratch state. Construct once per worker /
+/// round and call [`DesSolver::solve`] per instance; all internal buffers
+/// (sorted order, score/cost vectors, node arena, frontier heap) retain
+/// their capacity across solves.
+#[derive(Debug, Default)]
+pub struct DesSolver {
+    order: Vec<usize>,
+    scores: Vec<f64>,
+    costs: Vec<f64>,
+    arena: Vec<Node>,
+    frontier: BinaryHeap<FrontierEntry>,
+}
+
+impl DesSolver {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Solve P1(a) exactly. Returns the optimal selection and search
+    /// stats.
+    ///
+    /// Remark 2: when no ≤D subset meets C1, the Top-D fallback selection
+    /// is returned with `fallback = true`.
+    pub fn solve(&mut self, problem: &SelectionProblem) -> (Selection, DesStats) {
+        let k = problem.experts();
+        assert!(k <= 64, "DES bitmask supports up to 64 experts (got {k})");
+        let mut stats = DesStats::default();
+
+        if !problem.has_feasible_solution() {
+            return (fallback_top_d(problem), stats);
+        }
+
+        // Sort experts by descending energy-to-score ratio into the
+        // reused buffers. Infinite-cost experts sort strictly first
+        // (ahead of any finite-cost expert whose zero score also yields
+        // an infinite ratio) and are force-excluded below.
+        self.order.clear();
+        self.order.extend(0..k);
+        {
+            let scores = &problem.scores;
+            let costs = &problem.costs;
+            self.order.sort_by(|&a, &b| sort_key(scores, costs, a, b));
+        }
+        self.scores.clear();
+        self.scores
+            .extend(self.order.iter().map(|&j| problem.scores[j]));
+        self.costs.clear();
+        self.costs
+            .extend(self.order.iter().map(|&j| problem.costs[j]));
+
+        // Force-exclude unreachable experts: they cannot appear in any
+        // finite-cost solution. (Feasibility over the reachable set was
+        // already established above.)
+        let mut forced_mask = 0u64;
+        let mut root_score: f64 = self.scores.iter().sum();
+        let mut root_energy = 0.0;
+        let mut first_free = 0usize;
+        for (s, &c) in self.costs.iter().enumerate() {
+            if c.is_finite() {
+                root_energy += c;
+            } else {
+                debug_assert_eq!(s, first_free, "infinite costs must sort first");
+                forced_mask |= 1 << s;
+                root_score -= self.scores[s];
+                first_free = s + 1;
+            }
+        }
+        let threshold = problem.threshold;
+
+        let mut best_energy = f64::INFINITY;
+        let mut best_mask = forced_mask;
+        let mut best_found = false;
+
+        // Greedy warm start (ratio exclusion + width repair over the
+        // sorted instance): any feasible incumbent lets the bound prune
+        // from the very first popped node. Energy is accumulated by
+        // subtracting excluded costs in ascending sorted index — the
+        // exact float sequence a search path to the same mask produces —
+        // so the incumbent never spuriously beats its own node.
+        {
+            let mut mask = forced_mask;
+            let mut score = root_score;
+            for j in first_free..k {
+                if score - self.scores[j] >= threshold - QOS_EPS {
+                    mask |= 1 << j;
+                    score -= self.scores[j];
+                }
+            }
+            let mut width = k - mask.count_ones() as usize;
+            let mut j = first_free;
+            while width > problem.max_active && j < k {
+                if mask & (1 << j) == 0 {
+                    mask |= 1 << j;
+                    score -= self.scores[j];
+                    width -= 1;
+                }
+                j += 1;
+            }
+            if width <= problem.max_active && score >= threshold - QOS_EPS {
+                let mut energy = root_energy;
+                for j in first_free..k {
+                    if mask & (1 << j) != 0 {
+                        energy -= self.costs[j];
+                    }
+                }
+                best_energy = energy;
+                best_mask = mask;
+                best_found = true;
+            }
+        }
+
+        // Best-first search over the reused arena + frontier.
+        self.arena.clear();
+        self.frontier.clear();
+        let root = Node {
+            next: first_free,
+            score: root_score,
+            energy: root_energy,
+            included: 0,
+            excluded_mask: forced_mask,
+        };
+        let root_bound = lp_lower_bound(
+            root.next,
+            root.score,
+            root.energy,
+            &self.scores,
+            &self.costs,
+            threshold,
+        );
+        self.arena.push(root);
+        self.frontier.push(FrontierEntry {
+            bound: root_bound,
+            seq: 0,
+        });
+
+        while let Some(entry) = self.frontier.pop() {
+            if best_found && entry.bound >= best_energy - QOS_EPS {
+                // Heap order: every remaining frontier node's bound is at
+                // least this one's — the whole frontier is prunable.
+                stats.nodes_pruned += 1 + self.frontier.len() as u64;
+                break;
+            }
+            let node = self.arena[entry.seq as usize];
+            stats.nodes_expanded += 1;
+
+            // A node is a complete candidate ("include everything
+            // undecided") iff the implied width fits C2.
+            let implied_width = k - node.excluded_mask.count_ones() as usize;
+            if node.score >= threshold - QOS_EPS
+                && implied_width <= problem.max_active
+                && node.energy < best_energy
+            {
+                best_energy = node.energy;
+                best_mask = node.excluded_mask;
+                best_found = true;
+            }
+            if node.next >= k {
+                continue;
+            }
+
+            let j = node.next;
+            // Left child: exclude expert j.
+            let left = Node {
+                next: j + 1,
+                score: node.score - self.scores[j],
+                energy: node.energy - self.costs[j],
+                included: node.included,
+                excluded_mask: node.excluded_mask | (1 << j),
+            };
+            self.push_child(left, threshold, best_found, best_energy, &mut stats);
+            // Right child: include expert j — only if C2 can still hold.
+            if node.included + 1 <= problem.max_active {
+                let right = Node {
+                    next: j + 1,
+                    score: node.score,
+                    energy: node.energy,
+                    included: node.included + 1,
+                    excluded_mask: node.excluded_mask,
+                };
+                self.push_child(right, threshold, best_found, best_energy, &mut stats);
+            } else {
+                stats.nodes_infeasible += 1;
+            }
+        }
+
+        assert!(
+            best_found,
+            "DES found no solution despite feasibility pre-check — this is a bug"
+        );
+        let selected: Vec<usize> = (0..k)
+            .filter(|&s| best_mask & (1 << s) == 0)
+            .map(|s| self.order[s])
+            .collect();
+        (Selection::from_indices(problem, selected, false), stats)
+    }
+
+    /// Gate a child into the frontier: QoS-dead subtrees are dropped
+    /// (score only falls down the tree), bound-dominated ones pruned, the
+    /// rest pushed with their bound as the expansion priority.
+    fn push_child(
+        &mut self,
+        node: Node,
+        threshold: f64,
+        best_found: bool,
+        best_energy: f64,
+        stats: &mut DesStats,
+    ) {
+        if node.score < threshold - QOS_EPS {
+            stats.nodes_infeasible += 1;
+            return;
+        }
+        let bound = lp_lower_bound(
+            node.next,
+            node.score,
+            node.energy,
+            &self.scores,
+            &self.costs,
+            threshold,
+        );
+        if best_found && bound >= best_energy - QOS_EPS {
+            stats.nodes_pruned += 1;
+            return;
+        }
+        let seq = self.arena.len() as u32;
+        self.arena.push(node);
+        self.frontier.push(FrontierEntry { bound, seq });
+    }
+}
+
+/// Solve one instance with a fresh [`DesSolver`]. Convenience entry point
+/// for one-shot callers (tests, benches, baselines); hot paths should
+/// hold a solver and call [`DesSolver::solve`] to reuse its buffers.
 pub fn solve(problem: &SelectionProblem) -> (Selection, DesStats) {
+    DesSolver::new().solve(problem)
+}
+
+/// The seed breadth-first implementation, kept as the reference oracle
+/// (identical semantics to the seed; the only change is the shared
+/// [`sort_key`] so unreachable experts sort strictly ahead of
+/// zero-score finite ones in both solvers): `benches/des.rs` and the
+/// regression tests check that the warm-started best-first solver
+/// returns the same optimum and never expands more nodes than this BFS
+/// does.
+pub fn solve_seed_bfs(problem: &SelectionProblem) -> (Selection, DesStats) {
     let k = problem.experts();
     assert!(k <= 64, "DES bitmask supports up to 64 experts (got {k})");
     let mut stats = DesStats::default();
@@ -56,20 +355,11 @@ pub fn solve(problem: &SelectionProblem) -> (Selection, DesStats) {
         return (fallback_top_d(problem), stats);
     }
 
-    // Sort experts by descending energy-to-score ratio. Infinite-cost
-    // experts sort first and are force-excluded below.
     let mut order: Vec<usize> = (0..k).collect();
-    order.sort_by(|&a, &b| {
-        let ra = ratio(problem.costs[a], problem.scores[a]);
-        let rb = ratio(problem.costs[b], problem.scores[b]);
-        rb.partial_cmp(&ra).unwrap().then(a.cmp(&b))
-    });
+    order.sort_by(|&a, &b| sort_key(&problem.scores, &problem.costs, a, b));
     let scores: Vec<f64> = order.iter().map(|&j| problem.scores[j]).collect();
     let costs: Vec<f64> = order.iter().map(|&j| problem.costs[j]).collect();
 
-    // Force-exclude unreachable experts: they cannot appear in any
-    // finite-cost solution. (Feasibility over the reachable set was
-    // already established above.)
     let mut forced_mask = 0u64;
     let mut root_score: f64 = scores.iter().sum();
     let mut root_energy = 0.0;
@@ -102,8 +392,6 @@ pub fn solve(problem: &SelectionProblem) -> (Selection, DesStats) {
     while let Some(node) = queue.pop_front() {
         stats.nodes_expanded += 1;
 
-        // A node is a complete candidate ("include everything undecided")
-        // iff the implied width fits C2.
         let implied_width = k - node.excluded_mask.count_ones() as usize;
         if node.score >= threshold - QOS_EPS
             && implied_width <= problem.max_active
@@ -115,14 +403,12 @@ pub fn solve(problem: &SelectionProblem) -> (Selection, DesStats) {
         }
 
         if node.next >= k || node.score < threshold - QOS_EPS {
-            // Leaf, or excluding anything more can only stay infeasible.
             if node.score < threshold - QOS_EPS {
                 stats.nodes_infeasible += 1;
             }
             continue;
         }
 
-        // Bound check (prune the whole subtree, both children).
         let bound = lp_lower_bound(
             node.next,
             node.score,
@@ -137,7 +423,6 @@ pub fn solve(problem: &SelectionProblem) -> (Selection, DesStats) {
         }
 
         let j = node.next;
-        // Left child: exclude expert j.
         queue.push_back(Node {
             next: j + 1,
             score: node.score - scores[j],
@@ -145,7 +430,6 @@ pub fn solve(problem: &SelectionProblem) -> (Selection, DesStats) {
             included: node.included,
             excluded_mask: node.excluded_mask | (1 << j),
         });
-        // Right child: include expert j — only if C2 can still hold.
         if node.included + 1 <= problem.max_active {
             queue.push_back(Node {
                 next: j + 1,
@@ -168,6 +452,23 @@ pub fn solve(problem: &SelectionProblem) -> (Selection, DesStats) {
         .map(|s| order[s])
         .collect();
     (Selection::from_indices(problem, selected, false), stats)
+}
+
+/// The shared sort order of both solvers: infinite-cost (unreachable)
+/// experts strictly first — so the forced-exclusion prefix is contiguous
+/// even when a *finite*-cost expert's zero score also produces an
+/// infinite ratio — then descending `e/t` ratio, then index.
+#[inline]
+fn sort_key(scores: &[f64], costs: &[f64], a: usize, b: usize) -> std::cmp::Ordering {
+    let fa = costs[a].is_finite();
+    let fb = costs[b].is_finite();
+    fa.cmp(&fb)
+        .then_with(|| {
+            let ra = ratio(costs[a], scores[a]);
+            let rb = ratio(costs[b], scores[b]);
+            rb.partial_cmp(&ra).unwrap()
+        })
+        .then(a.cmp(&b))
 }
 
 #[inline]
@@ -244,13 +545,46 @@ mod tests {
     }
 
     #[test]
+    fn zero_score_expert_beside_offline_expert() {
+        // A finite-cost expert with score 0.0 also has ratio INFINITY;
+        // it must sort *after* the truly unreachable (infinite-cost)
+        // expert so forced exclusion stays a contiguous prefix — and its
+        // positive cost must still be branch-excludable.
+        for (scores, costs) in [
+            // Zero-score expert indexed before the offline one.
+            (
+                vec![0.0, 0.6, 0.4],
+                vec![2.0, f64::INFINITY, 1.0],
+            ),
+            // And after it.
+            (
+                vec![0.6, 0.0, 0.4],
+                vec![f64::INFINITY, 2.0, 1.0],
+            ),
+        ] {
+            let p = SelectionProblem::new(scores, costs, 0.3, 2);
+            let (bf, _) = solve(&p);
+            let (seed, _) = solve_seed_bfs(&p);
+            let ex = exhaustive::solve(&p);
+            assert!((bf.cost - ex.cost).abs() < 1e-9, "{p:?}");
+            assert!((seed.cost - ex.cost).abs() < 1e-9, "{p:?}");
+            assert!(bf.cost.is_finite());
+            // The optimal set is the cheapest QoS-clearing expert alone;
+            // neither the free-but-worthless nor the unreachable expert
+            // belongs in it.
+            assert_eq!(bf.selected, ex.selected, "{p:?}");
+        }
+    }
+
+    #[test]
     fn matches_exhaustive_on_random_instances() {
         let mut rng = Xoshiro256pp::seed_from_u64(0xDE5);
+        let mut solver = DesSolver::new();
         for trial in 0..300 {
             let k = rng.range_usize(1, 11);
             let d = rng.range_usize(1, k + 1);
             let p = random_problem(&mut rng, k, d);
-            let (des_sol, _) = solve(&p);
+            let (des_sol, _) = solver.solve(&p);
             let ex_sol = exhaustive::solve(&p);
             assert_eq!(des_sol.fallback, ex_sol.fallback, "trial {trial}: {p:?}");
             assert!(
@@ -263,6 +597,105 @@ mod tests {
                 assert!(p.is_feasible(&des_sol.selected), "trial {trial}");
             }
         }
+    }
+
+    #[test]
+    fn matches_seed_bfs_on_random_instances() {
+        // Satellite property: the warm-started best-first solver returns
+        // the seed BFS's optimal selection (near-exact cost ties between
+        // distinct optimal masks are the only tolerated divergence — they
+        // have measure zero for continuous random costs, and even then
+        // both solutions are optimal to within QOS_EPS).
+        let mut rng = Xoshiro256pp::seed_from_u64(0x5EED_BF5);
+        let mut solver = DesSolver::new();
+        for trial in 0..250 {
+            let k = rng.range_usize(1, 13);
+            let d = rng.range_usize(1, k + 1);
+            let p = random_problem(&mut rng, k, d);
+            let (bf, _) = solver.solve(&p);
+            let (seed, _) = solve_seed_bfs(&p);
+            assert_eq!(bf.fallback, seed.fallback, "trial {trial}: {p:?}");
+            assert!(
+                (bf.cost - seed.cost).abs() < 1e-9,
+                "trial {trial}: best-first {} != seed BFS {} on {p:?}",
+                bf.cost,
+                seed.cost
+            );
+            if bf.selected != seed.selected {
+                // A genuine near-tie: both must be optimal to the same
+                // cost within the solver's pruning slack.
+                assert!(
+                    (bf.cost - seed.cost).abs() < QOS_EPS,
+                    "trial {trial}: divergent selections without a cost tie on {p:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matches_exhaustive_at_k20() {
+        // The k ≤ 20 exhaustive cross-check at the oracle's practical
+        // ceiling: 2^20 subsets per instance, a handful of instances.
+        let mut rng = Xoshiro256pp::seed_from_u64(0x20DE);
+        let mut solver = DesSolver::new();
+        for (k, d) in [(16usize, 4usize), (18, 4), (20, 4), (20, 6)] {
+            let p = random_problem(&mut rng, k, d);
+            let (bf, _) = solver.solve(&p);
+            let ex = exhaustive::solve(&p);
+            assert_eq!(bf.fallback, ex.fallback, "K={k} D={d}");
+            assert!(
+                (bf.cost - ex.cost).abs() < 1e-9,
+                "K={k} D={d}: best-first {} != exhaustive {}",
+                bf.cost,
+                ex.cost
+            );
+        }
+    }
+
+    #[test]
+    fn never_expands_more_nodes_than_seed_bfs() {
+        // Satellite property, checked per instance on a corpus shaped
+        // like the bench's (feasible-but-tight thresholds at growing K).
+        let mut solver = DesSolver::new();
+        for k in [8usize, 12, 16, 24] {
+            let mut rng = Xoshiro256pp::seed_from_u64(9000 + k as u64);
+            for i in 0..32 {
+                let mut p = random_problem(&mut rng, k, 4);
+                let mut top: Vec<f64> = p.scores.clone();
+                top.sort_by(|a, b| b.partial_cmp(a).unwrap());
+                p.threshold = 0.7 * top.iter().take(4).sum::<f64>();
+                let (bf_sol, bf) = solver.solve(&p);
+                let (seed_sol, seed) = solve_seed_bfs(&p);
+                assert!(
+                    bf.nodes_expanded <= seed.nodes_expanded,
+                    "K={k} instance {i}: best-first expanded {} > seed {}",
+                    bf.nodes_expanded,
+                    seed.nodes_expanded
+                );
+                assert!((bf_sol.cost - seed_sol.cost).abs() < 1e-9, "K={k} instance {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_stateless_across_instances() {
+        // Solving A, then B, then A again must give bit-identical results
+        // to fresh-solver runs — no state bleeds through the arena.
+        let mut rng = Xoshiro256pp::seed_from_u64(0x5C4A);
+        let a = random_problem(&mut rng, 9, 3);
+        let b = random_problem(&mut rng, 5, 2);
+        let mut solver = DesSolver::new();
+        let (a1, s1) = solver.solve(&a);
+        let (b1, _) = solver.solve(&b);
+        let (a2, s2) = solver.solve(&a);
+        let (fresh_a, fresh_stats) = solve(&a);
+        let (fresh_b, _) = solve(&b);
+        assert_eq!(a1.selected, a2.selected);
+        assert_eq!(a1.selected, fresh_a.selected);
+        assert_eq!(a1.cost.to_bits(), fresh_a.cost.to_bits());
+        assert_eq!(b1.selected, fresh_b.selected);
+        assert_eq!(s1, s2);
+        assert_eq!(s1, fresh_stats);
     }
 
     #[test]

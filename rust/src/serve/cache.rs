@@ -33,6 +33,12 @@
 //! counted in [`CacheStats::cross_hits`]. Because the cache key includes
 //! the solver seed, a shared hit remains bit-identical to a fresh solve
 //! regardless of which lane inserted it.
+//!
+//! Under the fleet's lane-parallel executor the shared handle is
+//! [sharded N-ways by key hash](ShardedSolutionCache): each shard has its
+//! own lock, so concurrent lanes stop serializing on one mutex while
+//! every hit stays bit-identical to the unsharded cache (routing is a
+//! pure function of the key).
 
 use crate::channel::ChannelState;
 use crate::energy::EnergyModel;
@@ -240,22 +246,16 @@ pub struct CacheKey {
 /// vectors. (Bandwidth/SNR shape the *rates*, which the channel
 /// signature already captures.)
 fn energy_fingerprint(energy: &EnergyModel) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    let mut mix = |bits: u64| {
-        for byte in bits.to_le_bytes() {
-            h ^= u64::from(byte);
-            h = h.wrapping_mul(0x1000_0000_01b3);
-        }
-    };
-    mix(energy.energy.s0_bytes.to_bits());
-    mix(energy.channel.p0_w.to_bits());
+    let mut h = crate::util::hash::Fnv1a::new();
+    h.write_u64(energy.energy.s0_bytes.to_bits());
+    h.write_u64(energy.channel.p0_w.to_bits());
     for &a in &energy.energy.a_per_byte {
-        mix(a.to_bits());
+        h.write_u64(a.to_bits());
     }
     for &b in &energy.energy.b_static {
-        mix(b.to_bits());
+        h.write_u64(b.to_bits());
     }
-    h
+    h.finish()
 }
 
 fn policy_tag(policy: SelectionPolicy) -> (u8, u32) {
@@ -530,15 +530,138 @@ impl SolutionCache {
     }
 }
 
-/// Thread-safe handle to one [`SolutionCache`] shared across serving
-/// lanes (`Arc` + interior locking). Cloning the handle shares the
-/// underlying cache; all operations lock for the duration of one
-/// get/insert, which is cheap next to a round solve. Single-lane engines
-/// run through this wrapper with a private cache, so shared and private
-/// behavior are identical by construction.
+/// A [`SolutionCache`] split into N independently locked shards, routed
+/// by a deterministic hash of the [`CacheKey`]. Concurrent lanes
+/// therefore stop serializing on one mutex: two lookups contend only
+/// when their keys land in the same shard.
+///
+/// Sharding invariants:
+///
+/// * **Routing is deterministic** (SipHash with the fixed
+///   `DefaultHasher::new()` keys), so a given key always lives in the
+///   same shard — within a run and across runs.
+/// * **Hits are bit-identical to the unsharded cache.** Each shard is a
+///   plain `SolutionCache`; a key's memoized solution is exactly what a
+///   single-shard cache would hold for it, so sharding can only change
+///   *eviction pressure* (capacity is divided per shard), never the
+///   value a hit returns — the property tests below check hit-for-hit
+///   equivalence at ample capacity.
+/// * **Attribution survives aggregation.** Per-lane/cross-lane hit
+///   counts are tracked per shard (each shard sees the `origin` of every
+///   operation) and [`ShardedSolutionCache::stats`] sums them — all
+///   counters are commutative, so the aggregate is exact regardless of
+///   interleaving.
+pub struct ShardedSolutionCache {
+    shards: Vec<Mutex<SolutionCache>>,
+}
+
+impl ShardedSolutionCache {
+    /// `shards` is clamped to at least 1; `capacity` is the fleet-wide
+    /// target, divided across shards (rounded up, so the total may
+    /// slightly exceed the request). `capacity == 0` disables storage in
+    /// every shard.
+    pub fn new(capacity: usize, policy: EvictionPolicy, shards: usize) -> Self {
+        let shards = shards.max(1);
+        let per_shard = if capacity == 0 {
+            0
+        } else {
+            (capacity + shards - 1) / shards
+        };
+        Self {
+            shards: (0..shards)
+                .map(|_| Mutex::new(SolutionCache::with_policy(per_shard, policy)))
+                .collect(),
+        }
+    }
+
+    /// Wrap one prebuilt cache as a single shard.
+    pub fn from_cache(cache: SolutionCache) -> Self {
+        Self {
+            shards: vec![Mutex::new(cache)],
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard_of(&self, key: &CacheKey) -> usize {
+        if self.shards.len() == 1 {
+            return 0;
+        }
+        use std::hash::{Hash, Hasher};
+        // DefaultHasher::new() uses fixed keys — deterministic across
+        // runs, which the determinism contract (ci.sh digest check)
+        // relies on.
+        let mut hasher = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut hasher);
+        (hasher.finish() % self.shards.len() as u64) as usize
+    }
+
+    pub fn get_from(&self, key: &CacheKey, origin: u32) -> Option<RoundSolution> {
+        self.shards[self.shard_of(key)]
+            .lock()
+            .unwrap()
+            .get_from(key, origin)
+    }
+
+    pub fn insert_with_cost(
+        &self,
+        key: CacheKey,
+        solution: RoundSolution,
+        cost: f64,
+        origin: u32,
+    ) {
+        let shard = self.shard_of(&key);
+        self.shards[shard]
+            .lock()
+            .unwrap()
+            .insert_with_cost(key, solution, cost, origin)
+    }
+
+    /// Aggregate counters over all shards (every field is commutative, so
+    /// the sum is exact).
+    pub fn stats(&self) -> CacheStats {
+        let mut total = CacheStats::default();
+        for shard in &self.shards {
+            let s = shard.lock().unwrap().stats();
+            total.hits += s.hits;
+            total.misses += s.misses;
+            total.evictions += s.evictions;
+            total.entries += s.entries;
+            total.cross_hits += s.cross_hits;
+        }
+        total
+    }
+
+    /// Total capacity across shards (≥ the constructor's request due to
+    /// per-shard rounding).
+    pub fn capacity(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().capacity())
+            .sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Thread-safe handle to one (possibly sharded) solution cache shared
+/// across serving lanes (`Arc` + per-shard interior locking). Cloning the
+/// handle shares the underlying cache. Single-lane engines run through
+/// this wrapper with a private single-shard cache, so shared and private
+/// behavior are identical by construction; the fleet's lane-parallel
+/// executor uses [`SharedSolutionCache::with_shards`] so concurrent
+/// lanes spread over independent locks.
 #[derive(Clone)]
 pub struct SharedSolutionCache {
-    inner: Arc<Mutex<SolutionCache>>,
+    inner: Arc<ShardedSolutionCache>,
 }
 
 impl SharedSolutionCache {
@@ -547,42 +670,49 @@ impl SharedSolutionCache {
     }
 
     pub fn with_policy(capacity: usize, policy: EvictionPolicy) -> Self {
+        Self::with_shards(capacity, policy, 1)
+    }
+
+    /// N-way sharded cache: see [`ShardedSolutionCache`] for the
+    /// invariants.
+    pub fn with_shards(capacity: usize, policy: EvictionPolicy, shards: usize) -> Self {
         Self {
-            inner: Arc::new(Mutex::new(SolutionCache::with_policy(capacity, policy))),
+            inner: Arc::new(ShardedSolutionCache::new(capacity, policy, shards)),
         }
     }
 
     pub fn from_cache(cache: SolutionCache) -> Self {
         Self {
-            inner: Arc::new(Mutex::new(cache)),
+            inner: Arc::new(ShardedSolutionCache::from_cache(cache)),
         }
     }
 
     pub fn get(&self, key: &CacheKey, origin: u32) -> Option<RoundSolution> {
-        self.inner.lock().unwrap().get_from(key, origin)
+        self.inner.get_from(key, origin)
     }
 
     pub fn insert(&self, key: CacheKey, solution: RoundSolution, cost: f64, origin: u32) {
-        self.inner
-            .lock()
-            .unwrap()
-            .insert_with_cost(key, solution, cost, origin)
+        self.inner.insert_with_cost(key, solution, cost, origin)
     }
 
     pub fn stats(&self) -> CacheStats {
-        self.inner.lock().unwrap().stats()
+        self.inner.stats()
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.inner.shard_count()
     }
 
     pub fn capacity(&self) -> usize {
-        self.inner.lock().unwrap().capacity()
+        self.inner.capacity()
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        self.inner.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.inner.lock().unwrap().is_empty()
+        self.inner.is_empty()
     }
 }
 
@@ -979,6 +1109,111 @@ mod tests {
         let stats = shared.stats();
         assert_eq!(stats.hits, before.hits + 6);
         assert_eq!(stats.cross_hits - before.cross_hits, 6, "lane 99 hits are all cross-lane");
+    }
+
+    /// Satellite property: a sharded cache is hit-for-hit and
+    /// bit-for-bit equivalent to the single-lock cache at ample
+    /// capacity — sharding only splits the lock, never the semantics.
+    #[test]
+    fn property_sharded_hits_bit_identical_to_unsharded() {
+        let sols = keyed_solutions(24);
+        let mut flat = SolutionCache::new(1024);
+        let sharded = ShardedSolutionCache::new(1024, EvictionPolicy::Lru, 4);
+        // Interleaved lookup/insert schedule over a repeating key stream:
+        // every operation must agree between the two caches.
+        for pass in 0..3 {
+            for (i, (key, sol)) in sols.iter().enumerate() {
+                // Rotating origins: later passes hit entries inserted by a
+                // *different* lane, so cross-hit attribution is exercised.
+                let origin = ((i + pass) % 3) as u32;
+                let a = flat.get_from(key, origin);
+                let b = sharded.get_from(key, origin);
+                assert_eq!(a.is_some(), b.is_some(), "pass {pass} key {i} hit divergence");
+                if let (Some(x), Some(y)) = (&a, &b) {
+                    assert_solutions_bit_identical(x, y);
+                    assert_solutions_bit_identical(x, sol);
+                }
+                if a.is_none() {
+                    flat.insert_with_cost(key.clone(), sol.clone(), 1.0 + i as f64, origin);
+                    sharded.insert_with_cost(key.clone(), sol.clone(), 1.0 + i as f64, origin);
+                }
+            }
+        }
+        let fs = flat.stats();
+        let ss = sharded.stats();
+        assert_eq!(fs.hits, ss.hits);
+        assert_eq!(fs.misses, ss.misses);
+        assert_eq!(fs.entries, ss.entries);
+        assert_eq!(fs.cross_hits, ss.cross_hits, "attribution must survive sharding");
+        assert_eq!(ss.evictions, 0, "ample capacity must not evict");
+    }
+
+    #[test]
+    fn sharded_routing_is_deterministic_and_spreads_keys() {
+        let sols = keyed_solutions(32);
+        let a = ShardedSolutionCache::new(1024, EvictionPolicy::Lru, 4);
+        let b = ShardedSolutionCache::new(1024, EvictionPolicy::Lru, 4);
+        for (key, sol) in &sols {
+            a.insert_with_cost(key.clone(), sol.clone(), 1.0, 0);
+            b.insert_with_cost(key.clone(), sol.clone(), 1.0, 0);
+        }
+        assert_eq!(a.len(), sols.len());
+        // Identical construction → identical shard routing: per-shard
+        // entry counts agree between independent instances.
+        for s in 0..a.shard_count() {
+            assert_eq!(
+                a.shards[s].lock().unwrap().len(),
+                b.shards[s].lock().unwrap().len(),
+                "shard routing must be deterministic"
+            );
+        }
+        // And 32 distinct keys should not all land in one shard.
+        let max_shard = (0..a.shard_count())
+            .map(|s| a.shards[s].lock().unwrap().len())
+            .max()
+            .unwrap();
+        assert!(max_shard < sols.len(), "hash must spread keys over shards");
+    }
+
+    /// The cross-thread bit-identity property holds under sharding too:
+    /// racing lanes on a 4-shard shared cache still only ever observe
+    /// solutions bit-identical to fresh canonical solves.
+    #[test]
+    fn property_sharded_shared_hits_bit_identical_across_threads() {
+        let shared = SharedSolutionCache::with_shards(256, EvictionPolicy::Lru, 4);
+        assert_eq!(shared.shard_count(), 4);
+        let quant = QuantizerConfig::default();
+        let opts = JesaOptions::default();
+        let lanes: Vec<u32> = (0..4).collect();
+        let results: Vec<Vec<(RoundSolution, RoundSolution)>> =
+            crate::util::pool::parallel_map(&lanes, 4, |&lane| {
+                let mut out = Vec::new();
+                for seed in 0..6u64 {
+                    let (state, gates, energy) = setup(3, 8, 2, 7000 + seed);
+                    let csig = ChannelSignature::quantize(&state, quant.log2_step);
+                    let canonical = csig.canonical_state(quant.log2_step);
+                    let (key, problem) =
+                        quantize_round(&csig, &quant, &gates, 0.4, 2, &energy, &opts);
+                    let got = match shared.get(&key, lane) {
+                        Some(sol) => sol,
+                        None => {
+                            let sol = solve_round(&canonical, &problem, &energy, &opts);
+                            shared.insert(key, sol.clone(), 1.0, lane);
+                            sol
+                        }
+                    };
+                    let fresh = solve_round(&canonical, &problem, &energy, &opts);
+                    out.push((got, fresh));
+                }
+                out
+            });
+        for lane in &results {
+            for (got, fresh) in lane {
+                assert_solutions_bit_identical(got, fresh);
+            }
+        }
+        let stats = shared.stats();
+        assert_eq!(stats.entries, 6, "six distinct canonical rounds");
     }
 
     #[test]

@@ -40,15 +40,25 @@
 //!               ┌► cell 0: queue ─► rounds ─► report ┐
 //!  traffic ─► router                                 ├─► fleet report
 //!   (users)    └► cell N: queue ─► rounds ─► report ┘
-//!                 ▲ shared Arc'd SolutionCache (cross-cell hits)
+//!                 ▲ shared sharded SolutionCache (cross-cell hits)
 //! ```
 //!
-//! The pieces this module contributes to that layout:
+//! The fleet's cells execute on a [work-stealing
+//! executor](crate::util::executor) (lane-parallel, report bit-identical
+//! to the interleaved loop), while *within* a round the per-layer solves
+//! keep using the [`parallel_map`](crate::util::pool::parallel_map)
+//! pool — see the [fleet concurrency model](crate::fleet) for the full
+//! contract. The pieces this module contributes to that layout:
 //!
-//! * [`SharedSolutionCache`] — the thread-safe (`Arc` + lock) cache
-//!   handle every lane shares; hits are attributed per lane and
+//! * [`SharedSolutionCache`] — the thread-safe (`Arc` + per-shard lock)
+//!   cache handle every lane shares; hits are attributed per lane and
 //!   cross-lane reuse is counted ([`CacheStats::cross_hits`]). A lane
 //!   with a private handle behaves exactly like the single-engine cache.
+//! * [`ShardedSolutionCache`] — the memo table split N ways by key hash
+//!   with per-shard locks, so concurrent lanes stop serializing on one
+//!   mutex; hits stay bit-identical to the unsharded cache (routing is a
+//!   pure, deterministic function of the key) and all stats aggregate
+//!   commutatively.
 //! * [`EvictionPolicy`] — LRU or cost-aware (greedy-dual) eviction; the
 //!   latter keeps expensive branch-and-bound solutions resident longer
 //!   than cheap greedy ones.
@@ -67,7 +77,7 @@ pub mod traffic;
 
 pub use cache::{
     quantize_round, solve_quantized, CacheStats, EvictionPolicy, QuantizerConfig,
-    SharedSolutionCache, SolutionCache,
+    SharedSolutionCache, ShardedSolutionCache, SolutionCache,
 };
 pub use engine::{
     derive_quantizer, estimate_round_latency_s, ServeEngine, ServeOptions, ServeReport,

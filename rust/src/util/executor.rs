@@ -1,0 +1,359 @@
+//! Std-only work-stealing task executor (no `rayon` / `crossbeam`
+//! vendored).
+//!
+//! [`parallel_map`](super::pool::parallel_map) covers flat data-parallel
+//! sweeps where every item is known up front and one atomic cursor
+//! balances the load. The fleet's lane-parallel round execution needs
+//! something stronger: a *persistent* worker team that can absorb many
+//! small, uneven task batches over the lifetime of one run without
+//! re-spawning threads per batch. This module provides exactly that:
+//!
+//! * **Per-worker deques + steal-half.** Each worker (and the submitting
+//!   thread) owns a `Mutex<VecDeque<Task>>`. A batch is dealt round-robin
+//!   across the deques; a worker pops from the *front* of its own deque
+//!   and, when empty, steals the *back half* of the first non-empty
+//!   victim in index order — the classic steal-half discipline that keeps
+//!   contention low (one steal rebalances log-many tasks, not one).
+//! * **Scoped threads.** Workers are `std::thread::scope` threads spawned
+//!   once per [`Executor::scope`] call, so tasks may borrow from the
+//!   caller's stack (anything declared before the `scope` call) without
+//!   `'static` bounds or unsafe lifetime erasure.
+//! * **Submitter participation.** [`TaskScope::run_batch`] blocks until
+//!   the batch completes, and the submitting thread drains tasks too, so
+//!   `Executor::new(n)` gives `n` degrees of parallelism in total (it
+//!   spawns `n - 1` worker threads).
+//!
+//! Determinism note: the executor never reorders *observable* effects of
+//! a correctly-factored batch — tasks must touch disjoint state (or
+//! synchronized shared state whose operations commute, like the sharded
+//! solution cache), which is exactly how the fleet uses it: one task per
+//! cell, each owning that cell's lane.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// A unit of work submitted to the executor. Tasks may borrow anything
+/// that outlives the enclosing [`Executor::scope`] call.
+pub type Task<'env> = Box<dyn FnOnce() + Send + 'env>;
+
+/// Control block shared by workers and the submitter.
+struct Ctl {
+    /// Tasks sitting in deques, not yet taken — the workers' sleep
+    /// condition (they only run while `queued > 0`). Signed because a
+    /// worker draining the previous batch may take freshly pushed tasks
+    /// *before* the submitter publishes the batch count; the count goes
+    /// transiently negative and settles once `run_batch` adds `n`.
+    queued: i64,
+    /// Tasks taken-or-queued whose execution has not finished. The
+    /// submitter sleeps on this reaching 0.
+    pending: usize,
+    shutdown: bool,
+}
+
+struct Shared<'env> {
+    /// One deque per worker plus one for the submitting thread (last).
+    queues: Vec<Mutex<VecDeque<Task<'env>>>>,
+    ctl: Mutex<Ctl>,
+    /// Workers wait here for new work.
+    work_cv: Condvar,
+    /// The submitter waits here for batch completion.
+    done_cv: Condvar,
+}
+
+impl<'env> Shared<'env> {
+    fn new(slots: usize) -> Self {
+        Self {
+            queues: (0..slots).map(|_| Mutex::new(VecDeque::new())).collect(),
+            ctl: Mutex::new(Ctl {
+                queued: 0,
+                pending: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        }
+    }
+
+    /// Pop from the own deque's front; else steal the back half of the
+    /// first non-empty victim (in index order from `home + 1`).
+    fn find_task(&self, home: usize) -> Option<Task<'env>> {
+        if let Some(t) = self.queues[home].lock().unwrap().pop_front() {
+            return Some(t);
+        }
+        let n = self.queues.len();
+        for off in 1..n {
+            let victim = (home + off) % n;
+            let mut vq = self.queues[victim].lock().unwrap();
+            let len = vq.len();
+            if len == 0 {
+                continue;
+            }
+            // Steal ceil(len/2) from the back; run one, keep the rest.
+            let mut stolen = vq.split_off(len - (len + 1) / 2);
+            drop(vq);
+            let first = stolen.pop_front();
+            if !stolen.is_empty() {
+                self.queues[home].lock().unwrap().append(&mut stolen);
+            }
+            return first;
+        }
+        None
+    }
+
+    /// Take one task, accounting it out of `queued`.
+    fn take(&self, home: usize) -> Option<Task<'env>> {
+        let task = self.find_task(home)?;
+        self.ctl.lock().unwrap().queued -= 1;
+        Some(task)
+    }
+
+    /// Run one task; `pending` is decremented even if the task panics so
+    /// the submitter unblocks and the panic propagates at scope join.
+    fn run_one(&self, task: Task<'env>) {
+        struct Done<'a, 'env>(&'a Shared<'env>);
+        impl Drop for Done<'_, '_> {
+            fn drop(&mut self) {
+                let mut ctl = self.0.ctl.lock().unwrap();
+                ctl.pending -= 1;
+                if ctl.pending == 0 {
+                    self.0.done_cv.notify_all();
+                }
+            }
+        }
+        let _done = Done(self);
+        task();
+    }
+
+    fn drain(&self, home: usize) {
+        while let Some(task) = self.take(home) {
+            self.run_one(task);
+        }
+    }
+
+    fn shutdown(&self) {
+        self.ctl.lock().unwrap().shutdown = true;
+        self.work_cv.notify_all();
+    }
+}
+
+fn worker_loop(shared: &Shared<'_>, home: usize) {
+    loop {
+        shared.drain(home);
+        let mut ctl = shared.ctl.lock().unwrap();
+        loop {
+            if ctl.shutdown {
+                return;
+            }
+            if ctl.queued > 0 {
+                break;
+            }
+            ctl = shared.work_cv.wait(ctl).unwrap();
+        }
+    }
+}
+
+/// A work-stealing executor configuration: total parallelism including
+/// the submitting thread. Construction is cheap; worker threads only
+/// exist inside [`Executor::scope`].
+#[derive(Debug, Clone, Copy)]
+pub struct Executor {
+    parallelism: usize,
+}
+
+impl Executor {
+    /// `parallelism` is the total degree of concurrency (submitter
+    /// included), clamped to at least 1.
+    pub fn new(parallelism: usize) -> Self {
+        Self {
+            parallelism: parallelism.max(1),
+        }
+    }
+
+    pub fn parallelism(&self) -> usize {
+        self.parallelism
+    }
+
+    /// Spawn the worker team for the duration of `f` and hand it a
+    /// [`TaskScope`] for submitting batches. Tasks may borrow anything
+    /// declared before this call.
+    pub fn scope<'env, F, R>(&self, f: F) -> R
+    where
+        F: FnOnce(&TaskScope<'_, 'env>) -> R,
+    {
+        let workers = self.parallelism - 1;
+        let shared: Shared<'env> = Shared::new(workers + 1);
+        std::thread::scope(|s| {
+            // Shut the team down even if `f` unwinds — otherwise the
+            // scope's implicit join would wait forever on parked workers
+            // instead of propagating the panic.
+            struct Shutdown<'a, 'env>(&'a Shared<'env>);
+            impl Drop for Shutdown<'_, '_> {
+                fn drop(&mut self) {
+                    self.0.shutdown();
+                }
+            }
+            // Install the guard before spawning: a panic mid-spawn
+            // (thread limit) must still release already-parked workers.
+            let _shutdown = Shutdown(&shared);
+            for w in 0..workers {
+                let sh = &shared;
+                s.spawn(move || worker_loop(sh, w));
+            }
+            let scope = TaskScope { shared: &shared };
+            f(&scope)
+        })
+    }
+}
+
+/// Handle for submitting task batches to a live worker team. One
+/// submitter at a time: `run_batch` is `&self` but batches are meant to
+/// be issued from the thread that entered [`Executor::scope`] (tasks
+/// must not submit nested batches).
+pub struct TaskScope<'pool, 'env> {
+    shared: &'pool Shared<'env>,
+}
+
+impl<'pool, 'env> TaskScope<'pool, 'env> {
+    /// Execute every task in the batch to completion. The calling thread
+    /// participates in the work; returns once all tasks have finished.
+    pub fn run_batch(&self, mut tasks: Vec<Task<'env>>) {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        if n == 1 {
+            // Nothing to parallelize — skip the deque round-trip.
+            (tasks.pop().unwrap())();
+            return;
+        }
+        // `pending` is accounted *before* publishing: a worker still
+        // draining a previous batch may pick these tasks up the instant
+        // they land in a deque, and its decrement must never underflow.
+        // `queued` is published *after* the pushes so an awake worker
+        // does not busy-spin on empty deques during the push loop (early
+        // takes just drive the signed count transiently negative).
+        self.shared.ctl.lock().unwrap().pending += n;
+        let slots = self.shared.queues.len();
+        for (i, task) in tasks.into_iter().enumerate() {
+            self.shared.queues[i % slots].lock().unwrap().push_back(task);
+        }
+        self.shared.ctl.lock().unwrap().queued += n as i64;
+        self.shared.work_cv.notify_all();
+        // The submitter works from the last deque slot.
+        self.shared.drain(slots - 1);
+        let mut ctl = self.shared.ctl.lock().unwrap();
+        while ctl.pending > 0 {
+            ctl = self.shared.done_cv.wait(ctl).unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_task_once() {
+        let counter = AtomicUsize::new(0);
+        let ex = Executor::new(4);
+        ex.scope(|scope| {
+            let tasks: Vec<Task<'_>> = (0..100)
+                .map(|_| {
+                    Box::new(|| {
+                        counter.fetch_add(1, Ordering::Relaxed);
+                    }) as Task<'_>
+                })
+                .collect();
+            scope.run_batch(tasks);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn tasks_mutate_disjoint_slots() {
+        let slots: Vec<Mutex<u64>> = (0..64).map(|_| Mutex::new(0)).collect();
+        let ex = Executor::new(3);
+        ex.scope(|scope| {
+            let tasks: Vec<Task<'_>> = slots
+                .iter()
+                .enumerate()
+                .map(|(i, slot)| {
+                    Box::new(move || {
+                        // Uneven work so stealing actually triggers.
+                        let mut acc = 0u64;
+                        for x in 0..(i as u64 * 500) {
+                            acc = acc.wrapping_add(x);
+                        }
+                        *slot.lock().unwrap() = i as u64 + acc.wrapping_mul(0);
+                    }) as Task<'_>
+                })
+                .collect();
+            scope.run_batch(tasks);
+        });
+        for (i, slot) in slots.iter().enumerate() {
+            assert_eq!(*slot.lock().unwrap(), i as u64);
+        }
+    }
+
+    #[test]
+    fn many_batches_reuse_the_team() {
+        let counter = AtomicUsize::new(0);
+        let ex = Executor::new(4);
+        ex.scope(|scope| {
+            for _ in 0..50 {
+                let tasks: Vec<Task<'_>> = (0..8)
+                    .map(|_| {
+                        Box::new(|| {
+                            counter.fetch_add(1, Ordering::Relaxed);
+                        }) as Task<'_>
+                    })
+                    .collect();
+                scope.run_batch(tasks);
+            }
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 50 * 8);
+    }
+
+    #[test]
+    fn empty_and_single_batches() {
+        let hit = AtomicUsize::new(0);
+        let ex = Executor::new(2);
+        ex.scope(|scope| {
+            scope.run_batch(Vec::new());
+            scope.run_batch(vec![Box::new(|| {
+                hit.fetch_add(1, Ordering::Relaxed);
+            }) as Task<'_>]);
+        });
+        assert_eq!(hit.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn parallelism_one_runs_inline() {
+        // No worker threads: the submitter executes everything itself.
+        let counter = AtomicUsize::new(0);
+        let ex = Executor::new(1);
+        assert_eq!(ex.parallelism(), 1);
+        ex.scope(|scope| {
+            let tasks: Vec<Task<'_>> = (0..10)
+                .map(|_| {
+                    Box::new(|| {
+                        counter.fetch_add(1, Ordering::Relaxed);
+                    }) as Task<'_>
+                })
+                .collect();
+            scope.run_batch(tasks);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn scope_returns_closure_value() {
+        let ex = Executor::new(2);
+        let out = ex.scope(|scope| {
+            scope.run_batch(Vec::new());
+            42usize
+        });
+        assert_eq!(out, 42);
+    }
+}

@@ -1,0 +1,67 @@
+//! Tiny streaming FNV-1a-style hasher over little-endian `u64` words.
+//!
+//! One shared implementation for every deterministic fingerprint in the
+//! repo — the solution-cache's energy-model fingerprint and the fleet
+//! report's determinism digest — so the constants cannot silently drift
+//! between copies. The multiplier is the repo's historical constant
+//! (kept for fingerprint stability); determinism, not cryptography, is
+//! the contract.
+
+/// Streaming FNV-1a-style hasher. Feed words with
+/// [`Fnv1a::write_u64`], read the digest with [`Fnv1a::finish`].
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv1a(u64);
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv1a {
+    pub fn new() -> Self {
+        Self(0xcbf2_9ce4_8422_2325)
+    }
+
+    /// Mix one word, byte-wise little-endian.
+    pub fn write_u64(&mut self, bits: u64) {
+        for byte in bits.to_le_bytes() {
+            self.0 ^= u64::from(byte);
+            self.0 = self.0.wrapping_mul(0x1000_0000_01b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_order_sensitive() {
+        let mut a = Fnv1a::new();
+        a.write_u64(1);
+        a.write_u64(2);
+        let mut b = Fnv1a::new();
+        b.write_u64(1);
+        b.write_u64(2);
+        assert_eq!(a.finish(), b.finish());
+        let mut c = Fnv1a::new();
+        c.write_u64(2);
+        c.write_u64(1);
+        assert_ne!(a.finish(), c.finish(), "word order must matter");
+    }
+
+    #[test]
+    fn distinct_words_distinct_digests() {
+        let mut a = Fnv1a::new();
+        a.write_u64(0);
+        let mut b = Fnv1a::new();
+        b.write_u64(1);
+        assert_ne!(a.finish(), b.finish());
+        assert_ne!(Fnv1a::new().finish(), a.finish(), "empty differs from fed");
+    }
+}

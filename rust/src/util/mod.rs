@@ -13,11 +13,15 @@
 //! * [`bench`] — criterion-style micro-benchmark harness.
 //! * [`stats`] — means/percentiles/Welford.
 //! * [`pool`] — scoped thread-pool for data-parallel sweeps.
+//! * [`executor`] — work-stealing task executor (per-worker deques +
+//!   steal-half) for lane-parallel fleet execution.
 //! * [`table`] — plain-text table rendering for experiment output.
 
 pub mod bench;
 pub mod cli;
 pub mod error;
+pub mod executor;
+pub mod hash;
 pub mod json;
 pub mod pool;
 pub mod rng;

@@ -6,12 +6,17 @@
 //! coarse (entire serving runs), so a simple block partition is enough.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 
 /// Map `f` over `items` with up to `n_workers` threads, preserving order.
 ///
 /// Work is distributed through an atomic cursor, so uneven item costs
 /// still balance. `f` must be `Sync` (it is shared by reference).
+///
+/// Results are collected lock-free: each worker accumulates `(index,
+/// result)` pairs in a thread-local vector that is merged on join, so the
+/// only synchronization on the item path is the cursor's `fetch_add` (the
+/// original per-item `Mutex<Option<R>>` slots cost one lock round-trip
+/// per item).
 pub fn parallel_map<T, R, F>(items: &[T], n_workers: usize, f: F) -> Vec<R>
 where
     T: Sync,
@@ -28,24 +33,43 @@ where
     }
 
     let cursor = AtomicUsize::new(0);
-    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let mut results: Vec<Option<R>> = Vec::with_capacity(n);
+    results.resize_with(n, || None);
 
     std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut local: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(&items[i])));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for handle in handles {
+            match handle.join() {
+                Ok(local) => {
+                    for (i, r) in local {
+                        results[i] = Some(r);
+                    }
                 }
-                let r = f(&items[i]);
-                *results[i].lock().unwrap() = Some(r);
-            });
+                // Re-raise with the original payload so a solver panic's
+                // message survives the pool boundary (as it did when the
+                // scope itself propagated the unwind).
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
         }
     });
 
     results
         .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worker skipped an item"))
+        .map(|slot| slot.expect("worker skipped an item"))
         .collect()
 }
 

@@ -179,6 +179,109 @@ fn mobile_users_hand_over_mid_session() {
     assert!(text.contains("cell  state"));
 }
 
+/// The lane-parallel determinism contract: everything in the report
+/// digest (completions, energies, per-cell accounting, handovers) is
+/// bit-identical between execution modes. Cache *hit* counters are the
+/// one commutative exception — racing lanes may solve a fresh key twice
+/// (both solves bit-identical) instead of hit-after-miss — so those are
+/// checked as inequalities.
+fn assert_parallel_matches_sequential(seq: &FleetReport, par: &FleetReport) {
+    assert_eq!(seq.digest(), par.digest(), "report digest diverged");
+    assert_eq!(seq.generated, par.generated);
+    assert_eq!(seq.completed, par.completed);
+    assert_eq!(seq.shed(), par.shed());
+    assert_eq!(seq.handovers, par.handovers);
+    assert_eq!(seq.rounds, par.rounds);
+    assert_eq!(
+        seq.energy.total_j().to_bits(),
+        par.energy.total_j().to_bits()
+    );
+    for (a, b) in seq.cells.iter().zip(par.cells.iter()) {
+        assert_eq!(a.routed, b.routed, "cell {}", a.id);
+        assert_eq!(a.completed, b.completed, "cell {}", a.id);
+        assert_eq!(a.rounds, b.rounds, "cell {}", a.id);
+        assert_eq!(a.state, b.state, "cell {}", a.id);
+        assert_eq!(
+            a.energy.total_j().to_bits(),
+            b.energy.total_j().to_bits(),
+            "cell {}",
+            a.id
+        );
+        assert_eq!(a.latency_p99_s.to_bits(), b.latency_p99_s.to_bits());
+    }
+    for (a, b) in seq.completions.iter().zip(par.completions.iter()) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.done_s.to_bits(), b.done_s.to_bits());
+    }
+    // Cache: one lookup per layer solve in both modes; racing double
+    // misses can only convert hits into misses (never invent hits), and
+    // re-inserting the same key leaves the entry count unchanged.
+    assert_eq!(seq.cache.lookups(), par.cache.lookups());
+    assert!(par.cache.hits <= seq.cache.hits);
+    assert_eq!(seq.cache.entries, par.cache.entries);
+}
+
+#[test]
+fn parallel_lanes_match_sequential_bit_identically() {
+    // Every route policy: rr exercises the fully lane-parallel replay,
+    // jsq/channel the lockstep path with executor-dispatched due cells.
+    for route in [
+        RoutePolicy::RoundRobin,
+        RoutePolicy::JoinShortestQueue,
+        RoutePolicy::ChannelAware,
+    ] {
+        let traffic = tiny_traffic(400, 15.0);
+        let (cfg, seq_opts) = tiny_setup(3, route);
+        let mut par_opts = seq_opts.clone();
+        par_opts.lane_workers = 3;
+        par_opts.cache_shards = 4;
+        let seq = FleetEngine::new(&cfg, seq_opts).run(&traffic);
+        let par = FleetEngine::new(&cfg, par_opts).run(&traffic);
+        assert_parallel_matches_sequential(&seq, &par);
+    }
+}
+
+#[test]
+fn parallel_run_is_deterministic_across_repeats() {
+    let traffic = tiny_traffic(300, 12.0);
+    let (cfg, mut fopts) = tiny_setup(3, RoutePolicy::RoundRobin);
+    fopts.lane_workers = 3;
+    let a = FleetEngine::new(&cfg, fopts.clone()).run(&traffic);
+    let b = FleetEngine::new(&cfg, fopts).run(&traffic);
+    assert_eq!(a.digest(), b.digest(), "parallel runs must be reproducible");
+}
+
+#[test]
+fn scheduled_drain_forces_lockstep_and_stays_bit_identical() {
+    // A drain makes round-robin routing execution-dependent (the
+    // Drained transition reads queue state), so the engine must fall
+    // back to the lockstep path — and still match sequentially.
+    let traffic = tiny_traffic(300, 10.0);
+    let (cfg, mut seq_opts) = tiny_setup(2, RoutePolicy::RoundRobin);
+    seq_opts.drain_at.push((0, 10.0));
+    let mut par_opts = seq_opts.clone();
+    par_opts.lane_workers = 2;
+    let seq = FleetEngine::new(&cfg, seq_opts).run(&traffic);
+    let par = FleetEngine::new(&cfg, par_opts).run(&traffic);
+    assert_parallel_matches_sequential(&seq, &par);
+    assert_eq!(par.cells[0].state, "drained");
+}
+
+#[test]
+fn sharded_cache_still_hits_across_cells() {
+    let traffic = tiny_traffic(400, 20.0);
+    let (cfg, mut fopts) = tiny_setup(2, RoutePolicy::JoinShortestQueue);
+    fopts.lane_workers = 2;
+    fopts.cache_shards = 8;
+    let report = FleetEngine::new(&cfg, fopts).run(&traffic);
+    assert!(report.cache.hits > 0, "{:?}", report.cache);
+    assert!(
+        report.cache.cross_hits > 0,
+        "noise-free domain templates must recur across cells: {:?}",
+        report.cache
+    );
+}
+
 #[test]
 fn route_policy_parsing() {
     assert_eq!(RoutePolicy::parse("rr"), Some(RoutePolicy::RoundRobin));
