@@ -52,3 +52,35 @@ if [[ -z "$seq_digest" || "$seq_digest" != "$par_digest" ]]; then
   exit 1
 fi
 echo "fleet determinism check passed ($seq_digest)"
+
+# Scenario gate: two presets (one serve-shaped, one fleet-shaped) run as
+# ~2-second smokes through the unified front door. `--verify` makes the
+# binary fail on any JSON round-trip mismatch, and each preset runs
+# twice with its report digest compared — same scenario, same digest, or
+# the gate fails. A file-loaded scenario must digest identically to its
+# preset too.
+extract_scenario_digest() { sed -n 's/.*scenario digest \(0x[0-9a-f]*\).*/\1/p' | tail -1; }
+for preset in paper-baseline urban-macro-jsq; do
+  a=$(cargo run --release --quiet -- run --scenario "$preset" --verify --queries 600 \
+    | extract_scenario_digest)
+  b=$(cargo run --release --quiet -- run --scenario "$preset" --queries 600 \
+    | extract_scenario_digest)
+  if [[ -z "$a" || "$a" != "$b" ]]; then
+    echo "FAIL: scenario digest determinism for $preset (first=$a second=$b)" >&2
+    exit 1
+  fi
+  echo "scenario gate passed for $preset ($a)"
+done
+# File path round-trip: dump the canonical spec, run it from disk, and
+# expect the same digest as the preset run at the same query count.
+tmp_scenario=$(mktemp /tmp/dmoe-scenario-XXXXXX.json)
+trap 'rm -f "$tmp_scenario"' EXIT
+file_digest=$(cargo run --release --quiet -- run --scenario paper-baseline --queries 600 \
+  --save-scenario "$tmp_scenario" | extract_scenario_digest)
+from_file=$(cargo run --release --quiet -- run --scenario "$tmp_scenario" \
+  | extract_scenario_digest)
+if [[ -z "$file_digest" || "$file_digest" != "$from_file" ]]; then
+  echo "FAIL: scenario file round-trip digest (preset=$file_digest file=$from_file)" >&2
+  exit 1
+fi
+echo "scenario file round-trip passed ($from_file)"

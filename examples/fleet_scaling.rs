@@ -1,46 +1,37 @@
 //! Fleet scaling driver: cells × routing-policy sweep at fixed per-cell
-//! utilization.
+//! utilization, driven entirely through the **scenario front door**.
 //!
-//! For each cell count the offered load is `cells × utilization ×
-//! per-cell capacity` and the query volume scales with the fleet, so the
-//! sweep answers the scale-out question directly: does doubling the
-//! cells double the sustained throughput? It also compares the three
-//! dispatch policies — round-robin, join-shortest-queue, channel-aware —
-//! on tail latency and energy per query, reports the shared solution
-//! cache's cross-cell hits, and demonstrates lane-parallel execution on
-//! the work-stealing executor (wall-clock speedup with a bit-identical
-//! report).
+//! Each sweep point is one fleet-shaped [`Scenario`] (the facade
+//! calibrates the derated per-cell capacity and resolves the offered
+//! load as `cells × utilization × capacity`), so the sweep answers the
+//! scale-out question directly: does doubling the cells double the
+//! sustained throughput? It also compares the three dispatch policies —
+//! round-robin, join-shortest-queue, channel-aware — on tail latency and
+//! energy per query, reports the shared solution cache's cross-cell
+//! hits, and demonstrates lane-parallel execution on the work-stealing
+//! executor (wall-clock speedup with a bit-identical report digest).
 //!
 //! ```bash
 //! cargo run --release --example fleet_scaling [-- --queries N --utilization X --lanes N]
 //! ```
 
-use dmoe::coordinator::ServePolicy;
-use dmoe::fleet::{
-    estimate_cell_round_latency_s, CellLayout, FleetEngine, FleetOptions, FleetReport, Mobility,
-    MobilityConfig, RoutePolicy,
+use dmoe::fleet::{FleetReport, MobilityConfig, RoutePolicy};
+use dmoe::scenario::{
+    self, CacheSpec, FleetSpec, RateSpec, RunReport, Scenario, TrafficSpec,
 };
-use dmoe::serve::{ArrivalProcess, QueueConfig, TrafficConfig};
+use dmoe::serve::EvictionPolicy;
 use dmoe::util::cli::Args;
 use dmoe::util::table::Table;
-use dmoe::SystemConfig;
 
 fn main() {
     let args = Args::from_env();
-    let cfg = SystemConfig::default();
-    let k = cfg.moe.experts;
-    let layers = cfg.moe.layers;
+    if let Err(e) = args.expect(&["queries", "utilization", "lanes"]) {
+        eprintln!("error: {e:#}");
+        std::process::exit(2);
+    }
     let base_queries = args.get_usize("queries", 1_000);
     let utilization = args.get_f64("utilization", 0.6);
-    let spacing = 200.0;
 
-    let policy = ServePolicy::jesa(0.8, 2, layers);
-    let base_traffic = TrafficConfig {
-        queries: base_queries,
-        tokens_per_query: 4,
-        seed: cfg.workload.seed,
-        ..TrafficConfig::poisson(1.0, base_queries)
-    };
     // Vehicular-speed users: the sweep's simulated horizon is tens of
     // seconds, so pedestrian mobility would barely move anyone — fast
     // users make mid-session handover and time-varying cell radio
@@ -52,9 +43,51 @@ fn main() {
         ..MobilityConfig::default()
     };
 
+    /// One fleet-shaped sweep-point scenario.
+    fn sweep_scenario(
+        cells: usize,
+        route: RoutePolicy,
+        queries: usize,
+        utilization: f64,
+        mobility: &MobilityConfig,
+        cache_capacity: usize,
+        lane_workers: Option<usize>,
+        solve_workers: Option<usize>,
+    ) -> Scenario {
+        let mut b = Scenario::builder(&format!("fleet-scaling-{}x-{}", cells, route.label()))
+            .traffic(TrafficSpec {
+                queries,
+                rate: RateSpec::Utilization(utilization),
+                ..TrafficSpec::default()
+            })
+            .cache(CacheSpec {
+                capacity: cache_capacity,
+                eviction: EvictionPolicy::CostAware,
+                shards: 0,
+            })
+            .fleet(FleetSpec {
+                cells,
+                route,
+                mobility: mobility.clone(),
+                lane_workers,
+                ..FleetSpec::default()
+            });
+        if let Some(w) = solve_workers {
+            b = b.workers(w);
+        }
+        b.build().expect("sweep scenario validates")
+    }
+
+    fn run_fleet(s: &Scenario) -> FleetReport {
+        match scenario::run(s).expect("sweep scenario runs") {
+            RunReport::Fleet(r) => r,
+            RunReport::Serve(_) => unreachable!("fleet-shaped scenario"),
+        }
+    }
+
     println!(
-        "DMoE fleet scaling: K={k} L={layers}, {base_queries} queries/cell at {:.0}% per-cell \
-         utilization\n",
+        "DMoE fleet scaling via the scenario facade: {base_queries} queries/cell at {:.0}% \
+         per-cell utilization\n",
         utilization * 100.0
     );
 
@@ -70,30 +103,18 @@ fn main() {
     ]);
     let mut reports: Vec<(usize, RoutePolicy, FleetReport)> = Vec::new();
     for &cells in &cell_counts {
-        // Calibrate the per-cell capacity at this layout's typical
-        // mobility attenuation.
-        let layout = CellLayout::grid(cells, spacing);
-        let scale =
-            Mobility::new(mobility.clone(), &layout).mean_attachment_attenuation(&layout);
-        let round_s =
-            estimate_cell_round_latency_s(&cfg, &policy, &base_traffic, 4, scale).max(1e-9);
-        let rate = cells as f64 * utilization * k as f64 / round_s;
         for route in routes {
-            let traffic = TrafficConfig {
-                process: ArrivalProcess::Poisson { rate_qps: rate },
-                queries: base_queries * cells,
-                ..base_traffic.clone()
-            };
-            let mut fopts = FleetOptions::new(
+            let s = sweep_scenario(
                 cells,
                 route,
-                policy.clone(),
-                QueueConfig::for_system(k, round_s),
+                base_queries * cells,
+                utilization,
+                &mobility,
+                4096,
+                None,
+                None,
             );
-            fopts.mobility = mobility.clone();
-            fopts.spacing_m = spacing;
-            let report = FleetEngine::new(&cfg, fopts).run(&traffic);
-            reports.push((cells, route, report));
+            reports.push((cells, route, run_fleet(&s)));
         }
     }
 
@@ -122,66 +143,59 @@ fn main() {
     // the dispatch comparison runs cacheless on the exact correlated
     // channels, where a cell's mobility-driven radio quality shows up in
     // its comm energy and round latency.
-    let layout4 = CellLayout::grid(4, spacing);
-    let scale4 = Mobility::new(mobility.clone(), &layout4).mean_attachment_attenuation(&layout4);
-    let round4_s =
-        estimate_cell_round_latency_s(&cfg, &policy, &base_traffic, 4, scale4).max(1e-9);
-    let rate4 = 4.0 * utilization * k as f64 / round4_s;
     let mut exact: Vec<(RoutePolicy, FleetReport)> = Vec::new();
     for route in [RoutePolicy::RoundRobin, RoutePolicy::ChannelAware] {
-        let traffic = TrafficConfig {
-            process: ArrivalProcess::Poisson { rate_qps: rate4 },
-            queries: base_queries * 4,
-            ..base_traffic.clone()
-        };
-        let mut fopts = FleetOptions::new(
+        let s = sweep_scenario(
             4,
             route,
-            policy.clone(),
-            QueueConfig::for_system(k, round4_s),
+            base_queries * 4,
+            utilization,
+            &mobility,
+            0,
+            None,
+            None,
         );
-        fopts.cache_capacity = 0;
-        fopts.mobility = mobility.clone();
-        fopts.spacing_m = spacing;
-        exact.push((route, FleetEngine::new(&cfg, fopts).run(&traffic)));
+        exact.push((route, run_fleet(&s)));
     }
 
-    // Lane-parallel execution at 4 cells: same fleet, same load, rounds
-    // executing concurrently on the work-stealing executor — the report
-    // must come out bit-identical (the module's determinism contract)
-    // while wall clock drops with available cores.
-    let lanes = args.get_usize(
-        "lanes",
-        dmoe::util::pool::default_workers().min(4),
-    );
+    // Lane-parallel execution at 4 cells: same scenario except for
+    // `fleet.lane_workers`, rounds executing concurrently on the
+    // work-stealing executor — the report digest must come out
+    // bit-identical (the module's determinism contract) while wall clock
+    // drops with available cores.
+    let lanes = args.get_usize("lanes", dmoe::util::pool::default_workers().min(4));
     {
-        let traffic = TrafficConfig {
-            process: ArrivalProcess::Poisson { rate_qps: rate4 },
-            queries: base_queries * 4,
-            ..base_traffic.clone()
-        };
-        let mk = |lane_workers: usize| {
-            let mut fopts = FleetOptions::new(
-                4,
-                RoutePolicy::RoundRobin,
-                policy.clone(),
-                QueueConfig::for_system(k, round4_s),
-            );
-            fopts.workers = 1;
-            fopts.lane_workers = lane_workers;
-            fopts.mobility = mobility.clone();
-            fopts.spacing_m = spacing;
-            fopts
-        };
-        let seq = FleetEngine::new(&cfg, mk(0)).run(&traffic);
-        let par = FleetEngine::new(&cfg, mk(lanes)).run(&traffic);
+        let seq = run_fleet(&sweep_scenario(
+            4,
+            RoutePolicy::RoundRobin,
+            base_queries * 4,
+            utilization,
+            &mobility,
+            4096,
+            Some(0),
+            Some(1),
+        ));
+        let par = run_fleet(&sweep_scenario(
+            4,
+            RoutePolicy::RoundRobin,
+            base_queries * 4,
+            utilization,
+            &mobility,
+            4096,
+            Some(lanes),
+            Some(1),
+        ));
         println!(
             "lane-parallel 4 cells ({lanes} lanes, rr): wall {:.3} s vs sequential {:.3} s \
              ({:.2}x), reports bit-identical: {}\n",
             par.wall_s,
             seq.wall_s,
             seq.wall_s / par.wall_s.max(1e-9),
-            if seq.digest() == par.digest() { "PASS" } else { "FAIL" }
+            if seq.digest() == par.digest() {
+                "PASS"
+            } else {
+                "FAIL"
+            }
         );
     }
 

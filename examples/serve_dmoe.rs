@@ -1,9 +1,10 @@
 //! Continuous-serving driver: the `serve` engine under all three arrival
-//! processes.
+//! processes, driven entirely through the **scenario front door**.
 //!
-//! Calibrates the system's round capacity, then runs the same synthetic
-//! multi-domain workload as a Poisson, bursty (MMPP) and diurnal stream
-//! at 70% utilization, printing throughput, simulated latency
+//! Builds one serve-shaped [`Scenario`] per arrival process (same
+//! synthetic multi-domain workload, same 70% utilization — the facade
+//! calibrates the round capacity), runs each through
+//! [`scenario::run`], and prints throughput, simulated latency
 //! percentiles, shed rate and solution-cache hit rate side by side. No
 //! model artifacts needed — the engine runs at the selection/energy
 //! level, like the paper's Figs. 6–9 experiments.
@@ -12,60 +13,68 @@
 //! cargo run --release --example serve_dmoe [-- --queries N --utilization X]
 //! ```
 
-use dmoe::coordinator::ServePolicy;
-use dmoe::serve::{
-    estimate_round_latency_s, ArrivalProcess, QueueConfig, ServeEngine, ServeOptions,
-    TrafficConfig,
-};
+use dmoe::scenario::{self, Dur, ProcessSpec, RateSpec, RunReport, Scenario, TrafficSpec};
 use dmoe::util::cli::Args;
 use dmoe::util::table::Table;
 use dmoe::SystemConfig;
 
 fn main() {
     let args = Args::from_env();
-    let cfg = SystemConfig::default();
-    let k = cfg.moe.experts;
-    let layers = cfg.moe.layers;
+    if let Err(e) = args.expect(&["queries", "utilization"]) {
+        eprintln!("error: {e:#}");
+        std::process::exit(2);
+    }
     let queries = args.get_usize("queries", 5_000);
     let utilization = args.get_f64("utilization", 0.7);
 
-    let policy = ServePolicy::jesa(0.8, 2, layers);
-    let base_traffic = TrafficConfig {
-        queries,
-        tokens_per_query: 4,
-        seed: cfg.workload.seed,
-        ..TrafficConfig::poisson(1.0, queries)
-    };
-
-    let round_s = estimate_round_latency_s(&cfg, &policy, &base_traffic, 4).max(1e-9);
-    let rate = utilization * k as f64 / round_s;
-    println!(
-        "DMoE serve engine: K={k} L={layers}, round ≈ {round_s:.3} s, \
-         capacity ≈ {:.2} q/s, offered {rate:.2} q/s ({:.0}% util), {queries} queries\n",
-        k as f64 / round_s,
-        utilization * 100.0,
-    );
-
-    let processes = [
-        ArrivalProcess::Poisson { rate_qps: rate },
-        ArrivalProcess::bursty_around(rate, 50.0 * round_s),
-        ArrivalProcess::diurnal_around(rate, 3.0, 500.0 * round_s),
+    let processes: [(&str, ProcessSpec); 3] = [
+        ("poisson", ProcessSpec::Poisson),
+        (
+            "bursty",
+            ProcessSpec::Bursty {
+                dwell: Dur::Rounds(50.0),
+            },
+        ),
+        (
+            "diurnal",
+            ProcessSpec::Diurnal {
+                peak_to_trough: 3.0,
+                period: Dur::Rounds(500.0),
+            },
+        ),
     ];
 
     let mut table = Table::new(&[
         "process", "done", "shed %", "q/s sim", "p50 s", "p99 s", "hit %", "energy J", "wall s",
     ]);
-    for process in processes {
-        let traffic = TrafficConfig {
-            process,
-            ..base_traffic.clone()
+    let mut banner_shown = false;
+    for (tag, process) in processes {
+        let s = Scenario::builder(&format!("serve-dmoe-{tag}"))
+            .system(SystemConfig::default())
+            .traffic(TrafficSpec {
+                queries,
+                process,
+                rate: RateSpec::Utilization(utilization),
+                ..TrafficSpec::default()
+            })
+            .build()
+            .expect("example scenario validates");
+        let prepared = scenario::prepare(&s).expect("example scenario prepares");
+        if !banner_shown {
+            println!(
+                "DMoE serve engine via the scenario facade: capacity ≈ {:.2} q/s, round ≈ \
+                 {:.3} s, offered {:.0}% utilization, {queries} queries\n",
+                prepared.capacity_qps,
+                prepared.round_s,
+                utilization * 100.0,
+            );
+            banner_shown = true;
+        }
+        let report = prepared.run();
+        let r = match &report {
+            RunReport::Serve(r) => r,
+            RunReport::Fleet(_) => unreachable!("serve-shaped scenario"),
         };
-        let opts = ServeOptions::new(
-            policy.clone(),
-            QueueConfig::for_system(k, round_s),
-        );
-        let engine = ServeEngine::new(&cfg, opts);
-        let r = engine.run(&traffic);
         table.row(vec![
             r.process.clone(),
             format!("{}", r.completed),

@@ -1,29 +1,28 @@
-//! Fleet bench: router dispatch cost, mobility stepping, end-to-end
-//! multi-cell engine throughput across cell counts and routing policies,
-//! and the headline lane-parallel comparison — a 4-cell fleet on the
-//! work-stealing executor vs the sequential interleaved baseline at
-//! equal offered load, with a bit-identity check on the reports.
+//! Fleet bench: mobility stepping, end-to-end multi-cell engine
+//! throughput across cell counts and routing policies, and the headline
+//! lane-parallel comparison — a 4-cell fleet on the work-stealing
+//! executor vs the sequential interleaved baseline at equal offered
+//! load, with a bit-identity check on the report digests.
 //!
-//! Writes `BENCH_fleet.json` (wall clocks, speedup, rounds/s, cache hit
-//! rate, report-identity verdict) so the repo carries a perf trajectory
-//! across PRs.
+//! The workload comes from the **`urban-macro-jsq` scenario preset**;
+//! every sweep point is that scenario with cells/route/load overridden,
+//! run through the facade. `BENCH_fleet.json` stamps the scenario name
+//! so the perf trajectory is attributable to a named workload.
 
-use dmoe::config::SystemConfig;
-use dmoe::coordinator::ServePolicy;
-use dmoe::fleet::{
-    CellLayout, FleetEngine, FleetOptions, FleetReport, Mobility, MobilityConfig, RoutePolicy,
-};
-use dmoe::serve::{ArrivalProcess, QueueConfig, TrafficConfig};
+use dmoe::fleet::{CellLayout, Mobility, MobilityConfig, RoutePolicy};
+use dmoe::scenario::{self, RateSpec, RunReport, Scenario};
 use dmoe::util::bench::{black_box, Bencher};
 use dmoe::util::json::Json;
 use std::time::Instant;
 
+const PRESET: &str = "urban-macro-jsq";
+
 fn main() {
     let mut b = Bencher::new();
-    let cfg = SystemConfig::default();
-    let k = cfg.moe.experts;
-    let layers = cfg.moe.layers;
-    let policy = ServePolicy::jesa(0.8, 2, layers);
+    let base = Scenario::preset(PRESET).expect("bench preset resolves");
+    let k = base.system.moe.experts;
+    let layers = base.system.moe.layers;
+    println!("# workload: scenario preset '{PRESET}' (K={k} L={layers})\n");
 
     println!("# mobility stepping (48 users, 4 cells, 1000 ticks)\n");
     let layout = CellLayout::grid(4, 200.0);
@@ -33,27 +32,45 @@ fn main() {
         black_box(m.position(0))
     });
 
+    /// The preset scenario with the bench knobs applied.
+    fn bench_scenario(
+        base: &Scenario,
+        cells: usize,
+        route: RoutePolicy,
+        queries: usize,
+        rate_qps: f64,
+        lane_workers: Option<usize>,
+    ) -> Scenario {
+        let mut s = base.clone();
+        s.name = format!("{PRESET}-bench-{cells}x-{}", route.label());
+        s.traffic.queries = queries;
+        s.traffic.rate = RateSpec::Qps(rate_qps);
+        s.workers = Some(1);
+        let f = s.fleet.as_mut().expect("preset is fleet-shaped");
+        f.cells = cells;
+        f.route = route;
+        f.lane_workers = lane_workers;
+        s
+    }
+
+    fn run_fleet(prepared: &scenario::Prepared) -> dmoe::fleet::FleetReport {
+        match prepared.run() {
+            RunReport::Fleet(r) => r,
+            RunReport::Serve(_) => unreachable!("fleet-shaped scenario"),
+        }
+    }
+
     println!("\n# end-to-end fleet engine (400 queries, poisson)\n");
     for cells in [1usize, 2, 4] {
         for route in [RoutePolicy::JoinShortestQueue, RoutePolicy::ChannelAware] {
             let queries = 400;
-            let traffic = TrafficConfig {
-                process: ArrivalProcess::Poisson {
-                    rate_qps: 30.0 * cells as f64,
-                },
-                queries,
-                tokens_per_query: 4,
-                ..TrafficConfig::poisson(1.0, queries)
-            };
-            let mut fopts =
-                FleetOptions::new(cells, route, policy.clone(), QueueConfig::for_system(k, 0.5));
-            fopts.workers = 1;
-            let engine = FleetEngine::new(&cfg, fopts);
+            let s = bench_scenario(&base, cells, route, queries, 30.0 * cells as f64, None);
+            let prepared = scenario::prepare(&s).expect("bench scenario prepares");
             let r = b.bench(
                 &format!("fleet/400q/cells={cells}/route={}", route.label()),
-                || black_box(engine.run(&traffic)),
+                || black_box(prepared.run()),
             );
-            let report = engine.run(&traffic);
+            let report = run_fleet(&prepared);
             println!(
                 "cells={cells} route={:<13} -> {:.0} q/s engine speed, hit {:.1}%, cross \
                  {:.1}%, imbalance {:.2}",
@@ -76,41 +93,33 @@ fn main() {
     println!("\n# lane-parallel 4-cell fleet vs sequential interleaved baseline\n");
     let cells = 4usize;
     let queries = 800;
-    let traffic = TrafficConfig {
-        process: ArrivalProcess::Poisson {
-            rate_qps: 40.0 * cells as f64,
-        },
-        queries,
-        tokens_per_query: 4,
-        gate_noise: 0.08,
-        domains: 16,
-        ..TrafficConfig::poisson(1.0, queries)
-    };
-    let mk_opts = |lane_workers: usize| {
-        let mut fopts = FleetOptions::new(
+    let mk = |lane_workers: usize| {
+        let mut s = bench_scenario(
+            &base,
             cells,
             RoutePolicy::RoundRobin,
-            policy.clone(),
-            QueueConfig::for_system(k, 0.5),
+            queries,
+            40.0 * cells as f64,
+            Some(lane_workers),
         );
-        fopts.workers = 1;
-        fopts.lane_workers = lane_workers;
-        fopts.cache_shards = cells;
-        fopts
+        s.traffic.gate_noise = 0.08;
+        s.traffic.domains = 16;
+        s.cache.shards = cells;
+        s
     };
-    let seq_engine = FleetEngine::new(&cfg, mk_opts(0));
-    let par_engine = FleetEngine::new(&cfg, mk_opts(cells));
+    let seq_prepared = scenario::prepare(&mk(0)).expect("sequential scenario prepares");
+    let par_prepared = scenario::prepare(&mk(cells)).expect("parallel scenario prepares");
     // Best-of-4 wall clocks (fleet runs are too long for the adaptive
     // sampler; the first lap doubles as warmup and min() discards it).
     let mut seq_wall = f64::INFINITY;
     let mut par_wall = f64::INFINITY;
-    let mut last: Option<(FleetReport, FleetReport)> = None;
+    let mut last = None;
     for _ in 0..4 {
         let t = Instant::now();
-        let seq = black_box(seq_engine.run(&traffic));
+        let seq = black_box(run_fleet(&seq_prepared));
         seq_wall = seq_wall.min(t.elapsed().as_secs_f64());
         let t = Instant::now();
-        let par = black_box(par_engine.run(&traffic));
+        let par = black_box(run_fleet(&par_prepared));
         par_wall = par_wall.min(t.elapsed().as_secs_f64());
         last = Some((seq, par));
     }
@@ -136,6 +145,7 @@ fn main() {
 
     let report = Json::obj(vec![
         ("bench", Json::Str("fleet".to_string())),
+        ("scenario", Json::Str(PRESET.to_string())),
         ("cells", Json::Num(cells as f64)),
         ("queries", Json::Num(queries as f64)),
         ("cores", Json::Num(cores as f64)),
@@ -158,6 +168,6 @@ fn main() {
 }
 
 /// Keep a handle on report fields the optimizer must not fold away.
-fn report_summary(r: &FleetReport) -> (usize, f64) {
+fn report_summary(r: &dmoe::fleet::FleetReport) -> (usize, f64) {
     black_box((r.completed, r.energy.total_j()))
 }

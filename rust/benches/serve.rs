@@ -1,25 +1,35 @@
 //! Serving-engine bench: traffic generation, cached vs uncached round
 //! solves, and end-to-end engine throughput (simulated queries per
 //! wall-clock second — the number the ROADMAP's scaling work moves).
+//!
+//! The workload comes from the **`paper-baseline` scenario preset** (the
+//! paper's K=8 energy setup), so the perf trajectory in
+//! `BENCH_serve.json` is attributable to a named, versioned workload
+//! instead of ad-hoc structs.
 
 use dmoe::channel::ChannelModel;
-use dmoe::config::SystemConfig;
-use dmoe::coordinator::ServePolicy;
 use dmoe::energy::EnergyModel;
 use dmoe::gating::{GateScores, SyntheticGate};
 use dmoe::jesa::JesaOptions;
+use dmoe::scenario::{self, RateSpec, Scenario};
 use dmoe::serve::{
-    solve_quantized, ArrivalProcess, QuantizerConfig, QueueConfig, ServeEngine, ServeOptions,
-    SolutionCache, TrafficConfig, TrafficGenerator,
+    solve_quantized, ArrivalProcess, QuantizerConfig, SolutionCache, TrafficConfig,
+    TrafficGenerator,
 };
 use dmoe::util::bench::{black_box, Bencher};
+use dmoe::util::json::Json;
 use dmoe::util::rng::Xoshiro256pp;
+
+const PRESET: &str = "paper-baseline";
 
 fn main() {
     let mut b = Bencher::new();
-    let cfg = SystemConfig::default();
+    let base = Scenario::preset(PRESET).expect("bench preset resolves");
+    let cfg = base.system.clone();
     let k = cfg.moe.experts;
     let layers = cfg.moe.layers;
+
+    println!("# workload: scenario preset '{PRESET}' (K={k} L={layers})\n");
 
     println!("# traffic generation (10k queries)\n");
     for process in [
@@ -30,7 +40,7 @@ fn main() {
         let traffic = TrafficConfig {
             process: process.clone(),
             queries: 10_000,
-            tokens_per_query: 4,
+            tokens_per_query: base.traffic.tokens_per_query,
             ..TrafficConfig::poisson(1.0, 1)
         };
         let generator = TrafficGenerator::new(traffic, k, layers);
@@ -65,29 +75,45 @@ fn main() {
         ))
     });
 
-    println!("\n# end-to-end engine (1000 queries, poisson)\n");
+    println!("\n# end-to-end engine via the scenario facade (1000 queries, poisson)\n");
+    let mut engine_speed = 0.0f64;
+    let mut hit_rate = 0.0f64;
     for cache_capacity in [0usize, 4096] {
-        let policy = ServePolicy::jesa(0.8, 2, layers);
-        let traffic = TrafficConfig {
-            process: ArrivalProcess::Poisson { rate_qps: 50.0 },
-            queries: 1000,
-            tokens_per_query: 4,
-            ..TrafficConfig::poisson(1.0, 1)
-        };
-        let opts = ServeOptions {
-            cache_capacity,
-            workers: 1,
-            ..ServeOptions::new(policy, QueueConfig::for_system(k, 0.5))
-        };
-        let engine = ServeEngine::new(&cfg, opts);
+        // The preset workload, pinned for benching: fixed query count,
+        // fixed absolute rate (so the offered load does not drift with
+        // capacity-probe changes), one solve worker, fixed quant grids.
+        let mut s = base.clone();
+        s.traffic.queries = 1_000;
+        s.traffic.rate = RateSpec::Qps(50.0);
+        s.cache.capacity = cache_capacity;
+        s.quant.adaptive = false;
+        s.workers = Some(1);
+        let prepared = scenario::prepare(&s).expect("bench scenario prepares");
         let r = b.bench(&format!("engine/1k_queries/cache={cache_capacity}"), || {
-            black_box(engine.run(&traffic))
+            black_box(prepared.run())
         });
-        let report = engine.run(&traffic);
+        let report = prepared.run();
+        let speed = 1000.0 / r.mean_s();
         println!(
-            "cache={cache_capacity:<5} -> {:.0} q/s engine speed, hit rate {:.1}%",
-            1000.0 / r.mean_s(),
-            report.cache.hit_rate() * 100.0
+            "cache={cache_capacity:<5} -> {speed:.0} q/s engine speed, hit rate {:.1}%",
+            report.cache().hit_rate() * 100.0
         );
+        if cache_capacity > 0 {
+            engine_speed = speed;
+            hit_rate = report.cache().hit_rate();
+        }
     }
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("serve".to_string())),
+        ("scenario", Json::Str(PRESET.to_string())),
+        ("engine_qps_cached", Json::Num(engine_speed)),
+        ("cache_hit_rate", Json::Num(hit_rate)),
+        (
+            "timings",
+            Json::parse(&b.to_json()).expect("bencher JSON parses"),
+        ),
+    ]);
+    std::fs::write("BENCH_serve.json", report.to_string_pretty()).ok();
+    println!("\nwrote BENCH_serve.json");
 }

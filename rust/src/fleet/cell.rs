@@ -250,6 +250,14 @@ impl Cell {
         &self.rounds_log
     }
 
+    /// Every query this cell's admission queue dropped, with the reason
+    /// (the fleet replays these to its [`EngineObserver`] after the run).
+    ///
+    /// [`EngineObserver`]: crate::scenario::EngineObserver
+    pub fn shed_log(&self) -> &[(u64, crate::serve::ShedReason)] {
+        self.queue.shed_log()
+    }
+
     pub fn ledger(&self) -> &EnergyLedger {
         &self.ledger
     }

@@ -91,7 +91,7 @@ impl CellLayout {
 }
 
 /// Mobility and distance-attenuation parameters.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct MobilityConfig {
     /// Concurrent users roaming the deployment.
     pub users: usize,

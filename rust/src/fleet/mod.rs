@@ -86,10 +86,13 @@ pub use router::{RoutePolicy, Router};
 use crate::coordinator::ServePolicy;
 use crate::energy::{EnergyBreakdown, EnergyModel};
 use crate::metrics::{Metrics, SelectionPattern};
+use crate::scenario::{
+    EngineObserver, HandoverEvent, NullObserver, RoundEvent, ShedEvent,
+};
 use crate::serve::engine::Completion;
 use crate::serve::{
-    derive_quantizer, estimate_round_latency_s, Arrival, EvictionPolicy, QuantizerConfig,
-    QueueConfig, SharedSolutionCache, TrafficConfig, TrafficGenerator,
+    derive_quantizer, Arrival, EvictionPolicy, QuantizerConfig, QueueConfig,
+    SharedSolutionCache, TrafficConfig, TrafficGenerator,
 };
 use crate::util::executor::{Executor, Task, TaskScope};
 use crate::util::pool::default_workers;
@@ -185,14 +188,20 @@ impl SessionTracker {
         }
     }
 
-    fn observe(&mut self, user: usize, attach: usize) {
+    /// Record one attachment observation; returns the previous cell when
+    /// this continued an existing session *and* changed attachment (a
+    /// handover), so the caller can emit the event.
+    fn observe(&mut self, user: usize, attach: usize) -> Option<usize> {
+        let mut handed_over = None;
         if let Some(prev) = self.last_attach[user] {
             self.continued_sessions += 1;
             if prev != attach {
                 self.handovers += 1;
+                handed_over = Some(prev);
             }
         }
         self.last_attach[user] = Some(attach);
+        handed_over
     }
 }
 
@@ -271,6 +280,20 @@ impl FleetEngine {
 
     /// Run one fleet simulation over a global traffic stream.
     pub fn run(&self, traffic: &TrafficConfig) -> FleetReport {
+        self.run_streaming(traffic, &mut NullObserver)
+    }
+
+    /// [`run`](Self::run) with streaming [`EngineObserver`] hooks.
+    /// Handover events stream live in global arrival order (routing is
+    /// sequential in every execution mode); per-cell round and shed
+    /// events are replayed after the run in ascending cell order, then
+    /// the final cache stats — see the
+    /// [observer contract](crate::scenario::observer).
+    pub fn run_streaming(
+        &self,
+        traffic: &TrafficConfig,
+        obs: &mut dyn EngineObserver,
+    ) -> FleetReport {
         let t0 = Instant::now();
         let k = self.cfg.moe.experts;
         let layers = self.cfg.moe.layers;
@@ -337,6 +360,7 @@ impl FleetEngine {
                 &energy,
                 lanes,
                 &mut sessions,
+                obs,
             );
         } else if lanes >= 2 {
             let executor = Executor::new(lanes);
@@ -351,6 +375,7 @@ impl FleetEngine {
                     &energy,
                     Some(scope),
                     &mut sessions,
+                    obs,
                 )
             });
         } else {
@@ -364,6 +389,7 @@ impl FleetEngine {
                 &energy,
                 None,
                 &mut sessions,
+                obs,
             );
         }
 
@@ -380,6 +406,26 @@ impl FleetEngine {
         for slot in &cells {
             let cell = slot.lock().unwrap();
             let cr = cell.report();
+            // Deterministic post-run replay of this cell's round/shed
+            // stream (cells execute in parallel, so these could not be
+            // emitted live without serializing the lanes).
+            for r in cell.rounds_log() {
+                obs.on_round(&RoundEvent {
+                    cell: cell.id(),
+                    start_s: r.start_s,
+                    latency_s: r.latency_s,
+                    queries: r.queries,
+                    tokens: r.tokens,
+                    cache_hits: r.cache_hits,
+                });
+            }
+            for &(id, reason) in cell.shed_log() {
+                obs.on_shed(&ShedEvent {
+                    cell: cell.id(),
+                    query_id: id,
+                    reason,
+                });
+            }
             completions.extend_from_slice(cell.completions());
             pattern.merge(cell.pattern());
             metrics.merge(cell.metrics());
@@ -393,6 +439,7 @@ impl FleetEngine {
         }
         let sim_end_s = completions.iter().map(|c| c.done_s).fold(0.0, f64::max);
         metrics.inc("handovers", sessions.handovers as u64);
+        obs.on_cache(&cache.stats());
 
         FleetReport {
             route: self.opts.route.label().to_string(),
@@ -432,6 +479,7 @@ impl FleetEngine {
         router: &mut Router,
         energy: &EnergyModel,
         sessions: &mut SessionTracker,
+        obs: &mut dyn EngineObserver,
     ) -> usize {
         let user = user_of(arrival.query.id, users, self.opts.seed);
         let target = router.route(
@@ -443,7 +491,15 @@ impl FleetEngine {
             energy,
             &self.opts.policy,
         );
-        sessions.observe(user, mobility.nearest_cell(layout, user));
+        let attach = mobility.nearest_cell(layout, user);
+        if let Some(from) = sessions.observe(user, attach) {
+            obs.on_handover(&HandoverEvent {
+                user,
+                from_cell: from,
+                to_cell: attach,
+                at_s: arrival.at_s,
+            });
+        }
         target
     }
 
@@ -467,6 +523,7 @@ impl FleetEngine {
         energy: &EnergyModel,
         scope: Option<&TaskScope<'_, 'env>>,
         sessions: &mut SessionTracker,
+        obs: &mut dyn EngineObserver,
     ) {
         let users = mobility.users();
         let mut drains = self.opts.drain_at.clone();
@@ -545,7 +602,7 @@ impl FleetEngine {
                 }
             }
             let target = self.route_arrival(
-                &arrival, users, &views, mobility, layout, router, energy, sessions,
+                &arrival, users, &views, mobility, layout, router, energy, sessions, obs,
             );
             cells[target].lock().unwrap().push(arrival);
         }
@@ -584,6 +641,7 @@ impl FleetEngine {
         energy: &EnergyModel,
         lanes: usize,
         sessions: &mut SessionTracker,
+        obs: &mut dyn EngineObserver,
     ) {
         debug_assert!(self.static_routing());
         let users = mobility.users();
@@ -619,6 +677,7 @@ impl FleetEngine {
                 router,
                 energy,
                 sessions,
+                obs,
             );
             events.push(LaneEvent {
                 t,
@@ -693,22 +752,4 @@ fn advance_world(
 fn user_of(query_id: u64, users: usize, seed: u64) -> usize {
     let hash = SplitMix64::new(query_id ^ seed.rotate_left(17)).next_u64();
     (hash % users as u64) as usize
-}
-
-/// Derated single-cell round-latency estimate for fleet capacity
-/// planning: fleet cells run at mobility-scaled path loss, so their
-/// rounds are slower than the unscaled single-engine probe. `scale` is
-/// the typical attenuation (e.g.
-/// [`Mobility::mean_attachment_attenuation`]).
-pub fn estimate_cell_round_latency_s(
-    cfg: &SystemConfig,
-    policy: &ServePolicy,
-    traffic: &TrafficConfig,
-    rounds: usize,
-    scale: f64,
-) -> f64 {
-    assert!(scale > 0.0 && scale.is_finite());
-    let mut derated = cfg.clone();
-    derated.channel.path_loss *= scale;
-    estimate_round_latency_s(&derated, policy, traffic, rounds)
 }

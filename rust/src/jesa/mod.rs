@@ -25,10 +25,16 @@ use crate::channel::{ChannelState, LinkId};
 use crate::energy::{EnergyBreakdown, EnergyModel};
 use crate::gating::GateScores;
 use crate::selection::des::DesStats;
-use crate::selection::{des, greedy, topk, Selection, SelectionProblem};
+use crate::selection::registry::{ExpertSelector, SelectorSpec};
+use crate::selection::{Selection, SelectionProblem};
 use crate::util::rng::Xoshiro256pp;
 
 /// Which expert-selection rule the round uses.
+///
+/// Every variant except [`Forced`](SelectionPolicy::Forced) maps 1:1
+/// onto the [selector registry](crate::selection::registry) — the JESA
+/// driver resolves its per-round solver there, so scenarios pick these
+/// by name (`des`, `topk:K`, `greedy`, `exhaustive`, `dp:G`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SelectionPolicy {
     /// The paper's optimal DES (Algorithm 1).
@@ -37,8 +43,13 @@ pub enum SelectionPolicy {
     TopK(usize),
     /// Greedy ratio heuristic (ablation).
     Greedy,
+    /// The `O(2^K)` exhaustive oracle (small-K cross-check).
+    Exhaustive,
+    /// Pseudo-polynomial score-grid DP with the given resolution
+    /// (Appendix-A ablation).
+    Dp(usize),
     /// Route every token to one fixed expert — the "individual expert"
-    /// rows of Table I.
+    /// rows of Table I. Not a solver; stays outside the registry.
     Forced(usize),
 }
 
@@ -137,11 +148,14 @@ pub fn solve_round(
     // -- Initialization: random exclusive subcarrier assignment ----------
     let mut link_rates = random_initial_rates(state, &mut rng);
 
-    // One reusable branch-and-bound scratch for every DES instance of the
-    // round (K sources × tokens × BCD iterations): the solver's arena and
-    // frontier are allocated once here and reused, keeping the selection
-    // hot path free of steady-state allocation.
-    let mut des_solver = des::DesSolver::new();
+    // The round's solver comes from the expert-selector registry — one
+    // resolution per round, reused across every DES instance (K sources ×
+    // tokens × BCD iterations), so the DES selector's arena and frontier
+    // are allocated once and the selection hot path stays free of
+    // steady-state allocation. `Forced` pins a route instead of running a
+    // solver and is handled inline below.
+    let mut solver: Option<Box<dyn ExpertSelector>> =
+        SelectorSpec::from_policy(opts.policy).map(|s| s.build());
 
     let mut prev_selections: Option<Vec<Vec<Vec<usize>>>> = None;
     let mut prev_alloc_sig: Option<Vec<(usize, usize, usize)>> = None;
@@ -184,23 +198,22 @@ pub fn solve_round(
                     problem.threshold,
                     problem.max_active,
                 );
-                let sel = match opts.policy {
-                    SelectionPolicy::Des => {
-                        let (s, st) = des_solver.solve(&inst);
+                let sel = match (&mut solver, opts.policy) {
+                    (Some(solver), _) => {
+                        let (s, st) = solver.solve(&inst);
                         des_stats.nodes_expanded += st.nodes_expanded;
                         des_stats.nodes_pruned += st.nodes_pruned;
                         des_stats.nodes_infeasible += st.nodes_infeasible;
                         s
                     }
-                    SelectionPolicy::TopK(kk) => topk::solve(&inst, kk),
-                    SelectionPolicy::Greedy => greedy::solve(&inst),
-                    SelectionPolicy::Forced(j) => {
+                    (None, SelectionPolicy::Forced(j)) => {
                         // An offline forced target degrades to
                         // in-situ processing, flagged as fallback.
                         let offline = opts.is_offline(j);
                         let target = if offline { i } else { j };
                         Selection::from_indices(&inst, vec![target], offline)
                     }
+                    (None, p) => unreachable!("policy {p:?} missing from the selector registry"),
                 };
                 if sel.fallback {
                     fallbacks += 1;

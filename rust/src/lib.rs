@@ -4,28 +4,23 @@
 //! Distributed Mixture-of-Experts at the Wireless Edge"* (Qin, Wu, Du,
 //! Huang, 2025) as a three-layer Rust + JAX + Pallas stack.
 //!
-//! The crate provides:
+//! # The front door
 //!
-//! * [`channel`] — the wireless substrate: Rayleigh-fading OFDMA channel
-//!   simulator with per-subcarrier Shannon rates (paper eq. 1–2).
-//! * [`energy`] — communication (eq. 3) and computation (eq. 4) energy
-//!   models plus an energy ledger.
-//! * [`gating`] — gate scores, layer importance factors `γ^(l)` and the
-//!   QoS constraint C1.
-//! * [`selection`] — the paper's core contribution: the optimal **DES**
-//!   branch-and-bound expert-selection algorithm (Alg. 1) with the
-//!   LP-relaxation bounding criterion, served by a zero-steady-state-
-//!   allocation solver (reusable node arena + best-first frontier with a
-//!   greedy warm start — `DesSolver`), together with every baseline the
-//!   evaluation compares against (Top-k, exhaustive oracle, greedy, and
-//!   the retained seed BFS as the regression oracle).
-//! * [`assignment`] — Kuhn–Munkres (Hungarian) solver for the optimal
-//!   subcarrier allocation subproblem P3(a).
-//! * [`jesa`] — the **JESA** block-coordinate-descent joint optimizer
-//!   (Alg. 2) with the Theorem-1 asymptotic-optimality machinery.
-//! * [`protocol`] / [`coordinator`] — the DMoE protocol (Fig. 1b) round
-//!   state machine and the edge-server coordinator that drives real model
-//!   inference through PJRT.
+//! * [`scenario`] — **start here.** One declarative, serializable
+//!   [`Scenario`](scenario::Scenario) spec (system + policy + traffic +
+//!   queue + cache + quantizer + optional fleet) with a typed builder, a
+//!   named preset library (`paper-baseline`, `urban-macro-jsq`,
+//!   `flash-crowd-mmpp`, `handover-storm`,
+//!   `cache-cold-heterogeneous-gamma`, `low-qos-energy-saver`),
+//!   bit-identical JSON round-trips, and the unified execution facade:
+//!   the [`Engine`](scenario::Engine) trait + [`RunReport`](scenario::RunReport)
+//!   both engines implement, plus streaming
+//!   [`EngineObserver`](scenario::EngineObserver) hooks. The CLI
+//!   (`dmoe run --scenario <file|preset>`), examples and benches all run
+//!   through it.
+//!
+//! # The engines it drives
+//!
 //! * [`serve`] — the continuous multi-user serving engine: open-loop
 //!   arrival processes (Poisson / bursty MMPP / diurnal), admission
 //!   control with QoS-aware shedding, a quantized JESA/DES solution
@@ -41,11 +36,43 @@
 //!   cache (cross-cell hits). Cells execute lane-parallel on the
 //!   work-stealing executor with a bit-identical report (see the fleet
 //!   module's concurrency model / determinism contract).
+//!
+//! # The optimization core
+//!
+//! * [`selection`] — the paper's core contribution: the optimal **DES**
+//!   branch-and-bound expert-selection algorithm (Alg. 1) with the
+//!   LP-relaxation bounding criterion, served by a zero-steady-state-
+//!   allocation solver (`DesSolver`), every baseline the evaluation
+//!   compares against (Top-k, exhaustive oracle, greedy, DP, seed BFS as
+//!   the regression oracle), and the
+//!   [selector registry](selection::registry) that exposes all of them
+//!   behind one by-name [`ExpertSelector`](selection::ExpertSelector)
+//!   trait.
+//! * [`assignment`] — Kuhn–Munkres (Hungarian) solver for the optimal
+//!   subcarrier allocation subproblem P3(a).
+//! * [`jesa`] — the **JESA** block-coordinate-descent joint optimizer
+//!   (Alg. 2), resolving its per-round solver through the selector
+//!   registry, with the Theorem-1 asymptotic-optimality machinery.
+//!
+//! # Physics, protocol, model
+//!
+//! * [`channel`] — the wireless substrate: Rayleigh-fading OFDMA channel
+//!   simulator with per-subcarrier Shannon rates (paper eq. 1–2).
+//! * [`energy`] — communication (eq. 3) and computation (eq. 4) energy
+//!   models plus an energy ledger.
+//! * [`gating`] — gate scores, layer importance factors `γ^(l)` and the
+//!   QoS constraint C1.
+//! * [`protocol`] / [`coordinator`] — the DMoE protocol (Fig. 1b) round
+//!   state machine and the edge-server coordinator that drives real model
+//!   inference through PJRT.
 //! * [`runtime`] — AOT bridge: loads `artifacts/*.hlo.txt` produced by
 //!   the build-time JAX/Pallas pipeline and executes them on the PJRT CPU
 //!   client. Python is never on the request path.
 //! * [`moe`] — model metadata and vertical partitioning (§III-A).
 //! * [`workload`] — synthetic multi-domain query generator and eval sets.
+//!
+//! # Instrumentation and substrates
+//!
 //! * [`metrics`] — counters, histograms and report emission.
 //! * [`bench_harness`] — drivers that regenerate every table and figure
 //!   of the paper's evaluation section.
@@ -66,9 +93,11 @@ pub mod metrics;
 pub mod moe;
 pub mod protocol;
 pub mod runtime;
+pub mod scenario;
 pub mod selection;
 pub mod serve;
 pub mod util;
 pub mod workload;
 
 pub use config::SystemConfig;
+pub use scenario::Scenario;

@@ -3,10 +3,12 @@
 //! ```text
 //! dmoe <subcommand> [--flags]
 //!
-//!   serve      continuous serving engine: arrival process -> admission
-//!              queue -> cached JESA rounds (no artifacts needed)
-//!   fleet      multi-cell sharded serving: N lanes + user router +
-//!              mobility/handover + shared solution cache
+//!   run        THE front door: execute a scenario by preset name or
+//!              JSON file (`dmoe run --scenario paper-baseline`)
+//!   serve      continuous serving engine — thin shim that builds a
+//!              serve-shaped scenario from flags
+//!   fleet      multi-cell sharded serving — thin shim that builds a
+//!              fleet-shaped scenario from flags
 //!   eval       serve every eval set with a policy, print metrics
 //!   info       artifact / model / config summary
 //!   table1     Table I  — DES accuracy + normalized energy
@@ -18,17 +20,19 @@
 //!   theorem1   Theorem 1 — BCD optimality rate vs bound
 //!   all        run every experiment, save reports/
 //! ```
+//!
+//! Unknown flags are rejected with a "did you mean" suggestion — a
+//! typo'd flag silently doing nothing is exactly the failure mode the
+//! scenario front door exists to prevent.
 
 use dmoe::bench_harness::{self as bh, FigureReport};
-use dmoe::coordinator::{DmoeServer, ServePolicy};
-use dmoe::fleet::{
-    estimate_cell_round_latency_s, CellLayout, FleetEngine, FleetOptions, Mobility,
-    MobilityConfig, RoutePolicy,
+use dmoe::coordinator::DmoeServer;
+use dmoe::scenario::{
+    self, CacheSpec, Dur, FleetSpec, PolicySpec, ProcessSpec, QuantSpec, QueueSpec, RateSpec,
+    Scenario, TrafficSpec,
 };
-use dmoe::serve::{
-    estimate_round_latency_s, ArrivalProcess, QuantizerConfig, QueueConfig, ServeEngine,
-    ServeOptions, TrafficConfig,
-};
+use dmoe::selection::SelectorSpec;
+use dmoe::serve::EvictionPolicy;
 use dmoe::util::cli::Args;
 use dmoe::util::error::Result;
 use dmoe::workload::load_eval_sets;
@@ -41,6 +45,69 @@ fn main() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
+}
+
+// -- flag vocabularies (for `Args::expect`) ---------------------------------
+
+/// Flags every subcommand honors (system config selection).
+const BASE_FLAGS: &[&str] = &["config", "artifacts", "seed"];
+/// Report emission for the figure/table subcommands.
+const EMIT_FLAGS: &[&str] = &["save", "reports", "batches", "rounds"];
+/// Policy selection, shared by the serving shims and `eval`.
+const POLICY_FLAGS: &[&str] = &["policy", "selector", "gamma0", "d", "k", "z"];
+/// The serving-engine shim vocabulary (traffic, queue, cache, quant).
+const SERVE_FLAGS: &[&str] = &[
+    "queries",
+    "domains",
+    "tokens",
+    "noise",
+    "process",
+    "dwell",
+    "peak",
+    "period",
+    "rate",
+    "utilization",
+    "queue",
+    "batch",
+    "max-wait",
+    "deadline",
+    "cache",
+    "workers",
+    "step",
+    "gate-grid",
+    "fixed-quant",
+    "pattern",
+];
+/// The fleet shim's additional vocabulary.
+const FLEET_FLAGS: &[&str] = &[
+    "cells",
+    "route",
+    "users",
+    "speed",
+    "spacing",
+    "rho",
+    "drain-cell",
+    "drain-at",
+    "lane-workers",
+    "cache-shards",
+];
+/// `dmoe run` vocabulary.
+const RUN_FLAGS: &[&str] = &[
+    "scenario",
+    "queries",
+    "seed",
+    "verify",
+    "save-scenario",
+    "pattern",
+    "list",
+];
+
+fn expect_flags(args: &Args, groups: &[&[&str]]) -> Result<()> {
+    let mut known: Vec<&str> = Vec::new();
+    for g in groups {
+        known.extend_from_slice(g);
+    }
+    args.expect(&known)
 }
 
 fn base_config(args: &Args) -> SystemConfig {
@@ -76,21 +143,40 @@ fn dispatch(sub: &str, args: &Args) -> Result<()> {
             println!("{HELP}");
             Ok(())
         }
-        "info" => info(args),
-        "serve" => serve(args),
-        "fleet" => fleet(args),
-        "eval" => eval(args),
+        "info" => {
+            expect_flags(args, &[BASE_FLAGS])?;
+            info(args)
+        }
+        "run" => {
+            expect_flags(args, &[RUN_FLAGS])?;
+            run_scenario(args)
+        }
+        "serve" => {
+            expect_flags(args, &[BASE_FLAGS, POLICY_FLAGS, SERVE_FLAGS])?;
+            execute(scenario_from_serve_flags(args)?, args)
+        }
+        "fleet" => {
+            expect_flags(args, &[BASE_FLAGS, POLICY_FLAGS, SERVE_FLAGS, FLEET_FLAGS])?;
+            execute(scenario_from_fleet_flags(args)?, args)
+        }
+        "eval" => {
+            expect_flags(args, &[BASE_FLAGS, EMIT_FLAGS, POLICY_FLAGS])?;
+            eval(args)
+        }
         "table1" => {
+            expect_flags(args, &[BASE_FLAGS, EMIT_FLAGS])?;
             let mut server = server(args)?;
             let (report, _) = bh::table1::run(&mut server, batches(args))?;
             emit(&report, args)
         }
         "fig3" => {
+            expect_flags(args, &[BASE_FLAGS, EMIT_FLAGS])?;
             let mut server = server(args)?;
             let report = bh::fig3::run(&mut server, batches(args))?;
             emit(&report, args)
         }
         "fig5" => {
+            expect_flags(args, &[BASE_FLAGS, EMIT_FLAGS, &["z", "low"]])?;
             let mut server = server(args)?;
             let base = args.get_f64("z", 0.5);
             let low = args.get_f64("low", 0.1);
@@ -98,6 +184,7 @@ fn dispatch(sub: &str, args: &Args) -> Result<()> {
             emit(&report, args)
         }
         "fig6" => {
+            expect_flags(args, &[BASE_FLAGS, EMIT_FLAGS])?;
             let mut cfg = SystemConfig::paper_energy();
             cfg.workload.seed = base_config(args).workload.seed;
             let gammas = [0.6, 0.8, 1.0];
@@ -109,6 +196,7 @@ fn dispatch(sub: &str, args: &Args) -> Result<()> {
             emit(&report, args)
         }
         "fig7" | "fig8" | "fig9" => {
+            expect_flags(args, &[BASE_FLAGS, EMIT_FLAGS])?;
             let mut cfg = SystemConfig::paper_energy();
             cfg.workload.seed = base_config(args).workload.seed;
             let rounds = args.get_usize("rounds", 24);
@@ -121,6 +209,7 @@ fn dispatch(sub: &str, args: &Args) -> Result<()> {
             Ok(())
         }
         "fig10" => {
+            expect_flags(args, &[BASE_FLAGS, EMIT_FLAGS])?;
             let mut server = server(args)?;
             let opts = bh::fig10::Fig10Options {
                 max_batches: batches(args),
@@ -130,6 +219,7 @@ fn dispatch(sub: &str, args: &Args) -> Result<()> {
             emit(&report, args)
         }
         "theorem1" => {
+            expect_flags(args, &[BASE_FLAGS, EMIT_FLAGS, &["experts", "trials"]])?;
             // Enumeration of the joint optimum is perm(M, K(K-1)); keep
             // (K, M) combinations tractable: K=2 → 2 links (M² maps),
             // K=3 → 6 links (only small M).
@@ -144,6 +234,7 @@ fn dispatch(sub: &str, args: &Args) -> Result<()> {
             emit(&report, args)
         }
         "all" => {
+            expect_flags(args, &[BASE_FLAGS, EMIT_FLAGS])?;
             let cfg_seed = base_config(args).workload.seed;
             // Algorithm-level experiments (no artifacts needed).
             let mut energy_cfg = SystemConfig::paper_energy();
@@ -221,220 +312,227 @@ fn info(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Build a policy from `--policy` at the system's layer count.
-fn policy_from_args(args: &Args, layers: usize) -> Result<ServePolicy> {
-    Ok(match args.get_or("policy", "jesa").as_str() {
-        "jesa" => ServePolicy::jesa(args.get_f64("gamma0", 0.8), args.get_usize("d", 2), layers),
-        "topk" => ServePolicy::topk(args.get_usize("k", 2), layers),
-        "homogeneous" => {
-            ServePolicy::homogeneous(args.get_f64("z", 0.5), args.get_usize("d", 2), layers)
+// -- the scenario front door ------------------------------------------------
+
+/// `dmoe run --scenario <preset|file.json>`: resolve, optionally verify
+/// the JSON round-trip and dump the canonical form, then execute through
+/// the engine facade.
+fn run_scenario(args: &Args) -> Result<()> {
+    if args.flag("list") {
+        println!("scenario presets:");
+        for name in scenario::PRESET_NAMES {
+            let s = Scenario::preset(name)?;
+            let shape = if s.fleet.is_some() { "fleet" } else { "serve" };
+            println!("  {name:<34} {shape:<6} {} queries", s.traffic.queries);
         }
-        other => dmoe::bail!("unknown --policy {other} (jesa|topk|homogeneous)"),
-    })
+        return Ok(());
+    }
+    let spec = match args
+        .get("scenario")
+        .map(str::to_string)
+        .or_else(|| args.positional.first().cloned())
+    {
+        Some(s) => s,
+        None => dmoe::bail!(
+            "dmoe run needs --scenario <preset-name|file.json> (`dmoe run --list` shows presets)"
+        ),
+    };
+    let mut s = if spec.ends_with(".json") || std::path::Path::new(&spec).is_file() {
+        Scenario::load(&spec)?
+    } else {
+        Scenario::preset(&spec)?
+    };
+    // Quick overrides so smokes and sweeps need no edited copy.
+    if args.get("queries").is_some() {
+        s.traffic.queries = args.get_usize("queries", s.traffic.queries);
+    }
+    if let Some(seed) = args.get("seed") {
+        match seed.parse() {
+            Ok(seed) => s.system.workload.seed = seed,
+            Err(_) => dmoe::bail!("--seed expects an integer, got '{seed}'"),
+        }
+    }
+    if args.flag("verify") {
+        let canonical = s.to_json().to_string_pretty();
+        let back = Scenario::from_json_str(&canonical)?;
+        let again = back.to_json().to_string_pretty();
+        dmoe::ensure!(
+            back == s && again == canonical,
+            "scenario round-trip mismatch: parse→serialize→parse is not bit-identical"
+        );
+        println!("scenario round-trip: ok ({} canonical bytes)", canonical.len());
+    }
+    if let Some(path) = args.get("save-scenario") {
+        s.save(path)?;
+        println!("saved scenario to {path}");
+    }
+    execute(s, args)
 }
 
-// -- flags shared by `serve` and `fleet` ------------------------------------
+/// Prepare + run a scenario and print the shared report surface. All
+/// three serving subcommands (`run`, `serve`, `fleet`) end here.
+fn execute(s: Scenario, args: &Args) -> Result<()> {
+    let prepared = scenario::prepare(&s)?;
+    println!("{}\n", prepared.banner());
+    let report = prepared.run();
+    print!("{}", report.render());
+    if args.flag("pattern") {
+        println!("\n{}", report.pattern().render());
+    }
+    println!("scenario digest 0x{:016x}", report.digest());
+    Ok(())
+}
 
-/// Synthetic traffic stream from the shared CLI flags (process is set by
-/// the caller once the offered rate is calibrated).
-fn traffic_from_args(args: &Args, cfg: &SystemConfig, default_queries: usize) -> TrafficConfig {
-    let queries = args.get_usize("queries", default_queries);
-    TrafficConfig {
-        queries,
+// -- flag → scenario shims --------------------------------------------------
+
+/// Serving policy from `--policy` (+ optional `--selector` registry
+/// override).
+fn policy_spec_from_args(args: &Args) -> Result<PolicySpec> {
+    let mut spec = match args.get_or("policy", "jesa").as_str() {
+        "jesa" => PolicySpec::jesa(args.get_f64("gamma0", 0.8), args.get_usize("d", 2)),
+        "topk" => PolicySpec::topk(args.get_usize("k", 2)),
+        "homogeneous" => {
+            PolicySpec::homogeneous(args.get_f64("z", 0.5), args.get_usize("d", 2))
+        }
+        other => dmoe::bail!("unknown --policy {other} (jesa|topk|homogeneous)"),
+    };
+    if let Some(sel) = args.get("selector") {
+        spec.selector = Some(SelectorSpec::parse(sel)?);
+    }
+    Ok(spec)
+}
+
+/// Traffic spec from the shared CLI flags. Explicit `--dwell`/`--period`
+/// are absolute seconds (the historical CLI contract); the defaults are
+/// round-relative, matching the old auto-derivation.
+fn traffic_spec_from_args(
+    args: &Args,
+    cfg: &SystemConfig,
+    default_queries: usize,
+    default_utilization: f64,
+) -> Result<TrafficSpec> {
+    let process = match args.get_or("process", "poisson").as_str() {
+        "poisson" => ProcessSpec::Poisson,
+        "bursty" | "mmpp" => ProcessSpec::Bursty {
+            dwell: match args.get("dwell") {
+                Some(_) => Dur::Seconds(args.get_f64("dwell", 0.0)),
+                None => Dur::Rounds(50.0),
+            },
+        },
+        "diurnal" => ProcessSpec::Diurnal {
+            peak_to_trough: args.get_f64("peak", 3.0),
+            period: match args.get("period") {
+                Some(_) => Dur::Seconds(args.get_f64("period", 0.0)),
+                None => Dur::Rounds(500.0),
+            },
+        },
+        other => dmoe::bail!("unknown --process {other} (poisson|bursty|diurnal)"),
+    };
+    let rate = match args.get_f64("rate", 0.0) {
+        r if r > 0.0 => RateSpec::Qps(r),
+        _ => RateSpec::Utilization(args.get_f64("utilization", default_utilization)),
+    };
+    Ok(TrafficSpec {
+        queries: args.get_usize("queries", default_queries),
         domains: args.get_usize("domains", 8),
         tokens_per_query: args.get_usize("tokens", cfg.workload.tokens_per_query.min(4)),
         gate_noise: args.get_f64("noise", 0.0),
-        seed: cfg.workload.seed,
-        ..TrafficConfig::poisson(1.0, queries)
-    }
-}
-
-/// Offered rate: explicit `--rate`, else `--utilization` × capacity.
-fn rate_from_args(args: &Args, capacity_qps: f64, default_utilization: f64) -> f64 {
-    match args.get_f64("rate", 0.0) {
-        r if r > 0.0 => r,
-        _ => args.get_f64("utilization", default_utilization) * capacity_qps,
-    }
-}
-
-/// Arrival process from `--process` and the calibrated rate/round time.
-fn process_from_args(args: &Args, rate: f64, round_s: f64) -> Result<ArrivalProcess> {
-    Ok(match args.get_or("process", "poisson").as_str() {
-        "poisson" => ArrivalProcess::Poisson { rate_qps: rate },
-        "bursty" | "mmpp" => {
-            ArrivalProcess::bursty_around(rate, args.get_f64("dwell", 50.0 * round_s))
-        }
-        "diurnal" => ArrivalProcess::diurnal_around(
-            rate,
-            args.get_f64("peak", 3.0),
-            args.get_f64("period", 500.0 * round_s),
-        ),
-        other => dmoe::bail!("unknown --process {other} (poisson|bursty|diurnal)"),
+        process,
+        rate,
+        ..TrafficSpec::default()
     })
 }
 
-/// Queue/batch-former config with the shared CLI overrides applied.
-fn queue_from_args(args: &Args, k: usize, round_s: f64) -> QueueConfig {
-    let mut queue = QueueConfig::for_system(k, round_s);
-    queue.capacity = args.get_usize("queue", queue.capacity);
-    queue.batch_queries = args.get_usize("batch", queue.batch_queries).clamp(1, k);
-    queue.max_wait_s = args.get_f64("max-wait", queue.max_wait_s);
-    queue.deadline_s = args.get_f64("deadline", queue.deadline_s);
-    queue
+/// Queue overrides: only flags actually given become spec fields, so the
+/// scenario keeps deriving the rest from the calibrated round latency.
+fn queue_spec_from_args(args: &Args) -> QueueSpec {
+    QueueSpec {
+        capacity: args.get("queue").map(|_| args.get_usize("queue", 0)),
+        batch_queries: args.get("batch").map(|_| args.get_usize("batch", 0)),
+        max_wait: args
+            .get("max-wait")
+            .map(|_| Dur::Seconds(args.get_f64("max-wait", 0.0))),
+        deadline: args
+            .get("deadline")
+            .map(|_| Dur::Seconds(args.get_f64("deadline", 0.0))),
+    }
 }
 
 /// Quantization is workload-adaptive by default; `--fixed-quant` (or an
 /// explicit `--step` / `--gate-grid`) pins the fixed grids.
-fn fixed_quant_requested(args: &Args) -> bool {
-    args.flag("fixed-quant") || args.get("step").is_some() || args.get("gate-grid").is_some()
-}
-
-fn quant_from_args(args: &Args) -> QuantizerConfig {
-    QuantizerConfig {
+fn quant_spec_from_args(args: &Args) -> QuantSpec {
+    let fixed =
+        args.flag("fixed-quant") || args.get("step").is_some() || args.get("gate-grid").is_some();
+    QuantSpec {
+        adaptive: !fixed,
         log2_step: args.get_f64("step", 3.0),
         gate_levels: args.get_usize("gate-grid", 32) as u32,
     }
 }
 
-/// The continuous serving engine (`dmoe serve`): synthesize an arrival
-/// stream, push it through admission control and cached JESA rounds, and
-/// report throughput, simulated latency percentiles, shed rate and
-/// solution-cache hit rate. Needs no model artifacts.
-fn serve(args: &Args) -> Result<()> {
+/// `dmoe serve` shim: flags → serve-shaped scenario.
+fn scenario_from_serve_flags(args: &Args) -> Result<Scenario> {
     let cfg = base_config(args);
-    let k = cfg.moe.experts;
-    let layers = cfg.moe.layers;
-    let policy = policy_from_args(args, layers)?;
-    let mut traffic = traffic_from_args(args, &cfg, 10_000);
-
-    // Capacity probe: mean discrete-event latency of one full round,
-    // used to auto-derive the arrival rate and the queue timeouts.
-    let round_s = estimate_round_latency_s(&cfg, &policy, &traffic, 4).max(1e-9);
-    let capacity_qps = k as f64 / round_s;
-    let rate = rate_from_args(args, capacity_qps, 0.7);
-    traffic.process = process_from_args(args, rate, round_s)?;
-
-    let queue = queue_from_args(args, k, round_s);
-    let fixed_quant = fixed_quant_requested(args);
-    let opts = ServeOptions {
-        cache_capacity: args.get_usize("cache", 4096),
-        quant: quant_from_args(args),
-        adapt_quant: !fixed_quant,
-        workers: args.get_usize("workers", dmoe::util::pool::default_workers()),
-        seed: cfg.workload.seed ^ 0x5E47E,
-        ..ServeOptions::new(policy, queue)
+    let mut s = Scenario::new("cli-serve");
+    s.traffic = traffic_spec_from_args(args, &cfg, 10_000, 0.7)?;
+    s.system = cfg;
+    s.policy = policy_spec_from_args(args)?;
+    s.queue = queue_spec_from_args(args);
+    s.cache = CacheSpec {
+        capacity: args.get_usize("cache", 4096),
+        // The single-lane engine's historical default.
+        eviction: EvictionPolicy::Lru,
+        shards: 0,
     };
-
-    println!(
-        "serve engine: K={k} L={layers} policy {} | process {} rate {:.2} q/s \
-         (capacity ≈ {:.2} q/s, round ≈ {:.3} s, {} quantization)\n",
-        opts.policy.label,
-        traffic.process.label(),
-        traffic.process.mean_qps(),
-        capacity_qps,
-        round_s,
-        if fixed_quant { "fixed" } else { "adaptive" },
-    );
-
-    let engine = ServeEngine::new(&cfg, opts);
-    let report = engine.run(&traffic);
-    print!("{}", report.render());
-    if args.flag("pattern") {
-        println!("\n{}", report.pattern.render());
+    s.quant = quant_spec_from_args(args);
+    if args.get("workers").is_some() {
+        s.workers = Some(args.get_usize("workers", 0));
     }
-    Ok(())
+    s.validate()?;
+    Ok(s)
 }
 
-/// Multi-cell sharded serving (`dmoe fleet`): N serve lanes with their
-/// own correlated-fading channels behind a user router, Gauss–Markov
-/// mobility driving per-cell path loss and handover, and one shared
-/// solution cache. Needs no model artifacts.
-fn fleet(args: &Args) -> Result<()> {
+/// `dmoe fleet` shim: flags → fleet-shaped scenario.
+fn scenario_from_fleet_flags(args: &Args) -> Result<Scenario> {
     let cfg = base_config(args);
-    let k = cfg.moe.experts;
-    let layers = cfg.moe.layers;
-    let policy = policy_from_args(args, layers)?;
+    let mut s = Scenario::new("cli-fleet");
+    s.traffic = traffic_spec_from_args(args, &cfg, 8_000, 0.6)?;
+    s.system = cfg;
+    s.policy = policy_spec_from_args(args)?;
+    s.queue = queue_spec_from_args(args);
+    s.cache = CacheSpec {
+        capacity: args.get_usize("cache", 4096),
+        eviction: EvictionPolicy::CostAware,
+        shards: args.get_usize("cache-shards", 0),
+    };
+    s.quant = quant_spec_from_args(args);
+    if args.get("workers").is_some() {
+        s.workers = Some(args.get_usize("workers", 0));
+    }
+
     let route_spec = args.get_or("route", "jsq");
-    let route = match RoutePolicy::parse(&route_spec) {
+    let route = match dmoe::fleet::RoutePolicy::parse(&route_spec) {
         Some(r) => r,
         None => dmoe::bail!("unknown --route {route_spec} (rr|jsq|channel)"),
     };
-    let cells = args.get_usize("cells", 2);
-    if cells == 0 {
-        dmoe::bail!("--cells expects at least one cell");
-    }
-    let mut traffic = traffic_from_args(args, &cfg, 8_000);
-
-    // Validate the numeric radio/mobility flags up front so bad input
-    // gets a clean CLI error, not a library assert's panic.
-    let spacing = args.get_f64("spacing", 200.0);
-    if !(spacing > 0.0 && spacing.is_finite()) {
-        dmoe::bail!("--spacing expects a positive number of meters, got {spacing}");
-    }
-    let rho = args.get_f64("rho", 0.9);
-    if !(0.0..1.0).contains(&rho) {
-        dmoe::bail!("--rho expects a fading memory in [0, 1), got {rho}");
-    }
-    let users = args.get_usize("users", 48);
-    if users == 0 {
-        dmoe::bail!("--users expects at least one user");
-    }
-    let speed = args.get_f64("speed", 1.5);
-    if !(speed >= 0.0 && speed.is_finite()) {
-        dmoe::bail!("--speed expects a non-negative speed in m/s, got {speed}");
-    }
-    let drain_at_s = args.get_f64("drain-at", 0.0);
-    if !(drain_at_s >= 0.0) {
-        dmoe::bail!("--drain-at expects a non-negative time in seconds, got {drain_at_s}");
-    }
-    let mobility = MobilityConfig {
-        users,
-        mean_speed_mps: speed,
-        ..MobilityConfig::default()
+    let mut fleet = FleetSpec {
+        cells: args.get_usize("cells", 2),
+        route,
+        spacing_m: args.get_f64("spacing", 200.0),
+        fading_rho: args.get_f64("rho", 0.9),
+        mobility: dmoe::fleet::MobilityConfig {
+            users: args.get_usize("users", 48),
+            mean_speed_mps: args.get_f64("speed", 1.5),
+            ..dmoe::fleet::MobilityConfig::default()
+        },
+        drains: Vec::new(),
+        lane_workers: args
+            .get("lane-workers")
+            .map(|_| args.get_usize("lane-workers", 0)),
     };
-    // Capacity probe, derated by the typical mobility attenuation (fleet
-    // cells run at scaled path loss, so rounds are slower than the
-    // unscaled single-engine estimate). The utilization default is a
-    // notch below serve's to absorb the derating error.
-    let layout = CellLayout::grid(cells, spacing);
-    let scale = Mobility::new(mobility.clone(), &layout).mean_attachment_attenuation(&layout);
-    let round_s = estimate_cell_round_latency_s(&cfg, &policy, &traffic, 4, scale).max(1e-9);
-    let capacity_qps = cells as f64 * k as f64 / round_s;
-    let rate = rate_from_args(args, capacity_qps, 0.6);
-    traffic.process = process_from_args(args, rate, round_s)?;
-
-    let queue = queue_from_args(args, k, round_s);
-    let fixed_quant = fixed_quant_requested(args);
-    let mut fopts = FleetOptions::new(cells, route, policy, queue);
-    fopts.cache_capacity = args.get_usize("cache", 4096);
-    fopts.cache_shards = args.get_usize("cache-shards", 0);
-    fopts.quant = quant_from_args(args);
-    fopts.adapt_quant = !fixed_quant;
-    // Lane-parallel by default: cells execute on the work-stealing
-    // executor (reports are bit-identical to the sequential loop — see
-    // the fleet module's determinism contract). `--lane-workers 0` pins
-    // the sequential interleaved event loop.
-    let cores = dmoe::util::pool::default_workers();
-    fopts.lane_workers = args.get_usize("lane-workers", cores.min(cells));
-    // The two parallelism layers share one core budget: with N lanes
-    // live (the engine caps lanes at the cell count), the default
-    // per-layer solve pool narrows to cores/N so the lane speedup is
-    // not eaten by oversubscription (pin with --workers).
-    let live_lanes = fopts.lane_workers.min(cells);
-    let layer_default = if live_lanes >= 2 {
-        (cores / live_lanes).max(1)
-    } else {
-        cores
-    };
-    fopts.workers = args.get_usize("workers", layer_default);
-    fopts.seed = cfg.workload.seed ^ 0xF1EE7;
-    fopts.mobility = mobility;
-    fopts.spacing_m = spacing;
-    fopts.fading_rho = rho;
     if let Some(cell) = args.get("drain-cell") {
         let cell: usize = match cell.parse() {
-            Ok(c) if c < cells => c,
-            Ok(c) => dmoe::bail!("--drain-cell {c} out of range (fleet has {cells} cells)"),
+            Ok(c) => c,
             Err(_) => dmoe::bail!("--drain-cell expects a cell index, got '{cell}'"),
         };
         if args.get("drain-at").is_none() {
@@ -443,31 +541,13 @@ fn fleet(args: &Args) -> Result<()> {
             // drain experiment.
             dmoe::bail!("--drain-cell requires --drain-at S (when should cell {cell} drain?)");
         }
-        fopts.drain_at.push((cell, drain_at_s));
+        fleet.drains.push((cell, args.get_f64("drain-at", 0.0)));
     }
-
-    println!(
-        "fleet engine: {cells} cells x K={k} L={layers} policy {} route {} | process {} \
-         rate {:.2} q/s (fleet capacity ≈ {:.2} q/s, cell round ≈ {:.3} s, mobility scale \
-         ≈ {:.2}, {} quantization, {} lane workers)\n",
-        fopts.policy.label,
-        route.label(),
-        traffic.process.label(),
-        traffic.process.mean_qps(),
-        capacity_qps,
-        round_s,
-        scale,
-        if fixed_quant { "fixed" } else { "adaptive" },
-        fopts.lane_workers,
-    );
-
-    let engine = FleetEngine::new(&cfg, fopts);
-    let report = engine.run(&traffic);
-    print!("{}", report.render());
-    if args.flag("pattern") {
-        println!("\n{}", report.pattern.render());
-    }
-    Ok(())
+    s.fleet = Some(fleet);
+    // Scenario validation now carries the precise diagnostics the old
+    // hand-rolled flag checks used to (spacing, rho, users, drains, …).
+    s.validate()?;
+    Ok(s)
 }
 
 /// Legacy model-serving path (`dmoe eval`): serve every eval set of the
@@ -476,7 +556,7 @@ fn fleet(args: &Args) -> Result<()> {
 fn eval(args: &Args) -> Result<()> {
     let mut server = server(args)?;
     let layers = server.layers();
-    let policy = policy_from_args(args, layers)?;
+    let policy = policy_spec_from_args(args)?.build(layers);
     println!(
         "serving with {} on platform {}\n",
         policy.label,
@@ -511,17 +591,24 @@ const HELP: &str = "dmoe — Distributed Mixture-of-Experts at the wireless edge
 
 USAGE: dmoe <subcommand> [--flags]
 
-  serve      continuous serving engine (Poisson/bursty/diurnal arrivals,
-             admission control, JESA solution cache; no artifacts needed)
+  run        execute a scenario — THE front door
+             --scenario NAME|FILE.json   preset name or scenario file
+             --list                      list the preset library
+             --queries N --seed N        quick overrides
+             --verify                    check the JSON round-trip
+             --save-scenario FILE        dump the canonical spec
+  serve      continuous serving engine (thin shim over a serve-shaped
+             scenario; Poisson/bursty/diurnal arrivals, admission
+             control, JESA solution cache; no artifacts needed)
              --queries N --process poisson|bursty|diurnal --rate QPS
              --utilization X --batch N --queue N --max-wait S --deadline S
-             --cache N --noise X --workers N
+             --cache N --noise X --workers N --selector NAME
              quantization is workload-adaptive; pin with --fixed-quant or
              explicit --step OCTAVES / --gate-grid N
-  fleet      multi-cell sharded serving (N serve lanes + user router +
-             Gauss-Markov mobility/handover + sharded solution cache;
-             cells run lane-parallel on a work-stealing executor with a
-             bit-identical report — --lane-workers 0 for sequential)
+  fleet      multi-cell sharded serving (thin shim over a fleet-shaped
+             scenario; N serve lanes + user router + Gauss-Markov
+             mobility/handover + sharded solution cache; lane-parallel
+             with a bit-identical report — --lane-workers 0 sequential)
              --cells N --route rr|jsq|channel --users N --speed MPS
              --spacing M --rho X --drain-cell I --drain-at S
              --lane-workers N --cache-shards N
@@ -536,6 +623,9 @@ USAGE: dmoe <subcommand> [--flags]
   fig10      Fig. 10  — accuracy-energy tradeoff frontier
   theorem1   Theorem 1 — BCD optimality rate vs bound
   all        run everything and save reports/
+
+Expert selectors (--selector / scenario policy.selector): des, topk:K,
+greedy, exhaustive, dp:G — resolved via the selection registry.
 
 Flags: --artifacts DIR, --config FILE, --reports DIR, --save,
        --batches N, --rounds N, --seed N, --gamma0 X, --z X, --policy P";

@@ -1,0 +1,363 @@
+//! The unified engine facade: one [`Engine`] trait and one [`RunReport`]
+//! over both serving engines, plus the [`prepare`]/[`run`] entry points
+//! that turn a declarative [`Scenario`] into a calibrated, runnable
+//! workload.
+//!
+//! Calibration mirrors what every caller used to hand-roll: probe the
+//! mean discrete-event round latency (derated by the typical mobility
+//! attenuation for fleets), derive the offered rate from the scenario's
+//! [`RateSpec`], resolve round-relative durations, then construct the
+//! right engine. [`Prepared`] keeps the intermediate numbers (round
+//! latency, capacity, path scale) so CLIs and sweeps can print them
+//! without re-deriving.
+
+use super::observer::{EngineObserver, NullObserver};
+use super::spec::Scenario;
+use crate::energy::EnergyBreakdown;
+use crate::fleet::{CellLayout, FleetEngine, FleetOptions, FleetReport, Mobility};
+use crate::metrics::SelectionPattern;
+use crate::serve::{
+    estimate_round_latency_s, CacheStats, ServeEngine, ServeOptions, ServeReport, TrafficConfig,
+};
+use crate::util::error::Result;
+use crate::util::pool::default_workers;
+
+/// What kind of engine a scenario resolved to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    Serve,
+    Fleet,
+}
+
+impl EngineKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            EngineKind::Serve => "serve",
+            EngineKind::Fleet => "fleet",
+        }
+    }
+}
+
+/// The report of any engine run, with the cross-engine accessors every
+/// generic consumer (CLI, benches, sweeps, CI gates) needs. Match on it
+/// for engine-specific detail.
+pub enum RunReport {
+    Serve(ServeReport),
+    Fleet(FleetReport),
+}
+
+impl RunReport {
+    pub fn kind(&self) -> EngineKind {
+        match self {
+            RunReport::Serve(_) => EngineKind::Serve,
+            RunReport::Fleet(_) => EngineKind::Fleet,
+        }
+    }
+
+    pub fn generated(&self) -> usize {
+        match self {
+            RunReport::Serve(r) => r.generated,
+            RunReport::Fleet(r) => r.generated,
+        }
+    }
+
+    pub fn completed(&self) -> usize {
+        match self {
+            RunReport::Serve(r) => r.completed,
+            RunReport::Fleet(r) => r.completed,
+        }
+    }
+
+    pub fn shed(&self) -> usize {
+        match self {
+            RunReport::Serve(r) => r.shed(),
+            RunReport::Fleet(r) => r.shed_queue_full + r.shed_deadline,
+        }
+    }
+
+    pub fn rounds(&self) -> usize {
+        match self {
+            RunReport::Serve(r) => r.rounds,
+            RunReport::Fleet(r) => r.rounds,
+        }
+    }
+
+    /// Simulated time of the last completion.
+    pub fn sim_end_s(&self) -> f64 {
+        match self {
+            RunReport::Serve(r) => r.sim_end_s,
+            RunReport::Fleet(r) => r.sim_end_s,
+        }
+    }
+
+    /// Wall-clock engine runtime.
+    pub fn wall_s(&self) -> f64 {
+        match self {
+            RunReport::Serve(r) => r.wall_s,
+            RunReport::Fleet(r) => r.wall_s,
+        }
+    }
+
+    pub fn energy(&self) -> EnergyBreakdown {
+        match self {
+            RunReport::Serve(r) => r.energy,
+            RunReport::Fleet(r) => r.energy,
+        }
+    }
+
+    pub fn cache(&self) -> CacheStats {
+        match self {
+            RunReport::Serve(r) => r.cache,
+            RunReport::Fleet(r) => r.cache,
+        }
+    }
+
+    pub fn pattern(&self) -> &SelectionPattern {
+        match self {
+            RunReport::Serve(r) => &r.pattern,
+            RunReport::Fleet(r) => &r.pattern,
+        }
+    }
+
+    /// The engine's determinism digest (see [`ServeReport::digest`] /
+    /// [`FleetReport::digest`]): bit-identical across repeated runs of
+    /// one scenario.
+    pub fn digest(&self) -> u64 {
+        match self {
+            RunReport::Serve(r) => r.digest(),
+            RunReport::Fleet(r) => r.digest(),
+        }
+    }
+
+    /// Human-readable summary (whatever the engine's CLI prints).
+    pub fn render(&self) -> String {
+        match self {
+            RunReport::Serve(r) => r.render(),
+            RunReport::Fleet(r) => r.render(),
+        }
+    }
+}
+
+/// The common execution surface of [`ServeEngine`] and [`FleetEngine`]:
+/// run a traffic stream, stream events to an observer, return a
+/// [`RunReport`]. Scenario consumers program against `&dyn Engine` and
+/// never match on the engine type.
+pub trait Engine {
+    fn kind(&self) -> EngineKind;
+
+    /// Run with streaming [`EngineObserver`] hooks (see the
+    /// [observer contract](super::observer)).
+    fn run_observed(&self, traffic: &TrafficConfig, obs: &mut dyn EngineObserver) -> RunReport;
+
+    /// Run without observation.
+    fn run_report(&self, traffic: &TrafficConfig) -> RunReport {
+        self.run_observed(traffic, &mut NullObserver)
+    }
+}
+
+impl Engine for ServeEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Serve
+    }
+
+    fn run_observed(&self, traffic: &TrafficConfig, obs: &mut dyn EngineObserver) -> RunReport {
+        RunReport::Serve(self.run_streaming(traffic, obs))
+    }
+}
+
+impl Engine for FleetEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Fleet
+    }
+
+    fn run_observed(&self, traffic: &TrafficConfig, obs: &mut dyn EngineObserver) -> RunReport {
+        RunReport::Fleet(self.run_streaming(traffic, obs))
+    }
+}
+
+enum EngineHandle {
+    Serve(ServeEngine),
+    Fleet(FleetEngine),
+}
+
+/// A calibrated, runnable scenario: the constructed engine plus the
+/// concrete traffic stream and the capacity numbers derived on the way.
+pub struct Prepared {
+    pub scenario: Scenario,
+    /// The fully-resolved traffic stream (process instantiated at the
+    /// calibrated rate).
+    pub traffic: TrafficConfig,
+    /// Calibrated mean round latency (derated for fleets).
+    pub round_s: f64,
+    /// Offered-rate ceiling: `cells × K / round_s`.
+    pub capacity_qps: f64,
+    /// Typical mobility attenuation used for derating (1.0 for serve).
+    pub path_scale: f64,
+    handle: EngineHandle,
+}
+
+impl Prepared {
+    pub fn engine(&self) -> &dyn Engine {
+        match &self.handle {
+            EngineHandle::Serve(e) => e,
+            EngineHandle::Fleet(e) => e,
+        }
+    }
+
+    pub fn kind(&self) -> EngineKind {
+        self.engine().kind()
+    }
+
+    pub fn run(&self) -> RunReport {
+        self.engine().run_report(&self.traffic)
+    }
+
+    pub fn run_observed(&self, obs: &mut dyn EngineObserver) -> RunReport {
+        self.engine().run_observed(&self.traffic, obs)
+    }
+
+    /// The one-line launch banner the CLI prints (policy, process, rate,
+    /// capacity, quantization mode, lane workers).
+    pub fn banner(&self) -> String {
+        let s = &self.scenario;
+        let k = s.system.moe.experts;
+        let layers = s.system.moe.layers;
+        let quant_mode = if s.quant.adaptive && s.cache.capacity > 0 {
+            "adaptive"
+        } else {
+            "fixed"
+        };
+        match (&self.handle, &s.fleet) {
+            (EngineHandle::Fleet(e), Some(f)) => format!(
+                "scenario {}: fleet engine, {} cells x K={k} L={layers} policy {} route {} | \
+                 process {} rate {:.2} q/s (fleet capacity ≈ {:.2} q/s, cell round ≈ {:.3} s, \
+                 mobility scale ≈ {:.2}, {} quantization, {} lane workers)",
+                s.name,
+                f.cells,
+                e.options().policy.label,
+                f.route.label(),
+                self.traffic.process.label(),
+                self.traffic.process.mean_qps(),
+                self.capacity_qps,
+                self.round_s,
+                self.path_scale,
+                quant_mode,
+                e.options().lane_workers,
+            ),
+            (EngineHandle::Serve(e), _) => format!(
+                "scenario {}: serve engine, K={k} L={layers} policy {} | process {} rate \
+                 {:.2} q/s (capacity ≈ {:.2} q/s, round ≈ {:.3} s, {} quantization)",
+                s.name,
+                e.options().policy.label,
+                self.traffic.process.label(),
+                self.traffic.process.mean_qps(),
+                self.capacity_qps,
+                self.round_s,
+                quant_mode,
+            ),
+            (EngineHandle::Fleet(_), None) => unreachable!("fleet engine implies a fleet spec"),
+        }
+    }
+}
+
+/// Calibrate a scenario into a runnable [`Prepared`] workload. Pure
+/// given the scenario (the capacity probe is seeded from the scenario's
+/// own seed), so preparing twice yields identical engines and traffic.
+pub fn prepare(scenario: &Scenario) -> Result<Prepared> {
+    scenario.validate()?;
+    let cfg = &scenario.system;
+    let k = cfg.moe.experts;
+    let layers = cfg.moe.layers;
+    let policy = scenario.policy.build(layers);
+
+    let mut traffic = TrafficConfig {
+        queries: scenario.traffic.queries,
+        domains: scenario.traffic.domains,
+        tokens_per_query: scenario.traffic.tokens_per_query,
+        gate_concentration: scenario.traffic.gate_concentration,
+        domain_bias: scenario.traffic.domain_bias,
+        gate_noise: scenario.traffic.gate_noise,
+        seed: cfg.workload.seed,
+        // Placeholder until the rate is calibrated below.
+        ..TrafficConfig::poisson(1.0, scenario.traffic.queries)
+    };
+
+    // Capacity probe: mean discrete-event latency of one full round,
+    // derated by the typical mobility attenuation for fleets (their
+    // cells serve at scaled path loss).
+    let (path_scale, cells) = match &scenario.fleet {
+        None => (1.0, 1),
+        Some(f) => {
+            let layout = CellLayout::grid(f.cells, f.spacing_m);
+            let scale = Mobility::new(f.mobility.clone(), &layout)
+                .mean_attachment_attenuation(&layout);
+            (scale, f.cells)
+        }
+    };
+    let round_s = estimate_round_latency_s(cfg, &policy, &traffic, 4, path_scale).max(1e-9);
+    let capacity_qps = cells as f64 * k as f64 / round_s;
+    let rate = scenario.traffic.rate.resolve(capacity_qps);
+    traffic.process = scenario.traffic.process.build(rate, round_s);
+
+    let queue = scenario.queue.build(k, round_s);
+    let quant = scenario.quant.build();
+    let handle = match &scenario.fleet {
+        None => {
+            let opts = ServeOptions {
+                cache_capacity: scenario.cache.capacity,
+                cache_policy: scenario.cache.eviction,
+                quant,
+                adapt_quant: scenario.quant.adaptive,
+                workers: scenario.workers.unwrap_or_else(default_workers),
+                seed: cfg.workload.seed ^ 0x5E47E,
+                ..ServeOptions::new(policy, queue)
+            };
+            EngineHandle::Serve(ServeEngine::new(cfg, opts))
+        }
+        Some(f) => {
+            let mut fopts = FleetOptions::new(f.cells, f.route, policy, queue);
+            fopts.cache_capacity = scenario.cache.capacity;
+            fopts.cache_policy = scenario.cache.eviction;
+            fopts.cache_shards = scenario.cache.shards;
+            fopts.quant = quant;
+            fopts.adapt_quant = scenario.quant.adaptive;
+            // Lane-parallel by default; the per-layer solve pool shares
+            // the core budget with the lanes so the lane speedup is not
+            // eaten by oversubscription.
+            let cores = default_workers();
+            fopts.lane_workers = f.lane_workers.unwrap_or_else(|| cores.min(f.cells));
+            let live_lanes = fopts.lane_workers.min(f.cells);
+            let layer_default = if live_lanes >= 2 {
+                (cores / live_lanes).max(1)
+            } else {
+                cores
+            };
+            fopts.workers = scenario.workers.unwrap_or(layer_default);
+            fopts.seed = cfg.workload.seed ^ 0xF1EE7;
+            fopts.mobility = f.mobility.clone();
+            fopts.spacing_m = f.spacing_m;
+            fopts.fading_rho = f.fading_rho;
+            fopts.drain_at = f.drains.clone();
+            EngineHandle::Fleet(FleetEngine::new(cfg, fopts))
+        }
+    };
+
+    Ok(Prepared {
+        scenario: scenario.clone(),
+        traffic,
+        round_s,
+        capacity_qps,
+        path_scale,
+        handle,
+    })
+}
+
+/// Prepare and run a scenario end-to-end.
+pub fn run(scenario: &Scenario) -> Result<RunReport> {
+    Ok(prepare(scenario)?.run())
+}
+
+/// Prepare and run with streaming observer hooks.
+pub fn run_observed(scenario: &Scenario, obs: &mut dyn EngineObserver) -> Result<RunReport> {
+    Ok(prepare(scenario)?.run_observed(obs))
+}

@@ -1,0 +1,79 @@
+//! `scenario` — the crate's front door: one declarative, serializable
+//! workload spec and one engine facade for every way this repo serves.
+//!
+//! The paper's framework is explicitly *tunable* — importance factor,
+//! QoS window, channel regime, traffic shape are all meant to be swept.
+//! Before this module, every caller (CLI, examples, benches, tests)
+//! hand-assembled five option structs and wired them into one of two
+//! engines with disjoint run surfaces. Now a scenario is **one
+//! reviewable, versionable document**:
+//!
+//! ```text
+//!   Scenario (spec.rs)                      Engine facade (engine.rs)
+//!   ┌──────────────────────────┐   prepare  ┌───────────────────────────┐
+//!   │ name + schema_version    │  ───────►  │ round-latency calibration │
+//!   │ system  (SystemConfig)   │            │ rate / queue resolution   │
+//!   │ policy  (+ selector name)│            │ ServeEngine | FleetEngine │
+//!   │ traffic (process + rate) │  ◄───────  │ behind `dyn Engine`       │
+//!   │ queue / cache / quant    │    JSON    └─────────────┬─────────────┘
+//!   │ fleet?  (cells/mobility) │  round-trip        run / run_observed
+//!   └──────────────────────────┘  (bit-identical)         ▼
+//!                                              RunReport + EngineObserver
+//! ```
+//!
+//! * [`spec`] — the [`Scenario`] type, [`ScenarioBuilder`], validation
+//!   with field-path diagnostics, and canonical JSON round-trip
+//!   (`parse → serialize → parse` is bit-identical; schema-versioned).
+//! * [`preset`](mod@preset) — the named preset library
+//!   ([`PRESET_NAMES`]): `paper-baseline`, `urban-macro-jsq`,
+//!   `flash-crowd-mmpp`, `handover-storm`,
+//!   `cache-cold-heterogeneous-gamma`, `low-qos-energy-saver`.
+//! * [`engine`] — the [`Engine`] trait + [`RunReport`] enum both engines
+//!   implement, and [`prepare`]/[`run`]/[`run_observed`].
+//! * [`observer`] — the [`EngineObserver`] hook trait (round / shed /
+//!   handover / cache events) for streaming consumers, with its
+//!   per-engine delivery contract.
+//!
+//! Expert-selection solvers are chosen **by name** through the
+//! [selector registry](crate::selection::registry) (`des`, `topk:K`,
+//! `greedy`, `exhaustive`, `dp:G`) — a scenario's `policy.selector`
+//! field reaches the same registry the JESA driver resolves its solver
+//! from.
+//!
+//! # From a file, a preset, or code
+//!
+//! ```no_run
+//! use dmoe::scenario::{self, Scenario};
+//!
+//! // CLI equivalent: `dmoe run --scenario flash-crowd-mmpp`
+//! let s = Scenario::preset("flash-crowd-mmpp").unwrap();
+//! let report = scenario::run(&s).unwrap();
+//! println!("{} (digest 0x{:016x})", report.render(), report.digest());
+//!
+//! // Or from a reviewed JSON document:
+//! let s = Scenario::load("my-deployment.json").unwrap();
+//! let prepared = scenario::prepare(&s).unwrap();
+//! println!("{}", prepared.banner());
+//! let report = prepared.run();
+//! # let _ = report;
+//! ```
+//!
+//! Determinism: preparing is a pure function of the scenario (the
+//! capacity probe is seeded from the scenario's own seed), and each
+//! engine's report digest is bit-identical across repeated runs — `ci.sh`
+//! gates on both.
+
+pub mod engine;
+pub mod observer;
+pub mod preset;
+pub mod spec;
+
+pub use engine::{prepare, run, run_observed, Engine, EngineKind, Prepared, RunReport};
+pub use observer::{
+    CountingObserver, EngineObserver, HandoverEvent, NullObserver, RoundEvent, ShedEvent,
+};
+pub use preset::{preset, PRESET_NAMES};
+pub use spec::{
+    CacheSpec, Dur, FleetSpec, PolicyKind, PolicySpec, ProcessSpec, QuantSpec, QueueSpec,
+    RateSpec, Scenario, ScenarioBuilder, TrafficSpec, SCHEMA_VERSION,
+};

@@ -1,0 +1,109 @@
+//! The [`EngineObserver`] hook trait: streaming engine events for
+//! consumers that previously had to spelunk report structs.
+//!
+//! Both engines emit through one `&mut dyn EngineObserver` handed to
+//! [`Engine::run_observed`](super::Engine::run_observed). The contract:
+//!
+//! * **[`ServeEngine`]** streams fully live, in simulated-time order:
+//!   one [`RoundEvent`] after each executed round, a [`ShedEvent`] the
+//!   moment admission control drops a query, and one final
+//!   [`EngineObserver::on_cache`] call with the run's cumulative
+//!   solution-cache stats.
+//! * **[`FleetEngine`]** streams [`HandoverEvent`]s live (routing is
+//!   sequential in every execution mode, so handovers arrive in global
+//!   arrival order), then — because cells execute their rounds in
+//!   parallel on the lane executor — replays each cell's
+//!   [`RoundEvent`]s/[`ShedEvent`]s *after* the run, in ascending cell
+//!   order, followed by the final cache stats. The replay is
+//!   deterministic: it is derived from the same per-cell logs the
+//!   bit-identical [`FleetReport`](crate::fleet::FleetReport) digest
+//!   covers.
+//!
+//! Every hook has a no-op default, so observers implement only what they
+//! consume; [`NullObserver`] is the zero-cost stand-in the plain `run`
+//! entry points use.
+//!
+//! [`ServeEngine`]: crate::serve::ServeEngine
+//! [`FleetEngine`]: crate::fleet::FleetEngine
+
+use crate::serve::{CacheStats, ShedReason};
+
+/// One executed round (a cell id of 0 for the single-lane serve engine).
+#[derive(Debug, Clone)]
+pub struct RoundEvent {
+    pub cell: u32,
+    /// Simulated round start.
+    pub start_s: f64,
+    /// Sum of the L per-layer discrete-event latencies.
+    pub latency_s: f64,
+    pub queries: usize,
+    pub tokens: usize,
+    /// Layer solves of this round served from the solution cache.
+    pub cache_hits: usize,
+}
+
+/// One query dropped by admission control.
+#[derive(Debug, Clone)]
+pub struct ShedEvent {
+    pub cell: u32,
+    pub query_id: u64,
+    pub reason: ShedReason,
+}
+
+/// One mid-session attachment change (fleet only): a user whose previous
+/// query attached to `from_cell` arrives attached to `to_cell`.
+#[derive(Debug, Clone)]
+pub struct HandoverEvent {
+    pub user: usize,
+    pub from_cell: usize,
+    pub to_cell: usize,
+    /// Simulated arrival time of the query that revealed the handover.
+    pub at_s: f64,
+}
+
+/// Streaming hooks over an engine run. All methods default to no-ops.
+pub trait EngineObserver {
+    fn on_round(&mut self, _event: &RoundEvent) {}
+    fn on_shed(&mut self, _event: &ShedEvent) {}
+    fn on_handover(&mut self, _event: &HandoverEvent) {}
+    /// Called once at the end of the run with the cumulative
+    /// solution-cache statistics.
+    fn on_cache(&mut self, _stats: &CacheStats) {}
+}
+
+/// The no-op observer behind every non-observed entry point.
+pub struct NullObserver;
+
+impl EngineObserver for NullObserver {}
+
+/// An observer that tallies event counts — useful in tests and as the
+/// simplest streaming consumer.
+#[derive(Debug, Default, Clone)]
+pub struct CountingObserver {
+    pub rounds: usize,
+    pub queries: usize,
+    pub sheds: usize,
+    pub handovers: usize,
+    pub cache_reports: usize,
+    pub cache_hits_final: u64,
+}
+
+impl EngineObserver for CountingObserver {
+    fn on_round(&mut self, event: &RoundEvent) {
+        self.rounds += 1;
+        self.queries += event.queries;
+    }
+
+    fn on_shed(&mut self, _event: &ShedEvent) {
+        self.sheds += 1;
+    }
+
+    fn on_handover(&mut self, _event: &HandoverEvent) {
+        self.handovers += 1;
+    }
+
+    fn on_cache(&mut self, stats: &CacheStats) {
+        self.cache_reports += 1;
+        self.cache_hits_final = stats.hits;
+    }
+}

@@ -1,0 +1,239 @@
+//! The named preset library: ≥6 ready-to-run scenarios spanning the
+//! regimes the serving stack is built for. `dmoe run --scenario <name>`
+//! resolves here; every preset round-trips bit-identically through JSON
+//! (property-tested) and is a starting point — dump one with
+//! `dmoe run --scenario <name> --save-scenario file.json` and edit.
+//!
+//! | preset | engine | regime it exercises |
+//! |---|---|---|
+//! | `paper-baseline` | serve | the paper's K=8 energy setup, Poisson at 70% utilization |
+//! | `urban-macro-jsq` | fleet | 4-cell grid, pedestrian mobility, JSQ routing |
+//! | `flash-crowd-mmpp` | serve | bursty MMPP at 85% utilization, tight shed deadline |
+//! | `handover-storm` | fleet | vehicular users on a dense grid, channel-aware routing |
+//! | `cache-cold-heterogeneous-gamma` | serve | noisy many-domain gates vs a tiny fixed-grid cache |
+//! | `low-qos-energy-saver` | serve | lowered QoS + greedy selector on a diurnal curve |
+
+use super::spec::{
+    CacheSpec, Dur, FleetSpec, PolicySpec, ProcessSpec, QuantSpec, QueueSpec, RateSpec, Scenario,
+    TrafficSpec,
+};
+use crate::config::SystemConfig;
+use crate::fleet::{MobilityConfig, RoutePolicy};
+use crate::selection::SelectorSpec;
+use crate::serve::EvictionPolicy;
+use crate::util::error::{Error, Result};
+
+/// Every preset name, in the order the docs table lists them.
+pub const PRESET_NAMES: &[&str] = &[
+    "paper-baseline",
+    "urban-macro-jsq",
+    "flash-crowd-mmpp",
+    "handover-storm",
+    "cache-cold-heterogeneous-gamma",
+    "low-qos-energy-saver",
+];
+
+/// Resolve a preset by name. The error lists every known preset.
+pub fn preset(name: &str) -> Result<Scenario> {
+    let scenario = match name {
+        "paper-baseline" => paper_baseline(),
+        "urban-macro-jsq" => urban_macro_jsq(),
+        "flash-crowd-mmpp" => flash_crowd_mmpp(),
+        "handover-storm" => handover_storm(),
+        "cache-cold-heterogeneous-gamma" => cache_cold_heterogeneous_gamma(),
+        "low-qos-energy-saver" => low_qos_energy_saver(),
+        other => {
+            return Err(Error::msg(format!(
+                "unknown scenario preset '{other}' (known: {})",
+                PRESET_NAMES.join(", ")
+            )))
+        }
+    };
+    let scenario = scenario?;
+    debug_assert_eq!(scenario.name, name);
+    Ok(scenario)
+}
+
+impl Scenario {
+    /// Resolve a named preset (see [`PRESET_NAMES`]) — equivalent to the
+    /// free [`preset`] function, hung off the type for discoverability.
+    pub fn preset(name: &str) -> Result<Scenario> {
+        preset(name)
+    }
+}
+
+/// The paper's §VII-A energy-efficiency setup (K=8, Mixtral-like, 128
+/// subcarriers) serving a steady Poisson stream at 70% of calibrated
+/// capacity — the reference workload every optimization is measured
+/// against.
+fn paper_baseline() -> Result<Scenario> {
+    Scenario::builder("paper-baseline")
+        .system(SystemConfig::paper_energy())
+        .policy(PolicySpec::jesa(0.8, 2))
+        .traffic(TrafficSpec {
+            queries: 6_000,
+            domains: 8,
+            tokens_per_query: 4,
+            process: ProcessSpec::Poisson,
+            rate: RateSpec::Utilization(0.7),
+            ..TrafficSpec::default()
+        })
+        .build()
+}
+
+/// A 4-cell urban macro grid with pedestrian users: the bread-and-butter
+/// multi-cell deployment — JSQ routing, correlated fading, one shared
+/// sharded cache.
+fn urban_macro_jsq() -> Result<Scenario> {
+    Scenario::builder("urban-macro-jsq")
+        .policy(PolicySpec::jesa(0.8, 2))
+        .traffic(TrafficSpec {
+            queries: 4_000,
+            rate: RateSpec::Utilization(0.6),
+            ..TrafficSpec::default()
+        })
+        .fleet(FleetSpec {
+            cells: 4,
+            route: RoutePolicy::JoinShortestQueue,
+            spacing_m: 250.0,
+            fading_rho: 0.9,
+            mobility: MobilityConfig {
+                users: 64,
+                mean_speed_mps: 1.5,
+                ..MobilityConfig::default()
+            },
+            ..FleetSpec::default()
+        })
+        .build()
+}
+
+/// A flash crowd: 2-state MMPP bursts at 85% mean utilization with a
+/// tight shed deadline, so the capacity- and deadline-shedding paths are
+/// both exercised hard.
+fn flash_crowd_mmpp() -> Result<Scenario> {
+    Scenario::builder("flash-crowd-mmpp")
+        .policy(PolicySpec::jesa(0.8, 2))
+        .traffic(TrafficSpec {
+            queries: 6_000,
+            process: ProcessSpec::Bursty {
+                dwell: Dur::Rounds(40.0),
+            },
+            rate: RateSpec::Utilization(0.85),
+            ..TrafficSpec::default()
+        })
+        .queue(QueueSpec {
+            deadline: Some(Dur::Rounds(6.0)),
+            ..QueueSpec::default()
+        })
+        .build()
+}
+
+/// Vehicular users sweeping a dense 4-cell grid: rapid attachment churn
+/// under channel-aware routing — the handover accounting and per-cell
+/// path-scale machinery under maximum stress.
+fn handover_storm() -> Result<Scenario> {
+    Scenario::builder("handover-storm")
+        .policy(PolicySpec::jesa(0.8, 2))
+        .traffic(TrafficSpec {
+            queries: 4_000,
+            rate: RateSpec::Utilization(0.65),
+            ..TrafficSpec::default()
+        })
+        .fleet(FleetSpec {
+            cells: 4,
+            route: RoutePolicy::ChannelAware,
+            spacing_m: 120.0,
+            fading_rho: 0.75,
+            mobility: MobilityConfig {
+                users: 32,
+                mean_speed_mps: 30.0,
+                speed_sigma_mps: 8.0,
+                ..MobilityConfig::default()
+            },
+            ..FleetSpec::default()
+        })
+        .build()
+}
+
+/// The cache's worst case: 32 domains of noisy gates against a 64-entry
+/// LRU cache with a deliberately fine fixed gate grid — nearly every
+/// round misses, so this pins the uncached branch-and-bound hot path.
+/// The steeper γ0 = 0.6 schedule makes the per-layer thresholds strongly
+/// heterogeneous.
+fn cache_cold_heterogeneous_gamma() -> Result<Scenario> {
+    Scenario::builder("cache-cold-heterogeneous-gamma")
+        .system(SystemConfig::paper_selection())
+        .policy(PolicySpec::jesa(0.6, 2))
+        .traffic(TrafficSpec {
+            queries: 5_000,
+            domains: 32,
+            gate_noise: 0.35,
+            rate: RateSpec::Utilization(0.7),
+            ..TrafficSpec::default()
+        })
+        .cache(CacheSpec {
+            capacity: 64,
+            eviction: EvictionPolicy::Lru,
+            shards: 0,
+        })
+        .quant(QuantSpec {
+            adaptive: false,
+            log2_step: 1.0,
+            gate_levels: 256,
+        })
+        .build()
+}
+
+/// The energy saver: homogeneous importance at a lowered base QoS
+/// (z = 0.3) with the greedy selector from the registry, offered a
+/// diurnal half-capacity load — trades accuracy headroom for selection
+/// cost, the Fig. 5 direction pushed to a serving policy.
+fn low_qos_energy_saver() -> Result<Scenario> {
+    Scenario::builder("low-qos-energy-saver")
+        .system(SystemConfig::paper_energy())
+        .policy(PolicySpec::homogeneous(0.3, 2).with_selector(SelectorSpec::Greedy))
+        .traffic(TrafficSpec {
+            queries: 5_000,
+            process: ProcessSpec::Diurnal {
+                peak_to_trough: 3.0,
+                period: Dur::Rounds(400.0),
+            },
+            rate: RateSpec::Utilization(0.5),
+            ..TrafficSpec::default()
+        })
+        .build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_preset_builds_and_validates() {
+        for name in PRESET_NAMES {
+            let s = preset(name).unwrap_or_else(|e| panic!("preset {name}: {e:#}"));
+            assert_eq!(&s.name, name);
+            s.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn unknown_preset_lists_known_names() {
+        let err = preset("papier-baseline").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("paper-baseline"), "{msg}");
+    }
+
+    #[test]
+    fn presets_span_both_engine_shapes() {
+        let fleets = PRESET_NAMES
+            .iter()
+            .filter(|n| preset(n).unwrap().fleet.is_some())
+            .count();
+        assert!(fleets >= 2, "want >= 2 fleet-shaped presets, got {fleets}");
+        assert!(
+            PRESET_NAMES.len() - fleets >= 2,
+            "want >= 2 serve-shaped presets"
+        );
+    }
+}

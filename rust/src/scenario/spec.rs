@@ -1,0 +1,1343 @@
+//! The declarative [`Scenario`] spec: typed builder, validation, and
+//! schema-versioned JSON (de)serialization on [`util::json`].
+//!
+//! A scenario is **one document** describing a complete workload —
+//! system physics, serving policy, traffic shape, admission control,
+//! caching, quantization, and (optionally) the multi-cell fleet layer —
+//! with nothing hidden in code. Serialization is canonical: objects are
+//! key-sorted ([`Json`] uses `BTreeMap`), optional sections are omitted
+//! when unset, and every number prints losslessly, so
+//! `parse → serialize → parse` is bit-identical (a property test in
+//! `tests/scenario.rs` holds every preset to this).
+//!
+//! Times that ought to scale with the system — batch-former waits, shed
+//! deadlines, MMPP dwell, diurnal period — are written as [`Dur`]: either
+//! absolute seconds or multiples of the calibrated round latency, so one
+//! scenario file means the same thing on a 3-expert toy and a 128-
+//! subcarrier paper-scale system.
+//!
+//! [`util::json`]: crate::util::json
+
+use crate::config::SystemConfig;
+use crate::coordinator::ServePolicy;
+use crate::fleet::{MobilityConfig, RoutePolicy};
+use crate::selection::SelectorSpec;
+use crate::serve::{ArrivalProcess, EvictionPolicy, QuantizerConfig, QueueConfig};
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Newest scenario schema this build writes (and the oldest it refuses
+/// to read *above*): bump when a field changes meaning, not when purely
+/// additive fields appear.
+pub const SCHEMA_VERSION: u32 = 1;
+
+// ---------------------------------------------------------------------------
+// JSON helpers: every reader goes through these so diagnostics carry the
+// exact path of the offending field.
+// ---------------------------------------------------------------------------
+
+fn bad(path: &str, what: impl std::fmt::Display) -> Error {
+    Error::msg(format!("{path}: {what}"))
+}
+
+/// Reject keys the schema does not know — a typo'd field silently doing
+/// nothing is the whole failure mode scenario files exist to prevent.
+fn check_keys(v: &Json, allowed: &[&str], path: &str) -> Result<()> {
+    let obj = v
+        .as_obj()
+        .ok_or_else(|| bad(path, "expected a JSON object"))?;
+    for key in obj.keys() {
+        if !allowed.contains(&key.as_str()) {
+            return Err(bad(
+                path,
+                format!(
+                    "unknown field '{key}' (known: {})",
+                    allowed.join(", ")
+                ),
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn get_f64(v: &Json, key: &str, default: f64, path: &str) -> Result<f64> {
+    match v.get(key) {
+        Json::Null => Ok(default),
+        x => x
+            .as_f64()
+            .ok_or_else(|| bad(path, format!("'{key}' must be a number"))),
+    }
+}
+
+fn get_usize(v: &Json, key: &str, default: usize, path: &str) -> Result<usize> {
+    match v.get(key) {
+        Json::Null => Ok(default),
+        x => x
+            .as_usize()
+            .ok_or_else(|| bad(path, format!("'{key}' must be a non-negative integer"))),
+    }
+}
+
+fn opt_usize(v: &Json, key: &str, path: &str) -> Result<Option<usize>> {
+    match v.get(key) {
+        Json::Null => Ok(None),
+        x => x
+            .as_usize()
+            .map(Some)
+            .ok_or_else(|| bad(path, format!("'{key}' must be a non-negative integer"))),
+    }
+}
+
+fn get_bool(v: &Json, key: &str, default: bool, path: &str) -> Result<bool> {
+    match v.get(key) {
+        Json::Null => Ok(default),
+        x => x
+            .as_bool()
+            .ok_or_else(|| bad(path, format!("'{key}' must be a boolean"))),
+    }
+}
+
+fn req_str<'a>(v: &'a Json, key: &str, path: &str) -> Result<&'a str> {
+    v.get(key)
+        .as_str()
+        .ok_or_else(|| bad(path, format!("'{key}' must be a string")))
+}
+
+/// Seeds are u64 but JSON numbers are f64: accept only values that
+/// survive the f64 round-trip exactly (integers up to 2^53), and error
+/// on anything lossy instead of silently running a different RNG stream
+/// than the reviewed document specifies.
+fn get_seed(v: &Json, key: &str, default: u64, path: &str) -> Result<u64> {
+    let x = get_f64(v, key, default as f64, path)?;
+    if !(x >= 0.0 && x.fract() == 0.0 && x <= 9_007_199_254_740_992.0) {
+        return Err(bad(
+            path,
+            format!("'{key}' must be an integer seed in [0, 2^53] (f64-exact), got {x}"),
+        ));
+    }
+    Ok(x as u64)
+}
+
+// ---------------------------------------------------------------------------
+// Dur — round-relative or absolute durations
+// ---------------------------------------------------------------------------
+
+/// A duration that is either absolute or a multiple of the calibrated
+/// round latency. JSON: `{"s": 2.5}` or `{"rounds": 50}`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Dur {
+    Seconds(f64),
+    Rounds(f64),
+}
+
+impl Dur {
+    pub fn resolve(&self, round_s: f64) -> f64 {
+        match *self {
+            Dur::Seconds(s) => s,
+            Dur::Rounds(r) => r * round_s,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match *self {
+            Dur::Seconds(s) => Json::obj(vec![("s", Json::Num(s))]),
+            Dur::Rounds(r) => Json::obj(vec![("rounds", Json::Num(r))]),
+        }
+    }
+
+    fn from_json(v: &Json, path: &str) -> Result<Dur> {
+        check_keys(v, &["s", "rounds"], path)?;
+        let obj = v.as_obj().expect("checked above");
+        match (obj.get("s"), obj.get("rounds")) {
+            (Some(s), None) => s
+                .as_f64()
+                .map(Dur::Seconds)
+                .ok_or_else(|| bad(path, "'s' must be a number")),
+            (None, Some(r)) => r
+                .as_f64()
+                .map(Dur::Rounds)
+                .ok_or_else(|| bad(path, "'rounds' must be a number")),
+            _ => Err(bad(path, "expected exactly one of 's' or 'rounds'")),
+        }
+    }
+
+    fn validate(&self, path: &str) -> Result<()> {
+        let x = match *self {
+            Dur::Seconds(s) => s,
+            Dur::Rounds(r) => r,
+        };
+        if !(x > 0.0 && x.is_finite()) {
+            return Err(bad(path, format!("duration must be positive and finite, got {x}")));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Traffic: offered rate + arrival-process shape
+// ---------------------------------------------------------------------------
+
+/// How the offered load is specified. JSON: `{"utilization": 0.7}` or
+/// `{"qps": 12.5}`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RateSpec {
+    /// Fraction of the calibrated capacity (`cells × K / round_s`).
+    Utilization(f64),
+    /// Absolute queries per second.
+    Qps(f64),
+}
+
+impl RateSpec {
+    pub fn resolve(&self, capacity_qps: f64) -> f64 {
+        match *self {
+            RateSpec::Utilization(u) => u * capacity_qps,
+            RateSpec::Qps(q) => q,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match *self {
+            RateSpec::Utilization(u) => Json::obj(vec![("utilization", Json::Num(u))]),
+            RateSpec::Qps(q) => Json::obj(vec![("qps", Json::Num(q))]),
+        }
+    }
+
+    fn from_json(v: &Json, path: &str) -> Result<RateSpec> {
+        check_keys(v, &["utilization", "qps"], path)?;
+        let obj = v.as_obj().expect("checked above");
+        match (obj.get("utilization"), obj.get("qps")) {
+            (Some(u), None) => u
+                .as_f64()
+                .map(RateSpec::Utilization)
+                .ok_or_else(|| bad(path, "'utilization' must be a number")),
+            (None, Some(q)) => q
+                .as_f64()
+                .map(RateSpec::Qps)
+                .ok_or_else(|| bad(path, "'qps' must be a number")),
+            _ => Err(bad(path, "expected exactly one of 'utilization' or 'qps'")),
+        }
+    }
+
+    fn validate(&self, path: &str) -> Result<()> {
+        let x = match *self {
+            RateSpec::Utilization(u) => u,
+            RateSpec::Qps(q) => q,
+        };
+        if !(x > 0.0 && x.is_finite()) {
+            return Err(bad(path, format!("rate must be positive and finite, got {x}")));
+        }
+        Ok(())
+    }
+}
+
+/// Declarative arrival-process shape; the rate comes from [`RateSpec`]
+/// at preparation time.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ProcessSpec {
+    Poisson,
+    /// 2-state MMPP swinging 0.25×–1.75× around the mean rate.
+    Bursty { dwell: Dur },
+    /// Sinusoidal-rate Poisson (day/night curve).
+    Diurnal { peak_to_trough: f64, period: Dur },
+}
+
+impl ProcessSpec {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ProcessSpec::Poisson => "poisson",
+            ProcessSpec::Bursty { .. } => "bursty(mmpp)",
+            ProcessSpec::Diurnal { .. } => "diurnal",
+        }
+    }
+
+    /// Instantiate at a calibrated rate / round latency.
+    pub fn build(&self, rate_qps: f64, round_s: f64) -> ArrivalProcess {
+        match self {
+            ProcessSpec::Poisson => ArrivalProcess::Poisson { rate_qps },
+            ProcessSpec::Bursty { dwell } => {
+                ArrivalProcess::bursty_around(rate_qps, dwell.resolve(round_s))
+            }
+            ProcessSpec::Diurnal {
+                peak_to_trough,
+                period,
+            } => ArrivalProcess::diurnal_around(rate_qps, *peak_to_trough, period.resolve(round_s)),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            ProcessSpec::Poisson => Json::obj(vec![("kind", Json::Str("poisson".into()))]),
+            ProcessSpec::Bursty { dwell } => Json::obj(vec![
+                ("kind", Json::Str("bursty".into())),
+                ("dwell", dwell.to_json()),
+            ]),
+            ProcessSpec::Diurnal {
+                peak_to_trough,
+                period,
+            } => Json::obj(vec![
+                ("kind", Json::Str("diurnal".into())),
+                ("peak_to_trough", Json::Num(*peak_to_trough)),
+                ("period", period.to_json()),
+            ]),
+        }
+    }
+
+    fn from_json(v: &Json, path: &str) -> Result<ProcessSpec> {
+        let kind = req_str(v, "kind", path)?;
+        match kind {
+            "poisson" => {
+                check_keys(v, &["kind"], path)?;
+                Ok(ProcessSpec::Poisson)
+            }
+            "bursty" | "mmpp" => {
+                check_keys(v, &["kind", "dwell"], path)?;
+                let dwell = match v.get("dwell") {
+                    Json::Null => Dur::Rounds(50.0),
+                    d => Dur::from_json(d, &format!("{path}.dwell"))?,
+                };
+                Ok(ProcessSpec::Bursty { dwell })
+            }
+            "diurnal" => {
+                check_keys(v, &["kind", "peak_to_trough", "period"], path)?;
+                let period = match v.get("period") {
+                    Json::Null => Dur::Rounds(500.0),
+                    p => Dur::from_json(p, &format!("{path}.period"))?,
+                };
+                Ok(ProcessSpec::Diurnal {
+                    peak_to_trough: get_f64(v, "peak_to_trough", 3.0, path)?,
+                    period,
+                })
+            }
+            other => Err(bad(
+                path,
+                format!("unknown process kind '{other}' (known: poisson, bursty, diurnal)"),
+            )),
+        }
+    }
+
+    fn validate(&self, path: &str) -> Result<()> {
+        match self {
+            ProcessSpec::Poisson => Ok(()),
+            ProcessSpec::Bursty { dwell } => dwell.validate(&format!("{path}.dwell")),
+            ProcessSpec::Diurnal {
+                peak_to_trough,
+                period,
+            } => {
+                if !(*peak_to_trough >= 1.0 && peak_to_trough.is_finite()) {
+                    return Err(bad(
+                        path,
+                        format!("peak_to_trough must be >= 1, got {peak_to_trough}"),
+                    ));
+                }
+                period.validate(&format!("{path}.period"))
+            }
+        }
+    }
+}
+
+/// The synthetic multi-domain query stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficSpec {
+    pub queries: usize,
+    pub domains: usize,
+    pub tokens_per_query: usize,
+    /// Dirichlet concentration of the per-domain gate templates.
+    pub gate_concentration: f64,
+    /// Multiplicative gate bias toward a domain's home expert.
+    pub domain_bias: f64,
+    /// Per-query log-normal gate noise around the domain template.
+    pub gate_noise: f64,
+    pub process: ProcessSpec,
+    pub rate: RateSpec,
+}
+
+impl Default for TrafficSpec {
+    fn default() -> Self {
+        Self {
+            queries: 5_000,
+            domains: 8,
+            tokens_per_query: 4,
+            gate_concentration: 2.0,
+            domain_bias: 4.0,
+            gate_noise: 0.0,
+            process: ProcessSpec::Poisson,
+            rate: RateSpec::Utilization(0.7),
+        }
+    }
+}
+
+impl TrafficSpec {
+    const KEYS: &'static [&'static str] = &[
+        "queries",
+        "domains",
+        "tokens_per_query",
+        "gate_concentration",
+        "domain_bias",
+        "gate_noise",
+        "process",
+        "rate",
+    ];
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("queries", Json::Num(self.queries as f64)),
+            ("domains", Json::Num(self.domains as f64)),
+            ("tokens_per_query", Json::Num(self.tokens_per_query as f64)),
+            ("gate_concentration", Json::Num(self.gate_concentration)),
+            ("domain_bias", Json::Num(self.domain_bias)),
+            ("gate_noise", Json::Num(self.gate_noise)),
+            ("process", self.process.to_json()),
+            ("rate", self.rate.to_json()),
+        ])
+    }
+
+    fn from_json(v: &Json, path: &str) -> Result<TrafficSpec> {
+        check_keys(v, Self::KEYS, path)?;
+        let d = TrafficSpec::default();
+        Ok(TrafficSpec {
+            queries: get_usize(v, "queries", d.queries, path)?,
+            domains: get_usize(v, "domains", d.domains, path)?,
+            tokens_per_query: get_usize(v, "tokens_per_query", d.tokens_per_query, path)?,
+            gate_concentration: get_f64(v, "gate_concentration", d.gate_concentration, path)?,
+            domain_bias: get_f64(v, "domain_bias", d.domain_bias, path)?,
+            gate_noise: get_f64(v, "gate_noise", d.gate_noise, path)?,
+            process: match v.get("process") {
+                Json::Null => d.process,
+                p => ProcessSpec::from_json(p, &format!("{path}.process"))?,
+            },
+            rate: match v.get("rate") {
+                Json::Null => d.rate,
+                r => RateSpec::from_json(r, &format!("{path}.rate"))?,
+            },
+        })
+    }
+
+    fn validate(&self, path: &str) -> Result<()> {
+        crate::ensure!(self.queries >= 1, "{path}: queries must be >= 1");
+        crate::ensure!(self.domains >= 1, "{path}: domains must be >= 1");
+        crate::ensure!(
+            self.tokens_per_query >= 1,
+            "{path}: tokens_per_query must be >= 1"
+        );
+        crate::ensure!(
+            self.gate_concentration > 0.0 && self.gate_concentration.is_finite(),
+            "{path}: gate_concentration must be positive and finite"
+        );
+        crate::ensure!(
+            self.domain_bias >= 0.0 && self.domain_bias.is_finite(),
+            "{path}: domain_bias must be non-negative and finite"
+        );
+        crate::ensure!(
+            self.gate_noise >= 0.0 && self.gate_noise.is_finite(),
+            "{path}: gate_noise must be non-negative and finite"
+        );
+        self.process.validate(&format!("{path}.process"))?;
+        self.rate.validate(&format!("{path}.rate"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Queue / cache / quantizer sections
+// ---------------------------------------------------------------------------
+
+/// Admission-queue overrides; every `None` derives the
+/// [`QueueConfig::for_system`] default from the calibrated round
+/// latency.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct QueueSpec {
+    pub capacity: Option<usize>,
+    pub batch_queries: Option<usize>,
+    pub max_wait: Option<Dur>,
+    pub deadline: Option<Dur>,
+}
+
+impl QueueSpec {
+    const KEYS: &'static [&'static str] = &["capacity", "batch_queries", "max_wait", "deadline"];
+
+    /// Concrete queue config for a K-expert system at round latency
+    /// `round_s`.
+    pub fn build(&self, k: usize, round_s: f64) -> QueueConfig {
+        let mut q = QueueConfig::for_system(k, round_s);
+        if let Some(c) = self.capacity {
+            q.capacity = c;
+        }
+        if let Some(b) = self.batch_queries {
+            q.batch_queries = b.clamp(1, k);
+        }
+        if let Some(w) = &self.max_wait {
+            q.max_wait_s = w.resolve(round_s);
+        }
+        if let Some(d) = &self.deadline {
+            q.deadline_s = d.resolve(round_s);
+        }
+        q
+    }
+
+    fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = Vec::new();
+        if let Some(c) = self.capacity {
+            fields.push(("capacity", Json::Num(c as f64)));
+        }
+        if let Some(b) = self.batch_queries {
+            fields.push(("batch_queries", Json::Num(b as f64)));
+        }
+        if let Some(w) = &self.max_wait {
+            fields.push(("max_wait", w.to_json()));
+        }
+        if let Some(d) = &self.deadline {
+            fields.push(("deadline", d.to_json()));
+        }
+        Json::obj(fields)
+    }
+
+    fn from_json(v: &Json, path: &str) -> Result<QueueSpec> {
+        check_keys(v, Self::KEYS, path)?;
+        Ok(QueueSpec {
+            capacity: opt_usize(v, "capacity", path)?,
+            batch_queries: opt_usize(v, "batch_queries", path)?,
+            max_wait: match v.get("max_wait") {
+                Json::Null => None,
+                w => Some(Dur::from_json(w, &format!("{path}.max_wait"))?),
+            },
+            deadline: match v.get("deadline") {
+                Json::Null => None,
+                d => Some(Dur::from_json(d, &format!("{path}.deadline"))?),
+            },
+        })
+    }
+
+    fn validate(&self, k: usize, path: &str) -> Result<()> {
+        if let Some(b) = self.batch_queries {
+            crate::ensure!(
+                (1..=k).contains(&b),
+                "{path}: batch_queries {b} out of range (system has {k} experts)"
+            );
+        }
+        if let Some(c) = self.capacity {
+            crate::ensure!(c >= 1, "{path}: capacity must be >= 1");
+            if let Some(b) = self.batch_queries {
+                crate::ensure!(
+                    c >= b,
+                    "{path}: capacity {c} cannot hold one batch of {b}"
+                );
+            }
+        }
+        if let Some(w) = &self.max_wait {
+            w.validate(&format!("{path}.max_wait"))?;
+        }
+        if let Some(d) = &self.deadline {
+            d.validate(&format!("{path}.deadline"))?;
+        }
+        Ok(())
+    }
+}
+
+/// Solution-cache section; capacity 0 disables caching.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CacheSpec {
+    pub capacity: usize,
+    pub eviction: EvictionPolicy,
+    /// Shard count for fleet runs (0 = auto: one per cell, capped at
+    /// 16); single-lane serve runs ignore it.
+    pub shards: usize,
+}
+
+impl Default for CacheSpec {
+    fn default() -> Self {
+        Self {
+            capacity: 4096,
+            eviction: EvictionPolicy::CostAware,
+            shards: 0,
+        }
+    }
+}
+
+impl CacheSpec {
+    const KEYS: &'static [&'static str] = &["capacity", "eviction", "shards"];
+
+    fn eviction_label(&self) -> &'static str {
+        match self.eviction {
+            EvictionPolicy::Lru => "lru",
+            EvictionPolicy::CostAware => "cost-aware",
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("capacity", Json::Num(self.capacity as f64)),
+            ("eviction", Json::Str(self.eviction_label().into())),
+            ("shards", Json::Num(self.shards as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json, path: &str) -> Result<CacheSpec> {
+        check_keys(v, Self::KEYS, path)?;
+        let d = CacheSpec::default();
+        let eviction = match v.get("eviction") {
+            Json::Null => d.eviction,
+            e => match e.as_str() {
+                Some("lru") => EvictionPolicy::Lru,
+                Some("cost-aware") => EvictionPolicy::CostAware,
+                _ => {
+                    return Err(bad(
+                        path,
+                        "'eviction' must be \"lru\" or \"cost-aware\"",
+                    ))
+                }
+            },
+        };
+        Ok(CacheSpec {
+            capacity: get_usize(v, "capacity", d.capacity, path)?,
+            eviction,
+            shards: get_usize(v, "shards", d.shards, path)?,
+        })
+    }
+}
+
+/// Quantization section: adaptive (grids derived from observed
+/// channel/gate variance at run start) or the fixed grids below.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantSpec {
+    pub adaptive: bool,
+    pub log2_step: f64,
+    pub gate_levels: u32,
+}
+
+impl Default for QuantSpec {
+    fn default() -> Self {
+        Self {
+            adaptive: true,
+            log2_step: 3.0,
+            gate_levels: 32,
+        }
+    }
+}
+
+impl QuantSpec {
+    const KEYS: &'static [&'static str] = &["adaptive", "log2_step", "gate_levels"];
+
+    pub fn build(&self) -> QuantizerConfig {
+        QuantizerConfig {
+            log2_step: self.log2_step,
+            gate_levels: self.gate_levels,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("adaptive", Json::Bool(self.adaptive)),
+            ("log2_step", Json::Num(self.log2_step)),
+            ("gate_levels", Json::Num(self.gate_levels as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json, path: &str) -> Result<QuantSpec> {
+        check_keys(v, Self::KEYS, path)?;
+        let d = QuantSpec::default();
+        let gate_levels = get_usize(v, "gate_levels", d.gate_levels as usize, path)?;
+        // Range-check before narrowing: an `as u32` wrap would let an
+        // absurd value masquerade as a legal grid.
+        if gate_levels > u32::MAX as usize {
+            return Err(bad(path, format!("'gate_levels' out of range: {gate_levels}")));
+        }
+        Ok(QuantSpec {
+            adaptive: get_bool(v, "adaptive", d.adaptive, path)?,
+            log2_step: get_f64(v, "log2_step", d.log2_step, path)?,
+            gate_levels: gate_levels as u32,
+        })
+    }
+
+    fn validate(&self, path: &str) -> Result<()> {
+        crate::ensure!(
+            self.log2_step > 0.0 && self.log2_step.is_finite(),
+            "{path}: log2_step must be a positive finite octave width, got {}",
+            self.log2_step
+        );
+        crate::ensure!(
+            (2..=32_768).contains(&self.gate_levels),
+            "{path}: gate_levels must be in [2, 32768], got {}",
+            self.gate_levels
+        );
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Policy
+// ---------------------------------------------------------------------------
+
+/// The named policy families of §VII-A3.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PolicyKind {
+    /// `JESA(γ0, D)`: DES + Hungarian, geometric importance.
+    Jesa { gamma0: f64, d: usize },
+    /// Centralized Top-k (QoS-blind baseline).
+    TopK { k: usize },
+    /// `H(z, D)`: homogeneous importance at base QoS `z`.
+    Homogeneous { z: f64, d: usize },
+    /// `LB(γ0, D)`: non-exclusive best-subcarrier energy lower bound.
+    LowerBound { gamma0: f64, d: usize },
+}
+
+/// A serializable serving policy: one of the paper's families, with an
+/// optional [selector-registry](crate::selection::registry) override
+/// swapping the expert-selection solver by name (`des`, `topk:K`,
+/// `greedy`, `exhaustive`, `dp:G`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicySpec {
+    pub kind: PolicyKind,
+    pub selector: Option<SelectorSpec>,
+}
+
+impl Default for PolicySpec {
+    fn default() -> Self {
+        Self::jesa(0.8, 2)
+    }
+}
+
+impl PolicySpec {
+
+    pub fn jesa(gamma0: f64, d: usize) -> Self {
+        Self {
+            kind: PolicyKind::Jesa { gamma0, d },
+            selector: None,
+        }
+    }
+
+    pub fn topk(k: usize) -> Self {
+        Self {
+            kind: PolicyKind::TopK { k },
+            selector: None,
+        }
+    }
+
+    pub fn homogeneous(z: f64, d: usize) -> Self {
+        Self {
+            kind: PolicyKind::Homogeneous { z, d },
+            selector: None,
+        }
+    }
+
+    pub fn lower_bound(gamma0: f64, d: usize) -> Self {
+        Self {
+            kind: PolicyKind::LowerBound { gamma0, d },
+            selector: None,
+        }
+    }
+
+    /// Swap the expert-selection solver by registry name.
+    pub fn with_selector(mut self, selector: SelectorSpec) -> Self {
+        self.selector = Some(selector);
+        self
+    }
+
+    /// Width `D` of the policy (for validation against the expert count).
+    pub fn max_active(&self) -> usize {
+        match self.kind {
+            PolicyKind::Jesa { d, .. }
+            | PolicyKind::Homogeneous { d, .. }
+            | PolicyKind::LowerBound { d, .. } => d,
+            PolicyKind::TopK { k } => k,
+        }
+    }
+
+    /// Instantiate the runnable [`ServePolicy`] at a layer count.
+    pub fn build(&self, layers: usize) -> ServePolicy {
+        let mut p = match self.kind {
+            PolicyKind::Jesa { gamma0, d } => ServePolicy::jesa(gamma0, d, layers),
+            PolicyKind::TopK { k } => ServePolicy::topk(k, layers),
+            PolicyKind::Homogeneous { z, d } => ServePolicy::homogeneous(z, d, layers),
+            PolicyKind::LowerBound { gamma0, d } => ServePolicy::lower_bound(gamma0, d, layers),
+        };
+        if let Some(sel) = &self.selector {
+            p.policy = sel.to_policy();
+            p.label = format!("{}+{}", p.label, sel.name());
+        }
+        p
+    }
+
+    fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = Vec::new();
+        match self.kind {
+            PolicyKind::Jesa { gamma0, d } => {
+                fields.push(("kind", Json::Str("jesa".into())));
+                fields.push(("gamma0", Json::Num(gamma0)));
+                fields.push(("d", Json::Num(d as f64)));
+            }
+            PolicyKind::TopK { k } => {
+                fields.push(("kind", Json::Str("topk".into())));
+                fields.push(("k", Json::Num(k as f64)));
+            }
+            PolicyKind::Homogeneous { z, d } => {
+                fields.push(("kind", Json::Str("homogeneous".into())));
+                fields.push(("z", Json::Num(z)));
+                fields.push(("d", Json::Num(d as f64)));
+            }
+            PolicyKind::LowerBound { gamma0, d } => {
+                fields.push(("kind", Json::Str("lower-bound".into())));
+                fields.push(("gamma0", Json::Num(gamma0)));
+                fields.push(("d", Json::Num(d as f64)));
+            }
+        }
+        if let Some(sel) = &self.selector {
+            fields.push(("selector", Json::Str(sel.name())));
+        }
+        Json::obj(fields)
+    }
+
+    fn from_json(v: &Json, path: &str) -> Result<PolicySpec> {
+        // Keys are checked *per kind*: a parameter that no arm reads
+        // (e.g. "d" on a topk policy) must be rejected, not silently
+        // ignored — that is the schema's whole job.
+        let kind_name = req_str(v, "kind", path)?;
+        let kind = match kind_name {
+            "jesa" => {
+                check_keys(v, &["kind", "gamma0", "d", "selector"], path)?;
+                PolicyKind::Jesa {
+                    gamma0: get_f64(v, "gamma0", 0.8, path)?,
+                    d: get_usize(v, "d", 2, path)?,
+                }
+            }
+            "topk" => {
+                check_keys(v, &["kind", "k", "selector"], path)?;
+                PolicyKind::TopK {
+                    k: get_usize(v, "k", 2, path)?,
+                }
+            }
+            "homogeneous" => {
+                check_keys(v, &["kind", "z", "d", "selector"], path)?;
+                PolicyKind::Homogeneous {
+                    z: get_f64(v, "z", 0.5, path)?,
+                    d: get_usize(v, "d", 2, path)?,
+                }
+            }
+            "lower-bound" => {
+                check_keys(v, &["kind", "gamma0", "d", "selector"], path)?;
+                PolicyKind::LowerBound {
+                    gamma0: get_f64(v, "gamma0", 0.8, path)?,
+                    d: get_usize(v, "d", 2, path)?,
+                }
+            }
+            other => {
+                return Err(bad(
+                    path,
+                    format!(
+                        "unknown policy kind '{other}' (known: jesa, topk, homogeneous, lower-bound)"
+                    ),
+                ))
+            }
+        };
+        let selector = match v.get("selector") {
+            Json::Null => None,
+            s => {
+                let name = s
+                    .as_str()
+                    .ok_or_else(|| bad(path, "'selector' must be a string"))?;
+                Some(
+                    SelectorSpec::parse(name)
+                        .map_err(|e| bad(&format!("{path}.selector"), e))?,
+                )
+            }
+        };
+        Ok(PolicySpec { kind, selector })
+    }
+
+    fn validate(&self, k: usize, path: &str) -> Result<()> {
+        let d = self.max_active();
+        crate::ensure!(
+            (1..=k).contains(&d),
+            "{path}: selection width {d} out of range (system has {k} experts)"
+        );
+        match self.kind {
+            PolicyKind::Jesa { gamma0, .. } | PolicyKind::LowerBound { gamma0, .. } => {
+                crate::ensure!(
+                    gamma0 > 0.0 && gamma0 <= 1.0,
+                    "{path}: gamma0 must be in (0, 1], got {gamma0}"
+                );
+            }
+            PolicyKind::Homogeneous { z, .. } => {
+                crate::ensure!(
+                    z >= 0.0 && z.is_finite(),
+                    "{path}: z must be non-negative and finite, got {z}"
+                );
+            }
+            PolicyKind::TopK { .. } => {}
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fleet
+// ---------------------------------------------------------------------------
+
+/// The multi-cell layer; present iff the scenario is fleet-shaped.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSpec {
+    pub cells: usize,
+    pub route: RoutePolicy,
+    /// Cell-grid pitch in meters.
+    pub spacing_m: f64,
+    /// AR(1) fading memory of each cell's correlated channel.
+    pub fading_rho: f64,
+    pub mobility: MobilityConfig,
+    /// Scheduled drains: `(cell, at_s)`.
+    pub drains: Vec<(usize, f64)>,
+    /// Lane parallelism; `None` = auto (cores, capped at the cell
+    /// count), `Some(0)` pins the sequential event loop.
+    pub lane_workers: Option<usize>,
+}
+
+impl Default for FleetSpec {
+    fn default() -> Self {
+        Self {
+            cells: 2,
+            route: RoutePolicy::JoinShortestQueue,
+            spacing_m: 200.0,
+            fading_rho: 0.9,
+            mobility: MobilityConfig::default(),
+            drains: Vec::new(),
+            lane_workers: None,
+        }
+    }
+}
+
+impl FleetSpec {
+    const KEYS: &'static [&'static str] = &[
+        "cells",
+        "route",
+        "spacing_m",
+        "fading_rho",
+        "mobility",
+        "drains",
+        "lane_workers",
+    ];
+    const MOBILITY_KEYS: &'static [&'static str] = &[
+        "users",
+        "alpha",
+        "mean_speed_mps",
+        "speed_sigma_mps",
+        "tick_s",
+        "path_exponent",
+        "reference_m",
+        "seed",
+    ];
+
+    fn to_json(&self) -> Json {
+        let m = &self.mobility;
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("cells", Json::Num(self.cells as f64)),
+            ("route", Json::Str(self.route.label().into())),
+            ("spacing_m", Json::Num(self.spacing_m)),
+            ("fading_rho", Json::Num(self.fading_rho)),
+            (
+                "mobility",
+                Json::obj(vec![
+                    ("users", Json::Num(m.users as f64)),
+                    ("alpha", Json::Num(m.alpha)),
+                    ("mean_speed_mps", Json::Num(m.mean_speed_mps)),
+                    ("speed_sigma_mps", Json::Num(m.speed_sigma_mps)),
+                    ("tick_s", Json::Num(m.tick_s)),
+                    ("path_exponent", Json::Num(m.path_exponent)),
+                    ("reference_m", Json::Num(m.reference_m)),
+                    ("seed", Json::Num(m.seed as f64)),
+                ]),
+            ),
+            (
+                "drains",
+                Json::Arr(
+                    self.drains
+                        .iter()
+                        .map(|&(cell, at_s)| {
+                            Json::Arr(vec![Json::Num(cell as f64), Json::Num(at_s)])
+                        })
+                        .collect(),
+                ),
+            ),
+        ];
+        if let Some(lw) = self.lane_workers {
+            fields.push(("lane_workers", Json::Num(lw as f64)));
+        }
+        Json::obj(fields)
+    }
+
+    fn from_json(v: &Json, path: &str) -> Result<FleetSpec> {
+        check_keys(v, Self::KEYS, path)?;
+        let d = FleetSpec::default();
+        let route = match v.get("route") {
+            Json::Null => d.route,
+            r => {
+                let s = r
+                    .as_str()
+                    .ok_or_else(|| bad(path, "'route' must be a string"))?;
+                RoutePolicy::parse(s).ok_or_else(|| {
+                    bad(path, format!("unknown route '{s}' (known: rr, jsq, channel)"))
+                })?
+            }
+        };
+        let mpath = format!("{path}.mobility");
+        let mobility = match v.get("mobility") {
+            Json::Null => d.mobility.clone(),
+            m => {
+                check_keys(m, Self::MOBILITY_KEYS, &mpath)?;
+                let md = MobilityConfig::default();
+                MobilityConfig {
+                    users: get_usize(m, "users", md.users, &mpath)?,
+                    alpha: get_f64(m, "alpha", md.alpha, &mpath)?,
+                    mean_speed_mps: get_f64(m, "mean_speed_mps", md.mean_speed_mps, &mpath)?,
+                    speed_sigma_mps: get_f64(m, "speed_sigma_mps", md.speed_sigma_mps, &mpath)?,
+                    tick_s: get_f64(m, "tick_s", md.tick_s, &mpath)?,
+                    path_exponent: get_f64(m, "path_exponent", md.path_exponent, &mpath)?,
+                    reference_m: get_f64(m, "reference_m", md.reference_m, &mpath)?,
+                    seed: get_seed(m, "seed", md.seed, &mpath)?,
+                }
+            }
+        };
+        let drains = match v.get("drains") {
+            Json::Null => Vec::new(),
+            ds => {
+                let arr = ds
+                    .as_arr()
+                    .ok_or_else(|| bad(path, "'drains' must be an array of [cell, at_s] pairs"))?;
+                let mut out = Vec::with_capacity(arr.len());
+                for (i, pair) in arr.iter().enumerate() {
+                    let dpath = format!("{path}.drains[{i}]");
+                    let p = pair
+                        .as_arr()
+                        .filter(|p| p.len() == 2)
+                        .ok_or_else(|| bad(&dpath, "expected a [cell, at_s] pair"))?;
+                    let cell = p[0]
+                        .as_usize()
+                        .ok_or_else(|| bad(&dpath, "cell must be a non-negative integer"))?;
+                    let at_s = p[1]
+                        .as_f64()
+                        .ok_or_else(|| bad(&dpath, "at_s must be a number"))?;
+                    out.push((cell, at_s));
+                }
+                out
+            }
+        };
+        Ok(FleetSpec {
+            cells: get_usize(v, "cells", d.cells, path)?,
+            route,
+            spacing_m: get_f64(v, "spacing_m", d.spacing_m, path)?,
+            fading_rho: get_f64(v, "fading_rho", d.fading_rho, path)?,
+            mobility,
+            drains,
+            lane_workers: opt_usize(v, "lane_workers", path)?,
+        })
+    }
+
+    fn validate(&self, path: &str) -> Result<()> {
+        crate::ensure!(self.cells >= 1, "{path}: a fleet needs at least one cell");
+        crate::ensure!(
+            self.spacing_m > 0.0 && self.spacing_m.is_finite(),
+            "{path}: spacing_m must be a positive number of meters, got {}",
+            self.spacing_m
+        );
+        crate::ensure!(
+            (0.0..1.0).contains(&self.fading_rho),
+            "{path}: fading_rho must be a fading memory in [0, 1), got {}",
+            self.fading_rho
+        );
+        let m = &self.mobility;
+        crate::ensure!(m.users >= 1, "{path}.mobility: users must be >= 1");
+        crate::ensure!(
+            (0.0..1.0).contains(&m.alpha),
+            "{path}.mobility: alpha must be in [0, 1), got {}",
+            m.alpha
+        );
+        crate::ensure!(
+            m.mean_speed_mps >= 0.0 && m.mean_speed_mps.is_finite(),
+            "{path}.mobility: mean_speed_mps must be non-negative and finite"
+        );
+        crate::ensure!(
+            m.speed_sigma_mps >= 0.0 && m.speed_sigma_mps.is_finite(),
+            "{path}.mobility: speed_sigma_mps must be non-negative and finite"
+        );
+        crate::ensure!(m.tick_s > 0.0, "{path}.mobility: tick_s must be positive");
+        crate::ensure!(
+            m.path_exponent > 0.0 && m.reference_m > 0.0,
+            "{path}.mobility: path_exponent and reference_m must be positive"
+        );
+        for &(cell, at_s) in &self.drains {
+            crate::ensure!(
+                cell < self.cells,
+                "{path}.drains: cell {cell} out of range (fleet has {} cells)",
+                self.cells
+            );
+            crate::ensure!(
+                at_s >= 0.0 && at_s.is_finite(),
+                "{path}.drains: drain time must be non-negative and finite, got {at_s}"
+            );
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scenario
+// ---------------------------------------------------------------------------
+
+/// One complete, serializable workload description — the crate's front
+/// door. Build with [`Scenario::builder`], a [preset](crate::scenario::preset),
+/// or [`Scenario::from_json_str`]; execute through
+/// [`scenario::run`](crate::scenario::run) /
+/// [`scenario::prepare`](crate::scenario::prepare).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub schema_version: u32,
+    pub name: String,
+    /// Radio / energy / MoE topology physics (round seed included:
+    /// `system.workload.seed` drives traffic, channels and solvers).
+    pub system: SystemConfig,
+    pub policy: PolicySpec,
+    pub traffic: TrafficSpec,
+    pub queue: QueueSpec,
+    pub cache: CacheSpec,
+    pub quant: QuantSpec,
+    /// Worker threads for per-layer solves; `None` = auto.
+    pub workers: Option<usize>,
+    /// Present iff the scenario runs the multi-cell fleet engine.
+    pub fleet: Option<FleetSpec>,
+}
+
+impl Scenario {
+    const KEYS: &'static [&'static str] = &[
+        "schema_version",
+        "name",
+        "system",
+        "policy",
+        "traffic",
+        "queue",
+        "cache",
+        "quant",
+        "workers",
+        "fleet",
+    ];
+
+    /// A scenario with every section at its default (serve-shaped,
+    /// default system, JESA policy) under the given name.
+    pub fn new(name: &str) -> Self {
+        Self {
+            schema_version: SCHEMA_VERSION,
+            name: name.to_string(),
+            system: SystemConfig::default(),
+            policy: PolicySpec::default(),
+            traffic: TrafficSpec::default(),
+            queue: QueueSpec::default(),
+            cache: CacheSpec::default(),
+            quant: QuantSpec::default(),
+            workers: None,
+            fleet: None,
+        }
+    }
+
+    /// Start a typed builder.
+    pub fn builder(name: &str) -> ScenarioBuilder {
+        ScenarioBuilder {
+            scenario: Scenario::new(name),
+        }
+    }
+
+    /// Cross-field validation with field-path diagnostics. Runs on every
+    /// parse and build, so a `Scenario` value in hand is always
+    /// executable.
+    pub fn validate(&self) -> Result<()> {
+        crate::ensure!(
+            self.schema_version >= 1 && self.schema_version <= SCHEMA_VERSION,
+            "scenario.schema_version: {} unsupported (this build reads 1..={SCHEMA_VERSION})",
+            self.schema_version
+        );
+        crate::ensure!(!self.name.is_empty(), "scenario.name: must not be empty");
+        self.system
+            .validate()
+            .map_err(|e| bad("scenario.system", e))?;
+        let k = self.system.moe.experts;
+        self.policy.validate(k, "scenario.policy")?;
+        self.traffic.validate("scenario.traffic")?;
+        self.queue.validate(k, "scenario.queue")?;
+        // The engines assert the fixed grids whenever caching is on
+        // (adaptive derivation replaces them at run start, but the
+        // constructor still rejects degenerate values) — mirror that
+        // here with a diagnosable error instead of a panic.
+        if self.cache.capacity > 0 {
+            self.quant.validate("scenario.quant")?;
+        }
+        if let Some(f) = &self.fleet {
+            f.validate("scenario.fleet")?;
+        }
+        Ok(())
+    }
+
+    // -- JSON ---------------------------------------------------------------
+
+    /// Canonical JSON form: key-sorted, optional sections omitted when
+    /// unset. `parse(to_json(s)) == s` and serialization is a pure
+    /// function of the value, so round-trips are bit-identical.
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("schema_version", Json::Num(self.schema_version as f64)),
+            ("name", Json::Str(self.name.clone())),
+            ("system", self.system.to_json()),
+            ("policy", self.policy.to_json()),
+            ("traffic", self.traffic.to_json()),
+            ("queue", self.queue.to_json()),
+            ("cache", self.cache.to_json()),
+            ("quant", self.quant.to_json()),
+        ];
+        if let Some(w) = self.workers {
+            fields.push(("workers", Json::Num(w as f64)));
+        }
+        if let Some(f) = &self.fleet {
+            fields.push(("fleet", f.to_json()));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Scenario> {
+        check_keys(v, Self::KEYS, "scenario")?;
+        let schema_version = get_usize(v, "schema_version", SCHEMA_VERSION as usize, "scenario")?;
+        if schema_version > u32::MAX as usize {
+            return Err(bad("scenario", format!("'schema_version' out of range: {schema_version}")));
+        }
+        let schema_version = schema_version as u32;
+        let name = req_str(v, "name", "scenario")?.to_string();
+        let system = match v.get("system") {
+            Json::Null => SystemConfig::default(),
+            s => SystemConfig::from_json(s).map_err(|e| bad("scenario.system", e))?,
+        };
+        let policy = match v.get("policy") {
+            Json::Null => PolicySpec::default(),
+            p => PolicySpec::from_json(p, "scenario.policy")?,
+        };
+        let traffic = match v.get("traffic") {
+            Json::Null => TrafficSpec::default(),
+            t => TrafficSpec::from_json(t, "scenario.traffic")?,
+        };
+        let queue = match v.get("queue") {
+            Json::Null => QueueSpec::default(),
+            q => QueueSpec::from_json(q, "scenario.queue")?,
+        };
+        let cache = match v.get("cache") {
+            Json::Null => CacheSpec::default(),
+            c => CacheSpec::from_json(c, "scenario.cache")?,
+        };
+        let quant = match v.get("quant") {
+            Json::Null => QuantSpec::default(),
+            q => QuantSpec::from_json(q, "scenario.quant")?,
+        };
+        let workers = opt_usize(v, "workers", "scenario")?;
+        let fleet = match v.get("fleet") {
+            Json::Null => None,
+            f => Some(FleetSpec::from_json(f, "scenario.fleet")?),
+        };
+        let scenario = Scenario {
+            schema_version,
+            name,
+            system,
+            policy,
+            traffic,
+            queue,
+            cache,
+            quant,
+            workers,
+            fleet,
+        };
+        scenario.validate()?;
+        Ok(scenario)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<Scenario> {
+        let v = Json::parse(text).map_err(|e| Error::msg(format!("scenario: {e}")))?;
+        Self::from_json(&v)
+    }
+
+    pub fn load(path: &str) -> Result<Scenario> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::msg(format!("cannot read scenario file {path}: {e}")))?;
+        Self::from_json_str(&text)
+            .map_err(|e| e.context(format!("in scenario file {path}")))
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .map_err(|e| Error::msg(format!("cannot write scenario file {path}: {e}")))?;
+        Ok(())
+    }
+}
+
+/// Typed builder over [`Scenario`]; [`build`](ScenarioBuilder::build)
+/// validates, so an `Ok` result is always executable.
+pub struct ScenarioBuilder {
+    scenario: Scenario,
+}
+
+impl ScenarioBuilder {
+    pub fn system(mut self, system: SystemConfig) -> Self {
+        self.scenario.system = system;
+        self
+    }
+
+    pub fn policy(mut self, policy: PolicySpec) -> Self {
+        self.scenario.policy = policy;
+        self
+    }
+
+    pub fn traffic(mut self, traffic: TrafficSpec) -> Self {
+        self.scenario.traffic = traffic;
+        self
+    }
+
+    pub fn queue(mut self, queue: QueueSpec) -> Self {
+        self.scenario.queue = queue;
+        self
+    }
+
+    pub fn cache(mut self, cache: CacheSpec) -> Self {
+        self.scenario.cache = cache;
+        self
+    }
+
+    pub fn quant(mut self, quant: QuantSpec) -> Self {
+        self.scenario.quant = quant;
+        self
+    }
+
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.scenario.workers = Some(workers);
+        self
+    }
+
+    pub fn fleet(mut self, fleet: FleetSpec) -> Self {
+        self.scenario.fleet = Some(fleet);
+        self
+    }
+
+    // Shorthand mutators for the fields sweeps touch most.
+
+    pub fn queries(mut self, queries: usize) -> Self {
+        self.scenario.traffic.queries = queries;
+        self
+    }
+
+    pub fn rate(mut self, rate: RateSpec) -> Self {
+        self.scenario.traffic.rate = rate;
+        self
+    }
+
+    pub fn process(mut self, process: ProcessSpec) -> Self {
+        self.scenario.traffic.process = process;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.scenario.system.workload.seed = seed;
+        self
+    }
+
+    pub fn build(self) -> Result<Scenario> {
+        self.scenario.validate()?;
+        Ok(self.scenario)
+    }
+}

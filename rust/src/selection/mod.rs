@@ -11,7 +11,11 @@
 //! P1(a) is NP-hard (paper Prop. 1, knapsack reduction); [`des`] solves it
 //! exactly with tree search + an LP-relaxation bound, and
 //! [`exhaustive`] is the `O(2^K)` oracle used to verify optimality in
-//! tests and benches. [`topk`] and [`greedy`] are the baselines.
+//! tests and benches. [`topk`] and [`greedy`] are the baselines, [`dp`]
+//! the pseudo-polynomial cross-check. All of them sit behind the
+//! [`registry`]'s by-name [`ExpertSelector`] trait (`des`, `topk:K`,
+//! `greedy`, `exhaustive`, `dp:G`), which is how the JESA driver and
+//! [scenario](crate::scenario) files pick their solver.
 //!
 //! Infeasible instances (no ≤D-subset meets C1 — paper Remark 2) fall
 //! back to the Top-D selection and are flagged.
@@ -21,7 +25,10 @@ pub mod des;
 pub mod dp;
 pub mod exhaustive;
 pub mod greedy;
+pub mod registry;
 pub mod topk;
+
+pub use registry::{ExpertSelector, SelectorSpec};
 
 /// Numerical slack for QoS comparisons: gate scores come out of a softmax
 /// and are renormalized, so exact float equality is meaningless.

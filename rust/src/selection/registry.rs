@@ -1,0 +1,320 @@
+//! The expert-selector registry: every P1(a) solver in this module tree
+//! behind one object-safe trait, constructible **by name**.
+//!
+//! The free `solve` functions in [`des`](super::des), [`topk`](super::topk),
+//! [`greedy`](super::greedy), [`exhaustive`](super::exhaustive) and
+//! [`dp`](super::dp) are the algorithmic ground truth; this module wraps
+//! them in [`ExpertSelector`] so callers that *configure* rather than
+//! *code* — [scenario](crate::scenario) files, the JESA driver, sweeps —
+//! pick a solver from a string:
+//!
+//! ```
+//! use dmoe::selection::registry::SelectorSpec;
+//! use dmoe::selection::SelectionProblem;
+//!
+//! let mut solver = SelectorSpec::parse("topk:1").unwrap().build();
+//! let p = SelectionProblem::new(vec![0.6, 0.4], vec![1.0, 2.0], 0.5, 2);
+//! let (sel, _stats) = solver.solve(&p);
+//! assert_eq!(sel.selected, vec![0]);
+//! ```
+//!
+//! Names are `des`, `topk[:K]`, `greedy`, `exhaustive` and `dp[:GRID]`
+//! ([`SelectorSpec::NAMES`]); the optional `:param` suffix carries the
+//! solver's integer parameter. [`SelectorSpec`] round-trips with
+//! [`SelectionPolicy`](crate::jesa::SelectionPolicy) (minus `Forced`,
+//! which routes rather than solves), which is how
+//! [`jesa::solve_round`](crate::jesa::solve_round) resolves its per-round
+//! solver — one dispatch point instead of a `match` per token.
+
+use super::des::{DesSolver, DesStats};
+use super::{dp, exhaustive, greedy, topk, Selection, SelectionProblem};
+use crate::jesa::SelectionPolicy;
+use crate::util::error::{Error, Result};
+
+/// An expert-selection algorithm behind a uniform, reusable interface.
+///
+/// Implementations may keep scratch state across calls (the DES solver
+/// reuses its node arena and frontier), hence `&mut self`. Solvers that
+/// track no search statistics return [`DesStats::default`].
+pub trait ExpertSelector {
+    /// The registry name this selector parses back from (e.g. `"dp:64"`).
+    fn name(&self) -> String;
+
+    /// Solve one P1(a) instance.
+    fn solve(&mut self, problem: &SelectionProblem) -> (Selection, DesStats);
+}
+
+/// A parsed, buildable selector description — the serializable half of
+/// the registry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SelectorSpec {
+    /// Optimal branch-and-bound DES (Algorithm 1).
+    Des,
+    /// Centralized-MoE Top-k (channel/energy-blind baseline).
+    TopK(usize),
+    /// Greedy score/cost ratio heuristic.
+    Greedy,
+    /// The `O(2^K)` exhaustive oracle.
+    Exhaustive,
+    /// Pseudo-polynomial score-grid DP with the given resolution.
+    Dp(usize),
+}
+
+impl SelectorSpec {
+    /// Every registered base name (without parameters), for diagnostics.
+    pub const NAMES: &'static [&'static str] = &["des", "topk", "greedy", "exhaustive", "dp"];
+
+    /// Parse a registry name: a base name with an optional `:param`
+    /// integer suffix (`topk` defaults to k = 2, `dp` to the module's
+    /// default grid).
+    pub fn parse(spec: &str) -> Result<Self> {
+        let (base, param) = match spec.split_once(':') {
+            Some((b, p)) => (b, Some(p)),
+            None => (spec, None),
+        };
+        let param_usize = |default: usize| -> Result<usize> {
+            match param {
+                None => Ok(default),
+                Some(p) => p.parse::<usize>().map_err(|_| {
+                    Error::msg(format!(
+                        "selector '{base}' expects an integer parameter, got '{p}'"
+                    ))
+                }),
+            }
+        };
+        let reject_param = || -> Result<()> {
+            match param {
+                Some(p) => Err(Error::msg(format!(
+                    "selector '{base}' takes no parameter (got ':{p}')"
+                ))),
+                None => Ok(()),
+            }
+        };
+        match base {
+            "des" => {
+                reject_param()?;
+                Ok(SelectorSpec::Des)
+            }
+            "topk" => {
+                let k = param_usize(2)?;
+                if k == 0 {
+                    return Err(Error::msg("topk needs k >= 1"));
+                }
+                Ok(SelectorSpec::TopK(k))
+            }
+            "greedy" => {
+                reject_param()?;
+                Ok(SelectorSpec::Greedy)
+            }
+            "exhaustive" => {
+                reject_param()?;
+                Ok(SelectorSpec::Exhaustive)
+            }
+            "dp" => {
+                let grid = param_usize(dp::DEFAULT_GRID)?;
+                if grid < 2 {
+                    return Err(Error::msg("dp needs a grid of >= 2 cells"));
+                }
+                Ok(SelectorSpec::Dp(grid))
+            }
+            other => Err(Error::msg(format!(
+                "unknown selector '{other}' (known: {})",
+                Self::NAMES.join(", ")
+            ))),
+        }
+    }
+
+    /// The canonical name [`parse`](Self::parse) accepts back.
+    pub fn name(&self) -> String {
+        match self {
+            SelectorSpec::Des => "des".to_string(),
+            SelectorSpec::TopK(k) => format!("topk:{k}"),
+            SelectorSpec::Greedy => "greedy".to_string(),
+            SelectorSpec::Exhaustive => "exhaustive".to_string(),
+            SelectorSpec::Dp(grid) => format!("dp:{grid}"),
+        }
+    }
+
+    /// Instantiate the solver.
+    pub fn build(&self) -> Box<dyn ExpertSelector> {
+        match *self {
+            SelectorSpec::Des => Box::new(DesSelector::new()),
+            SelectorSpec::TopK(k) => Box::new(TopKSelector { k }),
+            SelectorSpec::Greedy => Box::new(GreedySelector),
+            SelectorSpec::Exhaustive => Box::new(ExhaustiveSelector),
+            SelectorSpec::Dp(grid) => Box::new(DpSelector { grid }),
+        }
+    }
+
+    /// The [`SelectionPolicy`] this selector corresponds to (what the
+    /// JESA driver and the cache key carry).
+    pub fn to_policy(&self) -> SelectionPolicy {
+        match *self {
+            SelectorSpec::Des => SelectionPolicy::Des,
+            SelectorSpec::TopK(k) => SelectionPolicy::TopK(k),
+            SelectorSpec::Greedy => SelectionPolicy::Greedy,
+            SelectorSpec::Exhaustive => SelectionPolicy::Exhaustive,
+            SelectorSpec::Dp(grid) => SelectionPolicy::Dp(grid),
+        }
+    }
+
+    /// Inverse of [`to_policy`](Self::to_policy). `None` for
+    /// [`SelectionPolicy::Forced`], which pins a route instead of running
+    /// a solver.
+    pub fn from_policy(policy: SelectionPolicy) -> Option<Self> {
+        match policy {
+            SelectionPolicy::Des => Some(SelectorSpec::Des),
+            SelectionPolicy::TopK(k) => Some(SelectorSpec::TopK(k)),
+            SelectionPolicy::Greedy => Some(SelectorSpec::Greedy),
+            SelectionPolicy::Exhaustive => Some(SelectorSpec::Exhaustive),
+            SelectionPolicy::Dp(grid) => Some(SelectorSpec::Dp(grid)),
+            SelectionPolicy::Forced(_) => None,
+        }
+    }
+}
+
+/// DES behind the trait: owns a [`DesSolver`] so repeated calls reuse the
+/// arena/frontier exactly like the pre-registry hot path.
+struct DesSelector {
+    solver: DesSolver,
+}
+
+impl DesSelector {
+    fn new() -> Self {
+        Self {
+            solver: DesSolver::new(),
+        }
+    }
+}
+
+impl ExpertSelector for DesSelector {
+    fn name(&self) -> String {
+        "des".to_string()
+    }
+
+    fn solve(&mut self, problem: &SelectionProblem) -> (Selection, DesStats) {
+        self.solver.solve(problem)
+    }
+}
+
+struct TopKSelector {
+    k: usize,
+}
+
+impl ExpertSelector for TopKSelector {
+    fn name(&self) -> String {
+        format!("topk:{}", self.k)
+    }
+
+    fn solve(&mut self, problem: &SelectionProblem) -> (Selection, DesStats) {
+        (topk::solve(problem, self.k), DesStats::default())
+    }
+}
+
+struct GreedySelector;
+
+impl ExpertSelector for GreedySelector {
+    fn name(&self) -> String {
+        "greedy".to_string()
+    }
+
+    fn solve(&mut self, problem: &SelectionProblem) -> (Selection, DesStats) {
+        (greedy::solve(problem), DesStats::default())
+    }
+}
+
+struct ExhaustiveSelector;
+
+impl ExpertSelector for ExhaustiveSelector {
+    fn name(&self) -> String {
+        "exhaustive".to_string()
+    }
+
+    fn solve(&mut self, problem: &SelectionProblem) -> (Selection, DesStats) {
+        (exhaustive::solve(problem), DesStats::default())
+    }
+}
+
+struct DpSelector {
+    grid: usize,
+}
+
+impl ExpertSelector for DpSelector {
+    fn name(&self) -> String {
+        format!("dp:{}", self.grid)
+    }
+
+    fn solve(&mut self, problem: &SelectionProblem) -> (Selection, DesStats) {
+        (dp::solve(problem, self.grid), DesStats::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::des;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn parse_roundtrips_canonical_names() {
+        for spec in [
+            SelectorSpec::Des,
+            SelectorSpec::TopK(3),
+            SelectorSpec::Greedy,
+            SelectorSpec::Exhaustive,
+            SelectorSpec::Dp(128),
+        ] {
+            assert_eq!(SelectorSpec::parse(&spec.name()).unwrap(), spec);
+        }
+        // Parameter defaults.
+        assert_eq!(SelectorSpec::parse("topk").unwrap(), SelectorSpec::TopK(2));
+        assert_eq!(
+            SelectorSpec::parse("dp").unwrap(),
+            SelectorSpec::Dp(dp::DEFAULT_GRID)
+        );
+    }
+
+    #[test]
+    fn parse_rejects_garbage_with_known_names() {
+        let err = SelectorSpec::parse("dse").unwrap_err();
+        assert!(err.to_string().contains("des"), "{err}");
+        assert!(SelectorSpec::parse("topk:x").is_err());
+        assert!(SelectorSpec::parse("topk:0").is_err());
+        assert!(SelectorSpec::parse("greedy:2").is_err());
+        assert!(SelectorSpec::parse("dp:1").is_err());
+    }
+
+    #[test]
+    fn registry_selectors_match_free_functions() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0xC0FFEE);
+        for _ in 0..40 {
+            let p = crate::selection::testutil::random_problem(&mut rng, 6, 3);
+            let (des_sel, _) = SelectorSpec::Des.build().solve(&p);
+            assert_eq!(des_sel, des::solve(&p).0);
+            let (tk, _) = SelectorSpec::TopK(2).build().solve(&p);
+            assert_eq!(tk, topk::solve(&p, 2));
+            let (gr, _) = SelectorSpec::Greedy.build().solve(&p);
+            assert_eq!(gr, greedy::solve(&p));
+            let (ex, _) = SelectorSpec::Exhaustive.build().solve(&p);
+            assert_eq!(ex, exhaustive::solve(&p));
+            let (dps, _) = SelectorSpec::Dp(4096).build().solve(&p);
+            assert_eq!(dps, dp::solve(&p, 4096));
+            // DES and the exhaustive oracle agree on the optimal cost.
+            assert!((des_sel.cost - ex.cost).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn policy_mapping_roundtrips() {
+        for spec in [
+            SelectorSpec::Des,
+            SelectorSpec::TopK(4),
+            SelectorSpec::Greedy,
+            SelectorSpec::Exhaustive,
+            SelectorSpec::Dp(64),
+        ] {
+            assert_eq!(SelectorSpec::from_policy(spec.to_policy()), Some(spec));
+        }
+        assert_eq!(SelectorSpec::from_policy(SelectionPolicy::Forced(1)), None);
+    }
+}

@@ -264,6 +264,8 @@ fn policy_tag(policy: SelectionPolicy) -> (u8, u32) {
         SelectionPolicy::TopK(k) => (1, k as u32),
         SelectionPolicy::Greedy => (2, 0),
         SelectionPolicy::Forced(j) => (3, j as u32),
+        SelectionPolicy::Exhaustive => (4, 0),
+        SelectionPolicy::Dp(grid) => (5, grid as u32),
     }
 }
 

@@ -34,6 +34,8 @@ use crate::gating::GateScores;
 use crate::jesa::{solve_round, JesaOptions, RoundProblem, RoundSolution};
 use crate::metrics::{Metrics, SelectionPattern};
 use crate::protocol::{simulate_round, ComputeModel, RoundTimeline};
+use crate::scenario::{EngineObserver, NullObserver, RoundEvent, ShedEvent};
+use crate::util::hash::Fnv1a;
 use crate::util::pool::{default_workers, parallel_map};
 use crate::util::stats;
 use crate::SystemConfig;
@@ -188,6 +190,34 @@ impl ServeReport {
         stats::percentile(&self.latencies(), 99.0)
     }
 
+    /// Order-sensitive FNV-1a digest over everything the determinism
+    /// contract covers: per-query completion timestamps, energies, shed
+    /// and round counts. Wall clock and cache hit/miss counters are
+    /// excluded (the latter so runs sharing a warm cache digest the same
+    /// as cold ones — hits are bit-identical to fresh solves by
+    /// construction). `dmoe run` prints it so repeated runs of one
+    /// scenario can be compared byte-for-byte.
+    pub fn digest(&self) -> u64 {
+        let mut h = Fnv1a::new();
+        h.write_u64(self.generated as u64);
+        h.write_u64(self.completed as u64);
+        h.write_u64(self.shed_queue_full as u64);
+        h.write_u64(self.shed_deadline as u64);
+        h.write_u64(self.rounds as u64);
+        h.write_u64(self.tokens);
+        h.write_u64(self.sim_end_s.to_bits());
+        h.write_u64(self.energy.comm_j.to_bits());
+        h.write_u64(self.energy.comp_j.to_bits());
+        h.write_u64(self.fallbacks as u64);
+        for c in &self.completions {
+            h.write_u64(c.id);
+            h.write_u64(c.arrival_s.to_bits());
+            h.write_u64(c.start_s.to_bits());
+            h.write_u64(c.done_s.to_bits());
+        }
+        h.finish()
+    }
+
     /// Human-readable summary (the `dmoe serve` output).
     pub fn render(&self) -> String {
         let mut out = String::new();
@@ -284,9 +314,20 @@ impl ServeEngine {
     /// Run one open-loop serving simulation over a traffic stream with a
     /// private solution cache.
     pub fn run(&self, traffic: &TrafficConfig) -> ServeReport {
+        self.run_streaming(traffic, &mut NullObserver)
+    }
+
+    /// [`run`](Self::run) with streaming [`EngineObserver`] hooks: round,
+    /// shed and (final) cache events are emitted live, in simulated-time
+    /// order — see the [observer contract](crate::scenario::observer).
+    pub fn run_streaming(
+        &self,
+        traffic: &TrafficConfig,
+        obs: &mut dyn EngineObserver,
+    ) -> ServeReport {
         let cache =
             SharedSolutionCache::with_policy(self.opts.cache_capacity, self.opts.cache_policy);
-        self.run_with_cache(traffic, &cache)
+        self.run_with_cache_observed(traffic, &cache, obs)
     }
 
     /// Run against a caller-provided [`SharedSolutionCache`] — the
@@ -300,6 +341,17 @@ impl ServeEngine {
         &self,
         traffic: &TrafficConfig,
         cache: &SharedSolutionCache,
+    ) -> ServeReport {
+        self.run_with_cache_observed(traffic, cache, &mut NullObserver)
+    }
+
+    /// The full-control entry point: caller-provided cache *and*
+    /// streaming observer.
+    pub fn run_with_cache_observed(
+        &self,
+        traffic: &TrafficConfig,
+        cache: &SharedSolutionCache,
+        obs: &mut dyn EngineObserver,
     ) -> ServeReport {
         let t0 = Instant::now();
         let k = self.cfg.moe.experts;
@@ -345,9 +397,11 @@ impl ServeEngine {
         };
 
         let mut stream = arrivals.into_iter().peekable();
+        let mut shed_seen = 0usize;
         while stream.peek().is_some() || !queue.is_empty() {
             if queue.is_empty() {
                 queue.push(stream.next().expect("stream non-empty"));
+                emit_new_sheds(&queue, &mut shed_seen, obs);
                 continue;
             }
             // Admit every arrival that lands before the next round could
@@ -358,6 +412,7 @@ impl ServeEngine {
             if let Some(next) = stream.peek() {
                 if next.at_s <= start_if_now {
                     queue.push(stream.next().expect("peeked"));
+                    emit_new_sheds(&queue, &mut shed_seen, obs);
                     continue;
                 }
             }
@@ -371,6 +426,7 @@ impl ServeEngine {
             };
             let start = formed_at.max(free_at);
             queue.shed_expired(start);
+            emit_new_sheds(&queue, &mut shed_seen, obs);
             if queue.is_empty() {
                 continue;
             }
@@ -388,6 +444,14 @@ impl ServeEngine {
             tokens_total += (round_tokens * layers) as u64;
 
             free_at = start + latency_s;
+            obs.on_round(&RoundEvent {
+                cell: 0,
+                start_s: start,
+                latency_s,
+                queries: batch.len(),
+                tokens: round_tokens,
+                cache_hits: hits,
+            });
             rounds_log.push(RoundLog {
                 start_s: start,
                 latency_s,
@@ -412,6 +476,7 @@ impl ServeEngine {
         let (shed_queue_full, shed_deadline) = queue.shed_counts();
         let sim_end_s = completions.iter().map(|c| c.done_s).fold(0.0, f64::max);
         let cache_stats = cache.stats();
+        obs.on_cache(&cache_stats);
         ServeReport {
             process: traffic.process.label().to_string(),
             generated,
@@ -433,6 +498,22 @@ impl ServeEngine {
             metrics,
         }
     }
+}
+
+/// Forward any admission-queue sheds logged since the last call to the
+/// observer (the queue sheds internally on push/expiry; this watermark
+/// keeps the events streaming without the queue knowing about
+/// observers).
+fn emit_new_sheds(queue: &AdmissionQueue, seen: &mut usize, obs: &mut dyn EngineObserver) {
+    let log = queue.shed_log();
+    for &(id, reason) in &log[*seen..] {
+        obs.on_shed(&ShedEvent {
+            cell: 0,
+            query_id: id,
+            reason,
+        });
+    }
+    *seen = log.len();
 }
 
 /// Everything one round execution needs besides the per-round state —
@@ -642,16 +723,32 @@ pub fn derive_quantizer(
 }
 
 /// Estimate the mean discrete-event latency of one full-batch round under
-/// a config/policy/workload (no caching, exact channel): used by the CLI
-/// to auto-derive an arrival rate targeting a utilization level, and by
-/// benchmarks as a capacity probe.
+/// a config/policy/workload (no caching, exact channel): used by the
+/// scenario facade and the CLI to auto-derive an arrival rate targeting a
+/// utilization level, and by benchmarks as a capacity probe.
+///
+/// `path_scale` derates the channel's average path loss before probing —
+/// `1.0` for a standalone engine; a fleet passes the typical mobility
+/// attenuation (e.g.
+/// [`Mobility::mean_attachment_attenuation`](crate::fleet::Mobility::mean_attachment_attenuation)),
+/// since its cells serve at mobility-scaled path loss and their rounds
+/// are correspondingly slower than the unscaled probe. This is the one
+/// capacity estimator both engines share.
 pub fn estimate_round_latency_s(
     cfg: &SystemConfig,
     policy: &ServePolicy,
     traffic: &TrafficConfig,
     rounds: usize,
+    path_scale: f64,
 ) -> f64 {
     assert!(rounds >= 1);
+    assert!(
+        path_scale > 0.0 && path_scale.is_finite(),
+        "path scale must be a positive finite attenuation, got {path_scale}"
+    );
+    let mut cfg = cfg.clone();
+    cfg.channel.path_loss *= path_scale;
+    let cfg = &cfg;
     let k = cfg.moe.experts;
     let queue = QueueConfig {
         capacity: rounds * k + k,
@@ -775,8 +872,12 @@ mod tests {
     #[test]
     fn capacity_estimate_is_positive_and_finite() {
         let (cfg, opts, traffic) = tiny_setup();
-        let lr = estimate_round_latency_s(&cfg, &opts.policy, &traffic, 3);
+        let lr = estimate_round_latency_s(&cfg, &opts.policy, &traffic, 3, 1.0);
         assert!(lr.is_finite() && lr > 0.0, "round latency {lr}");
+        // The derated probe (a fleet cell at attenuated path loss) serves
+        // at lower rates, so its rounds are at least as slow.
+        let derated = estimate_round_latency_s(&cfg, &opts.policy, &traffic, 3, 0.5);
+        assert!(derated >= lr, "derated {derated} < unscaled {lr}");
     }
 
     #[test]

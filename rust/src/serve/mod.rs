@@ -29,6 +29,16 @@
 //! scores (like the paper-scale Figs. 6–9 experiments), so it needs no
 //! compiled model artifacts; `dmoe serve` exercises it from the CLI.
 //!
+//! Callers normally reach this engine through the
+//! [scenario front door](crate::scenario): it implements the
+//! [`Engine`](crate::scenario::Engine) facade trait, streams
+//! round/shed/cache events to any
+//! [`EngineObserver`](crate::scenario::EngineObserver)
+//! ([`ServeEngine::run_streaming`]), and its report carries a
+//! determinism digest ([`ServeReport::digest`]). The capacity estimator
+//! ([`estimate_round_latency_s`]) is shared with the fleet — a
+//! `path_scale` argument derates it for mobility-attenuated cells.
+//!
 //! # Fleet: lanes and the router
 //!
 //! One `ServeEngine` is a single serving *lane*: one admission queue, one

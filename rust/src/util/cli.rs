@@ -1,8 +1,13 @@
 //! Tiny command-line argument parser (no `clap` in this environment).
 //!
 //! Supports the subcommand + `--flag value` / `--flag=value` / boolean
-//! `--flag` style the `dmoe` binary and the examples use.
+//! `--flag` style the `dmoe` binary and the examples use. Callers that
+//! know their flag vocabulary should call [`Args::expect`] after
+//! parsing: unknown flags are rejected with a "did you mean" suggestion
+//! instead of being silently ignored — with scenario files in the mix, a
+//! typo'd flag quietly doing nothing is a real footgun.
 
+use crate::util::error::{Error, Result};
 use std::collections::BTreeMap;
 
 /// Parsed command line: a subcommand, positional args, and named options.
@@ -48,6 +53,28 @@ impl Args {
         args
     }
 
+    /// Reject any option or boolean flag not in `known`, suggesting the
+    /// nearest known flag for likely typos. Call once per subcommand
+    /// with its full flag vocabulary.
+    pub fn expect(&self, known: &[&str]) -> Result<()> {
+        let given = self
+            .options
+            .keys()
+            .map(|k| k.as_str())
+            .chain(self.flags.iter().map(|f| f.as_str()));
+        for name in given {
+            if known.contains(&name) {
+                continue;
+            }
+            let hint = match nearest(name, known) {
+                Some(best) => format!(" (did you mean --{best}?)"),
+                None => " (see `dmoe help` for the flag list)".to_string(),
+            };
+            return Err(Error::msg(format!("unknown flag --{name}{hint}")));
+        }
+        Ok(())
+    }
+
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -86,6 +113,42 @@ impl Args {
             })
             .unwrap_or(default)
     }
+}
+
+/// The closest known flag by edit distance, if close enough to be a
+/// plausible typo (distance ≤ 2, or ≤ a third of the flag's length for
+/// long flags; plus prefix matches like `--util` for `--utilization`).
+fn nearest<'a>(name: &str, known: &[&'a str]) -> Option<&'a str> {
+    let mut best: Option<(&str, usize)> = None;
+    for &cand in known {
+        if cand.starts_with(name) || name.starts_with(cand) {
+            return Some(cand);
+        }
+        let d = edit_distance(name, cand);
+        if best.map(|(_, bd)| d < bd).unwrap_or(true) {
+            best = Some((cand, d));
+        }
+    }
+    match best {
+        Some((cand, d)) if d <= 2.max(cand.len() / 3) => Some(cand),
+        _ => None,
+    }
+}
+
+/// Classic Levenshtein distance over bytes (flags are ASCII).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let (a, b) = (a.as_bytes(), b.as_bytes());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 #[cfg(test)]
@@ -131,5 +194,44 @@ mod tests {
         // `--offset -3` : "-3" does not start with "--" so it is a value.
         let a = parse(&["x", "--offset", "-3"]);
         assert_eq!(a.get_f64("offset", 0.0), -3.0);
+    }
+
+    #[test]
+    fn expect_accepts_known_flags() {
+        let a = parse(&["serve", "--queries", "100", "--fixed-quant"]);
+        a.expect(&["queries", "fixed-quant", "rate"]).unwrap();
+    }
+
+    #[test]
+    fn expect_rejects_typo_with_suggestion() {
+        let a = parse(&["serve", "--queris", "100"]);
+        let err = a.expect(&["queries", "rate", "utilization"]).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("--queris"), "{msg}");
+        assert!(msg.contains("did you mean --queries"), "{msg}");
+    }
+
+    #[test]
+    fn expect_suggests_on_prefix() {
+        let a = parse(&["serve", "--util", "0.5"]);
+        let err = a.expect(&["queries", "utilization"]).unwrap_err();
+        assert!(err.to_string().contains("--utilization"), "{err}");
+    }
+
+    #[test]
+    fn expect_rejects_far_off_flags_without_suggestion() {
+        let a = parse(&["serve", "--zzzzqqqq", "1"]);
+        let err = a.expect(&["queries", "rate"]).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown flag --zzzzqqqq"), "{msg}");
+        assert!(!msg.contains("did you mean"), "{msg}");
+    }
+
+    #[test]
+    fn edit_distance_sane() {
+        assert_eq!(edit_distance("abc", "abc"), 0);
+        assert_eq!(edit_distance("abc", "abd"), 1);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
     }
 }

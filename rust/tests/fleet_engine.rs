@@ -5,10 +5,9 @@
 
 use dmoe::coordinator::ServePolicy;
 use dmoe::fleet::{
-    estimate_cell_round_latency_s, CellLayout, FleetEngine, FleetOptions, FleetReport, Mobility,
-    MobilityConfig, RoutePolicy,
+    CellLayout, FleetEngine, FleetOptions, FleetReport, Mobility, MobilityConfig, RoutePolicy,
 };
-use dmoe::serve::{QueueConfig, TrafficConfig};
+use dmoe::serve::{estimate_round_latency_s, QueueConfig, TrafficConfig};
 use dmoe::SystemConfig;
 
 fn tiny_setup(cells: usize, route: RoutePolicy) -> (SystemConfig, FleetOptions) {
@@ -118,7 +117,7 @@ fn throughput_scales_with_cells_at_fixed_per_cell_utilization() {
         let scale =
             Mobility::new(mobility.clone(), &layout).mean_attachment_attenuation(&layout);
         let round_s =
-            estimate_cell_round_latency_s(&cfg, &policy, &probe_traffic, 3, scale).max(1e-9);
+            estimate_round_latency_s(&cfg, &policy, &probe_traffic, 3, scale).max(1e-9);
         let rate = cells as f64 * 0.6 * cfg.moe.experts as f64 / round_s;
         let report = run(cells, RoutePolicy::JoinShortestQueue, 400 * cells, rate);
         assert!(

@@ -1,0 +1,321 @@
+//! End-to-end coverage of the scenario front door: bit-identical JSON
+//! round-trips for every preset, file-load + run digest determinism,
+//! the unified `Engine` trait over both engine shapes, streaming
+//! `EngineObserver` delivery, and the selector-registry plumbing.
+
+use dmoe::fleet::{MobilityConfig, RoutePolicy};
+use dmoe::scenario::{
+    self, CountingObserver, EngineKind, FleetSpec, PolicySpec, QuantSpec, RateSpec, RunReport,
+    Scenario, TrafficSpec, PRESET_NAMES,
+};
+use dmoe::selection::SelectorSpec;
+use dmoe::SystemConfig;
+
+fn tiny_serve(queries: usize) -> Scenario {
+    let mut cfg = SystemConfig::tiny(); // K=3, L=2, M=12
+    cfg.workload.seed = 99;
+    Scenario::builder("tiny-serve")
+        .system(cfg)
+        .traffic(TrafficSpec {
+            queries,
+            domains: 4,
+            tokens_per_query: 2,
+            rate: RateSpec::Utilization(0.7),
+            ..TrafficSpec::default()
+        })
+        .workers(1)
+        .build()
+        .unwrap()
+}
+
+/// Mirrors the proven `fleet_engine.rs` mobility setup (24 brisk
+/// pedestrians on a 2-cell site, ~40 s stream at 600 queries) so the
+/// handover assertions below are statistically safe.
+fn tiny_fleet(queries: usize) -> Scenario {
+    let mut cfg = SystemConfig::tiny();
+    cfg.workload.seed = 99;
+    Scenario::builder("tiny-fleet")
+        .system(cfg)
+        .traffic(TrafficSpec {
+            queries,
+            domains: 4,
+            tokens_per_query: 2,
+            rate: RateSpec::Qps(15.0),
+            ..TrafficSpec::default()
+        })
+        .workers(1)
+        .fleet(FleetSpec {
+            cells: 2,
+            route: RoutePolicy::JoinShortestQueue,
+            mobility: MobilityConfig {
+                users: 24,
+                mean_speed_mps: 12.0,
+                ..MobilityConfig::default()
+            },
+            lane_workers: Some(0),
+            ..FleetSpec::default()
+        })
+        .build()
+        .unwrap()
+}
+
+// -- JSON round-trip property over the whole preset library -----------------
+
+#[test]
+fn every_preset_roundtrips_through_json_bit_identically() {
+    for name in PRESET_NAMES {
+        let s = Scenario::preset(name).unwrap();
+        let j1 = s.to_json().to_string_pretty();
+        let back = Scenario::from_json_str(&j1)
+            .unwrap_or_else(|e| panic!("preset {name} must re-parse: {e:#}"));
+        assert_eq!(back, s, "preset {name}: parse(serialize(s)) != s");
+        let j2 = back.to_json().to_string_pretty();
+        assert_eq!(j1, j2, "preset {name}: canonical JSON not bit-identical");
+        // Compact form round-trips too.
+        let compact = s.to_json().to_string();
+        let back2 = Scenario::from_json_str(&compact).unwrap();
+        assert_eq!(back2, s, "preset {name}: compact round-trip");
+    }
+}
+
+#[test]
+fn hand_built_scenarios_roundtrip_including_optional_sections() {
+    for s in [tiny_serve(50), tiny_fleet(50)] {
+        let j1 = s.to_json().to_string_pretty();
+        let back = Scenario::from_json_str(&j1).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(back.to_json().to_string_pretty(), j1);
+        // Optional sections survive: fleet presence matches.
+        assert_eq!(back.fleet.is_some(), s.fleet.is_some());
+    }
+}
+
+// -- file load + run digest determinism -------------------------------------
+
+#[test]
+fn scenario_file_runs_deterministically_for_both_shapes() {
+    let dir = std::env::temp_dir().join(format!("dmoe-scenario-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for (tag, s) in [("serve", tiny_serve(200)), ("fleet", tiny_fleet(200))] {
+        let path = dir.join(format!("{tag}.json"));
+        let path = path.to_str().unwrap();
+        s.save(path).unwrap();
+        let loaded = Scenario::load(path).unwrap();
+        assert_eq!(loaded, s, "{tag}: file round-trip");
+
+        let a = scenario::run(&loaded).unwrap();
+        let b = scenario::run(&loaded).unwrap();
+        assert_eq!(
+            a.digest(),
+            b.digest(),
+            "{tag}: same scenario file must yield identical report digests"
+        );
+        // And the file-loaded run matches the in-memory build.
+        let c = scenario::run(&s).unwrap();
+        assert_eq!(a.digest(), c.digest(), "{tag}: loaded vs built digest");
+        assert!(a.completed() > 0, "{tag}: nothing completed");
+        assert_eq!(
+            a.completed() + a.shed(),
+            a.generated(),
+            "{tag}: conservation"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// -- the unified Engine trait -----------------------------------------------
+
+#[test]
+fn both_engine_shapes_run_behind_the_engine_trait() {
+    let serve = scenario::prepare(&tiny_serve(150)).unwrap();
+    let fleet = scenario::prepare(&tiny_fleet(150)).unwrap();
+    assert_eq!(serve.kind(), EngineKind::Serve);
+    assert_eq!(fleet.kind(), EngineKind::Fleet);
+    for prepared in [&serve, &fleet] {
+        // Everything below goes through `&dyn Engine` — no engine-type
+        // match anywhere.
+        let engine = prepared.engine();
+        let report = engine.run_report(&prepared.traffic);
+        assert_eq!(report.kind(), engine.kind());
+        assert_eq!(report.completed() + report.shed(), report.generated());
+        assert!(report.rounds() > 0);
+        assert!(report.energy().total_j() > 0.0);
+        assert!(!report.render().is_empty());
+        assert!(!prepared.banner().is_empty());
+    }
+}
+
+// -- EngineObserver delivery ------------------------------------------------
+
+#[test]
+fn serve_observer_streams_rounds_sheds_and_cache() {
+    let mut s = tiny_serve(300);
+    // Tight deadlines force the shed path so on_shed is exercised.
+    s.queue.deadline = Some(scenario::Dur::Seconds(1e-6));
+    s.queue.max_wait = Some(scenario::Dur::Seconds(1e-7));
+    s.traffic.rate = RateSpec::Qps(1000.0);
+    let mut obs = CountingObserver::default();
+    let report = scenario::run_observed(&s, &mut obs).unwrap();
+    assert_eq!(obs.rounds, report.rounds(), "one RoundEvent per round");
+    assert_eq!(obs.sheds, report.shed(), "one ShedEvent per shed query");
+    assert!(obs.sheds > 0, "overload scenario must shed");
+    assert_eq!(obs.queries, report.completed(), "round events carry batches");
+    assert_eq!(obs.cache_reports, 1, "final cache stats exactly once");
+    assert_eq!(obs.cache_hits_final, report.cache().hits);
+}
+
+#[test]
+fn fleet_observer_sees_handovers_rounds_and_sheds() {
+    let s = tiny_fleet(600);
+    let mut obs = CountingObserver::default();
+    let report = scenario::run_observed(&s, &mut obs).unwrap();
+    let fleet_report = match &report {
+        RunReport::Fleet(r) => r,
+        RunReport::Serve(_) => panic!("fleet-shaped scenario ran the serve engine"),
+    };
+    assert_eq!(
+        obs.handovers, fleet_report.handovers,
+        "one HandoverEvent per recorded handover"
+    );
+    assert_eq!(obs.rounds, report.rounds(), "per-cell round replay is complete");
+    assert_eq!(obs.sheds, report.shed(), "per-cell shed replay is complete");
+    assert_eq!(obs.cache_reports, 1);
+    // Vehicular users on a tight 2-cell grid must actually hand over,
+    // otherwise this test asserts nothing.
+    assert!(
+        fleet_report.handovers > 0,
+        "expected mobility-driven handovers in this setup"
+    );
+}
+
+#[test]
+fn observer_run_leaves_report_identical_to_plain_run() {
+    let s = tiny_serve(200);
+    let mut obs = CountingObserver::default();
+    let observed = scenario::run_observed(&s, &mut obs).unwrap();
+    let plain = scenario::run(&s).unwrap();
+    assert_eq!(observed.digest(), plain.digest(), "observation must be passive");
+}
+
+// -- selector registry plumbing ---------------------------------------------
+
+#[test]
+fn scenario_selector_override_reaches_the_solver() {
+    let mut greedy = tiny_serve(150);
+    greedy.policy = PolicySpec::jesa(0.8, 2).with_selector(SelectorSpec::Greedy);
+    let prepared = scenario::prepare(&greedy).unwrap();
+    assert!(
+        prepared.banner().contains("greedy"),
+        "selector override must show in the policy label: {}",
+        prepared.banner()
+    );
+    let report = prepared.run();
+    assert_eq!(report.completed() + report.shed(), report.generated());
+
+    // The overridden scenario stays deterministic end-to-end. (No
+    // cross-solver energy comparison here: the two scenarios calibrate
+    // different offered rates, so whole-run totals are not comparable —
+    // per-instance optimality is covered by the registry unit tests.)
+    let again = scenario::run(&greedy).unwrap();
+    assert_eq!(report.digest(), again.digest());
+}
+
+#[test]
+fn selector_roundtrips_in_scenario_json() {
+    let mut s = tiny_serve(50);
+    s.policy = PolicySpec::homogeneous(0.4, 2).with_selector(SelectorSpec::Dp(128));
+    s.validate().unwrap();
+    let text = s.to_json().to_string_pretty();
+    assert!(text.contains("\"selector\": \"dp:128\""), "{text}");
+    let back = Scenario::from_json_str(&text).unwrap();
+    assert_eq!(back, s);
+}
+
+// -- validation diagnostics -------------------------------------------------
+
+#[test]
+fn parse_errors_carry_field_paths() {
+    // Unknown top-level key.
+    let err = Scenario::from_json_str(r#"{"name": "x", "trafic": {}}"#).unwrap_err();
+    assert!(format!("{err:#}").contains("trafic"), "{err:#}");
+
+    // Unknown field inside a section.
+    let err =
+        Scenario::from_json_str(r#"{"name": "x", "traffic": {"querys": 10}}"#).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("scenario.traffic") && msg.contains("querys"), "{msg}");
+
+    // Bad selector name names the registry's options.
+    let err = Scenario::from_json_str(
+        r#"{"name": "x", "policy": {"kind": "jesa", "selector": "dse"}}"#,
+    )
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("scenario.policy.selector"), "{msg}");
+    assert!(msg.contains("des"), "{msg}");
+
+    // Bad route spelling.
+    let err = Scenario::from_json_str(
+        r#"{"name": "x", "fleet": {"cells": 2, "route": "jqs"}}"#,
+    )
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("jqs"), "{err:#}");
+
+    // Cross-field: batch larger than the expert count.
+    let err = Scenario::from_json_str(
+        r#"{"name": "x", "queue": {"batch_queries": 99}}"#,
+    )
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("batch_queries") && msg.contains("99"), "{msg}");
+
+    // Unsupported schema version.
+    let err = Scenario::from_json_str(r#"{"name": "x", "schema_version": 99}"#).unwrap_err();
+    assert!(format!("{err:#}").contains("schema_version"), "{err:#}");
+}
+
+#[test]
+fn unknown_preset_error_lists_the_library() {
+    let err = Scenario::preset("papper-baseline").unwrap_err();
+    let msg = err.to_string();
+    for name in PRESET_NAMES {
+        assert!(msg.contains(name), "error must list '{name}': {msg}");
+    }
+}
+
+#[test]
+fn duration_and_rate_forms_parse() {
+    let s = Scenario::from_json_str(
+        r#"{
+            "name": "forms",
+            "traffic": {
+                "process": {"kind": "bursty", "dwell": {"s": 2.5}},
+                "rate": {"qps": 12.5}
+            },
+            "queue": {"max_wait": {"rounds": 2}}
+        }"#,
+    )
+    .unwrap();
+    match &s.traffic.process {
+        scenario::ProcessSpec::Bursty { dwell } => {
+            assert_eq!(dwell.resolve(10.0), 2.5, "absolute seconds ignore round_s")
+        }
+        other => panic!("expected bursty, got {other:?}"),
+    }
+    assert_eq!(s.traffic.rate, RateSpec::Qps(12.5));
+    assert_eq!(s.queue.max_wait.unwrap().resolve(0.5), 1.0, "2 rounds at 0.5 s");
+}
+
+#[test]
+fn quant_validation_only_binds_with_a_fixed_grid_cache() {
+    let mut s = tiny_serve(50);
+    s.quant = QuantSpec {
+        adaptive: false,
+        log2_step: -1.0,
+        gate_levels: 32,
+    };
+    assert!(s.validate().is_err(), "fixed bad grid must be rejected");
+    s.cache.capacity = 0;
+    s.validate()
+        .expect("cacheless scenarios never touch the quantizer");
+}
