@@ -8,7 +8,9 @@
 # a small synthetic Poisson stream (~2 s) — the cheapest signal that the
 # whole selection/channel/energy/serving stack still works together. The
 # fleet smoke does the same for the multi-cell layer (2 cells, JSQ
-# routing, mobility + shared cache).
+# routing, mobility + shared cache). The telemetry gate at the end
+# checks the streaming-sketch accuracy contract and the bit-identity of
+# schema-versioned run artifacts.
 #
 # NOTE: the pre-manifest seed predates any rustfmt normalization; if the
 # fmt gate fails on untouched files, run `cargo fmt` once (or SKIP_FMT=1)
@@ -74,7 +76,9 @@ done
 # File path round-trip: dump the canonical spec, run it from disk, and
 # expect the same digest as the preset run at the same query count.
 tmp_scenario=$(mktemp /tmp/dmoe-scenario-XXXXXX.json)
-trap 'rm -f "$tmp_scenario"' EXIT
+tmp_art1=$(mktemp -d /tmp/dmoe-artifact-XXXXXX)
+tmp_art2=$(mktemp -d /tmp/dmoe-artifact-XXXXXX)
+trap 'rm -f "$tmp_scenario"; rm -rf "$tmp_art1" "$tmp_art2"' EXIT
 file_digest=$(cargo run --release --quiet -- run --scenario paper-baseline --queries 600 \
   --save-scenario "$tmp_scenario" | extract_scenario_digest)
 from_file=$(cargo run --release --quiet -- run --scenario "$tmp_scenario" \
@@ -84,3 +88,36 @@ if [[ -z "$file_digest" || "$file_digest" != "$from_file" ]]; then
   exit 1
 fi
 echo "scenario file round-trip passed ($from_file)"
+
+# Telemetry gate, three parts:
+#  1. a preset smoke under --live --exact-latency --artifact-dir must
+#     pass the binary's own sketch-vs-exact accuracy cross-check (the
+#     streaming quantile sketch's p50/p95/p99 stay within the documented
+#     relative error of the exact per-query percentiles);
+#  2. `dmoe artifact` re-checksums both artifact directories and
+#     cross-checks their manifests;
+#  3. two artifacts of the same scenario must carry bit-identical
+#     scenario + report digests (wall-clock manifest fields are
+#     informational and excluded from this contract).
+out1=$(cargo run --release --quiet -- run --scenario paper-baseline --queries 600 \
+  --live --exact-latency --artifact-dir "$tmp_art1")
+if ! grep -q "telemetry accuracy: .* OK" <<<"$out1"; then
+  echo "FAIL: telemetry accuracy cross-check missing or failed:" >&2
+  echo "$out1" >&2
+  exit 1
+fi
+cargo run --release --quiet -- run --scenario paper-baseline --queries 600 \
+  --exact-latency --artifact-dir "$tmp_art2" >/dev/null
+cargo run --release --quiet -- artifact "$tmp_art1" >/dev/null
+cargo run --release --quiet -- artifact "$tmp_art2" >/dev/null
+manifest_digests() {
+  sed -n 's/.*"\(scenario_digest\|report_digest\)": "\(0x[0-9a-f]*\)".*/\1=\2/p' \
+    "$1/manifest.json" | sort
+}
+if [[ -z "$(manifest_digests "$tmp_art1")" ]] \
+  || [[ "$(manifest_digests "$tmp_art1")" != "$(manifest_digests "$tmp_art2")" ]]; then
+  echo "FAIL: run artifacts of the same scenario are not bit-identical:" >&2
+  diff <(manifest_digests "$tmp_art1") <(manifest_digests "$tmp_art2") >&2 || true
+  exit 1
+fi
+echo "telemetry gate passed ($(manifest_digests "$tmp_art1" | tr '\n' ' '))"

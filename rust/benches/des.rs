@@ -186,6 +186,7 @@ fn main() {
 
     let report = Json::obj(vec![
         ("bench", Json::Str("des".to_string())),
+        ("git_rev", Json::Str(dmoe::telemetry::git_rev())),
         ("bf_leq_seed_everywhere", Json::Bool(all_leq)),
         ("corpus", Json::Arr(corpus_rows)),
         (

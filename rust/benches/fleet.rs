@@ -146,6 +146,7 @@ fn main() {
     let report = Json::obj(vec![
         ("bench", Json::Str("fleet".to_string())),
         ("scenario", Json::Str(PRESET.to_string())),
+        ("git_rev", Json::Str(dmoe::telemetry::git_rev())),
         ("cells", Json::Num(cells as f64)),
         ("queries", Json::Num(queries as f64)),
         ("cores", Json::Num(cores as f64)),

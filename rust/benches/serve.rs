@@ -107,6 +107,7 @@ fn main() {
     let report = Json::obj(vec![
         ("bench", Json::Str("serve".to_string())),
         ("scenario", Json::Str(PRESET.to_string())),
+        ("git_rev", Json::Str(dmoe::telemetry::git_rev())),
         ("engine_qps_cached", Json::Num(engine_speed)),
         ("cache_hit_rate", Json::Num(hit_rate)),
         (

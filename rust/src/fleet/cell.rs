@@ -34,7 +34,8 @@ use crate::metrics::{Metrics, SelectionPattern};
 use crate::protocol::ComputeModel;
 use crate::serve::engine::{execute_round, Completion, RoundContext, RoundLog};
 use crate::serve::{AdmissionQueue, Arrival, QuantizerConfig, QueueConfig, SharedSolutionCache};
-use crate::util::stats;
+use crate::telemetry::LatencyStats;
+use crate::util::hash::Fnv1a;
 use crate::SystemConfig;
 use std::time::Instant;
 
@@ -98,6 +99,12 @@ pub struct CellConfig {
     pub channel_seed: u64,
     /// AR(1) fading memory of the correlated channel mode.
     pub fading_rho: f64,
+    /// Retain the exact per-query [`Completion`] vector (debug/accuracy
+    /// path). Latency stats and the completion digest always stream
+    /// either way — see [`ServeOptions::record_completions`].
+    ///
+    /// [`ServeOptions::record_completions`]: crate::serve::ServeOptions::record_completions
+    pub record_completions: bool,
 }
 
 /// One serving lane of the fleet.
@@ -119,7 +126,11 @@ pub struct Cell {
     metrics: Metrics,
     free_at: f64,
     routed: usize,
+    record_completions: bool,
     completions: Vec<Completion>,
+    completed: usize,
+    latency: LatencyStats,
+    completion_hash: Fnv1a,
     rounds_log: Vec<RoundLog>,
     fallbacks: usize,
     tokens: u64,
@@ -168,7 +179,11 @@ impl Cell {
             metrics: Metrics::new(),
             free_at: 0.0,
             routed: 0,
+            record_completions: cc.record_completions,
             completions: Vec::new(),
+            completed: 0,
+            latency: LatencyStats::new(),
+            completion_hash: Fnv1a::new(),
             rounds_log: Vec::new(),
             fallbacks: 0,
             tokens: 0,
@@ -229,7 +244,7 @@ impl Cell {
     }
 
     pub fn completed(&self) -> usize {
-        self.completions.len()
+        self.completed
     }
 
     /// Size trigger of the cell's batch former.
@@ -242,8 +257,30 @@ impl Cell {
         self.channel.path_scale()
     }
 
+    /// Exact per-query records — empty unless
+    /// [`CellConfig::record_completions`] was set.
     pub fn completions(&self) -> &[Completion] {
         &self.completions
+    }
+
+    /// Streaming end-to-end latency statistics (always populated).
+    pub fn latency_stats(&self) -> &LatencyStats {
+        &self.latency
+    }
+
+    /// Streaming FNV-1a over this cell's completion timestamps — the
+    /// per-cell slice of the fleet determinism digest.
+    pub fn completion_digest(&self) -> u64 {
+        self.completion_hash.finish()
+    }
+
+    /// Simulated time of this cell's last completion (0 when idle).
+    pub fn sim_end_s(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.free_at
+        }
     }
 
     pub fn rounds_log(&self) -> &[RoundLog] {
@@ -363,7 +400,7 @@ impl Cell {
             record_timelines: false,
         };
         let t_round = Instant::now();
-        let (latency_s, hits, fallbacks, _) = execute_round(
+        let rs = execute_round(
             &ctx,
             &batch,
             &mut self.channel,
@@ -371,14 +408,19 @@ impl Cell {
             &mut self.ledger,
             &mut self.pattern,
         );
+        let (latency_s, hits) = (rs.latency_s, rs.cache_hits);
         self.metrics.observe_s("round_wall", t_round.elapsed().as_secs_f64());
+        self.metrics.record_span("gate", rs.gate_s);
+        self.metrics.record_span("solve", rs.solve_s);
+        self.metrics.record_span("assign", rs.assign_s);
+        self.metrics.record_span("transmit", rs.transmit_s);
         self.metrics.inc("rounds", 1);
         self.metrics.inc("layer_solves", self.layers as u64);
         self.metrics.inc("cache_hits", hits as u64);
         let round_tokens: usize = batch.iter().map(|a| a.query.tokens).sum();
         self.tokens += (round_tokens * self.layers) as u64;
         self.cache_hits += hits;
-        self.fallbacks += fallbacks;
+        self.fallbacks += rs.fallbacks;
         self.free_at = start + latency_s;
         self.rounds_log.push(RoundLog {
             start_s: start,
@@ -388,33 +430,42 @@ impl Cell {
             cache_hits: hits,
         });
         for a in &batch {
-            self.completions.push(Completion {
+            let c = Completion {
                 id: a.query.id,
                 domain: a.query.domain,
                 arrival_s: a.at_s,
                 start_s: start,
                 done_s: self.free_at,
-            });
+            };
+            self.completion_hash.write_u64(c.id);
+            self.completion_hash.write_u64(c.arrival_s.to_bits());
+            self.completion_hash.write_u64(c.start_s.to_bits());
+            self.completion_hash.write_u64(c.done_s.to_bits());
+            self.latency.record(c.latency_s());
+            self.completed += 1;
+            if self.record_completions {
+                self.completions.push(c);
+            }
         }
     }
 
     /// Snapshot this cell's accounting.
     pub fn report(&self) -> CellReport {
-        let latencies: Vec<f64> = self.completions.iter().map(|c| c.latency_s()).collect();
         let (shed_queue_full, shed_deadline) = self.queue.shed_counts();
         CellReport {
             id: self.id as usize,
             state: self.state.label(),
             routed: self.routed,
-            completed: self.completions.len(),
+            completed: self.completed,
             shed_queue_full,
             shed_deadline,
             rounds: self.rounds_log.len(),
             tokens: self.tokens,
             cache_hits: self.cache_hits,
             energy: self.ledger.total(),
-            latency_p50_s: stats::percentile(&latencies, 50.0),
-            latency_p99_s: stats::percentile(&latencies, 99.0),
+            latency_p50_s: self.latency.p50_s(),
+            latency_p99_s: self.latency.p99_s(),
+            completions_digest: self.completion_hash.finish(),
             path_scale: self.channel.path_scale(),
         }
     }

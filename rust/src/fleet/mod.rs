@@ -87,8 +87,9 @@ use crate::coordinator::ServePolicy;
 use crate::energy::{EnergyBreakdown, EnergyModel};
 use crate::metrics::{Metrics, SelectionPattern};
 use crate::scenario::{
-    EngineObserver, HandoverEvent, NullObserver, RoundEvent, ShedEvent,
+    CompletionEvent, EngineObserver, HandoverEvent, NullObserver, RoundEvent, ShedEvent,
 };
+use crate::telemetry::LatencyStats;
 use crate::serve::engine::Completion;
 use crate::serve::{
     derive_quantizer, Arrival, EvictionPolicy, QuantizerConfig, QueueConfig,
@@ -145,6 +146,13 @@ pub struct FleetOptions {
     /// Scheduled drains: `(cell, at_s)` — the cell stops accepting new
     /// arrivals at `at_s` (its backlog still gets served).
     pub drain_at: Vec<(usize, f64)>,
+    /// Keep per-query [`Completion`] records in each cell (the exact
+    /// debug/accuracy path). When `false`, latency aggregates stream
+    /// into each cell's quantile sketch and completion digest only, so
+    /// fleet memory stays O(cells), not O(queries). The report digest is
+    /// identical either way. See
+    /// [`ServeOptions::record_completions`](crate::serve::ServeOptions).
+    pub record_completions: bool,
 }
 
 impl FleetOptions {
@@ -167,6 +175,7 @@ impl FleetOptions {
             fading_rho: 0.9,
             warmup_rounds: 2,
             drain_at: Vec::new(),
+            record_completions: true,
         }
     }
 }
@@ -339,6 +348,7 @@ impl FleetEngine {
                             .seed
                             .wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(c as u64 + 1)),
                         fading_rho: self.opts.fading_rho,
+                        record_completions: self.opts.record_completions,
                     },
                 );
                 cell.warm(self.opts.warmup_rounds);
@@ -395,10 +405,13 @@ impl FleetEngine {
 
         // Aggregate (deterministic merge order: ascending cell index).
         let mut completions: Vec<Completion> = Vec::new();
+        let mut latency = LatencyStats::default();
         let mut pattern = SelectionPattern::new(layers, k);
         let mut metrics = Metrics::new();
         let mut energy_total = EnergyBreakdown::default();
         let (mut shed_full, mut shed_deadline) = (0usize, 0usize);
+        let mut completed = 0usize;
+        let mut sim_end_s = 0.0f64;
         let mut rounds = 0usize;
         let mut tokens = 0u64;
         let mut fallbacks = 0usize;
@@ -426,7 +439,23 @@ impl FleetEngine {
                     reason,
                 });
             }
-            completions.extend_from_slice(cell.completions());
+            if self.opts.record_completions {
+                // Exact path: per-query records exist, so completion
+                // events replay with full timestamps.
+                for c in cell.completions() {
+                    obs.on_completion(&CompletionEvent {
+                        cell: cell.id(),
+                        query_id: c.id,
+                        arrival_s: c.arrival_s,
+                        start_s: c.start_s,
+                        done_s: c.done_s,
+                    });
+                }
+                completions.extend_from_slice(cell.completions());
+            }
+            latency.merge(cell.latency_stats());
+            completed += cell.completed();
+            sim_end_s = sim_end_s.max(cell.sim_end_s());
             pattern.merge(cell.pattern());
             metrics.merge(cell.metrics());
             energy_total += cr.energy;
@@ -437,7 +466,6 @@ impl FleetEngine {
             fallbacks += cell.fallbacks();
             cell_reports.push(cr);
         }
-        let sim_end_s = completions.iter().map(|c| c.done_s).fold(0.0, f64::max);
         metrics.inc("handovers", sessions.handovers as u64);
         obs.on_cache(&cache.stats());
 
@@ -445,7 +473,7 @@ impl FleetEngine {
             route: self.opts.route.label().to_string(),
             process: traffic.process.label().to_string(),
             generated,
-            completed: completions.len(),
+            completed,
             shed_queue_full: shed_full,
             shed_deadline,
             rounds,
@@ -458,6 +486,7 @@ impl FleetEngine {
             cache: cache.stats(),
             fallbacks,
             cells: cell_reports,
+            latency,
             completions,
             pattern,
             metrics,

@@ -5,7 +5,9 @@ use crate::energy::EnergyBreakdown;
 use crate::metrics::{Metrics, SelectionPattern};
 use crate::serve::engine::Completion;
 use crate::serve::CacheStats;
+use crate::telemetry::LatencyStats;
 use crate::util::hash::Fnv1a;
+use crate::util::json::Json;
 use crate::util::stats;
 
 /// One cell's accounting snapshot.
@@ -24,6 +26,10 @@ pub struct CellReport {
     pub energy: EnergyBreakdown,
     pub latency_p50_s: f64,
     pub latency_p99_s: f64,
+    /// Streaming FNV-1a over this cell's completion timestamps — the
+    /// per-cell slice of the fleet determinism digest, available whether
+    /// or not the exact completion vector was retained.
+    pub completions_digest: u64,
     /// Mobility-driven path-loss scale at the end of the run.
     pub path_scale: f64,
 }
@@ -58,7 +64,12 @@ pub struct FleetReport {
     pub cache: CacheStats,
     pub fallbacks: usize,
     pub cells: Vec<CellReport>,
-    /// All cells' completions (unordered across cells).
+    /// Streaming end-to-end latency statistics, merged across cells in
+    /// ascending cell order (always populated, O(1) memory).
+    pub latency: LatencyStats,
+    /// All cells' completions (unordered across cells) — populated only
+    /// with [`FleetOptions::record_completions`](crate::fleet::FleetOptions::record_completions);
+    /// empty on the O(1)-memory default scenario path.
     pub completions: Vec<Completion>,
     pub pattern: SelectionPattern,
     pub metrics: Metrics,
@@ -95,20 +106,29 @@ impl FleetReport {
         }
     }
 
-    fn latencies(&self) -> Vec<f64> {
-        self.completions.iter().map(|c| c.latency_s()).collect()
-    }
-
     pub fn latency_mean_s(&self) -> f64 {
-        stats::mean(&self.latencies())
+        self.latency.mean_s()
     }
 
     pub fn latency_p50_s(&self) -> f64 {
-        stats::percentile(&self.latencies(), 50.0)
+        self.latency.p50_s()
+    }
+
+    pub fn latency_p95_s(&self) -> f64 {
+        self.latency.p95_s()
     }
 
     pub fn latency_p99_s(&self) -> f64 {
-        stats::percentile(&self.latencies(), 99.0)
+        self.latency.p99_s()
+    }
+
+    /// Exact per-query latencies, sorted ascending — one sort, reusable
+    /// across percentile reads. Empty unless the run recorded
+    /// completions.
+    pub fn exact_latencies_sorted(&self) -> Vec<f64> {
+        let mut xs: Vec<f64> = self.completions.iter().map(|c| c.latency_s()).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs
     }
 
     /// Fraction of continued sessions whose user changed attachment
@@ -194,15 +214,70 @@ impl FleetReport {
             h.write_u64(c.energy.comp_j.to_bits());
             h.write_u64(c.latency_p50_s.to_bits());
             h.write_u64(c.latency_p99_s.to_bits());
+            // The per-cell completion timeline is pre-hashed streaming
+            // during the run (same words, same order as the retained
+            // vector would hash), so the digest covers every completion
+            // whether or not the vectors were recorded.
+            h.write_u64(c.completions_digest);
             h.write_u64(c.path_scale.to_bits());
         }
-        for c in &self.completions {
-            h.write_u64(c.id);
-            h.write_u64(c.arrival_s.to_bits());
-            h.write_u64(c.start_s.to_bits());
-            h.write_u64(c.done_s.to_bits());
-        }
         h.finish()
+    }
+
+    /// Summary JSON — the `report.json` artifact payload. Same contract
+    /// as [`ServeReport::to_json`](crate::serve::ServeReport::to_json):
+    /// wall-clock time excluded, bit-identical across repeated runs.
+    pub fn to_json(&self) -> Json {
+        let cells = Json::Arr(
+            self.cells
+                .iter()
+                .map(|c| {
+                    Json::obj(vec![
+                        ("id", Json::Num(c.id as f64)),
+                        ("state", Json::Str(c.state.to_string())),
+                        ("routed", Json::Num(c.routed as f64)),
+                        ("completed", Json::Num(c.completed as f64)),
+                        ("shed", Json::Num(c.shed() as f64)),
+                        ("rounds", Json::Num(c.rounds as f64)),
+                        ("tokens", Json::Num(c.tokens as f64)),
+                        ("cache_hits", Json::Num(c.cache_hits as f64)),
+                        ("energy_j", Json::Num(c.energy.total_j())),
+                        ("latency_p50_s", Json::Num(c.latency_p50_s)),
+                        ("latency_p99_s", Json::Num(c.latency_p99_s)),
+                        (
+                            "completions_digest",
+                            Json::Str(format!("0x{:016x}", c.completions_digest)),
+                        ),
+                        ("path_scale", Json::Num(c.path_scale)),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("engine", Json::Str("fleet".to_string())),
+            ("route", Json::Str(self.route.clone())),
+            ("process", Json::Str(self.process.clone())),
+            ("generated", Json::Num(self.generated as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("shed_queue_full", Json::Num(self.shed_queue_full as f64)),
+            ("shed_deadline", Json::Num(self.shed_deadline as f64)),
+            ("rounds", Json::Num(self.rounds as f64)),
+            ("tokens", Json::Num(self.tokens as f64)),
+            ("handovers", Json::Num(self.handovers as f64)),
+            (
+                "continued_sessions",
+                Json::Num(self.continued_sessions as f64),
+            ),
+            ("sim_end_s", Json::Num(self.sim_end_s)),
+            ("fallbacks", Json::Num(self.fallbacks as f64)),
+            ("energy_comm_j", Json::Num(self.energy.comm_j)),
+            ("energy_comp_j", Json::Num(self.energy.comp_j)),
+            ("cache_hits", Json::Num(self.cache.hits as f64)),
+            ("cache_misses", Json::Num(self.cache.misses as f64)),
+            ("latency", self.latency.to_json()),
+            ("cells", cells),
+            ("digest", Json::Str(format!("0x{:016x}", self.digest()))),
+        ])
     }
 
     /// Human-readable summary (the `dmoe fleet` output).
@@ -230,9 +305,10 @@ impl FleetReport {
             self.wall_throughput_qps(),
         ));
         out.push_str(&format!(
-            "throughput {:.2} q/s (simulated)  latency p50 {:.3} s  p99 {:.3} s  mean {:.3} s\n",
+            "throughput {:.2} q/s (simulated)  latency p50 {:.3} s  p95 {:.3} s  p99 {:.3} s  mean {:.3} s\n",
             self.throughput_qps(),
             self.latency_p50_s(),
+            self.latency_p95_s(),
             self.latency_p99_s(),
             self.latency_mean_s(),
         ));

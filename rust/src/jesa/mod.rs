@@ -98,6 +98,12 @@ pub struct RoundSolution {
     pub des_stats: DesStats,
     /// Tokens whose instance was infeasible (Remark-2 fallback applied).
     pub fallbacks: usize,
+    /// Wall time spent in Block 1 (expert selection), summed over BCD
+    /// iterations — feeds the `solve` tracing span.
+    pub select_s: f64,
+    /// Wall time spent in Block 2 (subcarrier allocation), summed over
+    /// BCD iterations — feeds the `assign` tracing span.
+    pub assign_s: f64,
 }
 
 /// JESA driver configuration.
@@ -165,6 +171,8 @@ pub fn solve_round(
     let mut fallbacks = 0usize;
     let mut iterations = 0usize;
     let mut converged = false;
+    let mut select_s = 0.0f64;
+    let mut assign_s = 0.0f64;
 
     let max_iters = match opts.policy {
         // Top-k / Forced ignore rates, so α is fixed after one pass; a
@@ -179,6 +187,7 @@ pub fn solve_round(
         fallbacks = 0;
 
         // -- Block 1: expert selection given rates (P2 → P1) -------------
+        let t_select = std::time::Instant::now();
         selections = Vec::with_capacity(k);
         for i in 0..k {
             let mut row = Vec::with_capacity(problem.gates[i].len());
@@ -222,8 +231,10 @@ pub fn solve_round(
             }
             selections.push(row);
         }
+        select_s += t_select.elapsed().as_secs_f64();
 
         // -- Block 2: subcarrier allocation given payloads (P2 → P3) -----
+        let t_assign = std::time::Instant::now();
         let payloads = payload_matrix(k, &selections, energy.energy.s0_bytes);
         match opts.allocation {
             AllocationMode::Exclusive => {
@@ -239,6 +250,7 @@ pub fn solve_round(
                 allocation = SubcarrierAllocation::empty(k);
             }
         }
+        assign_s += t_assign.elapsed().as_secs_f64();
 
         // -- Convergence check: both blocks unchanged ---------------------
         let sel_sig: Vec<Vec<Vec<usize>>> = selections
@@ -267,6 +279,8 @@ pub fn solve_round(
         converged,
         des_stats,
         fallbacks,
+        select_s,
+        assign_s,
     }
 }
 

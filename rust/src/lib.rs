@@ -73,7 +73,13 @@
 //!
 //! # Instrumentation and substrates
 //!
-//! * [`metrics`] — counters, histograms and report emission.
+//! * [`telemetry`] — observability layer: the mergeable O(1)
+//!   quantile sketch + windowed throughput counters behind every report's
+//!   latency numbers, the [`TelemetryObserver`](telemetry::TelemetryObserver)
+//!   live-stats consumer (`--live`), stage-level tracing spans, and the
+//!   schema-versioned checksummed run-artifact writer
+//!   (`dmoe run --artifact-dir`, verified by `dmoe artifact`).
+//! * [`metrics`] — counters, streaming latency stats and report emission.
 //! * [`bench_harness`] — drivers that regenerate every table and figure
 //!   of the paper's evaluation section.
 //! * [`util`] — in-tree substrates (PRNG, JSON, CLI, bench harness,
@@ -96,6 +102,7 @@ pub mod runtime;
 pub mod scenario;
 pub mod selection;
 pub mod serve;
+pub mod telemetry;
 pub mod util;
 pub mod workload;
 

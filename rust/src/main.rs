@@ -9,6 +9,8 @@
 //!              serve-shaped scenario from flags
 //!   fleet      multi-cell sharded serving — thin shim that builds a
 //!              fleet-shaped scenario from flags
+//!   artifact   verify a `--artifact-dir` run artifact (checksums +
+//!              manifest digests)
 //!   eval       serve every eval set with a policy, print metrics
 //!   info       artifact / model / config summary
 //!   table1     Table I  — DES accuracy + normalized energy
@@ -33,10 +35,12 @@ use dmoe::scenario::{
 };
 use dmoe::selection::SelectorSpec;
 use dmoe::serve::EvictionPolicy;
+use dmoe::telemetry::TelemetryObserver;
 use dmoe::util::cli::Args;
 use dmoe::util::error::Result;
 use dmoe::workload::load_eval_sets;
 use dmoe::SystemConfig;
+use std::path::Path;
 
 fn main() {
     let args = Args::from_env();
@@ -101,6 +105,11 @@ const RUN_FLAGS: &[&str] = &[
     "pattern",
     "list",
 ];
+/// Telemetry vocabulary, honored by all three serving subcommands:
+/// `--live` (periodic status line), `--artifact-dir DIR` (schema-
+/// versioned run artifact), `--exact-latency` (keep per-query records
+/// and cross-check the streaming sketch against them).
+const TELEMETRY_FLAGS: &[&str] = &["live", "artifact-dir", "exact-latency"];
 
 fn expect_flags(args: &Args, groups: &[&[&str]]) -> Result<()> {
     let mut known: Vec<&str> = Vec::new();
@@ -148,16 +157,23 @@ fn dispatch(sub: &str, args: &Args) -> Result<()> {
             info(args)
         }
         "run" => {
-            expect_flags(args, &[RUN_FLAGS])?;
+            expect_flags(args, &[RUN_FLAGS, TELEMETRY_FLAGS])?;
             run_scenario(args)
         }
         "serve" => {
-            expect_flags(args, &[BASE_FLAGS, POLICY_FLAGS, SERVE_FLAGS])?;
+            expect_flags(args, &[BASE_FLAGS, POLICY_FLAGS, SERVE_FLAGS, TELEMETRY_FLAGS])?;
             execute(scenario_from_serve_flags(args)?, args)
         }
         "fleet" => {
-            expect_flags(args, &[BASE_FLAGS, POLICY_FLAGS, SERVE_FLAGS, FLEET_FLAGS])?;
+            expect_flags(
+                args,
+                &[BASE_FLAGS, POLICY_FLAGS, SERVE_FLAGS, FLEET_FLAGS, TELEMETRY_FLAGS],
+            )?;
             execute(scenario_from_fleet_flags(args)?, args)
+        }
+        "artifact" => {
+            expect_flags(args, &[&["dir"]])?;
+            verify_artifact_cmd(args)
         }
         "eval" => {
             expect_flags(args, &[BASE_FLAGS, EMIT_FLAGS, POLICY_FLAGS])?;
@@ -371,15 +387,97 @@ fn run_scenario(args: &Args) -> Result<()> {
 
 /// Prepare + run a scenario and print the shared report surface. All
 /// three serving subcommands (`run`, `serve`, `fleet`) end here.
+///
+/// Telemetry flags: `--live` streams a periodic status line to stderr,
+/// `--artifact-dir DIR` writes a schema-versioned checksummed run
+/// artifact, and `--exact-latency` keeps per-query completion records
+/// (the debug path) and cross-checks the streaming quantile sketch
+/// against them. Without `--exact-latency` the run holds O(1) latency
+/// memory regardless of query count.
 fn execute(s: Scenario, args: &Args) -> Result<()> {
-    let prepared = scenario::prepare(&s)?;
+    let exact = args.flag("exact-latency");
+    let live = args.flag("live");
+    let artifact_dir = args.get("artifact-dir").map(str::to_string);
+    let prepared = scenario::prepare_opts(
+        &s,
+        &scenario::PrepareOptions {
+            record_completions: exact,
+        },
+    )?;
     println!("{}\n", prepared.banner());
-    let report = prepared.run();
+
+    let mut tel = TelemetryObserver::new();
+    tel.set_layers(s.system.moe.layers);
+    if live {
+        tel.enable_live(std::time::Duration::from_secs(1));
+    }
+    let observed = live || exact || artifact_dir.is_some();
+    let report = if observed {
+        prepared.run_observed(&mut tel)
+    } else {
+        prepared.run()
+    };
+
     print!("{}", report.render());
     if args.flag("pattern") {
         println!("\n{}", report.pattern().render());
     }
+    if exact {
+        verify_sketch_accuracy(&report)?;
+    }
     println!("scenario digest 0x{:016x}", report.digest());
+    if let Some(dir) = artifact_dir {
+        let manifest =
+            dmoe::telemetry::write_run_artifact(Path::new(&dir), &prepared.scenario, &report, &tel)?;
+        println!(
+            "artifact {dir}: scenario digest {} report digest {}",
+            manifest.get("scenario_digest").as_str().unwrap_or("?"),
+            manifest.get("report_digest").as_str().unwrap_or("?"),
+        );
+    }
+    Ok(())
+}
+
+/// `--exact-latency`: cross-check the streaming sketch's headline
+/// quantiles against the exact per-query records it replaced. Both
+/// sides use the nearest-rank convention, so the sketch's documented
+/// guarantee — relative error ≤ α per quantile — is directly testable.
+fn verify_sketch_accuracy(report: &scenario::RunReport) -> Result<()> {
+    let exact = report.exact_latencies_sorted();
+    if exact.is_empty() {
+        println!("telemetry accuracy: no completions to check");
+        return Ok(());
+    }
+    let stats = report.latency();
+    let alpha = stats.sketch().alpha();
+    for q in [50.0, 95.0, 99.0] {
+        let want = dmoe::util::stats::nearest_rank(&exact, q);
+        let got = stats.quantile(q);
+        dmoe::ensure!(
+            (got - want).abs() <= alpha * want.abs() + 1e-12,
+            "sketch p{q} = {got:.6} s deviates from exact {want:.6} s beyond α = {alpha}"
+        );
+    }
+    println!(
+        "telemetry accuracy: sketch p50/p95/p99 within α={alpha} of exact over {} samples OK",
+        exact.len()
+    );
+    Ok(())
+}
+
+/// `dmoe artifact <dir>`: re-checksum a run artifact and cross-check
+/// its manifest (see [`dmoe::telemetry::verify_artifact`]).
+fn verify_artifact_cmd(args: &Args) -> Result<()> {
+    let dir = match args
+        .get("dir")
+        .map(str::to_string)
+        .or_else(|| args.positional.first().cloned())
+    {
+        Some(d) => d,
+        None => dmoe::bail!("dmoe artifact needs a directory (dmoe artifact <dir>)"),
+    };
+    let (scenario_digest, report_digest) = dmoe::telemetry::verify_artifact(Path::new(&dir))?;
+    println!("artifact ok: scenario digest {scenario_digest} report digest {report_digest}");
     Ok(())
 }
 
@@ -597,6 +695,13 @@ USAGE: dmoe <subcommand> [--flags]
              --queries N --seed N        quick overrides
              --verify                    check the JSON round-trip
              --save-scenario FILE        dump the canonical spec
+             --live                      periodic one-line status (stderr)
+             --artifact-dir DIR          write a checksummed run artifact
+             --exact-latency             keep per-query records and
+                                         cross-check the latency sketch
+             (telemetry flags also work on serve/fleet)
+  artifact   verify a run artifact: dmoe artifact DIR — re-checksums
+             every payload file and cross-checks the manifest digests
   serve      continuous serving engine (thin shim over a serve-shaped
              scenario; Poisson/bursty/diurnal arrivals, admission
              control, JESA solution cache; no artifacts needed)

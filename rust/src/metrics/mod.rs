@@ -1,8 +1,16 @@
-//! Serving metrics: counters, latency histogram, selection-pattern
-//! accumulators (Fig. 6), and JSON/CSV report emission.
+//! Serving metrics: counters, streaming latency stats, stage-tracing
+//! spans, selection-pattern accumulators (Fig. 6), and JSON report
+//! emission.
+//!
+//! Latency observations stream into
+//! [`LatencyStats`](crate::telemetry::LatencyStats) — a mergeable
+//! quantile sketch plus exact sum — so metrics memory is O(stages), not
+//! O(samples), and [`Metrics::merge`] no longer concatenates vectors.
+//! Pipeline-stage timings additionally land in a fixed-capacity
+//! [`SpanRing`](crate::telemetry::SpanRing) via [`Metrics::record_span`].
 
+use crate::telemetry::{LatencyStats, SpanRing};
 use crate::util::json::Json;
-use crate::util::stats;
 use std::collections::BTreeMap;
 use std::time::Instant;
 
@@ -10,8 +18,10 @@ use std::time::Instant;
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
     counters: BTreeMap<String, u64>,
-    /// Latency samples per stage, seconds.
-    latencies: BTreeMap<String, Vec<f64>>,
+    /// Streaming latency stats per stage, seconds.
+    latencies: BTreeMap<String, LatencyStats>,
+    /// Pipeline-stage tracing spans (gate/solve/assign/transmit).
+    spans: SpanRing,
 }
 
 impl Metrics {
@@ -31,7 +41,15 @@ impl Metrics {
         self.latencies
             .entry(stage.to_string())
             .or_default()
-            .push(seconds);
+            .record(seconds);
+    }
+
+    /// Record a pipeline-stage span: streams into the latency stats
+    /// *and* the tracing ring. `stage` is static because span labels are
+    /// a closed vocabulary (gate/solve/assign/transmit).
+    pub fn record_span(&mut self, stage: &'static str, seconds: f64) {
+        self.observe_s(stage, seconds);
+        self.spans.record(stage, seconds);
     }
 
     /// Time a closure and record it under `stage`.
@@ -42,30 +60,31 @@ impl Metrics {
         out
     }
 
+    /// Streaming stats for one stage, if any samples were observed.
+    pub fn latency(&self, stage: &str) -> Option<&LatencyStats> {
+        self.latencies.get(stage)
+    }
+
     pub fn latency_mean_s(&self, stage: &str) -> f64 {
-        self.latencies
-            .get(stage)
-            .map(|xs| stats::mean(xs))
-            .unwrap_or(0.0)
+        self.latencies.get(stage).map(|s| s.mean_s()).unwrap_or(0.0)
     }
 
     pub fn latency_p95_s(&self, stage: &str) -> f64 {
-        self.latencies
-            .get(stage)
-            .map(|xs| stats::percentile(xs, 95.0))
-            .unwrap_or(0.0)
+        self.latencies.get(stage).map(|s| s.p95_s()).unwrap_or(0.0)
+    }
+
+    pub fn spans(&self) -> &SpanRing {
+        &self.spans
     }
 
     pub fn merge(&mut self, other: &Metrics) {
         for (k, v) in &other.counters {
             *self.counters.entry(k.clone()).or_insert(0) += v;
         }
-        for (k, xs) in &other.latencies {
-            self.latencies
-                .entry(k.clone())
-                .or_default()
-                .extend_from_slice(xs);
+        for (k, s) in &other.latencies {
+            self.latencies.entry(k.clone()).or_default().merge(s);
         }
+        self.spans.merge(&other.spans);
     }
 
     pub fn to_json(&self) -> Json {
@@ -78,20 +97,26 @@ impl Metrics {
         let latencies = Json::Obj(
             self.latencies
                 .iter()
-                .map(|(k, xs)| {
+                .map(|(k, s)| {
                     (
                         k.clone(),
                         Json::obj(vec![
-                            ("count", Json::Num(xs.len() as f64)),
-                            ("mean_s", Json::Num(stats::mean(xs))),
-                            ("p50_s", Json::Num(stats::percentile(xs, 50.0))),
-                            ("p95_s", Json::Num(stats::percentile(xs, 95.0))),
+                            ("count", Json::Num(s.count() as f64)),
+                            ("mean_s", Json::Num(s.mean_s())),
+                            ("p50_s", Json::Num(s.p50_s())),
+                            ("p95_s", Json::Num(s.p95_s())),
+                            ("max_s", Json::Num(s.max_s())),
+                            ("total_s", Json::Num(s.sum_s())),
                         ]),
                     )
                 })
                 .collect(),
         );
-        Json::obj(vec![("counters", counters), ("latencies", latencies)])
+        Json::obj(vec![
+            ("counters", counters),
+            ("latencies", latencies),
+            ("spans", self.spans.to_json()),
+        ])
     }
 }
 

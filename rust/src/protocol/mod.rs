@@ -214,6 +214,8 @@ mod tests {
             converged: true,
             des_stats: DesStats::default(),
             fallbacks: 0,
+            select_s: 0.0,
+            assign_s: 0.0,
         };
         let state = ChannelState::from_rates(1, 2, |_, _, _| 1e6);
         let t = RadioTiming::from_solution(&state, &solution, 1000.0);

@@ -334,6 +334,8 @@ mod tests {
             converged: true,
             des_stats: Default::default(),
             fallbacks: 0,
+            select_s: 0.0,
+            assign_s: 0.0,
         };
         let tl = simulate_round(&state, &sol, &ComputeModel::uniform(1, 2e-3), 1000.0);
         assert!((tl.round_latency_s - 4e-3).abs() < 1e-12);
@@ -425,6 +427,8 @@ mod tests {
             converged: true,
             des_stats: Default::default(),
             fallbacks: 0,
+            select_s: 0.0,
+            assign_s: 0.0,
         };
         let tl = simulate_round(&state, &sol, &ComputeModel::uniform(1, 2e-3), 1000.0);
         let path = tl.critical_path();
@@ -450,6 +454,8 @@ mod tests {
             converged: true,
             des_stats: Default::default(),
             fallbacks: 0,
+            select_s: 0.0,
+            assign_s: 0.0,
         };
         let tl = simulate_round(&state, &sol, &ComputeModel::uniform(2, 5e-3), 1000.0);
         // forward 8e3/1e6 = 8ms, compute 5ms, backward 8ms = 21ms.

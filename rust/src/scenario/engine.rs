@@ -19,7 +19,9 @@ use crate::metrics::SelectionPattern;
 use crate::serve::{
     estimate_round_latency_s, CacheStats, ServeEngine, ServeOptions, ServeReport, TrafficConfig,
 };
+use crate::telemetry::LatencyStats;
 use crate::util::error::Result;
+use crate::util::json::Json;
 use crate::util::pool::default_workers;
 
 /// What kind of engine a scenario resolved to.
@@ -126,6 +128,38 @@ impl RunReport {
         match self {
             RunReport::Serve(r) => r.digest(),
             RunReport::Fleet(r) => r.digest(),
+        }
+    }
+
+    /// [`EngineKind::label`] of the producing engine.
+    pub fn kind_name(&self) -> &'static str {
+        self.kind().label()
+    }
+
+    /// Streaming end-to-end latency stats (quantile sketch + exact sum).
+    pub fn latency(&self) -> &LatencyStats {
+        match self {
+            RunReport::Serve(r) => &r.latency,
+            RunReport::Fleet(r) => &r.latency,
+        }
+    }
+
+    /// Sorted exact per-query latencies — non-empty only when the run
+    /// recorded completions (the debug/accuracy path; see
+    /// [`PrepareOptions::record_completions`]).
+    pub fn exact_latencies_sorted(&self) -> Vec<f64> {
+        match self {
+            RunReport::Serve(r) => r.exact_latencies_sorted(),
+            RunReport::Fleet(r) => r.exact_latencies_sorted(),
+        }
+    }
+
+    /// Deterministic JSON body of the report (wall clock excluded — see
+    /// [`ServeReport::to_json`] / [`FleetReport::to_json`]).
+    pub fn to_json(&self) -> Json {
+        match self {
+            RunReport::Serve(r) => r.to_json(),
+            RunReport::Fleet(r) => r.to_json(),
         }
     }
 
@@ -260,10 +294,29 @@ impl Prepared {
     }
 }
 
+/// Execution knobs that live outside the declarative [`Scenario`] spec
+/// (they change memory/observability behavior, never the simulated
+/// result or its digest).
+#[derive(Debug, Clone, Default)]
+pub struct PrepareOptions {
+    /// Keep per-query completion records in the engines (the exact
+    /// debug/accuracy path). Off by default: production runs stream
+    /// latency into the telemetry sketch so memory stays O(1) in the
+    /// query count.
+    pub record_completions: bool,
+}
+
 /// Calibrate a scenario into a runnable [`Prepared`] workload. Pure
 /// given the scenario (the capacity probe is seeded from the scenario's
 /// own seed), so preparing twice yields identical engines and traffic.
+/// Streams with O(1) latency memory; see [`prepare_opts`] for the exact
+/// per-query debug path.
 pub fn prepare(scenario: &Scenario) -> Result<Prepared> {
+    prepare_opts(scenario, &PrepareOptions::default())
+}
+
+/// [`prepare`] with explicit [`PrepareOptions`].
+pub fn prepare_opts(scenario: &Scenario, popts: &PrepareOptions) -> Result<Prepared> {
     scenario.validate()?;
     let cfg = &scenario.system;
     let k = cfg.moe.experts;
@@ -310,6 +363,7 @@ pub fn prepare(scenario: &Scenario) -> Result<Prepared> {
                 adapt_quant: scenario.quant.adaptive,
                 workers: scenario.workers.unwrap_or_else(default_workers),
                 seed: cfg.workload.seed ^ 0x5E47E,
+                record_completions: popts.record_completions,
                 ..ServeOptions::new(policy, queue)
             };
             EngineHandle::Serve(ServeEngine::new(cfg, opts))
@@ -338,6 +392,7 @@ pub fn prepare(scenario: &Scenario) -> Result<Prepared> {
             fopts.spacing_m = f.spacing_m;
             fopts.fading_rho = f.fading_rho;
             fopts.drain_at = f.drains.clone();
+            fopts.record_completions = popts.record_completions;
             EngineHandle::Fleet(FleetEngine::new(cfg, fopts))
         }
     };

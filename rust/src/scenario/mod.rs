@@ -68,9 +68,13 @@ pub mod observer;
 pub mod preset;
 pub mod spec;
 
-pub use engine::{prepare, run, run_observed, Engine, EngineKind, Prepared, RunReport};
+pub use engine::{
+    prepare, prepare_opts, run, run_observed, Engine, EngineKind, PrepareOptions, Prepared,
+    RunReport,
+};
 pub use observer::{
-    CountingObserver, EngineObserver, HandoverEvent, NullObserver, RoundEvent, ShedEvent,
+    CompletionEvent, CountingObserver, EngineObserver, HandoverEvent, NullObserver, RoundEvent,
+    ShedEvent,
 };
 pub use preset::{preset, PRESET_NAMES};
 pub use spec::{

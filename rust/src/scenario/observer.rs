@@ -5,19 +5,24 @@
 //! [`Engine::run_observed`](super::Engine::run_observed). The contract:
 //!
 //! * **[`ServeEngine`]** streams fully live, in simulated-time order:
-//!   one [`RoundEvent`] after each executed round, a [`ShedEvent`] the
-//!   moment admission control drops a query, and one final
+//!   one [`RoundEvent`] after each executed round, a [`CompletionEvent`]
+//!   per finished query in the round, a [`ShedEvent`] the moment
+//!   admission control drops a query, and one final
 //!   [`EngineObserver::on_cache`] call with the run's cumulative
 //!   solution-cache stats.
 //! * **[`FleetEngine`]** streams [`HandoverEvent`]s live (routing is
 //!   sequential in every execution mode, so handovers arrive in global
 //!   arrival order), then — because cells execute their rounds in
 //!   parallel on the lane executor — replays each cell's
-//!   [`RoundEvent`]s/[`ShedEvent`]s *after* the run, in ascending cell
+//!   [`RoundEvent`]s/[`ShedEvent`]s (and, when completion recording is
+//!   enabled, [`CompletionEvent`]s) *after* the run, in ascending cell
 //!   order, followed by the final cache stats. The replay is
 //!   deterministic: it is derived from the same per-cell logs the
 //!   bit-identical [`FleetReport`](crate::fleet::FleetReport) digest
-//!   covers.
+//!   covers. On the default O(1)-memory path (completion recording off,
+//!   e.g. scenario runs) per-cell completion events are *not* replayed —
+//!   latency distributions still reach observers through each cell's
+//!   streaming sketch in the report.
 //!
 //! Every hook has a no-op default, so observers implement only what they
 //! consume; [`NullObserver`] is the zero-cost stand-in the plain `run`
@@ -42,6 +47,24 @@ pub struct RoundEvent {
     pub cache_hits: usize,
 }
 
+/// One query finishing service (serve: streamed live after its round;
+/// fleet: replayed per cell only when completion recording is enabled).
+#[derive(Debug, Clone)]
+pub struct CompletionEvent {
+    pub cell: u32,
+    pub query_id: u64,
+    pub arrival_s: f64,
+    pub start_s: f64,
+    pub done_s: f64,
+}
+
+impl CompletionEvent {
+    /// End-to-end latency (arrival → completion).
+    pub fn latency_s(&self) -> f64 {
+        self.done_s - self.arrival_s
+    }
+}
+
 /// One query dropped by admission control.
 #[derive(Debug, Clone)]
 pub struct ShedEvent {
@@ -64,6 +87,7 @@ pub struct HandoverEvent {
 /// Streaming hooks over an engine run. All methods default to no-ops.
 pub trait EngineObserver {
     fn on_round(&mut self, _event: &RoundEvent) {}
+    fn on_completion(&mut self, _event: &CompletionEvent) {}
     fn on_shed(&mut self, _event: &ShedEvent) {}
     fn on_handover(&mut self, _event: &HandoverEvent) {}
     /// Called once at the end of the run with the cumulative
@@ -82,6 +106,7 @@ impl EngineObserver for NullObserver {}
 pub struct CountingObserver {
     pub rounds: usize,
     pub queries: usize,
+    pub completions: usize,
     pub sheds: usize,
     pub handovers: usize,
     pub cache_reports: usize,
@@ -92,6 +117,10 @@ impl EngineObserver for CountingObserver {
     fn on_round(&mut self, event: &RoundEvent) {
         self.rounds += 1;
         self.queries += event.queries;
+    }
+
+    fn on_completion(&mut self, _event: &CompletionEvent) {
+        self.completions += 1;
     }
 
     fn on_shed(&mut self, _event: &ShedEvent) {

@@ -34,8 +34,10 @@ use crate::gating::GateScores;
 use crate::jesa::{solve_round, JesaOptions, RoundProblem, RoundSolution};
 use crate::metrics::{Metrics, SelectionPattern};
 use crate::protocol::{simulate_round, ComputeModel, RoundTimeline};
-use crate::scenario::{EngineObserver, NullObserver, RoundEvent, ShedEvent};
+use crate::scenario::{CompletionEvent, EngineObserver, NullObserver, RoundEvent, ShedEvent};
+use crate::telemetry::LatencyStats;
 use crate::util::hash::Fnv1a;
+use crate::util::json::Json;
 use crate::util::pool::{default_workers, parallel_map};
 use crate::util::stats;
 use crate::SystemConfig;
@@ -66,6 +68,13 @@ pub struct ServeOptions {
     /// Keep every round's [`RoundTimeline`]s in the report (tests /
     /// debugging only — memory grows with rounds × layers).
     pub record_timelines: bool,
+    /// Keep the full per-query [`Completion`] vector in the report.
+    /// Latency statistics always stream into the report's O(1)
+    /// [`LatencyStats`] sketch and the determinism digest is computed
+    /// streaming either way; recording additionally retains the exact
+    /// vector (memory grows with completed queries — the scenario
+    /// facade's default path turns this off so 10^6+-query runs fit).
+    pub record_completions: bool,
 }
 
 impl ServeOptions {
@@ -80,6 +89,7 @@ impl ServeOptions {
             workers: default_workers(),
             seed: 0x5E4E_7E11,
             record_timelines: false,
+            record_completions: true,
         }
     }
 }
@@ -133,6 +143,16 @@ pub struct ServeReport {
     pub energy: EnergyBreakdown,
     pub cache: CacheStats,
     pub fallbacks: usize,
+    /// Streaming end-to-end latency statistics (always populated, O(1)
+    /// memory): the source of every latency number this report prints.
+    pub latency: LatencyStats,
+    /// Streaming FNV-1a over every completion's id/arrival/start/done —
+    /// the per-query slice of [`ServeReport::digest`], computed without
+    /// retaining the completions.
+    pub completion_digest: u64,
+    /// Exact per-query records — populated only with
+    /// [`ServeOptions::record_completions`] (the debug/accuracy path);
+    /// empty on the O(1)-memory default scenario path.
     pub completions: Vec<Completion>,
     pub rounds_log: Vec<RoundLog>,
     /// `timelines[round][layer]` — only with
@@ -174,20 +194,29 @@ impl ServeReport {
         }
     }
 
-    fn latencies(&self) -> Vec<f64> {
-        self.completions.iter().map(|c| c.latency_s()).collect()
-    }
-
     pub fn latency_mean_s(&self) -> f64 {
-        stats::mean(&self.latencies())
+        self.latency.mean_s()
     }
 
     pub fn latency_p50_s(&self) -> f64 {
-        stats::percentile(&self.latencies(), 50.0)
+        self.latency.p50_s()
+    }
+
+    pub fn latency_p95_s(&self) -> f64 {
+        self.latency.p95_s()
     }
 
     pub fn latency_p99_s(&self) -> f64 {
-        stats::percentile(&self.latencies(), 99.0)
+        self.latency.p99_s()
+    }
+
+    /// Exact per-query latencies, sorted ascending — one sort, reusable
+    /// for any number of percentile reads. Empty unless the run recorded
+    /// completions ([`ServeOptions::record_completions`]).
+    pub fn exact_latencies_sorted(&self) -> Vec<f64> {
+        let mut xs: Vec<f64> = self.completions.iter().map(|c| c.latency_s()).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs
     }
 
     /// Order-sensitive FNV-1a digest over everything the determinism
@@ -209,13 +238,37 @@ impl ServeReport {
         h.write_u64(self.energy.comm_j.to_bits());
         h.write_u64(self.energy.comp_j.to_bits());
         h.write_u64(self.fallbacks as u64);
-        for c in &self.completions {
-            h.write_u64(c.id);
-            h.write_u64(c.arrival_s.to_bits());
-            h.write_u64(c.start_s.to_bits());
-            h.write_u64(c.done_s.to_bits());
-        }
+        // The per-query slice is pre-hashed streaming during the run
+        // (same words, same order), so the digest is identical whether
+        // completions were retained or not.
+        h.write_u64(self.completion_digest);
         h.finish()
+    }
+
+    /// Summary JSON — the `report.json` artifact payload. Covers the
+    /// headline counters, energy, cache and the streaming latency
+    /// sketch; deliberately excludes wall-clock time (that lives in the
+    /// artifact manifest's `perf` section) so the payload is
+    /// bit-identical across repeated runs.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("engine", Json::Str("serve".to_string())),
+            ("process", Json::Str(self.process.clone())),
+            ("generated", Json::Num(self.generated as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("shed_queue_full", Json::Num(self.shed_queue_full as f64)),
+            ("shed_deadline", Json::Num(self.shed_deadline as f64)),
+            ("rounds", Json::Num(self.rounds as f64)),
+            ("tokens", Json::Num(self.tokens as f64)),
+            ("sim_end_s", Json::Num(self.sim_end_s)),
+            ("fallbacks", Json::Num(self.fallbacks as f64)),
+            ("energy_comm_j", Json::Num(self.energy.comm_j)),
+            ("energy_comp_j", Json::Num(self.energy.comp_j)),
+            ("cache_hits", Json::Num(self.cache.hits as f64)),
+            ("cache_misses", Json::Num(self.cache.misses as f64)),
+            ("latency", self.latency.to_json()),
+            ("digest", Json::Str(format!("0x{:016x}", self.digest()))),
+        ])
     }
 
     /// Human-readable summary (the `dmoe serve` output).
@@ -240,9 +293,10 @@ impl ServeReport {
             self.wall_throughput_qps(),
         ));
         out.push_str(&format!(
-            "throughput {:.2} q/s (simulated)  latency p50 {:.3} s  p99 {:.3} s  mean {:.3} s\n",
+            "throughput {:.2} q/s (simulated)  latency p50 {:.3} s  p95 {:.3} s  p99 {:.3} s  mean {:.3} s\n",
             self.throughput_qps(),
             self.latency_p50_s(),
+            self.latency_p95_s(),
             self.latency_p99_s(),
             self.latency_mean_s(),
         ));
@@ -377,6 +431,13 @@ impl ServeEngine {
         let mut fallbacks = 0usize;
         let mut tokens_total = 0u64;
         let mut free_at = 0.0f64;
+        // Streaming per-query accounting: latency sketch, completion
+        // digest and counters accumulate as rounds finish, so the report
+        // never needs the full completion vector.
+        let mut latency = LatencyStats::new();
+        let mut completion_hash = Fnv1a::new();
+        let mut completed = 0usize;
+        let mut sim_end_s = 0.0f64;
 
         let jesa_opts = JesaOptions {
             policy: self.opts.policy.policy,
@@ -433,13 +494,17 @@ impl ServeEngine {
             let batch = queue.take_batch();
 
             let t_round = Instant::now();
-            let (latency_s, hits, round_fallbacks, round_timelines) =
-                execute_round(&ctx, &batch, &mut channel, cache, &mut ledger, &mut pattern);
+            let rs = execute_round(&ctx, &batch, &mut channel, cache, &mut ledger, &mut pattern);
+            let (latency_s, hits) = (rs.latency_s, rs.cache_hits);
             metrics.observe_s("round_wall", t_round.elapsed().as_secs_f64());
+            metrics.record_span("gate", rs.gate_s);
+            metrics.record_span("solve", rs.solve_s);
+            metrics.record_span("assign", rs.assign_s);
+            metrics.record_span("transmit", rs.transmit_s);
             metrics.inc("rounds", 1);
             metrics.inc("layer_solves", layers as u64);
             metrics.inc("cache_hits", hits as u64);
-            fallbacks += round_fallbacks;
+            fallbacks += rs.fallbacks;
             let round_tokens: usize = batch.iter().map(|a| a.query.tokens).sum();
             tokens_total += (round_tokens * layers) as u64;
 
@@ -459,28 +524,44 @@ impl ServeEngine {
                 tokens: round_tokens,
                 cache_hits: hits,
             });
-            if let Some(tls) = round_timelines {
+            if let Some(tls) = rs.timelines {
                 timelines.push(tls);
             }
             for a in &batch {
-                completions.push(Completion {
+                let c = Completion {
                     id: a.query.id,
                     domain: a.query.domain,
                     arrival_s: a.at_s,
                     start_s: start,
                     done_s: free_at,
+                };
+                completion_hash.write_u64(c.id);
+                completion_hash.write_u64(c.arrival_s.to_bits());
+                completion_hash.write_u64(c.start_s.to_bits());
+                completion_hash.write_u64(c.done_s.to_bits());
+                latency.record(c.latency_s());
+                sim_end_s = sim_end_s.max(c.done_s);
+                completed += 1;
+                obs.on_completion(&CompletionEvent {
+                    cell: 0,
+                    query_id: c.id,
+                    arrival_s: c.arrival_s,
+                    start_s: c.start_s,
+                    done_s: c.done_s,
                 });
+                if self.opts.record_completions {
+                    completions.push(c);
+                }
             }
         }
 
         let (shed_queue_full, shed_deadline) = queue.shed_counts();
-        let sim_end_s = completions.iter().map(|c| c.done_s).fold(0.0, f64::max);
         let cache_stats = cache.stats();
         obs.on_cache(&cache_stats);
         ServeReport {
             process: traffic.process.label().to_string(),
             generated,
-            completed: completions.len(),
+            completed,
             shed_queue_full,
             shed_deadline,
             rounds: rounds_log.len(),
@@ -490,6 +571,8 @@ impl ServeEngine {
             energy: ledger.total(),
             cache: cache_stats,
             fallbacks,
+            latency,
+            completion_digest: completion_hash.finish(),
             completions,
             rounds_log,
             timelines,
@@ -542,10 +625,30 @@ fn solve_cost(sol: &RoundSolution) -> f64 {
     1.0 + sol.iterations as f64 + sol.des_stats.nodes_expanded as f64
 }
 
+/// Everything [`execute_round`] reports back: the round's simulated
+/// latency, cache/fallback counters, optional timelines, and per-stage
+/// wall-time spans. Stage times are summed across the round's layer
+/// solves (which run in parallel), so they measure CPU time per stage,
+/// not wall time; `solve_s`/`assign_s` count only cache *misses* — a hit
+/// spends no solver time.
+pub(crate) struct RoundStats {
+    pub latency_s: f64,
+    pub cache_hits: usize,
+    pub fallbacks: usize,
+    pub timelines: Option<Vec<RoundTimeline>>,
+    /// Gate assembly + quantization + cache lookup.
+    pub gate_s: f64,
+    /// JESA Block 1 (expert selection), misses only.
+    pub solve_s: f64,
+    /// JESA Block 2 (subcarrier assignment), misses only.
+    pub assign_s: f64,
+    /// Discrete-event uplink/compute/downlink simulation + accounting.
+    pub transmit_s: f64,
+}
+
 /// Execute one round: refresh the channel, solve each layer through the
 /// cache (in parallel across the in-tree thread pool), account
-/// energy/patterns, and return `(latency_s, cache_hits, fallbacks,
-/// timelines)`.
+/// energy/patterns, and return the round's [`RoundStats`].
 pub(crate) fn execute_round(
     ctx: &RoundContext<'_>,
     batch: &[Arrival],
@@ -553,7 +656,7 @@ pub(crate) fn execute_round(
     cache: &SharedSolutionCache,
     ledger: &mut EnergyLedger,
     pattern: &mut SelectionPattern,
-) -> (f64, usize, usize, Option<Vec<RoundTimeline>>) {
+) -> RoundStats {
     let k = channel.experts();
     let layers = ctx.policy.importance.layers();
     let s0 = ctx.energy.energy.s0_bytes;
@@ -572,7 +675,8 @@ pub(crate) fn execute_round(
 
     let layer_ids: Vec<usize> = (0..layers).collect();
     let workers = ctx.workers.clamp(1, layers.max(1));
-    let results: Vec<(RoundSolution, bool)> = parallel_map(&layer_ids, workers, |&l| {
+    let results: Vec<(RoundSolution, bool, f64)> = parallel_map(&layer_ids, workers, |&l| {
+        let t_gate = Instant::now();
         let mut gates: Vec<Vec<GateScores>> = vec![Vec::new(); k];
         for (src, a) in batch.iter().enumerate() {
             gates[src] = a.query.gates[l].clone();
@@ -590,11 +694,12 @@ pub(crate) fn execute_round(
                     ctx.jesa,
                 );
                 if let Some(sol) = cache.get(&key, ctx.origin) {
-                    return (sol, true);
+                    return (sol, true, t_gate.elapsed().as_secs_f64());
                 }
+                let gate_s = t_gate.elapsed().as_secs_f64();
                 let sol = solve_round(&solve_state, &problem, ctx.energy, ctx.jesa);
                 cache.insert(key, sol.clone(), solve_cost(&sol), ctx.origin);
-                (sol, false)
+                (sol, false, gate_s)
             }
             None => {
                 let problem = RoundProblem {
@@ -602,7 +707,9 @@ pub(crate) fn execute_round(
                     threshold,
                     max_active: policy.max_active,
                 };
-                (solve_round(&solve_state, &problem, ctx.energy, ctx.jesa), false)
+                let gate_s = t_gate.elapsed().as_secs_f64();
+                let sol = solve_round(&solve_state, &problem, ctx.energy, ctx.jesa);
+                (sol, false, gate_s)
             }
         }
     });
@@ -611,8 +718,12 @@ pub(crate) fn execute_round(
     let mut latency_s = 0.0;
     let mut hits = 0usize;
     let mut fallbacks = 0usize;
+    let mut gate_s = 0.0;
+    let mut solve_s = 0.0;
+    let mut assign_s = 0.0;
     let mut tls = ctx.record_timelines.then(Vec::new);
-    for (l, (sol, hit)) in results.iter().enumerate() {
+    let t_transmit = Instant::now();
+    for (l, (sol, hit, layer_gate_s)) in results.iter().enumerate() {
         let timeline = simulate_round(&solve_state, sol, ctx.compute, s0);
         latency_s += timeline.round_latency_s;
         ledger.charge_comm(l, sol.energy.comm_j);
@@ -625,11 +736,25 @@ pub(crate) fn execute_round(
         }
         fallbacks += sol.fallbacks;
         hits += *hit as usize;
+        gate_s += layer_gate_s;
+        if !*hit {
+            solve_s += sol.select_s;
+            assign_s += sol.assign_s;
+        }
         if let Some(v) = tls.as_mut() {
             v.push(timeline);
         }
     }
-    (latency_s, hits, fallbacks, tls)
+    RoundStats {
+        latency_s,
+        cache_hits: hits,
+        fallbacks,
+        timelines: tls,
+        gate_s,
+        solve_s,
+        assign_s,
+        transmit_s: t_transmit.elapsed().as_secs_f64(),
+    }
 }
 
 /// Workload-adaptive quantizer derivation (engine warmup): probe the

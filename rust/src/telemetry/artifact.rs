@@ -1,0 +1,222 @@
+//! Schema-versioned, checksummed run artifacts for bit-for-bit
+//! regression diffing.
+//!
+//! `dmoe run --artifact-dir <d>` writes four files:
+//!
+//! * `scenario.json` — the canonical pretty-printed scenario spec;
+//! * `report.json` — the engine's [`RunReport`] summary JSON;
+//! * `telemetry.json` — the [`TelemetryObserver`] snapshot;
+//! * `manifest.json` — schema version, scenario name + digest, engine
+//!   kind, git revision, wall time, headline perf numbers, and an
+//!   FNV-1a checksum + byte length per payload file.
+//!
+//! Two runs of the same scenario at the same crate revision must produce
+//! manifests whose `scenario_digest` and `report_digest` compare
+//! bit-identical (`ci.sh` gates this); wall-clock fields (`unix_time_s`,
+//! `perf.wall_s`, `perf.wall_qps`) are informational and excluded from
+//! that contract. [`verify_artifact`] re-checksums a directory and
+//! cross-checks the manifest, for use by `dmoe artifact <dir>`.
+
+use crate::bail;
+use crate::scenario::{RunReport, Scenario};
+use crate::telemetry::observer::TelemetryObserver;
+use crate::util::error::{Context, Result};
+use crate::util::hash::Fnv1a;
+use crate::util::json::Json;
+use std::fs;
+use std::path::Path;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Version of the artifact directory layout + manifest schema.
+pub const ARTIFACT_SCHEMA_VERSION: u64 = 1;
+
+/// FNV-1a digest of a byte string, formatted like the report digests.
+fn checksum(bytes: &[u8]) -> String {
+    let mut h = Fnv1a::new();
+    h.write_bytes(bytes);
+    format!("0x{:016x}", h.finish())
+}
+
+/// Best-effort git revision: `DMOE_GIT_REV` env override first (CI and
+/// tests), then `git rev-parse`, then `"unknown"`.
+pub fn git_rev() -> String {
+    if let Ok(rev) = std::env::var("DMOE_GIT_REV") {
+        if !rev.is_empty() {
+            return rev;
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|out| out.status.success())
+        .and_then(|out| String::from_utf8(out.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Write a complete run artifact into `dir` (created if missing).
+/// Returns the manifest that was written.
+pub fn write_run_artifact(
+    dir: &Path,
+    scenario: &Scenario,
+    report: &RunReport,
+    telemetry: &TelemetryObserver,
+) -> Result<Json> {
+    fs::create_dir_all(dir).with_context(|| format!("artifact dir {}", dir.display()))?;
+
+    let scenario_text = scenario.to_json().to_string_pretty();
+    let report_text = report.to_json().to_string_pretty();
+    let telemetry_text = telemetry.snapshot_json().to_string_pretty();
+
+    let unix_time_s = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+
+    let mut files = Vec::new();
+    for (name, text) in [
+        ("scenario.json", &scenario_text),
+        ("report.json", &report_text),
+        ("telemetry.json", &telemetry_text),
+    ] {
+        fs::write(dir.join(name), text).with_context(|| format!("write {name}"))?;
+        files.push((
+            name,
+            Json::obj(vec![
+                ("bytes", Json::Num(text.len() as f64)),
+                ("fnv1a", Json::Str(checksum(text.as_bytes()))),
+            ]),
+        ));
+    }
+
+    let manifest = Json::obj(vec![
+        (
+            "artifact_schema_version",
+            Json::Num(ARTIFACT_SCHEMA_VERSION as f64),
+        ),
+        (
+            "scenario_schema_version",
+            Json::Num(scenario.schema_version as f64),
+        ),
+        ("scenario_name", Json::Str(scenario.name.clone())),
+        ("engine", Json::Str(report.kind_name().to_string())),
+        ("git_rev", Json::Str(git_rev())),
+        ("unix_time_s", Json::Num(unix_time_s as f64)),
+        (
+            "scenario_digest",
+            Json::Str(checksum(scenario_text.as_bytes())),
+        ),
+        (
+            "report_digest",
+            Json::Str(format!("0x{:016x}", report.digest())),
+        ),
+        (
+            "perf",
+            Json::obj(vec![
+                ("wall_s", Json::Num(report.wall_s())),
+                ("sim_end_s", Json::Num(report.sim_end_s())),
+                ("completed", Json::Num(report.completed() as f64)),
+                ("rounds", Json::Num(report.rounds() as f64)),
+                (
+                    "wall_qps",
+                    Json::Num(if report.wall_s() > 0.0 {
+                        report.completed() as f64 / report.wall_s()
+                    } else {
+                        0.0
+                    }),
+                ),
+            ]),
+        ),
+        ("files", Json::Obj(files.into_iter().map(|(k, v)| (k.to_string(), v)).collect())),
+    ]);
+    fs::write(dir.join("manifest.json"), manifest.to_string_pretty())
+        .context("write manifest.json")?;
+    Ok(manifest)
+}
+
+/// Verify an artifact directory: parse the manifest, re-checksum every
+/// payload file, and cross-check `scenario_digest` against the scenario
+/// payload. Returns `(scenario_digest, report_digest)` on success.
+pub fn verify_artifact(dir: &Path) -> Result<(String, String)> {
+    let manifest_text =
+        fs::read_to_string(dir.join("manifest.json")).context("read manifest.json")?;
+    let manifest = Json::parse(&manifest_text).context("manifest.json")?;
+
+    let version = manifest.get("artifact_schema_version").as_f64();
+    if version != Some(ARTIFACT_SCHEMA_VERSION as f64) {
+        bail!(
+            "unsupported artifact schema version {:?} (this build reads {})",
+            version,
+            ARTIFACT_SCHEMA_VERSION
+        );
+    }
+
+    let files = manifest
+        .get("files")
+        .as_obj()
+        .context("manifest files section missing")?;
+    if files.is_empty() {
+        bail!("manifest lists no payload files");
+    }
+    for (name, entry) in files {
+        let text =
+            fs::read_to_string(dir.join(name)).with_context(|| format!("read {name}"))?;
+        let want_bytes = entry.get("bytes").as_f64().unwrap_or(-1.0);
+        let want_sum = entry.get("fnv1a").as_str().unwrap_or("");
+        if text.len() as f64 != want_bytes {
+            bail!(
+                "{name}: size mismatch ({} bytes on disk, manifest says {})",
+                text.len(),
+                want_bytes
+            );
+        }
+        let got_sum = checksum(text.as_bytes());
+        if got_sum != want_sum {
+            bail!("{name}: checksum mismatch ({got_sum} on disk, manifest says {want_sum})");
+        }
+    }
+
+    let scenario_text =
+        fs::read_to_string(dir.join("scenario.json")).context("read scenario.json")?;
+    let scenario_digest = manifest
+        .get("scenario_digest")
+        .as_str()
+        .unwrap_or("")
+        .to_string();
+    let recomputed = checksum(scenario_text.as_bytes());
+    if recomputed != scenario_digest {
+        bail!(
+            "scenario digest mismatch ({recomputed} recomputed, manifest says {scenario_digest})"
+        );
+    }
+    let report_digest = manifest
+        .get("report_digest")
+        .as_str()
+        .unwrap_or("")
+        .to_string();
+    if report_digest.is_empty() {
+        bail!("manifest report_digest missing");
+    }
+    Ok((scenario_digest, report_digest))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checksum_is_stable() {
+        assert_eq!(checksum(b""), format!("0x{:016x}", Fnv1a::new().finish()));
+        assert_eq!(checksum(b"dmoe"), checksum(b"dmoe"));
+        assert_ne!(checksum(b"dmoe"), checksum(b"dmoE"));
+    }
+
+    #[test]
+    fn git_rev_env_override_wins() {
+        // Can't mutate the environment safely in parallel tests; just
+        // assert the fallback chain never yields an empty string.
+        assert!(!git_rev().is_empty());
+    }
+}

@@ -1,0 +1,39 @@
+//! Observability layer: O(1) streaming statistics, live run status, and
+//! schema-versioned run artifacts.
+//!
+//! The paper's evaluation lives in the *tails* of the latency and energy
+//! distributions, so the engines must be able to report p50/p95/p99 over
+//! runs far larger than memory allows for per-query vectors. This module
+//! provides the machinery, std-only on the `util` substrates:
+//!
+//! * [`sketch`] — the mergeable [`QuantileSketch`] (bounded relative
+//!   error, default 1%) and the [`LatencyStats`] accumulator the reports
+//!   embed; the O(1) replacement for stored latency vectors.
+//! * [`window`] — [`WindowedCounter`] sliding-window throughput rates
+//!   over simulation time (queries/s, tokens/s, sheds/s).
+//! * [`trace`] — [`SpanRing`] stage-level tracing (gate → solve →
+//!   assign → transmit) with bounded raw-span retention and unbounded
+//!   per-stage aggregates.
+//! * [`observer`] — [`TelemetryObserver`], the standard
+//!   [`EngineObserver`](crate::scenario::EngineObserver) consumer:
+//!   per-cell + fleet-wide live stats, commutative merge, and the
+//!   `--live` status line.
+//! * [`artifact`] — the schema-versioned, checksummed run-artifact
+//!   writer behind `dmoe run --artifact-dir` and the `dmoe artifact`
+//!   verifier.
+//!
+//! Everything here is additive to the engines' determinism contract:
+//! sketches merge exactly commutatively, and nothing in this module
+//! feeds wall-clock time into a report digest.
+
+pub mod artifact;
+pub mod observer;
+pub mod sketch;
+pub mod trace;
+pub mod window;
+
+pub use artifact::{git_rev, verify_artifact, write_run_artifact, ARTIFACT_SCHEMA_VERSION};
+pub use observer::{CellTelemetry, TelemetryObserver};
+pub use sketch::{LatencyStats, QuantileSketch};
+pub use trace::{Span, SpanRing, StageStats};
+pub use window::WindowedCounter;

@@ -1,0 +1,368 @@
+//! [`TelemetryObserver`]: the crate's standard [`EngineObserver`]
+//! consumer — live fleet-wide and per-cell statistics with O(1) memory
+//! per event stream.
+//!
+//! The observer aggregates every event kind the engines emit
+//! ([`RoundEvent`], [`CompletionEvent`], [`ShedEvent`],
+//! [`HandoverEvent`], final cache stats) into streaming counters,
+//! latency sketches and windowed throughput rates. Two observers merge
+//! commutatively ([`TelemetryObserver::merge`]): counters are integer
+//! adds, sketches merge bucket-wise, and per-cell maps join key-wise —
+//! so lane-parallel cells can aggregate in any shard order without
+//! perturbing results that feed determinism gates.
+//!
+//! With [`TelemetryObserver::enable_live`] the observer doubles as the
+//! `--live` CLI mode: a wall-clock-throttled one-line status print per
+//! interval. Live printing touches only stderr and wall time — never the
+//! report or its digest.
+
+use crate::scenario::{
+    CompletionEvent, EngineObserver, HandoverEvent, RoundEvent, ShedEvent,
+};
+use crate::serve::CacheStats;
+use crate::telemetry::sketch::LatencyStats;
+use crate::telemetry::window::WindowedCounter;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Per-cell slice of the aggregate (fleet runs; serve runs use cell 0).
+#[derive(Debug, Clone, Default)]
+pub struct CellTelemetry {
+    pub rounds: u64,
+    pub queries: u64,
+    pub tokens: u64,
+    pub cache_hits: u64,
+    pub sheds: u64,
+    pub completions: u64,
+    pub round_latency: LatencyStats,
+    pub query_latency: LatencyStats,
+}
+
+impl CellTelemetry {
+    fn merge(&mut self, other: &CellTelemetry) {
+        self.rounds += other.rounds;
+        self.queries += other.queries;
+        self.tokens += other.tokens;
+        self.cache_hits += other.cache_hits;
+        self.sheds += other.sheds;
+        self.completions += other.completions;
+        self.round_latency.merge(&other.round_latency);
+        self.query_latency.merge(&other.query_latency);
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("rounds", Json::Num(self.rounds as f64)),
+            ("queries", Json::Num(self.queries as f64)),
+            ("tokens", Json::Num(self.tokens as f64)),
+            ("cache_hits", Json::Num(self.cache_hits as f64)),
+            ("sheds", Json::Num(self.sheds as f64)),
+            ("completions", Json::Num(self.completions as f64)),
+            ("round_latency", self.round_latency.to_json()),
+            ("query_latency", self.query_latency.to_json()),
+        ])
+    }
+}
+
+/// Streaming telemetry aggregate over an engine run (see module docs).
+#[derive(Debug, Clone, Default)]
+pub struct TelemetryObserver {
+    // Fleet-wide counters.
+    pub rounds: u64,
+    pub queries: u64,
+    pub tokens: u64,
+    pub layer_cache_hits: u64,
+    pub sheds: u64,
+    pub handovers: u64,
+    pub completions: u64,
+    /// Layers per query round — lets the live line turn layer cache hits
+    /// into a hit fraction (hits / (rounds · layers)).
+    layers: u64,
+    // Streaming distributions.
+    pub round_latency: LatencyStats,
+    pub query_latency: LatencyStats,
+    // Sim-time throughput windows.
+    pub query_rate: WindowedCounter,
+    pub token_rate: WindowedCounter,
+    pub shed_rate: WindowedCounter,
+    // Final cache stats (arrives once, at end of run).
+    pub cache: Option<CacheStats>,
+    per_cell: BTreeMap<u32, CellTelemetry>,
+    /// Newest simulation time seen on any round event — the sim-time
+    /// anchor for events that carry no timestamp of their own (sheds).
+    last_seen_s: f64,
+    // `--live` machinery (wall clock only; never feeds reports).
+    live_every: Option<Duration>,
+    live_started: Option<Instant>,
+    live_last: Option<Instant>,
+}
+
+impl TelemetryObserver {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Tell the observer how many expert layers one query round solves,
+    /// so cache hits can be reported as a fraction.
+    pub fn set_layers(&mut self, layers: usize) {
+        self.layers = layers as u64;
+    }
+
+    /// Turn on `--live` mode: at most one status line per `every` of
+    /// wall time, printed to stderr.
+    pub fn enable_live(&mut self, every: Duration) {
+        self.live_every = Some(every);
+        self.live_started = Some(Instant::now());
+        self.live_last = None;
+    }
+
+    pub fn per_cell(&self) -> &BTreeMap<u32, CellTelemetry> {
+        &self.per_cell
+    }
+
+    /// Fraction of layer solves served from the solution cache, from
+    /// streamed round events.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let solves = self.rounds * self.layers.max(1);
+        if solves == 0 {
+            0.0
+        } else {
+            self.layer_cache_hits as f64 / solves as f64
+        }
+    }
+
+    /// Fraction of generated queries shed (of those seen so far).
+    pub fn shed_fraction(&self) -> f64 {
+        let seen = self.queries + self.sheds;
+        if seen == 0 {
+            0.0
+        } else {
+            self.sheds as f64 / seen as f64
+        }
+    }
+
+    /// Commutative merge of two observers (see module docs). Live-mode
+    /// settings stay local; the cache report keeps whichever side has
+    /// one (they are identical when both do — one shared cache).
+    pub fn merge(&mut self, other: &TelemetryObserver) {
+        self.rounds += other.rounds;
+        self.queries += other.queries;
+        self.tokens += other.tokens;
+        self.layer_cache_hits += other.layer_cache_hits;
+        self.sheds += other.sheds;
+        self.handovers += other.handovers;
+        self.completions += other.completions;
+        self.layers = self.layers.max(other.layers);
+        self.last_seen_s = self.last_seen_s.max(other.last_seen_s);
+        self.round_latency.merge(&other.round_latency);
+        self.query_latency.merge(&other.query_latency);
+        self.query_rate.merge(&other.query_rate);
+        self.token_rate.merge(&other.token_rate);
+        self.shed_rate.merge(&other.shed_rate);
+        if self.cache.is_none() {
+            self.cache = other.cache.clone();
+        }
+        for (&cell, slice) in &other.per_cell {
+            self.per_cell.entry(cell).or_default().merge(slice);
+        }
+    }
+
+    fn maybe_print_live(&mut self) {
+        let Some(every) = self.live_every else {
+            return;
+        };
+        let now = Instant::now();
+        if let Some(last) = self.live_last {
+            if now.duration_since(last) < every {
+                return;
+            }
+        }
+        self.live_last = Some(now);
+        let elapsed = self
+            .live_started
+            .map(|t| now.duration_since(t).as_secs_f64())
+            .unwrap_or(0.0);
+        let rounds_per_s = if elapsed > 0.0 {
+            self.rounds as f64 / elapsed
+        } else {
+            0.0
+        };
+        // Query latency once completions stream; round latency until then.
+        let lat = if self.query_latency.count() > 0 {
+            &self.query_latency
+        } else {
+            &self.round_latency
+        };
+        eprintln!(
+            "[live] wall {elapsed:6.1}s | rounds {} ({rounds_per_s:.0}/s) | q {} \
+             | p50 {:.4}s p95 {:.4}s p99 {:.4}s | shed {:.2}% | hit {:.1}%",
+            self.rounds,
+            self.queries,
+            lat.p50_s(),
+            lat.p95_s(),
+            lat.p99_s(),
+            100.0 * self.shed_fraction(),
+            100.0 * self.cache_hit_rate(),
+        );
+    }
+
+    /// Full telemetry snapshot — the `telemetry.json` artifact payload.
+    pub fn snapshot_json(&self) -> Json {
+        let cells = Json::Obj(
+            self.per_cell
+                .iter()
+                .map(|(cell, slice)| (cell.to_string(), slice.to_json()))
+                .collect(),
+        );
+        let cache = match &self.cache {
+            Some(c) => Json::obj(vec![
+                ("hits", Json::Num(c.hits as f64)),
+                ("misses", Json::Num(c.misses as f64)),
+                ("evictions", Json::Num(c.evictions as f64)),
+                ("hit_rate", Json::Num(c.hit_rate())),
+            ]),
+            None => Json::Null,
+        };
+        Json::obj(vec![
+            ("rounds", Json::Num(self.rounds as f64)),
+            ("queries", Json::Num(self.queries as f64)),
+            ("tokens", Json::Num(self.tokens as f64)),
+            ("layer_cache_hits", Json::Num(self.layer_cache_hits as f64)),
+            ("cache_hit_rate", Json::Num(self.cache_hit_rate())),
+            ("sheds", Json::Num(self.sheds as f64)),
+            ("shed_fraction", Json::Num(self.shed_fraction())),
+            ("handovers", Json::Num(self.handovers as f64)),
+            ("completions", Json::Num(self.completions as f64)),
+            ("round_latency", self.round_latency.to_json()),
+            ("query_latency", self.query_latency.to_json()),
+            ("query_rate", self.query_rate.to_json()),
+            ("token_rate", self.token_rate.to_json()),
+            ("shed_rate", self.shed_rate.to_json()),
+            ("solution_cache", cache),
+            ("cells", cells),
+        ])
+    }
+}
+
+impl EngineObserver for TelemetryObserver {
+    fn on_round(&mut self, event: &RoundEvent) {
+        self.rounds += 1;
+        self.queries += event.queries as u64;
+        self.tokens += event.tokens as u64;
+        self.layer_cache_hits += event.cache_hits as u64;
+        self.round_latency.record(event.latency_s);
+        self.query_rate.record(event.start_s, event.queries as f64);
+        self.token_rate.record(event.start_s, event.tokens as f64);
+        self.last_seen_s = self.last_seen_s.max(event.start_s);
+        let slice = self.per_cell.entry(event.cell).or_default();
+        slice.rounds += 1;
+        slice.queries += event.queries as u64;
+        slice.tokens += event.tokens as u64;
+        slice.cache_hits += event.cache_hits as u64;
+        slice.round_latency.record(event.latency_s);
+        self.maybe_print_live();
+    }
+
+    fn on_completion(&mut self, event: &CompletionEvent) {
+        self.completions += 1;
+        self.query_latency.record(event.latency_s());
+        let slice = self.per_cell.entry(event.cell).or_default();
+        slice.completions += 1;
+        slice.query_latency.record(event.latency_s());
+    }
+
+    fn on_shed(&mut self, event: &ShedEvent) {
+        self.sheds += 1;
+        self.per_cell.entry(event.cell).or_default().sheds += 1;
+        // Shed events carry no timestamp of their own; anchor on the
+        // newest round start seen (sheds surface between rounds).
+        self.shed_rate.record(self.last_seen_s, 1.0);
+    }
+
+    fn on_handover(&mut self, _event: &HandoverEvent) {
+        self.handovers += 1;
+    }
+
+    fn on_cache(&mut self, stats: &CacheStats) {
+        self.cache = Some(stats.clone());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round(cell: u32, start_s: f64, latency_s: f64) -> RoundEvent {
+        RoundEvent {
+            cell,
+            start_s,
+            latency_s,
+            queries: 4,
+            tokens: 64,
+            cache_hits: 2,
+        }
+    }
+
+    #[test]
+    fn rounds_accumulate_globally_and_per_cell() {
+        let mut t = TelemetryObserver::new();
+        t.set_layers(4);
+        t.on_round(&round(0, 0.0, 0.1));
+        t.on_round(&round(1, 0.5, 0.2));
+        assert_eq!(t.rounds, 2);
+        assert_eq!(t.queries, 8);
+        assert_eq!(t.per_cell()[&1].rounds, 1);
+        assert!((t.cache_hit_rate() - 4.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_commutes_on_digest_relevant_fields() {
+        let mut a = TelemetryObserver::new();
+        let mut b = TelemetryObserver::new();
+        a.on_round(&round(0, 0.0, 0.1));
+        a.on_completion(&CompletionEvent {
+            cell: 0,
+            query_id: 1,
+            arrival_s: 0.0,
+            start_s: 0.0,
+            done_s: 0.3,
+        });
+        b.on_round(&round(1, 1.0, 0.4));
+        b.on_completion(&CompletionEvent {
+            cell: 1,
+            query_id: 2,
+            arrival_s: 1.0,
+            start_s: 1.0,
+            done_s: 1.2,
+        });
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab.rounds, ba.rounds);
+        assert_eq!(ab.completions, ba.completions);
+        for q in [50.0, 95.0, 99.0] {
+            assert_eq!(
+                ab.query_latency.quantile(q).to_bits(),
+                ba.query_latency.quantile(q).to_bits()
+            );
+            assert_eq!(
+                ab.round_latency.quantile(q).to_bits(),
+                ba.round_latency.quantile(q).to_bits()
+            );
+        }
+        assert_eq!(ab.per_cell().len(), 2);
+        assert_eq!(ba.per_cell().len(), 2);
+    }
+
+    #[test]
+    fn snapshot_serializes() {
+        let mut t = TelemetryObserver::new();
+        t.set_layers(2);
+        t.on_round(&round(0, 0.0, 0.1));
+        let j = t.snapshot_json();
+        assert_eq!(j.get("rounds").as_f64(), Some(1.0));
+        assert_eq!(j.get("cells").get("0").get("rounds").as_f64(), Some(1.0));
+    }
+}

@@ -1,0 +1,400 @@
+//! Mergeable streaming quantile sketch with a documented relative error
+//! bound — the O(1)-memory replacement for the stored per-query latency
+//! vectors in `ServeReport`/`FleetReport`.
+//!
+//! # Design
+//!
+//! A log-bucketed histogram in the DDSketch family: values map to
+//! geometric buckets `(γ^(k-1), γ^k]` with `γ = (1+α)/(1−α)`, and a
+//! quantile query returns the bucket midpoint `2γ^k/(γ+1)` of the bucket
+//! containing the target rank. Each insert is O(1); memory is bounded by
+//! the *dynamic range* of the data, not the sample count (latencies
+//! spanning 1 ns..10⁴ s at the default α occupy ≈ 1500 buckets — a run of
+//! 10⁷ queries costs the same as a run of 10³).
+//!
+//! # Error bound
+//!
+//! For any quantile `q`, [`QuantileSketch::quantile`] returns a value
+//! within **relative error α** (default 1%) of the exact sample at the
+//! same nearest rank `round(q/100·(n−1))`, for samples above
+//! [`MIN_TRACKED_S`] (smaller values collapse to an exact zero bucket).
+//! `ci.sh` gates this bound against the exact debug-path percentiles on
+//! every run.
+//!
+//! # Merge semantics
+//!
+//! Bucket counts are integers, so [`QuantileSketch::merge`] is exactly
+//! commutative and associative: merging per-cell sketches in *any* shard
+//! order yields bit-identical counts, min/max and quantiles. The only
+//! order-sensitive piece of [`LatencyStats`] is the f64 `sum` behind
+//! `mean_s` (float addition is commutative but not associative), which is
+//! why engine digests hash quantiles and never the mean.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Default relative accuracy of the sketch (1%).
+pub const DEFAULT_ALPHA: f64 = 0.01;
+
+/// Values at or below this threshold (seconds) collapse into the exact
+/// zero bucket; the geometric grid only covers values above it.
+pub const MIN_TRACKED_S: f64 = 1e-12;
+
+/// Streaming log-bucketed quantile sketch (see the module docs).
+#[derive(Debug, Clone)]
+pub struct QuantileSketch {
+    alpha: f64,
+    gamma: f64,
+    inv_log_gamma: f64,
+    /// Geometric buckets: key `k` holds the count of samples in
+    /// `(γ^(k-1), γ^k]`. Sparse — only touched buckets exist.
+    buckets: BTreeMap<i32, u64>,
+    /// Samples `≤ MIN_TRACKED_S` (exactly representable: reported as 0).
+    zero: u64,
+    count: u64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for QuantileSketch {
+    fn default() -> Self {
+        Self::new(DEFAULT_ALPHA)
+    }
+}
+
+impl QuantileSketch {
+    /// A sketch with relative accuracy `alpha` (0 < alpha < 1).
+    pub fn new(alpha: f64) -> Self {
+        assert!(
+            alpha > 0.0 && alpha < 1.0,
+            "sketch alpha must be in (0, 1), got {alpha}"
+        );
+        let gamma = (1.0 + alpha) / (1.0 - alpha);
+        Self {
+            alpha,
+            gamma,
+            inv_log_gamma: 1.0 / gamma.ln(),
+            buckets: BTreeMap::new(),
+            zero: 0,
+            count: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Touched bucket count — the sketch's memory footprint.
+    pub fn buckets(&self) -> usize {
+        self.buckets.len() + usize::from(self.zero > 0)
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    fn key_of(&self, x: f64) -> i32 {
+        // k = ceil(log_γ x); x lands in (γ^(k-1), γ^k].
+        (x.ln() * self.inv_log_gamma).ceil() as i32
+    }
+
+    fn value_of(&self, key: i32) -> f64 {
+        // Bucket midpoint 2γ^k/(γ+1): within α relative of any sample in
+        // (γ^(k-1), γ^k].
+        2.0 * self.gamma.powi(key) / (self.gamma + 1.0)
+    }
+
+    /// Insert one sample. Non-finite samples are counted into the
+    /// extremes (min/max) but excluded from the grid; negative samples
+    /// collapse into the zero bucket (latencies are non-negative by
+    /// construction — this keeps the sketch total-count exact anyway).
+    pub fn insert(&mut self, x: f64) {
+        self.count += 1;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        if !(x > MIN_TRACKED_S) || !x.is_finite() {
+            self.zero += 1;
+            return;
+        }
+        *self.buckets.entry(self.key_of(x)).or_insert(0) += 1;
+    }
+
+    /// Merge another sketch in (exactly commutative and associative —
+    /// integer bucket adds). Panics on α mismatch: sketches on different
+    /// grids are not comparable.
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        assert!(
+            self.alpha.to_bits() == other.alpha.to_bits(),
+            "cannot merge sketches with different alpha ({} vs {})",
+            self.alpha,
+            other.alpha
+        );
+        for (&k, &c) in &other.buckets {
+            *self.buckets.entry(k).or_insert(0) += c;
+        }
+        self.zero += other.zero;
+        self.count += other.count;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Quantile estimate, `q` in [0, 100]. Targets the nearest rank
+    /// `round(q/100·(n−1))` (same convention as
+    /// [`crate::util::stats::nearest_rank`], so the CI accuracy gate
+    /// compares like with like) and returns the midpoint of the bucket
+    /// holding that rank — within relative α of the exact sample there.
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&q), "quantile q out of range: {q}");
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = (q / 100.0 * (self.count - 1) as f64).round() as u64;
+        if rank < self.zero {
+            return 0.0;
+        }
+        let mut cum = self.zero;
+        for (&k, &c) in &self.buckets {
+            cum += c;
+            if rank < cum {
+                return self.value_of(k);
+            }
+        }
+        // Ranks beyond the grid only exist for non-finite extremes.
+        self.max
+    }
+
+    /// Summary JSON (counts + canonical quantiles — not the raw buckets).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("alpha", Json::Num(self.alpha)),
+            ("buckets", Json::Num(self.buckets() as f64)),
+            ("min_s", Json::Num(self.min())),
+            ("max_s", Json::Num(self.max())),
+            ("p50_s", Json::Num(self.quantile(50.0))),
+            ("p90_s", Json::Num(self.quantile(90.0))),
+            ("p95_s", Json::Num(self.quantile(95.0))),
+            ("p99_s", Json::Num(self.quantile(99.0))),
+        ])
+    }
+}
+
+/// The one-stop streaming latency accumulator the reports and the
+/// telemetry observer carry: a [`QuantileSketch`] plus an exact running
+/// sum for the mean. O(1) per sample, mergeable (see the module docs for
+/// the mean's associativity caveat).
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    sketch: QuantileSketch,
+    sum: f64,
+}
+
+impl LatencyStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        self.sketch.insert(seconds);
+        self.sum += seconds;
+    }
+
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.sketch.merge(&other.sketch);
+        self.sum += other.sum;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.sketch.count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sketch.is_empty()
+    }
+
+    pub fn sum_s(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        if self.sketch.count() == 0 {
+            0.0
+        } else {
+            self.sum / self.sketch.count() as f64
+        }
+    }
+
+    pub fn min_s(&self) -> f64 {
+        self.sketch.min()
+    }
+
+    pub fn max_s(&self) -> f64 {
+        self.sketch.max()
+    }
+
+    pub fn quantile(&self, q: f64) -> f64 {
+        self.sketch.quantile(q)
+    }
+
+    pub fn p50_s(&self) -> f64 {
+        self.sketch.quantile(50.0)
+    }
+
+    pub fn p95_s(&self) -> f64 {
+        self.sketch.quantile(95.0)
+    }
+
+    pub fn p99_s(&self) -> f64 {
+        self.sketch.quantile(99.0)
+    }
+
+    pub fn sketch(&self) -> &QuantileSketch {
+        &self.sketch
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = self.sketch.to_json();
+        if let Json::Obj(map) = &mut j {
+            map.insert("mean_s".to_string(), Json::Num(self.mean_s()));
+            map.insert("sum_s".to_string(), Json::Num(self.sum));
+        }
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+    use crate::util::stats;
+
+    fn assert_within_alpha(sketch: &QuantileSketch, sorted: &[f64], q: f64) {
+        let got = sketch.quantile(q);
+        let exact = stats::nearest_rank(sorted, q);
+        if exact <= MIN_TRACKED_S {
+            assert!(got <= MIN_TRACKED_S, "q{q}: zero-bucket sample got {got}");
+            return;
+        }
+        let rel = (got - exact).abs() / exact;
+        assert!(
+            rel <= sketch.alpha() + 1e-12,
+            "q{q}: sketch {got} vs exact {exact} (rel err {rel:.4} > α {})",
+            sketch.alpha()
+        );
+    }
+
+    #[test]
+    fn bound_holds_on_random_input() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0xA11CE);
+        let mut sketch = QuantileSketch::default();
+        let mut xs = Vec::new();
+        for _ in 0..20_000 {
+            // Heavy-ish tail: exp of a uniform spans several decades.
+            let x = (6.0 * rng.next_f64() - 3.0).exp() * 1e-3;
+            sketch.insert(x);
+            xs.push(x);
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.0, 1.0, 10.0, 50.0, 90.0, 95.0, 99.0, 99.9, 100.0] {
+            assert_within_alpha(&sketch, &xs, q);
+        }
+        assert_eq!(sketch.count(), 20_000);
+        assert!(sketch.buckets() < 2_000, "footprint {}", sketch.buckets());
+    }
+
+    #[test]
+    fn bound_holds_on_adversarial_inputs() {
+        let cases: Vec<Vec<f64>> = vec![
+            vec![0.042; 1000],                       // constant
+            vec![1e-9, 1e4].repeat(500),             // two-point, huge range
+            (1..=1000).map(|i| i as f64 * 1e-6).collect(), // dense ramp
+            vec![0.0, 0.0, 0.0, 1.0, 2.0],           // zeros + values
+            vec![5e-13, 0.1],                        // below MIN_TRACKED_S
+        ];
+        for xs in cases {
+            let mut sketch = QuantileSketch::default();
+            for &x in &xs {
+                sketch.insert(x);
+            }
+            let mut sorted = xs.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for q in [0.0, 25.0, 50.0, 75.0, 95.0, 99.0, 100.0] {
+                assert_within_alpha(&sketch, &sorted, q);
+            }
+        }
+    }
+
+    #[test]
+    fn merge_is_shard_order_invariant() {
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let shards: Vec<QuantileSketch> = (0..4)
+            .map(|_| {
+                let mut s = QuantileSketch::default();
+                for _ in 0..500 {
+                    s.insert(rng.next_f64() * 10.0 + 1e-4);
+                }
+                s
+            })
+            .collect();
+        let merge_in = |order: &[usize]| {
+            let mut acc = QuantileSketch::default();
+            for &i in order {
+                acc.merge(&shards[i]);
+            }
+            acc
+        };
+        let a = merge_in(&[0, 1, 2, 3]);
+        let b = merge_in(&[3, 1, 0, 2]);
+        assert_eq!(a.count(), b.count());
+        assert_eq!(a.min().to_bits(), b.min().to_bits());
+        assert_eq!(a.max().to_bits(), b.max().to_bits());
+        for q in [1.0, 50.0, 95.0, 99.0] {
+            assert_eq!(a.quantile(q).to_bits(), b.quantile(q).to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_sketch_is_safe() {
+        let s = QuantileSketch::default();
+        assert_eq!(s.quantile(50.0), 0.0);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
+        assert_eq!(s.buckets(), 0);
+    }
+
+    #[test]
+    fn latency_stats_mean_and_quantiles() {
+        let mut ls = LatencyStats::new();
+        for x in [0.1, 0.2, 0.3, 0.4] {
+            ls.record(x);
+        }
+        assert!((ls.mean_s() - 0.25).abs() < 1e-12);
+        assert_eq!(ls.count(), 4);
+        let p50 = ls.p50_s();
+        assert!((p50 - 0.2).abs() / 0.2 <= DEFAULT_ALPHA + 1e-12, "{p50}");
+        let j = ls.to_json();
+        assert_eq!(j.get("count").as_f64(), Some(4.0));
+    }
+}

@@ -1,0 +1,181 @@
+//! Stage-level tracing spans in a fixed-capacity ring buffer.
+//!
+//! The engines time the four pipeline stages of every round — `gate`
+//! (gate assembly + quantization + cache lookup), `solve` (BCD Block 1
+//! expert selection), `assign` (Block 2 subcarrier assignment) and
+//! `transmit` (uplink/downlink DES simulation) — and push one span per
+//! stage per round. [`SpanRing`] keeps per-stage aggregates (count /
+//! total / max) over *all* spans ever recorded, plus the raw tail of the
+//! most recent `capacity` spans for inspection, so memory stays bounded
+//! on arbitrarily long runs.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Default raw-span retention.
+pub const DEFAULT_CAPACITY: usize = 256;
+
+/// One recorded span: monotone sequence number, stage label, duration.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub seq: u64,
+    pub stage: &'static str,
+    pub dur_s: f64,
+}
+
+/// Per-stage aggregate over every span recorded (not just the retained
+/// tail).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageStats {
+    pub count: u64,
+    pub total_s: f64,
+    pub max_s: f64,
+}
+
+/// Fixed-capacity span ring with unbounded per-stage aggregates.
+#[derive(Debug, Clone)]
+pub struct SpanRing {
+    capacity: usize,
+    next_seq: u64,
+    /// Most recent `capacity` spans, oldest first.
+    tail: Vec<Span>,
+    stages: BTreeMap<&'static str, StageStats>,
+}
+
+impl Default for SpanRing {
+    fn default() -> Self {
+        Self::new(DEFAULT_CAPACITY)
+    }
+}
+
+impl SpanRing {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "span ring needs capacity ≥ 1");
+        Self {
+            capacity,
+            next_seq: 0,
+            tail: Vec::new(),
+            stages: BTreeMap::new(),
+        }
+    }
+
+    pub fn record(&mut self, stage: &'static str, dur_s: f64) {
+        let entry = self.stages.entry(stage).or_default();
+        entry.count += 1;
+        entry.total_s += dur_s;
+        entry.max_s = entry.max_s.max(dur_s);
+        self.tail.push(Span {
+            seq: self.next_seq,
+            stage,
+            dur_s,
+        });
+        self.next_seq += 1;
+        if self.tail.len() > self.capacity {
+            let excess = self.tail.len() - self.capacity;
+            self.tail.drain(..excess);
+        }
+    }
+
+    /// Total spans ever recorded (≥ the retained tail length).
+    pub fn recorded(&self) -> u64 {
+        self.next_seq
+    }
+
+    pub fn tail(&self) -> &[Span] {
+        &self.tail
+    }
+
+    pub fn stage(&self, stage: &str) -> Option<StageStats> {
+        self.stages.get(stage).copied()
+    }
+
+    pub fn stages(&self) -> impl Iterator<Item = (&'static str, &StageStats)> {
+        self.stages.iter().map(|(&k, v)| (k, v))
+    }
+
+    /// Merge another ring: aggregates add; tails interleave by sequence
+    /// number and the newest `capacity` spans win. Sequence numbers are
+    /// per-ring, so cross-ring ordering is approximate — aggregates,
+    /// which the digests and reports consume, are exact.
+    pub fn merge(&mut self, other: &SpanRing) {
+        for (&stage, s) in &other.stages {
+            let entry = self.stages.entry(stage).or_default();
+            entry.count += s.count;
+            entry.total_s += s.total_s;
+            entry.max_s = entry.max_s.max(s.max_s);
+        }
+        self.tail.extend(other.tail.iter().cloned());
+        self.tail.sort_by_key(|s| s.seq);
+        if self.tail.len() > self.capacity {
+            let excess = self.tail.len() - self.capacity;
+            self.tail.drain(..excess);
+        }
+        self.next_seq = self.next_seq.max(other.next_seq);
+    }
+
+    /// Per-stage aggregates as JSON: `{stage: {count, total_s, mean_s,
+    /// max_s}}`.
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        for (&stage, s) in &self.stages {
+            let mean = if s.count == 0 {
+                0.0
+            } else {
+                s.total_s / s.count as f64
+            };
+            obj.insert(
+                stage.to_string(),
+                Json::obj(vec![
+                    ("count", Json::Num(s.count as f64)),
+                    ("total_s", Json::Num(s.total_s)),
+                    ("mean_s", Json::Num(mean)),
+                    ("max_s", Json::Num(s.max_s)),
+                ]),
+            );
+        }
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates_survive_ring_eviction() {
+        let mut ring = SpanRing::new(4);
+        for i in 0..10 {
+            ring.record("solve", i as f64);
+        }
+        assert_eq!(ring.tail().len(), 4);
+        assert_eq!(ring.recorded(), 10);
+        let s = ring.stage("solve").unwrap();
+        assert_eq!(s.count, 10);
+        assert!((s.total_s - 45.0).abs() < 1e-12);
+        assert!((s.max_s - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_adds_aggregates() {
+        let mut a = SpanRing::new(8);
+        a.record("gate", 1.0);
+        a.record("solve", 2.0);
+        let mut b = SpanRing::new(8);
+        b.record("solve", 3.0);
+        a.merge(&b);
+        let s = a.stage("solve").unwrap();
+        assert_eq!(s.count, 2);
+        assert!((s.total_s - 5.0).abs() < 1e-12);
+        assert!((s.max_s - 3.0).abs() < 1e-12);
+        assert_eq!(a.stage("gate").unwrap().count, 1);
+    }
+
+    #[test]
+    fn json_export_has_stage_keys() {
+        let mut ring = SpanRing::default();
+        ring.record("transmit", 0.5);
+        let j = ring.to_json();
+        assert_eq!(j.get("transmit").get("count").as_f64(), Some(1.0));
+        assert_eq!(j.get("transmit").get("max_s").as_f64(), Some(0.5));
+    }
+}

@@ -31,6 +31,16 @@ impl Fnv1a {
         }
     }
 
+    /// Mix a raw byte slice (classic FNV-1a step per byte). Used for
+    /// artifact file checksums, where the input is serialized JSON text
+    /// rather than `u64` words.
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        for &byte in bytes {
+            self.0 ^= u64::from(byte);
+            self.0 = self.0.wrapping_mul(0x1000_0000_01b3);
+        }
+    }
+
     pub fn finish(&self) -> u64 {
         self.0
     }

@@ -36,6 +36,45 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Several percentiles off a *single* sorted copy — use instead of
+/// repeated [`percentile`] calls when more than one quantile is needed
+/// (each `percentile` call re-sorts the whole slice).
+pub fn percentiles(xs: &[f64], qs: &[f64]) -> Vec<f64> {
+    if xs.is_empty() {
+        return vec![0.0; qs.len()];
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    qs.iter()
+        .map(|&q| {
+            assert!((0.0..=100.0).contains(&q), "percentile q out of range: {q}");
+            let rank = q / 100.0 * (sorted.len() - 1) as f64;
+            let lo = rank.floor() as usize;
+            let hi = rank.ceil() as usize;
+            if lo == hi {
+                sorted[lo]
+            } else {
+                let frac = rank - lo as f64;
+                sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+            }
+        })
+        .collect()
+}
+
+/// Nearest-rank quantile on an *already sorted* slice: the sample at
+/// index `round(q/100·(n−1))`. This is the convention the telemetry
+/// quantile sketch targets, so exact-vs-sketch comparisons (the CI
+/// accuracy gate) are apples-to-apples — linear interpolation between
+/// samples would break the sketch's relative-error bound at sparse tails.
+pub fn nearest_rank(sorted: &[f64], q: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&q), "quantile q out of range: {q}");
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (q / 100.0 * (sorted.len() - 1) as f64).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
 /// Min of a slice (NaN-free assumption).
 pub fn min(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::INFINITY, f64::min)
@@ -122,5 +161,26 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(stddev(&[]), 0.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentiles(&[], &[50.0, 99.0]), vec![0.0, 0.0]);
+        assert_eq!(nearest_rank(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn percentiles_batch_matches_scalar() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        let batch = percentiles(&xs, &[0.0, 50.0, 100.0]);
+        for (got, q) in batch.iter().zip([0.0, 50.0, 100.0]) {
+            assert!((got - percentile(&xs, q)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn nearest_rank_picks_samples() {
+        let sorted = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(nearest_rank(&sorted, 0.0), 1.0);
+        assert_eq!(nearest_rank(&sorted, 50.0), 3.0);
+        assert_eq!(nearest_rank(&sorted, 100.0), 5.0);
+        // rank = round(0.75·4) = 3 → the 4th sample, never interpolated.
+        assert_eq!(nearest_rank(&sorted, 75.0), 4.0);
     }
 }

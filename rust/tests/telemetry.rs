@@ -1,0 +1,229 @@
+//! End-to-end coverage of the telemetry layer: sketch-vs-exact accuracy
+//! on real engine runs, observer-vs-report agreement on the preset
+//! library, the O(1) default path (no per-query records, same digest),
+//! shard-order-invariant merges, and fleet digest stability with a
+//! `TelemetryObserver` attached in both execution modes.
+
+use dmoe::fleet::{MobilityConfig, RoutePolicy};
+use dmoe::scenario::{
+    self, FleetSpec, PrepareOptions, RateSpec, RunReport, Scenario, TrafficSpec,
+};
+use dmoe::telemetry::{LatencyStats, TelemetryObserver};
+use dmoe::util::stats;
+use dmoe::SystemConfig;
+
+const EXACT: PrepareOptions = PrepareOptions {
+    record_completions: true,
+};
+
+fn small_preset(name: &str, queries: usize) -> Scenario {
+    let mut s = Scenario::preset(name).unwrap();
+    s.traffic.queries = queries;
+    s
+}
+
+/// A small fleet scenario with a parametric lane count, for the
+/// parallel-vs-sequential digest checks below.
+fn two_cell_fleet(queries: usize, lane_workers: usize) -> Scenario {
+    let mut cfg = SystemConfig::tiny();
+    cfg.workload.seed = 4242;
+    Scenario::builder("telemetry-fleet")
+        .system(cfg)
+        .traffic(TrafficSpec {
+            queries,
+            domains: 4,
+            tokens_per_query: 2,
+            rate: RateSpec::Qps(15.0),
+            ..TrafficSpec::default()
+        })
+        .workers(1)
+        .fleet(FleetSpec {
+            cells: 2,
+            route: RoutePolicy::RoundRobin,
+            mobility: MobilityConfig {
+                users: 24,
+                ..MobilityConfig::default()
+            },
+            lane_workers: Some(lane_workers),
+            ..FleetSpec::default()
+        })
+        .build()
+        .unwrap()
+}
+
+// -- sketch accuracy against exact per-query records ------------------------
+
+#[test]
+fn sketch_quantiles_track_exact_latencies_on_a_real_run() {
+    let s = small_preset("paper-baseline", 400);
+    let report = scenario::prepare_opts(&s, &EXACT).unwrap().run();
+    let exact = report.exact_latencies_sorted();
+    assert!(!exact.is_empty(), "exact mode must keep completion records");
+    let stats_ = report.latency();
+    assert_eq!(stats_.count(), exact.len() as u64);
+    let alpha = stats_.sketch().alpha();
+    for q in [0.0, 10.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+        let want = stats::nearest_rank(&exact, q);
+        let got = stats_.quantile(q);
+        assert!(
+            (got - want).abs() <= alpha * want.abs() + 1e-12,
+            "p{q}: sketch {got} vs exact {want} beyond alpha {alpha}"
+        );
+    }
+    // The exact sum also survives streaming: mean agrees to fp error.
+    let mean = exact.iter().sum::<f64>() / exact.len() as f64;
+    assert!((stats_.mean_s() - mean).abs() < 1e-9);
+}
+
+// -- observer aggregates equal the report's ---------------------------------
+
+#[test]
+fn observer_stats_equal_report_stats_on_presets() {
+    for name in ["paper-baseline", "urban-macro-jsq"] {
+        let s = small_preset(name, 300);
+        let prepared = scenario::prepare_opts(&s, &EXACT).unwrap();
+        let mut tel = TelemetryObserver::new();
+        tel.set_layers(s.system.moe.layers);
+        let report = prepared.run_observed(&mut tel);
+
+        assert_eq!(tel.rounds, report.rounds() as u64, "{name}: rounds");
+        assert_eq!(
+            tel.completions,
+            report.completed() as u64,
+            "{name}: completions"
+        );
+        assert_eq!(tel.sheds, report.shed() as u64, "{name}: sheds");
+        assert_eq!(
+            tel.query_latency.count(),
+            report.latency().count(),
+            "{name}: latency sample count"
+        );
+        // The observer's sketch is built from the same samples as the
+        // report's (integer bucket counts), so quantiles are bit-equal.
+        for q in [50.0, 95.0, 99.0] {
+            assert_eq!(
+                tel.query_latency.quantile(q).to_bits(),
+                report.latency().quantile(q).to_bits(),
+                "{name}: p{q} observer vs report"
+            );
+        }
+        if let RunReport::Fleet(r) = &report {
+            assert_eq!(tel.handovers, r.handovers as u64, "{name}: handovers");
+            assert!(
+                !tel.per_cell().is_empty() && tel.per_cell().len() <= r.cells.len(),
+                "{name}: per-cell slices"
+            );
+            let cell_completions: u64 =
+                tel.per_cell().values().map(|c| c.completions).sum();
+            assert_eq!(cell_completions, tel.completions, "{name}: cell partition");
+        }
+        let cache = tel.cache.expect("final cache stats must arrive");
+        assert_eq!(cache.hits, report.cache().hits, "{name}: cache hits");
+    }
+}
+
+// -- the O(1) default path --------------------------------------------------
+
+#[test]
+fn default_path_streams_with_no_per_query_records_and_same_digest() {
+    let s = small_preset("paper-baseline", 300);
+    let streaming = scenario::prepare(&s).unwrap().run();
+    let exact = scenario::prepare_opts(&s, &EXACT).unwrap().run();
+
+    match &streaming {
+        RunReport::Serve(r) => {
+            assert!(
+                r.completions.is_empty(),
+                "default path must not store per-query records"
+            );
+            assert!(r.completed > 0);
+            assert_eq!(r.latency.count(), r.completed as u64);
+        }
+        RunReport::Fleet(_) => panic!("paper-baseline is serve-shaped"),
+    }
+    assert!(streaming.exact_latencies_sorted().is_empty());
+    assert!(!exact.exact_latencies_sorted().is_empty());
+    // Recording per-query records is observability only: digests and
+    // streamed latency stats are identical either way.
+    assert_eq!(streaming.digest(), exact.digest());
+    for q in [50.0, 95.0, 99.0] {
+        assert_eq!(
+            streaming.latency().quantile(q).to_bits(),
+            exact.latency().quantile(q).to_bits()
+        );
+    }
+}
+
+#[test]
+fn fleet_default_path_streams_with_no_per_query_records() {
+    let s = two_cell_fleet(300, 0);
+    let streaming = scenario::prepare(&s).unwrap().run();
+    let exact = scenario::prepare_opts(&s, &EXACT).unwrap().run();
+    match &streaming {
+        RunReport::Fleet(r) => {
+            assert!(r.completions.is_empty());
+            assert!(r.completed > 0);
+            assert_eq!(r.latency.count(), r.completed as u64);
+        }
+        RunReport::Serve(_) => panic!("fleet-shaped scenario ran the serve engine"),
+    }
+    assert_eq!(streaming.digest(), exact.digest());
+}
+
+// -- merge properties -------------------------------------------------------
+
+#[test]
+fn latency_stats_merge_is_shard_order_invariant() {
+    // Three shards with disjoint, differently-shaped samples.
+    let mut shards = vec![
+        LatencyStats::default(),
+        LatencyStats::default(),
+        LatencyStats::default(),
+    ];
+    for i in 0..3000u32 {
+        let x = match i % 3 {
+            0 => 1e-4 * (1.0 + i as f64),
+            1 => 0.5 + (i as f64) * 1e-6,
+            _ => 10.0 / (1.0 + i as f64),
+        };
+        shards[(i % 3) as usize].record(x);
+    }
+    let mut fwd = LatencyStats::default();
+    for s in &shards {
+        fwd.merge(s);
+    }
+    let mut rev = LatencyStats::default();
+    for s in shards.iter().rev() {
+        rev.merge(s);
+    }
+    assert_eq!(fwd.count(), rev.count());
+    for q in [0.0, 25.0, 50.0, 75.0, 95.0, 99.0, 100.0] {
+        assert_eq!(fwd.quantile(q).to_bits(), rev.quantile(q).to_bits());
+    }
+}
+
+// -- fleet digest stability with telemetry attached -------------------------
+
+#[test]
+fn fleet_parallel_vs_sequential_digest_survives_telemetry_observer() {
+    let seq = two_cell_fleet(400, 0);
+    let par = two_cell_fleet(400, 4);
+
+    let plain = scenario::run(&seq).unwrap().digest();
+    let mut digests = Vec::new();
+    for s in [&seq, &par] {
+        let mut tel = TelemetryObserver::new();
+        tel.set_layers(s.system.moe.layers);
+        let report = scenario::prepare(s).unwrap().run_observed(&mut tel);
+        assert!(tel.rounds > 0, "observer must see the replayed rounds");
+        digests.push(report.digest());
+    }
+    assert_eq!(
+        digests[0], digests[1],
+        "sequential vs lane-parallel digest must match with telemetry attached"
+    );
+    assert_eq!(
+        digests[0], plain,
+        "telemetry observation must be passive wrt the digest"
+    );
+}
