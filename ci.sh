@@ -121,3 +121,96 @@ if [[ -z "$(manifest_digests "$tmp_art1")" ]] \
   exit 1
 fi
 echo "telemetry gate passed ($(manifest_digests "$tmp_art1" | tr '\n' ' '))"
+
+# Sweep gate, three parts (see MONITORING.md "Sweeps & regression
+# diffing"):
+#  1. a tiny 4-point sweep run twice must produce bit-identical
+#     per-point scenario + report digests, and `dmoe artifact` must
+#     deep-verify the sweep root (every point artifact + the sweep
+#     manifest's digest cross-checks);
+#  2. `dmoe sweep --check baselines/sweep-tier1` must PASS against the
+#     committed baseline spec (the first run after a fresh checkout
+#     bootstraps the gitignored baseline artifacts in place);
+#  3. a deliberately perturbed spec (different seed axis) checked
+#     against the same baseline must exit 2 with per-point CHANGED
+#     verdicts naming the differing scenario digests.
+tmp_spec=$(mktemp /tmp/dmoe-sweep-spec-XXXXXX.json)
+tmp_spec_perturbed=$(mktemp /tmp/dmoe-sweep-perturbed-XXXXXX.json)
+tmp_sw1=$(mktemp -d /tmp/dmoe-sweep-XXXXXX)
+tmp_sw2=$(mktemp -d /tmp/dmoe-sweep-XXXXXX)
+trap 'rm -f "$tmp_scenario" "$tmp_spec" "$tmp_spec_perturbed"; \
+  rm -rf "$tmp_art1" "$tmp_art2" "$tmp_sw1" "$tmp_sw2"' EXIT
+cat >"$tmp_spec" <<'EOF'
+{
+  "name": "ci-sweep",
+  "base": "paper-baseline",
+  "queries": 200,
+  "workers": 1,
+  "axes": {"selector": ["des", "topk:2"], "seed": [11, 12]}
+}
+EOF
+cargo run --release --quiet -- sweep --spec "$tmp_spec" --out "$tmp_sw1" >/dev/null
+cargo run --release --quiet -- sweep --spec "$tmp_spec" --out "$tmp_sw2" >/dev/null
+sweep_digests() {
+  sed -n 's/.*"\(scenario_digest\|report_digest\)": "\(0x[0-9a-f]*\)".*/\1=\2/p' \
+    "$1/manifest.json"
+}
+if [[ -z "$(sweep_digests "$tmp_sw1")" ]] \
+  || [[ "$(sweep_digests "$tmp_sw1")" != "$(sweep_digests "$tmp_sw2")" ]]; then
+  echo "FAIL: identical sweeps are not bit-identical per point:" >&2
+  diff <(sweep_digests "$tmp_sw1") <(sweep_digests "$tmp_sw2") >&2 || true
+  exit 1
+fi
+cargo run --release --quiet -- artifact "$tmp_sw1" >/dev/null
+echo "sweep determinism gate passed ($(sweep_digests "$tmp_sw1" | wc -l) digests over 4 points)"
+
+# Committed baseline: bootstrap if needed, then require PASS.
+cargo run --release --quiet -- sweep --check baselines/sweep-tier1 >/dev/null
+check_out=$(cargo run --release --quiet -- sweep --check baselines/sweep-tier1)
+if ! grep -q "sweep check PASS" <<<"$check_out"; then
+  echo "FAIL: committed sweep baseline did not reproduce:" >&2
+  echo "$check_out" >&2
+  exit 1
+fi
+echo "sweep baseline gate passed (baselines/sweep-tier1)"
+
+# Perturbed seed axis -> every point CHANGED, exit code 2.
+cat >"$tmp_spec_perturbed" <<'EOF'
+{
+  "axes": {
+    "cells": [1, 4],
+    "seed": [8, 1338],
+    "selector": ["des", "topk:2"]
+  },
+  "base": "paper-baseline",
+  "lane_workers": 0,
+  "name": "sweep-tier1",
+  "queries": 300,
+  "sweep_schema_version": 1,
+  "workers": 1
+}
+EOF
+set +e
+perturbed_out=$(cargo run --release --quiet -- sweep \
+  --check baselines/sweep-tier1 --spec "$tmp_spec_perturbed" 2>&1)
+perturbed_rc=$?
+set -e
+if [[ $perturbed_rc -ne 2 ]] || ! grep -q "CHANGED" <<<"$perturbed_out"; then
+  echo "FAIL: perturbed sweep spec must exit 2 with CHANGED verdicts (rc=$perturbed_rc):" >&2
+  echo "$perturbed_out" >&2
+  exit 1
+fi
+echo "sweep perturbation gate passed (CHANGED correctly detected, rc=2)"
+
+# Bench baseline bootstrap: BENCH_{des,fleet,serve}.json are committed
+# perf baselines (scenario + git rev stamped by the benches themselves).
+# Regenerate any that are missing, in quick mode, so a fresh checkout
+# converges to a complete committed baseline set. Refresh deliberately
+# with scripts/refresh_benches.sh (full mode).
+for b in des fleet serve; do
+  if [[ ! -f "BENCH_${b}.json" ]]; then
+    echo "bootstrapping BENCH_${b}.json (DMOE_BENCH_FAST=1) — commit the result"
+    DMOE_BENCH_FAST=1 cargo bench --bench "$b" >/dev/null
+  fi
+done
+echo "bench baselines present ($(ls BENCH_*.json 2>/dev/null | tr '\n' ' '))"

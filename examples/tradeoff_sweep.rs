@@ -1,50 +1,80 @@
-//! Accuracy–energy tradeoff sweep (Fig. 10) through the public API.
+//! Importance-factor tradeoff sweep (the paper's Fig. 10 flavor) on
+//! the declarative sweep driver: one `SweepSpec` over the γ₀ axis ×
+//! {des, topk:2}, executed by `sweep::run_sweep` with one run artifact
+//! per point, then pivoted into the comparison table.
 //!
 //! ```bash
-//! cargo run --release --example tradeoff_sweep [-- --batches N --eval IDX]
+//! cargo run --release --example tradeoff_sweep
+//! cargo run --release --example tradeoff_sweep -- --queries 600 --out DIR
 //! ```
 //!
-//! Prints the (energy, accuracy) frontier for JESA vs homogeneous vs
-//! Top-k, plus a dominance check: every homogeneous point should be
-//! (weakly) dominated by some JESA point — the paper's Fig. 10 claim.
+//! The paper's central claim is a *tradeoff*: lowering the importance
+//! factor γ₀ relaxes the per-layer QoS constraint, letting DES pick
+//! cheaper expert sets. The sweep makes that observable as an
+//! energy-per-query trend along the γ₀ axis, printed as a frontier at
+//! the end.
 
-use dmoe::bench_harness::fig10::{self, Fig10Options};
-use dmoe::coordinator::DmoeServer;
+use dmoe::sweep::{self, SweepSpec};
 use dmoe::util::cli::Args;
-use dmoe::SystemConfig;
+use dmoe::util::error::Result;
+use std::path::Path;
 
-fn main() -> dmoe::util::error::Result<()> {
+fn main() -> Result<()> {
     let args = Args::from_env();
-    let mut cfg = SystemConfig::default();
-    cfg.artifacts_dir = args.get_or("artifacts", &cfg.artifacts_dir);
+    args.expect(&["queries", "out", "workers"])?;
+    let queries = args.get_usize("queries", 300);
+    let workers = args.get_usize("workers", dmoe::util::pool::default_workers());
 
-    let mut server = DmoeServer::new(&cfg)?;
-    let opts = Fig10Options {
-        max_batches: args.get("batches").map(|s| s.parse().unwrap()),
-        eval_index: args.get_usize("eval", 0),
-        ..Default::default()
-    };
-    let (report, points) = fig10::run(&mut server, &opts)?;
-    println!("{}", report.render());
+    let spec = SweepSpec::from_json_str(&format!(
+        r#"{{
+  "sweep_schema_version": 1,
+  "name": "tradeoff",
+  "base": "paper-baseline",
+  "queries": {queries},
+  "axes": {{
+    "gamma0": [0.5, 0.7, 0.9, 1.0],
+    "selector": ["des", "topk:2"]
+  }}
+}}"#
+    ))?;
 
-    // Dominance check.
-    let jesa: Vec<_> = points
+    let default_out = std::env::temp_dir()
+        .join(format!("dmoe-tradeoff-{}", std::process::id()))
+        .display()
+        .to_string();
+    let out = args.get_or("out", &default_out);
+    let root = Path::new(&out);
+    let manifest = sweep::run_sweep(&spec, root, workers)?;
+    sweep::write_comparison(root, &manifest)?;
+    print!("{}", sweep::render_table(&manifest));
+
+    // The frontier: energy/query along the γ₀ axis, DES points only.
+    let empty = Vec::new();
+    let points = manifest.get("points").as_arr().unwrap_or(&empty);
+    let mut frontier: Vec<(f64, f64)> = points
         .iter()
-        .filter(|p| p.label.starts_with("JESA"))
+        .filter_map(|p| {
+            let labels = p.get("labels").as_arr()?;
+            let axis = |key: &str| {
+                labels
+                    .iter()
+                    .find(|l| l.at(0).as_str() == Some(key))
+                    .and_then(|l| l.at(1).as_str().map(str::to_string))
+            };
+            if axis("selector")? != "des" {
+                return None;
+            }
+            let gamma0: f64 = axis("gamma0")?.parse().ok()?;
+            let energy = p.get("metrics").get("energy_per_query_j").as_f64()?;
+            Some((gamma0, energy))
+        })
         .collect();
-    let homo: Vec<_> = points.iter().filter(|p| p.label.starts_with("H(")).collect();
-    let mut dominated = 0;
-    for h in &homo {
-        if jesa
-            .iter()
-            .any(|j| j.energy_j <= h.energy_j * 1.05 && j.accuracy >= h.accuracy - 0.01)
-        {
-            dominated += 1;
-        }
+    frontier.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+    println!("\nDES energy/query along the importance-factor axis:");
+    for (gamma0, energy) in &frontier {
+        println!("  gamma0 {gamma0:>4}: {energy:.4} J/query");
     }
-    println!(
-        "dominance: {dominated}/{} homogeneous points are matched-or-beaten by a JESA point",
-        homo.len()
-    );
+    println!("\nartifacts + comparison.json under {}", root.display());
     Ok(())
 }

@@ -417,6 +417,7 @@ impl Cell {
         self.metrics.inc("rounds", 1);
         self.metrics.inc("layer_solves", self.layers as u64);
         self.metrics.inc("cache_hits", hits as u64);
+        self.metrics.inc("des_nodes", rs.nodes_expanded);
         let round_tokens: usize = batch.iter().map(|a| a.query.tokens).sum();
         self.tokens += (round_tokens * self.layers) as u64;
         self.cache_hits += hits;

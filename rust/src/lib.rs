@@ -79,6 +79,11 @@
 //!   live-stats consumer (`--live`), stage-level tracing spans, and the
 //!   schema-versioned checksummed run-artifact writer
 //!   (`dmoe run --artifact-dir`, verified by `dmoe artifact`).
+//! * [`sweep`] — scenario grids over the artifact layer: declarative
+//!   [`SweepSpec`](sweep::SweepSpec) (base scenario × axes), the
+//!   `dmoe sweep` grid driver (one run artifact per point + a sweep
+//!   manifest), cross-point comparison reports, and the
+//!   committed-baseline regression checker (`dmoe sweep --check`).
 //! * [`metrics`] — counters, streaming latency stats and report emission.
 //! * [`bench_harness`] — drivers that regenerate every table and figure
 //!   of the paper's evaluation section.
@@ -102,6 +107,7 @@ pub mod runtime;
 pub mod scenario;
 pub mod selection;
 pub mod serve;
+pub mod sweep;
 pub mod telemetry;
 pub mod util;
 pub mod workload;

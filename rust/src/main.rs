@@ -9,8 +9,11 @@
 //!              serve-shaped scenario from flags
 //!   fleet      multi-cell sharded serving — thin shim that builds a
 //!              fleet-shaped scenario from flags
-//!   artifact   verify a `--artifact-dir` run artifact (checksums +
-//!              manifest digests)
+//!   sweep      expand a SweepSpec grid, run every point in parallel,
+//!              emit per-point artifacts + a comparison table, or
+//!              regression-check against a committed baseline
+//!   artifact   verify a `--artifact-dir` run artifact or a whole
+//!              sweep root (checksums + manifest digests)
 //!   eval       serve every eval set with a policy, print metrics
 //!   info       artifact / model / config summary
 //!   table1     Table I  — DES accuracy + normalized energy
@@ -35,9 +38,11 @@ use dmoe::scenario::{
 };
 use dmoe::selection::SelectorSpec;
 use dmoe::serve::EvictionPolicy;
+use dmoe::sweep::{SweepSpec, Verdict};
 use dmoe::telemetry::TelemetryObserver;
 use dmoe::util::cli::Args;
-use dmoe::util::error::Result;
+use dmoe::util::error::{Context, Result};
+use dmoe::util::json::Json;
 use dmoe::workload::load_eval_sets;
 use dmoe::SystemConfig;
 use std::path::Path;
@@ -111,6 +116,11 @@ const RUN_FLAGS: &[&str] = &[
 /// and cross-check the streaming sketch against them).
 const TELEMETRY_FLAGS: &[&str] = &["live", "artifact-dir", "exact-latency"];
 
+/// `dmoe sweep`: `--spec FILE.json` (grid document), `--out DIR` (sweep
+/// root), `--check BASELINE_DIR` (regression mode), `--workers N`
+/// (point-level parallelism on the work-stealing executor).
+const SWEEP_FLAGS: &[&str] = &["spec", "out", "check", "workers"];
+
 fn expect_flags(args: &Args, groups: &[&[&str]]) -> Result<()> {
     let mut known: Vec<&str> = Vec::new();
     for g in groups {
@@ -170,6 +180,10 @@ fn dispatch(sub: &str, args: &Args) -> Result<()> {
                 &[BASE_FLAGS, POLICY_FLAGS, SERVE_FLAGS, FLEET_FLAGS, TELEMETRY_FLAGS],
             )?;
             execute(scenario_from_fleet_flags(args)?, args)
+        }
+        "sweep" => {
+            expect_flags(args, &[SWEEP_FLAGS])?;
+            sweep_cmd(args)
         }
         "artifact" => {
             expect_flags(args, &[&["dir"]])?;
@@ -466,7 +480,9 @@ fn verify_sketch_accuracy(report: &scenario::RunReport) -> Result<()> {
 }
 
 /// `dmoe artifact <dir>`: re-checksum a run artifact and cross-check
-/// its manifest (see [`dmoe::telemetry::verify_artifact`]).
+/// its manifest (see [`dmoe::telemetry::verify_artifact`]). A sweep
+/// root (manifest carrying `sweep_schema_version`) is deep-verified
+/// instead: every per-point artifact plus the sweep-level digests.
 fn verify_artifact_cmd(args: &Args) -> Result<()> {
     let dir = match args
         .get("dir")
@@ -476,9 +492,102 @@ fn verify_artifact_cmd(args: &Args) -> Result<()> {
         Some(d) => d,
         None => dmoe::bail!("dmoe artifact needs a directory (dmoe artifact <dir>)"),
     };
-    let (scenario_digest, report_digest) = dmoe::telemetry::verify_artifact(Path::new(&dir))?;
+    let path = Path::new(&dir);
+    let is_sweep_root = std::fs::read_to_string(path.join("manifest.json"))
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .map(|m| m.get("sweep_schema_version").as_f64().is_some())
+        .unwrap_or(false);
+    if is_sweep_root {
+        let (points, name) = dmoe::sweep::verify_sweep_root(path)?;
+        println!("sweep artifact ok: {name} — {points} points verified");
+        return Ok(());
+    }
+    let (scenario_digest, report_digest) = dmoe::telemetry::verify_artifact(path)?;
     println!("artifact ok: scenario digest {scenario_digest} report digest {report_digest}");
     Ok(())
+}
+
+/// `dmoe sweep`: run a [`SweepSpec`] grid (`--spec`), or regression-
+/// check one against a baseline sweep root (`--check`). Exit codes in
+/// check mode: 0 PASS, 1 REGRESSED, 2 CHANGED.
+fn sweep_cmd(args: &Args) -> Result<()> {
+    let workers = args.get_usize("workers", dmoe::util::pool::default_workers());
+    if let Some(baseline) = args.get("check") {
+        return sweep_check(args, Path::new(baseline), workers);
+    }
+    let spec_path = match args
+        .get("spec")
+        .map(str::to_string)
+        .or_else(|| args.positional.first().cloned())
+    {
+        Some(p) => p,
+        None => dmoe::bail!("dmoe sweep needs --spec FILE.json (or --check BASELINE_DIR)"),
+    };
+    let spec = SweepSpec::load(&spec_path)?;
+    let default_out = format!("sweep-{}", spec.name);
+    let out = args.get_or("out", &default_out);
+    let root = Path::new(&out);
+    let manifest = dmoe::sweep::run_sweep(&spec, root, workers)?;
+    dmoe::sweep::write_comparison(root, &manifest)?;
+    print!("{}", dmoe::sweep::render_table(&manifest));
+    let points = manifest.get("points").as_arr().map(|p| p.len()).unwrap_or(0);
+    println!("sweep {}: {points} points -> {}", spec.name, root.display());
+    Ok(())
+}
+
+/// Regression mode. A missing baseline manifest bootstraps the
+/// baseline in place (first run after a spec lands); afterwards the
+/// fresh sweep runs in a scratch directory and is diffed point-by-
+/// point (see `dmoe::sweep::check` for the verdict contract).
+fn sweep_check(args: &Args, baseline: &Path, workers: usize) -> Result<()> {
+    let spec_path = match args.get("spec") {
+        Some(p) => p.to_string(),
+        None => baseline.join("spec.json").to_string_lossy().into_owned(),
+    };
+    let spec = SweepSpec::load(&spec_path)?;
+    if !baseline.join("manifest.json").is_file() {
+        let manifest = dmoe::sweep::run_sweep(&spec, baseline, workers)?;
+        dmoe::sweep::write_comparison(baseline, &manifest)?;
+        print!("{}", dmoe::sweep::render_table(&manifest));
+        println!(
+            "sweep baseline created at {} ({} points); rerun --check to regression-diff",
+            baseline.display(),
+            manifest.get("points").as_arr().map(|p| p.len()).unwrap_or(0)
+        );
+        return Ok(());
+    }
+    let baseline_text = std::fs::read_to_string(baseline.join("manifest.json"))
+        .with_context(|| format!("read baseline manifest {}", baseline.display()))?;
+    let baseline_manifest = match Json::parse(&baseline_text) {
+        Ok(m) => m,
+        Err(e) => dmoe::bail!("baseline manifest.json: {e}"),
+    };
+    let scratch = std::env::temp_dir().join(format!("dmoe-sweep-check-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&scratch);
+    let fresh = dmoe::sweep::run_sweep(&spec, &scratch, workers);
+    let report = fresh.map(|manifest| dmoe::sweep::check_manifests(&baseline_manifest, &manifest));
+    let _ = std::fs::remove_dir_all(&scratch);
+    let report = report?;
+    print!("{}", report.render());
+    match report.worst() {
+        Verdict::Pass => {
+            println!(
+                "sweep check PASS ({} points vs {})",
+                report.points.len(),
+                baseline.display()
+            );
+            Ok(())
+        }
+        Verdict::Changed => {
+            eprintln!("sweep check CHANGED vs {}", baseline.display());
+            std::process::exit(2);
+        }
+        Verdict::Regressed => {
+            eprintln!("sweep check REGRESSED vs {}", baseline.display());
+            std::process::exit(1);
+        }
+    }
 }
 
 // -- flag → scenario shims --------------------------------------------------
@@ -700,8 +809,25 @@ USAGE: dmoe <subcommand> [--flags]
              --exact-latency             keep per-query records and
                                          cross-check the latency sketch
              (telemetry flags also work on serve/fleet)
+  sweep      run a scenario grid from a SweepSpec JSON document
+             --spec FILE.json            base scenario + axes (cells,
+                                         selector, process, rate,
+                                         gamma0, seed)
+             --out DIR                   sweep root (default sweep-NAME);
+                                         per-point artifacts under
+                                         DIR/points/pNNN plus a sweep
+                                         manifest + comparison.json
+             --check BASELINE_DIR        regression mode: rerun the
+                                         baseline's spec and diff —
+                                         PASS/CHANGED/REGRESSED per
+                                         point; exit 1 on REGRESSED,
+                                         2 on CHANGED; bootstraps the
+                                         baseline when DIR has no
+                                         manifest yet
+             --workers N                 point-level parallelism
   artifact   verify a run artifact: dmoe artifact DIR — re-checksums
-             every payload file and cross-checks the manifest digests
+             every payload file and cross-checks the manifest digests;
+             a sweep root is deep-verified point by point
   serve      continuous serving engine (thin shim over a serve-shaped
              scenario; Poisson/bursty/diurnal arrivals, admission
              control, JESA solution cache; no artifacts needed)

@@ -77,10 +77,31 @@ impl RunReport {
         }
     }
 
+    /// Shed queries as a fraction of everything generated.
+    pub fn shed_rate(&self) -> f64 {
+        let generated = self.generated();
+        if generated > 0 {
+            self.shed() as f64 / generated as f64
+        } else {
+            0.0
+        }
+    }
+
     pub fn rounds(&self) -> usize {
         match self {
             RunReport::Serve(r) => r.rounds,
             RunReport::Fleet(r) => r.rounds,
+        }
+    }
+
+    /// Cumulative DES branch-and-bound nodes expanded across every
+    /// solved round (the `des_nodes` counter; fleet runs sum their
+    /// cells). Informational: cache hits skip the solver, so lane
+    /// scheduling can move this count — never part of the digest.
+    pub fn solver_nodes(&self) -> u64 {
+        match self {
+            RunReport::Serve(r) => r.metrics.counter("des_nodes"),
+            RunReport::Fleet(r) => r.metrics.counter("des_nodes"),
         }
     }
 

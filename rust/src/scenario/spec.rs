@@ -195,14 +195,14 @@ impl RateSpec {
         }
     }
 
-    fn to_json(&self) -> Json {
+    pub(crate) fn to_json(&self) -> Json {
         match *self {
             RateSpec::Utilization(u) => Json::obj(vec![("utilization", Json::Num(u))]),
             RateSpec::Qps(q) => Json::obj(vec![("qps", Json::Num(q))]),
         }
     }
 
-    fn from_json(v: &Json, path: &str) -> Result<RateSpec> {
+    pub(crate) fn from_json(v: &Json, path: &str) -> Result<RateSpec> {
         check_keys(v, &["utilization", "qps"], path)?;
         let obj = v.as_obj().expect("checked above");
         match (obj.get("utilization"), obj.get("qps")) {
@@ -264,7 +264,7 @@ impl ProcessSpec {
         }
     }
 
-    fn to_json(&self) -> Json {
+    pub(crate) fn to_json(&self) -> Json {
         match self {
             ProcessSpec::Poisson => Json::obj(vec![("kind", Json::Str("poisson".into()))]),
             ProcessSpec::Bursty { dwell } => Json::obj(vec![
@@ -282,7 +282,7 @@ impl ProcessSpec {
         }
     }
 
-    fn from_json(v: &Json, path: &str) -> Result<ProcessSpec> {
+    pub(crate) fn from_json(v: &Json, path: &str) -> Result<ProcessSpec> {
         let kind = req_str(v, "kind", path)?;
         match kind {
             "poisson" => {

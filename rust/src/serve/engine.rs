@@ -504,6 +504,7 @@ impl ServeEngine {
             metrics.inc("rounds", 1);
             metrics.inc("layer_solves", layers as u64);
             metrics.inc("cache_hits", hits as u64);
+            metrics.inc("des_nodes", rs.nodes_expanded);
             fallbacks += rs.fallbacks;
             let round_tokens: usize = batch.iter().map(|a| a.query.tokens).sum();
             tokens_total += (round_tokens * layers) as u64;
@@ -644,6 +645,9 @@ pub(crate) struct RoundStats {
     pub assign_s: f64,
     /// Discrete-event uplink/compute/downlink simulation + accounting.
     pub transmit_s: f64,
+    /// DES branch-and-bound nodes expanded this round, misses only
+    /// (hits skip the solver). Informational — never digested.
+    pub nodes_expanded: u64,
 }
 
 /// Execute one round: refresh the channel, solve each layer through the
@@ -721,6 +725,7 @@ pub(crate) fn execute_round(
     let mut gate_s = 0.0;
     let mut solve_s = 0.0;
     let mut assign_s = 0.0;
+    let mut nodes_expanded = 0u64;
     let mut tls = ctx.record_timelines.then(Vec::new);
     let t_transmit = Instant::now();
     for (l, (sol, hit, layer_gate_s)) in results.iter().enumerate() {
@@ -740,6 +745,7 @@ pub(crate) fn execute_round(
         if !*hit {
             solve_s += sol.select_s;
             assign_s += sol.assign_s;
+            nodes_expanded += sol.des_stats.nodes_expanded;
         }
         if let Some(v) = tls.as_mut() {
             v.push(timeline);
@@ -754,6 +760,7 @@ pub(crate) fn execute_round(
         solve_s,
         assign_s,
         transmit_s: t_transmit.elapsed().as_secs_f64(),
+        nodes_expanded,
     }
 }
 

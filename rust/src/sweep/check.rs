@@ -1,0 +1,249 @@
+//! Regression checking: diff a fresh sweep manifest against a
+//! committed baseline, and deep-verify a sweep root on disk.
+//!
+//! The contract has two tiers:
+//!
+//! * **Bit-exact** — per-point `scenario_digest` and `report_digest`.
+//!   A scenario-digest difference means the grid itself changed
+//!   (different spec, preset drift): verdict **CHANGED**. The same
+//!   scenario producing a different report digest means engine
+//!   behavior drifted: verdict **REGRESSED**.
+//! * **Tolerance-banded** — informational perf fields that legal
+//!   implementation changes may move: cache hit rate within
+//!   [`HIT_RATE_TOL`] absolute, solver nodes expanded within
+//!   [`NODES_REL_TOL`] relative once past the [`NODES_ABS_FLOOR`]
+//!   absolute floor. Out-of-band drift is **REGRESSED**. Wall-clock
+//!   fields are never checked.
+
+use crate::sweep::spec::{SweepSpec, SWEEP_SCHEMA_VERSION};
+use crate::telemetry::artifact::{checksum, verify_artifact};
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+/// Maximum absolute cache-hit-rate drift before a point regresses.
+pub const HIT_RATE_TOL: f64 = 0.15;
+/// Maximum relative solver-nodes drift before a point regresses …
+pub const NODES_REL_TOL: f64 = 0.35;
+/// … provided the absolute difference also exceeds this floor (tiny
+/// sweeps expand few nodes; a handful of extra nodes is not a signal).
+pub const NODES_ABS_FLOOR: f64 = 128.0;
+
+/// Per-point verdict, ordered by severity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Verdict {
+    /// Digests bit-identical, informational fields in band.
+    Pass,
+    /// The scenario grid itself differs from the baseline.
+    Changed,
+    /// Same scenario, different behavior (or out-of-band perf drift).
+    Regressed,
+}
+
+impl Verdict {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Verdict::Pass => "PASS",
+            Verdict::Changed => "CHANGED",
+            Verdict::Regressed => "REGRESSED",
+        }
+    }
+}
+
+/// One checked point.
+#[derive(Debug, Clone)]
+pub struct PointCheck {
+    pub name: String,
+    pub verdict: Verdict,
+    pub detail: String,
+}
+
+/// The full per-point diff of a fresh sweep against a baseline.
+#[derive(Debug, Clone)]
+pub struct CheckReport {
+    pub points: Vec<PointCheck>,
+}
+
+impl CheckReport {
+    /// The most severe verdict across all points (PASS when empty).
+    pub fn worst(&self) -> Verdict {
+        self.points
+            .iter()
+            .map(|p| p.verdict)
+            .max()
+            .unwrap_or(Verdict::Pass)
+    }
+
+    /// One aligned line per point: `name  VERDICT  detail`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for p in &self.points {
+            out.push_str(&format!("{:<6} {:<10} {}\n", p.name, p.verdict.label(), p.detail));
+        }
+        out
+    }
+}
+
+/// Diff two sweep manifests point-by-point (matched by point name).
+/// Pure on the manifests — no filesystem access.
+pub fn check_manifests(baseline: &Json, fresh: &Json) -> CheckReport {
+    let empty: &[Json] = &[];
+    let bpoints = baseline.get("points").as_arr().unwrap_or(empty);
+    let fpoints = fresh.get("points").as_arr().unwrap_or(empty);
+    let bmap: BTreeMap<&str, &Json> = bpoints
+        .iter()
+        .filter_map(|p| p.get("name").as_str().map(|n| (n, p)))
+        .collect();
+    let mut points = Vec::new();
+    for fp in fpoints {
+        let name = fp.get("name").as_str().unwrap_or("?").to_string();
+        match bmap.get(name.as_str()) {
+            Some(bp) => points.push(check_point(&name, bp, fp)),
+            None => points.push(PointCheck {
+                name,
+                verdict: Verdict::Changed,
+                detail: "point absent from baseline (grid changed)".to_string(),
+            }),
+        }
+    }
+    for bp in bpoints {
+        let name = bp.get("name").as_str().unwrap_or("?");
+        if !fpoints
+            .iter()
+            .any(|fp| fp.get("name").as_str() == Some(name))
+        {
+            points.push(PointCheck {
+                name: name.to_string(),
+                verdict: Verdict::Changed,
+                detail: "point missing from fresh sweep (grid changed)".to_string(),
+            });
+        }
+    }
+    CheckReport { points }
+}
+
+fn check_point(name: &str, baseline: &Json, fresh: &Json) -> PointCheck {
+    let bs = baseline.get("scenario_digest").as_str().unwrap_or("");
+    let fs_ = fresh.get("scenario_digest").as_str().unwrap_or("");
+    if bs != fs_ {
+        return PointCheck {
+            name: name.to_string(),
+            verdict: Verdict::Changed,
+            detail: format!("scenario digest {fs_} differs from baseline {bs}"),
+        };
+    }
+    let br = baseline.get("report_digest").as_str().unwrap_or("");
+    let fr = fresh.get("report_digest").as_str().unwrap_or("");
+    if br != fr {
+        return PointCheck {
+            name: name.to_string(),
+            verdict: Verdict::Regressed,
+            detail: format!(
+                "report digest {fr} differs from baseline {br} (same scenario digest {bs})"
+            ),
+        };
+    }
+    let bh = baseline
+        .get("informational")
+        .get("cache_hit_rate")
+        .as_f64()
+        .unwrap_or(0.0);
+    let fh = fresh
+        .get("informational")
+        .get("cache_hit_rate")
+        .as_f64()
+        .unwrap_or(0.0);
+    if (bh - fh).abs() > HIT_RATE_TOL {
+        return PointCheck {
+            name: name.to_string(),
+            verdict: Verdict::Regressed,
+            detail: format!(
+                "cache hit rate {fh:.3} vs baseline {bh:.3} exceeds ±{HIT_RATE_TOL} band"
+            ),
+        };
+    }
+    let bn = baseline
+        .get("informational")
+        .get("solver_nodes")
+        .as_f64()
+        .unwrap_or(0.0);
+    let fnodes = fresh
+        .get("informational")
+        .get("solver_nodes")
+        .as_f64()
+        .unwrap_or(0.0);
+    let diff = (bn - fnodes).abs();
+    if diff > NODES_ABS_FLOOR && diff > NODES_REL_TOL * bn.max(1.0) {
+        return PointCheck {
+            name: name.to_string(),
+            verdict: Verdict::Regressed,
+            detail: format!(
+                "solver nodes {fnodes:.0} vs baseline {bn:.0} exceeds \
+                 {:.0}% band (floor {NODES_ABS_FLOOR:.0})",
+                100.0 * NODES_REL_TOL
+            ),
+        };
+    }
+    PointCheck {
+        name: name.to_string(),
+        verdict: Verdict::Pass,
+        detail: format!("digests {bs} / {br}"),
+    }
+}
+
+/// Deep-verify a sweep root on disk: schema version, the canonical
+/// spec checksum, and every per-point artifact (re-checksummed via
+/// [`verify_artifact`]) cross-checked against the sweep manifest's
+/// digests. Returns `(points_verified, sweep_name)`.
+pub fn verify_sweep_root(dir: &Path) -> Result<(usize, String)> {
+    let manifest_text =
+        fs::read_to_string(dir.join("manifest.json")).context("read manifest.json")?;
+    let manifest = Json::parse(&manifest_text).context("manifest.json")?;
+    let version = manifest.get("sweep_schema_version").as_f64();
+    crate::ensure!(
+        version == Some(SWEEP_SCHEMA_VERSION as f64),
+        "unsupported sweep schema version {version:?} (this build reads {SWEEP_SCHEMA_VERSION})"
+    );
+    let name = manifest
+        .get("name")
+        .as_str()
+        .unwrap_or("sweep")
+        .to_string();
+
+    let spec_text = fs::read_to_string(dir.join("spec.json")).context("read spec.json")?;
+    let spec = SweepSpec::from_json_str(&spec_text).context("spec.json")?;
+    let got = checksum(spec.to_json().to_string_pretty().as_bytes());
+    let want = manifest.get("spec_fnv1a").as_str().unwrap_or("");
+    crate::ensure!(
+        got == want,
+        "spec.json: canonical checksum mismatch ({got} recomputed, manifest says {want})"
+    );
+
+    let points = manifest
+        .get("points")
+        .as_arr()
+        .context("manifest points section missing")?;
+    crate::ensure!(!points.is_empty(), "sweep manifest lists no points");
+    for p in points {
+        let pname = p.get("name").as_str().unwrap_or("?");
+        let pdir = p
+            .get("dir")
+            .as_str()
+            .with_context(|| format!("point {pname}: manifest entry missing 'dir'"))?;
+        let (sd, rd) = verify_artifact(&dir.join(pdir))
+            .with_context(|| format!("sweep point {pname} ({pdir})"))?;
+        let want_sd = p.get("scenario_digest").as_str().unwrap_or("");
+        let want_rd = p.get("report_digest").as_str().unwrap_or("");
+        crate::ensure!(
+            sd == want_sd,
+            "{pdir}/manifest.json: scenario digest {sd} disagrees with sweep manifest {want_sd}"
+        );
+        crate::ensure!(
+            rd == want_rd,
+            "{pdir}/manifest.json: report digest {rd} disagrees with sweep manifest {want_rd}"
+        );
+    }
+    Ok((points.len(), name))
+}

@@ -1,0 +1,95 @@
+//! Cross-run comparison: pivot the sweep manifest's per-point metrics
+//! into `comparison.json` and an aligned-column stdout table.
+
+use crate::sweep::spec::SWEEP_SCHEMA_VERSION;
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+use crate::util::table::Table;
+use std::fs;
+use std::path::Path;
+
+/// The comparison document derived from a sweep manifest: the same
+/// per-point rows, re-keyed for consumers that only want the pivot
+/// (axes + metrics + informational fields), plus provenance.
+pub fn comparison_json(manifest: &Json) -> Json {
+    Json::obj(vec![
+        (
+            "sweep_schema_version",
+            Json::Num(SWEEP_SCHEMA_VERSION as f64),
+        ),
+        ("name", manifest.get("name").clone()),
+        ("git_rev", manifest.get("git_rev").clone()),
+        ("spec_fnv1a", manifest.get("spec_fnv1a").clone()),
+        ("points", manifest.get("points").clone()),
+    ])
+}
+
+/// Write `comparison.json` under the sweep root.
+pub fn write_comparison(root: &Path, manifest: &Json) -> Result<Json> {
+    let doc = comparison_json(manifest);
+    fs::write(root.join("comparison.json"), doc.to_string_pretty())
+        .context("write comparison.json")?;
+    Ok(doc)
+}
+
+/// Render the manifest as an aligned-column table: one row per point,
+/// one column per swept axis, then the pivot metrics. `hit%` and
+/// `nodes` are informational (excluded from the bit-identity
+/// contract; see `sweep::check` for their tolerance bands).
+pub fn render_table(manifest: &Json) -> String {
+    let empty: &[Json] = &[];
+    let points = manifest.get("points").as_arr().unwrap_or(empty);
+    let axes: Vec<String> = points
+        .first()
+        .map(|p| {
+            p.get("labels")
+                .as_arr()
+                .unwrap_or(empty)
+                .iter()
+                .map(|l| l.at(0).as_str().unwrap_or("?").to_string())
+                .collect()
+        })
+        .unwrap_or_default();
+
+    let mut header: Vec<&str> = vec!["point"];
+    header.extend(axes.iter().map(|s| s.as_str()));
+    header.extend_from_slice(&[
+        "p50_s", "p95_s", "p99_s", "shed%", "J/query", "hit%", "nodes",
+    ]);
+    let name = manifest.get("name").as_str().unwrap_or("sweep");
+    let mut table = Table::new(&header).with_title(&format!(
+        "sweep {name} ({} points, git {})",
+        points.len(),
+        manifest.get("git_rev").as_str().unwrap_or("unknown")
+    ));
+    for p in points {
+        let metrics = p.get("metrics");
+        let info = p.get("informational");
+        let labels = p.get("labels").as_arr().unwrap_or(empty);
+        let mut row = vec![p.get("name").as_str().unwrap_or("?").to_string()];
+        for i in 0..axes.len() {
+            row.push(
+                labels
+                    .get(i)
+                    .map(|l| l.at(1).as_str().unwrap_or("?"))
+                    .unwrap_or("?")
+                    .to_string(),
+            );
+        }
+        row.push(Table::num(metrics.get("p50_s").as_f64(), 4));
+        row.push(Table::num(metrics.get("p95_s").as_f64(), 4));
+        row.push(Table::num(metrics.get("p99_s").as_f64(), 4));
+        row.push(Table::num(
+            metrics.get("shed_rate").as_f64().map(|x| 100.0 * x),
+            2,
+        ));
+        row.push(Table::num(metrics.get("energy_per_query_j").as_f64(), 4));
+        row.push(Table::num(
+            info.get("cache_hit_rate").as_f64().map(|x| 100.0 * x),
+            1,
+        ));
+        row.push(Table::num(info.get("solver_nodes").as_f64(), 0));
+        table.row(row);
+    }
+    table.render()
+}

@@ -1,0 +1,40 @@
+//! Scenario sweeps: declarative grids of scenario variations, executed
+//! in parallel, indexed by a checksummed sweep manifest, compared
+//! across points, and regression-diffed against committed baselines.
+//!
+//! The layer has four pieces, one per submodule:
+//!
+//! * [`spec`] — the schema-versioned [`SweepSpec`] document: a base
+//!   [`Scenario`](crate::scenario::Scenario) (preset name or inline
+//!   object) plus axes over cells, selector, traffic process/rate,
+//!   the importance factor γ₀, and seed, expanded deterministically to
+//!   a named point grid.
+//! * [`runner`] — [`run_sweep`]: fans the grid out on the
+//!   work-stealing executor ([`util::executor`](crate::util::executor),
+//!   one lane per point), writes one PR-6 run artifact per point plus
+//!   a sweep-level `manifest.json` with per-point scenario/report
+//!   digests, FNV checksums, and the git rev.
+//! * [`compare`] — `comparison.json` + the aligned-column stdout
+//!   table pivoting p50/p95/p99 latency, shed rate, energy/query,
+//!   cache hit rate, and solver nodes across the axes.
+//! * [`check`] — `dmoe sweep --check`: per-point
+//!   PASS/CHANGED/REGRESSED verdicts (bit-exact on digests,
+//!   tolerance-banded on informational perf fields) and the deep
+//!   on-disk verifier behind `dmoe artifact <sweep-root>`.
+//!
+//! Everything is driven by `dmoe sweep` (see `main.rs`) and gated in
+//! `ci.sh` against the committed `baselines/sweep-tier1/` grid; the
+//! full format and tolerance bands are documented in MONITORING.md.
+
+pub mod check;
+pub mod compare;
+pub mod runner;
+pub mod spec;
+
+pub use check::{
+    check_manifests, verify_sweep_root, CheckReport, PointCheck, Verdict, HIT_RATE_TOL,
+    NODES_ABS_FLOOR, NODES_REL_TOL,
+};
+pub use compare::{comparison_json, render_table, write_comparison};
+pub use runner::run_sweep;
+pub use spec::{Axes, BaseRef, SweepPoint, SweepSpec, SWEEP_SCHEMA_VERSION};

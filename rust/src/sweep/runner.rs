@@ -1,0 +1,173 @@
+//! Sweep execution: fan a point grid out on the work-stealing
+//! executor, write one PR-6 run artifact per point, and index the
+//! whole sweep in a sweep-level `manifest.json`.
+//!
+//! Layout under the sweep root:
+//!
+//! ```text
+//! ROOT/
+//!   spec.json        # canonical SweepSpec (written only if missing)
+//!   manifest.json    # the sweep index (see below)
+//!   comparison.json  # written by the CLI via sweep::compare
+//!   points/p000/     # a full run artifact (manifest/scenario/report/
+//!   points/p001/     #   telemetry JSON) per grid point
+//!   ...
+//! ```
+//!
+//! Determinism contract: per-point `scenario_digest` / `report_digest`
+//! and the deterministic `metrics` block are bit-identical across runs
+//! of the same spec; `unix_time_s`, `git_rev`, and every field under
+//! a point's `informational` object (wall clock, cache hit split under
+//! lane parallelism, solver node counts) are exempt.
+
+use crate::scenario::{self, PrepareOptions, RunReport};
+use crate::sweep::spec::{SweepPoint, SweepSpec, SWEEP_SCHEMA_VERSION};
+use crate::telemetry::artifact::{git_rev, write_run_artifact};
+use crate::telemetry::TelemetryObserver;
+use crate::util::error::{Context, Result};
+use crate::util::executor::{Executor, Task};
+use crate::util::json::Json;
+use std::fs;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Expand `spec`, run every point (`workers`-wide across points), and
+/// write artifacts plus the sweep manifest under `root`. Returns the
+/// manifest that was written.
+pub fn run_sweep(spec: &SweepSpec, root: &Path, workers: usize) -> Result<Json> {
+    let points = spec.expand()?;
+    fs::create_dir_all(root.join("points"))
+        .with_context(|| format!("sweep root {}", root.display()))?;
+    let spec_path = root.join("spec.json");
+    if !spec_path.exists() {
+        // Never rewrite an existing spec (e.g. a hand-committed
+        // baseline spec): the manifest's `spec_fnv1a` hashes the
+        // canonical serialization, not the on-disk bytes.
+        fs::write(&spec_path, spec.to_json().to_string_pretty()).context("write spec.json")?;
+    }
+
+    let slots: Vec<Mutex<Option<Result<Json>>>> =
+        points.iter().map(|_| Mutex::new(None)).collect();
+    let executor = Executor::new(workers.max(1));
+    executor.scope(|scope| {
+        let tasks: Vec<Task<'_>> = points
+            .iter()
+            .zip(slots.iter())
+            .map(|(point, slot)| {
+                Box::new(move || {
+                    let entry = run_point(point, root);
+                    *slot.lock().unwrap() = Some(entry);
+                }) as Task<'_>
+            })
+            .collect();
+        scope.run_batch(tasks);
+    });
+
+    let mut entries = Vec::with_capacity(points.len());
+    for (point, slot) in points.iter().zip(slots.iter()) {
+        let entry = slot
+            .lock()
+            .unwrap()
+            .take()
+            .expect("executor runs every sweep point task");
+        entries.push(entry.with_context(|| format!("sweep point {}", point.name))?);
+    }
+
+    let unix_time_s = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let manifest = Json::obj(vec![
+        (
+            "sweep_schema_version",
+            Json::Num(SWEEP_SCHEMA_VERSION as f64),
+        ),
+        ("name", Json::Str(spec.name.clone())),
+        ("git_rev", Json::Str(git_rev())),
+        ("unix_time_s", Json::Num(unix_time_s as f64)),
+        ("spec_fnv1a", Json::Str(spec.digest())),
+        ("points", Json::Arr(entries)),
+    ]);
+    fs::write(root.join("manifest.json"), manifest.to_string_pretty())
+        .context("write sweep manifest.json")?;
+    Ok(manifest)
+}
+
+/// Run one grid point and write its run artifact under
+/// `ROOT/points/{name}/`. Returns the point's manifest entry.
+fn run_point(point: &SweepPoint, root: &Path) -> Result<Json> {
+    let dir = root.join("points").join(&point.name);
+    let prepared = scenario::prepare_opts(&point.scenario, &PrepareOptions::default())?;
+    let mut telemetry = TelemetryObserver::new();
+    telemetry.set_layers(point.scenario.system.moe.layers);
+    let report = prepared.run_observed(&mut telemetry);
+    let manifest = write_run_artifact(&dir, &prepared.scenario, &report, &telemetry)?;
+    let scenario_digest = manifest
+        .get("scenario_digest")
+        .as_str()
+        .unwrap_or("")
+        .to_string();
+    let report_digest = manifest
+        .get("report_digest")
+        .as_str()
+        .unwrap_or("")
+        .to_string();
+    Ok(point_entry(point, &report, scenario_digest, report_digest))
+}
+
+fn point_entry(
+    point: &SweepPoint,
+    report: &RunReport,
+    scenario_digest: String,
+    report_digest: String,
+) -> Json {
+    let labels = Json::Arr(
+        point
+            .labels
+            .iter()
+            .map(|(k, v)| Json::Arr(vec![Json::Str(k.clone()), Json::Str(v.clone())]))
+            .collect(),
+    );
+    let completed = report.completed();
+    let generated = report.generated();
+    let shed_rate = if generated > 0 {
+        report.shed() as f64 / generated as f64
+    } else {
+        0.0
+    };
+    let energy_per_query_j = if completed > 0 {
+        report.energy().total_j() / completed as f64
+    } else {
+        0.0
+    };
+    Json::obj(vec![
+        ("index", Json::Num(point.index as f64)),
+        ("name", Json::Str(point.name.clone())),
+        ("dir", Json::Str(format!("points/{}", point.name))),
+        ("labels", labels),
+        ("scenario_digest", Json::Str(scenario_digest)),
+        ("report_digest", Json::Str(report_digest)),
+        (
+            "metrics",
+            Json::obj(vec![
+                ("p50_s", Json::Num(report.latency().p50_s())),
+                ("p95_s", Json::Num(report.latency().p95_s())),
+                ("p99_s", Json::Num(report.latency().p99_s())),
+                ("shed_rate", Json::Num(shed_rate)),
+                ("energy_per_query_j", Json::Num(energy_per_query_j)),
+                ("generated", Json::Num(generated as f64)),
+                ("completed", Json::Num(completed as f64)),
+                ("rounds", Json::Num(report.rounds() as f64)),
+            ]),
+        ),
+        (
+            "informational",
+            Json::obj(vec![
+                ("wall_s", Json::Num(report.wall_s())),
+                ("cache_hit_rate", Json::Num(report.cache().hit_rate())),
+                ("solver_nodes", Json::Num(report.solver_nodes() as f64)),
+            ]),
+        ),
+    ])
+}

@@ -1,0 +1,522 @@
+//! Declarative sweep specification: a base [`Scenario`] plus axes.
+//!
+//! A [`SweepSpec`] is the grid analogue of a `Scenario`: one
+//! schema-versioned JSON document naming a base scenario (a preset name
+//! or an inline scenario object) and up to six axes — `cells`,
+//! `selector`, traffic `process` / `rate`, the importance factor
+//! `gamma0`, and `seed`. [`SweepSpec::expand`] takes the cartesian
+//! product in a fixed nesting order (cells outermost, seed innermost)
+//! and yields one fully-validated [`SweepPoint`] scenario per grid
+//! cell, named `p000`, `p001`, … in expansion order. Expansion is pure:
+//! the same spec always produces the same points in the same order,
+//! which is what lets a sweep manifest be regression-diffed
+//! bit-for-bit (see [`crate::sweep::check`]).
+
+use crate::scenario::{PolicyKind, ProcessSpec, RateSpec, Scenario};
+use crate::selection::SelectorSpec;
+use crate::util::error::{Context, Error, Result};
+use crate::util::json::Json;
+
+/// Sweep document schema version written to / accepted from JSON.
+pub const SWEEP_SCHEMA_VERSION: u32 = 1;
+
+/// The base scenario a sweep varies: a named preset or an inline spec.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BaseRef {
+    /// A name resolved through [`Scenario::preset`].
+    Preset(String),
+    /// A full inline scenario object.
+    Inline(Box<Scenario>),
+}
+
+/// The grid axes. An empty axis means "inherit the base value" and
+/// contributes a single slot to the product (it never multiplies the
+/// grid and never emits a label).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Axes {
+    /// Fleet sizes; `1` collapses the point to the single-cell serve
+    /// engine (`fleet: null`), larger values shape a fleet.
+    pub cells: Vec<usize>,
+    /// Selector registry names (`des`, `topk:K`, …).
+    pub selector: Vec<SelectorSpec>,
+    /// Traffic arrival processes.
+    pub process: Vec<ProcessSpec>,
+    /// Offered-rate specs (`{"utilization": u}` / `{"qps": q}`).
+    pub rate: Vec<RateSpec>,
+    /// Importance factor γ₀ values; requires a `jesa` or `lower-bound`
+    /// base policy.
+    pub gamma0: Vec<f64>,
+    /// Workload seeds.
+    pub seed: Vec<u64>,
+}
+
+impl Axes {
+    const KEYS: &'static [&'static str] =
+        &["cells", "gamma0", "process", "rate", "seed", "selector"];
+
+    /// True when no axis has any values (the grid is the bare base).
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+            && self.selector.is_empty()
+            && self.process.is_empty()
+            && self.rate.is_empty()
+            && self.gamma0.is_empty()
+            && self.seed.is_empty()
+    }
+}
+
+/// A serializable, schema-versioned description of a scenario grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepSpec {
+    pub schema_version: u32,
+    /// Sweep name; point scenarios are named `{name}-p{index:03}`.
+    pub name: String,
+    pub base: BaseRef,
+    /// Override `traffic.queries` on every point (sweeps usually want
+    /// far fewer queries than the base preset).
+    pub queries: Option<usize>,
+    /// Override the per-layer worker pool width on every point.
+    pub workers: Option<usize>,
+    /// Override `fleet.lane_workers` on every fleet-shaped point
+    /// (`0` forces sequential lanes — bit-exact informational fields).
+    pub lane_workers: Option<usize>,
+    pub axes: Axes,
+}
+
+/// One expanded grid point: a validated scenario plus its coordinates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepPoint {
+    /// Position in expansion order (0-based).
+    pub index: usize,
+    /// `p{index:03}` — also the artifact subdirectory name.
+    pub name: String,
+    /// Ordered `(axis, value)` coordinate labels, one per non-empty
+    /// axis, in the fixed nesting order.
+    pub labels: Vec<(String, String)>,
+    pub scenario: Scenario,
+}
+
+fn bad(path: &str, what: impl std::fmt::Display) -> Error {
+    Error::msg(format!("{path}: {what}"))
+}
+
+fn check_keys(v: &Json, allowed: &[&str], path: &str) -> Result<()> {
+    let obj = v
+        .as_obj()
+        .ok_or_else(|| bad(path, "expected a JSON object"))?;
+    for key in obj.keys() {
+        if !allowed.contains(&key.as_str()) {
+            return Err(bad(
+                path,
+                format!("unknown key '{key}' (allowed: {})", allowed.join(", ")),
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn opt_usize(v: &Json, key: &str, path: &str) -> Result<Option<usize>> {
+    match v.get(key) {
+        Json::Null => Ok(None),
+        x => x
+            .as_usize()
+            .map(Some)
+            .ok_or_else(|| bad(path, format!("'{key}' must be a non-negative integer"))),
+    }
+}
+
+fn get_arr<'a>(v: &'a Json, key: &str, path: &str) -> Result<Option<&'a [Json]>> {
+    match v.get(key) {
+        Json::Null => Ok(None),
+        x => x
+            .as_arr()
+            .map(Some)
+            .ok_or_else(|| bad(path, format!("'{key}' must be an array"))),
+    }
+}
+
+fn seed_from_json(x: &Json, path: &str) -> Result<u64> {
+    let n = x
+        .as_f64()
+        .ok_or_else(|| bad(path, "seed must be a number"))?;
+    if !(n >= 0.0 && n.fract() == 0.0 && n <= 9_007_199_254_740_992.0) {
+        return Err(bad(
+            path,
+            format!("seed must be an f64-exact integer in [0, 2^53], got {n}"),
+        ));
+    }
+    Ok(n as u64)
+}
+
+fn rate_label(r: &RateSpec) -> String {
+    match r {
+        RateSpec::Utilization(u) => format!("util:{u}"),
+        RateSpec::Qps(q) => format!("qps:{q}"),
+    }
+}
+
+/// Empty axis → one "inherit" slot; otherwise one slot per value.
+fn slots<T: Clone>(xs: &[T]) -> Vec<Option<T>> {
+    if xs.is_empty() {
+        vec![None]
+    } else {
+        xs.iter().cloned().map(Some).collect()
+    }
+}
+
+impl SweepSpec {
+    const KEYS: &'static [&'static str] = &[
+        "axes",
+        "base",
+        "lane_workers",
+        "name",
+        "queries",
+        "sweep_schema_version",
+        "workers",
+    ];
+
+    /// A spec over a named preset with no axes (a 1-point grid).
+    pub fn new(name: &str, base_preset: &str) -> SweepSpec {
+        SweepSpec {
+            schema_version: SWEEP_SCHEMA_VERSION,
+            name: name.to_string(),
+            base: BaseRef::Preset(base_preset.to_string()),
+            queries: None,
+            workers: None,
+            lane_workers: None,
+            axes: Axes::default(),
+        }
+    }
+
+    /// Canonical JSON form; [`Self::from_json`] round-trips it
+    /// bit-identically through [`Json::to_string_pretty`].
+    pub fn to_json(&self) -> Json {
+        let mut axes: Vec<(&str, Json)> = Vec::new();
+        if !self.axes.cells.is_empty() {
+            axes.push((
+                "cells",
+                Json::Arr(self.axes.cells.iter().map(|&c| Json::Num(c as f64)).collect()),
+            ));
+        }
+        if !self.axes.selector.is_empty() {
+            axes.push((
+                "selector",
+                Json::Arr(
+                    self.axes
+                        .selector
+                        .iter()
+                        .map(|s| Json::Str(s.name()))
+                        .collect(),
+                ),
+            ));
+        }
+        if !self.axes.process.is_empty() {
+            axes.push((
+                "process",
+                Json::Arr(self.axes.process.iter().map(|p| p.to_json()).collect()),
+            ));
+        }
+        if !self.axes.rate.is_empty() {
+            axes.push((
+                "rate",
+                Json::Arr(self.axes.rate.iter().map(|r| r.to_json()).collect()),
+            ));
+        }
+        if !self.axes.gamma0.is_empty() {
+            axes.push(("gamma0", Json::arr_f64(&self.axes.gamma0)));
+        }
+        if !self.axes.seed.is_empty() {
+            axes.push((
+                "seed",
+                Json::Arr(self.axes.seed.iter().map(|&s| Json::Num(s as f64)).collect()),
+            ));
+        }
+        let mut fields: Vec<(&str, Json)> = vec![
+            (
+                "sweep_schema_version",
+                Json::Num(self.schema_version as f64),
+            ),
+            ("name", Json::Str(self.name.clone())),
+            (
+                "base",
+                match &self.base {
+                    BaseRef::Preset(p) => Json::Str(p.clone()),
+                    BaseRef::Inline(s) => s.to_json(),
+                },
+            ),
+            ("axes", Json::obj(axes)),
+        ];
+        if let Some(q) = self.queries {
+            fields.push(("queries", Json::Num(q as f64)));
+        }
+        if let Some(w) = self.workers {
+            fields.push(("workers", Json::Num(w as f64)));
+        }
+        if let Some(lw) = self.lane_workers {
+            fields.push(("lane_workers", Json::Num(lw as f64)));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(v: &Json) -> Result<SweepSpec> {
+        check_keys(v, Self::KEYS, "sweep")?;
+        let schema_version = match v.get("sweep_schema_version") {
+            Json::Null => SWEEP_SCHEMA_VERSION as usize,
+            x => x.as_usize().ok_or_else(|| {
+                bad("sweep", "'sweep_schema_version' must be a non-negative integer")
+            })?,
+        };
+        let name = v
+            .get("name")
+            .as_str()
+            .ok_or_else(|| bad("sweep", "'name' must be a string"))?
+            .to_string();
+        let base = match v.get("base") {
+            Json::Null => {
+                return Err(bad(
+                    "sweep",
+                    "'base' is required (a preset name or an inline scenario object)",
+                ))
+            }
+            Json::Str(s) => BaseRef::Preset(s.clone()),
+            obj => BaseRef::Inline(Box::new(
+                Scenario::from_json(obj).map_err(|e| bad("sweep.base", format!("{e:#}")))?,
+            )),
+        };
+        let queries = opt_usize(v, "queries", "sweep")?;
+        let workers = opt_usize(v, "workers", "sweep")?;
+        let lane_workers = opt_usize(v, "lane_workers", "sweep")?;
+
+        let mut axes = Axes::default();
+        match v.get("axes") {
+            Json::Null => {}
+            a => {
+                check_keys(a, Axes::KEYS, "sweep.axes")?;
+                if let Some(arr) = get_arr(a, "cells", "sweep.axes")? {
+                    for (i, x) in arr.iter().enumerate() {
+                        axes.cells.push(x.as_usize().ok_or_else(|| {
+                            bad(&format!("sweep.axes.cells[{i}]"), "must be a non-negative integer")
+                        })?);
+                    }
+                }
+                if let Some(arr) = get_arr(a, "selector", "sweep.axes")? {
+                    for (i, x) in arr.iter().enumerate() {
+                        let path = format!("sweep.axes.selector[{i}]");
+                        let name = x
+                            .as_str()
+                            .ok_or_else(|| bad(&path, "must be a selector name string"))?;
+                        axes.selector.push(
+                            SelectorSpec::parse(name).map_err(|e| bad(&path, format!("{e:#}")))?,
+                        );
+                    }
+                }
+                if let Some(arr) = get_arr(a, "process", "sweep.axes")? {
+                    for (i, x) in arr.iter().enumerate() {
+                        axes.process
+                            .push(ProcessSpec::from_json(x, &format!("sweep.axes.process[{i}]"))?);
+                    }
+                }
+                if let Some(arr) = get_arr(a, "rate", "sweep.axes")? {
+                    for (i, x) in arr.iter().enumerate() {
+                        axes.rate
+                            .push(RateSpec::from_json(x, &format!("sweep.axes.rate[{i}]"))?);
+                    }
+                }
+                if let Some(arr) = get_arr(a, "gamma0", "sweep.axes")? {
+                    for (i, x) in arr.iter().enumerate() {
+                        axes.gamma0.push(x.as_f64().ok_or_else(|| {
+                            bad(&format!("sweep.axes.gamma0[{i}]"), "must be a number")
+                        })?);
+                    }
+                }
+                if let Some(arr) = get_arr(a, "seed", "sweep.axes")? {
+                    for (i, x) in arr.iter().enumerate() {
+                        axes.seed
+                            .push(seed_from_json(x, &format!("sweep.axes.seed[{i}]"))?);
+                    }
+                }
+            }
+        }
+
+        let spec = SweepSpec {
+            schema_version: schema_version as u32,
+            name,
+            base,
+            queries,
+            workers,
+            lane_workers,
+            axes,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<SweepSpec> {
+        let v = Json::parse(text).map_err(|e| Error::msg(format!("sweep: {e}")))?;
+        SweepSpec::from_json(&v)
+    }
+
+    pub fn load(path: &str) -> Result<SweepSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read sweep spec {path}"))?;
+        SweepSpec::from_json_str(&text).with_context(|| format!("sweep spec {path}"))
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("write sweep spec {path}"))
+    }
+
+    /// FNV-1a checksum of the canonical serialization — independent of
+    /// on-disk formatting (the spec is parsed and re-canonicalized
+    /// before hashing).
+    pub fn digest(&self) -> String {
+        crate::telemetry::artifact::checksum(self.to_json().to_string_pretty().as_bytes())
+    }
+
+    /// Resolve the base reference to a validated scenario.
+    pub fn base_scenario(&self) -> Result<Scenario> {
+        match &self.base {
+            BaseRef::Preset(name) => crate::scenario::preset(name),
+            BaseRef::Inline(s) => {
+                s.validate()?;
+                Ok((**s).clone())
+            }
+        }
+    }
+
+    /// Structural checks plus a full dry expansion (every point
+    /// scenario is validated), so a bad axis value fails at load time
+    /// with a field-path diagnostic, not mid-sweep.
+    pub fn validate(&self) -> Result<()> {
+        crate::ensure!(!self.name.is_empty(), "sweep.name: must not be empty");
+        crate::ensure!(
+            self.schema_version >= 1 && self.schema_version <= SWEEP_SCHEMA_VERSION,
+            "sweep.sweep_schema_version: {} unsupported (this build reads 1..={})",
+            self.schema_version,
+            SWEEP_SCHEMA_VERSION
+        );
+        if let Some(q) = self.queries {
+            crate::ensure!(q >= 1, "sweep.queries: must be >= 1");
+        }
+        for (i, &c) in self.axes.cells.iter().enumerate() {
+            crate::ensure!(c >= 1, "sweep.axes.cells[{i}]: must be >= 1");
+        }
+        for (i, &g) in self.axes.gamma0.iter().enumerate() {
+            crate::ensure!(
+                g > 0.0 && g <= 1.0,
+                "sweep.axes.gamma0[{i}]: must be in (0, 1], got {g}"
+            );
+        }
+        self.expand().map(|_| ())
+    }
+
+    /// Cartesian product in the fixed nesting order
+    /// cells × selector × process × rate × gamma0 × seed (seed
+    /// innermost). Always yields at least one point (the bare base).
+    pub fn expand(&self) -> Result<Vec<SweepPoint>> {
+        let base = self.base_scenario()?;
+        let cells = slots(&self.axes.cells);
+        let selectors = slots(&self.axes.selector);
+        let processes = slots(&self.axes.process);
+        let rates = slots(&self.axes.rate);
+        let gammas = slots(&self.axes.gamma0);
+        let seeds = slots(&self.axes.seed);
+
+        let mut points = Vec::new();
+        for c in &cells {
+            for sel in &selectors {
+                for pr in &processes {
+                    for ra in &rates {
+                        for g in &gammas {
+                            for sd in &seeds {
+                                let index = points.len();
+                                let name = format!("p{index:03}");
+                                let (labels, scenario) =
+                                    self.apply(&base, &name, c, sel, pr, ra, g, sd)?;
+                                points.push(SweepPoint {
+                                    index,
+                                    name,
+                                    labels,
+                                    scenario,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(points)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn apply(
+        &self,
+        base: &Scenario,
+        point: &str,
+        cells: &Option<usize>,
+        selector: &Option<SelectorSpec>,
+        process: &Option<ProcessSpec>,
+        rate: &Option<RateSpec>,
+        gamma0: &Option<f64>,
+        seed: &Option<u64>,
+    ) -> Result<(Vec<(String, String)>, Scenario)> {
+        let mut s = base.clone();
+        s.name = format!("{}-{point}", self.name);
+        if let Some(q) = self.queries {
+            s.traffic.queries = q;
+        }
+        if let Some(w) = self.workers {
+            s.workers = Some(w);
+        }
+        let mut labels = Vec::new();
+        if let Some(n) = *cells {
+            labels.push(("cells".to_string(), n.to_string()));
+            if n <= 1 {
+                s.fleet = None;
+            } else {
+                let mut f = s.fleet.take().unwrap_or_default();
+                f.cells = n;
+                s.fleet = Some(f);
+            }
+        }
+        if let Some(lw) = self.lane_workers {
+            if let Some(f) = s.fleet.as_mut() {
+                f.lane_workers = Some(lw);
+            }
+        }
+        if let Some(sel) = *selector {
+            labels.push(("selector".to_string(), sel.name()));
+            s.policy.selector = Some(sel);
+        }
+        if let Some(p) = process {
+            labels.push(("process".to_string(), p.label().to_string()));
+            s.traffic.process = p.clone();
+        }
+        if let Some(r) = *rate {
+            labels.push(("rate".to_string(), rate_label(&r)));
+            s.traffic.rate = r;
+        }
+        if let Some(g) = *gamma0 {
+            labels.push(("gamma0".to_string(), format!("{g}")));
+            match &mut s.policy.kind {
+                PolicyKind::Jesa { gamma0, .. } | PolicyKind::LowerBound { gamma0, .. } => {
+                    *gamma0 = g;
+                }
+                _ => {
+                    crate::bail!(
+                        "sweep.axes.gamma0: base policy must be jesa or lower-bound \
+                         to sweep the importance factor"
+                    );
+                }
+            }
+        }
+        if let Some(sd) = *seed {
+            labels.push(("seed".to_string(), sd.to_string()));
+            s.system.workload.seed = sd;
+        }
+        s.validate()
+            .with_context(|| format!("sweep point {point}"))?;
+        Ok((labels, s))
+    }
+}

@@ -31,7 +31,7 @@ use std::time::{SystemTime, UNIX_EPOCH};
 pub const ARTIFACT_SCHEMA_VERSION: u64 = 1;
 
 /// FNV-1a digest of a byte string, formatted like the report digests.
-fn checksum(bytes: &[u8]) -> String {
+pub(crate) fn checksum(bytes: &[u8]) -> String {
     let mut h = Fnv1a::new();
     h.write_bytes(bytes);
     format!("0x{:016x}", h.finish())
@@ -198,6 +198,16 @@ pub fn verify_artifact(dir: &Path) -> Result<(String, String)> {
         .to_string();
     if report_digest.is_empty() {
         bail!("manifest report_digest missing");
+    }
+    // Both report serializers embed the engine digest; an edited
+    // manifest digest (or a swapped-in report payload whose entry
+    // happens to re-checksum) cannot get past this cross-check.
+    let report_text =
+        fs::read_to_string(dir.join("report.json")).context("read report.json")?;
+    let report = Json::parse(&report_text).context("report.json")?;
+    let embedded = report.get("digest").as_str().unwrap_or("");
+    if embedded != report_digest {
+        bail!("report digest mismatch (report.json says {embedded}, manifest says {report_digest})");
     }
     Ok((scenario_digest, report_digest))
 }

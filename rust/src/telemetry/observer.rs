@@ -196,7 +196,7 @@ impl TelemetryObserver {
         };
         eprintln!(
             "[live] wall {elapsed:6.1}s | rounds {} ({rounds_per_s:.0}/s) | q {} \
-             | p50 {:.4}s p95 {:.4}s p99 {:.4}s | shed {:.2}% | hit {:.1}%",
+             | p50 {:.4}s p95 {:.4}s p99 {:.4}s | shed {:.2}% | hit {:.1}% ({} hits)",
             self.rounds,
             self.queries,
             lat.p50_s(),
@@ -204,6 +204,7 @@ impl TelemetryObserver {
             lat.p99_s(),
             100.0 * self.shed_fraction(),
             100.0 * self.cache_hit_rate(),
+            self.layer_cache_hits,
         );
     }
 

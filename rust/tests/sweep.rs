@@ -1,0 +1,223 @@
+//! Sweep layer coverage: spec round-trips, deterministic expansion and
+//! axis application, same-spec bit-identical manifests, the
+//! PASS/CHANGED verdict paths of `--check`, and deep sweep-root
+//! verification — the in-tree half of the ci.sh sweep gate.
+
+use dmoe::scenario::PolicyKind;
+use dmoe::sweep::{
+    check_manifests, run_sweep, verify_sweep_root, SweepSpec, Verdict, SWEEP_SCHEMA_VERSION,
+};
+use dmoe::util::json::Json;
+use std::path::PathBuf;
+
+/// A 4-point grid over {des, topk:2} × two seeds, small enough to run
+/// in-process. `workers: 1` pins the per-layer pool so informational
+/// fields are deterministic too.
+fn tiny_spec(name: &str, seeds: &[u64]) -> SweepSpec {
+    let text = format!(
+        r#"{{
+  "sweep_schema_version": 1,
+  "name": "{name}",
+  "base": "paper-baseline",
+  "queries": 100,
+  "workers": 1,
+  "axes": {{
+    "selector": ["des", "topk:2"],
+    "seed": {seeds:?}
+  }}
+}}"#
+    );
+    SweepSpec::from_json_str(&text).unwrap()
+}
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dmoe-sweep-test-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn point_digests(manifest: &Json) -> Vec<(String, String, String)> {
+    manifest
+        .get("points")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|p| {
+            (
+                p.get("name").as_str().unwrap().to_string(),
+                p.get("scenario_digest").as_str().unwrap().to_string(),
+                p.get("report_digest").as_str().unwrap().to_string(),
+            )
+        })
+        .collect()
+}
+
+// -- spec document ----------------------------------------------------------
+
+#[test]
+fn spec_json_round_trips_bit_identically() {
+    let spec = tiny_spec("round-trip", &[7, 9]);
+    let text = spec.to_json().to_string_pretty();
+    let back = SweepSpec::from_json_str(&text).unwrap();
+    assert_eq!(back, spec);
+    assert_eq!(back.to_json().to_string_pretty(), text);
+    assert_eq!(back.digest(), spec.digest());
+    assert_eq!(spec.schema_version, SWEEP_SCHEMA_VERSION);
+}
+
+#[test]
+fn spec_rejects_bad_fields_with_field_paths() {
+    let unknown = r#"{"name": "x", "base": "paper-baseline", "axis": {}}"#;
+    let err = format!("{:#}", SweepSpec::from_json_str(unknown).unwrap_err());
+    assert!(err.contains("sweep") && err.contains("axis"), "{err}");
+
+    let bad_gamma = r#"{"name": "x", "base": "paper-baseline",
+        "axes": {"gamma0": [1.5]}}"#;
+    let err = format!("{:#}", SweepSpec::from_json_str(bad_gamma).unwrap_err());
+    assert!(err.contains("sweep.axes.gamma0[0]"), "{err}");
+
+    let bad_selector = r#"{"name": "x", "base": "paper-baseline",
+        "axes": {"selector": ["warp-drive"]}}"#;
+    let err = format!("{:#}", SweepSpec::from_json_str(bad_selector).unwrap_err());
+    assert!(err.contains("sweep.axes.selector[0]"), "{err}");
+}
+
+// -- deterministic expansion ------------------------------------------------
+
+#[test]
+fn expansion_is_deterministic_and_applies_axes() {
+    let spec = tiny_spec("expand", &[11, 12]);
+    let points = spec.expand().unwrap();
+    assert_eq!(points.len(), 4);
+    // Fixed nesting order: selector outer, seed inner.
+    let names: Vec<&str> = points.iter().map(|p| p.name.as_str()).collect();
+    assert_eq!(names, ["p000", "p001", "p002", "p003"]);
+    assert_eq!(points[0].scenario.name, "expand-p000");
+    assert_eq!(points[0].scenario.system.workload.seed, 11);
+    assert_eq!(points[1].scenario.system.workload.seed, 12);
+    assert_eq!(points[0].scenario.policy.selector.unwrap().name(), "des");
+    assert_eq!(points[2].scenario.policy.selector.unwrap().name(), "topk:2");
+    for p in &points {
+        assert_eq!(p.scenario.traffic.queries, 100);
+        assert_eq!(p.scenario.workers, Some(1));
+        assert_eq!(
+            p.labels.iter().map(|(k, _)| k.as_str()).collect::<Vec<_>>(),
+            ["selector", "seed"]
+        );
+    }
+    // Expansion is pure: a second expansion is identical.
+    assert_eq!(spec.expand().unwrap(), points);
+}
+
+#[test]
+fn cells_and_gamma0_axes_shape_the_point_scenarios() {
+    let text = r#"{
+  "name": "shape",
+  "base": "paper-baseline",
+  "queries": 50,
+  "lane_workers": 0,
+  "axes": {"cells": [1, 4], "gamma0": [0.5, 0.9]}
+}"#;
+    let spec = SweepSpec::from_json_str(text).unwrap();
+    let points = spec.expand().unwrap();
+    assert_eq!(points.len(), 4);
+    // cells=1 collapses to the serve engine; cells=4 shapes a fleet
+    // with the spec-level lane_workers override applied.
+    assert!(points[0].scenario.fleet.is_none());
+    let fleet = points[2].scenario.fleet.as_ref().unwrap();
+    assert_eq!(fleet.cells, 4);
+    assert_eq!(fleet.lane_workers, Some(0));
+    for (i, want) in [(0, 0.5), (1, 0.9), (2, 0.5), (3, 0.9)] {
+        match points[i].scenario.policy.kind {
+            PolicyKind::Jesa { gamma0, .. } => assert_eq!(gamma0, want),
+            _ => panic!("paper-baseline is jesa-shaped"),
+        }
+    }
+}
+
+#[test]
+fn gamma0_axis_requires_an_importance_factor_policy() {
+    let text = r#"{
+  "name": "bad-gamma-base",
+  "base": "paper-baseline",
+  "axes": {"selector": ["des"], "gamma0": [0.5]}
+}"#;
+    // Swap the base policy to topk, which has no gamma0 knob.
+    let mut spec = SweepSpec::from_json_str(text).unwrap();
+    let mut base = spec.base_scenario().unwrap();
+    base.policy = dmoe::scenario::PolicySpec::topk(2);
+    spec.base = dmoe::sweep::BaseRef::Inline(Box::new(base));
+    let err = format!("{:#}", spec.expand().unwrap_err());
+    assert!(err.contains("gamma0"), "{err}");
+}
+
+// -- sweep runs: bit-identical manifests, verification, verdicts ------------
+
+#[test]
+fn same_spec_runs_to_bit_identical_digests_and_verifies() {
+    let spec = tiny_spec("determinism", &[11, 12]);
+    let (root_a, root_b) = (scratch("det-a"), scratch("det-b"));
+    let a = run_sweep(&spec, &root_a, 2).unwrap();
+    let b = run_sweep(&spec, &root_b, 2).unwrap();
+
+    // Same spec, two runs: identical per-point digests and spec
+    // checksum (wall-clock manifest fields are exempt by contract).
+    assert_eq!(point_digests(&a), point_digests(&b));
+    assert_eq!(
+        a.get("spec_fnv1a").as_str().unwrap(),
+        b.get("spec_fnv1a").as_str().unwrap()
+    );
+    // All four points are distinct scenarios with distinct digests.
+    let digests = point_digests(&a);
+    assert_eq!(digests.len(), 4);
+    for i in 0..digests.len() {
+        for j in (i + 1)..digests.len() {
+            assert_ne!(digests[i].1, digests[j].1, "{i} vs {j}");
+        }
+    }
+
+    // Deep on-disk verification: every per-point artifact plus the
+    // sweep-level digest cross-check.
+    let (points, name) = verify_sweep_root(&root_a).unwrap();
+    assert_eq!((points, name.as_str()), (4, "determinism"));
+
+    // A diff against itself is an all-PASS report.
+    let report = check_manifests(&a, &b);
+    assert_eq!(report.points.len(), 4);
+    assert_eq!(report.worst(), Verdict::Pass);
+
+    // Tampering with a point artifact breaks deep verification with a
+    // diagnostic naming the file.
+    let victim = root_a.join("points/p001/report.json");
+    let text = std::fs::read_to_string(&victim).unwrap();
+    std::fs::write(&victim, text + " ").unwrap();
+    let err = format!("{:#}", verify_sweep_root(&root_a).unwrap_err());
+    assert!(err.contains("p001"), "must name the point: {err}");
+    assert!(err.contains("report.json"), "must name the file: {err}");
+
+    let _ = std::fs::remove_dir_all(&root_a);
+    let _ = std::fs::remove_dir_all(&root_b);
+}
+
+#[test]
+fn perturbed_seed_axis_reports_changed_with_digests_named() {
+    let baseline_spec = tiny_spec("check", &[11, 12]);
+    let perturbed_spec = tiny_spec("check", &[13, 14]);
+    let (root_a, root_b) = (scratch("chk-a"), scratch("chk-b"));
+    let baseline = run_sweep(&baseline_spec, &root_a, 2).unwrap();
+    let fresh = run_sweep(&perturbed_spec, &root_b, 2).unwrap();
+
+    let report = check_manifests(&baseline, &fresh);
+    assert_eq!(report.worst(), Verdict::Changed);
+    let baseline_digests = point_digests(&baseline);
+    let fresh_digests = point_digests(&fresh);
+    for (i, p) in report.points.iter().enumerate() {
+        assert_eq!(p.verdict, Verdict::Changed, "{}", p.name);
+        // The verdict line names both scenario digests.
+        assert!(p.detail.contains(&baseline_digests[i].1), "{}", p.detail);
+        assert!(p.detail.contains(&fresh_digests[i].1), "{}", p.detail);
+    }
+
+    let _ = std::fs::remove_dir_all(&root_a);
+    let _ = std::fs::remove_dir_all(&root_b);
+}

@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Refresh the committed bench baselines (BENCH_des.json, BENCH_fleet.json,
+# BENCH_serve.json) in *full* mode and leave them at the repo root, ready
+# to commit. Run on a quiet machine — the numbers are wall-clock.
+#
+#   ./scripts/refresh_benches.sh
+#
+# ci.sh only *bootstraps* missing BENCH files (quick mode,
+# DMOE_BENCH_FAST=1); deliberate refreshes after a perf PR go through
+# this script so the committed baselines stay full-fidelity. Each bench
+# stamps the scenario and git rev into its JSON, so commit these together
+# with the change that moved the numbers.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+for b in des fleet serve; do
+  echo "== cargo bench --bench $b =="
+  cargo bench --bench "$b"
+done
+
+echo
+echo "refreshed: $(ls BENCH_*.json | tr '\n' ' ')"
+echo "review the deltas, then commit the BENCH_*.json files."
