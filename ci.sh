@@ -202,6 +202,39 @@ if [[ $perturbed_rc -ne 2 ]] || ! grep -q "CHANGED" <<<"$perturbed_out"; then
 fi
 echo "sweep perturbation gate passed (CHANGED correctly detected, rc=2)"
 
+# Chaos gate, three parts (see MONITORING.md "Degraded-mode QoS"):
+#  1. the expert-flap preset (outage windows + lossy links) run twice as
+#     a ~2 s smoke must produce bit-identical scenario digests — chaos
+#     draws come from the scenario seed, never ambient entropy;
+#  2. that run must actually degrade: the chaos report line must be
+#     present with availability < 1.0;
+#  3. the cell-crash-storm preset run sequentially (--lane-workers 0)
+#     and lane-parallel (--lane-workers 4) must digest identically —
+#     crashes, re-routing and link faults keep the lane determinism
+#     contract.
+flap_a=$(cargo run --release --quiet -- run --scenario expert-flap --verify --queries 400)
+flap_b=$(cargo run --release --quiet -- run --scenario expert-flap --queries 400)
+da=$(extract_scenario_digest <<<"$flap_a")
+db=$(extract_scenario_digest <<<"$flap_b")
+if [[ -z "$da" || "$da" != "$db" ]]; then
+  echo "FAIL: expert-flap chaos digest determinism (first=$da second=$db)" >&2
+  exit 1
+fi
+if ! grep -q "chaos: availability 0\." <<<"$flap_a"; then
+  echo "FAIL: expert-flap must report degraded availability (< 1.0):" >&2
+  echo "$flap_a" >&2
+  exit 1
+fi
+storm_seq=$(cargo run --release --quiet -- run --scenario cell-crash-storm --queries 400 \
+  --lane-workers 0 | extract_scenario_digest)
+storm_par=$(cargo run --release --quiet -- run --scenario cell-crash-storm --queries 400 \
+  --lane-workers 4 | extract_scenario_digest)
+if [[ -z "$storm_seq" || "$storm_seq" != "$storm_par" ]]; then
+  echo "FAIL: chaos lane determinism (sequential=$storm_seq parallel=$storm_par)" >&2
+  exit 1
+fi
+echo "chaos gate passed (expert-flap $da, cell-crash-storm $storm_seq)"
+
 # Bench baseline bootstrap: BENCH_{des,fleet,serve}.json are committed
 # perf baselines (scenario + git rev stamped by the benches themselves).
 # Regenerate any that are missing, in quick mode, so a fresh checkout

@@ -1,0 +1,827 @@
+//! Failure & churn injection: the scenario-driven chaos layer.
+//!
+//! A [`ChaosSpec`] is a schema-versioned, seeded description of the ways
+//! the infrastructure misbehaves mid-session:
+//!
+//! * **Expert outages** — `(expert, down_at, up_at)` windows driven into
+//!   the DES forced-exclusion mask per round
+//!   ([`JesaOptions::offline`](crate::jesa::JesaOptions)), so the solver
+//!   prices a down expert at `+∞` and the solution cache keys on the
+//!   live-expert set (stale pre-outage selections cannot be replayed).
+//! * **Link faults** — each remote forward/backward transmission fails
+//!   independently with `fail_prob`; a failed attempt re-enters the
+//!   round timeline after `backoff`, and more than `max_retries`
+//!   failures time the query out into the `failed` disposition
+//!   (see [`protocol::sim::simulate_round_chaos`](crate::protocol::sim)).
+//! * **Cell crashes** — `(cell, at)` events; a crashed cell drains
+//!   instantly and its queued queries re-route through the fleet router
+//!   (they land elsewhere or shed — they never vanish).
+//!
+//! Determinism: all random draws come from [`util::rng`](crate::util::rng)
+//! streams derived from `scenario seed ⊕ chaos seed` (forked per cell),
+//! never from wall clock, so the same scenario reproduces bit-identical
+//! reports — including across sequential vs lane-parallel fleets, gated
+//! in ci.sh.
+//!
+//! Times are [`Dur`] (absolute seconds or calibrated-round multiples)
+//! and resolve at prepare time into a [`ChaosRuntime`]; each engine lane
+//! owns a [`ChaosState`] that tracks the per-round offline mask and the
+//! degraded-mode QoS counters surfaced as a [`ChaosReport`]
+//! (availability, failed queries, retries, forced exclusions,
+//! p99-under-churn).
+
+use crate::scenario::Dur;
+use crate::telemetry::LatencyStats;
+use crate::util::error::{Error, Result};
+use crate::util::hash::Fnv1a;
+use crate::util::json::Json;
+use crate::util::rng::{SplitMix64, Xoshiro256pp};
+
+/// Newest chaos schema this build writes: bump when a field changes
+/// meaning, not when purely additive fields appear.
+pub const CHAOS_SCHEMA_VERSION: u32 = 1;
+
+// ---------------------------------------------------------------------------
+// JSON helpers (local copies — every spec document keeps its own so
+// diagnostics carry the exact path of the offending field).
+// ---------------------------------------------------------------------------
+
+fn bad(path: &str, what: impl std::fmt::Display) -> Error {
+    Error::msg(format!("{path}: {what}"))
+}
+
+fn check_keys(v: &Json, allowed: &[&str], path: &str) -> Result<()> {
+    let obj = v
+        .as_obj()
+        .ok_or_else(|| bad(path, "expected a JSON object"))?;
+    for key in obj.keys() {
+        if !allowed.contains(&key.as_str()) {
+            return Err(bad(
+                path,
+                format!("unknown field '{key}' (known: {})", allowed.join(", ")),
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn get_f64(v: &Json, key: &str, default: f64, path: &str) -> Result<f64> {
+    match v.get(key) {
+        Json::Null => Ok(default),
+        x => x
+            .as_f64()
+            .ok_or_else(|| bad(path, format!("'{key}' must be a number"))),
+    }
+}
+
+fn get_usize(v: &Json, key: &str, default: usize, path: &str) -> Result<usize> {
+    match v.get(key) {
+        Json::Null => Ok(default),
+        x => x
+            .as_usize()
+            .ok_or_else(|| bad(path, format!("'{key}' must be a non-negative integer"))),
+    }
+}
+
+fn get_seed(v: &Json, key: &str, default: u64, path: &str) -> Result<u64> {
+    let x = get_f64(v, key, default as f64, path)?;
+    if !(x >= 0.0 && x.fract() == 0.0 && x <= 9_007_199_254_740_992.0) {
+        return Err(bad(
+            path,
+            format!("'{key}' must be an integer seed in [0, 2^53] (f64-exact), got {x}"),
+        ));
+    }
+    Ok(x as u64)
+}
+
+// ---------------------------------------------------------------------------
+// Spec types
+// ---------------------------------------------------------------------------
+
+/// One scheduled expert outage window: the expert is forcibly excluded
+/// from selection for `down_at <= t < up_at`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExpertOutage {
+    pub expert: usize,
+    pub down_at: Dur,
+    pub up_at: Dur,
+}
+
+/// Transient-link-failure regime applied to every remote transmission.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkFaultSpec {
+    /// Independent per-attempt failure probability, in [0, 1).
+    pub fail_prob: f64,
+    /// Failed attempts tolerated before the query times out.
+    pub max_retries: usize,
+    /// Wait between a failed attempt and its retry.
+    pub backoff: Dur,
+}
+
+/// The serializable chaos section of a [`Scenario`](crate::scenario::Scenario).
+/// JSON (canonical, key-sorted; empty lists omitted):
+///
+/// ```json
+/// {
+///   "chaos_schema_version": 1,
+///   "seed": 7,
+///   "expert_outages": [{"expert": 2, "down_at": {"rounds": 20}, "up_at": {"rounds": 60}}],
+///   "link": {"fail_prob": 0.05, "max_retries": 2, "backoff": {"rounds": 0.25}},
+///   "cell_crashes": [[1, {"s": 3.5}]]
+/// }
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosSpec {
+    pub schema_version: u32,
+    /// Chaos RNG stream, mixed with the scenario seed at resolve time.
+    pub seed: u64,
+    pub expert_outages: Vec<ExpertOutage>,
+    pub link: Option<LinkFaultSpec>,
+    /// Scheduled crashes: `(cell, at)`. Fleet scenarios only.
+    pub cell_crashes: Vec<(usize, Dur)>,
+}
+
+impl Default for ChaosSpec {
+    fn default() -> Self {
+        Self {
+            schema_version: CHAOS_SCHEMA_VERSION,
+            seed: 0,
+            expert_outages: Vec::new(),
+            link: None,
+            cell_crashes: Vec::new(),
+        }
+    }
+}
+
+impl ChaosSpec {
+    const KEYS: &'static [&'static str] = &[
+        "chaos_schema_version",
+        "seed",
+        "expert_outages",
+        "link",
+        "cell_crashes",
+    ];
+    const OUTAGE_KEYS: &'static [&'static str] = &["expert", "down_at", "up_at"];
+    const LINK_KEYS: &'static [&'static str] = &["fail_prob", "max_retries", "backoff"];
+
+    /// Compact axis label for sweep manifests: outage / link / crash
+    /// counts plus the chaos seed.
+    pub fn label(&self) -> String {
+        format!(
+            "o{}l{}c{}s{}",
+            self.expert_outages.len(),
+            usize::from(self.link.is_some()),
+            self.cell_crashes.len(),
+            self.seed
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            (
+                "chaos_schema_version",
+                Json::Num(self.schema_version as f64),
+            ),
+            ("seed", Json::Num(self.seed as f64)),
+        ];
+        if !self.expert_outages.is_empty() {
+            fields.push((
+                "expert_outages",
+                Json::Arr(
+                    self.expert_outages
+                        .iter()
+                        .map(|o| {
+                            Json::obj(vec![
+                                ("expert", Json::Num(o.expert as f64)),
+                                ("down_at", o.down_at.to_json()),
+                                ("up_at", o.up_at.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        if let Some(l) = &self.link {
+            fields.push((
+                "link",
+                Json::obj(vec![
+                    ("fail_prob", Json::Num(l.fail_prob)),
+                    ("max_retries", Json::Num(l.max_retries as f64)),
+                    ("backoff", l.backoff.to_json()),
+                ]),
+            ));
+        }
+        if !self.cell_crashes.is_empty() {
+            fields.push((
+                "cell_crashes",
+                Json::Arr(
+                    self.cell_crashes
+                        .iter()
+                        .map(|(cell, at)| Json::Arr(vec![Json::Num(*cell as f64), at.to_json()]))
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(v: &Json, path: &str) -> Result<ChaosSpec> {
+        check_keys(v, Self::KEYS, path)?;
+        let d = ChaosSpec::default();
+        let schema_version = get_usize(
+            v,
+            "chaos_schema_version",
+            CHAOS_SCHEMA_VERSION as usize,
+            path,
+        )?;
+        if schema_version > u32::MAX as usize {
+            return Err(bad(
+                path,
+                format!("'chaos_schema_version' out of range: {schema_version}"),
+            ));
+        }
+        let expert_outages = match v.get("expert_outages") {
+            Json::Null => Vec::new(),
+            os => {
+                let arr = os.as_arr().ok_or_else(|| {
+                    bad(path, "'expert_outages' must be an array of outage objects")
+                })?;
+                let mut out = Vec::with_capacity(arr.len());
+                for (i, o) in arr.iter().enumerate() {
+                    let opath = format!("{path}.expert_outages[{i}]");
+                    check_keys(o, Self::OUTAGE_KEYS, &opath)?;
+                    let expert = o.get("expert").as_usize().ok_or_else(|| {
+                        bad(&opath, "'expert' must be a non-negative integer")
+                    })?;
+                    let down_at = Dur::from_json(o.get("down_at"), &format!("{opath}.down_at"))?;
+                    let up_at = Dur::from_json(o.get("up_at"), &format!("{opath}.up_at"))?;
+                    out.push(ExpertOutage {
+                        expert,
+                        down_at,
+                        up_at,
+                    });
+                }
+                out
+            }
+        };
+        let link = match v.get("link") {
+            Json::Null => None,
+            l => {
+                let lpath = format!("{path}.link");
+                check_keys(l, Self::LINK_KEYS, &lpath)?;
+                Some(LinkFaultSpec {
+                    fail_prob: get_f64(l, "fail_prob", 0.0, &lpath)?,
+                    max_retries: get_usize(l, "max_retries", 2, &lpath)?,
+                    backoff: match l.get("backoff") {
+                        Json::Null => Dur::Rounds(0.25),
+                        b => Dur::from_json(b, &format!("{lpath}.backoff"))?,
+                    },
+                })
+            }
+        };
+        let cell_crashes = match v.get("cell_crashes") {
+            Json::Null => Vec::new(),
+            cs => {
+                let arr = cs.as_arr().ok_or_else(|| {
+                    bad(path, "'cell_crashes' must be an array of [cell, at] pairs")
+                })?;
+                let mut out = Vec::with_capacity(arr.len());
+                for (i, pair) in arr.iter().enumerate() {
+                    let cpath = format!("{path}.cell_crashes[{i}]");
+                    let p = pair
+                        .as_arr()
+                        .filter(|p| p.len() == 2)
+                        .ok_or_else(|| bad(&cpath, "expected a [cell, at] pair"))?;
+                    let cell = p[0]
+                        .as_usize()
+                        .ok_or_else(|| bad(&cpath, "cell must be a non-negative integer"))?;
+                    let at = Dur::from_json(&p[1], &format!("{cpath}.at"))?;
+                    out.push((cell, at));
+                }
+                out
+            }
+        };
+        Ok(ChaosSpec {
+            schema_version: schema_version as u32,
+            seed: get_seed(v, "seed", d.seed, path)?,
+            expert_outages,
+            link,
+            cell_crashes,
+        })
+    }
+
+    /// Cross-field validation against the host scenario: `k` experts,
+    /// `cells` cells, and whether a fleet section exists at all.
+    pub fn validate(&self, k: usize, cells: usize, has_fleet: bool, path: &str) -> Result<()> {
+        crate::ensure!(
+            self.schema_version >= 1 && self.schema_version <= CHAOS_SCHEMA_VERSION,
+            "{path}.chaos_schema_version: {} unsupported (this build reads 1..={CHAOS_SCHEMA_VERSION})",
+            self.schema_version
+        );
+        let mut down = vec![false; k];
+        for (i, o) in self.expert_outages.iter().enumerate() {
+            let opath = format!("{path}.expert_outages[{i}]");
+            crate::ensure!(
+                o.expert < k,
+                "{opath}: expert {} out of range (system has {k} experts)",
+                o.expert
+            );
+            o.down_at.validate(&format!("{opath}.down_at"))?;
+            o.up_at.validate(&format!("{opath}.up_at"))?;
+            down[o.expert] = true;
+        }
+        // Keep at least one expert that never goes down: a round with
+        // every expert priced at +inf has no meaningful selection.
+        crate::ensure!(
+            down.iter().filter(|&&d| d).count() < k,
+            "{path}.expert_outages: outages cover all {k} experts — at least one must stay up"
+        );
+        if let Some(l) = &self.link {
+            crate::ensure!(
+                (0.0..1.0).contains(&l.fail_prob),
+                "{path}.link: fail_prob must be in [0, 1), got {}",
+                l.fail_prob
+            );
+            crate::ensure!(
+                l.max_retries <= 16,
+                "{path}.link: max_retries must be <= 16, got {}",
+                l.max_retries
+            );
+            l.backoff.validate(&format!("{path}.link.backoff"))?;
+        }
+        if !self.cell_crashes.is_empty() {
+            crate::ensure!(
+                has_fleet,
+                "{path}.cell_crashes: cell crashes need a fleet section (serve runs have no cells to crash)"
+            );
+        }
+        let mut crashed = vec![false; cells.max(1)];
+        for (i, (cell, at)) in self.cell_crashes.iter().enumerate() {
+            let cpath = format!("{path}.cell_crashes[{i}]");
+            crate::ensure!(
+                *cell < cells,
+                "{cpath}: cell {cell} out of range (fleet has {cells} cells)"
+            );
+            at.validate(&format!("{cpath}.at"))?;
+            crashed[*cell] = true;
+        }
+        crate::ensure!(
+            crashed.iter().filter(|&&c| c).count() < cells.max(1),
+            "{path}.cell_crashes: crashes cover all {cells} cells — at least one must survive"
+        );
+        Ok(())
+    }
+
+    /// Resolve [`Dur`] times against the calibrated round latency and
+    /// derive the chaos RNG stream from the scenario seed. Fails on
+    /// windows that resolve inverted (`up_at <= down_at`).
+    pub fn resolve(&self, round_s: f64, scenario_seed: u64) -> Result<ChaosRuntime> {
+        let mut outages = Vec::with_capacity(self.expert_outages.len());
+        for (i, o) in self.expert_outages.iter().enumerate() {
+            let down_s = o.down_at.resolve(round_s);
+            let up_s = o.up_at.resolve(round_s);
+            crate::ensure!(
+                up_s > down_s,
+                "scenario.chaos.expert_outages[{i}]: resolves to up ({up_s:.6}s) <= down ({down_s:.6}s)"
+            );
+            outages.push(ResolvedOutage {
+                expert: o.expert,
+                down_s,
+                up_s,
+            });
+        }
+        let link = self.link.map(|l| ResolvedLink {
+            fail_prob: l.fail_prob,
+            max_retries: l.max_retries,
+            backoff_s: l.backoff.resolve(round_s),
+        });
+        let mut crashes: Vec<(usize, f64)> = self
+            .cell_crashes
+            .iter()
+            .map(|(cell, at)| (*cell, at.resolve(round_s)))
+            .collect();
+        crashes.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+        Ok(ChaosRuntime {
+            outages,
+            link,
+            crashes,
+            seed: SplitMix64::new(scenario_seed.rotate_left(17) ^ self.seed ^ 0xC4A0_5EED)
+                .next_u64(),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Resolved runtime schedule
+// ---------------------------------------------------------------------------
+
+/// An [`ExpertOutage`] with times resolved to absolute seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResolvedOutage {
+    pub expert: usize,
+    pub down_s: f64,
+    pub up_s: f64,
+}
+
+/// A [`LinkFaultSpec`] with the backoff resolved to seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResolvedLink {
+    pub fail_prob: f64,
+    pub max_retries: usize,
+    pub backoff_s: f64,
+}
+
+/// The prepare-time resolution of a [`ChaosSpec`]: absolute-time
+/// schedules plus the derived chaos RNG seed. Carried by
+/// `ServeOptions`/`FleetOptions`; pure data, shared across lanes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosRuntime {
+    pub outages: Vec<ResolvedOutage>,
+    pub link: Option<ResolvedLink>,
+    /// Crash schedule sorted by time (ties by cell index).
+    pub crashes: Vec<(usize, f64)>,
+    /// Derived stream seed (scenario seed ⊕ chaos seed, mixed).
+    pub seed: u64,
+}
+
+impl ChaosRuntime {
+    /// Is any outage window active at `t_s`?
+    pub fn any_outage_at(&self, t_s: f64) -> bool {
+        self.outages
+            .iter()
+            .any(|o| t_s >= o.down_s && t_s < o.up_s)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-lane runtime state + QoS accounting
+// ---------------------------------------------------------------------------
+
+/// One engine lane's view of the chaos schedule: the current offline
+/// mask, the lane-forked RNG for link-fault draws, and the degraded-mode
+/// QoS counters. The serve engine owns one; each fleet cell owns its own
+/// (forked off the cell id), so draws are independent of lane
+/// interleaving and the seq-vs-parallel digest stays bit-identical.
+#[derive(Debug, Clone)]
+pub struct ChaosState {
+    runtime: ChaosRuntime,
+    rng: Xoshiro256pp,
+    offline: Vec<bool>,
+    /// Was the current round degraded (outage active or retries seen)?
+    degraded: bool,
+    retries: u64,
+    failed: usize,
+    forced_exclusions: u64,
+    churn: LatencyStats,
+}
+
+impl ChaosState {
+    /// `lane` keys the per-lane RNG fork: 0 for the serve engine, the
+    /// cell id for fleet cells.
+    pub fn new(runtime: &ChaosRuntime, k: usize, lane: u64) -> Self {
+        let lane_seed = runtime
+            .seed
+            .wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(lane.wrapping_add(1)));
+        Self {
+            runtime: runtime.clone(),
+            rng: Xoshiro256pp::seed_from_u64(lane_seed),
+            offline: vec![false; k],
+            degraded: false,
+            retries: 0,
+            failed: 0,
+            forced_exclusions: 0,
+            churn: LatencyStats::new(),
+        }
+    }
+
+    /// Refresh the offline mask for a round starting at `t_s`; counts
+    /// each excluded expert toward `forced_exclusions`. Returns whether
+    /// any expert is down this round.
+    pub fn begin_round(&mut self, t_s: f64) -> bool {
+        for m in self.offline.iter_mut() {
+            *m = false;
+        }
+        let mut any = false;
+        for o in &self.runtime.outages {
+            if t_s >= o.down_s && t_s < o.up_s && o.expert < self.offline.len() {
+                if !self.offline[o.expert] {
+                    self.forced_exclusions += 1;
+                }
+                self.offline[o.expert] = true;
+                any = true;
+            }
+        }
+        self.degraded = any;
+        any
+    }
+
+    pub fn offline(&self) -> &[bool] {
+        &self.offline
+    }
+
+    pub fn link(&self) -> Option<ResolvedLink> {
+        self.runtime.link
+    }
+
+    pub fn rng_mut(&mut self) -> &mut Xoshiro256pp {
+        &mut self.rng
+    }
+
+    /// Fold one round's retry count in; any retry marks the round
+    /// degraded (its completions land in the churn window).
+    pub fn note_retries(&mut self, retries: u64) {
+        self.retries += retries;
+        if retries > 0 {
+            self.degraded = true;
+        }
+    }
+
+    pub fn note_failed(&mut self) {
+        self.failed += 1;
+    }
+
+    /// Record a completed query's latency into the churn-window sketch
+    /// iff the round it completed in was degraded.
+    pub fn record_completion(&mut self, latency_s: f64) {
+        if self.degraded {
+            self.churn.record(latency_s);
+        }
+    }
+
+    pub fn degraded(&self) -> bool {
+        self.degraded
+    }
+
+    pub fn failed(&self) -> usize {
+        self.failed
+    }
+
+    /// Snapshot the QoS counters (crashed-cell count is fleet-level and
+    /// folded in by the aggregator).
+    pub fn report(&self) -> ChaosReport {
+        ChaosReport {
+            failed: self.failed,
+            retries: self.retries,
+            forced_exclusions: self.forced_exclusions,
+            crashed_cells: 0,
+            churn_latency: self.churn.clone(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Degraded-mode QoS report block
+// ---------------------------------------------------------------------------
+
+/// The degraded-mode QoS block attached to `ServeReport`/`FleetReport`
+/// when (and only when) the scenario carries a chaos section — chaos-off
+/// reports stay byte-identical to pre-chaos builds.
+#[derive(Debug, Clone, Default)]
+pub struct ChaosReport {
+    /// Queries timed out by link faults (`admitted == completed + shed + failed`).
+    pub failed: usize,
+    /// Failed transmission attempts that re-entered the timeline.
+    pub retries: u64,
+    /// Expert-rounds forcibly excluded (offline experts summed per round).
+    pub forced_exclusions: u64,
+    /// Cells crashed by the schedule (fleet runs only).
+    pub crashed_cells: usize,
+    /// Latency of completions inside churn windows (p99-under-churn).
+    pub churn_latency: LatencyStats,
+}
+
+impl ChaosReport {
+    /// Merge a lane's counters in (churn sketch merge is commutative;
+    /// call in ascending cell order anyway, like every other aggregate).
+    pub fn merge(&mut self, other: &ChaosReport) {
+        self.failed += other.failed;
+        self.retries += other.retries;
+        self.forced_exclusions += other.forced_exclusions;
+        self.crashed_cells += other.crashed_cells;
+        self.churn_latency.merge(&other.churn_latency);
+    }
+
+    /// Fraction of generated queries that completed: the availability
+    /// figure acceptance gates read (< 1.0 under failures or shedding).
+    pub fn availability(&self, generated: usize, completed: usize) -> f64 {
+        if generated == 0 {
+            1.0
+        } else {
+            completed as f64 / generated as f64
+        }
+    }
+
+    pub fn to_json(&self, generated: usize, completed: usize) -> Json {
+        Json::obj(vec![
+            (
+                "availability",
+                Json::Num(self.availability(generated, completed)),
+            ),
+            ("failed", Json::Num(self.failed as f64)),
+            ("retries", Json::Num(self.retries as f64)),
+            (
+                "forced_exclusions",
+                Json::Num(self.forced_exclusions as f64),
+            ),
+            ("crashed_cells", Json::Num(self.crashed_cells as f64)),
+            ("churn_latency", self.churn_latency.to_json()),
+        ])
+    }
+
+    /// Fold the deterministic counters into a report digest (quantiles
+    /// come from integer bucket counts; the mean is excluded for the
+    /// same associativity reason as everywhere else).
+    pub fn digest_into(&self, h: &mut Fnv1a) {
+        h.write_u64(self.failed as u64);
+        h.write_u64(self.retries);
+        h.write_u64(self.forced_exclusions);
+        h.write_u64(self.crashed_cells as u64);
+        h.write_u64(self.churn_latency.count());
+        h.write_u64(self.churn_latency.p99_s().to_bits());
+    }
+
+    /// One render line for the report footer.
+    pub fn render_line(&self, generated: usize, completed: usize) -> String {
+        format!(
+            "chaos: availability {:.4} | failed {} | retries {} | forced exclusions {} | crashed cells {} | p99-under-churn {:.1} ms ({} samples)",
+            self.availability(generated, completed),
+            self.failed,
+            self.retries,
+            self.forced_exclusions,
+            self.crashed_cells,
+            self.churn_latency.p99_s() * 1e3,
+            self.churn_latency.count()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flappy() -> ChaosSpec {
+        ChaosSpec {
+            seed: 7,
+            expert_outages: vec![
+                ExpertOutage {
+                    expert: 1,
+                    down_at: Dur::Rounds(10.0),
+                    up_at: Dur::Rounds(30.0),
+                },
+                ExpertOutage {
+                    expert: 2,
+                    down_at: Dur::Seconds(0.5),
+                    up_at: Dur::Seconds(0.9),
+                },
+            ],
+            link: Some(LinkFaultSpec {
+                fail_prob: 0.1,
+                max_retries: 2,
+                backoff: Dur::Rounds(0.25),
+            }),
+            cell_crashes: vec![(1, Dur::Seconds(2.0))],
+            ..ChaosSpec::default()
+        }
+    }
+
+    #[test]
+    fn json_round_trips_bit_identically() {
+        let spec = flappy();
+        let text = spec.to_json().to_string_pretty();
+        let back = ChaosSpec::from_json(&Json::parse(&text).unwrap(), "chaos").unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.to_json().to_string_pretty(), text);
+        // Empty sections are omitted and default back in.
+        let empty = ChaosSpec::default();
+        let text = empty.to_json().to_string_pretty();
+        assert!(!text.contains("expert_outages"), "{text}");
+        let back = ChaosSpec::from_json(&Json::parse(&text).unwrap(), "chaos").unwrap();
+        assert_eq!(back, empty);
+    }
+
+    #[test]
+    fn parse_errors_carry_field_paths() {
+        let bad_outage = r#"{"expert_outages": [{"expert": 0, "down_at": {"rounds": 1}}]}"#;
+        let err = format!(
+            "{:#}",
+            ChaosSpec::from_json(&Json::parse(bad_outage).unwrap(), "scenario.chaos").unwrap_err()
+        );
+        assert!(err.contains("scenario.chaos.expert_outages[0]"), "{err}");
+
+        let bad_crash = r#"{"cell_crashes": [[0]]}"#;
+        let err = format!(
+            "{:#}",
+            ChaosSpec::from_json(&Json::parse(bad_crash).unwrap(), "scenario.chaos").unwrap_err()
+        );
+        assert!(err.contains("scenario.chaos.cell_crashes[0]"), "{err}");
+
+        let unknown = r#"{"link": {"fail_prob": 0.1, "retries": 3}}"#;
+        let err = format!(
+            "{:#}",
+            ChaosSpec::from_json(&Json::parse(unknown).unwrap(), "scenario.chaos").unwrap_err()
+        );
+        assert!(err.contains("scenario.chaos.link") && err.contains("retries"), "{err}");
+    }
+
+    #[test]
+    fn validation_rejects_out_of_range_targets() {
+        let spec = flappy();
+        // expert 2 out of range on a 2-expert system.
+        let err = format!("{:#}", spec.validate(2, 4, true, "scenario.chaos").unwrap_err());
+        assert!(err.contains("expert 2 out of range"), "{err}");
+        // crashes need a fleet.
+        let err = format!("{:#}", spec.validate(8, 1, false, "scenario.chaos").unwrap_err());
+        assert!(err.contains("fleet"), "{err}");
+        // cell 1 out of range on a 1-cell fleet.
+        let err = format!("{:#}", spec.validate(8, 1, true, "scenario.chaos").unwrap_err());
+        assert!(err.contains("cell 1 out of range"), "{err}");
+        spec.validate(8, 4, true, "scenario.chaos").unwrap();
+        // Taking down every expert is rejected.
+        let all_down = ChaosSpec {
+            expert_outages: (0..3)
+                .map(|e| ExpertOutage {
+                    expert: e,
+                    down_at: Dur::Rounds(1.0),
+                    up_at: Dur::Rounds(2.0),
+                })
+                .collect(),
+            ..ChaosSpec::default()
+        };
+        let err = format!("{:#}", all_down.validate(3, 1, false, "scenario.chaos").unwrap_err());
+        assert!(err.contains("at least one must stay up"), "{err}");
+    }
+
+    #[test]
+    fn resolve_orders_crashes_and_checks_windows() {
+        let spec = ChaosSpec {
+            cell_crashes: vec![(2, Dur::Seconds(5.0)), (1, Dur::Seconds(2.0))],
+            ..flappy()
+        };
+        let rt = spec.resolve(0.1, 42).unwrap();
+        assert_eq!(rt.crashes, vec![(1, 2.0), (2, 5.0)]);
+        assert_eq!(rt.outages[0].down_s, 1.0);
+        assert_eq!(rt.outages[0].up_s, 3.0);
+        assert!(rt.any_outage_at(1.5) && !rt.any_outage_at(4.0));
+        // Inverted window (rounds resolve below the seconds floor).
+        let inverted = ChaosSpec {
+            expert_outages: vec![ExpertOutage {
+                expert: 0,
+                down_at: Dur::Seconds(1.0),
+                up_at: Dur::Rounds(1.0),
+            }],
+            ..ChaosSpec::default()
+        };
+        let err = format!("{:#}", inverted.resolve(0.1, 42).unwrap_err());
+        assert!(err.contains("expert_outages[0]"), "{err}");
+    }
+
+    #[test]
+    fn state_masks_and_counters_are_deterministic() {
+        let rt = flappy().resolve(0.05, 9).unwrap();
+        let mut a = ChaosState::new(&rt, 4, 0);
+        let mut b = ChaosState::new(&rt, 4, 0);
+        for round in 0..40 {
+            let t = round as f64 * 0.05;
+            assert_eq!(a.begin_round(t), b.begin_round(t));
+            assert_eq!(a.offline(), b.offline());
+            assert_eq!(a.rng_mut().next_u64(), b.rng_mut().next_u64());
+        }
+        // Lane forks draw distinct streams off the same schedule.
+        let mut c = ChaosState::new(&rt, 4, 1);
+        assert_ne!(a.rng_mut().next_u64(), c.rng_mut().next_u64());
+        // Outage of expert 1 covers rounds 10..30 at 50 ms.
+        a.begin_round(0.6);
+        assert!(a.offline()[1] && !a.offline()[0]);
+        a.begin_round(1.6);
+        assert!(!a.offline()[1]);
+    }
+
+    #[test]
+    fn report_merges_and_digests_deterministically() {
+        let mut a = ChaosReport {
+            failed: 2,
+            retries: 5,
+            forced_exclusions: 7,
+            crashed_cells: 1,
+            ..ChaosReport::default()
+        };
+        a.churn_latency.record(0.2);
+        let mut b = ChaosReport::default();
+        b.churn_latency.record(0.4);
+        a.merge(&b);
+        assert_eq!((a.failed, a.retries, a.churn_latency.count()), (2, 5, 2));
+        assert!(a.availability(100, 98) < 1.0);
+        let digest = |r: &ChaosReport| {
+            let mut h = Fnv1a::new();
+            r.digest_into(&mut h);
+            h.finish()
+        };
+        let d1 = digest(&a);
+        assert_eq!(d1, digest(&a.clone()));
+        a.failed += 1;
+        assert_ne!(d1, digest(&a));
+        let j = a.to_json(100, 97);
+        assert_eq!(j.get("failed").as_f64(), Some(3.0));
+        assert_eq!(j.get("availability").as_f64(), Some(0.97));
+    }
+}

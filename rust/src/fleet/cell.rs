@@ -27,6 +27,7 @@
 
 use super::report::CellReport;
 use crate::channel::ChannelModel;
+use crate::chaos::{ChaosReport, ChaosRuntime, ChaosState};
 use crate::coordinator::ServePolicy;
 use crate::energy::{EnergyLedger, EnergyModel};
 use crate::jesa::JesaOptions;
@@ -50,6 +51,9 @@ pub enum CellState {
     Draining,
     /// Drained and idle.
     Drained,
+    /// Failed hard mid-run (chaos): the queue was lost instantly and the
+    /// fleet re-routed the orphans; the cell serves nothing further.
+    Crashed,
 }
 
 impl CellState {
@@ -59,6 +63,7 @@ impl CellState {
             CellState::Active => "active",
             CellState::Draining => "draining",
             CellState::Drained => "drained",
+            CellState::Crashed => "crashed",
         }
     }
 }
@@ -105,6 +110,10 @@ pub struct CellConfig {
     ///
     /// [`ServeOptions::record_completions`]: crate::serve::ServeOptions::record_completions
     pub record_completions: bool,
+    /// Resolved failure-injection schedule, fleet-wide; each cell forks
+    /// its own chaos RNG stream by cell id so lane-parallel execution
+    /// draws identically to sequential.
+    pub chaos: Option<ChaosRuntime>,
 }
 
 /// One serving lane of the fleet.
@@ -135,6 +144,7 @@ pub struct Cell {
     fallbacks: usize,
     tokens: u64,
     cache_hits: usize,
+    chaos: Option<ChaosState>,
 }
 
 impl Cell {
@@ -160,6 +170,7 @@ impl Cell {
             seed: cc.solver_seed ^ 0x1E5A,
             ..JesaOptions::default()
         };
+        let chaos = cc.chaos.as_ref().map(|rt| ChaosState::new(rt, k, cc.id as u64));
         Self {
             id: cc.id,
             state: CellState::Warming,
@@ -188,6 +199,7 @@ impl Cell {
             fallbacks: 0,
             tokens: 0,
             cache_hits: 0,
+            chaos,
         }
     }
 
@@ -324,9 +336,35 @@ impl Cell {
 
     /// Stop accepting new arrivals; the backlog still gets served.
     pub fn drain(&mut self) {
-        if self.state != CellState::Drained {
+        if self.state != CellState::Drained && self.state != CellState::Crashed {
             self.state = CellState::Draining;
         }
+    }
+
+    /// Fail hard (chaos cell crash): unlike a drain, the backlog is
+    /// *lost* — every pending query is returned to the fleet so the
+    /// router can land it elsewhere (or shed it), and the cell serves
+    /// nothing further. Shed accounting here is untouched; a returned
+    /// orphan is only ever shed by the cell it re-routes to.
+    pub fn crash(&mut self) -> Vec<Arrival> {
+        self.state = CellState::Crashed;
+        self.queue.take_all()
+    }
+
+    /// Admit a query orphaned by another cell's crash (time-ordered
+    /// insert — the orphan is usually older than this queue's tail);
+    /// sheds on capacity exactly like a fresh arrival.
+    pub fn push_rerouted(&mut self, arrival: Arrival) -> bool {
+        self.routed += 1;
+        self.queue.push_rerouted(arrival)
+    }
+
+    /// Count a crash orphan that could not land anywhere (no accepting
+    /// cell) as shed at this cell — the router's fallback target — so
+    /// conservation holds.
+    pub fn shed_orphan(&mut self, arrival: Arrival) {
+        self.routed += 1;
+        self.queue.shed_forced(arrival.query.id);
     }
 
     /// Update the cell's radio regime (mobility-driven mean path loss)
@@ -388,6 +426,10 @@ impl Cell {
             return;
         }
         let batch = self.queue.take_batch();
+        if let Some(cs) = self.chaos.as_mut() {
+            cs.begin_round(start);
+            self.jesa.offline = cs.offline().to_vec();
+        }
         let ctx = RoundContext {
             energy: &self.energy,
             compute: &self.compute,
@@ -407,6 +449,7 @@ impl Cell {
             cache,
             &mut self.ledger,
             &mut self.pattern,
+            self.chaos.as_mut(),
         );
         let (latency_s, hits) = (rs.latency_s, rs.cache_hits);
         self.metrics.observe_s("round_wall", t_round.elapsed().as_secs_f64());
@@ -430,7 +473,21 @@ impl Cell {
             tokens: round_tokens,
             cache_hits: hits,
         });
-        for a in &batch {
+        for (slot, a) in batch.iter().enumerate() {
+            // Chaos-only `failed` disposition: a lost transmission past
+            // the retry budget hashes with a sentinel done-marker and is
+            // neither completed nor shed (see the serve engine's loop —
+            // the two lanes must account identically).
+            if rs.failed_slots.get(slot).copied().unwrap_or(false) {
+                self.completion_hash.write_u64(a.query.id);
+                self.completion_hash.write_u64(a.at_s.to_bits());
+                self.completion_hash.write_u64(start.to_bits());
+                self.completion_hash.write_u64(u64::MAX);
+                if let Some(cs) = self.chaos.as_mut() {
+                    cs.note_failed();
+                }
+                continue;
+            }
             let c = Completion {
                 id: a.query.id,
                 domain: a.query.domain,
@@ -443,6 +500,9 @@ impl Cell {
             self.completion_hash.write_u64(c.start_s.to_bits());
             self.completion_hash.write_u64(c.done_s.to_bits());
             self.latency.record(c.latency_s());
+            if let Some(cs) = self.chaos.as_mut() {
+                cs.record_completion(c.latency_s());
+            }
             self.completed += 1;
             if self.record_completions {
                 self.completions.push(c);
@@ -474,5 +534,12 @@ impl Cell {
     /// `(queue_full, deadline)` shed counters.
     pub fn shed_counts(&self) -> (usize, usize) {
         self.queue.shed_counts()
+    }
+
+    /// This lane's degraded-mode QoS counters — `None` on a chaos-free
+    /// run. The fleet merges these (ascending cell order) into the
+    /// report-level [`ChaosReport`].
+    pub fn chaos_report(&self) -> Option<ChaosReport> {
+        self.chaos.as_ref().map(|cs| cs.report())
     }
 }

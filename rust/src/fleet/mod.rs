@@ -83,6 +83,7 @@ pub use handover::{CellLayout, Mobility, MobilityConfig};
 pub use report::{CellReport, FleetReport};
 pub use router::{RoutePolicy, Router};
 
+use crate::chaos::{ChaosReport, ChaosRuntime};
 use crate::coordinator::ServePolicy;
 use crate::energy::{EnergyBreakdown, EnergyModel};
 use crate::metrics::{Metrics, SelectionPattern};
@@ -153,6 +154,12 @@ pub struct FleetOptions {
     /// identical either way. See
     /// [`ServeOptions::record_completions`](crate::serve::ServeOptions).
     pub record_completions: bool,
+    /// Resolved failure-injection schedule ([`crate::chaos`]): expert
+    /// outages and link faults replicate into every cell (per-cell chaos
+    /// RNG streams fork by cell id), cell crashes apply on the lockstep
+    /// event loop. `None` (the default) is perfect infrastructure with
+    /// bit-identical pre-chaos reports.
+    pub chaos: Option<ChaosRuntime>,
 }
 
 impl FleetOptions {
@@ -176,6 +183,7 @@ impl FleetOptions {
             warmup_rounds: 2,
             drain_at: Vec::new(),
             record_completions: true,
+            chaos: None,
         }
     }
 }
@@ -251,6 +259,12 @@ impl FleetEngine {
             assert!(cell < opts.cells, "drain target {cell} out of range");
             assert!(at_s >= 0.0, "drain time must be non-negative");
         }
+        if let Some(chaos) = &opts.chaos {
+            for &(cell, at_s) in &chaos.crashes {
+                assert!(cell < opts.cells, "crash target {cell} out of range");
+                assert!(at_s >= 0.0, "crash time must be non-negative");
+            }
+        }
         if opts.cache_capacity > 0 {
             opts.quant.validate();
         }
@@ -282,9 +296,14 @@ impl FleetEngine {
     /// Whether routing is independent of round execution, making the
     /// fully lane-parallel replay valid: round-robin dispatch with no
     /// scheduled drains (a drain's `Drained` transition depends on queue
-    /// state, which depends on execution).
+    /// state, which depends on execution) and no scheduled cell crashes
+    /// (a crash re-routes its orphans through live queue state). Expert
+    /// outages and link faults are lane-safe — time-driven masks and
+    /// per-cell RNG streams consumed in cell-local round order.
     fn static_routing(&self) -> bool {
-        self.opts.route == RoutePolicy::RoundRobin && self.opts.drain_at.is_empty()
+        self.opts.route == RoutePolicy::RoundRobin
+            && self.opts.drain_at.is_empty()
+            && self.opts.chaos.as_ref().map_or(true, |c| c.crashes.is_empty())
     }
 
     /// Run one fleet simulation over a global traffic stream.
@@ -349,6 +368,7 @@ impl FleetEngine {
                             .wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(c as u64 + 1)),
                         fading_rho: self.opts.fading_rho,
                         record_completions: self.opts.record_completions,
+                        chaos: self.opts.chaos.clone(),
                     },
                 );
                 cell.warm(self.opts.warmup_rounds);
@@ -415,6 +435,13 @@ impl FleetEngine {
         let mut rounds = 0usize;
         let mut tokens = 0u64;
         let mut fallbacks = 0usize;
+        // Degraded-mode QoS: per-lane counters merge in the same
+        // ascending cell order as everything else (LatencyStats merge is
+        // commutative on its integer buckets, so the merged churn sketch
+        // is identical in both execution modes).
+        let mut chaos_total: Option<ChaosReport> =
+            self.opts.chaos.as_ref().map(|_| ChaosReport::default());
+        let mut crashed_cells = 0usize;
         let mut cell_reports: Vec<CellReport> = Vec::with_capacity(cells.len());
         for slot in &cells {
             let cell = slot.lock().unwrap();
@@ -464,7 +491,16 @@ impl FleetEngine {
             rounds += cr.rounds;
             tokens += cr.tokens;
             fallbacks += cell.fallbacks();
+            if let (Some(total), Some(lane)) = (chaos_total.as_mut(), cell.chaos_report()) {
+                total.merge(&lane);
+            }
+            if cell.state() == CellState::Crashed {
+                crashed_cells += 1;
+            }
             cell_reports.push(cr);
+        }
+        if let Some(total) = chaos_total.as_mut() {
+            total.crashed_cells = crashed_cells;
         }
         metrics.inc("handovers", sessions.handovers as u64);
         obs.on_cache(&cache.stats());
@@ -487,6 +523,7 @@ impl FleetEngine {
             fallbacks,
             cells: cell_reports,
             latency,
+            chaos: chaos_total,
             completions,
             pattern,
             metrics,
@@ -558,6 +595,22 @@ impl FleetEngine {
         let mut drains = self.opts.drain_at.clone();
         drains.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("finite drain times"));
         let mut next_drain = 0usize;
+        // Chaos cell crashes apply on this loop exactly like drains
+        // (resolve() pre-sorts them; re-sorting keeps hand-built
+        // runtimes safe). Crashes force the lockstep path — see
+        // `static_routing`.
+        let mut crashes: Vec<(usize, f64)> = self
+            .opts
+            .chaos
+            .as_ref()
+            .map(|c| c.crashes.clone())
+            .unwrap_or_default();
+        crashes.sort_by(|a, b| {
+            a.1.partial_cmp(&b.1)
+                .expect("finite crash times")
+                .then(a.0.cmp(&b.0))
+        });
+        let mut next_crash = 0usize;
 
         // Per-cell radio scales are a function of user positions, which
         // only change on whole mobility ticks — recompute them per tick,
@@ -573,6 +626,13 @@ impl FleetEngine {
             while next_drain < drains.len() && drains[next_drain].1 <= t {
                 cells[drains[next_drain].0].lock().unwrap().drain();
                 next_drain += 1;
+            }
+            while next_crash < crashes.len() && crashes[next_crash].1 <= t {
+                let (c, at) = crashes[next_crash];
+                next_crash += 1;
+                self.apply_crash(
+                    c, at, cells, cache, mobility, layout, router, energy, sessions, obs,
+                );
             }
             // Advance the world to this arrival: mobility first, then
             // every cell's radio regime and due rounds — so the router
@@ -643,10 +703,59 @@ impl FleetEngine {
             cells[drains[next_drain].0].lock().unwrap().drain();
             next_drain += 1;
         }
+        while next_crash < crashes.len() {
+            let (c, at) = crashes[next_crash];
+            next_crash += 1;
+            self.apply_crash(
+                c, at, cells, cache, mobility, layout, router, energy, sessions, obs,
+            );
+        }
         for (c, slot) in cells.iter().enumerate() {
             let mut cell = slot.lock().unwrap();
             cell.set_path_scale(scales[c]);
             cell.flush(cache);
+        }
+    }
+
+    /// Apply one scheduled cell crash: serve what legitimately finished
+    /// before the crash instant, lose the rest of the queue, and
+    /// re-route the orphans oldest-first through the normal dispatch
+    /// step (router cursor and session accounting move exactly as for
+    /// fresh arrivals, so the digest contract covers crashes too). An
+    /// orphan whose re-route finds no accepting cell is shed at the
+    /// fallback target — a re-routed query is completed, shed or failed,
+    /// never lost.
+    #[allow(clippy::too_many_arguments)]
+    fn apply_crash(
+        &self,
+        cell_idx: usize,
+        at_s: f64,
+        cells: &[Mutex<Cell>],
+        cache: &SharedSolutionCache,
+        mobility: &Mobility,
+        layout: &CellLayout,
+        router: &mut Router,
+        energy: &EnergyModel,
+        sessions: &mut SessionTracker,
+        obs: &mut dyn EngineObserver,
+    ) {
+        let users = mobility.users();
+        let orphans = {
+            let mut cell = cells[cell_idx].lock().unwrap();
+            cell.advance(at_s, cache);
+            cell.crash()
+        };
+        for orphan in orphans {
+            let views: Vec<LaneView> = cells.iter().map(|s| s.lock().unwrap().view()).collect();
+            let target = self.route_arrival(
+                &orphan, users, &views, mobility, layout, router, energy, sessions, obs,
+            );
+            let mut cell = cells[target].lock().unwrap();
+            if views[target].accepting {
+                cell.push_rerouted(orphan);
+            } else {
+                cell.shed_orphan(orphan);
+            }
         }
     }
 

@@ -1,6 +1,7 @@
 //! Fleet-level aggregation: per-cell snapshots plus the fleet totals,
 //! tail latencies, shed/handover rates and load-imbalance indices.
 
+use crate::chaos::ChaosReport;
 use crate::energy::EnergyBreakdown;
 use crate::metrics::{Metrics, SelectionPattern};
 use crate::serve::engine::Completion;
@@ -67,6 +68,11 @@ pub struct FleetReport {
     /// Streaming end-to-end latency statistics, merged across cells in
     /// ascending cell order (always populated, O(1) memory).
     pub latency: LatencyStats,
+    /// Degraded-mode QoS under failure injection, merged across cells —
+    /// populated exactly when the run had a chaos schedule
+    /// ([`FleetOptions::chaos`](crate::fleet::FleetOptions::chaos)), so
+    /// chaos-off reports stay bit-identical to pre-chaos builds.
+    pub chaos: Option<ChaosReport>,
     /// All cells' completions (unordered across cells) — populated only
     /// with [`FleetOptions::record_completions`](crate::fleet::FleetOptions::record_completions);
     /// empty on the O(1)-memory default scenario path.
@@ -85,6 +91,23 @@ impl FleetReport {
             0.0
         } else {
             self.shed() as f64 / self.generated as f64
+        }
+    }
+
+    /// Queries that timed out past the retry budget under link chaos
+    /// (the `failed` disposition); 0 on a chaos-free run. Conservation:
+    /// `generated == completed + shed() + failed()`.
+    pub fn failed(&self) -> usize {
+        self.chaos.as_ref().map_or(0, |c| c.failed)
+    }
+
+    /// Completed fraction of the offered load — 1.0 on a clean run,
+    /// degraded by shedding and chaos failures.
+    pub fn availability(&self) -> f64 {
+        if self.generated == 0 {
+            1.0
+        } else {
+            self.completed as f64 / self.generated as f64
         }
     }
 
@@ -221,6 +244,11 @@ impl FleetReport {
             h.write_u64(c.completions_digest);
             h.write_u64(c.path_scale.to_bits());
         }
+        // Chaos counters fold in only when a schedule ran: a chaos-off
+        // run digests exactly as a pre-chaos build.
+        if let Some(c) = &self.chaos {
+            c.digest_into(&mut h);
+        }
         h.finish()
     }
 
@@ -253,7 +281,7 @@ impl FleetReport {
                 })
                 .collect(),
         );
-        Json::obj(vec![
+        let mut fields = vec![
             ("engine", Json::Str("fleet".to_string())),
             ("route", Json::Str(self.route.clone())),
             ("process", Json::Str(self.process.clone())),
@@ -277,7 +305,13 @@ impl FleetReport {
             ("latency", self.latency.to_json()),
             ("cells", cells),
             ("digest", Json::Str(format!("0x{:016x}", self.digest()))),
-        ])
+        ];
+        // Additive, chaos-on only: the payload of a chaos-off run is
+        // byte-identical to a pre-chaos build (no schema bump needed).
+        if let Some(c) = &self.chaos {
+            fields.push(("chaos", c.to_json(self.generated, self.completed)));
+        }
+        Json::obj(fields)
     }
 
     /// Human-readable summary (the `dmoe fleet` output).
@@ -340,6 +374,10 @@ impl FleetReport {
             self.energy_per_query_j(),
             self.fallbacks,
         ));
+        if let Some(c) = &self.chaos {
+            out.push_str(&c.render_line(self.generated, self.completed));
+            out.push('\n');
+        }
         out.push_str(&format!("report digest 0x{:016x}\n", self.digest()));
         out.push_str("cell  state     routed  done    shed  rounds  hits   p50 s   p99 s  energy J  scale\n");
         for c in &self.cells {

@@ -11,7 +11,8 @@
 //!   queue + cache + quantizer + optional fleet) with a typed builder, a
 //!   named preset library (`paper-baseline`, `urban-macro-jsq`,
 //!   `flash-crowd-mmpp`, `handover-storm`,
-//!   `cache-cold-heterogeneous-gamma`, `low-qos-energy-saver`),
+//!   `cache-cold-heterogeneous-gamma`, `low-qos-energy-saver`,
+//!   `expert-flap`, `cell-crash-storm`),
 //!   bit-identical JSON round-trips, and the unified execution facade:
 //!   the [`Engine`](scenario::Engine) trait + [`RunReport`](scenario::RunReport)
 //!   both engines implement, plus streaming
@@ -36,6 +37,13 @@
 //!   cache (cross-cell hits). Cells execute lane-parallel on the
 //!   work-stealing executor with a bit-identical report (see the fleet
 //!   module's concurrency model / determinism contract).
+//! * [`chaos`] — scenario-driven failure & churn injection: a seeded,
+//!   schema-versioned [`ChaosSpec`](chaos::ChaosSpec) scheduling expert
+//!   outages (driven into the DES forced-exclusion mask), transient
+//!   link faults with retry/backoff/timeout semantics, and cell crashes
+//!   with router-mediated re-routing — reported as degraded-mode QoS
+//!   (availability, failed queries, retries, p99-under-churn) without
+//!   perturbing chaos-off digests.
 //!
 //! # The optimization core
 //!
@@ -94,6 +102,7 @@
 pub mod assignment;
 pub mod bench_harness;
 pub mod channel;
+pub mod chaos;
 pub mod config;
 pub mod coordinator;
 pub mod energy;

@@ -109,6 +109,7 @@ const RUN_FLAGS: &[&str] = &[
     "save-scenario",
     "pattern",
     "list",
+    "lane-workers",
 ];
 /// Telemetry vocabulary, honored by all three serving subcommands:
 /// `--live` (periodic status line), `--artifact-dir DIR` (schema-
@@ -380,6 +381,12 @@ fn run_scenario(args: &Args) -> Result<()> {
         match seed.parse() {
             Ok(seed) => s.system.workload.seed = seed,
             Err(_) => dmoe::bail!("--seed expects an integer, got '{seed}'"),
+        }
+    }
+    if args.get("lane-workers").is_some() {
+        match s.fleet.as_mut() {
+            Some(f) => f.lane_workers = Some(args.get_usize("lane-workers", 0)),
+            None => dmoe::bail!("--lane-workers needs a fleet-shaped scenario"),
         }
     }
     if args.flag("verify") {
@@ -802,6 +809,8 @@ USAGE: dmoe <subcommand> [--flags]
              --scenario NAME|FILE.json   preset name or scenario file
              --list                      list the preset library
              --queries N --seed N        quick overrides
+             --lane-workers N            fleet lane pool override
+                                         (0 = sequential lanes)
              --verify                    check the JSON round-trip
              --save-scenario FILE        dump the canonical spec
              --live                      periodic one-line status (stderr)
@@ -811,8 +820,8 @@ USAGE: dmoe <subcommand> [--flags]
              (telemetry flags also work on serve/fleet)
   sweep      run a scenario grid from a SweepSpec JSON document
              --spec FILE.json            base scenario + axes (cells,
-                                         selector, process, rate,
-                                         gamma0, seed)
+                                         chaos, selector, process,
+                                         rate, gamma0, seed)
              --out DIR                   sweep root (default sweep-NAME);
                                          per-point artifacts under
                                          DIR/points/pNNN plus a sweep

@@ -15,7 +15,7 @@
 
 pub mod sim;
 
-pub use sim::{simulate_round, ComputeModel, RoundTimeline};
+pub use sim::{simulate_round, simulate_round_chaos, ChaosOutcome, ComputeModel, LinkChaos, RoundTimeline};
 
 use crate::channel::{ChannelState, LinkId};
 use crate::jesa::RoundSolution;

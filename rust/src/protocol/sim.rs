@@ -23,6 +23,7 @@
 
 use crate::channel::{ChannelState, LinkId};
 use crate::jesa::{payload_matrix, RoundSolution};
+use crate::util::rng::Xoshiro256pp;
 
 /// Per-node compute model: seconds per routed token.
 #[derive(Debug, Clone)]
@@ -257,6 +258,193 @@ pub fn simulate_round(
     }
 }
 
+/// Transient-link-fault regime for [`simulate_round_chaos`]: each remote
+/// transmission attempt fails independently with `fail_prob`; a failed
+/// attempt re-enters the timeline after `backoff_s`, and more than
+/// `max_retries` failures time the transmission out.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkChaos {
+    pub fail_prob: f64,
+    pub max_retries: usize,
+    pub backoff_s: f64,
+}
+
+/// What the faults did to one round: retry count and which sources lost
+/// a forward or backward leg past the retry budget (their queries take
+/// the `failed` disposition).
+#[derive(Debug, Clone)]
+pub struct ChaosOutcome {
+    /// Failed attempts that re-entered the timeline (across all links).
+    pub retries: u64,
+    /// `failed_sources[i]`: source `i` never got all results back.
+    pub failed_sources: Vec<bool>,
+}
+
+/// Failed attempts before success on one link, or `None` past the retry
+/// budget. One `next_f64` per attempt — the draw count is a
+/// deterministic function of the RNG stream, never of wall clock.
+fn draw_attempts(chaos: &LinkChaos, rng: &mut Xoshiro256pp) -> Option<usize> {
+    let mut fails = 0usize;
+    loop {
+        if rng.next_f64() >= chaos.fail_prob {
+            return Some(fails);
+        }
+        fails += 1;
+        if fails > chaos.max_retries {
+            return None;
+        }
+    }
+}
+
+/// [`simulate_round`] under transient link faults: the same three-stage
+/// DAG, but every remote forward/backward transmission draws a retry
+/// count from `rng`. A transmission with `f` failed attempts delivers at
+/// `(f+1)·tx + f·backoff`; past `max_retries` it times out — a lost
+/// forward leg keeps its tokens out of the destination's batch, a lost
+/// leg in either direction marks the source failed. In-situ results
+/// never transit a link and cannot fail (the offline-fallback path thus
+/// degrades to a fault-free selection). With `fail_prob == 0` the
+/// timeline is identical to [`simulate_round`] (no draws consumed —
+/// callers gate on the chaos spec instead of passing a zero regime).
+pub fn simulate_round_chaos(
+    state: &ChannelState,
+    solution: &RoundSolution,
+    compute: &ComputeModel,
+    s0_bytes: f64,
+    chaos: &LinkChaos,
+    rng: &mut Xoshiro256pp,
+) -> (RoundTimeline, ChaosOutcome) {
+    let k = state.experts();
+    assert_eq!(compute.per_token_s.len(), k);
+    let payloads = payload_matrix(k, &solution.selections, s0_bytes);
+
+    let link_rate = |i: usize, j: usize| -> f64 {
+        match solution.allocation.get(i, j) {
+            Some(m) => state.rate(i, j, m),
+            None => state.best_subcarrier(i, j).1,
+        }
+    };
+
+    let mut events = Vec::new();
+    let mut retries = 0u64;
+    let mut failed = vec![false; k];
+    let mut lost = vec![vec![false; k]; k]; // forward leg (i → j) timed out
+
+    // Stage 1: forward transfers, each with its retry draw.
+    let mut arrival = vec![vec![0.0f64; k]; k];
+    for l in LinkId::all(k) {
+        let s = payloads[l.from][l.to];
+        if s > 0.0 {
+            let r = link_rate(l.from, l.to);
+            assert!(r > 0.0, "payload on dead link ({}, {})", l.from, l.to);
+            let tx = if r.is_finite() { s * 8.0 / r } else { 0.0 };
+            match draw_attempts(chaos, rng) {
+                Some(fails) => {
+                    retries += fails as u64;
+                    let t = tx * (fails + 1) as f64 + chaos.backoff_s * fails as f64;
+                    arrival[l.from][l.to] = t;
+                    events.push(Event::ForwardDone {
+                        from: l.from,
+                        to: l.to,
+                        at_s: t,
+                    });
+                }
+                None => {
+                    retries += chaos.max_retries as u64;
+                    lost[l.from][l.to] = true;
+                    failed[l.from] = true;
+                }
+            }
+        }
+    }
+
+    // Stage 2: compute over the tokens that actually arrived.
+    let mut tokens_at = vec![0usize; k];
+    for (i, row) in solution.selections.iter().enumerate() {
+        for sel in row {
+            for &j in &sel.selected {
+                if i == j || !lost[i][j] {
+                    tokens_at[j] += 1;
+                }
+            }
+        }
+    }
+    let mut compute_done = vec![0.0f64; k];
+    for j in 0..k {
+        if tokens_at[j] == 0 {
+            continue;
+        }
+        let start = (0..k)
+            .filter(|&i| i != j && !lost[i][j])
+            .map(|i| arrival[i][j])
+            .fold(0.0f64, f64::max);
+        let dur = tokens_at[j] as f64 * compute.per_token_s[j];
+        compute_done[j] = start + dur;
+        events.push(Event::ComputeDone {
+            expert: j,
+            at_s: compute_done[j],
+        });
+    }
+
+    // Stage 3: backward transfers for the legs that made it forward,
+    // each with its own retry draw.
+    let mut source_done = vec![0.0f64; k];
+    for l in LinkId::all(k) {
+        let s = payloads[l.from][l.to];
+        if s > 0.0 && !lost[l.from][l.to] {
+            let r = link_rate(l.from, l.to);
+            let tx = if r.is_finite() { s * 8.0 / r } else { 0.0 };
+            match draw_attempts(chaos, rng) {
+                Some(fails) => {
+                    retries += fails as u64;
+                    let t =
+                        compute_done[l.to] + tx * (fails + 1) as f64 + chaos.backoff_s * fails as f64;
+                    source_done[l.from] = source_done[l.from].max(t);
+                    events.push(Event::BackwardDone {
+                        from: l.to,
+                        to: l.from,
+                        at_s: t,
+                    });
+                }
+                None => {
+                    retries += chaos.max_retries as u64;
+                    failed[l.from] = true;
+                }
+            }
+        }
+    }
+    for i in 0..k {
+        if solution.selections[i].iter().any(|s| s.selected.contains(&i)) {
+            source_done[i] = source_done[i].max(compute_done[i]);
+        }
+    }
+
+    events.sort_by(|a, b| a.time().partial_cmp(&b.time()).unwrap());
+    // The server stays busy until the last event even when the terminal
+    // delivery was lost, so the round latency is the timeline's end (in
+    // the fault-free case this equals the max source_done exactly).
+    let round_latency_s = events
+        .iter()
+        .map(Event::time)
+        .fold(source_done.iter().copied().fold(0.0, f64::max), f64::max);
+    let critical_expert = (0..k)
+        .filter(|&j| tokens_at[j] > 0)
+        .max_by(|&a, &b| compute_done[a].partial_cmp(&compute_done[b]).unwrap());
+
+    (
+        RoundTimeline {
+            events,
+            source_done_s: source_done,
+            round_latency_s,
+            critical_expert,
+        },
+        ChaosOutcome {
+            retries,
+            failed_sources: failed,
+        },
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -435,6 +623,58 @@ mod tests {
         assert_eq!(path.len(), 1);
         assert!(matches!(path[0], Event::ComputeDone { expert: 0, .. }));
         assert!((path[0].time() - tl.round_latency_s).abs() < 1e-15);
+    }
+
+    #[test]
+    fn chaos_zero_fail_prob_matches_fault_free_timeline() {
+        let (state, sol) = solved_round(4, 32, 4, 11);
+        let compute = ComputeModel::uniform(4, 1e-3);
+        let clean = simulate_round(&state, &sol, &compute, 8192.0);
+        let chaos = LinkChaos {
+            fail_prob: 0.0,
+            max_retries: 2,
+            backoff_s: 0.01,
+        };
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let (tl, outcome) = simulate_round_chaos(&state, &sol, &compute, 8192.0, &chaos, &mut rng);
+        assert_eq!(outcome.retries, 0);
+        assert!(outcome.failed_sources.iter().all(|&f| !f));
+        assert_eq!(tl.events, clean.events);
+        assert_eq!(tl.round_latency_s.to_bits(), clean.round_latency_s.to_bits());
+        assert_eq!(tl.source_done_s, clean.source_done_s);
+        assert_eq!(tl.critical_expert, clean.critical_expert);
+    }
+
+    #[test]
+    fn chaos_draws_are_deterministic_and_faults_surface() {
+        let (state, sol) = solved_round(4, 32, 4, 13);
+        let compute = ComputeModel::uniform(4, 1e-3);
+        let chaos = LinkChaos {
+            fail_prob: 0.6,
+            max_retries: 1,
+            backoff_s: 0.02,
+        };
+        let run = |seed: u64| {
+            let mut rng = Xoshiro256pp::seed_from_u64(seed);
+            simulate_round_chaos(&state, &sol, &compute, 8192.0, &chaos, &mut rng)
+        };
+        // Same RNG seed → bit-identical timeline and outcome.
+        let (a, oa) = run(7);
+        let (b, ob) = run(7);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.round_latency_s.to_bits(), b.round_latency_s.to_bits());
+        assert_eq!(oa.retries, ob.retries);
+        assert_eq!(oa.failed_sources, ob.failed_sources);
+        // At 60% per-attempt failure, a handful of seeds must surface
+        // both retried deliveries and timed-out sources.
+        let (mut saw_retry, mut saw_failed) = (false, false);
+        for seed in 1..=8 {
+            let (_, o) = run(seed);
+            saw_retry |= o.retries > 0;
+            saw_failed |= o.failed_sources.iter().any(|&f| f);
+        }
+        assert!(saw_retry, "no seed produced a retry at fail_prob 0.6");
+        assert!(saw_failed, "no seed timed a source out at fail_prob 0.6");
     }
 
     #[test]

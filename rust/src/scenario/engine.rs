@@ -13,6 +13,7 @@
 
 use super::observer::{EngineObserver, NullObserver};
 use super::spec::Scenario;
+use crate::chaos::ChaosReport;
 use crate::energy::EnergyBreakdown;
 use crate::fleet::{CellLayout, FleetEngine, FleetOptions, FleetReport, Mobility};
 use crate::metrics::SelectionPattern;
@@ -91,6 +92,30 @@ impl RunReport {
         match self {
             RunReport::Serve(r) => r.rounds,
             RunReport::Fleet(r) => r.rounds,
+        }
+    }
+
+    /// Degraded-mode QoS counters — `Some` exactly when the scenario
+    /// carried a chaos schedule (see [`crate::chaos`]).
+    pub fn chaos(&self) -> Option<&ChaosReport> {
+        match self {
+            RunReport::Serve(r) => r.chaos.as_ref(),
+            RunReport::Fleet(r) => r.chaos.as_ref(),
+        }
+    }
+
+    /// Queries lost to link-fault timeouts (the `failed` disposition);
+    /// 0 on a chaos-free run. Conservation:
+    /// `generated == completed + shed + failed`.
+    pub fn failed(&self) -> usize {
+        self.chaos().map_or(0, |c| c.failed)
+    }
+
+    /// Completed fraction of the offered load (1.0 on a clean run).
+    pub fn availability(&self) -> f64 {
+        match self {
+            RunReport::Serve(r) => r.availability(),
+            RunReport::Fleet(r) => r.availability(),
         }
     }
 
@@ -373,6 +398,14 @@ pub fn prepare_opts(scenario: &Scenario, popts: &PrepareOptions) -> Result<Prepa
     let rate = scenario.traffic.rate.resolve(capacity_qps);
     traffic.process = scenario.traffic.process.build(rate, round_s);
 
+    // Resolve the chaos schedule against the calibrated round latency
+    // (round-relative durations become seconds here) and the scenario
+    // seed — same schedule however many times the scenario is prepared.
+    let chaos = match &scenario.chaos {
+        None => None,
+        Some(c) => Some(c.resolve(round_s, cfg.workload.seed)?),
+    };
+
     let queue = scenario.queue.build(k, round_s);
     let quant = scenario.quant.build();
     let handle = match &scenario.fleet {
@@ -385,6 +418,7 @@ pub fn prepare_opts(scenario: &Scenario, popts: &PrepareOptions) -> Result<Prepa
                 workers: scenario.workers.unwrap_or_else(default_workers),
                 seed: cfg.workload.seed ^ 0x5E47E,
                 record_completions: popts.record_completions,
+                chaos,
                 ..ServeOptions::new(policy, queue)
             };
             EngineHandle::Serve(ServeEngine::new(cfg, opts))
@@ -414,6 +448,7 @@ pub fn prepare_opts(scenario: &Scenario, popts: &PrepareOptions) -> Result<Prepa
             fopts.fading_rho = f.fading_rho;
             fopts.drain_at = f.drains.clone();
             fopts.record_completions = popts.record_completions;
+            fopts.chaos = chaos;
             EngineHandle::Fleet(FleetEngine::new(cfg, fopts))
         }
     };

@@ -27,7 +27,8 @@
 //! * [`preset`](mod@preset) — the named preset library
 //!   ([`PRESET_NAMES`]): `paper-baseline`, `urban-macro-jsq`,
 //!   `flash-crowd-mmpp`, `handover-storm`,
-//!   `cache-cold-heterogeneous-gamma`, `low-qos-energy-saver`.
+//!   `cache-cold-heterogeneous-gamma`, `low-qos-energy-saver`,
+//!   `expert-flap`, `cell-crash-storm`.
 //! * [`engine`] — the [`Engine`] trait + [`RunReport`] enum both engines
 //!   implement, and [`prepare`]/[`run`]/[`run_observed`].
 //! * [`observer`] — the [`EngineObserver`] hook trait (round / shed /

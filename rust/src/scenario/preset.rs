@@ -12,11 +12,14 @@
 //! | `handover-storm` | fleet | vehicular users on a dense grid, channel-aware routing |
 //! | `cache-cold-heterogeneous-gamma` | serve | noisy many-domain gates vs a tiny fixed-grid cache |
 //! | `low-qos-energy-saver` | serve | lowered QoS + greedy selector on a diurnal curve |
+//! | `expert-flap` | serve | flapping expert outages + lossy links: degraded-mode QoS |
+//! | `cell-crash-storm` | fleet | mid-run cell crashes with re-routing under expert churn |
 
 use super::spec::{
     CacheSpec, Dur, FleetSpec, PolicySpec, ProcessSpec, QuantSpec, QueueSpec, RateSpec, Scenario,
     TrafficSpec,
 };
+use crate::chaos::{ChaosSpec, ExpertOutage, LinkFaultSpec};
 use crate::config::SystemConfig;
 use crate::fleet::{MobilityConfig, RoutePolicy};
 use crate::selection::SelectorSpec;
@@ -31,6 +34,8 @@ pub const PRESET_NAMES: &[&str] = &[
     "handover-storm",
     "cache-cold-heterogeneous-gamma",
     "low-qos-energy-saver",
+    "expert-flap",
+    "cell-crash-storm",
 ];
 
 /// Resolve a preset by name. The error lists every known preset.
@@ -42,6 +47,8 @@ pub fn preset(name: &str) -> Result<Scenario> {
         "handover-storm" => handover_storm(),
         "cache-cold-heterogeneous-gamma" => cache_cold_heterogeneous_gamma(),
         "low-qos-energy-saver" => low_qos_energy_saver(),
+        "expert-flap" => expert_flap(),
+        "cell-crash-storm" => cell_crash_storm(),
         other => {
             return Err(Error::msg(format!(
                 "unknown scenario preset '{other}' (known: {})",
@@ -204,6 +211,89 @@ fn low_qos_energy_saver() -> Result<Scenario> {
         .build()
 }
 
+/// The chaos reference workload: two experts flap through overlapping
+/// outage windows while every remote transmission fails with 12%
+/// probability (2 retries, quarter-round backoff). A short smoke run
+/// must surface availability < 1.0, nonzero retries/failed queries, and
+/// nonzero forced exclusions — ci.sh gates on its digest reproducing.
+fn expert_flap() -> Result<Scenario> {
+    Scenario::builder("expert-flap")
+        .system(SystemConfig::paper_energy())
+        .policy(PolicySpec::jesa(0.8, 2))
+        .traffic(TrafficSpec {
+            queries: 3_000,
+            domains: 8,
+            tokens_per_query: 4,
+            process: ProcessSpec::Poisson,
+            rate: RateSpec::Utilization(0.7),
+            ..TrafficSpec::default()
+        })
+        .chaos(ChaosSpec {
+            seed: 11,
+            expert_outages: vec![
+                ExpertOutage {
+                    expert: 2,
+                    down_at: Dur::Rounds(4.0),
+                    up_at: Dur::Rounds(40.0),
+                },
+                ExpertOutage {
+                    expert: 5,
+                    down_at: Dur::Rounds(25.0),
+                    up_at: Dur::Rounds(90.0),
+                },
+                ExpertOutage {
+                    expert: 2,
+                    down_at: Dur::Rounds(120.0),
+                    up_at: Dur::Rounds(180.0),
+                },
+            ],
+            link: Some(LinkFaultSpec {
+                fail_prob: 0.18,
+                max_retries: 1,
+                backoff: Dur::Rounds(0.25),
+            }),
+            ..ChaosSpec::default()
+        })
+        .build()
+}
+
+/// The fleet under fire: a 4-cell JSQ grid loses two cells mid-run
+/// (queued queries re-route or shed — never vanish) while an expert
+/// outage degrades every surviving cell's selection. Exercises crash
+/// draining, router fallback, and the seq-vs-parallel chaos digest gate.
+fn cell_crash_storm() -> Result<Scenario> {
+    Scenario::builder("cell-crash-storm")
+        .policy(PolicySpec::jesa(0.8, 2))
+        .traffic(TrafficSpec {
+            queries: 4_000,
+            rate: RateSpec::Utilization(0.6),
+            ..TrafficSpec::default()
+        })
+        .fleet(FleetSpec {
+            cells: 4,
+            route: RoutePolicy::JoinShortestQueue,
+            spacing_m: 250.0,
+            fading_rho: 0.9,
+            mobility: MobilityConfig {
+                users: 64,
+                mean_speed_mps: 1.5,
+                ..MobilityConfig::default()
+            },
+            ..FleetSpec::default()
+        })
+        .chaos(ChaosSpec {
+            seed: 23,
+            expert_outages: vec![ExpertOutage {
+                expert: 3,
+                down_at: Dur::Rounds(3.0),
+                up_at: Dur::Rounds(25.0),
+            }],
+            cell_crashes: vec![(1, Dur::Rounds(6.0)), (3, Dur::Rounds(14.0))],
+            ..ChaosSpec::default()
+        })
+        .build()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -222,6 +312,19 @@ mod tests {
         let err = preset("papier-baseline").unwrap_err();
         let msg = err.to_string();
         assert!(msg.contains("paper-baseline"), "{msg}");
+    }
+
+    #[test]
+    fn chaos_presets_carry_chaos_sections() {
+        let flap = preset("expert-flap").unwrap();
+        let c = flap.chaos.as_ref().expect("expert-flap has chaos");
+        assert!(!c.expert_outages.is_empty() && c.link.is_some());
+        let storm = preset("cell-crash-storm").unwrap();
+        let c = storm.chaos.as_ref().expect("cell-crash-storm has chaos");
+        assert!(!c.cell_crashes.is_empty() && storm.fleet.is_some());
+        // Pre-chaos presets stay chaos-free: their reports and digests
+        // must remain byte-identical to earlier builds.
+        assert!(preset("paper-baseline").unwrap().chaos.is_none());
     }
 
     #[test]

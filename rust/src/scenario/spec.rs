@@ -18,6 +18,7 @@
 //!
 //! [`util::json`]: crate::util::json
 
+use crate::chaos::ChaosSpec;
 use crate::config::SystemConfig;
 use crate::coordinator::ServePolicy;
 use crate::fleet::{MobilityConfig, RoutePolicy};
@@ -138,14 +139,14 @@ impl Dur {
         }
     }
 
-    fn to_json(&self) -> Json {
+    pub(crate) fn to_json(&self) -> Json {
         match *self {
             Dur::Seconds(s) => Json::obj(vec![("s", Json::Num(s))]),
             Dur::Rounds(r) => Json::obj(vec![("rounds", Json::Num(r))]),
         }
     }
 
-    fn from_json(v: &Json, path: &str) -> Result<Dur> {
+    pub(crate) fn from_json(v: &Json, path: &str) -> Result<Dur> {
         check_keys(v, &["s", "rounds"], path)?;
         let obj = v.as_obj().expect("checked above");
         match (obj.get("s"), obj.get("rounds")) {
@@ -161,7 +162,7 @@ impl Dur {
         }
     }
 
-    fn validate(&self, path: &str) -> Result<()> {
+    pub(crate) fn validate(&self, path: &str) -> Result<()> {
         let x = match *self {
             Dur::Seconds(s) => s,
             Dur::Rounds(r) => r,
@@ -1100,6 +1101,9 @@ pub struct Scenario {
     pub workers: Option<usize>,
     /// Present iff the scenario runs the multi-cell fleet engine.
     pub fleet: Option<FleetSpec>,
+    /// Failure/churn injection; absent = perfect infrastructure (and a
+    /// document bit-identical to pre-chaos builds).
+    pub chaos: Option<ChaosSpec>,
 }
 
 impl Scenario {
@@ -1114,6 +1118,7 @@ impl Scenario {
         "quant",
         "workers",
         "fleet",
+        "chaos",
     ];
 
     /// A scenario with every section at its default (serve-shaped,
@@ -1130,6 +1135,7 @@ impl Scenario {
             quant: QuantSpec::default(),
             workers: None,
             fleet: None,
+            chaos: None,
         }
     }
 
@@ -1167,6 +1173,10 @@ impl Scenario {
         if let Some(f) = &self.fleet {
             f.validate("scenario.fleet")?;
         }
+        if let Some(c) = &self.chaos {
+            let cells = self.fleet.as_ref().map_or(1, |f| f.cells);
+            c.validate(k, cells, self.fleet.is_some(), "scenario.chaos")?;
+        }
         Ok(())
     }
 
@@ -1191,6 +1201,9 @@ impl Scenario {
         }
         if let Some(f) = &self.fleet {
             fields.push(("fleet", f.to_json()));
+        }
+        if let Some(c) = &self.chaos {
+            fields.push(("chaos", c.to_json()));
         }
         Json::obj(fields)
     }
@@ -1232,6 +1245,10 @@ impl Scenario {
             Json::Null => None,
             f => Some(FleetSpec::from_json(f, "scenario.fleet")?),
         };
+        let chaos = match v.get("chaos") {
+            Json::Null => None,
+            c => Some(ChaosSpec::from_json(c, "scenario.chaos")?),
+        };
         let scenario = Scenario {
             schema_version,
             name,
@@ -1243,6 +1260,7 @@ impl Scenario {
             quant,
             workers,
             fleet,
+            chaos,
         };
         scenario.validate()?;
         Ok(scenario)
@@ -1311,6 +1329,11 @@ impl ScenarioBuilder {
 
     pub fn fleet(mut self, fleet: FleetSpec) -> Self {
         self.scenario.fleet = Some(fleet);
+        self
+    }
+
+    pub fn chaos(mut self, chaos: ChaosSpec) -> Self {
+        self.scenario.chaos = Some(chaos);
         self
     }
 

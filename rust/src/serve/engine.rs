@@ -28,12 +28,13 @@ use super::cache::{
 use super::queue::{AdmissionQueue, QueueConfig};
 use super::traffic::{Arrival, TrafficConfig, TrafficGenerator};
 use crate::channel::ChannelModel;
+use crate::chaos::{ChaosReport, ChaosRuntime, ChaosState};
 use crate::coordinator::ServePolicy;
 use crate::energy::{EnergyBreakdown, EnergyLedger, EnergyModel};
 use crate::gating::GateScores;
 use crate::jesa::{solve_round, JesaOptions, RoundProblem, RoundSolution};
 use crate::metrics::{Metrics, SelectionPattern};
-use crate::protocol::{simulate_round, ComputeModel, RoundTimeline};
+use crate::protocol::{simulate_round, simulate_round_chaos, ComputeModel, LinkChaos, RoundTimeline};
 use crate::scenario::{CompletionEvent, EngineObserver, NullObserver, RoundEvent, ShedEvent};
 use crate::telemetry::LatencyStats;
 use crate::util::hash::Fnv1a;
@@ -75,6 +76,10 @@ pub struct ServeOptions {
     /// vector (memory grows with completed queries — the scenario
     /// facade's default path turns this off so 10^6+-query runs fit).
     pub record_completions: bool,
+    /// Resolved failure-injection schedule ([`crate::chaos`]); `None`
+    /// (the default) runs on perfect infrastructure and leaves every
+    /// report field and digest bit-identical to a chaos-free build.
+    pub chaos: Option<ChaosRuntime>,
 }
 
 impl ServeOptions {
@@ -90,6 +95,7 @@ impl ServeOptions {
             seed: 0x5E4E_7E11,
             record_timelines: false,
             record_completions: true,
+            chaos: None,
         }
     }
 }
@@ -150,6 +156,10 @@ pub struct ServeReport {
     /// the per-query slice of [`ServeReport::digest`], computed without
     /// retaining the completions.
     pub completion_digest: u64,
+    /// Degraded-mode QoS under failure injection — populated exactly
+    /// when the run had a chaos schedule ([`ServeOptions::chaos`]), so
+    /// chaos-off reports stay bit-identical to pre-chaos builds.
+    pub chaos: Option<ChaosReport>,
     /// Exact per-query records — populated only with
     /// [`ServeOptions::record_completions`] (the debug/accuracy path);
     /// empty on the O(1)-memory default scenario path.
@@ -166,6 +176,23 @@ pub struct ServeReport {
 impl ServeReport {
     pub fn shed(&self) -> usize {
         self.shed_queue_full + self.shed_deadline
+    }
+
+    /// Queries that timed out past the retry budget under link chaos
+    /// (the `failed` disposition); 0 on a chaos-free run. Conservation:
+    /// `generated == completed + shed() + failed()`.
+    pub fn failed(&self) -> usize {
+        self.chaos.as_ref().map_or(0, |c| c.failed)
+    }
+
+    /// Completed fraction of the offered load — 1.0 on a clean run,
+    /// degraded by shedding and chaos failures.
+    pub fn availability(&self) -> f64 {
+        if self.generated == 0 {
+            1.0
+        } else {
+            self.completed as f64 / self.generated as f64
+        }
     }
 
     pub fn shed_rate(&self) -> f64 {
@@ -242,6 +269,11 @@ impl ServeReport {
         // (same words, same order), so the digest is identical whether
         // completions were retained or not.
         h.write_u64(self.completion_digest);
+        // Chaos counters fold in only when a schedule ran: a chaos-off
+        // run digests exactly as a pre-chaos build.
+        if let Some(c) = &self.chaos {
+            c.digest_into(&mut h);
+        }
         h.finish()
     }
 
@@ -251,7 +283,7 @@ impl ServeReport {
     /// artifact manifest's `perf` section) so the payload is
     /// bit-identical across repeated runs.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("engine", Json::Str("serve".to_string())),
             ("process", Json::Str(self.process.clone())),
             ("generated", Json::Num(self.generated as f64)),
@@ -268,7 +300,13 @@ impl ServeReport {
             ("cache_misses", Json::Num(self.cache.misses as f64)),
             ("latency", self.latency.to_json()),
             ("digest", Json::Str(format!("0x{:016x}", self.digest()))),
-        ])
+        ];
+        // Additive, chaos-on only: the payload of a chaos-off run is
+        // byte-identical to a pre-chaos build (no schema bump needed).
+        if let Some(c) = &self.chaos {
+            fields.push(("chaos", c.to_json(self.generated, self.completed)));
+        }
+        Json::obj(fields)
     }
 
     /// Human-readable summary (the `dmoe serve` output).
@@ -315,6 +353,10 @@ impl ServeReport {
             self.energy.comp_j,
             self.fallbacks,
         ));
+        if let Some(c) = &self.chaos {
+            out.push_str(&c.render_line(self.generated, self.completed));
+            out.push('\n');
+        }
         out
     }
 }
@@ -439,23 +481,25 @@ impl ServeEngine {
         let mut completed = 0usize;
         let mut sim_end_s = 0.0f64;
 
+        // Chaos state is lane 0's: the standalone engine is a one-lane
+        // fleet as far as the failure schedule is concerned.
+        let mut chaos_state = self
+            .opts
+            .chaos
+            .as_ref()
+            .map(|rt| ChaosState::new(rt, k, 0));
+        // The round context is rebuilt per round (cheap — references
+        // only) because the chaos offline mask mutates `jesa_round`
+        // between rounds; with chaos off the clone equals `jesa_opts`
+        // forever and the pipeline is bit-identical to a chaos-free
+        // build.
         let jesa_opts = JesaOptions {
             policy: self.opts.policy.policy,
             allocation: self.opts.policy.allocation,
             seed: self.opts.seed ^ 0x1E5A,
             ..JesaOptions::default()
         };
-        let ctx = RoundContext {
-            energy: &self.energy,
-            compute: &self.compute,
-            policy: &self.opts.policy,
-            quant: &quant,
-            jesa: &jesa_opts,
-            caching,
-            workers: self.opts.workers,
-            origin: 0,
-            record_timelines: self.opts.record_timelines,
-        };
+        let mut jesa_round = jesa_opts.clone();
 
         let mut stream = arrivals.into_iter().peekable();
         let mut shed_seen = 0usize;
@@ -493,8 +537,31 @@ impl ServeEngine {
             }
             let batch = queue.take_batch();
 
+            if let Some(cs) = chaos_state.as_mut() {
+                cs.begin_round(start);
+                jesa_round.offline = cs.offline().to_vec();
+            }
+            let ctx = RoundContext {
+                energy: &self.energy,
+                compute: &self.compute,
+                policy: &self.opts.policy,
+                quant: &quant,
+                jesa: &jesa_round,
+                caching,
+                workers: self.opts.workers,
+                origin: 0,
+                record_timelines: self.opts.record_timelines,
+            };
             let t_round = Instant::now();
-            let rs = execute_round(&ctx, &batch, &mut channel, cache, &mut ledger, &mut pattern);
+            let rs = execute_round(
+                &ctx,
+                &batch,
+                &mut channel,
+                cache,
+                &mut ledger,
+                &mut pattern,
+                chaos_state.as_mut(),
+            );
             let (latency_s, hits) = (rs.latency_s, rs.cache_hits);
             metrics.observe_s("round_wall", t_round.elapsed().as_secs_f64());
             metrics.record_span("gate", rs.gate_s);
@@ -528,7 +595,23 @@ impl ServeEngine {
             if let Some(tls) = rs.timelines {
                 timelines.push(tls);
             }
-            for a in &batch {
+            for (slot, a) in batch.iter().enumerate() {
+                // A slot whose forward/backward transmission timed out
+                // past the retry budget takes the `failed` disposition
+                // (chaos-on only — the vector is empty otherwise): the
+                // query is neither completed nor shed, and it enters the
+                // completion digest with a sentinel done-marker so runs
+                // differing only in failures digest differently.
+                if rs.failed_slots.get(slot).copied().unwrap_or(false) {
+                    completion_hash.write_u64(a.query.id);
+                    completion_hash.write_u64(a.at_s.to_bits());
+                    completion_hash.write_u64(start.to_bits());
+                    completion_hash.write_u64(u64::MAX);
+                    if let Some(cs) = chaos_state.as_mut() {
+                        cs.note_failed();
+                    }
+                    continue;
+                }
                 let c = Completion {
                     id: a.query.id,
                     domain: a.query.domain,
@@ -541,6 +624,9 @@ impl ServeEngine {
                 completion_hash.write_u64(c.start_s.to_bits());
                 completion_hash.write_u64(c.done_s.to_bits());
                 latency.record(c.latency_s());
+                if let Some(cs) = chaos_state.as_mut() {
+                    cs.record_completion(c.latency_s());
+                }
                 sim_end_s = sim_end_s.max(c.done_s);
                 completed += 1;
                 obs.on_completion(&CompletionEvent {
@@ -574,6 +660,7 @@ impl ServeEngine {
             fallbacks,
             latency,
             completion_digest: completion_hash.finish(),
+            chaos: chaos_state.map(|cs| cs.report()),
             completions,
             rounds_log,
             timelines,
@@ -648,6 +735,10 @@ pub(crate) struct RoundStats {
     /// DES branch-and-bound nodes expanded this round, misses only
     /// (hits skip the solver). Informational — never digested.
     pub nodes_expanded: u64,
+    /// `failed_slots[i]`: batch slot `i` lost a transmission past the
+    /// retry budget in some layer (its query takes the `failed`
+    /// disposition). Empty unless link chaos was active this round.
+    pub failed_slots: Vec<bool>,
 }
 
 /// Execute one round: refresh the channel, solve each layer through the
@@ -660,6 +751,7 @@ pub(crate) fn execute_round(
     cache: &SharedSolutionCache,
     ledger: &mut EnergyLedger,
     pattern: &mut SelectionPattern,
+    mut chaos: Option<&mut ChaosState>,
 ) -> RoundStats {
     let k = channel.experts();
     let layers = ctx.policy.importance.layers();
@@ -727,9 +819,38 @@ pub(crate) fn execute_round(
     let mut assign_s = 0.0;
     let mut nodes_expanded = 0u64;
     let mut tls = ctx.record_timelines.then(Vec::new);
+    // Link faults: draws happen here, in the *sequential* per-layer
+    // accounting loop (layer order, then LinkId order inside the sim),
+    // so the chaos RNG stream is identical however the layer solves
+    // above were scheduled across workers.
+    let link_chaos = chaos
+        .as_deref()
+        .and_then(|cs| cs.link())
+        .filter(|l| l.fail_prob > 0.0)
+        .map(|l| LinkChaos {
+            fail_prob: l.fail_prob,
+            max_retries: l.max_retries,
+            backoff_s: l.backoff_s,
+        });
+    let mut failed_slots = if link_chaos.is_some() {
+        vec![false; batch.len()]
+    } else {
+        Vec::new()
+    };
     let t_transmit = Instant::now();
     for (l, (sol, hit, layer_gate_s)) in results.iter().enumerate() {
-        let timeline = simulate_round(&solve_state, sol, ctx.compute, s0);
+        let timeline = if let (Some(lc), Some(cs)) = (&link_chaos, chaos.as_deref_mut()) {
+            let (tl, outcome) = simulate_round_chaos(&solve_state, sol, ctx.compute, s0, lc, cs.rng_mut());
+            cs.note_retries(outcome.retries);
+            for (slot, lost) in outcome.failed_sources.iter().take(failed_slots.len()).enumerate() {
+                if *lost {
+                    failed_slots[slot] = true;
+                }
+            }
+            tl
+        } else {
+            simulate_round(&solve_state, sol, ctx.compute, s0)
+        };
         latency_s += timeline.round_latency_s;
         ledger.charge_comm(l, sol.energy.comm_j);
         ledger.charge_comp(l, sol.energy.comp_j);
@@ -761,6 +882,7 @@ pub(crate) fn execute_round(
         assign_s,
         transmit_s: t_transmit.elapsed().as_secs_f64(),
         nodes_expanded,
+        failed_slots,
     }
 }
 

@@ -194,6 +194,44 @@ impl AdmissionQueue {
         let n = self.cfg.batch_queries.min(self.pending.len());
         self.pending.drain(..n).collect()
     }
+
+    /// Drain every pending query (a crashed cell loses its queue all at
+    /// once; the fleet re-routes the orphans). Shed accounting is
+    /// untouched — the orphans are not lost yet.
+    pub fn take_all(&mut self) -> Vec<Arrival> {
+        self.pending.drain(..).collect()
+    }
+
+    /// Admit a query re-routed from a crashed cell. Unlike [`push`],
+    /// the arrival may be older than this queue's tail (it was admitted
+    /// elsewhere first), so it is inserted in time order to keep the
+    /// FIFO invariant; a full queue sheds it as `QueueFull` just like a
+    /// fresh arrival, so re-routed queries never vanish. Returns `false`
+    /// on shed.
+    ///
+    /// [`push`]: AdmissionQueue::push
+    pub fn push_rerouted(&mut self, arrival: Arrival) -> bool {
+        if self.pending.len() >= self.cfg.capacity {
+            self.shed_full += 1;
+            self.shed_log.push((arrival.query.id, ShedReason::QueueFull));
+            return false;
+        }
+        let pos = self
+            .pending
+            .iter()
+            .position(|p| p.at_s > arrival.at_s)
+            .unwrap_or(self.pending.len());
+        self.pending.insert(pos, arrival);
+        true
+    }
+
+    /// Record an externally-decided shed: a crash orphan whose re-route
+    /// found no accepting cell still has to land in exactly one queue's
+    /// accounting (conservation — re-routed queries never vanish).
+    pub fn shed_forced(&mut self, id: u64) {
+        self.shed_full += 1;
+        self.shed_log.push((id, ShedReason::QueueFull));
+    }
 }
 
 #[cfg(test)]
@@ -276,5 +314,32 @@ mod tests {
     #[should_panic(expected = "capacity")]
     fn rejects_capacity_below_batch() {
         queue(1, 2, 1.0, 1.0);
+    }
+
+    #[test]
+    fn take_all_drains_without_shedding() {
+        let mut q = queue(8, 3, 1.0, 10.0);
+        for i in 0..4 {
+            q.push(arrival(i, i as f64 * 0.1));
+        }
+        let orphans = q.take_all();
+        assert_eq!(orphans.iter().map(|a| a.query.id).collect::<Vec<_>>(), [0, 1, 2, 3]);
+        assert!(q.is_empty());
+        assert_eq!(q.shed_counts(), (0, 0));
+    }
+
+    #[test]
+    fn rerouted_arrivals_insert_in_time_order_and_shed_when_full() {
+        let mut q = queue(3, 2, 1.0, 10.0);
+        q.push(arrival(10, 1.0));
+        q.push(arrival(11, 2.0));
+        // An orphan older than the tail lands between existing entries.
+        assert!(q.push_rerouted(arrival(5, 1.5)));
+        assert_eq!(q.oldest_arrival_s(), Some(1.0));
+        assert_eq!(q.kth_arrival_s(1), Some(1.5));
+        // The queue is now full: the next orphan sheds as QueueFull.
+        assert!(!q.push_rerouted(arrival(6, 0.5)));
+        assert_eq!(q.shed_counts(), (1, 0));
+        assert_eq!(q.shed_log(), &[(6, ShedReason::QueueFull)]);
     }
 }

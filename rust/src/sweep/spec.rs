@@ -2,9 +2,10 @@
 //!
 //! A [`SweepSpec`] is the grid analogue of a `Scenario`: one
 //! schema-versioned JSON document naming a base scenario (a preset name
-//! or an inline scenario object) and up to six axes — `cells`,
-//! `selector`, traffic `process` / `rate`, the importance factor
-//! `gamma0`, and `seed`. [`SweepSpec::expand`] takes the cartesian
+//! or an inline scenario object) and up to seven axes — `cells`, the
+//! failure-injection `chaos` section, `selector`, traffic `process` /
+//! `rate`, the importance factor `gamma0`, and `seed`.
+//! [`SweepSpec::expand`] takes the cartesian
 //! product in a fixed nesting order (cells outermost, seed innermost)
 //! and yields one fully-validated [`SweepPoint`] scenario per grid
 //! cell, named `p000`, `p001`, … in expansion order. Expansion is pure:
@@ -12,6 +13,7 @@
 //! which is what lets a sweep manifest be regression-diffed
 //! bit-for-bit (see [`crate::sweep::check`]).
 
+use crate::chaos::ChaosSpec;
 use crate::scenario::{PolicyKind, ProcessSpec, RateSpec, Scenario};
 use crate::selection::SelectorSpec;
 use crate::util::error::{Context, Error, Result};
@@ -37,6 +39,9 @@ pub struct Axes {
     /// Fleet sizes; `1` collapses the point to the single-cell serve
     /// engine (`fleet: null`), larger values shape a fleet.
     pub cells: Vec<usize>,
+    /// Failure-injection sections ([`ChaosSpec`]); each value replaces
+    /// the base scenario's `chaos` section wholesale.
+    pub chaos: Vec<ChaosSpec>,
     /// Selector registry names (`des`, `topk:K`, …).
     pub selector: Vec<SelectorSpec>,
     /// Traffic arrival processes.
@@ -52,11 +57,12 @@ pub struct Axes {
 
 impl Axes {
     const KEYS: &'static [&'static str] =
-        &["cells", "gamma0", "process", "rate", "seed", "selector"];
+        &["cells", "chaos", "gamma0", "process", "rate", "seed", "selector"];
 
     /// True when no axis has any values (the grid is the bare base).
     pub fn is_empty(&self) -> bool {
         self.cells.is_empty()
+            && self.chaos.is_empty()
             && self.selector.is_empty()
             && self.process.is_empty()
             && self.rate.is_empty()
@@ -198,6 +204,12 @@ impl SweepSpec {
                 Json::Arr(self.axes.cells.iter().map(|&c| Json::Num(c as f64)).collect()),
             ));
         }
+        if !self.axes.chaos.is_empty() {
+            axes.push((
+                "chaos",
+                Json::Arr(self.axes.chaos.iter().map(|c| c.to_json()).collect()),
+            ));
+        }
         if !self.axes.selector.is_empty() {
             axes.push((
                 "selector",
@@ -297,6 +309,12 @@ impl SweepSpec {
                         axes.cells.push(x.as_usize().ok_or_else(|| {
                             bad(&format!("sweep.axes.cells[{i}]"), "must be a non-negative integer")
                         })?);
+                    }
+                }
+                if let Some(arr) = get_arr(a, "chaos", "sweep.axes")? {
+                    for (i, x) in arr.iter().enumerate() {
+                        axes.chaos
+                            .push(ChaosSpec::from_json(x, &format!("sweep.axes.chaos[{i}]"))?);
                     }
                 }
                 if let Some(arr) = get_arr(a, "selector", "sweep.axes")? {
@@ -412,11 +430,12 @@ impl SweepSpec {
     }
 
     /// Cartesian product in the fixed nesting order
-    /// cells × selector × process × rate × gamma0 × seed (seed
+    /// cells × chaos × selector × process × rate × gamma0 × seed (seed
     /// innermost). Always yields at least one point (the bare base).
     pub fn expand(&self) -> Result<Vec<SweepPoint>> {
         let base = self.base_scenario()?;
         let cells = slots(&self.axes.cells);
+        let chaoses = slots(&self.axes.chaos);
         let selectors = slots(&self.axes.selector);
         let processes = slots(&self.axes.process);
         let rates = slots(&self.axes.rate);
@@ -425,21 +444,23 @@ impl SweepSpec {
 
         let mut points = Vec::new();
         for c in &cells {
-            for sel in &selectors {
-                for pr in &processes {
-                    for ra in &rates {
-                        for g in &gammas {
-                            for sd in &seeds {
-                                let index = points.len();
-                                let name = format!("p{index:03}");
-                                let (labels, scenario) =
-                                    self.apply(&base, &name, c, sel, pr, ra, g, sd)?;
-                                points.push(SweepPoint {
-                                    index,
-                                    name,
-                                    labels,
-                                    scenario,
-                                });
+            for ch in &chaoses {
+                for sel in &selectors {
+                    for pr in &processes {
+                        for ra in &rates {
+                            for g in &gammas {
+                                for sd in &seeds {
+                                    let index = points.len();
+                                    let name = format!("p{index:03}");
+                                    let (labels, scenario) =
+                                        self.apply(&base, &name, c, ch, sel, pr, ra, g, sd)?;
+                                    points.push(SweepPoint {
+                                        index,
+                                        name,
+                                        labels,
+                                        scenario,
+                                    });
+                                }
                             }
                         }
                     }
@@ -455,6 +476,7 @@ impl SweepSpec {
         base: &Scenario,
         point: &str,
         cells: &Option<usize>,
+        chaos: &Option<ChaosSpec>,
         selector: &Option<SelectorSpec>,
         process: &Option<ProcessSpec>,
         rate: &Option<RateSpec>,
@@ -484,6 +506,10 @@ impl SweepSpec {
             if let Some(f) = s.fleet.as_mut() {
                 f.lane_workers = Some(lw);
             }
+        }
+        if let Some(c) = chaos {
+            labels.push(("chaos".to_string(), c.label()));
+            s.chaos = Some(c.clone());
         }
         if let Some(sel) = *selector {
             labels.push(("selector".to_string(), sel.name()));

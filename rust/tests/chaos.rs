@@ -1,0 +1,301 @@
+//! Chaos-layer coverage: bit-identical digests under failure injection
+//! (same seed twice, sequential vs lane-parallel fleets), chaos-section
+//! JSON round-trips with field-path diagnostics, the degraded-mode QoS
+//! surface of the `expert-flap` preset, and the solution-cache
+//! regression that a pre-outage solution is never replayed while its
+//! expert is down.
+
+use dmoe::chaos::{ChaosSpec, ExpertOutage, LinkFaultSpec};
+use dmoe::fleet::{MobilityConfig, RoutePolicy};
+use dmoe::scenario::{self, Dur, FleetSpec, RateSpec, Scenario, TrafficSpec};
+use dmoe::SystemConfig;
+
+fn tiny_serve(queries: usize, chaos: Option<ChaosSpec>) -> Scenario {
+    let mut cfg = SystemConfig::tiny(); // K=3, L=2, M=12
+    cfg.workload.seed = 99;
+    let mut b = Scenario::builder("tiny-chaos-serve")
+        .system(cfg)
+        .traffic(TrafficSpec {
+            queries,
+            domains: 4,
+            tokens_per_query: 2,
+            rate: RateSpec::Utilization(0.7),
+            ..TrafficSpec::default()
+        })
+        .workers(1);
+    if let Some(c) = chaos {
+        b = b.chaos(c);
+    }
+    b.build().unwrap()
+}
+
+fn tiny_fleet(queries: usize, lane_workers: usize, chaos: Option<ChaosSpec>) -> Scenario {
+    let mut cfg = SystemConfig::tiny();
+    cfg.workload.seed = 99;
+    let mut b = Scenario::builder("tiny-chaos-fleet")
+        .system(cfg)
+        .traffic(TrafficSpec {
+            queries,
+            domains: 4,
+            tokens_per_query: 2,
+            rate: RateSpec::Qps(15.0),
+            ..TrafficSpec::default()
+        })
+        .workers(1)
+        .fleet(FleetSpec {
+            cells: 2,
+            route: RoutePolicy::JoinShortestQueue,
+            mobility: MobilityConfig {
+                users: 24,
+                mean_speed_mps: 12.0,
+                ..MobilityConfig::default()
+            },
+            lane_workers: Some(lane_workers),
+            ..FleetSpec::default()
+        });
+    if let Some(c) = chaos {
+        b = b.chaos(c);
+    }
+    b.build().unwrap()
+}
+
+fn serve_chaos() -> ChaosSpec {
+    ChaosSpec {
+        seed: 7,
+        expert_outages: vec![ExpertOutage {
+            expert: 1,
+            down_at: Dur::Rounds(5.0),
+            up_at: Dur::Rounds(40.0),
+        }],
+        link: Some(LinkFaultSpec {
+            fail_prob: 0.25,
+            max_retries: 1,
+            backoff: Dur::Rounds(0.25),
+        }),
+        ..ChaosSpec::default()
+    }
+}
+
+fn fleet_chaos() -> ChaosSpec {
+    ChaosSpec {
+        seed: 9,
+        expert_outages: vec![ExpertOutage {
+            expert: 2,
+            down_at: Dur::Rounds(4.0),
+            up_at: Dur::Rounds(60.0),
+        }],
+        link: Some(LinkFaultSpec {
+            fail_prob: 0.15,
+            max_retries: 2,
+            backoff: Dur::Rounds(0.25),
+        }),
+        cell_crashes: vec![(1, Dur::Rounds(25.0))],
+        ..ChaosSpec::default()
+    }
+}
+
+// -- determinism under chaos ------------------------------------------------
+
+#[test]
+fn same_chaos_seed_runs_to_identical_digests() {
+    let s = tiny_serve(300, Some(serve_chaos()));
+    let a = scenario::run(&s).unwrap();
+    let b = scenario::run(&s).unwrap();
+    assert_eq!(a.digest(), b.digest(), "chaos must be seed-deterministic");
+    let c = a.chaos().expect("chaos scenario must report chaos");
+    assert!(c.forced_exclusions > 0, "outage window never bit");
+    assert_eq!(
+        a.generated(),
+        a.completed() + a.shed() + a.failed(),
+        "conservation under link faults"
+    );
+    // Perturbing only the chaos seed moves the digest: the fault draws
+    // are part of the simulated physics, not cosmetics.
+    let mut other = serve_chaos();
+    other.seed = 8;
+    let d = scenario::run(&tiny_serve(300, Some(other))).unwrap();
+    assert_ne!(a.digest(), d.digest(), "chaos seed must reach the engine");
+}
+
+#[test]
+fn fleet_chaos_sequential_vs_lane_parallel_digests_match() {
+    let seq = tiny_fleet(400, 0, Some(fleet_chaos()));
+    let par = tiny_fleet(400, 4, Some(fleet_chaos()));
+    let a = scenario::run(&seq).unwrap();
+    let b = scenario::run(&seq).unwrap();
+    let c = scenario::run(&par).unwrap();
+    assert_eq!(a.digest(), b.digest(), "sequential rerun digest");
+    assert_eq!(
+        a.digest(),
+        c.digest(),
+        "lane-parallel fleet must be bit-identical to sequential under chaos"
+    );
+    let chaos = a.chaos().expect("fleet chaos report");
+    assert_eq!(chaos.crashed_cells, 1, "the scheduled crash must land");
+    assert!(a.completed() > 0, "surviving cell must keep serving");
+    assert_eq!(
+        a.generated(),
+        a.completed() + a.shed() + a.failed(),
+        "crashed-cell queries must re-route or shed, never vanish"
+    );
+}
+
+// -- the expert-flap acceptance surface -------------------------------------
+
+#[test]
+fn expert_flap_preset_reports_degraded_qos() {
+    let mut s = Scenario::preset("expert-flap").unwrap();
+    s.traffic.queries = 400;
+    let r = scenario::run(&s).unwrap();
+    let c = r.chaos().expect("expert-flap must carry a chaos report");
+    assert!(r.availability() < 1.0, "availability {}", r.availability());
+    assert!(c.retries > 0, "lossy links must retry");
+    assert!(c.failed > 0, "some query must exhaust the retry budget");
+    assert!(c.forced_exclusions > 0, "the flap must force exclusions");
+    assert_eq!(r.generated(), r.completed() + r.shed() + r.failed());
+    // Disabling chaos on the very same scenario restores the clean
+    // surface: no chaos block, full conservation without `failed`.
+    let mut clean = s.clone();
+    clean.chaos = None;
+    let rc = scenario::run(&clean).unwrap();
+    assert!(rc.chaos().is_none(), "chaos-off report must omit the block");
+    assert_eq!(rc.failed(), 0);
+    assert_eq!(rc.generated(), rc.completed() + rc.shed());
+    assert!(!rc.render().contains("chaos:"), "{}", rc.render());
+}
+
+// -- JSON round-trip + diagnostics ------------------------------------------
+
+#[test]
+fn chaos_sections_roundtrip_scenario_json_bit_identically() {
+    for s in [
+        tiny_serve(50, Some(serve_chaos())),
+        tiny_fleet(50, 0, Some(fleet_chaos())),
+    ] {
+        let j1 = s.to_json().to_string_pretty();
+        assert!(j1.contains("\"chaos\""), "{j1}");
+        let back = Scenario::from_json_str(&j1).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(back.to_json().to_string_pretty(), j1);
+    }
+    // Chaos-off scenarios serialize without the key at all, so pre-chaos
+    // documents and digests are untouched.
+    let clean = tiny_serve(50, None);
+    assert!(!clean.to_json().to_string_pretty().contains("chaos"));
+}
+
+#[test]
+fn chaos_errors_carry_field_paths() {
+    // Outage missing its recovery time.
+    let err = Scenario::from_json_str(
+        r#"{"name": "x", "chaos": {"expert_outages": [{"expert": 0, "down_at": {"rounds": 1}}]}}"#,
+    )
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("scenario.chaos.expert_outages[0]"), "{msg}");
+
+    // Unknown field inside the link section.
+    let err = Scenario::from_json_str(
+        r#"{"name": "x", "chaos": {"link": {"fail_prob": 0.1, "retries": 3}}}"#,
+    )
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("scenario.chaos.link") && msg.contains("retries"), "{msg}");
+
+    // Cross-field: cell crashes need a fleet section.
+    let err = Scenario::from_json_str(
+        r#"{"name": "x", "chaos": {"cell_crashes": [[0, {"s": 1.0}]]}}"#,
+    )
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("scenario.chaos.cell_crashes") && msg.contains("fleet"), "{msg}");
+
+    // Out-of-range expert against the host system's K.
+    let err = Scenario::from_json_str(
+        r#"{"name": "x", "chaos": {"expert_outages": [
+            {"expert": 99, "down_at": {"rounds": 1}, "up_at": {"rounds": 2}}]}}"#,
+    )
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("expert 99 out of range"), "{msg}");
+}
+
+// -- the solution-cache live-expert mask regression -------------------------
+
+/// A solution cached while every expert was up must MISS once an expert
+/// goes down: the cache key carries the live-expert mask, so the solver
+/// re-solves against the degraded pool instead of replaying a selection
+/// that routes tokens to the dead expert.
+#[test]
+fn stale_pre_outage_solution_is_never_served_while_expert_down() {
+    use dmoe::config::{ChannelConfig, EnergyConfig};
+    use dmoe::energy::EnergyModel;
+    use dmoe::gating::{GateScores, SyntheticGate};
+    use dmoe::jesa::JesaOptions;
+    use dmoe::serve::{solve_quantized, QuantizerConfig, SolutionCache};
+    use dmoe::util::rng::Xoshiro256pp;
+
+    let (k, m, tokens) = (4usize, 32usize, 4usize);
+    let cfg = ChannelConfig {
+        subcarriers: m,
+        ..ChannelConfig::default()
+    };
+    let mut ch = dmoe::channel::ChannelModel::new(cfg.clone(), k, 11);
+    let state = ch.realize();
+    let mut rng = Xoshiro256pp::seed_from_u64(0xA11CE);
+    let gate = SyntheticGate::new(k, 1.0);
+    let gates: Vec<Vec<GateScores>> = (0..k)
+        .map(|_| (0..tokens).map(|_| gate.sample(&mut rng)).collect())
+        .collect();
+    let energy = EnergyModel::new(cfg, EnergyConfig::paper(k, 8192.0));
+    let quant = QuantizerConfig {
+        log2_step: 3.0,
+        gate_levels: 32,
+    };
+    let mut cache = SolutionCache::new(64);
+    let up = JesaOptions::default();
+
+    // Warm the cache with the all-experts-up solution…
+    let (sol_up, _, hit) =
+        solve_quantized(&mut cache, &quant, &state, &gates, 0.5, 2, &energy, &up);
+    assert!(!hit, "first solve must miss");
+    let (_, _, hit) = solve_quantized(&mut cache, &quant, &state, &gates, 0.5, 2, &energy, &up);
+    assert!(hit, "identical inputs must hit");
+
+    // …pick an expert the cached solution actually uses…
+    let victim = sol_up
+        .selections
+        .iter()
+        .flatten()
+        .flat_map(|s| s.selected.iter().copied())
+        .next()
+        .expect("solved round selects at least one expert");
+
+    // …then take it down. Identical channel/gates, but the key's
+    // live-expert mask differs: the lookup must MISS and the fresh
+    // solution must avoid the dead expert entirely.
+    let mut down = JesaOptions::default();
+    down.offline = vec![false; k];
+    down.offline[victim] = true;
+    let (sol_down, _, hit) =
+        solve_quantized(&mut cache, &quant, &state, &gates, 0.5, 2, &energy, &down);
+    assert!(
+        !hit,
+        "cached pre-outage solution was served while expert {victim} was down"
+    );
+    assert!(
+        sol_down
+            .selections
+            .iter()
+            .flatten()
+            .all(|s| !s.selected.contains(&victim)),
+        "degraded solve still routed tokens to the dead expert {victim}"
+    );
+    assert_eq!(cache.len(), 2, "both masks memoize independently");
+
+    // The degraded entry hits on repeat — keyed, not evicted.
+    let (sol_again, _, hit) =
+        solve_quantized(&mut cache, &quant, &state, &gates, 0.5, 2, &energy, &down);
+    assert!(hit);
+    assert_eq!(sol_again.selections, sol_down.selections);
+}

@@ -1,10 +1,19 @@
-//! Failure-injection tests: malformed artifacts, bad configs and
-//! degenerate workloads must fail loudly with useful errors — never
-//! panic, hang, or silently serve garbage.
+//! Failure-injection tests. Two layers:
+//!
+//! * **Load-time**: malformed artifacts, bad configs and degenerate
+//!   workloads must fail loudly with useful errors — never panic,
+//!   hang, or silently serve garbage.
+//! * **Runtime chaos** (see [`dmoe::chaos`]): scheduled expert
+//!   outages, lossy links and cell crashes injected mid-run must keep
+//!   the engines honest — down experts never selected, recovery
+//!   restores them, and every admitted query is accounted for as
+//!   completed, shed, or failed.
 
+use dmoe::chaos::{ChaosSpec, ExpertOutage, LinkFaultSpec};
 use dmoe::coordinator::{DmoeServer, ServePolicy};
 use dmoe::moe::Manifest;
 use dmoe::runtime::ModelRuntime;
+use dmoe::scenario::{self, Dur, RunReport};
 use dmoe::workload::{EvalSet, Query};
 use dmoe::SystemConfig;
 
@@ -174,4 +183,226 @@ fn invalid_configs_rejected_before_serving() {
     cfg = SystemConfig::default();
     cfg.channel.path_loss = 0.0;
     assert!(cfg.validate().is_err());
+}
+
+// -- runtime chaos: injected failures mid-run --------------------------------
+
+use dmoe::fleet::{MobilityConfig, RoutePolicy};
+use dmoe::scenario::{FleetSpec, RateSpec, Scenario, TrafficSpec};
+
+fn chaos_serve(queries: usize, chaos: ChaosSpec) -> Scenario {
+    let mut cfg = SystemConfig::tiny(); // K=3, L=2, M=12
+    cfg.workload.seed = 99;
+    Scenario::builder("fi-chaos-serve")
+        .system(cfg)
+        .traffic(TrafficSpec {
+            queries,
+            domains: 4,
+            tokens_per_query: 2,
+            rate: RateSpec::Utilization(0.7),
+            ..TrafficSpec::default()
+        })
+        .workers(1)
+        .chaos(chaos)
+        .build()
+        .unwrap()
+}
+
+fn chaos_fleet(queries: usize, chaos: ChaosSpec) -> Scenario {
+    let mut cfg = SystemConfig::tiny();
+    cfg.workload.seed = 99;
+    Scenario::builder("fi-chaos-fleet")
+        .system(cfg)
+        .traffic(TrafficSpec {
+            queries,
+            domains: 4,
+            tokens_per_query: 2,
+            rate: RateSpec::Qps(15.0),
+            ..TrafficSpec::default()
+        })
+        .workers(1)
+        .fleet(FleetSpec {
+            cells: 2,
+            route: RoutePolicy::JoinShortestQueue,
+            mobility: MobilityConfig {
+                users: 24,
+                mean_speed_mps: 12.0,
+                ..MobilityConfig::default()
+            },
+            lane_workers: Some(0),
+            ..FleetSpec::default()
+        })
+        .chaos(chaos)
+        .build()
+        .unwrap()
+}
+
+/// Summed selection probability of one expert across every layer —
+/// zero means the expert was never selected in any round.
+fn selection_mass(r: &RunReport, expert: usize) -> f64 {
+    let p = r.pattern();
+    (0..p.layers()).map(|l| p.probability(l, expert)).sum()
+}
+
+fn conserve(r: &RunReport) {
+    assert_eq!(
+        r.generated(),
+        r.completed() + r.shed() + r.failed(),
+        "query conservation: generated {} != completed {} + shed {} + failed {}",
+        r.generated(),
+        r.completed(),
+        r.shed(),
+        r.failed()
+    );
+}
+
+#[test]
+fn outage_mid_run_forces_exclusion_and_recovery_restores() {
+    // Chaos-free baseline: find the expert the policy leans on most.
+    let base = Scenario::builder("fi-baseline")
+        .system({
+            let mut c = SystemConfig::tiny();
+            c.workload.seed = 99;
+            c
+        })
+        .traffic(TrafficSpec {
+            queries: 400,
+            domains: 4,
+            tokens_per_query: 2,
+            rate: RateSpec::Utilization(0.7),
+            ..TrafficSpec::default()
+        })
+        .workers(1)
+        .build()
+        .unwrap();
+    let baseline = scenario::run(&base).unwrap();
+    let victim = (0..3)
+        .max_by(|&a, &b| {
+            selection_mass(&baseline, a)
+                .partial_cmp(&selection_mass(&baseline, b))
+                .unwrap()
+        })
+        .unwrap();
+    assert!(selection_mass(&baseline, victim) > 0.0);
+
+    // Outage covering the whole run: the selected set must never
+    // contain the down expert, and every skip must be counted.
+    let full = chaos_serve(
+        400,
+        ChaosSpec {
+            seed: 3,
+            expert_outages: vec![ExpertOutage {
+                expert: victim,
+                down_at: Dur::Seconds(1e-12), // before the first round
+                up_at: Dur::Rounds(1e9),
+            }],
+            ..ChaosSpec::default()
+        },
+    );
+    let r = scenario::run(&full).unwrap();
+    assert_eq!(
+        selection_mass(&r, victim),
+        0.0,
+        "down expert {victim} was selected during its outage"
+    );
+    let c = r.chaos().unwrap();
+    assert!(c.forced_exclusions > 0, "exclusions must be counted");
+    conserve(&r);
+
+    // Outage covering only the first few rounds: after recovery the
+    // expert must come back into rotation.
+    let brief = chaos_serve(
+        400,
+        ChaosSpec {
+            seed: 3,
+            expert_outages: vec![ExpertOutage {
+                expert: victim,
+                down_at: Dur::Seconds(1e-12),
+                up_at: Dur::Rounds(4.0),
+            }],
+            ..ChaosSpec::default()
+        },
+    );
+    let r = scenario::run(&brief).unwrap();
+    assert!(
+        selection_mass(&r, victim) > 0.0,
+        "expert {victim} never recovered after its outage window closed"
+    );
+    conserve(&r);
+}
+
+#[test]
+fn lossy_links_retry_fail_and_conserve() {
+    let s = chaos_serve(
+        400,
+        ChaosSpec {
+            seed: 5,
+            link: Some(LinkFaultSpec {
+                fail_prob: 0.3,
+                max_retries: 1,
+                backoff: Dur::Rounds(0.25),
+            }),
+            ..ChaosSpec::default()
+        },
+    );
+    let r = scenario::run(&s).unwrap();
+    let c = r.chaos().unwrap();
+    assert!(c.retries > 0, "a 30% loss rate must force retries");
+    assert!(c.failed > 0, "some query must exhaust one retry");
+    assert_eq!(r.failed(), c.failed);
+    assert!(r.availability() < 1.0);
+    conserve(&r);
+}
+
+#[test]
+fn crashed_cell_queries_land_elsewhere_or_shed_never_vanish() {
+    let s = chaos_fleet(
+        500,
+        ChaosSpec {
+            seed: 13,
+            cell_crashes: vec![(1, Dur::Rounds(10.0))],
+            ..ChaosSpec::default()
+        },
+    );
+    let r = scenario::run(&s).unwrap();
+    let c = r.chaos().unwrap();
+    assert_eq!(c.crashed_cells, 1);
+    assert_eq!(r.failed(), 0, "crashes re-route; only link faults fail");
+    assert!(r.completed() > 0, "surviving cell must keep completing");
+    conserve(&r);
+}
+
+#[test]
+fn randomized_chaos_schedules_always_conserve() {
+    use dmoe::util::rng::Xoshiro256pp;
+    let mut rng = Xoshiro256pp::seed_from_u64(0xC4405);
+    for trial in 0..3u64 {
+        let down = 0.5 + (rng.next_u64() % 20) as f64;
+        let up = down + 2.0 + (rng.next_u64() % 30) as f64;
+        let expert = (rng.next_u64() % 3) as usize;
+        let fail_prob = 0.05 + 0.3 * (rng.next_u64() % 1000) as f64 / 1000.0;
+        let chaos = ChaosSpec {
+            seed: 100 + trial,
+            expert_outages: vec![ExpertOutage {
+                expert,
+                down_at: Dur::Rounds(down),
+                up_at: Dur::Rounds(up),
+            }],
+            link: Some(LinkFaultSpec {
+                fail_prob,
+                max_retries: (rng.next_u64() % 3) as usize,
+                backoff: Dur::Rounds(0.25),
+            }),
+            ..ChaosSpec::default()
+        };
+        let s = chaos_serve(250, chaos.clone());
+        let a = scenario::run(&s).unwrap();
+        conserve(&a);
+        let b = scenario::run(&s).unwrap();
+        assert_eq!(
+            a.digest(),
+            b.digest(),
+            "trial {trial} ({chaos:?}) not reproducible"
+        );
+    }
 }

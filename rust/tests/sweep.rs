@@ -199,6 +199,79 @@ fn same_spec_runs_to_bit_identical_digests_and_verifies() {
     let _ = std::fs::remove_dir_all(&root_b);
 }
 
+// -- chaos axis --------------------------------------------------------------
+
+#[test]
+fn chaos_axis_expands_and_labels_points() {
+    let text = r#"{
+  "name": "chaos-grid",
+  "base": "paper-baseline",
+  "queries": 50,
+  "axes": {
+    "chaos": [
+      {"seed": 5, "expert_outages": [
+        {"expert": 1, "down_at": {"rounds": 2}, "up_at": {"rounds": 9}}]},
+      {"seed": 6, "link": {"fail_prob": 0.2, "max_retries": 1}}
+    ],
+    "seed": [11, 12]
+  }
+}"#;
+    let spec = SweepSpec::from_json_str(text).unwrap();
+    // The chaos axis round-trips through the spec document.
+    let back = SweepSpec::from_json_str(&spec.to_json().to_string_pretty()).unwrap();
+    assert_eq!(back, spec);
+
+    let points = spec.expand().unwrap();
+    assert_eq!(points.len(), 4);
+    // Chaos outer, seed inner; labels carry the compact chaos tag.
+    for (i, p) in points.iter().enumerate() {
+        let chaos = p.scenario.chaos.as_ref().expect("chaos axis must apply");
+        let label = p
+            .labels
+            .iter()
+            .find(|(k, _)| k.as_str() == "chaos")
+            .map(|(_, v)| v.as_str())
+            .unwrap();
+        if i < 2 {
+            assert_eq!(chaos.expert_outages.len(), 1);
+            assert_eq!(label, "o1l0c0s5");
+        } else {
+            assert!(chaos.link.is_some());
+            assert_eq!(label, "o0l1c0s6");
+        }
+    }
+}
+
+#[test]
+fn perturbed_chaos_seed_reports_changed() {
+    let spec_text = |seed: u64| {
+        format!(
+            r#"{{
+  "name": "chaos-check",
+  "base": "paper-baseline",
+  "queries": 60,
+  "workers": 1,
+  "axes": {{"chaos": [{{"seed": {seed}, "link": {{"fail_prob": 0.2, "max_retries": 1}}}}]}}
+}}"#
+        )
+    };
+    let baseline_spec = SweepSpec::from_json_str(&spec_text(5)).unwrap();
+    let perturbed_spec = SweepSpec::from_json_str(&spec_text(6)).unwrap();
+    let (root_a, root_b) = (scratch("chaos-a"), scratch("chaos-b"));
+    let baseline = run_sweep(&baseline_spec, &root_a, 1).unwrap();
+    let fresh = run_sweep(&perturbed_spec, &root_b, 1).unwrap();
+
+    // Only the chaos seed moved, so the scenario digest moves and the
+    // cross-run comparison must flag CHANGED — chaos is part of the
+    // reviewed document, never an ambient knob.
+    let report = check_manifests(&baseline, &fresh);
+    assert_eq!(report.worst(), Verdict::Changed);
+    assert_ne!(point_digests(&baseline)[0].1, point_digests(&fresh)[0].1);
+
+    let _ = std::fs::remove_dir_all(&root_a);
+    let _ = std::fs::remove_dir_all(&root_b);
+}
+
 #[test]
 fn perturbed_seed_axis_reports_changed_with_digests_named() {
     let baseline_spec = tiny_spec("check", &[11, 12]);
