@@ -235,6 +235,45 @@ if [[ -z "$storm_seq" || "$storm_seq" != "$storm_par" ]]; then
 fi
 echo "chaos gate passed (expert-flap $da, cell-crash-storm $storm_seq)"
 
+# Autoscale gate, three parts (see MONITORING.md "Elasticity &
+# self-healing"):
+#  1. the crash-storm-selfheal preset run twice sequentially must digest
+#     identically — scale decisions are pure functions of deterministic
+#     epoch signals, never wall clock;
+#  2. the same preset lane-parallel must match the sequential digest —
+#     the controller runs on the lockstep event loop in both modes;
+#  3. the run must actually heal: a finite time_to_recover in the
+#     elasticity line, and availability must stay above 0.75 (the
+#     replacements must absorb the crashed cells' load).
+heal_a=$(cargo run --release --quiet -- run --scenario crash-storm-selfheal --queries 400 \
+  --lane-workers 0)
+heal_b=$(cargo run --release --quiet -- run --scenario crash-storm-selfheal --queries 400 \
+  --lane-workers 0)
+ha=$(extract_scenario_digest <<<"$heal_a")
+hb=$(extract_scenario_digest <<<"$heal_b")
+if [[ -z "$ha" || "$ha" != "$hb" ]]; then
+  echo "FAIL: crash-storm-selfheal digest determinism (first=$ha second=$hb)" >&2
+  exit 1
+fi
+heal_par=$(cargo run --release --quiet -- run --scenario crash-storm-selfheal --queries 400 \
+  --lane-workers 4 | extract_scenario_digest)
+if [[ "$ha" != "$heal_par" ]]; then
+  echo "FAIL: autoscale lane determinism (sequential=$ha parallel=$heal_par)" >&2
+  exit 1
+fi
+if ! grep -q "time_to_recover [0-9]" <<<"$heal_a"; then
+  echo "FAIL: crash-storm-selfheal must report a finite time_to_recover:" >&2
+  echo "$heal_a" >&2
+  exit 1
+fi
+heal_avail=$(grep -o "availability [0-9.]*" <<<"$heal_a" | awk '{print $2}' | head -n1)
+if [[ -z "$heal_avail" ]] || ! awk -v a="$heal_avail" 'BEGIN { exit !(a >= 0.75) }'; then
+  echo "FAIL: crash-storm-selfheal availability $heal_avail below 0.75:" >&2
+  echo "$heal_a" >&2
+  exit 1
+fi
+echo "autoscale gate passed (crash-storm-selfheal $ha, availability $heal_avail)"
+
 # Bench baseline bootstrap: BENCH_{des,fleet,serve}.json are committed
 # perf baselines (scenario + git rev stamped by the benches themselves).
 # Regenerate any that are missing, in quick mode, so a fresh checkout

@@ -1,0 +1,1024 @@
+//! Closed-loop elasticity: the fleet's deterministic autoscaler and the
+//! non-uniform per-cell overrides.
+//!
+//! An [`AutoscaleSpec`] is a schema-versioned scenario section that
+//! closes the loop PR 6–8 left open: the per-cell signals the telemetry
+//! layer already streams (utilization against the calibrated capacity
+//! band, shed fraction, p99) feed a control law that issues warm/drain
+//! actions through the existing `Warming → Active → Draining → Drained`
+//! cell lifecycle:
+//!
+//! * **Scale up** — when fleet utilization rises above `util_high`
+//!   (fraction of the calibrated per-cell capacity `K / round_s`), or
+//!   the epoch shed fraction exceeds `shed_high`, or the merged p99
+//!   exceeds `p99_high`, one [`CellState::Standby`] slot is activated.
+//!   Activation lands after the `warmup` budget elapses — a spawned
+//!   cell is not instantly routable, exactly like a real cold start.
+//! * **Self-heal** — when chaos crashes a cell ([`crate::chaos`]), the
+//!   controller schedules a replacement standby activation (same warm-up
+//!   budget), restoring routable capacity; the elasticity block reports
+//!   the resulting `time_to_recover`.
+//! * **Scale down** — when utilization falls below `util_low` and more
+//!   than `min_cells` cells are routable, the least-loaded cell (fewest
+//!   completions this epoch) drains: it stops accepting arrivals but
+//!   serves its backlog to completion — in-flight queries are never
+//!   dropped, the same drain semantics scheduled drains use.
+//!
+//! The controller evaluates at fixed epoch boundaries (a round-relative
+//! [`Dur`] period) on the lockstep event loop, reading cell counters at
+//! an arrival barrier — a point where sequential and lane-parallel
+//! execution agree bit-for-bit. Decisions are pure functions of those
+//! deterministic signals (no RNG, no wall clock), so the fleet digest
+//! stays bit-identical across execution modes with scale events active,
+//! and an autoscale-off run takes exactly the pre-elasticity code path.
+//!
+//! **Non-uniform fleets.** [`CellOverride`] entries in the fleet spec
+//! give individual cells their own selection width (`max_active`),
+//! fading memory (`fading_rho`) or queue-capacity fraction. This is safe
+//! with the shared solution cache because the cache key already
+//! partitions on the policy/energy signature: a cell with a different
+//! `max_active` or channel realization occupies a separate key space and
+//! can never replay another cell's solution.
+
+use super::cell::{Cell, CellState};
+use crate::scenario::{Dur, EngineObserver};
+use crate::telemetry::LatencyStats;
+use crate::util::error::{Error, Result};
+use crate::util::hash::Fnv1a;
+use crate::util::json::Json;
+use std::sync::Mutex;
+
+/// Newest autoscale schema this build writes: bump when a field changes
+/// meaning, not when purely additive fields appear.
+pub const AUTOSCALE_SCHEMA_VERSION: u32 = 1;
+
+// ---------------------------------------------------------------------------
+// JSON helpers (local copies — every spec document keeps its own so
+// diagnostics carry the exact path of the offending field).
+// ---------------------------------------------------------------------------
+
+fn bad(path: &str, what: impl std::fmt::Display) -> Error {
+    Error::msg(format!("{path}: {what}"))
+}
+
+fn check_keys(v: &Json, allowed: &[&str], path: &str) -> Result<()> {
+    let obj = v
+        .as_obj()
+        .ok_or_else(|| bad(path, "expected a JSON object"))?;
+    for key in obj.keys() {
+        if !allowed.contains(&key.as_str()) {
+            return Err(bad(
+                path,
+                format!("unknown field '{key}' (known: {})", allowed.join(", ")),
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn get_f64(v: &Json, key: &str, default: f64, path: &str) -> Result<f64> {
+    match v.get(key) {
+        Json::Null => Ok(default),
+        x => x
+            .as_f64()
+            .ok_or_else(|| bad(path, format!("'{key}' must be a number"))),
+    }
+}
+
+fn get_usize(v: &Json, key: &str, default: usize, path: &str) -> Result<usize> {
+    match v.get(key) {
+        Json::Null => Ok(default),
+        x => x
+            .as_usize()
+            .ok_or_else(|| bad(path, format!("'{key}' must be a non-negative integer"))),
+    }
+}
+
+fn get_bool(v: &Json, key: &str, default: bool, path: &str) -> Result<bool> {
+    match v.get(key) {
+        Json::Null => Ok(default),
+        Json::Bool(b) => Ok(*b),
+        _ => Err(bad(path, format!("'{key}' must be a boolean"))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Spec types
+// ---------------------------------------------------------------------------
+
+/// The serializable autoscale section of a fleet spec. JSON (canonical,
+/// key order fixed; `p99_high` omitted when unset):
+///
+/// ```json
+/// {
+///   "autoscale_schema_version": 1,
+///   "period": {"rounds": 8},
+///   "util_low": 0.3,
+///   "util_high": 0.85,
+///   "shed_high": 0.05,
+///   "min_cells": 1,
+///   "max_cells": 8,
+///   "warmup": {"rounds": 2},
+///   "heal": true
+/// }
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscaleSpec {
+    pub schema_version: u32,
+    /// Control epoch: the loop evaluates once per elapsed period.
+    pub period: Dur,
+    /// Lower edge of the utilization band (fraction of the calibrated
+    /// per-cell capacity `K / round_s`); below it the fleet scales down.
+    pub util_low: f64,
+    /// Upper edge of the utilization band; above it the fleet scales up.
+    pub util_high: f64,
+    /// Epoch shed fraction that forces a scale-up regardless of
+    /// utilization.
+    pub shed_high: f64,
+    /// Optional p99 ceiling: merged end-to-end p99 above this resolves
+    /// to a scale-up signal.
+    pub p99_high: Option<Dur>,
+    /// The controller never drains below this many routable cells.
+    pub min_cells: usize,
+    /// Hard cap on total cells (base + standby slots).
+    pub max_cells: usize,
+    /// Warm-up budget: the delay between a spawn/heal decision and the
+    /// new cell accepting traffic.
+    pub warmup: Dur,
+    /// Replace chaos-crashed cells with standby activations.
+    pub heal: bool,
+}
+
+impl Default for AutoscaleSpec {
+    fn default() -> Self {
+        Self {
+            schema_version: AUTOSCALE_SCHEMA_VERSION,
+            period: Dur::Rounds(8.0),
+            util_low: 0.3,
+            util_high: 0.85,
+            shed_high: 0.05,
+            p99_high: None,
+            min_cells: 1,
+            max_cells: 8,
+            warmup: Dur::Rounds(2.0),
+            heal: true,
+        }
+    }
+}
+
+impl AutoscaleSpec {
+    const KEYS: &'static [&'static str] = &[
+        "autoscale_schema_version",
+        "period",
+        "util_low",
+        "util_high",
+        "shed_high",
+        "p99_high",
+        "min_cells",
+        "max_cells",
+        "warmup",
+        "heal",
+    ];
+
+    /// Compact axis label for sweep manifests: cell band, utilization
+    /// band and whether self-healing is on.
+    pub fn label(&self) -> String {
+        format!(
+            "e{}-{}u{:.2}-{:.2}{}",
+            self.min_cells,
+            self.max_cells,
+            self.util_low,
+            self.util_high,
+            if self.heal { "h" } else { "" }
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            (
+                "autoscale_schema_version",
+                Json::Num(self.schema_version as f64),
+            ),
+            ("period", self.period.to_json()),
+            ("util_low", Json::Num(self.util_low)),
+            ("util_high", Json::Num(self.util_high)),
+            ("shed_high", Json::Num(self.shed_high)),
+        ];
+        if let Some(p) = &self.p99_high {
+            fields.push(("p99_high", p.to_json()));
+        }
+        fields.push(("min_cells", Json::Num(self.min_cells as f64)));
+        fields.push(("max_cells", Json::Num(self.max_cells as f64)));
+        fields.push(("warmup", self.warmup.to_json()));
+        fields.push(("heal", Json::Bool(self.heal)));
+        Json::obj(fields)
+    }
+
+    pub fn from_json(v: &Json, path: &str) -> Result<AutoscaleSpec> {
+        check_keys(v, Self::KEYS, path)?;
+        let d = AutoscaleSpec::default();
+        let schema_version = get_usize(
+            v,
+            "autoscale_schema_version",
+            AUTOSCALE_SCHEMA_VERSION as usize,
+            path,
+        )?;
+        if schema_version > u32::MAX as usize {
+            return Err(bad(
+                path,
+                format!("'autoscale_schema_version' out of range: {schema_version}"),
+            ));
+        }
+        let period = match v.get("period") {
+            Json::Null => d.period,
+            x => Dur::from_json(x, &format!("{path}.period"))?,
+        };
+        let warmup = match v.get("warmup") {
+            Json::Null => d.warmup,
+            x => Dur::from_json(x, &format!("{path}.warmup"))?,
+        };
+        let p99_high = match v.get("p99_high") {
+            Json::Null => None,
+            x => Some(Dur::from_json(x, &format!("{path}.p99_high"))?),
+        };
+        Ok(AutoscaleSpec {
+            schema_version: schema_version as u32,
+            period,
+            util_low: get_f64(v, "util_low", d.util_low, path)?,
+            util_high: get_f64(v, "util_high", d.util_high, path)?,
+            shed_high: get_f64(v, "shed_high", d.shed_high, path)?,
+            p99_high,
+            min_cells: get_usize(v, "min_cells", d.min_cells, path)?,
+            max_cells: get_usize(v, "max_cells", d.max_cells, path)?,
+            warmup,
+            heal: get_bool(v, "heal", d.heal, path)?,
+        })
+    }
+
+    /// Structural validation against the fleet's base cell count.
+    pub fn validate(&self, cells: usize, path: &str) -> Result<()> {
+        if self.schema_version == 0 || self.schema_version > AUTOSCALE_SCHEMA_VERSION {
+            return Err(bad(
+                path,
+                format!(
+                    "unsupported autoscale_schema_version {} (this build reads 1..={})",
+                    self.schema_version, AUTOSCALE_SCHEMA_VERSION
+                ),
+            ));
+        }
+        self.period.validate(&format!("{path}.period"))?;
+        self.warmup.validate(&format!("{path}.warmup"))?;
+        if let Some(p) = &self.p99_high {
+            p.validate(&format!("{path}.p99_high"))?;
+        }
+        if !(self.util_low.is_finite() && self.util_high.is_finite() && self.util_low >= 0.0) {
+            return Err(bad(path, "utilization band must be finite and non-negative"));
+        }
+        if self.util_low >= self.util_high {
+            return Err(bad(
+                path,
+                format!(
+                    "util_low {} must sit below util_high {}",
+                    self.util_low, self.util_high
+                ),
+            ));
+        }
+        if !(self.shed_high.is_finite() && (0.0..=1.0).contains(&self.shed_high)) {
+            return Err(bad(path, "shed_high must be a fraction in [0, 1]"));
+        }
+        if self.min_cells == 0 {
+            return Err(bad(path, "min_cells must be at least 1"));
+        }
+        if self.min_cells > cells {
+            return Err(bad(
+                path,
+                format!(
+                    "min_cells {} exceeds the fleet's {} base cells",
+                    self.min_cells, cells
+                ),
+            ));
+        }
+        if self.max_cells < cells {
+            return Err(bad(
+                path,
+                format!(
+                    "max_cells {} is below the fleet's {} base cells",
+                    self.max_cells, cells
+                ),
+            ));
+        }
+        if self.max_cells > 256 {
+            return Err(bad(path, "max_cells above 256 is not supported"));
+        }
+        Ok(())
+    }
+
+    /// Resolve round-relative durations against the calibrated round
+    /// latency and derive the utilization denominator (`K / round_s`,
+    /// the same calibrated per-cell capacity the capacity probe prints).
+    pub fn resolve(&self, round_s: f64, k: usize) -> Result<AutoscaleRuntime> {
+        let period_s = self.period.resolve(round_s);
+        if !(period_s.is_finite() && period_s > 0.0) {
+            return Err(Error::msg(format!(
+                "autoscale period resolves to {period_s} s (need a positive duration)"
+            )));
+        }
+        let warmup_s = self.warmup.resolve(round_s);
+        if !(warmup_s.is_finite() && warmup_s >= 0.0) {
+            return Err(Error::msg(format!(
+                "autoscale warmup resolves to {warmup_s} s (need a non-negative duration)"
+            )));
+        }
+        Ok(AutoscaleRuntime {
+            period_s,
+            warmup_s,
+            util_low: self.util_low,
+            util_high: self.util_high,
+            shed_high: self.shed_high,
+            p99_high_s: self.p99_high.as_ref().map(|p| p.resolve(round_s)),
+            min_cells: self.min_cells,
+            max_cells: self.max_cells,
+            heal: self.heal,
+            cell_capacity_qps: k as f64 / round_s,
+        })
+    }
+}
+
+/// [`AutoscaleSpec`] with every duration resolved to seconds and the
+/// capacity denominator fixed — what the fleet engine actually runs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscaleRuntime {
+    pub period_s: f64,
+    pub warmup_s: f64,
+    pub util_low: f64,
+    pub util_high: f64,
+    pub shed_high: f64,
+    pub p99_high_s: Option<f64>,
+    pub min_cells: usize,
+    pub max_cells: usize,
+    pub heal: bool,
+    /// Calibrated per-cell capacity (`K / round_s`) — the utilization
+    /// denominator.
+    pub cell_capacity_qps: f64,
+}
+
+// ---------------------------------------------------------------------------
+// Non-uniform fleets: per-cell overrides
+// ---------------------------------------------------------------------------
+
+/// One cell's deviations from the fleet-wide configuration. Every field
+/// is optional; unset fields inherit the fleet default. JSON:
+/// `{"cell": 1, "max_active": 1, "fading_rho": 0.5, "capacity_fraction": 0.5}`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellOverride {
+    /// Base-cell index this override applies to.
+    pub cell: usize,
+    /// Selection width `D` for this cell (caps experts per token). A
+    /// distinct width lands the cell in its own solution-cache key space
+    /// — the key carries `max_active` — so heterogeneous cells never
+    /// replay each other's solutions.
+    pub max_active: Option<usize>,
+    /// Per-cell AR(1) fading memory (channel heterogeneity).
+    pub fading_rho: Option<f64>,
+    /// Scales the cell's admission-queue capacity; floors at the batch
+    /// trigger so a fractional cell can still form rounds.
+    pub capacity_fraction: Option<f64>,
+}
+
+impl CellOverride {
+    const KEYS: &'static [&'static str] =
+        &["cell", "max_active", "fading_rho", "capacity_fraction"];
+
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![("cell", Json::Num(self.cell as f64))];
+        if let Some(d) = self.max_active {
+            fields.push(("max_active", Json::Num(d as f64)));
+        }
+        if let Some(r) = self.fading_rho {
+            fields.push(("fading_rho", Json::Num(r)));
+        }
+        if let Some(f) = self.capacity_fraction {
+            fields.push(("capacity_fraction", Json::Num(f)));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(v: &Json, path: &str) -> Result<CellOverride> {
+        check_keys(v, Self::KEYS, path)?;
+        let cell = match v.get("cell") {
+            Json::Null => return Err(bad(path, "missing required field 'cell'")),
+            x => x
+                .as_usize()
+                .ok_or_else(|| bad(path, "'cell' must be a non-negative integer"))?,
+        };
+        let max_active = match v.get("max_active") {
+            Json::Null => None,
+            x => Some(
+                x.as_usize()
+                    .ok_or_else(|| bad(path, "'max_active' must be a non-negative integer"))?,
+            ),
+        };
+        let fading_rho = match v.get("fading_rho") {
+            Json::Null => None,
+            x => Some(
+                x.as_f64()
+                    .ok_or_else(|| bad(path, "'fading_rho' must be a number"))?,
+            ),
+        };
+        let capacity_fraction = match v.get("capacity_fraction") {
+            Json::Null => None,
+            x => Some(
+                x.as_f64()
+                    .ok_or_else(|| bad(path, "'capacity_fraction' must be a number"))?,
+            ),
+        };
+        Ok(CellOverride {
+            cell,
+            max_active,
+            fading_rho,
+            capacity_fraction,
+        })
+    }
+
+    /// Validate one override against the fleet shape and expert count.
+    pub fn validate(&self, cells: usize, experts: usize, path: &str) -> Result<()> {
+        if self.cell >= cells {
+            return Err(bad(
+                path,
+                format!("cell {} out of range for a {cells}-cell fleet", self.cell),
+            ));
+        }
+        if let Some(d) = self.max_active {
+            if d == 0 || d > experts {
+                return Err(bad(
+                    path,
+                    format!("max_active {d} must be in 1..={experts} (expert count)"),
+                ));
+            }
+        }
+        if let Some(r) = self.fading_rho {
+            if !(r.is_finite() && (0.0..1.0).contains(&r)) {
+                return Err(bad(path, format!("fading_rho {r} must be in [0, 1)")));
+            }
+        }
+        if let Some(f) = self.capacity_fraction {
+            if !(f.is_finite() && f > 0.0) {
+                return Err(bad(
+                    path,
+                    format!("capacity_fraction {f} must be positive and finite"),
+                ));
+            }
+        }
+        if self.max_active.is_none() && self.fading_rho.is_none() && self.capacity_fraction.is_none()
+        {
+            return Err(bad(path, "override sets no fields (drop the entry)"));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scale events and the elasticity report
+// ---------------------------------------------------------------------------
+
+/// What a scale event did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleAction {
+    /// Standby slot activated on a load signal.
+    Spawn,
+    /// Least-loaded cell sent into `Draining` on underload.
+    Drain,
+    /// Standby slot activated to replace a crashed cell.
+    Heal,
+}
+
+impl ScaleAction {
+    /// JSON/report tag.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ScaleAction::Spawn => "spawn",
+            ScaleAction::Drain => "drain",
+            ScaleAction::Heal => "heal",
+        }
+    }
+
+    /// Compact glyph for live status lines.
+    pub fn glyph(&self) -> &'static str {
+        match self {
+            ScaleAction::Spawn => "+cell",
+            ScaleAction::Drain => "-cell",
+            ScaleAction::Heal => "heal",
+        }
+    }
+
+    /// Stable code for digests.
+    pub fn code(&self) -> u64 {
+        match self {
+            ScaleAction::Spawn => 1,
+            ScaleAction::Drain => 2,
+            ScaleAction::Heal => 3,
+        }
+    }
+}
+
+/// One autoscaler action, streamed live through
+/// [`EngineObserver::on_scale`] and retained in the elasticity block.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScaleEvent {
+    /// Simulated time the action took effect (spawns/heals land after
+    /// the warm-up budget; drains are immediate).
+    pub at_s: f64,
+    pub action: ScaleAction,
+    pub cell: u32,
+    /// Routable (accepting) cells right after the action.
+    pub routable_after: usize,
+}
+
+/// The report's elasticity block: every scale event, the cells-over-time
+/// trace and the recovery figure, all deterministic and digest-covered.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ElasticityReport {
+    pub events: Vec<ScaleEvent>,
+    pub spawned: usize,
+    pub drained: usize,
+    pub healed: usize,
+    /// `(epoch_t_s, routable_cells)` — one sample per control epoch.
+    pub cells_over_time: Vec<(f64, usize)>,
+    /// Seconds from the first chaos crash to its replacement accepting
+    /// traffic; `None` when nothing healed.
+    pub time_to_recover_s: Option<f64>,
+}
+
+impl ElasticityReport {
+    pub fn to_json(&self) -> Json {
+        let events = Json::Arr(
+            self.events
+                .iter()
+                .map(|e| {
+                    Json::obj(vec![
+                        ("at_s", Json::Num(e.at_s)),
+                        ("action", Json::Str(e.action.label().to_string())),
+                        ("cell", Json::Num(e.cell as f64)),
+                        ("routable_after", Json::Num(e.routable_after as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        let trace = Json::Arr(
+            self.cells_over_time
+                .iter()
+                .map(|&(t, n)| Json::Arr(vec![Json::Num(t), Json::Num(n as f64)]))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("events", events),
+            ("spawned", Json::Num(self.spawned as f64)),
+            ("drained", Json::Num(self.drained as f64)),
+            ("healed", Json::Num(self.healed as f64)),
+            ("cells_over_time", trace),
+            (
+                "time_to_recover",
+                match self.time_to_recover_s {
+                    Some(s) => Json::Num(s),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    /// Fold the elasticity trace into the fleet determinism digest.
+    pub fn digest_into(&self, h: &mut Fnv1a) {
+        h.write_u64(self.events.len() as u64);
+        for e in &self.events {
+            h.write_u64(e.at_s.to_bits());
+            h.write_u64(e.action.code());
+            h.write_u64(e.cell as u64);
+            h.write_u64(e.routable_after as u64);
+        }
+        h.write_u64(self.spawned as u64);
+        h.write_u64(self.drained as u64);
+        h.write_u64(self.healed as u64);
+        h.write_u64(self.cells_over_time.len() as u64);
+        for &(t, n) in &self.cells_over_time {
+            h.write_u64(t.to_bits());
+            h.write_u64(n as u64);
+        }
+        match self.time_to_recover_s {
+            Some(s) => h.write_u64(s.to_bits()),
+            None => h.write_u64(u64::MAX),
+        }
+    }
+
+    /// One render line for the report footer.
+    pub fn render_line(&self) -> String {
+        let span = match (self.cells_over_time.first(), self.cells_over_time.last()) {
+            (Some(&(_, a)), Some(&(_, b))) => format!("{a} -> {b}"),
+            _ => "-".to_string(),
+        };
+        let ttr = match self.time_to_recover_s {
+            Some(s) => format!("{s:.3} s"),
+            None => "n/a".to_string(),
+        };
+        format!(
+            "elasticity: {} scale events ({} spawn / {} drain / {} heal) | routable {span} | time_to_recover {ttr}",
+            self.events.len(),
+            self.spawned,
+            self.drained,
+            self.healed,
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The control loop
+// ---------------------------------------------------------------------------
+
+/// A spawn/heal decision waiting out its warm-up budget.
+#[derive(Debug, Clone, Copy)]
+struct PendingActivation {
+    ready_s: f64,
+    cell: usize,
+    action: ScaleAction,
+    /// Crash instant the heal replaces (drives `time_to_recover`).
+    crash_at_s: f64,
+}
+
+/// The deterministic control loop the lockstep event loop drives.
+///
+/// All state reads happen at arrival barriers where sequential and
+/// lane-parallel execution hold identical cell counters, and every
+/// decision is a pure function of those counters — so the scale-event
+/// log (and with it the whole fleet digest) is bit-identical across
+/// execution modes and repeated runs.
+pub struct AutoscaleController {
+    rt: AutoscaleRuntime,
+    warmup_rounds: usize,
+    next_epoch_s: f64,
+    /// Per-cell counters at the previous epoch (completed, shed).
+    last_completed: Vec<usize>,
+    last_shed: Vec<usize>,
+    pending: Vec<PendingActivation>,
+    /// Chaos crashes noted by the engine, awaiting a replacement.
+    unhealed: Vec<(usize, f64)>,
+    report: ElasticityReport,
+}
+
+impl AutoscaleController {
+    pub fn new(rt: AutoscaleRuntime, total_cells: usize, warmup_rounds: usize) -> Self {
+        let next_epoch_s = rt.period_s;
+        Self {
+            rt,
+            warmup_rounds,
+            next_epoch_s,
+            last_completed: vec![0; total_cells],
+            last_shed: vec![0; total_cells],
+            pending: Vec::new(),
+            unhealed: Vec::new(),
+            report: ElasticityReport::default(),
+        }
+    }
+
+    /// The engine reports a chaos cell crash the moment it applies it on
+    /// the event loop; the next epoch schedules the replacement.
+    pub fn note_crash(&mut self, cell: usize, at_s: f64) {
+        if self.rt.heal {
+            self.unhealed.push((cell, at_s));
+        }
+    }
+
+    /// Drive the controller to the current arrival's timestamp: fire
+    /// due activations and evaluate elapsed epochs, interleaved in time
+    /// order.
+    pub fn tick(&mut self, t_s: f64, cells: &[Mutex<Cell>], obs: &mut dyn EngineObserver) {
+        loop {
+            let ready = self
+                .pending
+                .first()
+                .map(|p| p.ready_s)
+                .filter(|&r| r <= t_s);
+            let epoch_due = self.next_epoch_s <= t_s;
+            match (ready, epoch_due) {
+                (Some(r), true) if r <= self.next_epoch_s => self.fire_activation(cells, obs),
+                (Some(_), false) => self.fire_activation(cells, obs),
+                (_, true) => self.evaluate_epoch(cells, obs),
+                (None, false) => break,
+            }
+        }
+    }
+
+    /// Stream over: commit the decisions still waiting out their warm-up
+    /// (the report reflects operator intent even when the budget falls
+    /// past the last arrival, and `time_to_recover` stays finite).
+    pub fn finish(&mut self, cells: &[Mutex<Cell>], obs: &mut dyn EngineObserver) {
+        while !self.pending.is_empty() {
+            self.fire_activation(cells, obs);
+        }
+    }
+
+    pub fn into_report(self) -> ElasticityReport {
+        self.report
+    }
+
+    fn routable(cells: &[Mutex<Cell>]) -> usize {
+        cells
+            .iter()
+            .filter(|slot| slot.lock().unwrap().accepting())
+            .count()
+    }
+
+    /// Lowest-index standby slot that no pending activation has claimed.
+    fn free_standby(&self, cells: &[Mutex<Cell>]) -> Option<usize> {
+        (0..cells.len()).find(|&c| {
+            cells[c].lock().unwrap().state() == CellState::Standby
+                && !self.pending.iter().any(|p| p.cell == c)
+        })
+    }
+
+    fn fire_activation(&mut self, cells: &[Mutex<Cell>], obs: &mut dyn EngineObserver) {
+        let p = self.pending.remove(0);
+        cells[p.cell].lock().unwrap().activate(self.warmup_rounds);
+        match p.action {
+            ScaleAction::Heal => {
+                if self.report.time_to_recover_s.is_none() {
+                    self.report.time_to_recover_s = Some(p.ready_s - p.crash_at_s);
+                }
+                self.report.healed += 1;
+            }
+            _ => self.report.spawned += 1,
+        }
+        let ev = ScaleEvent {
+            at_s: p.ready_s,
+            action: p.action,
+            cell: p.cell as u32,
+            routable_after: Self::routable(cells),
+        };
+        self.report.events.push(ev);
+        obs.on_scale(&ev);
+    }
+
+    fn evaluate_epoch(&mut self, cells: &[Mutex<Cell>], obs: &mut dyn EngineObserver) {
+        let t = self.next_epoch_s;
+        self.next_epoch_s += self.rt.period_s;
+
+        // Snapshot per-cell counters (ascending index, under each lock —
+        // the loop runs at an arrival barrier, so both execution modes
+        // read identical values here).
+        let n = cells.len();
+        let mut completed = vec![0usize; n];
+        let mut shed = vec![0usize; n];
+        let mut accepting = vec![false; n];
+        let mut latency = LatencyStats::default();
+        for (c, slot) in cells.iter().enumerate() {
+            let cell = slot.lock().unwrap();
+            completed[c] = cell.completed();
+            let (qf, dl) = cell.shed_counts();
+            shed[c] = qf + dl;
+            accepting[c] = cell.accepting();
+            latency.merge(cell.latency_stats());
+        }
+        let routable = accepting.iter().filter(|&&a| a).count();
+        let d_completed: usize = (0..n).map(|c| completed[c] - self.last_completed[c]).sum();
+        let d_shed: usize = (0..n).map(|c| shed[c] - self.last_shed[c]).sum();
+
+        // Signals: utilization vs the calibrated capacity band, epoch
+        // shed fraction, merged p99.
+        let denom = routable.max(1) as f64 * self.rt.cell_capacity_qps * self.rt.period_s;
+        let util = if denom > 0.0 {
+            d_completed as f64 / denom
+        } else {
+            0.0
+        };
+        let shed_frac = if d_completed + d_shed == 0 {
+            0.0
+        } else {
+            d_shed as f64 / (d_completed + d_shed) as f64
+        };
+        let p99_breach = match self.rt.p99_high_s {
+            Some(th) => latency.p99_s() > th && d_completed > 0,
+            None => false,
+        };
+
+        // Committed capacity = routable now + activations in flight.
+        let committed = routable + self.pending.len();
+
+        // 1. Self-heal: every unhealed crash gets a replacement while
+        //    standby slots and the cap allow (crash order, then slot
+        //    order — fully deterministic).
+        let mut still_unhealed = Vec::new();
+        let unhealed = std::mem::take(&mut self.unhealed);
+        for (crashed, at_s) in unhealed {
+            let slot = self.free_standby(cells);
+            match slot {
+                Some(c) if routable + self.pending.len() < self.rt.max_cells => {
+                    self.pending.push(PendingActivation {
+                        ready_s: t + self.rt.warmup_s,
+                        cell: c,
+                        action: ScaleAction::Heal,
+                        crash_at_s: at_s,
+                    });
+                }
+                _ => still_unhealed.push((crashed, at_s)),
+            }
+        }
+        self.unhealed = still_unhealed;
+
+        // 2. Scale up: one slot per epoch above the band.
+        if (util > self.rt.util_high || shed_frac > self.rt.shed_high || p99_breach)
+            && committed < self.rt.max_cells
+        {
+            if let Some(c) = self.free_standby(cells) {
+                self.pending.push(PendingActivation {
+                    ready_s: t + self.rt.warmup_s,
+                    cell: c,
+                    action: ScaleAction::Spawn,
+                    crash_at_s: t,
+                });
+            }
+        }
+        // 3. Scale down: below the band, nothing in flight, and the
+        //    floor holds — drain the least-loaded routable cell (fewest
+        //    completions this epoch; ties keep the lower-index cell
+        //    serving). Draining never drops queries: the cell serves its
+        //    backlog out exactly like a scheduled drain.
+        else if util < self.rt.util_low && self.pending.is_empty() && routable > self.rt.min_cells
+        {
+            let victim = (0..n)
+                .filter(|&c| accepting[c])
+                .min_by_key(|&c| (completed[c] - self.last_completed[c], std::cmp::Reverse(c)));
+            if let Some(c) = victim {
+                cells[c].lock().unwrap().drain();
+                self.report.drained += 1;
+                let ev = ScaleEvent {
+                    at_s: t,
+                    action: ScaleAction::Drain,
+                    cell: c as u32,
+                    routable_after: Self::routable(cells),
+                };
+                self.report.events.push(ev);
+                obs.on_scale(&ev);
+            }
+        }
+
+        self.report
+            .cells_over_time
+            .push((t, Self::routable(cells)));
+        self.last_completed = completed;
+        self.last_shed = shed;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn elastic() -> AutoscaleSpec {
+        AutoscaleSpec {
+            period: Dur::Rounds(4.0),
+            util_low: 0.2,
+            util_high: 0.8,
+            shed_high: 0.1,
+            p99_high: Some(Dur::Seconds(0.5)),
+            min_cells: 2,
+            max_cells: 6,
+            warmup: Dur::Rounds(1.5),
+            heal: true,
+            ..AutoscaleSpec::default()
+        }
+    }
+
+    #[test]
+    fn json_round_trips_bit_identically() {
+        let spec = elastic();
+        let text = spec.to_json().to_string_pretty();
+        let back = AutoscaleSpec::from_json(&Json::parse(&text).unwrap(), "autoscale").unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.to_json().to_string_pretty(), text);
+        // Optional p99 ceiling is omitted and defaults back in.
+        let no_p99 = AutoscaleSpec::default();
+        let text = no_p99.to_json().to_string_pretty();
+        assert!(!text.contains("p99_high"), "{text}");
+        let back = AutoscaleSpec::from_json(&Json::parse(&text).unwrap(), "autoscale").unwrap();
+        assert_eq!(back, no_p99);
+    }
+
+    #[test]
+    fn parse_errors_carry_field_paths() {
+        let bad_period = r#"{"period": {"hours": 1}}"#;
+        let err = format!(
+            "{:#}",
+            AutoscaleSpec::from_json(&Json::parse(bad_period).unwrap(), "scenario.fleet.autoscale")
+                .unwrap_err()
+        );
+        assert!(err.contains("scenario.fleet.autoscale.period"), "{err}");
+
+        let unknown = r#"{"warm_cells": 3}"#;
+        let err = format!(
+            "{:#}",
+            AutoscaleSpec::from_json(&Json::parse(unknown).unwrap(), "scenario.fleet.autoscale")
+                .unwrap_err()
+        );
+        assert!(err.contains("warm_cells"), "{err}");
+
+        let bad_override = r#"{"max_active": 2}"#;
+        let err = format!(
+            "{:#}",
+            CellOverride::from_json(&Json::parse(bad_override).unwrap(), "fleet.overrides[0]")
+                .unwrap_err()
+        );
+        assert!(err.contains("fleet.overrides[0]") && err.contains("cell"), "{err}");
+    }
+
+    #[test]
+    fn validation_rejects_bad_bands_and_ranges() {
+        let ok = elastic();
+        ok.validate(4, "autoscale").unwrap();
+        // Inverted utilization band.
+        let inverted = AutoscaleSpec {
+            util_low: 0.9,
+            util_high: 0.5,
+            ..ok.clone()
+        };
+        let err = format!("{:#}", inverted.validate(4, "a").unwrap_err());
+        assert!(err.contains("util_low"), "{err}");
+        // Cap below the base fleet.
+        let capped = AutoscaleSpec {
+            max_cells: 3,
+            ..ok.clone()
+        };
+        let err = format!("{:#}", capped.validate(4, "a").unwrap_err());
+        assert!(err.contains("max_cells 3"), "{err}");
+        // Floor above the base fleet.
+        let floored = AutoscaleSpec {
+            min_cells: 5,
+            ..ok.clone()
+        };
+        let err = format!("{:#}", floored.validate(4, "a").unwrap_err());
+        assert!(err.contains("min_cells 5"), "{err}");
+
+        // Override validation: range and emptiness.
+        let ov = CellOverride {
+            cell: 9,
+            max_active: Some(1),
+            fading_rho: None,
+            capacity_fraction: None,
+        };
+        let err = format!("{:#}", ov.validate(4, 4, "o").unwrap_err());
+        assert!(err.contains("cell 9 out of range"), "{err}");
+        let wide = CellOverride {
+            cell: 0,
+            max_active: Some(9),
+            fading_rho: None,
+            capacity_fraction: None,
+        };
+        let err = format!("{:#}", wide.validate(4, 4, "o").unwrap_err());
+        assert!(err.contains("max_active 9"), "{err}");
+        let empty = CellOverride {
+            cell: 0,
+            max_active: None,
+            fading_rho: None,
+            capacity_fraction: None,
+        };
+        let err = format!("{:#}", empty.validate(4, 4, "o").unwrap_err());
+        assert!(err.contains("no fields"), "{err}");
+    }
+
+    #[test]
+    fn resolve_fixes_durations_and_capacity() {
+        let rt = elastic().resolve(0.5, 4).unwrap();
+        assert_eq!(rt.period_s, 2.0);
+        assert_eq!(rt.warmup_s, 0.75);
+        assert_eq!(rt.p99_high_s, Some(0.5));
+        assert_eq!(rt.cell_capacity_qps, 8.0);
+        assert!(rt.heal);
+    }
+
+    #[test]
+    fn elasticity_report_digest_is_deterministic_and_sensitive() {
+        let mut r = ElasticityReport::default();
+        r.events.push(ScaleEvent {
+            at_s: 1.5,
+            action: ScaleAction::Heal,
+            cell: 4,
+            routable_after: 4,
+        });
+        r.healed = 1;
+        r.cells_over_time.push((1.0, 3));
+        r.time_to_recover_s = Some(0.75);
+        let digest = |r: &ElasticityReport| {
+            let mut h = Fnv1a::new();
+            r.digest_into(&mut h);
+            h.finish()
+        };
+        let d1 = digest(&r);
+        assert_eq!(d1, digest(&r.clone()));
+        let mut r2 = r.clone();
+        r2.events[0].action = ScaleAction::Spawn;
+        assert_ne!(d1, digest(&r2));
+        let j = r.to_json();
+        assert_eq!(j.get("healed").as_f64(), Some(1.0));
+        assert_eq!(j.get("time_to_recover").as_f64(), Some(0.75));
+        assert!(r.render_line().contains("time_to_recover 0.750 s"));
+        let none = ElasticityReport::default();
+        assert!(none.render_line().contains("time_to_recover n/a"));
+    }
+}

@@ -23,7 +23,9 @@
 //! fading realizations so its AR(1) channel state is mixed before user
 //! traffic lands (and is already routable); a draining cell stops
 //! accepting new arrivals but finishes its backlog; it reports `Drained`
-//! once empty.
+//! once empty. Autoscaled fleets add `Standby` — a provisioned slot
+//! parked off-path until the [`autoscale`](crate::fleet::autoscale)
+//! controller activates it (`Standby → Warming → Active`).
 
 use super::report::CellReport;
 use crate::channel::ChannelModel;
@@ -54,6 +56,9 @@ pub enum CellState {
     /// Failed hard mid-run (chaos): the queue was lost instantly and the
     /// fleet re-routed the orphans; the cell serves nothing further.
     Crashed,
+    /// Provisioned but powered down (an autoscaler slot): not routable
+    /// until [`Cell::activate`] warms it.
+    Standby,
 }
 
 impl CellState {
@@ -64,6 +69,7 @@ impl CellState {
             CellState::Draining => "draining",
             CellState::Drained => "drained",
             CellState::Crashed => "crashed",
+            CellState::Standby => "standby",
         }
     }
 }
@@ -334,9 +340,33 @@ impl Cell {
         }
     }
 
+    /// Park a freshly built cell as an autoscaler standby slot: no
+    /// channel pre-roll, not routable. Only meaningful before traffic
+    /// (the fleet calls it at construction instead of [`Cell::warm`]).
+    pub fn standby(&mut self) {
+        if self.state == CellState::Warming {
+            self.state = CellState::Standby;
+        }
+    }
+
+    /// Activate a standby slot: pre-roll the warm-up realizations and
+    /// start accepting traffic (`Standby → Warming → Active`). The
+    /// cell's AR(1) channel stream is cell-local, so activation draws
+    /// identically in sequential and lane-parallel execution.
+    pub fn activate(&mut self, warmup_rounds: usize) {
+        if self.state == CellState::Standby {
+            self.state = CellState::Warming;
+            self.warm(warmup_rounds);
+        }
+    }
+
     /// Stop accepting new arrivals; the backlog still gets served.
+    /// Standby slots stay parked — there is nothing to drain.
     pub fn drain(&mut self) {
-        if self.state != CellState::Drained && self.state != CellState::Crashed {
+        if !matches!(
+            self.state,
+            CellState::Drained | CellState::Crashed | CellState::Standby
+        ) {
             self.state = CellState::Draining;
         }
     }

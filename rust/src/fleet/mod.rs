@@ -20,6 +20,10 @@
 //!   cell handover.
 //! * [`cell`] — the lane wrapper: per-cell load/latency/energy
 //!   accounting and the warm/drain lifecycle.
+//! * [`autoscale`] — closed-loop elasticity: a deterministic epoch
+//!   controller that spawns standby slots above the utilization band,
+//!   drains the least-loaded cell below it, and self-heals chaos
+//!   crashes; plus per-cell overrides for non-uniform fleets.
 //! * [`router`] — dispatch policies: round-robin, join-shortest-queue,
 //!   and channel-aware (route to the cell with the best expected JESA
 //!   energy for the query's gate profile). The router reads per-cell
@@ -73,11 +77,16 @@
 //! [`ChannelModel`]: crate::channel::ChannelModel
 //! [`CacheStats::cross_hits`]: crate::serve::CacheStats
 
+pub mod autoscale;
 pub mod cell;
 pub mod handover;
 pub mod report;
 pub mod router;
 
+pub use autoscale::{
+    AutoscaleController, AutoscaleRuntime, AutoscaleSpec, CellOverride, ElasticityReport,
+    ScaleAction, ScaleEvent,
+};
 pub use cell::{Cell, CellConfig, CellState, LaneView};
 pub use handover::{CellLayout, Mobility, MobilityConfig};
 pub use report::{CellReport, FleetReport};
@@ -160,6 +169,17 @@ pub struct FleetOptions {
     /// event loop. `None` (the default) is perfect infrastructure with
     /// bit-identical pre-chaos reports.
     pub chaos: Option<ChaosRuntime>,
+    /// Resolved closed-loop elasticity ([`autoscale`]): standby slots up
+    /// to `max_cells` are provisioned at start, and a deterministic
+    /// controller on the lockstep event loop spawns/drains/heals cells
+    /// from epoch signals. `None` (the default) takes exactly the
+    /// pre-elasticity code path — fixed fleet, bit-identical reports.
+    pub autoscale: Option<AutoscaleRuntime>,
+    /// Non-uniform fleets: per-cell deviations from the fleet-wide
+    /// policy/channel/queue configuration (safe with the shared cache —
+    /// the key partitions on the policy and channel signature, so
+    /// heterogeneous cells occupy separate key spaces).
+    pub overrides: Vec<CellOverride>,
 }
 
 impl FleetOptions {
@@ -184,6 +204,8 @@ impl FleetOptions {
             drain_at: Vec::new(),
             record_completions: true,
             chaos: None,
+            autoscale: None,
+            overrides: Vec::new(),
         }
     }
 }
@@ -265,6 +287,30 @@ impl FleetEngine {
                 assert!(at_s >= 0.0, "crash time must be non-negative");
             }
         }
+        if let Some(a) = &opts.autoscale {
+            assert!(a.max_cells >= opts.cells, "autoscale cap below the base fleet");
+            assert!(
+                a.min_cells >= 1 && a.min_cells <= opts.cells,
+                "autoscale floor outside 1..=cells"
+            );
+            assert!(a.period_s > 0.0, "autoscale period must be positive");
+            assert!(a.warmup_s >= 0.0, "autoscale warmup must be non-negative");
+        }
+        for o in &opts.overrides {
+            assert!(o.cell < opts.cells, "override cell {} out of range", o.cell);
+            if let Some(d) = o.max_active {
+                assert!(
+                    d >= 1 && d <= cfg.moe.experts,
+                    "override max_active {d} outside 1..=K"
+                );
+            }
+            if let Some(r) = o.fading_rho {
+                assert!((0.0..1.0).contains(&r), "override fading_rho outside [0, 1)");
+            }
+            if let Some(f) = o.capacity_fraction {
+                assert!(f > 0.0 && f.is_finite(), "override capacity_fraction must be positive");
+            }
+        }
         if opts.cache_capacity > 0 {
             opts.quant.validate();
         }
@@ -304,6 +350,9 @@ impl FleetEngine {
         self.opts.route == RoutePolicy::RoundRobin
             && self.opts.drain_at.is_empty()
             && self.opts.chaos.as_ref().map_or(true, |c| c.crashes.is_empty())
+            // The autoscaler reads live queue state at epoch barriers,
+            // so elastic fleets always run the lockstep loop.
+            && self.opts.autoscale.is_none()
     }
 
     /// Run one fleet simulation over a global traffic stream.
@@ -336,7 +385,17 @@ impl FleetEngine {
             self.opts.quant.clone()
         };
 
-        let layout = CellLayout::grid(self.opts.cells, self.opts.spacing_m);
+        // Elastic fleets provision every slot up to the cap at start —
+        // slots beyond the base cell count park in `Standby` until the
+        // controller activates them. Autoscale-off keeps exactly the
+        // base fleet, so those reports stay byte-identical to
+        // pre-elasticity builds.
+        let total_cells = self
+            .opts
+            .autoscale
+            .as_ref()
+            .map_or(self.opts.cells, |a| a.max_cells.max(self.opts.cells));
+        let layout = CellLayout::grid(total_cells, self.opts.spacing_m);
         let mut mobility = Mobility::new(
             MobilityConfig {
                 seed: self.opts.mobility.seed ^ self.opts.seed,
@@ -350,14 +409,35 @@ impl FleetEngine {
             self.effective_shards(),
         );
         let energy = EnergyModel::new(self.cfg.channel.clone(), self.cfg.energy.clone());
-        let cells: Vec<Mutex<Cell>> = (0..self.opts.cells)
+        let cells: Vec<Mutex<Cell>> = (0..total_cells)
             .map(|c| {
+                // Non-uniform fleets: apply this cell's overrides to a
+                // clone of the fleet-wide config. A distinct max_active
+                // or fading stream lands in its own solution-cache key
+                // space, so heterogeneity cannot cross-contaminate.
+                let ov = self.opts.overrides.iter().find(|o| o.cell == c);
+                let mut policy = self.opts.policy.clone();
+                let mut queue = self.opts.queue.clone();
+                let mut fading_rho = self.opts.fading_rho;
+                if let Some(ov) = ov {
+                    if let Some(d) = ov.max_active {
+                        policy.max_active = d;
+                    }
+                    if let Some(r) = ov.fading_rho {
+                        fading_rho = r;
+                    }
+                    if let Some(f) = ov.capacity_fraction {
+                        queue.capacity = ((queue.capacity as f64 * f).round() as usize)
+                            .max(queue.batch_queries)
+                            .max(1);
+                    }
+                }
                 let mut cell = Cell::new(
                     &self.cfg,
                     CellConfig {
                         id: c as u32,
-                        policy: self.opts.policy.clone(),
-                        queue: self.opts.queue.clone(),
+                        policy,
+                        queue,
                         quant: quant.clone(),
                         caching,
                         workers: self.opts.workers,
@@ -366,17 +446,29 @@ impl FleetEngine {
                             .opts
                             .seed
                             .wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(c as u64 + 1)),
-                        fading_rho: self.opts.fading_rho,
+                        fading_rho,
                         record_completions: self.opts.record_completions,
                         chaos: self.opts.chaos.clone(),
                     },
                 );
-                cell.warm(self.opts.warmup_rounds);
+                if c < self.opts.cells {
+                    cell.warm(self.opts.warmup_rounds);
+                } else {
+                    cell.standby();
+                }
                 Mutex::new(cell)
             })
             .collect();
         let mut router = Router::new(self.opts.route);
         let mut sessions = SessionTracker::new(mobility.users());
+        // The controller's decisions are pure functions of cell counters
+        // read at arrival barriers, so the scale-event log (and the
+        // digest it folds into) is identical sequential vs lane-parallel.
+        let mut controller = self
+            .opts
+            .autoscale
+            .as_ref()
+            .map(|rt| AutoscaleController::new(rt.clone(), total_cells, self.opts.warmup_rounds));
 
         let lanes = self.effective_lanes();
         if lanes >= 2 && self.static_routing() {
@@ -394,6 +486,7 @@ impl FleetEngine {
             );
         } else if lanes >= 2 {
             let executor = Executor::new(lanes);
+            let ctrl = controller.as_mut();
             executor.scope(|scope| {
                 self.run_lockstep(
                     arrivals,
@@ -405,6 +498,7 @@ impl FleetEngine {
                     &energy,
                     Some(scope),
                     &mut sessions,
+                    ctrl,
                     obs,
                 )
             });
@@ -419,9 +513,11 @@ impl FleetEngine {
                 &energy,
                 None,
                 &mut sessions,
+                controller.as_mut(),
                 obs,
             );
         }
+        let elasticity = controller.map(AutoscaleController::into_report);
 
         // Aggregate (deterministic merge order: ascending cell index).
         let mut completions: Vec<Completion> = Vec::new();
@@ -527,6 +623,7 @@ impl FleetEngine {
             completions,
             pattern,
             metrics,
+            elasticity,
         }
     }
 
@@ -589,6 +686,7 @@ impl FleetEngine {
         energy: &EnergyModel,
         scope: Option<&TaskScope<'_, 'env>>,
         sessions: &mut SessionTracker,
+        mut ctrl: Option<&mut AutoscaleController>,
         obs: &mut dyn EngineObserver,
     ) {
         let users = mobility.users();
@@ -633,6 +731,16 @@ impl FleetEngine {
                 self.apply_crash(
                     c, at, cells, cache, mobility, layout, router, energy, sessions, obs,
                 );
+                if let Some(ctrl) = ctrl.as_deref_mut() {
+                    ctrl.note_crash(c, at);
+                }
+            }
+            // Elasticity: fire due activations and evaluate elapsed
+            // control epochs before this arrival routes, so the router
+            // sees the post-decision fleet (deterministic — the
+            // controller runs here, on the event loop, in both modes).
+            if let Some(ctrl) = ctrl.as_deref_mut() {
+                ctrl.tick(t, cells, obs);
             }
             // Advance the world to this arrival: mobility first, then
             // every cell's radio regime and due rounds — so the router
@@ -709,6 +817,12 @@ impl FleetEngine {
             self.apply_crash(
                 c, at, cells, cache, mobility, layout, router, energy, sessions, obs,
             );
+            if let Some(ctrl) = ctrl.as_deref_mut() {
+                ctrl.note_crash(c, at);
+            }
+        }
+        if let Some(ctrl) = ctrl.as_deref_mut() {
+            ctrl.finish(cells, obs);
         }
         for (c, slot) in cells.iter().enumerate() {
             let mut cell = slot.lock().unwrap();

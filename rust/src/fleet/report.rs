@@ -1,6 +1,7 @@
 //! Fleet-level aggregation: per-cell snapshots plus the fleet totals,
 //! tail latencies, shed/handover rates and load-imbalance indices.
 
+use super::autoscale::ElasticityReport;
 use crate::chaos::ChaosReport;
 use crate::energy::EnergyBreakdown;
 use crate::metrics::{Metrics, SelectionPattern};
@@ -79,6 +80,12 @@ pub struct FleetReport {
     pub completions: Vec<Completion>,
     pub pattern: SelectionPattern,
     pub metrics: Metrics,
+    /// Autoscaler trace (scale events, cells-over-time, time-to-recover)
+    /// — populated exactly when the run had an autoscale section
+    /// ([`FleetOptions::autoscale`](crate::fleet::FleetOptions::autoscale)),
+    /// so autoscale-off reports stay byte-identical to pre-elasticity
+    /// builds.
+    pub elasticity: Option<ElasticityReport>,
 }
 
 impl FleetReport {
@@ -173,14 +180,27 @@ impl FleetReport {
         }
     }
 
+    /// Per-cell completions of the cells that took part in serving.
+    /// Crashed, drained and standby cells are excluded: a retired or
+    /// never-activated cell would drag the mean toward zero and
+    /// overstate imbalance — exactly the signal skew the autoscaler
+    /// must not react to.
     fn per_cell_completed(&self) -> Vec<f64> {
-        self.cells.iter().map(|c| c.completed as f64).collect()
+        self.cells
+            .iter()
+            .filter(|c| !matches!(c.state, "crashed" | "drained" | "standby"))
+            .map(|c| c.completed as f64)
+            .collect()
     }
 
     /// Peak-to-mean load-imbalance index over per-cell completions
-    /// (1.0 = perfectly balanced).
+    /// (1.0 = perfectly balanced). Computed over serving cells only —
+    /// see [`per_cell_completed`](Self::per_cell_completed).
     pub fn imbalance(&self) -> f64 {
         let xs = self.per_cell_completed();
+        if xs.is_empty() {
+            return 1.0;
+        }
         let mean = stats::mean(&xs);
         if mean <= 0.0 {
             1.0
@@ -191,9 +211,13 @@ impl FleetReport {
 
     /// Jain fairness index over per-cell completions
     /// (`(Σx)² / (n·Σx²)`; 1.0 = perfectly balanced, `1/n` = one hot
-    /// cell).
+    /// cell). Computed over serving cells only — see
+    /// [`per_cell_completed`](Self::per_cell_completed).
     pub fn jain_index(&self) -> f64 {
         let xs = self.per_cell_completed();
+        if xs.is_empty() {
+            return 1.0;
+        }
         let sum: f64 = xs.iter().sum();
         let sq: f64 = xs.iter().map(|x| x * x).sum();
         if sq <= 0.0 {
@@ -248,6 +272,12 @@ impl FleetReport {
         // run digests exactly as a pre-chaos build.
         if let Some(c) = &self.chaos {
             c.digest_into(&mut h);
+        }
+        // Same contract for the elasticity trace: the scale-event log is
+        // deterministic, so it belongs in the digest — and autoscale-off
+        // runs digest exactly as pre-elasticity builds.
+        if let Some(e) = &self.elasticity {
+            e.digest_into(&mut h);
         }
         h.finish()
     }
@@ -310,6 +340,10 @@ impl FleetReport {
         // byte-identical to a pre-chaos build (no schema bump needed).
         if let Some(c) = &self.chaos {
             fields.push(("chaos", c.to_json(self.generated, self.completed)));
+        }
+        // Additive, autoscale-on only — same byte-identity contract.
+        if let Some(e) = &self.elasticity {
+            fields.push(("elasticity", e.to_json()));
         }
         Json::obj(fields)
     }
@@ -376,6 +410,10 @@ impl FleetReport {
         ));
         if let Some(c) = &self.chaos {
             out.push_str(&c.render_line(self.generated, self.completed));
+            out.push('\n');
+        }
+        if let Some(e) = &self.elasticity {
+            out.push_str(&e.render_line());
             out.push('\n');
         }
         out.push_str(&format!("report digest 0x{:016x}\n", self.digest()));

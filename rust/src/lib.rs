@@ -12,7 +12,8 @@
 //!   named preset library (`paper-baseline`, `urban-macro-jsq`,
 //!   `flash-crowd-mmpp`, `handover-storm`,
 //!   `cache-cold-heterogeneous-gamma`, `low-qos-energy-saver`,
-//!   `expert-flap`, `cell-crash-storm`),
+//!   `expert-flap`, `cell-crash-storm`, `flash-crowd-autoscale`,
+//!   `crash-storm-selfheal`),
 //!   bit-identical JSON round-trips, and the unified execution facade:
 //!   the [`Engine`](scenario::Engine) trait + [`RunReport`](scenario::RunReport)
 //!   both engines implement, plus streaming
@@ -36,7 +37,10 @@
 //!   path loss and mid-session handover, and one shared sharded solution
 //!   cache (cross-cell hits). Cells execute lane-parallel on the
 //!   work-stealing executor with a bit-identical report (see the fleet
-//!   module's concurrency model / determinism contract).
+//!   module's concurrency model / determinism contract). The
+//!   [`fleet::autoscale`] controller closes the loop: epoch-driven
+//!   spawn/drain/heal decisions over standby slots (elastic fleets,
+//!   crash replacement) plus per-cell overrides for non-uniform cells.
 //! * [`chaos`] — scenario-driven failure & churn injection: a seeded,
 //!   schema-versioned [`ChaosSpec`](chaos::ChaosSpec) scheduling expert
 //!   outages (driven into the DES forced-exclusion mask), transient

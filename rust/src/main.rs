@@ -740,6 +740,8 @@ fn scenario_from_fleet_flags(args: &Args) -> Result<Scenario> {
             ..dmoe::fleet::MobilityConfig::default()
         },
         drains: Vec::new(),
+        autoscale: None,
+        overrides: Vec::new(),
         lane_workers: args
             .get("lane-workers")
             .map(|_| args.get_usize("lane-workers", 0)),

@@ -449,6 +449,16 @@ pub fn prepare_opts(scenario: &Scenario, popts: &PrepareOptions) -> Result<Prepa
             fopts.drain_at = f.drains.clone();
             fopts.record_completions = popts.record_completions;
             fopts.chaos = chaos;
+            // Resolve the autoscale control loop against the calibrated
+            // round latency: round-relative epochs/warm-ups become
+            // seconds, and the per-cell capacity band is anchored to the
+            // same K-queries-per-round throughput the rate calibration
+            // used.
+            fopts.autoscale = match &f.autoscale {
+                None => None,
+                Some(a) => Some(a.resolve(round_s, k)?),
+            };
+            fopts.overrides = f.overrides.clone();
             EngineHandle::Fleet(FleetEngine::new(cfg, fopts))
         }
     };

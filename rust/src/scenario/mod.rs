@@ -28,11 +28,12 @@
 //!   ([`PRESET_NAMES`]): `paper-baseline`, `urban-macro-jsq`,
 //!   `flash-crowd-mmpp`, `handover-storm`,
 //!   `cache-cold-heterogeneous-gamma`, `low-qos-energy-saver`,
-//!   `expert-flap`, `cell-crash-storm`.
+//!   `expert-flap`, `cell-crash-storm`, `flash-crowd-autoscale`,
+//!   `crash-storm-selfheal`.
 //! * [`engine`] — the [`Engine`] trait + [`RunReport`] enum both engines
 //!   implement, and [`prepare`]/[`run`]/[`run_observed`].
 //! * [`observer`] — the [`EngineObserver`] hook trait (round / shed /
-//!   handover / cache events) for streaming consumers, with its
+//!   handover / scale / cache events) for streaming consumers, with its
 //!   per-engine delivery contract.
 //!
 //! Expert-selection solvers are chosen **by name** through the

@@ -10,9 +10,10 @@
 //!   admission control drops a query, and one final
 //!   [`EngineObserver::on_cache`] call with the run's cumulative
 //!   solution-cache stats.
-//! * **[`FleetEngine`]** streams [`HandoverEvent`]s live (routing is
-//!   sequential in every execution mode, so handovers arrive in global
-//!   arrival order), then — because cells execute their rounds in
+//! * **[`FleetEngine`]** streams [`HandoverEvent`]s and autoscaler
+//!   [`ScaleEvent`]s live (routing and scale decisions run sequentially
+//!   on the event loop in every execution mode, so both arrive in
+//!   global time order), then — because cells execute their rounds in
 //!   parallel on the lane executor — replays each cell's
 //!   [`RoundEvent`]s/[`ShedEvent`]s (and, when completion recording is
 //!   enabled, [`CompletionEvent`]s) *after* the run, in ascending cell
@@ -31,6 +32,7 @@
 //! [`ServeEngine`]: crate::serve::ServeEngine
 //! [`FleetEngine`]: crate::fleet::FleetEngine
 
+use crate::fleet::autoscale::ScaleEvent;
 use crate::serve::{CacheStats, ShedReason};
 
 /// One executed round (a cell id of 0 for the single-lane serve engine).
@@ -90,6 +92,10 @@ pub trait EngineObserver {
     fn on_completion(&mut self, _event: &CompletionEvent) {}
     fn on_shed(&mut self, _event: &ShedEvent) {}
     fn on_handover(&mut self, _event: &HandoverEvent) {}
+    /// One autoscaler action (fleet only; streamed live — scale
+    /// decisions run on the lockstep event loop, like handovers). See
+    /// [`ScaleEvent`](crate::fleet::autoscale::ScaleEvent).
+    fn on_scale(&mut self, _event: &ScaleEvent) {}
     /// Called once at the end of the run with the cumulative
     /// solution-cache statistics.
     fn on_cache(&mut self, _stats: &CacheStats) {}

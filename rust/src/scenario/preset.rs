@@ -14,6 +14,8 @@
 //! | `low-qos-energy-saver` | serve | lowered QoS + greedy selector on a diurnal curve |
 //! | `expert-flap` | serve | flapping expert outages + lossy links: degraded-mode QoS |
 //! | `cell-crash-storm` | fleet | mid-run cell crashes with re-routing under expert churn |
+//! | `flash-crowd-autoscale` | fleet | MMPP burst into an elastic fleet: spawn-on-overload band |
+//! | `crash-storm-selfheal` | fleet | cell-crash storm with the healing autoscaler replacing losses |
 
 use super::spec::{
     CacheSpec, Dur, FleetSpec, PolicySpec, ProcessSpec, QuantSpec, QueueSpec, RateSpec, Scenario,
@@ -21,7 +23,7 @@ use super::spec::{
 };
 use crate::chaos::{ChaosSpec, ExpertOutage, LinkFaultSpec};
 use crate::config::SystemConfig;
-use crate::fleet::{MobilityConfig, RoutePolicy};
+use crate::fleet::{AutoscaleSpec, MobilityConfig, RoutePolicy};
 use crate::selection::SelectorSpec;
 use crate::serve::EvictionPolicy;
 use crate::util::error::{Error, Result};
@@ -36,6 +38,8 @@ pub const PRESET_NAMES: &[&str] = &[
     "low-qos-energy-saver",
     "expert-flap",
     "cell-crash-storm",
+    "flash-crowd-autoscale",
+    "crash-storm-selfheal",
 ];
 
 /// Resolve a preset by name. The error lists every known preset.
@@ -49,6 +53,8 @@ pub fn preset(name: &str) -> Result<Scenario> {
         "low-qos-energy-saver" => low_qos_energy_saver(),
         "expert-flap" => expert_flap(),
         "cell-crash-storm" => cell_crash_storm(),
+        "flash-crowd-autoscale" => flash_crowd_autoscale(),
+        "crash-storm-selfheal" => crash_storm_selfheal(),
         other => {
             return Err(Error::msg(format!(
                 "unknown scenario preset '{other}' (known: {})",
@@ -294,6 +300,103 @@ fn cell_crash_storm() -> Result<Scenario> {
         .build()
 }
 
+/// The elastic answer to the flash crowd: the same MMPP burst profile as
+/// `flash-crowd-mmpp`, but offered to a 2-cell fleet that is allowed to
+/// grow to 5 cells. Bursts push utilization (and shed fraction) through
+/// the top of the band, the autoscaler activates standby cells, and the
+/// troughs drain them back down — compare against a static `--cells 2`
+/// run to see what elasticity buys.
+fn flash_crowd_autoscale() -> Result<Scenario> {
+    Scenario::builder("flash-crowd-autoscale")
+        .policy(PolicySpec::jesa(0.8, 2))
+        .traffic(TrafficSpec {
+            queries: 5_000,
+            process: ProcessSpec::Bursty {
+                dwell: Dur::Rounds(40.0),
+            },
+            rate: RateSpec::Utilization(0.85),
+            ..TrafficSpec::default()
+        })
+        .queue(QueueSpec {
+            deadline: Some(Dur::Rounds(6.0)),
+            ..QueueSpec::default()
+        })
+        .fleet(FleetSpec {
+            cells: 2,
+            route: RoutePolicy::JoinShortestQueue,
+            spacing_m: 200.0,
+            fading_rho: 0.9,
+            mobility: MobilityConfig {
+                users: 48,
+                mean_speed_mps: 1.5,
+                ..MobilityConfig::default()
+            },
+            autoscale: Some(AutoscaleSpec {
+                period: Dur::Rounds(6.0),
+                util_low: 0.25,
+                util_high: 0.8,
+                shed_high: 0.05,
+                min_cells: 1,
+                max_cells: 5,
+                warmup: Dur::Rounds(2.0),
+                heal: true,
+                ..AutoscaleSpec::default()
+            }),
+            ..FleetSpec::default()
+        })
+        .build()
+}
+
+/// `cell-crash-storm` with the self-healing autoscaler switched on: the
+/// same two mid-run crashes, but each lost cell is replaced from standby
+/// after a 2-round warm-up, so availability recovers instead of staying
+/// degraded. The wide utilization band (no drain below 0, spawn only
+/// past 0.95 or 50% shed) keeps the controller quiet except for heals —
+/// ci.sh gates on a finite time-to-recover and a reproducible digest.
+fn crash_storm_selfheal() -> Result<Scenario> {
+    Scenario::builder("crash-storm-selfheal")
+        .policy(PolicySpec::jesa(0.8, 2))
+        .traffic(TrafficSpec {
+            queries: 4_000,
+            rate: RateSpec::Utilization(0.6),
+            ..TrafficSpec::default()
+        })
+        .fleet(FleetSpec {
+            cells: 4,
+            route: RoutePolicy::JoinShortestQueue,
+            spacing_m: 250.0,
+            fading_rho: 0.9,
+            mobility: MobilityConfig {
+                users: 64,
+                mean_speed_mps: 1.5,
+                ..MobilityConfig::default()
+            },
+            autoscale: Some(AutoscaleSpec {
+                period: Dur::Rounds(4.0),
+                util_low: 0.0,
+                util_high: 0.95,
+                shed_high: 0.5,
+                min_cells: 2,
+                max_cells: 6,
+                warmup: Dur::Rounds(2.0),
+                heal: true,
+                ..AutoscaleSpec::default()
+            }),
+            ..FleetSpec::default()
+        })
+        .chaos(ChaosSpec {
+            seed: 23,
+            expert_outages: vec![ExpertOutage {
+                expert: 3,
+                down_at: Dur::Rounds(3.0),
+                up_at: Dur::Rounds(25.0),
+            }],
+            cell_crashes: vec![(1, Dur::Rounds(6.0)), (3, Dur::Rounds(14.0))],
+            ..ChaosSpec::default()
+        })
+        .build()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -325,6 +428,25 @@ mod tests {
         // Pre-chaos presets stay chaos-free: their reports and digests
         // must remain byte-identical to earlier builds.
         assert!(preset("paper-baseline").unwrap().chaos.is_none());
+    }
+
+    #[test]
+    fn autoscale_presets_carry_autoscale_sections() {
+        for name in ["flash-crowd-autoscale", "crash-storm-selfheal"] {
+            let s = preset(name).unwrap();
+            let f = s.fleet.as_ref().expect("autoscale presets are fleets");
+            let a = f.autoscale.as_ref().expect("autoscale section present");
+            assert!(a.max_cells > f.cells, "{name}: needs standby headroom");
+            assert!(a.heal, "{name}: healing on");
+        }
+        // The healer must have crashes to heal, and the pre-elastic
+        // fleet presets stay autoscale-free so their digests hold.
+        let storm = preset("crash-storm-selfheal").unwrap();
+        assert!(!storm.chaos.unwrap().cell_crashes.is_empty());
+        for name in ["urban-macro-jsq", "handover-storm", "cell-crash-storm"] {
+            let s = preset(name).unwrap();
+            assert!(s.fleet.unwrap().autoscale.is_none(), "{name}");
+        }
     }
 
     #[test]

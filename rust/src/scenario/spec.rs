@@ -21,7 +21,7 @@
 use crate::chaos::ChaosSpec;
 use crate::config::SystemConfig;
 use crate::coordinator::ServePolicy;
-use crate::fleet::{MobilityConfig, RoutePolicy};
+use crate::fleet::{AutoscaleSpec, CellOverride, MobilityConfig, RoutePolicy};
 use crate::selection::SelectorSpec;
 use crate::serve::{ArrivalProcess, EvictionPolicy, QuantizerConfig, QueueConfig};
 use crate::util::error::{Error, Result};
@@ -884,6 +884,13 @@ pub struct FleetSpec {
     pub mobility: MobilityConfig,
     /// Scheduled drains: `(cell, at_s)`.
     pub drains: Vec<(usize, f64)>,
+    /// Closed-loop elasticity ([`crate::fleet::autoscale`]); absent =
+    /// fixed fleet (and a document bit-identical to pre-elasticity
+    /// builds).
+    pub autoscale: Option<AutoscaleSpec>,
+    /// Non-uniform fleets: per-cell deviations from the fleet-wide
+    /// configuration; empty = homogeneous cells.
+    pub overrides: Vec<CellOverride>,
     /// Lane parallelism; `None` = auto (cores, capped at the cell
     /// count), `Some(0)` pins the sequential event loop.
     pub lane_workers: Option<usize>,
@@ -898,6 +905,8 @@ impl Default for FleetSpec {
             fading_rho: 0.9,
             mobility: MobilityConfig::default(),
             drains: Vec::new(),
+            autoscale: None,
+            overrides: Vec::new(),
             lane_workers: None,
         }
     }
@@ -911,6 +920,8 @@ impl FleetSpec {
         "fading_rho",
         "mobility",
         "drains",
+        "autoscale",
+        "overrides",
         "lane_workers",
     ];
     const MOBILITY_KEYS: &'static [&'static str] = &[
@@ -956,6 +967,17 @@ impl FleetSpec {
                 ),
             ),
         ];
+        // Additive, elasticity-only sections: omitted when unset so an
+        // autoscale-off document stays byte-identical to older builds.
+        if let Some(a) = &self.autoscale {
+            fields.push(("autoscale", a.to_json()));
+        }
+        if !self.overrides.is_empty() {
+            fields.push((
+                "overrides",
+                Json::Arr(self.overrides.iter().map(|o| o.to_json()).collect()),
+            ));
+        }
         if let Some(lw) = self.lane_workers {
             fields.push(("lane_workers", Json::Num(lw as f64)));
         }
@@ -1018,6 +1040,23 @@ impl FleetSpec {
                 out
             }
         };
+        let autoscale = match v.get("autoscale") {
+            Json::Null => None,
+            a => Some(AutoscaleSpec::from_json(a, &format!("{path}.autoscale"))?),
+        };
+        let overrides = match v.get("overrides") {
+            Json::Null => Vec::new(),
+            os => {
+                let arr = os
+                    .as_arr()
+                    .ok_or_else(|| bad(path, "'overrides' must be an array of override objects"))?;
+                let mut out = Vec::with_capacity(arr.len());
+                for (i, o) in arr.iter().enumerate() {
+                    out.push(CellOverride::from_json(o, &format!("{path}.overrides[{i}]"))?);
+                }
+                out
+            }
+        };
         Ok(FleetSpec {
             cells: get_usize(v, "cells", d.cells, path)?,
             route,
@@ -1025,11 +1064,13 @@ impl FleetSpec {
             fading_rho: get_f64(v, "fading_rho", d.fading_rho, path)?,
             mobility,
             drains,
+            autoscale,
+            overrides,
             lane_workers: opt_usize(v, "lane_workers", path)?,
         })
     }
 
-    fn validate(&self, path: &str) -> Result<()> {
+    fn validate(&self, experts: usize, path: &str) -> Result<()> {
         crate::ensure!(self.cells >= 1, "{path}: a fleet needs at least one cell");
         crate::ensure!(
             self.spacing_m > 0.0 && self.spacing_m.is_finite(),
@@ -1071,6 +1112,20 @@ impl FleetSpec {
                 at_s >= 0.0 && at_s.is_finite(),
                 "{path}.drains: drain time must be non-negative and finite, got {at_s}"
             );
+        }
+        if let Some(a) = &self.autoscale {
+            a.validate(self.cells, &format!("{path}.autoscale"))?;
+        }
+        let mut seen = Vec::with_capacity(self.overrides.len());
+        for (i, o) in self.overrides.iter().enumerate() {
+            let opath = format!("{path}.overrides[{i}]");
+            o.validate(self.cells, experts, &opath)?;
+            crate::ensure!(
+                !seen.contains(&o.cell),
+                "{opath}: duplicate override for cell {}",
+                o.cell
+            );
+            seen.push(o.cell);
         }
         Ok(())
     }
@@ -1171,7 +1226,7 @@ impl Scenario {
             self.quant.validate("scenario.quant")?;
         }
         if let Some(f) = &self.fleet {
-            f.validate("scenario.fleet")?;
+            f.validate(k, "scenario.fleet")?;
         }
         if let Some(c) = &self.chaos {
             let cells = self.fleet.as_ref().map_or(1, |f| f.cells);

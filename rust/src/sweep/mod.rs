@@ -6,9 +6,9 @@
 //!
 //! * [`spec`] — the schema-versioned [`SweepSpec`] document: a base
 //!   [`Scenario`](crate::scenario::Scenario) (preset name or inline
-//!   object) plus axes over cells, selector, traffic process/rate,
-//!   the importance factor γ₀, and seed, expanded deterministically to
-//!   a named point grid.
+//!   object) plus axes over cells, chaos, autoscale, selector, traffic
+//!   process/rate, the importance factor γ₀, and seed, expanded
+//!   deterministically to a named point grid.
 //! * [`runner`] — [`run_sweep`]: fans the grid out on the
 //!   work-stealing executor ([`util::executor`](crate::util::executor),
 //!   one lane per point), writes one PR-6 run artifact per point plus

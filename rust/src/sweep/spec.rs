@@ -2,9 +2,10 @@
 //!
 //! A [`SweepSpec`] is the grid analogue of a `Scenario`: one
 //! schema-versioned JSON document naming a base scenario (a preset name
-//! or an inline scenario object) and up to seven axes — `cells`, the
-//! failure-injection `chaos` section, `selector`, traffic `process` /
-//! `rate`, the importance factor `gamma0`, and `seed`.
+//! or an inline scenario object) and up to eight axes — `cells`, the
+//! failure-injection `chaos` section, the elastic-fleet `autoscale`
+//! section, `selector`, traffic `process` / `rate`, the importance
+//! factor `gamma0`, and `seed`.
 //! [`SweepSpec::expand`] takes the cartesian
 //! product in a fixed nesting order (cells outermost, seed innermost)
 //! and yields one fully-validated [`SweepPoint`] scenario per grid
@@ -14,6 +15,7 @@
 //! bit-for-bit (see [`crate::sweep::check`]).
 
 use crate::chaos::ChaosSpec;
+use crate::fleet::AutoscaleSpec;
 use crate::scenario::{PolicyKind, ProcessSpec, RateSpec, Scenario};
 use crate::selection::SelectorSpec;
 use crate::util::error::{Context, Error, Result};
@@ -42,6 +44,10 @@ pub struct Axes {
     /// Failure-injection sections ([`ChaosSpec`]); each value replaces
     /// the base scenario's `chaos` section wholesale.
     pub chaos: Vec<ChaosSpec>,
+    /// Elastic-fleet control loops ([`AutoscaleSpec`]); each value
+    /// replaces the base fleet's `autoscale` section wholesale.
+    /// Requires a fleet-shaped base (or a `cells` axis value > 1).
+    pub autoscale: Vec<AutoscaleSpec>,
     /// Selector registry names (`des`, `topk:K`, …).
     pub selector: Vec<SelectorSpec>,
     /// Traffic arrival processes.
@@ -56,13 +62,15 @@ pub struct Axes {
 }
 
 impl Axes {
-    const KEYS: &'static [&'static str] =
-        &["cells", "chaos", "gamma0", "process", "rate", "seed", "selector"];
+    const KEYS: &'static [&'static str] = &[
+        "autoscale", "cells", "chaos", "gamma0", "process", "rate", "seed", "selector",
+    ];
 
     /// True when no axis has any values (the grid is the bare base).
     pub fn is_empty(&self) -> bool {
         self.cells.is_empty()
             && self.chaos.is_empty()
+            && self.autoscale.is_empty()
             && self.selector.is_empty()
             && self.process.is_empty()
             && self.rate.is_empty()
@@ -210,6 +218,12 @@ impl SweepSpec {
                 Json::Arr(self.axes.chaos.iter().map(|c| c.to_json()).collect()),
             ));
         }
+        if !self.axes.autoscale.is_empty() {
+            axes.push((
+                "autoscale",
+                Json::Arr(self.axes.autoscale.iter().map(|a| a.to_json()).collect()),
+            ));
+        }
         if !self.axes.selector.is_empty() {
             axes.push((
                 "selector",
@@ -315,6 +329,14 @@ impl SweepSpec {
                     for (i, x) in arr.iter().enumerate() {
                         axes.chaos
                             .push(ChaosSpec::from_json(x, &format!("sweep.axes.chaos[{i}]"))?);
+                    }
+                }
+                if let Some(arr) = get_arr(a, "autoscale", "sweep.axes")? {
+                    for (i, x) in arr.iter().enumerate() {
+                        axes.autoscale.push(AutoscaleSpec::from_json(
+                            x,
+                            &format!("sweep.axes.autoscale[{i}]"),
+                        )?);
                     }
                 }
                 if let Some(arr) = get_arr(a, "selector", "sweep.axes")? {
@@ -430,12 +452,14 @@ impl SweepSpec {
     }
 
     /// Cartesian product in the fixed nesting order
-    /// cells × chaos × selector × process × rate × gamma0 × seed (seed
-    /// innermost). Always yields at least one point (the bare base).
+    /// cells × chaos × autoscale × selector × process × rate × gamma0 ×
+    /// seed (seed innermost). Always yields at least one point (the
+    /// bare base).
     pub fn expand(&self) -> Result<Vec<SweepPoint>> {
         let base = self.base_scenario()?;
         let cells = slots(&self.axes.cells);
         let chaoses = slots(&self.axes.chaos);
+        let autoscales = slots(&self.axes.autoscale);
         let selectors = slots(&self.axes.selector);
         let processes = slots(&self.axes.process);
         let rates = slots(&self.axes.rate);
@@ -445,21 +469,23 @@ impl SweepSpec {
         let mut points = Vec::new();
         for c in &cells {
             for ch in &chaoses {
-                for sel in &selectors {
-                    for pr in &processes {
-                        for ra in &rates {
-                            for g in &gammas {
-                                for sd in &seeds {
-                                    let index = points.len();
-                                    let name = format!("p{index:03}");
-                                    let (labels, scenario) =
-                                        self.apply(&base, &name, c, ch, sel, pr, ra, g, sd)?;
-                                    points.push(SweepPoint {
-                                        index,
-                                        name,
-                                        labels,
-                                        scenario,
-                                    });
+                for a in &autoscales {
+                    for sel in &selectors {
+                        for pr in &processes {
+                            for ra in &rates {
+                                for g in &gammas {
+                                    for sd in &seeds {
+                                        let index = points.len();
+                                        let name = format!("p{index:03}");
+                                        let (labels, scenario) = self
+                                            .apply(&base, &name, c, ch, a, sel, pr, ra, g, sd)?;
+                                        points.push(SweepPoint {
+                                            index,
+                                            name,
+                                            labels,
+                                            scenario,
+                                        });
+                                    }
                                 }
                             }
                         }
@@ -477,6 +503,7 @@ impl SweepSpec {
         point: &str,
         cells: &Option<usize>,
         chaos: &Option<ChaosSpec>,
+        autoscale: &Option<AutoscaleSpec>,
         selector: &Option<SelectorSpec>,
         process: &Option<ProcessSpec>,
         rate: &Option<RateSpec>,
@@ -510,6 +537,16 @@ impl SweepSpec {
         if let Some(c) = chaos {
             labels.push(("chaos".to_string(), c.label()));
             s.chaos = Some(c.clone());
+        }
+        if let Some(a) = autoscale {
+            labels.push(("autoscale".to_string(), a.label()));
+            match s.fleet.as_mut() {
+                Some(f) => f.autoscale = Some(a.clone()),
+                None => crate::bail!(
+                    "sweep.axes.autoscale: point {point} is serve-shaped (no fleet) — \
+                     autoscale needs a fleet base or a cells axis value > 1"
+                ),
+            }
         }
         if let Some(sel) = *selector {
             labels.push(("selector".to_string(), sel.name()));

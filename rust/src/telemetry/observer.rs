@@ -4,7 +4,7 @@
 //!
 //! The observer aggregates every event kind the engines emit
 //! ([`RoundEvent`], [`CompletionEvent`], [`ShedEvent`],
-//! [`HandoverEvent`], final cache stats) into streaming counters,
+//! [`HandoverEvent`], [`ScaleEvent`], final cache stats) into streaming counters,
 //! latency sketches and windowed throughput rates. Two observers merge
 //! commutatively ([`TelemetryObserver::merge`]): counters are integer
 //! adds, sketches merge bucket-wise, and per-cell maps join key-wise —
@@ -16,6 +16,7 @@
 //! interval. Live printing touches only stderr and wall time — never the
 //! report or its digest.
 
+use crate::fleet::ScaleEvent;
 use crate::scenario::{
     CompletionEvent, EngineObserver, HandoverEvent, RoundEvent, ShedEvent,
 };
@@ -96,6 +97,10 @@ pub struct TelemetryObserver {
     live_every: Option<Duration>,
     live_started: Option<Instant>,
     live_last: Option<Instant>,
+    // Elastic-fleet live state (display only — the elasticity report in
+    // the FleetReport is the durable record).
+    cells_routable: Option<usize>,
+    last_scale: Option<String>,
 }
 
 impl TelemetryObserver {
@@ -194,9 +199,16 @@ impl TelemetryObserver {
         } else {
             &self.round_latency
         };
+        // Elastic runs append the current routable cell count and the
+        // most recent scale action; static runs keep the old line.
+        let elastic = match (self.cells_routable, &self.last_scale) {
+            (Some(n), Some(ev)) => format!(" | cells {n} ({ev})"),
+            (Some(n), None) => format!(" | cells {n}"),
+            _ => String::new(),
+        };
         eprintln!(
             "[live] wall {elapsed:6.1}s | rounds {} ({rounds_per_s:.0}/s) | q {} \
-             | p50 {:.4}s p95 {:.4}s p99 {:.4}s | shed {:.2}% | hit {:.1}% ({} hits)",
+             | p50 {:.4}s p95 {:.4}s p99 {:.4}s | shed {:.2}% | hit {:.1}% ({} hits){elastic}",
             self.rounds,
             self.queries,
             lat.p50_s(),
@@ -283,6 +295,12 @@ impl EngineObserver for TelemetryObserver {
 
     fn on_handover(&mut self, _event: &HandoverEvent) {
         self.handovers += 1;
+    }
+
+    fn on_scale(&mut self, event: &ScaleEvent) {
+        self.cells_routable = Some(event.routable_after);
+        self.last_scale = Some(format!("{} c{}", event.action.glyph(), event.cell));
+        self.maybe_print_live();
     }
 
     fn on_cache(&mut self, stats: &CacheStats) {

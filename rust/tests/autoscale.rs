@@ -1,0 +1,293 @@
+//! Elastic-fleet coverage: epoch-deterministic autoscale digests
+//! (rerun and sequential vs lane-parallel), crash → replacement
+//! restoring availability with a finite time-to-recover, drain-on-
+//! underload conserving every query, non-uniform fleet round-trips
+//! with field-path diagnostics, and the Jain-index regression that
+//! non-routable cells no longer dilute the balance metrics.
+
+use dmoe::chaos::ChaosSpec;
+use dmoe::fleet::{AutoscaleSpec, CellOverride, FleetReport, MobilityConfig, RoutePolicy};
+use dmoe::scenario::{self, Dur, FleetSpec, RateSpec, RunReport, Scenario, TrafficSpec};
+use dmoe::SystemConfig;
+
+fn fleet_report(r: RunReport) -> FleetReport {
+    match r {
+        RunReport::Fleet(f) => f,
+        RunReport::Serve(_) => panic!("expected a fleet-shaped report"),
+    }
+}
+
+/// The self-heal preset cut down to test size, with explicit lanes.
+fn selfheal(queries: usize, lane_workers: usize) -> Scenario {
+    let mut s = Scenario::preset("crash-storm-selfheal").unwrap();
+    s.traffic.queries = queries;
+    s.fleet.as_mut().unwrap().lane_workers = Some(lane_workers);
+    s
+}
+
+/// A tiny elastic fleet sized to sit far below the utilization band, so
+/// the controller drains down toward `min_cells`.
+fn tiny_underloaded_elastic(queries: usize) -> Scenario {
+    let mut cfg = SystemConfig::tiny(); // K=3, L=2, M=12
+    cfg.workload.seed = 99;
+    Scenario::builder("tiny-elastic-drain")
+        .system(cfg)
+        .traffic(TrafficSpec {
+            queries,
+            domains: 4,
+            tokens_per_query: 2,
+            rate: RateSpec::Utilization(0.25),
+            ..TrafficSpec::default()
+        })
+        .workers(1)
+        .fleet(FleetSpec {
+            cells: 3,
+            route: RoutePolicy::JoinShortestQueue,
+            mobility: MobilityConfig {
+                users: 24,
+                ..MobilityConfig::default()
+            },
+            autoscale: Some(AutoscaleSpec {
+                period: Dur::Rounds(8.0),
+                util_low: 0.55,
+                util_high: 0.95,
+                shed_high: 0.5,
+                min_cells: 1,
+                max_cells: 3,
+                warmup: Dur::Rounds(1.0),
+                heal: false,
+                ..AutoscaleSpec::default()
+            }),
+            lane_workers: Some(0),
+            ..FleetSpec::default()
+        })
+        .build()
+        .unwrap()
+}
+
+/// A tiny non-uniform fleet: per-cell width, fading, and capacity
+/// overrides on an otherwise ordinary 2-cell grid.
+fn tiny_nonuniform(queries: usize, lane_workers: usize) -> Scenario {
+    let mut cfg = SystemConfig::tiny();
+    cfg.workload.seed = 99;
+    Scenario::builder("tiny-nonuniform")
+        .system(cfg)
+        .traffic(TrafficSpec {
+            queries,
+            domains: 4,
+            tokens_per_query: 2,
+            rate: RateSpec::Qps(15.0),
+            ..TrafficSpec::default()
+        })
+        .workers(1)
+        .fleet(FleetSpec {
+            cells: 2,
+            route: RoutePolicy::JoinShortestQueue,
+            mobility: MobilityConfig {
+                users: 24,
+                mean_speed_mps: 12.0,
+                ..MobilityConfig::default()
+            },
+            overrides: vec![
+                CellOverride {
+                    cell: 0,
+                    max_active: Some(2),
+                    fading_rho: None,
+                    capacity_fraction: Some(0.5),
+                },
+                CellOverride {
+                    cell: 1,
+                    max_active: None,
+                    fading_rho: Some(0.5),
+                    capacity_fraction: None,
+                },
+            ],
+            lane_workers: Some(lane_workers),
+            ..FleetSpec::default()
+        })
+        .build()
+        .unwrap()
+}
+
+// -- epoch determinism -------------------------------------------------------
+
+#[test]
+fn autoscale_digests_match_on_rerun_and_across_lane_modes() {
+    let seq = selfheal(600, 0);
+    let par = selfheal(600, 4);
+    let a = fleet_report(scenario::run(&seq).unwrap());
+    let b = fleet_report(scenario::run(&seq).unwrap());
+    let c = fleet_report(scenario::run(&par).unwrap());
+    assert_eq!(a.digest(), b.digest(), "autoscale rerun digest");
+    assert_eq!(
+        a.digest(),
+        c.digest(),
+        "scale decisions must be bit-identical sequential vs lane-parallel"
+    );
+    let ea = a.elasticity.as_ref().expect("elasticity block present");
+    let ec = c.elasticity.as_ref().unwrap();
+    assert_eq!(ea, ec, "identical scale-event logs across lane modes");
+    assert!(!ea.events.is_empty(), "the storm must provoke scale events");
+}
+
+// -- crash → replacement -----------------------------------------------------
+
+#[test]
+fn heal_replaces_crashed_cells_and_recovers() {
+    let r = fleet_report(scenario::run(&selfheal(600, 0)).unwrap());
+    let chaos = r.chaos.as_ref().expect("chaos report");
+    assert_eq!(chaos.crashed_cells, 2, "both scheduled crashes must land");
+    let e = r.elasticity.as_ref().expect("elasticity block");
+    assert!(e.healed >= 1, "at least one replacement: {e:?}");
+    let ttr = e
+        .time_to_recover_s
+        .expect("first heal must stamp a time-to-recover");
+    assert!(ttr.is_finite() && ttr > 0.0, "ttr {ttr}");
+    // Replacements bring the routable count back up: the last
+    // cells-over-time sample must beat the post-crash trough.
+    let trough = e
+        .cells_over_time
+        .iter()
+        .map(|&(_, n)| n)
+        .min()
+        .expect("trace sampled");
+    let last = e.cells_over_time.last().unwrap().1;
+    assert!(
+        last > trough || trough >= 4,
+        "availability must recover: trough {trough}, final {last}"
+    );
+    assert!(
+        r.cells.iter().filter(|c| c.state == "active").count() >= 3,
+        "replacements must end the run active"
+    );
+    assert_eq!(
+        r.generated,
+        r.completed + r.shed() + r.failed(),
+        "healing must not create or lose queries"
+    );
+}
+
+// -- drain on underload ------------------------------------------------------
+
+#[test]
+fn drain_on_underload_conserves_queries() {
+    let s = tiny_underloaded_elastic(400);
+    let r = fleet_report(scenario::run(&s).unwrap());
+    let e = r.elasticity.as_ref().expect("elasticity block");
+    assert!(e.drained >= 1, "underload must drain at least one cell: {e:?}");
+    assert_eq!(e.healed, 0, "nothing to heal without chaos");
+    assert_eq!(
+        r.generated,
+        r.completed + r.shed() + r.failed(),
+        "draining must never drop an in-flight query"
+    );
+    assert!(r.completed > 0);
+    // The victims really left the routable set.
+    assert!(
+        r.cells.iter().any(|c| c.state == "drained" || c.state == "draining"),
+        "a drained cell must surface in the cell table"
+    );
+}
+
+// -- non-uniform fleets ------------------------------------------------------
+
+#[test]
+fn nonuniform_fleet_roundtrips_and_stays_deterministic() {
+    let s = tiny_nonuniform(300, 0);
+    let j1 = s.to_json().to_string_pretty();
+    let back = Scenario::from_json_str(&j1).unwrap();
+    assert_eq!(back, s, "overrides must survive the JSON round-trip");
+    assert_eq!(back.to_json().to_string_pretty(), j1, "canonical form stable");
+
+    let a = scenario::run(&s).unwrap();
+    let b = scenario::run(&tiny_nonuniform(300, 2)).unwrap();
+    assert_eq!(
+        a.digest(),
+        b.digest(),
+        "per-cell overrides must stay bit-identical across lane modes"
+    );
+    // The overrides change the physics: the same fleet without them
+    // must land on a different digest.
+    let mut plain = s.clone();
+    plain.fleet.as_mut().unwrap().overrides.clear();
+    let c = scenario::run(&plain).unwrap();
+    assert_ne!(a.digest(), c.digest(), "overrides must reach the engine");
+}
+
+#[test]
+fn override_parse_errors_carry_field_paths() {
+    let s = tiny_nonuniform(50, 0);
+    let good = s.to_json().to_string_pretty();
+    // Breaking the first override's required key must name the exact
+    // element, not just "bad fleet".
+    let broken = good.replace("\"cell\": 0", "\"sell\": 0");
+    assert_ne!(broken, good, "fixture must actually mutate the document");
+    let err = Scenario::from_json_str(&broken).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("scenario.fleet.overrides[0]"),
+        "want the override field path, got: {msg}"
+    );
+}
+
+// -- balance metrics ignore non-routable cells (PR 9 bugfix) ----------------
+
+#[test]
+fn jain_index_excludes_crashed_cells() {
+    let mut cfg = SystemConfig::tiny();
+    cfg.workload.seed = 99;
+    let s = Scenario::builder("tiny-crash-jain")
+        .system(cfg)
+        .traffic(TrafficSpec {
+            queries: 400,
+            domains: 4,
+            tokens_per_query: 2,
+            rate: RateSpec::Qps(15.0),
+            ..TrafficSpec::default()
+        })
+        .workers(1)
+        .fleet(FleetSpec {
+            cells: 2,
+            route: RoutePolicy::JoinShortestQueue,
+            mobility: MobilityConfig {
+                users: 24,
+                mean_speed_mps: 12.0,
+                ..MobilityConfig::default()
+            },
+            lane_workers: Some(0),
+            ..FleetSpec::default()
+        })
+        .chaos(ChaosSpec {
+            seed: 9,
+            cell_crashes: vec![(1, Dur::Rounds(25.0))],
+            ..ChaosSpec::default()
+        })
+        .build()
+        .unwrap();
+    let r = fleet_report(scenario::run(&s).unwrap());
+    let crashed = r
+        .cells
+        .iter()
+        .find(|c| c.state == "crashed")
+        .expect("the scheduled crash must land");
+    let survivor = r.cells.iter().find(|c| c.state == "active").unwrap();
+    assert!(
+        crashed.completed < survivor.completed,
+        "the crashed cell stops early ({} vs {})",
+        crashed.completed,
+        survivor.completed
+    );
+    // Pre-fix behavior: Jain over *all* cells, diluted by the corpse.
+    let xs: Vec<f64> = r.cells.iter().map(|c| c.completed as f64).collect();
+    let sum: f64 = xs.iter().sum();
+    let sumsq: f64 = xs.iter().map(|x| x * x).sum();
+    let all_cells_jain = (sum * sum) / (xs.len() as f64 * sumsq);
+    assert!(
+        r.jain_index() > all_cells_jain,
+        "routable-only Jain {} must beat the diluted all-cells value {}",
+        r.jain_index(),
+        all_cells_jain
+    );
+    // With one survivor the routable set is trivially balanced.
+    assert!((r.jain_index() - 1.0).abs() < 1e-12);
+}
