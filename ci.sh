@@ -274,6 +274,56 @@ if [[ -z "$heal_avail" ]] || ! awk -v a="$heal_avail" 'BEGIN { exit !(a >= 0.75)
 fi
 echo "autoscale gate passed (crash-storm-selfheal $ha, availability $heal_avail)"
 
+# Control gate, three parts (see MONITORING.md "Adaptive control"):
+#  1. the selector-race preset (des vs channel-gate vs sift cells under
+#     one fleet-wide adaptive-γ controller) run sequentially
+#     (--lane-workers 0) and lane-parallel (--lane-workers 4) must
+#     digest identically — γ adjustments happen on the lockstep spine,
+#     so they are bit-identical across lane modes;
+#  2. that run's control line must parse, settle inside its configured
+#     bounds, and show at least one γ adjustment;
+#  3. the adaptive-gamma-flash-crowd preset must adapt too: >= 1
+#     adjustment means >= 2 distinct γ values over the run.
+ctl_check() { # $1=run output  $2=preset name  $3=min adjustments
+  local line settled lo hi adj
+  line=$(grep "control: gamma" <<<"$1" | head -n1)
+  if [[ -z "$line" ]]; then
+    echo "FAIL: $2 must print a control line:" >&2
+    echo "$1" >&2
+    exit 1
+  fi
+  settled=$(sed -n 's/.*-> \([0-9.]*\) (settled.*/\1/p' <<<"$line")
+  lo=$(sed -n 's/.*bounds \[\([0-9.]*\),.*/\1/p' <<<"$line")
+  hi=$(sed -n 's/.*, \([0-9.]*\)\]).*/\1/p' <<<"$line")
+  adj=$(sed -n 's/.* \([0-9][0-9]*\) adjustments.*/\1/p' <<<"$line")
+  if [[ -z "$settled" || -z "$lo" || -z "$hi" || -z "$adj" ]]; then
+    echo "FAIL: $2 control line unparsable: $line" >&2
+    exit 1
+  fi
+  if ! awk -v g="$settled" -v lo="$lo" -v hi="$hi" 'BEGIN { exit !(g >= lo && g <= hi) }'; then
+    echo "FAIL: $2 settled gamma $settled outside bounds [$lo, $hi]" >&2
+    exit 1
+  fi
+  if (( adj < $3 )); then
+    echo "FAIL: $2 expected >= $3 gamma adjustments, got $adj: $line" >&2
+    exit 1
+  fi
+}
+race_seq_out=$(cargo run --release --quiet -- run --scenario selector-race --queries 600 \
+  --lane-workers 0)
+race_seq=$(extract_scenario_digest <<<"$race_seq_out")
+race_par=$(cargo run --release --quiet -- run --scenario selector-race --queries 600 \
+  --lane-workers 4 | extract_scenario_digest)
+if [[ -z "$race_seq" || "$race_seq" != "$race_par" ]]; then
+  echo "FAIL: control lane determinism (sequential=$race_seq parallel=$race_par)" >&2
+  exit 1
+fi
+ctl_check "$race_seq_out" selector-race 1
+crowd_out=$(cargo run --release --quiet -- run --scenario adaptive-gamma-flash-crowd \
+  --queries 1500)
+ctl_check "$crowd_out" adaptive-gamma-flash-crowd 1
+echo "control gate passed (selector-race $race_seq)"
+
 # Bench baseline bootstrap: BENCH_{des,fleet,serve}.json are committed
 # perf baselines (scenario + git rev stamped by the benches themselves).
 # Regenerate any that are missing, in quick mode, so a fresh checkout

@@ -1,7 +1,7 @@
 //! Importance-factor tradeoff sweep (the paper's Fig. 10 flavor) on
 //! the declarative sweep driver: one `SweepSpec` over the γ₀ axis ×
-//! {des, topk:2}, executed by `sweep::run_sweep` with one run artifact
-//! per point, then pivoted into the comparison table.
+//! {des, channel-gate, sift}, executed by `sweep::run_sweep` with one
+//! run artifact per point, then pivoted into the comparison table.
 //!
 //! ```bash
 //! cargo run --release --example tradeoff_sweep
@@ -12,11 +12,15 @@
 //! factor γ₀ relaxes the per-layer QoS constraint, letting DES pick
 //! cheaper expert sets. The sweep makes that observable as an
 //! energy-per-query trend along the γ₀ axis, printed as a frontier at
-//! the end.
+//! the end. A second section races the three registry selectors on the
+//! same shared P1(a) instances, so the relevance-vs-energy frontier of
+//! the selection *rule* itself is visible next to the end-to-end sweep.
 
+use dmoe::selection::{ExpertSelector, SelectionProblem, SelectorSpec};
 use dmoe::sweep::{self, SweepSpec};
 use dmoe::util::cli::Args;
 use dmoe::util::error::Result;
+use dmoe::util::rng::Xoshiro256pp;
 use std::path::Path;
 
 fn main() -> Result<()> {
@@ -33,7 +37,7 @@ fn main() -> Result<()> {
   "queries": {queries},
   "axes": {{
     "gamma0": [0.5, 0.7, 0.9, 1.0],
-    "selector": ["des", "topk:2"]
+    "selector": ["des", "channel-gate", "sift"]
   }}
 }}"#
     ))?;
@@ -75,6 +79,42 @@ fn main() -> Result<()> {
     for (gamma0, energy) in &frontier {
         println!("  gamma0 {gamma0:>4}: {energy:.4} J/query");
     }
+    // The selector race: des vs channel-gate vs sift on the same shared
+    // P1(a) instances — the relevance-vs-energy frontier of the
+    // selection rule itself, at instance granularity.
+    let mut rng = Xoshiro256pp::seed_from_u64(0x7EAD_0FF5);
+    let mut instances = Vec::with_capacity(400);
+    for _ in 0..400 {
+        let k = rng.range_usize(4, 12);
+        let d = rng.range_usize(2, k);
+        let mut scores: Vec<f64> = (0..k).map(|_| 0.05 + rng.next_f64()).collect();
+        let total: f64 = scores.iter().sum();
+        for s in &mut scores {
+            *s /= total;
+        }
+        let costs: Vec<f64> = (0..k).map(|_| 0.5 + 1.5 * rng.next_f64()).collect();
+        let threshold = 0.3 + 0.4 * rng.next_f64();
+        instances.push(SelectionProblem::new(scores, costs, threshold, d));
+    }
+    println!("\nselector race over {} shared P1(a) instances:", instances.len());
+    println!("  {:>12} | {:>9} | {:>9} | fallbacks", "selector", "relevance", "energy J");
+    for name in ["des", "channel-gate", "sift"] {
+        let mut solver = SelectorSpec::parse(name)?.build();
+        let (mut score, mut cost, mut fallbacks) = (0.0f64, 0.0f64, 0usize);
+        for p in &instances {
+            let (sel, _) = solver.solve(p);
+            score += sel.score;
+            cost += sel.cost;
+            fallbacks += sel.fallback as usize;
+        }
+        let n = instances.len() as f64;
+        println!(
+            "  {name:>12} | {:>9.4} | {:>9.4} | {fallbacks}",
+            score / n,
+            cost / n
+        );
+    }
+
     println!("\nartifacts + comparison.json under {}", root.display());
     Ok(())
 }

@@ -1,0 +1,805 @@
+//! `control` — the adaptive control plane: an online controller that
+//! tunes the paper's importance factor γ at fixed epoch boundaries
+//! against QoS targets (shed rate, p99 latency, energy per query).
+//!
+//! The paper's central knob is γ: the per-layer C1 threshold is
+//! `z·γ^(l)` with the geometric schedule `γ^(l) = γ0^l`, so a *lower* γ
+//! lowers every layer's relevance floor, admits cheaper channel-favoring
+//! selections, and makes rounds faster and leaner — at a task-relevance
+//! cost. Every run so far fixed γ statically per scenario; the
+//! [`GammaController`] closes the loop instead, with an AIMD step law:
+//!
+//! * **QoS breach** (epoch shed fraction above `shed_high`, p99 above
+//!   the optional ceiling, or energy-per-query above the optional
+//!   ceiling) → multiplicatively *relax* γ down (`gamma *= relax`,
+//!   floored at `gamma_min`): trade relevance for capacity.
+//! * **Healthy epoch** with traffic → additively *recover* γ up
+//!   (`gamma += step`, capped at `gamma_max`): claw relevance back.
+//! * **Idle epoch** (no completions, no sheds) → hold.
+//!
+//! Determinism contract (the same one [`crate::fleet::autoscale`]
+//! established): the controller is evaluated only at epoch boundaries on
+//! the engines' sequential spines — the serve engine's round-formation
+//! loop and the fleet's lockstep arrival barrier — and every decision is
+//! a pure function of deterministically-accumulated counters. No wall
+//! clock, no RNG. Fleet digests therefore stay bit-identical between
+//! sequential and lane-parallel execution with control active (gated in
+//! `ci.sh`), and a scenario without a `control` section produces reports
+//! byte-identical to pre-control builds: the [`ControlReport`] folds
+//! into report digests/JSON only when the run actually carried a
+//! controller.
+//!
+//! The p99 signal is the *cumulative* streaming-sketch p99 (sketches
+//! merge but don't subtract, so exact per-epoch tail deltas aren't
+//! available); shed/completion/energy signals use true per-epoch deltas.
+
+use crate::gating::LayerImportance;
+use crate::scenario::Dur;
+use crate::util::error::{Error, Result};
+use crate::util::hash::Fnv1a;
+use crate::util::json::Json;
+
+/// Newest control schema this build writes: bump when a field changes
+/// meaning, not when purely additive fields appear.
+pub const CONTROL_SCHEMA_VERSION: u32 = 1;
+
+// ---------------------------------------------------------------------------
+// JSON helpers (local copies — every spec document keeps its own so
+// diagnostics carry the exact path of the offending field).
+// ---------------------------------------------------------------------------
+
+fn bad(path: &str, what: impl std::fmt::Display) -> Error {
+    Error::msg(format!("{path}: {what}"))
+}
+
+fn check_keys(v: &Json, allowed: &[&str], path: &str) -> Result<()> {
+    let obj = v
+        .as_obj()
+        .ok_or_else(|| bad(path, "expected a JSON object"))?;
+    for key in obj.keys() {
+        if !allowed.contains(&key.as_str()) {
+            return Err(bad(
+                path,
+                format!("unknown field '{key}' (known: {})", allowed.join(", ")),
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn get_f64(v: &Json, key: &str, default: f64, path: &str) -> Result<f64> {
+    match v.get(key) {
+        Json::Null => Ok(default),
+        x => x
+            .as_f64()
+            .ok_or_else(|| bad(path, format!("'{key}' must be a number"))),
+    }
+}
+
+fn get_usize(v: &Json, key: &str, default: usize, path: &str) -> Result<usize> {
+    match v.get(key) {
+        Json::Null => Ok(default),
+        x => x
+            .as_usize()
+            .ok_or_else(|| bad(path, format!("'{key}' must be a non-negative integer"))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Spec
+// ---------------------------------------------------------------------------
+
+/// The serializable `control` section of a [`Scenario`]. JSON
+/// (canonical, key order fixed; `p99_high` / `energy_high_j` omitted
+/// when unset):
+///
+/// ```json
+/// {
+///   "control_schema_version": 1,
+///   "period": {"rounds": 8},
+///   "warmup": {"rounds": 4},
+///   "shed_high": 0.05,
+///   "step": 0.02,
+///   "relax": 0.85,
+///   "gamma_min": 0.5,
+///   "gamma_max": 1.0
+/// }
+/// ```
+///
+/// [`Scenario`]: crate::scenario::Scenario
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControlSpec {
+    pub schema_version: u32,
+    /// Control epoch: the γ law is evaluated once per elapsed period.
+    pub period: Dur,
+    /// Settle-in budget: epochs ending before this observe counters but
+    /// never adapt (the queue and sketches are still filling).
+    pub warmup: Dur,
+    /// Epoch shed fraction (`shed / (completed + shed)`) above which the
+    /// epoch counts as a QoS breach.
+    pub shed_high: f64,
+    /// Optional p99 ceiling: cumulative end-to-end p99 above this is a
+    /// breach.
+    pub p99_high: Option<Dur>,
+    /// Optional energy ceiling: epoch energy per completed query (J)
+    /// above this is a breach.
+    pub energy_high_j: Option<f64>,
+    /// Additive recovery step applied to γ after a healthy epoch.
+    pub step: f64,
+    /// Multiplicative relax factor applied to γ on a breached epoch
+    /// (must sit in (0, 1)).
+    pub relax: f64,
+    /// Hard floor the controller never relaxes γ below.
+    pub gamma_min: f64,
+    /// Hard cap recovery never raises γ above.
+    pub gamma_max: f64,
+}
+
+impl Default for ControlSpec {
+    fn default() -> Self {
+        Self {
+            schema_version: CONTROL_SCHEMA_VERSION,
+            period: Dur::Rounds(8.0),
+            warmup: Dur::Rounds(4.0),
+            shed_high: 0.05,
+            p99_high: None,
+            energy_high_j: None,
+            step: 0.02,
+            relax: 0.85,
+            gamma_min: 0.5,
+            gamma_max: 1.0,
+        }
+    }
+}
+
+impl ControlSpec {
+    const KEYS: &'static [&'static str] = &[
+        "control_schema_version",
+        "period",
+        "warmup",
+        "shed_high",
+        "p99_high",
+        "energy_high_j",
+        "step",
+        "relax",
+        "gamma_min",
+        "gamma_max",
+    ];
+
+    /// Compact label for banners and sweep manifests: the γ band and the
+    /// step law.
+    pub fn label(&self) -> String {
+        format!(
+            "g[{:.2},{:.2}]s{}r{}",
+            self.gamma_min, self.gamma_max, self.step, self.relax
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            (
+                "control_schema_version",
+                Json::Num(self.schema_version as f64),
+            ),
+            ("period", self.period.to_json()),
+            ("warmup", self.warmup.to_json()),
+            ("shed_high", Json::Num(self.shed_high)),
+        ];
+        if let Some(p) = &self.p99_high {
+            fields.push(("p99_high", p.to_json()));
+        }
+        if let Some(e) = self.energy_high_j {
+            fields.push(("energy_high_j", Json::Num(e)));
+        }
+        fields.push(("step", Json::Num(self.step)));
+        fields.push(("relax", Json::Num(self.relax)));
+        fields.push(("gamma_min", Json::Num(self.gamma_min)));
+        fields.push(("gamma_max", Json::Num(self.gamma_max)));
+        Json::obj(fields)
+    }
+
+    pub fn from_json(v: &Json, path: &str) -> Result<ControlSpec> {
+        check_keys(v, Self::KEYS, path)?;
+        let d = ControlSpec::default();
+        let schema_version = get_usize(
+            v,
+            "control_schema_version",
+            CONTROL_SCHEMA_VERSION as usize,
+            path,
+        )?;
+        if schema_version > u32::MAX as usize {
+            return Err(bad(
+                path,
+                format!("'control_schema_version' out of range: {schema_version}"),
+            ));
+        }
+        let period = match v.get("period") {
+            Json::Null => d.period,
+            x => Dur::from_json(x, &format!("{path}.period"))?,
+        };
+        let warmup = match v.get("warmup") {
+            Json::Null => d.warmup,
+            x => Dur::from_json(x, &format!("{path}.warmup"))?,
+        };
+        let p99_high = match v.get("p99_high") {
+            Json::Null => None,
+            x => Some(Dur::from_json(x, &format!("{path}.p99_high"))?),
+        };
+        let energy_high_j = match v.get("energy_high_j") {
+            Json::Null => None,
+            x => Some(
+                x.as_f64()
+                    .ok_or_else(|| bad(path, "'energy_high_j' must be a number"))?,
+            ),
+        };
+        Ok(ControlSpec {
+            schema_version: schema_version as u32,
+            period,
+            warmup,
+            shed_high: get_f64(v, "shed_high", d.shed_high, path)?,
+            p99_high,
+            energy_high_j,
+            step: get_f64(v, "step", d.step, path)?,
+            relax: get_f64(v, "relax", d.relax, path)?,
+            gamma_min: get_f64(v, "gamma_min", d.gamma_min, path)?,
+            gamma_max: get_f64(v, "gamma_max", d.gamma_max, path)?,
+        })
+    }
+
+    /// Structural validation (the γ-bounds-vs-γ0 cross-check lives in
+    /// [`Scenario::validate`](crate::scenario::Scenario::validate), which
+    /// knows the policy).
+    pub fn validate(&self, path: &str) -> Result<()> {
+        if self.schema_version == 0 || self.schema_version > CONTROL_SCHEMA_VERSION {
+            return Err(bad(
+                path,
+                format!(
+                    "unsupported control_schema_version {} (this build reads 1..={})",
+                    self.schema_version, CONTROL_SCHEMA_VERSION
+                ),
+            ));
+        }
+        self.period.validate(&format!("{path}.period"))?;
+        self.warmup.validate(&format!("{path}.warmup"))?;
+        if let Some(p) = &self.p99_high {
+            p.validate(&format!("{path}.p99_high"))?;
+        }
+        if let Some(e) = self.energy_high_j {
+            if !(e.is_finite() && e > 0.0) {
+                return Err(bad(path, "energy_high_j must be a positive finite joule count"));
+            }
+        }
+        if !(self.shed_high.is_finite() && (0.0..=1.0).contains(&self.shed_high)) {
+            return Err(bad(path, "shed_high must be a fraction in [0, 1]"));
+        }
+        if !(self.step.is_finite() && self.step > 0.0) {
+            return Err(bad(path, "step must be a positive finite γ increment"));
+        }
+        if !(self.relax.is_finite() && 0.0 < self.relax && self.relax < 1.0) {
+            return Err(bad(path, "relax must sit strictly inside (0, 1)"));
+        }
+        if !(self.gamma_min.is_finite() && self.gamma_max.is_finite()) {
+            return Err(bad(path, "γ bounds must be finite"));
+        }
+        if !(self.gamma_min > 0.0 && self.gamma_min <= self.gamma_max && self.gamma_max <= 1.0) {
+            return Err(bad(
+                path,
+                format!(
+                    "γ bounds must satisfy 0 < gamma_min <= gamma_max <= 1, got [{}, {}]",
+                    self.gamma_min, self.gamma_max
+                ),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Resolve round-relative durations against the calibrated round
+    /// latency and bind the policy's γ0 as the controller's start point.
+    pub fn resolve(&self, round_s: f64, gamma0: f64) -> Result<ControlRuntime> {
+        let period_s = self.period.resolve(round_s);
+        if !(period_s.is_finite() && period_s > 0.0) {
+            return Err(Error::msg(format!(
+                "control period resolves to {period_s} s (need a positive duration)"
+            )));
+        }
+        let warmup_s = self.warmup.resolve(round_s);
+        if !(warmup_s.is_finite() && warmup_s >= 0.0) {
+            return Err(Error::msg(format!(
+                "control warmup resolves to {warmup_s} s (need a non-negative duration)"
+            )));
+        }
+        Ok(ControlRuntime {
+            period_s,
+            warmup_s,
+            shed_high: self.shed_high,
+            p99_high_s: self.p99_high.as_ref().map(|p| p.resolve(round_s)),
+            energy_high_j: self.energy_high_j,
+            step: self.step,
+            relax: self.relax,
+            gamma_min: self.gamma_min,
+            gamma_max: self.gamma_max,
+            gamma0,
+        })
+    }
+}
+
+/// [`ControlSpec`] with every duration resolved to simulated seconds and
+/// the policy's γ0 bound in — what the engines actually consume.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControlRuntime {
+    pub period_s: f64,
+    pub warmup_s: f64,
+    pub shed_high: f64,
+    pub p99_high_s: Option<f64>,
+    pub energy_high_j: Option<f64>,
+    pub step: f64,
+    pub relax: f64,
+    pub gamma_min: f64,
+    pub gamma_max: f64,
+    /// The policy's static γ0 — the controller's starting value.
+    pub gamma0: f64,
+}
+
+// ---------------------------------------------------------------------------
+// Controller
+// ---------------------------------------------------------------------------
+
+/// The online γ controller. Both engines drive it the same way on their
+/// sequential spines: call [`due`](Self::due) cheaply per event, and when
+/// it fires, snapshot cumulative counters and call
+/// [`observe`](Self::observe); when it returns `true`, push
+/// [`importance`](Self::importance) into the round policy.
+#[derive(Debug, Clone)]
+pub struct GammaController {
+    rt: ControlRuntime,
+    layers: usize,
+    gamma: f64,
+    next_epoch_s: f64,
+    last_completed: usize,
+    last_shed: usize,
+    last_energy_j: f64,
+    report: ControlReport,
+}
+
+impl GammaController {
+    pub fn new(rt: ControlRuntime, layers: usize) -> Self {
+        let gamma = rt.gamma0.clamp(rt.gamma_min, rt.gamma_max);
+        let report = ControlReport {
+            trajectory: vec![(0.0, gamma)],
+            epochs: 0,
+            adjustments: 0,
+            settled_gamma: gamma,
+            gamma_min: rt.gamma_min,
+            gamma_max: rt.gamma_max,
+            shed_frac_at_settle: 0.0,
+            p99_at_settle_s: 0.0,
+        };
+        Self {
+            next_epoch_s: rt.period_s,
+            rt,
+            layers,
+            gamma,
+            last_completed: 0,
+            last_shed: 0,
+            last_energy_j: 0.0,
+            report,
+        }
+    }
+
+    /// Current γ.
+    pub fn gamma(&self) -> f64 {
+        self.gamma
+    }
+
+    /// The geometric importance schedule at the current γ — what the
+    /// engines install into the round policy after an adjustment.
+    pub fn importance(&self) -> LayerImportance {
+        LayerImportance::geometric(self.gamma, self.layers)
+    }
+
+    /// Cheap per-event guard: has the next epoch boundary passed? The
+    /// fleet calls this per lockstep arrival so it only pays the
+    /// counter-summing cost of [`observe`](Self::observe) at boundaries.
+    pub fn due(&self, t_s: f64) -> bool {
+        t_s >= self.next_epoch_s
+    }
+
+    /// Evaluate every epoch boundary at or before `t_s` against the
+    /// cumulative counters `(completed, shed, p99_s, energy_j)` and apply
+    /// the AIMD law. Returns `true` when γ changed (the caller must then
+    /// reinstall [`importance`](Self::importance)). Pure arithmetic over
+    /// the snapshot — no RNG, no wall clock.
+    pub fn observe(
+        &mut self,
+        t_s: f64,
+        completed: usize,
+        shed: usize,
+        p99_s: f64,
+        energy_j: f64,
+    ) -> bool {
+        let mut changed = false;
+        while self.next_epoch_s <= t_s {
+            let epoch_end = self.next_epoch_s;
+            self.next_epoch_s += self.rt.period_s;
+            self.report.epochs += 1;
+
+            let d_completed = completed.saturating_sub(self.last_completed);
+            let d_shed = shed.saturating_sub(self.last_shed);
+            let d_energy_j = (energy_j - self.last_energy_j).max(0.0);
+            self.last_completed = completed;
+            self.last_shed = shed;
+            self.last_energy_j = energy_j;
+
+            let denom = d_completed + d_shed;
+            let shed_frac = if denom == 0 {
+                0.0
+            } else {
+                d_shed as f64 / denom as f64
+            };
+            self.report.shed_frac_at_settle = shed_frac;
+            self.report.p99_at_settle_s = p99_s;
+
+            // Warmup epochs advance the counters but never adapt.
+            if epoch_end < self.rt.warmup_s {
+                continue;
+            }
+            // Idle epoch: nothing arrived, hold γ.
+            if denom == 0 {
+                continue;
+            }
+
+            let p99_breach = self
+                .rt
+                .p99_high_s
+                .map(|cap| d_completed > 0 && p99_s > cap)
+                .unwrap_or(false);
+            let energy_breach = self
+                .rt
+                .energy_high_j
+                .map(|cap| d_completed > 0 && d_energy_j / d_completed as f64 > cap)
+                .unwrap_or(false);
+            let breach = shed_frac > self.rt.shed_high || p99_breach || energy_breach;
+
+            let next = if breach {
+                // Relax: drop the relevance floor toward channel-favoring
+                // selections (cheaper, faster rounds).
+                (self.gamma * self.rt.relax).max(self.rt.gamma_min)
+            } else if d_completed > 0 {
+                // Recover relevance while the epoch is healthy.
+                (self.gamma + self.rt.step).min(self.rt.gamma_max)
+            } else {
+                self.gamma
+            };
+            if next != self.gamma {
+                self.gamma = next;
+                self.report.adjustments += 1;
+                self.report.trajectory.push((epoch_end, next));
+                changed = true;
+            }
+        }
+        if changed {
+            self.report.settled_gamma = self.gamma;
+        }
+        changed
+    }
+
+    pub fn into_report(self) -> ControlReport {
+        self.report
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Report
+// ---------------------------------------------------------------------------
+
+/// The control trace a run reports: the γ trajectory, epoch/adjustment
+/// counts, and the QoS signals at the last evaluated epoch. Folds into
+/// the engines' report digests/JSON only when the run carried a
+/// controller, so control-off runs stay byte-identical to pre-control
+/// builds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControlReport {
+    /// `(sim_time_s, γ)` at start plus after every adjustment.
+    pub trajectory: Vec<(f64, f64)>,
+    /// Epoch boundaries evaluated (including warmup/idle holds).
+    pub epochs: usize,
+    /// Epochs on which γ actually moved.
+    pub adjustments: usize,
+    /// γ after the last adjustment (the start value if none fired).
+    pub settled_gamma: f64,
+    pub gamma_min: f64,
+    pub gamma_max: f64,
+    /// Epoch shed fraction at the last evaluated epoch.
+    pub shed_frac_at_settle: f64,
+    /// Cumulative p99 at the last evaluated epoch.
+    pub p99_at_settle_s: f64,
+}
+
+impl ControlReport {
+    pub fn to_json(&self) -> Json {
+        let trajectory = Json::Arr(
+            self.trajectory
+                .iter()
+                .map(|&(t, g)| Json::Arr(vec![Json::Num(t), Json::Num(g)]))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("trajectory", trajectory),
+            ("epochs", Json::Num(self.epochs as f64)),
+            ("adjustments", Json::Num(self.adjustments as f64)),
+            ("settled_gamma", Json::Num(self.settled_gamma)),
+            ("gamma_min", Json::Num(self.gamma_min)),
+            ("gamma_max", Json::Num(self.gamma_max)),
+            ("shed_frac_at_settle", Json::Num(self.shed_frac_at_settle)),
+            ("p99_at_settle_s", Json::Num(self.p99_at_settle_s)),
+        ])
+    }
+
+    /// Fold the trace into a report digest (same additive contract as
+    /// [`ElasticityReport`](crate::fleet::autoscale::ElasticityReport):
+    /// only called when the run carried a controller).
+    pub fn digest_into(&self, h: &mut Fnv1a) {
+        h.write_u64(self.trajectory.len() as u64);
+        for &(t, g) in &self.trajectory {
+            h.write_u64(t.to_bits());
+            h.write_u64(g.to_bits());
+        }
+        h.write_u64(self.epochs as u64);
+        h.write_u64(self.adjustments as u64);
+        h.write_u64(self.settled_gamma.to_bits());
+        h.write_u64(self.gamma_min.to_bits());
+        h.write_u64(self.gamma_max.to_bits());
+        h.write_u64(self.shed_frac_at_settle.to_bits());
+        h.write_u64(self.p99_at_settle_s.to_bits());
+    }
+
+    /// One-line summary for `render()` output; `ci.sh` greps it to check
+    /// the settled γ landed inside the configured bounds.
+    pub fn render_line(&self) -> String {
+        let start = self.trajectory.first().map(|&(_, g)| g).unwrap_or(0.0);
+        format!(
+            "control: gamma {:.3} -> {:.3} (settled, bounds [{:.3}, {:.3}]) | {} epochs, {} adjustments | shed {:.1}% p99 {:.3} s at settle",
+            start,
+            self.settled_gamma,
+            self.gamma_min,
+            self.gamma_max,
+            self.epochs,
+            self.adjustments,
+            self.shed_frac_at_settle * 100.0,
+            self.p99_at_settle_s,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn spec() -> ControlSpec {
+        ControlSpec {
+            p99_high: Some(Dur::Seconds(0.5)),
+            energy_high_j: Some(2.5),
+            ..ControlSpec::default()
+        }
+    }
+
+    #[test]
+    fn json_round_trips_bit_identically() {
+        for s in [ControlSpec::default(), spec()] {
+            let text = s.to_json().render(0);
+            let v = json::parse(&text).unwrap();
+            let back = ControlSpec::from_json(&v, "control").unwrap();
+            assert_eq!(s, back);
+            assert_eq!(text, back.to_json().render(0));
+        }
+        // Optional fields are omitted, not serialized as null.
+        let text = ControlSpec::default().to_json().render(0);
+        assert!(!text.contains("p99_high"));
+        assert!(!text.contains("energy_high_j"));
+    }
+
+    #[test]
+    fn parse_errors_carry_field_paths() {
+        let v = json::parse(r#"{"bogus": 1}"#).unwrap();
+        let err = ControlSpec::from_json(&v, "scenario.control")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("scenario.control"), "{err}");
+        assert!(err.contains("bogus"), "{err}");
+
+        let v = json::parse(r#"{"period": {"rounds": "x"}}"#).unwrap();
+        let err = ControlSpec::from_json(&v, "scenario.control")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("scenario.control.period"), "{err}");
+    }
+
+    #[test]
+    fn validation_rejects_bad_bands_and_ranges() {
+        let ok = spec();
+        ok.validate("c").unwrap();
+
+        let mut s = spec();
+        s.gamma_min = 0.9;
+        s.gamma_max = 0.6;
+        assert!(s.validate("c").is_err());
+
+        s = spec();
+        s.gamma_min = 0.0;
+        assert!(s.validate("c").is_err());
+
+        s = spec();
+        s.gamma_max = 1.5;
+        assert!(s.validate("c").is_err());
+
+        s = spec();
+        s.relax = 1.0;
+        assert!(s.validate("c").is_err());
+
+        s = spec();
+        s.step = 0.0;
+        assert!(s.validate("c").is_err());
+
+        s = spec();
+        s.shed_high = 1.5;
+        assert!(s.validate("c").is_err());
+
+        s = spec();
+        s.energy_high_j = Some(-1.0);
+        assert!(s.validate("c").is_err());
+
+        s = spec();
+        s.schema_version = CONTROL_SCHEMA_VERSION + 1;
+        let err = s.validate("c").unwrap_err().to_string();
+        assert!(err.contains("control_schema_version"), "{err}");
+    }
+
+    #[test]
+    fn resolve_fixes_durations_and_binds_gamma0() {
+        let rt = spec().resolve(0.25, 0.8).unwrap();
+        assert_eq!(rt.period_s, 2.0); // 8 rounds × 0.25 s
+        assert_eq!(rt.warmup_s, 1.0);
+        assert_eq!(rt.p99_high_s, Some(0.5));
+        assert_eq!(rt.gamma0, 0.8);
+    }
+
+    fn runtime() -> ControlRuntime {
+        ControlRuntime {
+            period_s: 1.0,
+            warmup_s: 2.0,
+            shed_high: 0.05,
+            p99_high_s: None,
+            energy_high_j: None,
+            step: 0.02,
+            relax: 0.85,
+            gamma_min: 0.5,
+            gamma_max: 0.9,
+            gamma0: 0.8,
+        }
+    }
+
+    #[test]
+    fn warmup_epochs_observe_but_never_adapt() {
+        let mut c = GammaController::new(runtime(), 3);
+        // Both epochs end before warmup_s = 2.0 (boundary at 1.0) or at
+        // its edge; the first is inside warmup even under heavy shedding.
+        assert!(!c.observe(1.0, 10, 90, 0.1, 1.0));
+        assert_eq!(c.gamma(), 0.8);
+        let r = c.into_report();
+        assert_eq!(r.epochs, 1);
+        assert_eq!(r.adjustments, 0);
+    }
+
+    #[test]
+    fn breach_relaxes_down_and_health_recovers_up() {
+        let mut c = GammaController::new(runtime(), 3);
+        // Past warmup, 50% shed: relax γ down multiplicatively.
+        assert!(c.observe(2.0, 50, 50, 0.1, 1.0));
+        let after_breach = c.gamma();
+        assert!((after_breach - 0.8 * 0.85).abs() < 1e-12);
+        // Healthy epoch: additive recovery.
+        assert!(c.observe(3.0, 150, 50, 0.1, 1.0));
+        assert!((c.gamma() - (after_breach + 0.02)).abs() < 1e-12);
+        // Idle epoch: hold.
+        assert!(!c.observe(4.0, 150, 50, 0.1, 1.0));
+    }
+
+    #[test]
+    fn gamma_respects_bounds_and_counts_adjustments() {
+        let mut rt = runtime();
+        rt.relax = 0.1;
+        rt.warmup_s = 0.0;
+        let mut c = GammaController::new(rt, 3);
+        // Massive shedding every epoch: γ floors at gamma_min.
+        for t in 1..=5 {
+            c.observe(t as f64, 0, 100 * t, 0.1, 1.0);
+        }
+        assert_eq!(c.gamma(), 0.5);
+        // Healthy epochs forever: γ caps at gamma_max.
+        for t in 6..=60 {
+            c.observe(t as f64, 1000 * t, 500, 0.1, 1.0);
+        }
+        assert_eq!(c.gamma(), 0.9);
+        let r = c.into_report();
+        assert!(r.adjustments >= 2);
+        assert!(r.trajectory.len() >= 3);
+        assert_eq!(r.settled_gamma, 0.9);
+        // Trajectory times strictly increase and γ stays in bounds.
+        for w in r.trajectory.windows(2) {
+            assert!(w[1].0 > w[0].0);
+        }
+        for &(_, g) in &r.trajectory {
+            assert!((0.5..=0.9).contains(&g));
+        }
+    }
+
+    #[test]
+    fn p99_and_energy_ceilings_trigger_breaches() {
+        let mut rt = runtime();
+        rt.warmup_s = 0.0;
+        rt.p99_high_s = Some(0.5);
+        let mut c = GammaController::new(rt, 3);
+        assert!(c.observe(1.0, 100, 0, 0.9, 1.0));
+        assert!(c.gamma() < 0.8, "p99 breach must relax γ");
+
+        let mut rt = runtime();
+        rt.warmup_s = 0.0;
+        rt.energy_high_j = Some(0.5);
+        let mut c = GammaController::new(rt, 3);
+        // 100 completions at 1 J total = 0.01 J/query: healthy.
+        assert!(c.observe(1.0, 100, 0, 0.1, 1.0));
+        assert!(c.gamma() > 0.8);
+        // Next epoch burns 400 J over 100 queries: 4 J/query breach.
+        assert!(c.observe(2.0, 200, 0, 0.1, 401.0));
+        assert!(c.gamma() < 0.8 + 0.02);
+    }
+
+    #[test]
+    fn controller_is_a_pure_function_of_its_inputs() {
+        let run = || {
+            let mut c = GammaController::new(runtime(), 4);
+            let mut out = Vec::new();
+            for t in 1..=20 {
+                let completed = 40 * t;
+                let shed = if t % 3 == 0 { 10 * t } else { t };
+                c.observe(t as f64, completed, shed, 0.2, t as f64);
+                out.push(c.gamma().to_bits());
+            }
+            (out, c.into_report())
+        };
+        let (a, ra) = run();
+        let (b, rb) = run();
+        assert_eq!(a, b);
+        assert_eq!(ra, rb);
+        let mut ha = Fnv1a::new();
+        let mut hb = Fnv1a::new();
+        ra.digest_into(&mut ha);
+        rb.digest_into(&mut hb);
+        assert_eq!(ha.finish(), hb.finish());
+    }
+
+    #[test]
+    fn report_digest_is_sensitive_to_the_trajectory() {
+        let mut c1 = GammaController::new(runtime(), 3);
+        c1.observe(2.0, 50, 50, 0.1, 1.0);
+        let mut c2 = GammaController::new(runtime(), 3);
+        c2.observe(2.0, 100, 0, 0.1, 1.0);
+        let (r1, r2) = (c1.into_report(), c2.into_report());
+        let mut h1 = Fnv1a::new();
+        let mut h2 = Fnv1a::new();
+        r1.digest_into(&mut h1);
+        r2.digest_into(&mut h2);
+        assert_ne!(h1.finish(), h2.finish());
+    }
+
+    #[test]
+    fn render_line_is_greppable() {
+        let mut c = GammaController::new(runtime(), 3);
+        c.observe(2.0, 50, 50, 0.31, 1.0);
+        let line = c.into_report().render_line();
+        assert!(line.starts_with("control: gamma"), "{line}");
+        assert!(line.contains("bounds [0.500, 0.900]"), "{line}");
+        assert!(line.contains("adjustments"), "{line}");
+    }
+}

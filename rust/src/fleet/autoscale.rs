@@ -42,6 +42,7 @@
 
 use super::cell::{Cell, CellState};
 use crate::scenario::{Dur, EngineObserver};
+use crate::selection::SelectorSpec;
 use crate::telemetry::LatencyStats;
 use crate::util::error::{Error, Result};
 use crate::util::hash::Fnv1a;
@@ -368,7 +369,8 @@ pub struct AutoscaleRuntime {
 
 /// One cell's deviations from the fleet-wide configuration. Every field
 /// is optional; unset fields inherit the fleet default. JSON:
-/// `{"cell": 1, "max_active": 1, "fading_rho": 0.5, "capacity_fraction": 0.5}`.
+/// `{"cell": 1, "max_active": 1, "fading_rho": 0.5, "capacity_fraction": 0.5,
+/// "selector": "sift"}`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CellOverride {
     /// Base-cell index this override applies to.
@@ -383,11 +385,18 @@ pub struct CellOverride {
     /// Scales the cell's admission-queue capacity; floors at the batch
     /// trigger so a fractional cell can still form rounds.
     pub capacity_fraction: Option<f64>,
+    /// Per-cell expert-selection algorithm by registry name (e.g.
+    /// `"channel-gate"`, `"sift"` — see
+    /// [`SelectorSpec::NAMES`](crate::selection::SelectorSpec)). The
+    /// cache key carries the policy tag, so a cell racing a different
+    /// selector occupies its own key space — the substrate of
+    /// selector-race fleets.
+    pub selector: Option<SelectorSpec>,
 }
 
 impl CellOverride {
     const KEYS: &'static [&'static str] =
-        &["cell", "max_active", "fading_rho", "capacity_fraction"];
+        &["cell", "max_active", "fading_rho", "capacity_fraction", "selector"];
 
     pub fn to_json(&self) -> Json {
         let mut fields: Vec<(&str, Json)> = vec![("cell", Json::Num(self.cell as f64))];
@@ -399,6 +408,9 @@ impl CellOverride {
         }
         if let Some(f) = self.capacity_fraction {
             fields.push(("capacity_fraction", Json::Num(f)));
+        }
+        if let Some(s) = self.selector {
+            fields.push(("selector", Json::Str(s.name())));
         }
         Json::obj(fields)
     }
@@ -432,11 +444,20 @@ impl CellOverride {
                     .ok_or_else(|| bad(path, "'capacity_fraction' must be a number"))?,
             ),
         };
+        let selector = match v.get("selector") {
+            Json::Null => None,
+            Json::Str(s) => Some(
+                SelectorSpec::parse(s)
+                    .map_err(|e| bad(path, format!("'selector': {e}")))?,
+            ),
+            _ => return Err(bad(path, "'selector' must be a selector-name string")),
+        };
         Ok(CellOverride {
             cell,
             max_active,
             fading_rho,
             capacity_fraction,
+            selector,
         })
     }
 
@@ -469,7 +490,10 @@ impl CellOverride {
                 ));
             }
         }
-        if self.max_active.is_none() && self.fading_rho.is_none() && self.capacity_fraction.is_none()
+        if self.max_active.is_none()
+            && self.fading_rho.is_none()
+            && self.capacity_fraction.is_none()
+            && self.selector.is_none()
         {
             return Err(bad(path, "override sets no fields (drop the entry)"));
         }
@@ -926,6 +950,30 @@ mod tests {
                 .unwrap_err()
         );
         assert!(err.contains("fleet.overrides[0]") && err.contains("cell"), "{err}");
+
+        let bad_selector = r#"{"cell": 1, "selector": "sfit"}"#;
+        let err = format!(
+            "{:#}",
+            CellOverride::from_json(&Json::parse(bad_selector).unwrap(), "fleet.overrides[1]")
+                .unwrap_err()
+        );
+        assert!(err.contains("fleet.overrides[1]") && err.contains("sfit"), "{err}");
+    }
+
+    #[test]
+    fn selector_override_round_trips_by_name() {
+        let ov = CellOverride {
+            cell: 2,
+            max_active: None,
+            fading_rho: None,
+            capacity_fraction: None,
+            selector: Some(SelectorSpec::ChannelGate),
+        };
+        ov.validate(4, 4, "o").unwrap();
+        let text = ov.to_json().to_string_pretty();
+        assert!(text.contains("channel-gate"), "{text}");
+        let back = CellOverride::from_json(&Json::parse(&text).unwrap(), "o").unwrap();
+        assert_eq!(back, ov);
     }
 
     #[test]
@@ -961,6 +1009,7 @@ mod tests {
             max_active: Some(1),
             fading_rho: None,
             capacity_fraction: None,
+            selector: None,
         };
         let err = format!("{:#}", ov.validate(4, 4, "o").unwrap_err());
         assert!(err.contains("cell 9 out of range"), "{err}");
@@ -969,6 +1018,7 @@ mod tests {
             max_active: Some(9),
             fading_rho: None,
             capacity_fraction: None,
+            selector: None,
         };
         let err = format!("{:#}", wide.validate(4, 4, "o").unwrap_err());
         assert!(err.contains("max_active 9"), "{err}");
@@ -977,6 +1027,7 @@ mod tests {
             max_active: None,
             fading_rho: None,
             capacity_fraction: None,
+            selector: None,
         };
         let err = format!("{:#}", empty.validate(4, 4, "o").unwrap_err());
         assert!(err.contains("no fields"), "{err}");

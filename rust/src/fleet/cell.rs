@@ -32,6 +32,7 @@ use crate::channel::ChannelModel;
 use crate::chaos::{ChaosReport, ChaosRuntime, ChaosState};
 use crate::coordinator::ServePolicy;
 use crate::energy::{EnergyLedger, EnergyModel};
+use crate::gating::LayerImportance;
 use crate::jesa::JesaOptions;
 use crate::metrics::{Metrics, SelectionPattern};
 use crate::protocol::ComputeModel;
@@ -401,6 +402,15 @@ impl Cell {
     /// for subsequent rounds.
     pub fn set_path_scale(&mut self, scale: f64) {
         self.channel.set_path_scale(scale);
+    }
+
+    /// Install a new per-layer importance schedule for subsequent
+    /// rounds (the adaptive-γ controller stepping the fleet-wide γ).
+    /// Safe mid-run: each round reads the policy fresh when it forms,
+    /// and the solution-cache key carries the per-layer threshold, so
+    /// rounds under different schedules occupy separate key spaces.
+    pub fn set_importance(&mut self, importance: LayerImportance) {
+        self.policy.importance = importance;
     }
 
     /// Admit one routed arrival; returns `false` when the queue sheds it

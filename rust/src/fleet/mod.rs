@@ -93,6 +93,7 @@ pub use report::{CellReport, FleetReport};
 pub use router::{RoutePolicy, Router};
 
 use crate::chaos::{ChaosReport, ChaosRuntime};
+use crate::control::{ControlRuntime, GammaController};
 use crate::coordinator::ServePolicy;
 use crate::energy::{EnergyBreakdown, EnergyModel};
 use crate::metrics::{Metrics, SelectionPattern};
@@ -175,6 +176,12 @@ pub struct FleetOptions {
     /// from epoch signals. `None` (the default) takes exactly the
     /// pre-elasticity code path — fixed fleet, bit-identical reports.
     pub autoscale: Option<AutoscaleRuntime>,
+    /// Resolved adaptive-γ control loop ([`crate::control`]): a
+    /// deterministic epoch controller on the lockstep event loop steps
+    /// the fleet-wide importance schedule against QoS targets. `None`
+    /// (the default) serves with the fixed schedule — bit-identical
+    /// pre-control reports.
+    pub control: Option<ControlRuntime>,
     /// Non-uniform fleets: per-cell deviations from the fleet-wide
     /// policy/channel/queue configuration (safe with the shared cache —
     /// the key partitions on the policy and channel signature, so
@@ -205,6 +212,7 @@ impl FleetOptions {
             record_completions: true,
             chaos: None,
             autoscale: None,
+            control: None,
             overrides: Vec::new(),
         }
     }
@@ -353,6 +361,10 @@ impl FleetEngine {
             // The autoscaler reads live queue state at epoch barriers,
             // so elastic fleets always run the lockstep loop.
             && self.opts.autoscale.is_none()
+            // The γ controller likewise snapshots fleet-wide QoS
+            // counters at arrival barriers and installs new importance
+            // schedules mid-run, so adaptive fleets run lockstep too.
+            && self.opts.control.is_none()
     }
 
     /// Run one fleet simulation over a global traffic stream.
@@ -431,6 +443,13 @@ impl FleetEngine {
                             .max(queue.batch_queries)
                             .max(1);
                     }
+                    if let Some(sel) = ov.selector {
+                        // Selector races: this cell solves with its own
+                        // algorithm. The cache key's policy tag keeps
+                        // its solutions out of every other cell's space.
+                        policy.policy = sel.to_policy();
+                        policy.label = format!("{}+{}", policy.label, sel.name());
+                    }
                 }
                 let mut cell = Cell::new(
                     &self.cfg,
@@ -469,6 +488,16 @@ impl FleetEngine {
             .autoscale
             .as_ref()
             .map(|rt| AutoscaleController::new(rt.clone(), total_cells, self.opts.warmup_rounds));
+        // Same contract for the γ controller: its epoch snapshots read
+        // cell counters in ascending index order at arrival barriers, so
+        // the trajectory (and digest) is identical sequential vs
+        // lane-parallel. Control-on forces the lockstep loop — see
+        // `static_routing`.
+        let mut gamma_ctl = self
+            .opts
+            .control
+            .as_ref()
+            .map(|rt| GammaController::new(rt.clone(), layers));
 
         let lanes = self.effective_lanes();
         if lanes >= 2 && self.static_routing() {
@@ -487,6 +516,7 @@ impl FleetEngine {
         } else if lanes >= 2 {
             let executor = Executor::new(lanes);
             let ctrl = controller.as_mut();
+            let gctl = gamma_ctl.as_mut();
             executor.scope(|scope| {
                 self.run_lockstep(
                     arrivals,
@@ -499,6 +529,7 @@ impl FleetEngine {
                     Some(scope),
                     &mut sessions,
                     ctrl,
+                    gctl,
                     obs,
                 )
             });
@@ -514,10 +545,12 @@ impl FleetEngine {
                 None,
                 &mut sessions,
                 controller.as_mut(),
+                gamma_ctl.as_mut(),
                 obs,
             );
         }
         let elasticity = controller.map(AutoscaleController::into_report);
+        let control = gamma_ctl.map(GammaController::into_report);
 
         // Aggregate (deterministic merge order: ascending cell index).
         let mut completions: Vec<Completion> = Vec::new();
@@ -624,6 +657,7 @@ impl FleetEngine {
             pattern,
             metrics,
             elasticity,
+            control,
         }
     }
 
@@ -687,6 +721,7 @@ impl FleetEngine {
         scope: Option<&TaskScope<'_, 'env>>,
         sessions: &mut SessionTracker,
         mut ctrl: Option<&mut AutoscaleController>,
+        mut gctl: Option<&mut GammaController>,
         obs: &mut dyn EngineObserver,
     ) {
         let users = mobility.users();
@@ -741,6 +776,12 @@ impl FleetEngine {
             // controller runs here, on the event loop, in both modes).
             if let Some(ctrl) = ctrl.as_deref_mut() {
                 ctrl.tick(t, cells, obs);
+            }
+            // Adaptive γ: evaluate elapsed control epochs at the same
+            // barrier, before this arrival routes or any cell forms its
+            // next round under the (possibly) stepped schedule.
+            if let Some(g) = gctl.as_deref_mut() {
+                gamma_tick(g, t, cells);
             }
             // Advance the world to this arrival: mobility first, then
             // every cell's radio regime and due rounds — so the router
@@ -975,6 +1016,36 @@ impl FleetEngine {
                 .collect();
             scope.run_batch(tasks);
         });
+    }
+}
+
+/// Adaptive-γ epoch hook of the lockstep loop: at due boundaries,
+/// snapshot the fleet-wide QoS counters in ascending cell index order
+/// under the cell locks (the same deterministic merge order the report
+/// uses) and, when the controller steps γ, install the new importance
+/// schedule in every cell before any later round forms. Runs on the
+/// event loop in both execution modes, so the trajectory is identical
+/// sequential vs lane-parallel.
+fn gamma_tick(g: &mut GammaController, t: f64, cells: &[Mutex<Cell>]) {
+    if !g.due(t) {
+        return;
+    }
+    let mut completed = 0usize;
+    let mut shed = 0usize;
+    let mut energy_j = 0.0f64;
+    let mut latency = LatencyStats::default();
+    for slot in cells {
+        let cell = slot.lock().unwrap();
+        completed += cell.completed();
+        let (sqf, sdl) = cell.shed_counts();
+        shed += sqf + sdl;
+        energy_j += cell.ledger().total().total_j();
+        latency.merge(cell.latency_stats());
+    }
+    if g.observe(t, completed, shed, latency.p99_s(), energy_j) {
+        for slot in cells {
+            slot.lock().unwrap().set_importance(g.importance());
+        }
     }
 }
 

@@ -3,6 +3,7 @@
 
 use super::autoscale::ElasticityReport;
 use crate::chaos::ChaosReport;
+use crate::control::ControlReport;
 use crate::energy::EnergyBreakdown;
 use crate::metrics::{Metrics, SelectionPattern};
 use crate::serve::engine::Completion;
@@ -86,6 +87,11 @@ pub struct FleetReport {
     /// so autoscale-off reports stay byte-identical to pre-elasticity
     /// builds.
     pub elasticity: Option<ElasticityReport>,
+    /// Adaptive-γ controller trajectory — populated exactly when the run
+    /// had a control section
+    /// ([`FleetOptions::control`](crate::fleet::FleetOptions::control)),
+    /// so control-off reports stay byte-identical to pre-control builds.
+    pub control: Option<ControlReport>,
 }
 
 impl FleetReport {
@@ -279,6 +285,11 @@ impl FleetReport {
         if let Some(e) = &self.elasticity {
             e.digest_into(&mut h);
         }
+        // Likewise additive: the γ trajectory folds in only when a
+        // control loop ran.
+        if let Some(c) = &self.control {
+            c.digest_into(&mut h);
+        }
         h.finish()
     }
 
@@ -344,6 +355,10 @@ impl FleetReport {
         // Additive, autoscale-on only — same byte-identity contract.
         if let Some(e) = &self.elasticity {
             fields.push(("elasticity", e.to_json()));
+        }
+        // Additive, control-on only — same byte-identity contract.
+        if let Some(c) = &self.control {
+            fields.push(("control", c.to_json()));
         }
         Json::obj(fields)
     }
@@ -414,6 +429,10 @@ impl FleetReport {
         }
         if let Some(e) = &self.elasticity {
             out.push_str(&e.render_line());
+            out.push('\n');
+        }
+        if let Some(c) = &self.control {
+            out.push_str(&c.render_line());
             out.push('\n');
         }
         out.push_str(&format!("report digest 0x{:016x}\n", self.digest()));

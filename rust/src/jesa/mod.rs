@@ -48,6 +48,12 @@ pub enum SelectionPolicy {
     /// Pseudo-polynomial score-grid DP with the given resolution
     /// (Appendix-A ablation).
     Dp(usize),
+    /// Channel-aware gating: scores modulated by per-link cost before
+    /// the greedy pick (arXiv 2504.00819).
+    ChannelGate,
+    /// Similarity-aware SiftMoE-style redundancy skipping
+    /// (arXiv 2603.23888).
+    Sift,
     /// Route every token to one fixed expert — the "individual expert"
     /// rows of Table I. Not a solver; stays outside the registry.
     Forced(usize),

@@ -13,7 +13,8 @@
 //!   `flash-crowd-mmpp`, `handover-storm`,
 //!   `cache-cold-heterogeneous-gamma`, `low-qos-energy-saver`,
 //!   `expert-flap`, `cell-crash-storm`, `flash-crowd-autoscale`,
-//!   `crash-storm-selfheal`),
+//!   `crash-storm-selfheal`, `selector-race`,
+//!   `adaptive-gamma-flash-crowd`),
 //!   bit-identical JSON round-trips, and the unified execution facade:
 //!   the [`Engine`](scenario::Engine) trait + [`RunReport`](scenario::RunReport)
 //!   both engines implement, plus streaming
@@ -41,6 +42,14 @@
 //!   [`fleet::autoscale`] controller closes the loop: epoch-driven
 //!   spawn/drain/heal decisions over standby slots (elastic fleets,
 //!   crash replacement) plus per-cell overrides for non-uniform cells.
+//! * [`control`] — the adaptive control plane: a deterministic,
+//!   schema-versioned online [`GammaController`](control::GammaController)
+//!   that tunes the paper's importance factor γ at fixed epoch
+//!   boundaries against QoS targets (shed rate, p99, energy per query)
+//!   with an AIMD step law, driven from both engines via an optional
+//!   `Scenario.control` section and reported as an additive
+//!   [`ControlReport`](control::ControlReport) block (γ trajectory,
+//!   settled value, QoS at settle).
 //! * [`chaos`] — scenario-driven failure & churn injection: a seeded,
 //!   schema-versioned [`ChaosSpec`](chaos::ChaosSpec) scheduling expert
 //!   outages (driven into the DES forced-exclusion mask), transient
@@ -108,6 +117,7 @@ pub mod bench_harness;
 pub mod channel;
 pub mod chaos;
 pub mod config;
+pub mod control;
 pub mod coordinator;
 pub mod energy;
 pub mod fleet;

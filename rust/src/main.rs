@@ -867,7 +867,8 @@ USAGE: dmoe <subcommand> [--flags]
   all        run everything and save reports/
 
 Expert selectors (--selector / scenario policy.selector): des, topk:K,
-greedy, exhaustive, dp:G — resolved via the selection registry.
+greedy, exhaustive, dp:G, channel-gate, sift — resolved via the
+selection registry.
 
 Flags: --artifacts DIR, --config FILE, --reports DIR, --save,
        --batches N, --rounds N, --seed N, --gamma0 X, --z X, --policy P";

@@ -12,8 +12,9 @@
 //! without re-deriving.
 
 use super::observer::{EngineObserver, NullObserver};
-use super::spec::Scenario;
+use super::spec::{PolicyKind, Scenario};
 use crate::chaos::ChaosReport;
+use crate::control::ControlReport;
 use crate::energy::EnergyBreakdown;
 use crate::fleet::{CellLayout, FleetEngine, FleetOptions, FleetReport, Mobility};
 use crate::metrics::SelectionPattern;
@@ -101,6 +102,15 @@ impl RunReport {
         match self {
             RunReport::Serve(r) => r.chaos.as_ref(),
             RunReport::Fleet(r) => r.chaos.as_ref(),
+        }
+    }
+
+    /// Adaptive-γ controller trajectory — `Some` exactly when the
+    /// scenario carried a `control` section (see [`crate::control`]).
+    pub fn control(&self) -> Option<&ControlReport> {
+        match self {
+            RunReport::Serve(r) => r.control.as_ref(),
+            RunReport::Fleet(r) => r.control.as_ref(),
         }
     }
 
@@ -406,6 +416,21 @@ pub fn prepare_opts(scenario: &Scenario, popts: &PrepareOptions) -> Result<Prepa
         Some(c) => Some(c.resolve(round_s, cfg.workload.seed)?),
     };
 
+    // Resolve the adaptive-γ control loop against the same calibrated
+    // round latency. The controller steps the geometric importance
+    // schedule, so it binds the policy's gamma0 as its starting point
+    // (validate() guarantees the policy is JESA when control is set).
+    let control = match &scenario.control {
+        None => None,
+        Some(c) => {
+            let gamma0 = match &scenario.policy.kind {
+                PolicyKind::Jesa { gamma0, .. } => *gamma0,
+                _ => unreachable!("validate() requires a jesa policy when control is set"),
+            };
+            Some(c.resolve(round_s, gamma0)?)
+        }
+    };
+
     let queue = scenario.queue.build(k, round_s);
     let quant = scenario.quant.build();
     let handle = match &scenario.fleet {
@@ -419,6 +444,7 @@ pub fn prepare_opts(scenario: &Scenario, popts: &PrepareOptions) -> Result<Prepa
                 seed: cfg.workload.seed ^ 0x5E47E,
                 record_completions: popts.record_completions,
                 chaos,
+                control,
                 ..ServeOptions::new(policy, queue)
             };
             EngineHandle::Serve(ServeEngine::new(cfg, opts))
@@ -449,6 +475,7 @@ pub fn prepare_opts(scenario: &Scenario, popts: &PrepareOptions) -> Result<Prepa
             fopts.drain_at = f.drains.clone();
             fopts.record_completions = popts.record_completions;
             fopts.chaos = chaos;
+            fopts.control = control;
             // Resolve the autoscale control loop against the calibrated
             // round latency: round-relative epochs/warm-ups become
             // seconds, and the per-cell capacity band is anchored to the

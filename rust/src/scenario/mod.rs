@@ -29,7 +29,8 @@
 //!   `flash-crowd-mmpp`, `handover-storm`,
 //!   `cache-cold-heterogeneous-gamma`, `low-qos-energy-saver`,
 //!   `expert-flap`, `cell-crash-storm`, `flash-crowd-autoscale`,
-//!   `crash-storm-selfheal`.
+//!   `crash-storm-selfheal`, `selector-race`,
+//!   `adaptive-gamma-flash-crowd`.
 //! * [`engine`] — the [`Engine`] trait + [`RunReport`] enum both engines
 //!   implement, and [`prepare`]/[`run`]/[`run_observed`].
 //! * [`observer`] — the [`EngineObserver`] hook trait (round / shed /
@@ -38,7 +39,8 @@
 //!
 //! Expert-selection solvers are chosen **by name** through the
 //! [selector registry](crate::selection::registry) (`des`, `topk:K`,
-//! `greedy`, `exhaustive`, `dp:G`) — a scenario's `policy.selector`
+//! `greedy`, `exhaustive`, `dp:G`, `channel-gate`, `sift`) — a
+//! scenario's `policy.selector`
 //! field reaches the same registry the JESA driver resolves its solver
 //! from.
 //!

@@ -16,6 +16,8 @@
 //! | `cell-crash-storm` | fleet | mid-run cell crashes with re-routing under expert churn |
 //! | `flash-crowd-autoscale` | fleet | MMPP burst into an elastic fleet: spawn-on-overload band |
 //! | `crash-storm-selfheal` | fleet | cell-crash storm with the healing autoscaler replacing losses |
+//! | `selector-race` | fleet | three selectors (des / channel-gate / sift) race under one adaptive γ |
+//! | `adaptive-gamma-flash-crowd` | serve | MMPP burst with the γ controller trading relevance for capacity |
 
 use super::spec::{
     CacheSpec, Dur, FleetSpec, PolicySpec, ProcessSpec, QuantSpec, QueueSpec, RateSpec, Scenario,
@@ -23,7 +25,8 @@ use super::spec::{
 };
 use crate::chaos::{ChaosSpec, ExpertOutage, LinkFaultSpec};
 use crate::config::SystemConfig;
-use crate::fleet::{AutoscaleSpec, MobilityConfig, RoutePolicy};
+use crate::control::ControlSpec;
+use crate::fleet::{AutoscaleSpec, CellOverride, MobilityConfig, RoutePolicy};
 use crate::selection::SelectorSpec;
 use crate::serve::EvictionPolicy;
 use crate::util::error::{Error, Result};
@@ -40,6 +43,8 @@ pub const PRESET_NAMES: &[&str] = &[
     "cell-crash-storm",
     "flash-crowd-autoscale",
     "crash-storm-selfheal",
+    "selector-race",
+    "adaptive-gamma-flash-crowd",
 ];
 
 /// Resolve a preset by name. The error lists every known preset.
@@ -55,6 +60,8 @@ pub fn preset(name: &str) -> Result<Scenario> {
         "cell-crash-storm" => cell_crash_storm(),
         "flash-crowd-autoscale" => flash_crowd_autoscale(),
         "crash-storm-selfheal" => crash_storm_selfheal(),
+        "selector-race" => selector_race(),
+        "adaptive-gamma-flash-crowd" => adaptive_gamma_flash_crowd(),
         other => {
             return Err(Error::msg(format!(
                 "unknown scenario preset '{other}' (known: {})",
@@ -397,6 +404,96 @@ fn crash_storm_selfheal() -> Result<Scenario> {
         .build()
 }
 
+/// Three selectors race on identical traffic: round-robin routing deals
+/// the same MMPP-free load across three otherwise-identical cells, with
+/// cell 0 on the paper's DES branch-and-bound, cell 1 on the
+/// channel-gated greedy (`channel-gate`) and cell 2 on the
+/// similarity-filtered top-score selector (`sift`). One fleet-wide
+/// adaptive-γ controller steps the relevance floor for all three at
+/// once, and round-robin + control forces the lockstep spine — ci.sh
+/// gates the sequential-vs-lane-parallel digest and the settled γ band.
+fn selector_race() -> Result<Scenario> {
+    Scenario::builder("selector-race")
+        .policy(PolicySpec::jesa(0.8, 2))
+        .traffic(TrafficSpec {
+            queries: 4_000,
+            rate: RateSpec::Utilization(0.75),
+            ..TrafficSpec::default()
+        })
+        .queue(QueueSpec {
+            deadline: Some(Dur::Rounds(8.0)),
+            ..QueueSpec::default()
+        })
+        .control(ControlSpec {
+            period: Dur::Rounds(6.0),
+            warmup: Dur::Rounds(3.0),
+            gamma_min: 0.55,
+            gamma_max: 0.9,
+            ..ControlSpec::default()
+        })
+        .fleet(FleetSpec {
+            cells: 3,
+            route: RoutePolicy::RoundRobin,
+            spacing_m: 200.0,
+            fading_rho: 0.9,
+            mobility: MobilityConfig {
+                users: 48,
+                mean_speed_mps: 1.5,
+                ..MobilityConfig::default()
+            },
+            overrides: vec![
+                CellOverride {
+                    cell: 1,
+                    max_active: None,
+                    fading_rho: None,
+                    capacity_fraction: None,
+                    selector: Some(SelectorSpec::ChannelGate),
+                },
+                CellOverride {
+                    cell: 2,
+                    max_active: None,
+                    fading_rho: None,
+                    capacity_fraction: None,
+                    selector: Some(SelectorSpec::Sift),
+                },
+            ],
+            ..FleetSpec::default()
+        })
+        .build()
+}
+
+/// `flash-crowd-mmpp` with the adaptive-γ controller closing the loop:
+/// the same 2-state burst profile and tight deadline, but every 6 rounds
+/// the controller compares the epoch's shed fraction against the 5%
+/// band — bursts breach it and γ relaxes multiplicatively (cheaper,
+/// less relevant rounds recover capacity), troughs step it back up.
+/// A short run must show at least two distinct γ values settling inside
+/// [0.5, 0.85].
+fn adaptive_gamma_flash_crowd() -> Result<Scenario> {
+    Scenario::builder("adaptive-gamma-flash-crowd")
+        .policy(PolicySpec::jesa(0.8, 2))
+        .traffic(TrafficSpec {
+            queries: 6_000,
+            process: ProcessSpec::Bursty {
+                dwell: Dur::Rounds(40.0),
+            },
+            rate: RateSpec::Utilization(0.85),
+            ..TrafficSpec::default()
+        })
+        .queue(QueueSpec {
+            deadline: Some(Dur::Rounds(6.0)),
+            ..QueueSpec::default()
+        })
+        .control(ControlSpec {
+            period: Dur::Rounds(6.0),
+            warmup: Dur::Rounds(2.0),
+            gamma_min: 0.5,
+            gamma_max: 0.85,
+            ..ControlSpec::default()
+        })
+        .build()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -446,6 +543,25 @@ mod tests {
         for name in ["urban-macro-jsq", "handover-storm", "cell-crash-storm"] {
             let s = preset(name).unwrap();
             assert!(s.fleet.unwrap().autoscale.is_none(), "{name}");
+        }
+    }
+
+    #[test]
+    fn control_presets_carry_control_sections() {
+        let race = preset("selector-race").unwrap();
+        let c = race.control.as_ref().expect("selector-race has control");
+        assert!(c.gamma_min <= 0.8 && 0.8 <= c.gamma_max, "γ0 inside bounds");
+        let f = race.fleet.as_ref().expect("selector-race is a fleet");
+        assert_eq!(f.cells, 3);
+        let sels: Vec<_> = f.overrides.iter().filter_map(|o| o.selector).collect();
+        assert_eq!(sels, [SelectorSpec::ChannelGate, SelectorSpec::Sift]);
+
+        let crowd = preset("adaptive-gamma-flash-crowd").unwrap();
+        assert!(crowd.control.is_some() && crowd.fleet.is_none());
+        // Pre-control presets stay control-free: their reports and
+        // digests must remain byte-identical to earlier builds.
+        for name in ["paper-baseline", "flash-crowd-mmpp", "urban-macro-jsq"] {
+            assert!(preset(name).unwrap().control.is_none(), "{name}");
         }
     }
 

@@ -20,6 +20,7 @@
 
 use crate::chaos::ChaosSpec;
 use crate::config::SystemConfig;
+use crate::control::ControlSpec;
 use crate::coordinator::ServePolicy;
 use crate::fleet::{AutoscaleSpec, CellOverride, MobilityConfig, RoutePolicy};
 use crate::selection::SelectorSpec;
@@ -1159,6 +1160,10 @@ pub struct Scenario {
     /// Failure/churn injection; absent = perfect infrastructure (and a
     /// document bit-identical to pre-chaos builds).
     pub chaos: Option<ChaosSpec>,
+    /// Adaptive importance-factor control; absent = γ stays fixed at the
+    /// policy's γ0 (and the document/report are bit-identical to
+    /// pre-control builds). Requires a JESA policy.
+    pub control: Option<ControlSpec>,
 }
 
 impl Scenario {
@@ -1174,6 +1179,7 @@ impl Scenario {
         "workers",
         "fleet",
         "chaos",
+        "control",
     ];
 
     /// A scenario with every section at its default (serve-shaped,
@@ -1191,6 +1197,7 @@ impl Scenario {
             workers: None,
             fleet: None,
             chaos: None,
+            control: None,
         }
     }
 
@@ -1232,6 +1239,27 @@ impl Scenario {
             let cells = self.fleet.as_ref().map_or(1, |f| f.cells);
             c.validate(k, cells, self.fleet.is_some(), "scenario.chaos")?;
         }
+        if let Some(c) = &self.control {
+            c.validate("scenario.control")?;
+            // The controller steps the geometric γ schedule, so it only
+            // composes with the JESA family; and the configured band must
+            // contain the policy's start point.
+            match self.policy.kind {
+                PolicyKind::Jesa { gamma0, .. } => {
+                    crate::ensure!(
+                        c.gamma_min <= gamma0 && gamma0 <= c.gamma_max,
+                        "scenario.control: γ bounds [{}, {}] must contain the policy's gamma0 {}",
+                        c.gamma_min,
+                        c.gamma_max,
+                        gamma0
+                    );
+                }
+                _ => crate::bail!(
+                    "scenario.control: adaptive γ control requires a 'jesa' policy \
+                     (the controller steps the geometric importance schedule)"
+                ),
+            }
+        }
         Ok(())
     }
 
@@ -1259,6 +1287,9 @@ impl Scenario {
         }
         if let Some(c) = &self.chaos {
             fields.push(("chaos", c.to_json()));
+        }
+        if let Some(c) = &self.control {
+            fields.push(("control", c.to_json()));
         }
         Json::obj(fields)
     }
@@ -1304,6 +1335,10 @@ impl Scenario {
             Json::Null => None,
             c => Some(ChaosSpec::from_json(c, "scenario.chaos")?),
         };
+        let control = match v.get("control") {
+            Json::Null => None,
+            c => Some(ControlSpec::from_json(c, "scenario.control")?),
+        };
         let scenario = Scenario {
             schema_version,
             name,
@@ -1316,6 +1351,7 @@ impl Scenario {
             workers,
             fleet,
             chaos,
+            control,
         };
         scenario.validate()?;
         Ok(scenario)
@@ -1389,6 +1425,11 @@ impl ScenarioBuilder {
 
     pub fn chaos(mut self, chaos: ChaosSpec) -> Self {
         self.scenario.chaos = Some(chaos);
+        self
+    }
+
+    pub fn control(mut self, control: ControlSpec) -> Self {
+        self.scenario.control = Some(control);
         self
     }
 

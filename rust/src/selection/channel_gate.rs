@@ -1,0 +1,125 @@
+//! Channel-aware gating selector (after arXiv 2504.00819): gate scores
+//! are modulated by the instantaneous channel state *before* selection,
+//! so channel-starved experts get deprioritized even when their task
+//! relevance is high.
+//!
+//! Per-expert channel quality is derived from the selection cost `e_j`
+//! (the energy to reach the expert on the round's realized channel):
+//! `q_j = 1 / (1 + e_j / ē)` with `ē` the mean finite cost, so `q_j`
+//! falls smoothly from 1 (free link) toward 0 (expensive link) and is
+//! scale-invariant across channel regimes. Selection then ranks by the
+//! modulated score `t_j·q_j` and greedily adds experts until C1 is met
+//! on the **true** scores — the modulation only reorders candidates, it
+//! never moves the QoS constraint itself.
+
+use super::{fallback_top_d, Selection, SelectionProblem, QOS_EPS};
+
+/// Greedy selection over channel-modulated gate scores.
+pub fn solve(problem: &SelectionProblem) -> Selection {
+    if !problem.has_feasible_solution() {
+        return fallback_top_d(problem);
+    }
+    let k = problem.experts();
+    let finite: Vec<usize> = (0..k).filter(|&j| problem.costs[j].is_finite()).collect();
+    let mean_cost = if finite.is_empty() {
+        1.0
+    } else {
+        let sum: f64 = finite.iter().map(|&j| problem.costs[j]).sum();
+        (sum / finite.len() as f64).max(f64::MIN_POSITIVE)
+    };
+    let modulated = |j: usize| -> f64 {
+        let quality = 1.0 / (1.0 + problem.costs[j] / mean_cost);
+        problem.scores[j] * quality
+    };
+    let mut order = finite;
+    order.sort_by(|&a, &b| {
+        modulated(b)
+            .partial_cmp(&modulated(a))
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+
+    let mut selected: Vec<usize> = Vec::new();
+    let mut score = 0.0;
+    for &j in &order {
+        if score >= problem.threshold - QOS_EPS || selected.len() >= problem.max_active {
+            break;
+        }
+        selected.push(j);
+        score += problem.scores[j];
+    }
+    let feasible = problem.is_feasible(&selected);
+    Selection::from_indices(problem, selected, !feasible)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::{des, testutil::random_problem};
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn prefers_cheap_links_among_comparable_scores() {
+        // Expert 1 is slightly less relevant but far cheaper to reach:
+        // channel-aware gating picks it first.
+        let p = SelectionProblem::new(vec![0.35, 0.33, 0.32], vec![9.0, 0.5, 8.0], 0.3, 1);
+        let s = solve(&p);
+        assert_eq!(s.selected, vec![1]);
+        assert!(!s.fallback);
+    }
+
+    #[test]
+    fn meets_qos_on_true_scores_when_possible() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0x2504_0819);
+        for _ in 0..200 {
+            let k = rng.range_usize(2, 10);
+            let d = rng.range_usize(1, k + 1);
+            let p = random_problem(&mut rng, k, d);
+            let s = solve(&p);
+            if p.has_feasible_solution() {
+                // Modulation may reorder into a width-bound miss only
+                // when the top-D modulated set undershoots; either the
+                // result is feasible or flagged.
+                assert_eq!(s.fallback, !p.is_feasible(&s.selected));
+            } else {
+                assert!(s.fallback);
+            }
+            assert!(s.selected.len() <= p.max_active.max(p.experts()));
+        }
+    }
+
+    #[test]
+    fn never_cheaper_than_optimal() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0xC4A7);
+        for _ in 0..200 {
+            let k = rng.range_usize(2, 9);
+            let d = rng.range_usize(1, k + 1);
+            let p = random_problem(&mut rng, k, d);
+            let s = solve(&p);
+            let (opt, _) = des::solve(&p);
+            if !s.fallback && !opt.fallback {
+                assert!(
+                    s.cost >= opt.cost - 1e-9,
+                    "channel-gate {} beat DES {} on {p:?}",
+                    s.cost,
+                    opt.cost
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_instances_fall_back() {
+        let p = SelectionProblem::new(vec![0.4, 0.3, 0.3], vec![1.0; 3], 0.9, 2);
+        let s = solve(&p);
+        assert!(s.fallback);
+        assert_eq!(s.selected.len(), 2);
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let p = random_problem(&mut rng, 8, 3);
+        assert_eq!(solve(&p), solve(&p));
+    }
+}

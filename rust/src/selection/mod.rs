@@ -12,20 +12,25 @@
 //! exactly with tree search + an LP-relaxation bound, and
 //! [`exhaustive`] is the `O(2^K)` oracle used to verify optimality in
 //! tests and benches. [`topk`] and [`greedy`] are the baselines, [`dp`]
-//! the pseudo-polynomial cross-check. All of them sit behind the
-//! [`registry`]'s by-name [`ExpertSelector`] trait (`des`, `topk:K`,
-//! `greedy`, `exhaustive`, `dp:G`), which is how the JESA driver and
-//! [scenario](crate::scenario) files pick their solver.
+//! the pseudo-polynomial cross-check; [`channel_gate`] (channel-aware
+//! gating, arXiv 2504.00819) and [`sift`] (similarity-aware
+//! redundancy-skipping, arXiv 2603.23888) are the related-work
+//! selector-science entrants. All of them sit behind the [`registry`]'s
+//! by-name [`ExpertSelector`] trait (`des`, `topk:K`, `greedy`,
+//! `exhaustive`, `dp:G`, `channel-gate`, `sift`), which is how the JESA
+//! driver and [scenario](crate::scenario) files pick their solver.
 //!
 //! Infeasible instances (no ≤D-subset meets C1 — paper Remark 2) fall
 //! back to the Top-D selection and are flagged.
 
 pub mod bound;
+pub mod channel_gate;
 pub mod des;
 pub mod dp;
 pub mod exhaustive;
 pub mod greedy;
 pub mod registry;
+pub mod sift;
 pub mod topk;
 
 pub use registry::{ExpertSelector, SelectorSpec};

@@ -18,17 +18,20 @@
 //! assert_eq!(sel.selected, vec![0]);
 //! ```
 //!
-//! Names are `des`, `topk[:K]`, `greedy`, `exhaustive` and `dp[:GRID]`
+//! Names are `des`, `topk[:K]`, `greedy`, `exhaustive`, `dp[:GRID]`,
+//! `channel-gate` and `sift`
 //! ([`SelectorSpec::NAMES`]); the optional `:param` suffix carries the
-//! solver's integer parameter. [`SelectorSpec`] round-trips with
+//! solver's integer parameter. Unknown names get a Levenshtein
+//! "did you mean" hint from the same machinery the CLI flag parser uses. [`SelectorSpec`] round-trips with
 //! [`SelectionPolicy`](crate::jesa::SelectionPolicy) (minus `Forced`,
 //! which routes rather than solves), which is how
 //! [`jesa::solve_round`](crate::jesa::solve_round) resolves its per-round
 //! solver — one dispatch point instead of a `match` per token.
 
 use super::des::{DesSolver, DesStats};
-use super::{dp, exhaustive, greedy, topk, Selection, SelectionProblem};
+use super::{channel_gate, dp, exhaustive, greedy, sift, topk, Selection, SelectionProblem};
 use crate::jesa::SelectionPolicy;
+use crate::util::cli::nearest;
 use crate::util::error::{Error, Result};
 
 /// An expert-selection algorithm behind a uniform, reusable interface.
@@ -58,11 +61,26 @@ pub enum SelectorSpec {
     Exhaustive,
     /// Pseudo-polynomial score-grid DP with the given resolution.
     Dp(usize),
+    /// Channel-aware gating: scores modulated by per-link selection cost
+    /// before the greedy pick (arXiv 2504.00819).
+    ChannelGate,
+    /// Similarity-aware SiftMoE-style selection: skip experts whose gate
+    /// profile is redundant given already-selected ones
+    /// (arXiv 2603.23888).
+    Sift,
 }
 
 impl SelectorSpec {
     /// Every registered base name (without parameters), for diagnostics.
-    pub const NAMES: &'static [&'static str] = &["des", "topk", "greedy", "exhaustive", "dp"];
+    pub const NAMES: &'static [&'static str] = &[
+        "des",
+        "topk",
+        "greedy",
+        "exhaustive",
+        "dp",
+        "channel-gate",
+        "sift",
+    ];
 
     /// Parse a registry name: a base name with an optional `:param`
     /// integer suffix (`topk` defaults to k = 2, `dp` to the module's
@@ -117,10 +135,23 @@ impl SelectorSpec {
                 }
                 Ok(SelectorSpec::Dp(grid))
             }
-            other => Err(Error::msg(format!(
-                "unknown selector '{other}' (known: {})",
-                Self::NAMES.join(", ")
-            ))),
+            "channel-gate" => {
+                reject_param()?;
+                Ok(SelectorSpec::ChannelGate)
+            }
+            "sift" => {
+                reject_param()?;
+                Ok(SelectorSpec::Sift)
+            }
+            other => {
+                let hint = nearest(other, Self::NAMES)
+                    .map(|n| format!(" — did you mean '{n}'?"))
+                    .unwrap_or_default();
+                Err(Error::msg(format!(
+                    "unknown selector '{other}' (known: {}){hint}",
+                    Self::NAMES.join(", ")
+                )))
+            }
         }
     }
 
@@ -132,6 +163,8 @@ impl SelectorSpec {
             SelectorSpec::Greedy => "greedy".to_string(),
             SelectorSpec::Exhaustive => "exhaustive".to_string(),
             SelectorSpec::Dp(grid) => format!("dp:{grid}"),
+            SelectorSpec::ChannelGate => "channel-gate".to_string(),
+            SelectorSpec::Sift => "sift".to_string(),
         }
     }
 
@@ -143,6 +176,8 @@ impl SelectorSpec {
             SelectorSpec::Greedy => Box::new(GreedySelector),
             SelectorSpec::Exhaustive => Box::new(ExhaustiveSelector),
             SelectorSpec::Dp(grid) => Box::new(DpSelector { grid }),
+            SelectorSpec::ChannelGate => Box::new(ChannelGateSelector),
+            SelectorSpec::Sift => Box::new(SiftSelector),
         }
     }
 
@@ -155,6 +190,8 @@ impl SelectorSpec {
             SelectorSpec::Greedy => SelectionPolicy::Greedy,
             SelectorSpec::Exhaustive => SelectionPolicy::Exhaustive,
             SelectorSpec::Dp(grid) => SelectionPolicy::Dp(grid),
+            SelectorSpec::ChannelGate => SelectionPolicy::ChannelGate,
+            SelectorSpec::Sift => SelectionPolicy::Sift,
         }
     }
 
@@ -168,6 +205,8 @@ impl SelectorSpec {
             SelectionPolicy::Greedy => Some(SelectorSpec::Greedy),
             SelectionPolicy::Exhaustive => Some(SelectorSpec::Exhaustive),
             SelectionPolicy::Dp(grid) => Some(SelectorSpec::Dp(grid)),
+            SelectionPolicy::ChannelGate => Some(SelectorSpec::ChannelGate),
+            SelectionPolicy::Sift => Some(SelectorSpec::Sift),
             SelectionPolicy::Forced(_) => None,
         }
     }
@@ -235,6 +274,30 @@ impl ExpertSelector for ExhaustiveSelector {
     }
 }
 
+struct ChannelGateSelector;
+
+impl ExpertSelector for ChannelGateSelector {
+    fn name(&self) -> String {
+        "channel-gate".to_string()
+    }
+
+    fn solve(&mut self, problem: &SelectionProblem) -> (Selection, DesStats) {
+        (channel_gate::solve(problem), DesStats::default())
+    }
+}
+
+struct SiftSelector;
+
+impl ExpertSelector for SiftSelector {
+    fn name(&self) -> String {
+        "sift".to_string()
+    }
+
+    fn solve(&mut self, problem: &SelectionProblem) -> (Selection, DesStats) {
+        (sift::solve(problem), DesStats::default())
+    }
+}
+
 struct DpSelector {
     grid: usize,
 }
@@ -263,6 +326,8 @@ mod tests {
             SelectorSpec::Greedy,
             SelectorSpec::Exhaustive,
             SelectorSpec::Dp(128),
+            SelectorSpec::ChannelGate,
+            SelectorSpec::Sift,
         ] {
             assert_eq!(SelectorSpec::parse(&spec.name()).unwrap(), spec);
         }
@@ -282,6 +347,24 @@ mod tests {
         assert!(SelectorSpec::parse("topk:0").is_err());
         assert!(SelectorSpec::parse("greedy:2").is_err());
         assert!(SelectorSpec::parse("dp:1").is_err());
+        assert!(SelectorSpec::parse("channel-gate:2").is_err());
+        assert!(SelectorSpec::parse("sift:2").is_err());
+    }
+
+    #[test]
+    fn unknown_names_suggest_the_nearest_selector() {
+        // One-edit typo.
+        let err = SelectorSpec::parse("sfit").unwrap_err().to_string();
+        assert!(err.contains("did you mean 'sift'?"), "{err}");
+        // Prefix of a long name.
+        let err = SelectorSpec::parse("channel").unwrap_err().to_string();
+        assert!(err.contains("did you mean 'channel-gate'?"), "{err}");
+        let err = SelectorSpec::parse("gredy").unwrap_err().to_string();
+        assert!(err.contains("did you mean 'greedy'?"), "{err}");
+        // Nothing plausible: no hint, but the known list still prints.
+        let err = SelectorSpec::parse("zzzzzzzzzz").unwrap_err().to_string();
+        assert!(!err.contains("did you mean"), "{err}");
+        assert!(err.contains("known:"), "{err}");
     }
 
     #[test]
@@ -299,6 +382,10 @@ mod tests {
             assert_eq!(ex, exhaustive::solve(&p));
             let (dps, _) = SelectorSpec::Dp(4096).build().solve(&p);
             assert_eq!(dps, dp::solve(&p, 4096));
+            let (cg, _) = SelectorSpec::ChannelGate.build().solve(&p);
+            assert_eq!(cg, channel_gate::solve(&p));
+            let (sf, _) = SelectorSpec::Sift.build().solve(&p);
+            assert_eq!(sf, sift::solve(&p));
             // DES and the exhaustive oracle agree on the optimal cost.
             assert!((des_sel.cost - ex.cost).abs() < 1e-9);
         }
@@ -312,6 +399,8 @@ mod tests {
             SelectorSpec::Greedy,
             SelectorSpec::Exhaustive,
             SelectorSpec::Dp(64),
+            SelectorSpec::ChannelGate,
+            SelectorSpec::Sift,
         ] {
             assert_eq!(SelectorSpec::from_policy(spec.to_policy()), Some(spec));
         }

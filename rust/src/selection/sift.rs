@@ -1,0 +1,146 @@
+//! Similarity-aware (SiftMoE-style, after arXiv 2603.23888) selector:
+//! greedy marginal-contribution selection that *skips* experts whose
+//! expected contribution is redundant given already-selected ones.
+//!
+//! The synthetic workload carries no expert embeddings, so redundancy is
+//! proxied on the gate-score profile: a candidate whose score is within
+//! `SIM_EPS` (relative) of an already-selected expert's score is treated
+//! as that expert's near-twin — the gating network couldn't distinguish
+//! them, so adding both buys little marginal coverage. Pass 1 walks
+//! experts by descending true score, skipping redundant twins, until C1
+//! is met or the width bound C2 binds; pass 2 re-admits skipped twins
+//! (in the same order) only if C1 is still unmet — correctness first,
+//! diversity second.
+
+use super::{fallback_top_d, Selection, SelectionProblem, QOS_EPS};
+
+/// Relative score distance below which two experts count as redundant.
+pub const SIM_EPS: f64 = 0.02;
+
+/// Greedy redundancy-skipping selection.
+pub fn solve(problem: &SelectionProblem) -> Selection {
+    if !problem.has_feasible_solution() {
+        return fallback_top_d(problem);
+    }
+    let k = problem.experts();
+    let mut order: Vec<usize> = (0..k).filter(|&j| problem.costs[j].is_finite()).collect();
+    order.sort_by(|&a, &b| {
+        problem.scores[b]
+            .partial_cmp(&problem.scores[a])
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+
+    let redundant = |selected: &[usize], j: usize| -> bool {
+        selected.iter().any(|&i| {
+            (problem.scores[j] - problem.scores[i]).abs() <= SIM_EPS * problem.scores[i]
+        })
+    };
+
+    let mut selected: Vec<usize> = Vec::new();
+    let mut skipped: Vec<usize> = Vec::new();
+    let mut score = 0.0;
+    for &j in &order {
+        if score >= problem.threshold - QOS_EPS || selected.len() >= problem.max_active {
+            break;
+        }
+        if redundant(&selected, j) {
+            skipped.push(j);
+            continue;
+        }
+        selected.push(j);
+        score += problem.scores[j];
+    }
+    // Pass 2: redundancy must never cost feasibility — refill from the
+    // skipped twins until C1 is met or C2 binds.
+    for &j in &skipped {
+        if score >= problem.threshold - QOS_EPS || selected.len() >= problem.max_active {
+            break;
+        }
+        selected.push(j);
+        score += problem.scores[j];
+    }
+    if !problem.is_feasible(&selected) {
+        // The width bound filled up with diverse-but-light experts:
+        // collapse to Top-D by true score, which is feasible by the
+        // has_feasible_solution check above.
+        selected = order;
+        selected.truncate(problem.max_active);
+    }
+    let feasible = problem.is_feasible(&selected);
+    Selection::from_indices(problem, selected, !feasible)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::{des, testutil::random_problem};
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn skips_a_redundant_twin() {
+        // Experts 0 and 1 are near-identical in score; 2 is distinct.
+        // Threshold needs two experts — sift takes 0, skips twin 1,
+        // takes 2 for diversity.
+        let p = SelectionProblem::new(vec![0.40, 0.40, 0.20], vec![1.0; 3], 0.55, 2);
+        let s = solve(&p);
+        assert_eq!(s.selected, vec![0, 2]);
+        assert!(!s.fallback);
+    }
+
+    #[test]
+    fn refills_twins_when_qos_requires_them() {
+        // Only the twins can meet the threshold: pass 2 must re-admit.
+        let p = SelectionProblem::new(vec![0.45, 0.45, 0.10], vec![1.0; 3], 0.85, 2);
+        let s = solve(&p);
+        assert_eq!(s.selected, vec![0, 1]);
+        assert!(!s.fallback);
+    }
+
+    #[test]
+    fn meets_qos_whenever_feasible() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0x2603_2388);
+        for _ in 0..300 {
+            let k = rng.range_usize(2, 10);
+            let d = rng.range_usize(1, k + 1);
+            let p = random_problem(&mut rng, k, d);
+            let s = solve(&p);
+            if p.has_feasible_solution() {
+                assert!(
+                    p.is_feasible(&s.selected),
+                    "sift missed a feasible instance: {p:?} -> {s:?}"
+                );
+                assert!(!s.fallback);
+            } else {
+                assert!(s.fallback);
+            }
+        }
+    }
+
+    #[test]
+    fn never_cheaper_than_optimal() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0x51F7);
+        for _ in 0..200 {
+            let k = rng.range_usize(2, 9);
+            let d = rng.range_usize(1, k + 1);
+            let p = random_problem(&mut rng, k, d);
+            let s = solve(&p);
+            let (opt, _) = des::solve(&p);
+            if !s.fallback && !opt.fallback {
+                assert!(
+                    s.cost >= opt.cost - 1e-9,
+                    "sift {} beat DES {} on {p:?}",
+                    s.cost,
+                    opt.cost
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        let p = random_problem(&mut rng, 8, 3);
+        assert_eq!(solve(&p), solve(&p));
+    }
+}

@@ -266,6 +266,8 @@ fn policy_tag(policy: SelectionPolicy) -> (u8, u32) {
         SelectionPolicy::Forced(j) => (3, j as u32),
         SelectionPolicy::Exhaustive => (4, 0),
         SelectionPolicy::Dp(grid) => (5, grid as u32),
+        SelectionPolicy::ChannelGate => (6, 0),
+        SelectionPolicy::Sift => (7, 0),
     }
 }
 

@@ -29,6 +29,7 @@ use super::queue::{AdmissionQueue, QueueConfig};
 use super::traffic::{Arrival, TrafficConfig, TrafficGenerator};
 use crate::channel::ChannelModel;
 use crate::chaos::{ChaosReport, ChaosRuntime, ChaosState};
+use crate::control::{ControlReport, ControlRuntime, GammaController};
 use crate::coordinator::ServePolicy;
 use crate::energy::{EnergyBreakdown, EnergyLedger, EnergyModel};
 use crate::gating::GateScores;
@@ -80,6 +81,11 @@ pub struct ServeOptions {
     /// (the default) runs on perfect infrastructure and leaves every
     /// report field and digest bit-identical to a chaos-free build.
     pub chaos: Option<ChaosRuntime>,
+    /// Resolved adaptive-γ control loop ([`crate::control`]); `None`
+    /// (the default) serves with the policy's fixed importance schedule
+    /// and leaves every report field and digest bit-identical to a
+    /// control-free build.
+    pub control: Option<ControlRuntime>,
 }
 
 impl ServeOptions {
@@ -96,6 +102,7 @@ impl ServeOptions {
             record_timelines: false,
             record_completions: true,
             chaos: None,
+            control: None,
         }
     }
 }
@@ -160,6 +167,10 @@ pub struct ServeReport {
     /// when the run had a chaos schedule ([`ServeOptions::chaos`]), so
     /// chaos-off reports stay bit-identical to pre-chaos builds.
     pub chaos: Option<ChaosReport>,
+    /// Adaptive-γ controller trajectory — populated exactly when the
+    /// run had a control loop ([`ServeOptions::control`]), so
+    /// control-off reports stay bit-identical to pre-control builds.
+    pub control: Option<ControlReport>,
     /// Exact per-query records — populated only with
     /// [`ServeOptions::record_completions`] (the debug/accuracy path);
     /// empty on the O(1)-memory default scenario path.
@@ -274,6 +285,11 @@ impl ServeReport {
         if let Some(c) = &self.chaos {
             c.digest_into(&mut h);
         }
+        // Likewise additive: the γ trajectory folds in only when a
+        // control loop ran.
+        if let Some(c) = &self.control {
+            c.digest_into(&mut h);
+        }
         h.finish()
     }
 
@@ -305,6 +321,9 @@ impl ServeReport {
         // byte-identical to a pre-chaos build (no schema bump needed).
         if let Some(c) = &self.chaos {
             fields.push(("chaos", c.to_json(self.generated, self.completed)));
+        }
+        if let Some(c) = &self.control {
+            fields.push(("control", c.to_json()));
         }
         Json::obj(fields)
     }
@@ -355,6 +374,10 @@ impl ServeReport {
         ));
         if let Some(c) = &self.chaos {
             out.push_str(&c.render_line(self.generated, self.completed));
+            out.push('\n');
+        }
+        if let Some(c) = &self.control {
+            out.push_str(&c.render_line());
             out.push('\n');
         }
         out
@@ -501,6 +524,20 @@ impl ServeEngine {
         };
         let mut jesa_round = jesa_opts.clone();
 
+        // Adaptive-γ control: the controller evaluates epoch boundaries
+        // on the simulated clock at round formation, so its trajectory
+        // is a pure function of the arrival stream and the QoS counters
+        // (never of wall time or thread scheduling). When γ steps, the
+        // adapted policy replaces the configured one for every later
+        // round; with control off the configured policy is used
+        // unchanged and the run is bit-identical to a pre-control build.
+        let mut gamma_ctl = self
+            .opts
+            .control
+            .as_ref()
+            .map(|rt| GammaController::new(rt.clone(), layers));
+        let mut policy_adapted: Option<ServePolicy> = None;
+
         let mut stream = arrivals.into_iter().peekable();
         let mut shed_seen = 0usize;
         while stream.peek().is_some() || !queue.is_empty() {
@@ -537,6 +574,22 @@ impl ServeEngine {
             }
             let batch = queue.take_batch();
 
+            if let Some(g) = gamma_ctl.as_mut() {
+                if g.due(start) {
+                    let (sqf, sdl) = queue.shed_counts();
+                    if g.observe(
+                        start,
+                        completed,
+                        sqf + sdl,
+                        latency.p99_s(),
+                        ledger.total().total_j(),
+                    ) {
+                        let mut p = self.opts.policy.clone();
+                        p.importance = g.importance();
+                        policy_adapted = Some(p);
+                    }
+                }
+            }
             if let Some(cs) = chaos_state.as_mut() {
                 cs.begin_round(start);
                 jesa_round.offline = cs.offline().to_vec();
@@ -544,7 +597,7 @@ impl ServeEngine {
             let ctx = RoundContext {
                 energy: &self.energy,
                 compute: &self.compute,
-                policy: &self.opts.policy,
+                policy: policy_adapted.as_ref().unwrap_or(&self.opts.policy),
                 quant: &quant,
                 jesa: &jesa_round,
                 caching,
@@ -661,6 +714,7 @@ impl ServeEngine {
             latency,
             completion_digest: completion_hash.finish(),
             chaos: chaos_state.map(|cs| cs.report()),
+            control: gamma_ctl.map(|g| g.into_report()),
             completions,
             rounds_log,
             timelines,

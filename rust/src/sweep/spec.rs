@@ -561,6 +561,14 @@ impl SweepSpec {
             s.traffic.rate = r;
         }
         if let Some(g) = *gamma0 {
+            // An adaptive-γ base scenario owns γ at runtime: sweeping
+            // gamma0 under it would silently fight the controller, so
+            // the combination is rejected outright.
+            crate::ensure!(
+                s.control.is_none(),
+                "sweep.axes.gamma0: base scenario enables adaptive γ control \
+                 (scenario.control); drop the gamma0 axis or the control section"
+            );
             labels.push(("gamma0".to_string(), format!("{g}")));
             match &mut s.policy.kind {
                 PolicyKind::Jesa { gamma0, .. } | PolicyKind::LowerBound { gamma0, .. } => {

@@ -115,10 +115,12 @@ impl Args {
     }
 }
 
-/// The closest known flag by edit distance, if close enough to be a
-/// plausible typo (distance ≤ 2, or ≤ a third of the flag's length for
-/// long flags; plus prefix matches like `--util` for `--utilization`).
-fn nearest<'a>(name: &str, known: &[&'a str]) -> Option<&'a str> {
+/// The closest known name by edit distance, if close enough to be a
+/// plausible typo (distance ≤ 2, or ≤ a third of the name's length for
+/// long names; plus prefix matches like `--util` for `--utilization`).
+/// Shared by the flag parser and the selector registry's
+/// did-you-mean diagnostics.
+pub(crate) fn nearest<'a>(name: &str, known: &[&'a str]) -> Option<&'a str> {
     let mut best: Option<(&str, usize)> = None;
     for &cand in known {
         if cand.starts_with(name) || name.starts_with(cand) {

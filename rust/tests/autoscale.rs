@@ -94,12 +94,14 @@ fn tiny_nonuniform(queries: usize, lane_workers: usize) -> Scenario {
                     max_active: Some(2),
                     fading_rho: None,
                     capacity_fraction: Some(0.5),
+                    selector: None,
                 },
                 CellOverride {
                     cell: 1,
                     max_active: None,
                     fading_rho: Some(0.5),
                     capacity_fraction: None,
+                    selector: None,
                 },
             ],
             lane_workers: Some(lane_workers),

@@ -1,0 +1,313 @@
+//! Adaptive control-plane coverage: control-on digests bit-identical
+//! across reruns and lane modes (serve + fleet), control-off reports
+//! byte-clean of any control section, the AIMD γ law responding in the
+//! right direction to overload vs calm, ControlSpec surviving the
+//! scenario JSON round-trip with field-path diagnostics, and the two
+//! new registry selectors (`channel-gate`, `sift`) reachable by name
+//! with "did you mean" suggestions on near-misses.
+
+use dmoe::control::ControlSpec;
+use dmoe::fleet::FleetReport;
+use dmoe::scenario::{
+    self, Dur, PolicySpec, QueueSpec, RateSpec, RunReport, Scenario, TrafficSpec,
+};
+use dmoe::selection::SelectorSpec;
+use dmoe::serve::ServeReport;
+use dmoe::SystemConfig;
+
+fn serve_report(r: RunReport) -> ServeReport {
+    match r {
+        RunReport::Serve(s) => s,
+        RunReport::Fleet(_) => panic!("expected a serve-shaped report"),
+    }
+}
+
+fn fleet_report(r: RunReport) -> FleetReport {
+    match r {
+        RunReport::Fleet(f) => f,
+        RunReport::Serve(_) => panic!("expected a fleet-shaped report"),
+    }
+}
+
+/// The selector-race preset cut down to test size, with explicit lanes.
+fn race(queries: usize, lane_workers: usize) -> Scenario {
+    let mut s = Scenario::preset("selector-race").unwrap();
+    s.traffic.queries = queries;
+    s.fleet.as_mut().unwrap().lane_workers = Some(lane_workers);
+    s
+}
+
+/// A tiny serve scenario driven far past capacity: a hard queue cap and
+/// an 8x arrival overload keep the epoch shed fraction pinned above the
+/// band, so every evaluated epoch breaches and γ must relax.
+fn tiny_overloaded(queries: usize) -> Scenario {
+    let mut cfg = SystemConfig::tiny(); // K=3, L=2, M=12
+    cfg.workload.seed = 99;
+    Scenario::builder("tiny-overload-control")
+        .system(cfg)
+        .policy(PolicySpec::jesa(0.8, 2))
+        .traffic(TrafficSpec {
+            queries,
+            domains: 4,
+            tokens_per_query: 2,
+            rate: RateSpec::Qps(120.0),
+            ..TrafficSpec::default()
+        })
+        .queue(QueueSpec {
+            capacity: Some(8),
+            ..QueueSpec::default()
+        })
+        .workers(1)
+        .control(ControlSpec {
+            period: Dur::Rounds(2.0),
+            warmup: Dur::Rounds(0.0),
+            gamma_min: 0.5,
+            gamma_max: 0.8,
+            ..ControlSpec::default()
+        })
+        .build()
+        .unwrap()
+}
+
+/// The same tiny system at 40% utilization with an unbounded queue:
+/// nothing ever sheds, so every evaluated epoch is healthy and γ must
+/// step up from its lowered start toward the cap.
+fn tiny_calm(queries: usize) -> Scenario {
+    let mut cfg = SystemConfig::tiny();
+    cfg.workload.seed = 99;
+    Scenario::builder("tiny-calm-control")
+        .system(cfg)
+        .policy(PolicySpec::jesa(0.6, 2))
+        .traffic(TrafficSpec {
+            queries,
+            domains: 4,
+            tokens_per_query: 2,
+            rate: RateSpec::Utilization(0.4),
+            ..TrafficSpec::default()
+        })
+        .queue(QueueSpec {
+            // Effectively unbounded: the calm run must never shed, so
+            // every evaluated epoch is a recovery step.
+            capacity: Some(100_000),
+            deadline: Some(Dur::Rounds(1_000.0)),
+            ..QueueSpec::default()
+        })
+        .workers(1)
+        .control(ControlSpec {
+            period: Dur::Rounds(2.0),
+            warmup: Dur::Rounds(0.0),
+            gamma_min: 0.5,
+            gamma_max: 0.8,
+            ..ControlSpec::default()
+        })
+        .build()
+        .unwrap()
+}
+
+// -- control-on determinism --------------------------------------------------
+
+#[test]
+fn fleet_control_digests_match_on_rerun_and_across_lane_modes() {
+    let seq = race(800, 0);
+    let par = race(800, 4);
+    let a = fleet_report(scenario::run(&seq).unwrap());
+    let b = fleet_report(scenario::run(&seq).unwrap());
+    let c = fleet_report(scenario::run(&par).unwrap());
+    assert_eq!(a.digest(), b.digest(), "control rerun digest");
+    assert_eq!(
+        a.digest(),
+        c.digest(),
+        "γ adjustments must be bit-identical sequential vs lane-parallel"
+    );
+    let ca = a.control.as_ref().expect("control report present");
+    let cc = c.control.as_ref().unwrap();
+    assert_eq!(ca, cc, "identical γ trajectories across lane modes");
+    assert!(ca.epochs > 0, "the run must cross epoch boundaries");
+    for &(_, g) in &ca.trajectory {
+        assert!((ca.gamma_min..=ca.gamma_max).contains(&g), "γ {g} in bounds");
+    }
+}
+
+#[test]
+fn serve_control_rerun_is_bit_identical_and_gamma_moves() {
+    let mut s = Scenario::preset("adaptive-gamma-flash-crowd").unwrap();
+    s.traffic.queries = 1200;
+    let a = serve_report(scenario::run(&s).unwrap());
+    let b = serve_report(scenario::run(&s).unwrap());
+    assert_eq!(a.digest(), b.digest(), "serve control rerun digest");
+    let c = a.control.as_ref().expect("control report present");
+    assert!(
+        c.adjustments >= 1 && c.trajectory.len() >= 2,
+        "the controller must actually move γ: {c:?}"
+    );
+    let mut gammas: Vec<u64> = c.trajectory.iter().map(|&(_, g)| g.to_bits()).collect();
+    gammas.dedup();
+    assert!(gammas.len() >= 2, "want >= 2 distinct γ values: {c:?}");
+    assert!(
+        (c.gamma_min..=c.gamma_max).contains(&c.settled_gamma),
+        "settled γ {} must land inside [{}, {}]",
+        c.settled_gamma,
+        c.gamma_min,
+        c.gamma_max
+    );
+}
+
+// -- control-off byte-identity -----------------------------------------------
+
+#[test]
+fn control_off_reports_carry_no_control_section() {
+    // Serve shape: the paper baseline has no control section, so its
+    // report JSON/render must be byte-identical to pre-control builds.
+    let mut s = Scenario::preset("paper-baseline").unwrap();
+    s.traffic.queries = 400;
+    assert!(s.control.is_none());
+    assert!(!s.to_json().to_string_pretty().contains("\"control\""));
+    let r = scenario::run(&s).unwrap();
+    assert!(r.control().is_none());
+    let serve = serve_report(r);
+    assert!(!serve.to_json().to_string_pretty().contains("\"control\""));
+    assert!(!serve.render().contains("control: gamma"));
+
+    // Fleet shape.
+    let mut s = Scenario::preset("urban-macro-jsq").unwrap();
+    s.traffic.queries = 400;
+    s.fleet.as_mut().unwrap().lane_workers = Some(0);
+    let r = scenario::run(&s).unwrap();
+    assert!(r.control().is_none());
+    let fleet = fleet_report(r);
+    assert!(!fleet.to_json().to_string_pretty().contains("\"control\""));
+    assert!(!fleet.render().contains("control: gamma"));
+}
+
+// -- the AIMD law responds in the right direction ----------------------------
+
+#[test]
+fn overload_relaxes_gamma_toward_the_floor() {
+    let r = serve_report(scenario::run(&tiny_overloaded(600)).unwrap());
+    assert!(r.shed_queue_full > 0, "the overload must shed");
+    let c = r.control.as_ref().expect("control report present");
+    assert!(c.adjustments >= 1, "sustained breach must relax γ: {c:?}");
+    assert!(
+        c.trajectory[1].1 < c.trajectory[0].1,
+        "the first adjustment must relax, not recover: {c:?}"
+    );
+    assert!(
+        c.settled_gamma < 0.8,
+        "γ must settle below its start under overload: {c:?}"
+    );
+    assert!(c.settled_gamma >= c.gamma_min - 1e-12);
+    assert!(
+        c.shed_frac_at_settle > 0.0,
+        "the settle epoch must report its shed pressure"
+    );
+}
+
+#[test]
+fn calm_traffic_recovers_gamma_monotonically() {
+    let r = serve_report(scenario::run(&tiny_calm(500)).unwrap());
+    assert_eq!(r.shed_queue_full + r.shed_deadline, 0, "nothing sheds");
+    let c = r.control.as_ref().expect("control report present");
+    assert!(c.adjustments >= 1, "healthy epochs must recover γ: {c:?}");
+    for w in c.trajectory.windows(2) {
+        assert!(
+            w[1].1 > w[0].1,
+            "with zero shed every move is a recovery step: {c:?}"
+        );
+    }
+    assert!(
+        c.settled_gamma > 0.6 && c.settled_gamma <= 0.8 + 1e-12,
+        "γ climbs from 0.6 toward the 0.8 cap: {c:?}"
+    );
+}
+
+// -- JSON round-trip + diagnostics -------------------------------------------
+
+#[test]
+fn control_scenarios_roundtrip_bit_identically() {
+    for name in ["selector-race", "adaptive-gamma-flash-crowd"] {
+        let s = Scenario::preset(name).unwrap();
+        let j1 = s.to_json().to_string_pretty();
+        let back = Scenario::from_json_str(&j1).unwrap();
+        assert_eq!(back, s, "{name}: control must survive the round-trip");
+        assert_eq!(back.to_json().to_string_pretty(), j1, "{name}: canonical");
+    }
+}
+
+#[test]
+fn control_errors_carry_field_paths() {
+    // Unknown key inside the control section names the exact path.
+    let good = Scenario::preset("selector-race")
+        .unwrap()
+        .to_json()
+        .to_string_pretty();
+    let broken = good.replacen("\"step\"", "\"stepp\"", 1);
+    assert_ne!(broken, good, "fixture must actually mutate the document");
+    let msg = format!("{:#}", Scenario::from_json_str(&broken).unwrap_err());
+    assert!(msg.contains("scenario.control"), "{msg}");
+
+    // Semantic validation walks the same path.
+    let mut s = Scenario::preset("selector-race").unwrap();
+    s.control.as_mut().unwrap().relax = 1.5;
+    let msg = format!("{:#}", s.validate().unwrap_err());
+    assert!(msg.contains("scenario.control"), "{msg}");
+
+    // Control without a jesa policy is rejected up front.
+    let mut s = Scenario::preset("low-qos-energy-saver").unwrap();
+    s.control = Some(ControlSpec::default());
+    let msg = format!("{:#}", s.validate().unwrap_err());
+    assert!(msg.contains("jesa"), "{msg}");
+}
+
+// -- the new selectors reach the registry ------------------------------------
+
+#[test]
+fn channel_gate_and_sift_run_by_name() {
+    let mut cfg = SystemConfig::tiny();
+    cfg.workload.seed = 99;
+    for sel in [SelectorSpec::ChannelGate, SelectorSpec::Sift] {
+        let s = Scenario::builder(&format!("tiny-{}", sel.name()))
+            .system(cfg.clone())
+            .policy(PolicySpec::jesa(0.8, 2).with_selector(sel))
+            .traffic(TrafficSpec {
+                queries: 300,
+                domains: 4,
+                tokens_per_query: 2,
+                rate: RateSpec::Utilization(0.5),
+                ..TrafficSpec::default()
+            })
+            .workers(1)
+            .build()
+            .unwrap();
+        // The selector name survives the scenario round-trip...
+        let j = s.to_json().to_string_pretty();
+        assert!(j.contains(&sel.name()), "{j}");
+        assert_eq!(Scenario::from_json_str(&j).unwrap(), s);
+        // ...and the run actually completes work through it.
+        let r = serve_report(scenario::run(&s).unwrap());
+        assert!(r.completed > 0, "{} must complete queries", sel.name());
+        assert_eq!(scenario::run(&s).unwrap().digest(), {
+            let again = serve_report(scenario::run(&s).unwrap());
+            again.digest()
+        });
+    }
+}
+
+#[test]
+fn near_miss_selector_names_get_a_suggestion() {
+    let s = Scenario::builder("tiny-suggest")
+        .policy(PolicySpec::jesa(0.8, 2).with_selector(SelectorSpec::ChannelGate))
+        .traffic(TrafficSpec {
+            queries: 10,
+            ..TrafficSpec::default()
+        })
+        .build()
+        .unwrap();
+    let good = s.to_json().to_string_pretty();
+    let broken = good.replacen("channel-gate", "chanel-gate", 1);
+    assert_ne!(broken, good);
+    let msg = format!("{:#}", Scenario::from_json_str(&broken).unwrap_err());
+    assert!(
+        msg.contains("did you mean 'channel-gate'?"),
+        "want a registry suggestion, got: {msg}"
+    );
+}

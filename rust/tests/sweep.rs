@@ -151,6 +151,29 @@ fn gamma0_axis_requires_an_importance_factor_policy() {
     assert!(err.contains("gamma0"), "{err}");
 }
 
+#[test]
+fn gamma0_axis_rejects_an_adaptive_control_base() {
+    let text = r#"{
+  "name": "bad-gamma-control",
+  "base": "paper-baseline",
+  "axes": {"gamma0": [0.5]}
+}"#;
+    // Enable adaptive γ control on the base: the controller owns γ at
+    // runtime, so sweeping gamma0 under it must be rejected.
+    let mut spec = SweepSpec::from_json_str(text).unwrap();
+    let mut base = spec.base_scenario().unwrap();
+    base.control = Some(dmoe::control::ControlSpec {
+        gamma_min: 0.5,
+        ..Default::default()
+    });
+    spec.base = dmoe::sweep::BaseRef::Inline(Box::new(base));
+    let err = format!("{:#}", spec.expand().unwrap_err());
+    assert!(
+        err.contains("sweep.axes.gamma0") && err.contains("control"),
+        "{err}"
+    );
+}
+
 // -- sweep runs: bit-identical manifests, verification, verdicts ------------
 
 #[test]
